@@ -1,0 +1,67 @@
+//! Image-processing scenario: a camera pipeline histogramming a stream of
+//! frames on the PIM fleet (HST-S), with per-frame latency, a native CPU
+//! baseline, and the energy-model comparison — the Fig. 16/17 story on one
+//! concrete workload.
+//!
+//! ```bash
+//! cargo run --release --example histogram_pipeline
+//! ```
+
+use prim_pim::arch::SystemConfig;
+use prim_pim::baselines::native;
+use prim_pim::energy::EnergyModel;
+use prim_pim::prim::common::RunConfig;
+use prim_pim::prim::hst::{run_hst, HstKind};
+use prim_pim::util::data::natural_image;
+
+fn main() {
+    const FRAMES: usize = 4;
+    let sys = SystemConfig::p21_rank();
+    let em = EnergyModel::default();
+    let mut pim_total = 0.0;
+    let mut cpu_total = 0.0;
+
+    println!("histogramming {FRAMES} frames (1536x1024-scale natural images) on 32 DPUs\n");
+    for f in 0..FRAMES {
+        let rc = RunConfig {
+            n_dpus: 32,
+            n_tasklets: 16,
+            scale: 0.05,
+            seed: 100 + f as u64,
+            sys: sys.clone(),
+        };
+        let r = run_hst(HstKind::Short, "HST-S", &rc, 256);
+        assert!(r.verified, "frame {f} failed verification");
+        let pim = r.breakdown.total();
+        pim_total += pim;
+
+        // native CPU baseline on the same frame
+        let px = natural_image(rc.scaled(1536 * 1024), 12, rc.seed);
+        let px8: Vec<u32> = px.iter().map(|p| p >> 4).collect();
+        let m = native::hst(&px8);
+        cpu_total += m.secs;
+
+        println!(
+            "frame {f}: PIM {:.3} ms (DPU {:.3} + xfer {:.3}) | native CPU {:.3} ms",
+            pim * 1e3,
+            r.breakdown.dpu * 1e3,
+            (r.breakdown.cpu_dpu + r.breakdown.dpu_cpu) * 1e3,
+            m.secs * 1e3
+        );
+
+        let e_pim = em.pim_joules(&sys, 32, &r.breakdown);
+        let e_cpu = em.cpu_joules(m.secs);
+        println!(
+            "         energy: PIM {:.4} J | CPU {:.4} J ({}x)",
+            e_pim,
+            e_cpu,
+            (e_cpu / e_pim) as u64
+        );
+    }
+    println!(
+        "\npipeline: PIM {:.2} ms total, CPU {:.2} ms total ({} frames)",
+        pim_total * 1e3,
+        cpu_total * 1e3,
+        FRAMES
+    );
+}

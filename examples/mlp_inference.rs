@@ -1,0 +1,139 @@
+//! End-to-end driver (DESIGN.md deliverable): serve batched MLP inference
+//! requests through the full three-layer stack and prove the layers
+//! compose:
+//!
+//! * **L3 (rust)** — the coordinator partitions the 3×1024×1024 model
+//!   across a simulated 16-DPU PIM set and orchestrates the per-layer
+//!   gather/redistribute, exactly like the PrIM MLP benchmark;
+//! * **L2/L1 (JAX+Pallas via PJRT)** — the AOT `mlp.hlo.txt` artifact
+//!   (row-panel Pallas GEMV kernels lowered through JAX) runs the same
+//!   requests on the host as the numeric oracle / CPU counterpart;
+//! * outputs are compared request by request; per-request simulated PIM
+//!   latency, host XLA latency, and native-Rust CPU latency are reported.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example mlp_inference
+//! ```
+
+use prim_pim::arch::SystemConfig;
+use prim_pim::coordinator::PimSet;
+use prim_pim::dpu::Ctx;
+use prim_pim::prim::gemv::gemv_kernel;
+use prim_pim::runtime::{self, MlpOracle, PjrtRuntime, MLP_DIM};
+use prim_pim::util::Rng;
+
+const N_DPUS: usize = 16;
+const LAYERS: usize = 3;
+const REQUESTS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let dim = MLP_DIM; // 1024, fixed by the AOT artifact
+    let mut rng = Rng::new(7);
+
+    // small integer weights: exact in both u32 and f32 paths
+    let weights: Vec<Vec<u32>> =
+        (0..LAYERS).map(|_| (0..dim * dim).map(|_| rng.below(3) as u32).collect()).collect();
+    let requests: Vec<Vec<u32>> =
+        (0..REQUESTS).map(|_| (0..dim).map(|_| rng.below(4) as u32).collect()).collect();
+
+    // ---- PIM side: distribute the model across 16 simulated DPUs
+    let mut set = PimSet::allocate(SystemConfig::p21_rank(), N_DPUS as u32);
+    let rows_per = dim / N_DPUS;
+    let wl_bytes = rows_per * dim * 4;
+    for (l, w) in weights.iter().enumerate() {
+        let bufs: Vec<Vec<u32>> = (0..N_DPUS)
+            .map(|d| w[d * rows_per * dim..(d + 1) * rows_per * dim].to_vec())
+            .collect();
+        set.push_to(l * wl_bytes, &bufs);
+    }
+    let x_off = LAYERS * wl_bytes;
+    let y_off = x_off + dim * 4;
+    println!(
+        "model loaded: {} layers x {} DPUs ({:.1} MB/DPU)",
+        LAYERS,
+        N_DPUS,
+        (LAYERS * wl_bytes) as f64 / 1e6
+    );
+
+    // ---- host side: the AOT JAX/Pallas oracle through PJRT
+    let oracle = if runtime::artifacts_available() {
+        let rt = PjrtRuntime::cpu()?;
+        let wf: Vec<Vec<f32>> =
+            weights.iter().map(|w| w.iter().map(|&v| v as f32).collect()).collect();
+        let b0 = vec![0f32; dim];
+        Some(MlpOracle::load(
+            &rt,
+            [wf[0].clone(), wf[1].clone(), wf[2].clone()],
+            [b0.clone(), b0.clone(), b0],
+        )?)
+    } else {
+        eprintln!("artifacts missing (run `make artifacts`): skipping PJRT oracle");
+        None
+    };
+
+    let mut pim_lat = Vec::new();
+    let mut xla_lat = Vec::new();
+    let mut all_match = true;
+
+    for (i, x) in requests.iter().enumerate() {
+        // serve on PIM: 3 layers with host gather/redistribute between
+        let before = set.metrics;
+        set.broadcast(x_off, x);
+        for l in 0..LAYERS {
+            set.launch(16, |_d, ctx: &mut Ctx| {
+                gemv_kernel(ctx, rows_per, dim, l * wl_bytes, x_off, y_off, true);
+            });
+            if l + 1 < LAYERS {
+                let parts = set.push_from_inter::<u32>(y_off, rows_per * 2);
+                let next: Vec<u32> =
+                    parts.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
+                set.host_merge((dim * 4) as u64, dim as u64);
+                set.broadcast_inter(x_off, &next);
+            }
+        }
+        let parts = set.push_from::<u32>(y_off, rows_per * 2);
+        let y_pim: Vec<u32> = parts.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
+        let lat = set.metrics.total() - before.total();
+        pim_lat.push(lat);
+
+        // oracle on the host through XLA
+        if let Some(oracle) = &oracle {
+            let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let t0 = std::time::Instant::now();
+            let y_xla = oracle.forward(&xf)?;
+            xla_lat.push(t0.elapsed().as_secs_f64());
+            let matches = y_pim.iter().zip(&y_xla).all(|(p, h)| {
+                let rel = (*p as f64 - *h as f64).abs() / (1.0 + *h as f64);
+                rel < 1e-5
+            });
+            if !matches {
+                all_match = false;
+            }
+            println!(
+                "request {i}: PIM {:.3} ms (simulated) | XLA oracle {:.3} ms | match: {}",
+                lat * 1e3,
+                xla_lat.last().unwrap() * 1e3,
+                matches
+            );
+        } else {
+            println!("request {i}: PIM {:.3} ms (simulated)", lat * 1e3);
+        }
+    }
+
+    // native CPU baseline for one request
+    let m = prim_pim::baselines::native::gemv(&weights[0], &requests[0], dim, dim);
+    println!("\nnative rust single-layer GEMV: {:.3} ms", m.secs * 1e3);
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "served {REQUESTS} requests | mean PIM latency {:.3} ms | throughput {:.1} req/s (simulated)",
+        mean(&pim_lat) * 1e3,
+        1.0 / mean(&pim_lat)
+    );
+    println!("breakdown: {}", set.metrics.fmt_ms());
+    if oracle.is_some() {
+        println!("oracle agreement: {}", if all_match { "ALL MATCH" } else { "MISMATCH" });
+        assert!(all_match, "PIM output must match the JAX/Pallas oracle");
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: allocate a few simulated DPUs, run a vector-addition kernel
+//! written against the UPMEM-style API, verify the result, and print the
+//! paper-style time breakdown.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use prim_pim::arch::{DType, Op, SystemConfig};
+use prim_pim::coordinator::PimSet;
+use prim_pim::dpu::Ctx;
+use prim_pim::util::Rng;
+
+fn main() {
+    // 1. allocate 8 DPUs of the 2,556-DPU (P21) system
+    let mut set = PimSet::allocate(SystemConfig::p21_rank(), 8);
+
+    // 2. build a dataset and push equal chunks to the DPUs (parallel xfer)
+    let n = 64 * 1024usize;
+    let mut rng = Rng::new(1);
+    let a = rng.vec_i32(n, 1 << 20);
+    let b = rng.vec_i32(n, 1 << 20);
+    let per = n / 8;
+    let abufs: Vec<Vec<i32>> = (0..8).map(|d| a[d * per..(d + 1) * per].to_vec()).collect();
+    let bbufs: Vec<Vec<i32>> = (0..8).map(|d| b[d * per..(d + 1) * per].to_vec()).collect();
+    set.push_to(0, &abufs);
+    set.push_to(per * 4, &bbufs);
+
+    // 3. launch 16 tasklets per DPU: stream 1,024-B blocks, add, write back
+    let blocks = per * 4 / 1024;
+    set.launch(16, |_dpu, ctx: &mut Ctx| {
+        let wa = ctx.mem_alloc(1024);
+        let wb = ctx.mem_alloc(1024);
+        let mut blk = ctx.tasklet_id as usize;
+        while blk < blocks {
+            let off = blk * 1024;
+            ctx.mram_read(off, wa, 1024);
+            ctx.mram_read(per * 4 + off, wb, 1024);
+            let av: Vec<i32> = ctx.wram_get(wa, 256);
+            let bv: Vec<i32> = ctx.wram_get(wb, 256);
+            let cv: Vec<i32> = av.iter().zip(&bv).map(|(x, y)| x.wrapping_add(*y)).collect();
+            ctx.wram_set(wa, &cv);
+            ctx.charge_stream(DType::I32, Op::Add, 256);
+            ctx.mram_write(wa, 2 * per * 4 + off, 1024);
+            blk += ctx.n_tasklets as usize;
+        }
+    });
+
+    // 4. retrieve and verify
+    let out = set.push_from::<i32>(2 * per * 4, per);
+    let ok = out.iter().enumerate().all(|(d, chunk)| {
+        chunk.iter().enumerate().all(|(i, v)| {
+            let g = d * per + i;
+            *v == a[g].wrapping_add(b[g])
+        })
+    });
+
+    println!("vector-add on 8 simulated DPUs: {}", if ok { "VERIFIED" } else { "FAILED" });
+    println!("  {}", set.metrics.fmt_ms());
+    println!(
+        "  {} launches, {:.1} KB to DPUs, {:.1} KB back",
+        set.metrics.launches,
+        set.metrics.bytes_to_dpu as f64 / 1024.0,
+        set.metrics.bytes_from_dpu as f64 / 1024.0
+    );
+    assert!(ok);
+}

@@ -1,0 +1,86 @@
+//! Scaling study: strong + weak scaling of a chosen benchmark, with the
+//! AOT fleet estimator (PJRT `dpu_timing` artifact) cross-checking the
+//! simulated kernel times at fleet scale.
+//!
+//! ```bash
+//! cargo run --release --example scaling_study [BENCH]
+//! ```
+
+use prim_pim::prim::common::{bench_by_name, RunConfig};
+use prim_pim::runtime::{self, DpuDesc};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "RED".to_string());
+    let bench = bench_by_name(&name).unwrap_or_else(|| panic!("unknown benchmark {name}"));
+    println!("== strong scaling: {name} (fixed total problem) ==");
+    println!("{:>5} {:>12} {:>12} {:>10}", "DPUs", "DPU ms", "total ms", "speedup");
+    let mut t1 = 0.0;
+    for nd in [1u32, 4, 16, 64] {
+        let rc = RunConfig {
+            n_dpus: nd,
+            n_tasklets: bench.best_tasklets(),
+            scale: 0.05,
+            ..RunConfig::rank_default()
+        };
+        let r = bench.run(&rc);
+        assert!(r.verified);
+        if nd == 1 {
+            t1 = r.breakdown.dpu;
+        }
+        println!(
+            "{:>5} {:>12.3} {:>12.3} {:>9.1}x",
+            nd,
+            r.breakdown.dpu * 1e3,
+            r.breakdown.total() * 1e3,
+            t1 / r.breakdown.dpu.max(1e-12)
+        );
+    }
+
+    println!("\n== weak scaling: {name} (fixed per-DPU load) ==");
+    println!("{:>5} {:>12} {:>14}", "DPUs", "DPU ms", "Inter-DPU ms");
+    let mut last: Option<(f64, u64, u64)> = None;
+    for nd in [1u32, 4, 16, 64] {
+        let rc = RunConfig {
+            n_dpus: nd,
+            n_tasklets: bench.best_tasklets(),
+            scale: 0.05 * nd as f64 / 64.0,
+            ..RunConfig::rank_default()
+        };
+        let r = bench.run(&rc);
+        assert!(r.verified);
+        println!(
+            "{:>5} {:>12.3} {:>14.3}",
+            nd,
+            r.breakdown.dpu * 1e3,
+            r.breakdown.inter_dpu * 1e3
+        );
+        last = Some((r.breakdown.dpu, r.dpu_instrs / nd as u64, nd as u64));
+    }
+
+    // fleet estimate: project the per-DPU descriptor to 2,556 DPUs
+    if let Some((dpu_secs, instrs_per_dpu, nd)) = last {
+        let _ = nd;
+        let desc = DpuDesc {
+            instrs_per_tasklet: instrs_per_dpu as f64 / bench.best_tasklets() as f64,
+            tasklets: bench.best_tasklets() as f64,
+            n_reads: 0.0,
+            read_bytes: 0.0,
+            n_writes: 0.0,
+            write_bytes: 0.0,
+        };
+        let cycles = if runtime::artifacts_available() {
+            let rt = runtime::PjrtRuntime::cpu()?;
+            runtime::FleetEstimator::load(&rt)?.estimate(&vec![desc; 2048])?
+        } else {
+            runtime::fleet_cycles_native(&vec![desc; 2048])
+        };
+        let est = cycles[0] / 350e6;
+        println!(
+            "\nfleet estimator (pipeline-bound lower bound, 2,048-DPU projection): \
+             {:.3} ms/DPU vs simulated {:.3} ms/DPU",
+            est * 1e3,
+            dpu_secs * 1e3
+        );
+    }
+    Ok(())
+}

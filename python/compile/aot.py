@@ -1,0 +1,54 @@
+"""AOT entry point: lower the L2 model to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser on the rust side reassigns ids and round-trips cleanly.
+
+Usage: cd python && python -m compile.aot --outdir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_mlp() -> str:
+    return to_hlo_text(jax.jit(model.mlp_forward).lower(*model.mlp_example_shapes()))
+
+
+def lower_fleet() -> str:
+    return to_hlo_text(
+        jax.jit(model.fleet_cycles_model).lower(*model.fleet_example_shapes())
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    for name, fn in [("mlp", lower_mlp), ("dpu_timing", lower_fleet)]:
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        text = fn()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

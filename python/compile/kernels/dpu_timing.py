@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: vectorized analytical DPU timing model (fleet estimator).
+
+Evaluates, for a whole fleet of DPU descriptors at once, the same
+fluid-timing first-order model the rust simulator uses:
+
+  pipeline_cycles = instrs_per_tasklet * max(dispatch_interval, tasklets)
+  dma_cycles      = n_reads*(alpha_r + beta*read_bytes)
+                  + n_writes*(alpha_w + beta*write_bytes)
+  cycles          = max(pipeline_cycles, dma_cycles)
+
+(the fine-grained multithreaded DPU overlaps pipeline and DMA latency, so
+the dominant one bounds execution — paper §3.3 / Key Observation 5-6).
+
+The rust coordinator AOT-loads this kernel (artifacts/dpu_timing.hlo.txt)
+and uses it to predict full-fleet (2,556-DPU) scaling shapes from per-DPU
+workload descriptors without functionally simulating every DPU.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Architecture constants (paper §2.2/§3.2, 350 MHz P21 system).
+DISPATCH_INTERVAL = 11.0
+ALPHA_READ = 77.0
+ALPHA_WRITE = 61.0
+BETA = 0.5
+
+
+def _kernel(instr_ref, tasklets_ref, nrd_ref, rb_ref, nwr_ref, wb_ref, o_ref):
+    instrs = instr_ref[...]
+    t = tasklets_ref[...]
+    pipeline = instrs * jnp.maximum(DISPATCH_INTERVAL, t)
+    dma = nrd_ref[...] * (ALPHA_READ + BETA * rb_ref[...]) + nwr_ref[...] * (
+        ALPHA_WRITE + BETA * wb_ref[...]
+    )
+    o_ref[...] = jnp.maximum(pipeline, dma)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def fleet_cycles(instrs_per_tasklet, tasklets, n_reads, read_bytes, n_writes,
+                 write_bytes, *, block: int = 256):
+    """Cycles per DPU for a fleet of descriptors (all shape (n,) float32).
+
+    `instrs_per_tasklet`: pipeline instructions per tasklet;
+    `tasklets`: tasklets launched on that DPU;
+    `n_reads`/`read_bytes`: MRAM->WRAM transfer count / size per transfer;
+    `n_writes`/`write_bytes`: WRAM->MRAM transfer count / size.
+    """
+    (n,) = instrs_per_tasklet.shape
+    assert n % block == 0, f"block {block} must divide n {n}"
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec] * 6,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(instrs_per_tasklet, tasklets, n_reads, read_bytes, n_writes, write_bytes)

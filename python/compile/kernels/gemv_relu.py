@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: row-panel GEMV + bias + ReLU (one MLP layer).
+
+This is the compute hot-spot of the PrIM MLP/GEMV workloads, re-thought for
+TPU-style memory (DESIGN.md §Hardware-Adaptation): the weight matrix is
+streamed HBM→VMEM in row panels via the BlockSpec index map (the analogue of
+both the DPU's explicit MRAM→WRAM DMA staging and the GPU baseline's
+shared-memory tiling), the input vector is pinned whole in VMEM, and each
+grid step performs an MXU-shaped `(block_m, n) @ (n,)` contraction.
+
+`interpret=True` is mandatory on this CPU-only image: real TPU lowering
+emits a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, x_ref, b_ref, o_ref):
+    """One row panel: o = relu(W_panel @ x + b_panel)."""
+    w = w_ref[...]
+    x = x_ref[...]
+    b = b_ref[...]
+    acc = jnp.dot(w, x, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.maximum(acc + b, 0.0).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_m",))
+def gemv_relu(w, x, b, *, block_m: int = 128):
+    """y = relu(w @ x + b) with a row-blocked Pallas kernel.
+
+    Args:
+      w: (m, n) weight matrix.
+      x: (n,) input vector (kept fully VMEM-resident).
+      b: (m,) bias.
+      block_m: rows per grid step; must divide m.
+
+    Returns:
+      (m,) float output.
+    """
+    m, n = w.shape
+    assert x.shape == (n,), (w.shape, x.shape)
+    assert b.shape == (m,), (w.shape, b.shape)
+    assert m % block_m == 0, f"block_m {block_m} must divide m {m}"
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            # row panel of W: HBM -> VMEM, one panel per grid step
+            pl.BlockSpec((block_m, n), lambda i: (i, 0)),
+            # whole x resident in VMEM for every step
+            pl.BlockSpec((n,), lambda i: (0,)),
+            # matching bias panel
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(w, x, b)
+
+
+def vmem_footprint_bytes(m: int, n: int, block_m: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (panel + x + b + out).
+
+    Used by the perf notes in DESIGN.md/EXPERIMENTS.md: the panel size is
+    chosen so that this stays well under the ~16 MB VMEM of a TPU core
+    (mirroring how the DPU programmer sizes WRAM buffers, Programming
+    Recommendation 3).
+    """
+    return dtype_bytes * (block_m * n + n + 2 * block_m)

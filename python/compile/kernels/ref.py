@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal. pytest asserts kernel == ref across shape/dtype sweeps (hypothesis)
+before aot.py is allowed to emit artifacts.
+"""
+
+import jax.numpy as jnp
+
+from . import dpu_timing as dt
+
+
+def gemv_relu_ref(w, x, b):
+    """y = relu(w @ x + b), straight jnp."""
+    return jnp.maximum(jnp.dot(w, x) + b, 0.0).astype(jnp.float32)
+
+
+def fleet_cycles_ref(instrs_per_tasklet, tasklets, n_reads, read_bytes,
+                     n_writes, write_bytes):
+    """max(pipeline, dma) per descriptor, straight jnp."""
+    pipeline = instrs_per_tasklet * jnp.maximum(dt.DISPATCH_INTERVAL, tasklets)
+    dma = n_reads * (dt.ALPHA_READ + dt.BETA * read_bytes) + n_writes * (
+        dt.ALPHA_WRITE + dt.BETA * write_bytes
+    )
+    return jnp.maximum(pipeline, dma).astype(jnp.float32)
+
+
+def mlp_ref(x, w1, b1, w2, b2, w3, b3):
+    """3-layer MLP forward, straight jnp (ReLU after every layer — the PrIM
+    MLP applies ReLU at the end of each of its 3 layers)."""
+    h1 = jnp.maximum(jnp.dot(w1, x) + b1, 0.0)
+    h2 = jnp.maximum(jnp.dot(w2, h1) + b2, 0.0)
+    return jnp.maximum(jnp.dot(w3, h2) + b3, 0.0).astype(jnp.float32)

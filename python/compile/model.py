@@ -1,0 +1,71 @@
+"""L2 JAX model layer: the computations AOT-lowered for the rust runtime.
+
+Two exported computations (both built on the L1 Pallas kernels):
+
+* ``mlp_forward`` — the PrIM MLP workload's 3-layer inference pass, used by
+  the rust side both as the *host oracle* for verifying the DPU-simulated
+  MLP/GEMV results and as the measured "CPU counterpart" executed through
+  XLA (examples/mlp_inference.rs).
+* ``fleet_cycles_model`` — the vectorized analytical DPU timing model over
+  a fleet of descriptors, used by the coordinator to predict full-scale
+  (2,556-DPU) scaling shapes.
+
+Python runs only at build time (`make artifacts`); the request path is
+rust-only.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.dpu_timing import fleet_cycles
+from .kernels.gemv_relu import gemv_relu
+
+# Artifact shapes (fixed at AOT time).
+MLP_DIM = 1024
+MLP_BLOCK_M = 128
+FLEET_N = 2048
+FLEET_BLOCK = 256
+
+
+def mlp_forward(x, w1, b1, w2, b2, w3, b3):
+    """3-layer MLP inference: relu(W3·relu(W2·relu(W1·x+b1)+b2)+b3).
+
+    Mirrors the PrIM MLP benchmark: each layer is a GEMV + ReLU; every
+    layer runs through the Pallas row-panel kernel so the whole model
+    lowers into a single fused HLO module.
+    """
+    h1 = gemv_relu(w1, x, b1, block_m=MLP_BLOCK_M)
+    h2 = gemv_relu(w2, h1, b2, block_m=MLP_BLOCK_M)
+    return (gemv_relu(w3, h2, b3, block_m=MLP_BLOCK_M),)
+
+
+def fleet_cycles_model(instrs_per_tasklet, tasklets, n_reads, read_bytes,
+                       n_writes, write_bytes):
+    """Fleet timing estimate, (FLEET_N,) f32 cycles per DPU."""
+    return (
+        fleet_cycles(
+            instrs_per_tasklet,
+            tasklets,
+            n_reads,
+            read_bytes,
+            n_writes,
+            write_bytes,
+            block=FLEET_BLOCK,
+        ),
+    )
+
+
+def mlp_example_shapes():
+    """ShapeDtypeStructs for AOT lowering of mlp_forward."""
+    import jax
+
+    d = MLP_DIM
+    vec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    mat = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    return (vec, mat, vec, mat, vec, mat, vec)
+
+
+def fleet_example_shapes():
+    import jax
+
+    arr = jax.ShapeDtypeStruct((FLEET_N,), jnp.float32)
+    return (arr,) * 6

@@ -1,0 +1,128 @@
+"""Kernel-vs-oracle correctness: the core build-time signal.
+
+hypothesis sweeps shapes (and value distributions) of both Pallas kernels
+against the pure-jnp references in ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dpu_timing import (ALPHA_READ, ALPHA_WRITE, BETA,
+                                        DISPATCH_INTERVAL, fleet_cycles)
+from compile.kernels.gemv_relu import gemv_relu, vmem_footprint_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------- gemv_relu
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mb=st.sampled_from([1, 2, 4]),   # m = mb * block_m
+    n=st.integers(min_value=1, max_value=96),
+    block_m=st.sampled_from([8, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gemv_relu_matches_ref(mb, n, block_m, seed):
+    m = mb * block_m
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((m,)), jnp.float32)
+    got = gemv_relu(w, x, b, block_m=block_m)
+    want = ref.gemv_relu_ref(w, x, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gemv_relu_nonnegative():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((32,)), jnp.float32)
+    b = jnp.asarray(-10 * np.ones(64), jnp.float32)
+    y = gemv_relu(w, x, b, block_m=16)
+    assert (np.asarray(y) >= 0).all()
+
+
+def test_gemv_relu_zero_input_gives_relu_bias():
+    w = jnp.zeros((32, 16), jnp.float32)
+    x = jnp.zeros((16,), jnp.float32)
+    b = jnp.asarray(np.linspace(-1, 1, 32), jnp.float32)
+    y = gemv_relu(w, x, b, block_m=8)
+    np.testing.assert_allclose(y, np.maximum(np.linspace(-1, 1, 32), 0), atol=1e-7)
+
+
+def test_gemv_relu_block_must_divide():
+    w = jnp.zeros((30, 8), jnp.float32)
+    x = jnp.zeros((8,), jnp.float32)
+    b = jnp.zeros((30,), jnp.float32)
+    with pytest.raises(AssertionError):
+        gemv_relu(w, x, b, block_m=16)
+
+
+def test_vmem_footprint_under_budget():
+    # The AOT configuration (1024x1024 panels of 128 rows) must fit VMEM
+    # with generous margin (~16 MB per TPU core).
+    fp = vmem_footprint_bytes(1024, 1024, 128)
+    assert fp < 4 * 1024 * 1024, fp
+
+
+# ------------------------------------------------------------ dpu_timing
+
+def _fleet_args(rng, n):
+    return tuple(
+        jnp.asarray(a, jnp.float32)
+        for a in (
+            rng.integers(0, 1_000_000, n),   # instrs/tasklet
+            rng.integers(1, 25, n),          # tasklets
+            rng.integers(0, 10_000, n),      # n_reads
+            rng.choice([8, 64, 256, 1024, 2048], n),   # read_bytes
+            rng.integers(0, 10_000, n),      # n_writes
+            rng.choice([8, 64, 256, 1024, 2048], n),   # write_bytes
+        )
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    blocks=st.sampled_from([1, 2, 4, 8]),
+    block=st.sampled_from([8, 32, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fleet_cycles_matches_ref(blocks, block, seed):
+    n = blocks * block
+    rng = np.random.default_rng(seed)
+    args = _fleet_args(rng, n)
+    got = fleet_cycles(*args, block=block)
+    want = ref.fleet_cycles_ref(*args)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_fleet_cycles_hand_computed():
+    # One DPU: 1000 instrs/tasklet, 16 tasklets, 10 reads of 1024B, no writes.
+    args = tuple(
+        jnp.asarray([v], jnp.float32)
+        for v in (1000.0, 16.0, 10.0, 1024.0, 0.0, 0.0)
+    )
+    # pad to one block of 8
+    args = tuple(jnp.tile(a, 8) for a in args)
+    got = np.asarray(fleet_cycles(*args, block=8))[0]
+    pipeline = 1000 * max(DISPATCH_INTERVAL, 16)
+    dma = 10 * (ALPHA_READ + BETA * 1024)
+    assert got == pytest.approx(max(pipeline, dma))
+
+
+def test_fleet_cycles_pipeline_saturation():
+    # below 11 tasklets the pipeline term is flat (dispatch interval bound)
+    mk = lambda t: tuple(
+        jnp.asarray([1000.0, t, 0.0, 0.0, 0.0, 0.0], jnp.float32)[i] * jnp.ones(8, jnp.float32)
+        for i in range(6)
+    )
+    c2 = np.asarray(fleet_cycles(*mk(2.0), block=8))[0]
+    c11 = np.asarray(fleet_cycles(*mk(11.0), block=8))[0]
+    c16 = np.asarray(fleet_cycles(*mk(16.0), block=8))[0]
+    assert c2 == c11            # same per-tasklet latency below saturation
+    assert c16 > c11            # beyond 11, more tasklets stretch the launch

@@ -1,0 +1,75 @@
+//! Ablation: fluid timing engine vs the cycle-stepped reference
+//! (DESIGN.md §6) — accuracy and speed on microbenchmark-shaped traces —
+//! plus the §9.2.3 RED-version comparison (the paper's Fig. 21 analogue).
+
+use prim_pim::arch::DpuArch;
+use prim_pim::dpu::{replay, timing_ref::replay_stepped, Ev, Trace};
+use prim_pim::prim::common::RunConfig;
+use prim_pim::prim::red::{run_red, RedVersion};
+use prim_pim::util::bencher::{fmt_secs, Bencher};
+use prim_pim::util::Rng;
+
+fn mixed_traces(nt: usize, blocks: usize, seed: u64) -> Vec<Trace> {
+    let mut rng = Rng::new(seed);
+    (0..nt)
+        .map(|_| {
+            let mut t = Trace::default();
+            for _ in 0..blocks {
+                t.push(Ev::DmaRead(1024));
+                t.push_compute(200 + rng.below(400));
+                t.push(Ev::DmaWrite(1024));
+            }
+            t
+        })
+        .collect()
+}
+
+fn main() {
+    let arch = DpuArch::p21();
+    let mut b = Bencher::new();
+
+    // accuracy: fluid vs stepped on a grid of tasklet counts
+    println!("== ablation: fluid vs cycle-stepped timing model ==");
+    println!("{:>8} {:>14} {:>14} {:>8}", "tasklets", "fluid (cy)", "stepped (cy)", "err");
+    let mut max_err = 0f64;
+    for nt in [1usize, 2, 4, 8, 12, 16] {
+        let traces = mixed_traces(nt, 50, nt as u64);
+        let fluid = replay(&traces, &arch, nt as u32).cycles;
+        let stepped = replay_stepped(&traces, &arch) as f64;
+        let err = (fluid - stepped).abs() / stepped;
+        max_err = max_err.max(err);
+        println!("{nt:>8} {fluid:>14.0} {stepped:>14.0} {:>7.2}%", err * 100.0);
+    }
+    assert!(max_err < 0.05, "fluid model diverges: {max_err}");
+
+    // speed: the reason the fluid engine exists
+    let traces = mixed_traces(16, 200, 7);
+    let s_fluid = b.bench("fluid replay (16 tasklets x 200 blocks)", || {
+        replay(&traces, &arch, 16).cycles
+    });
+    let fluid_med = s_fluid.median();
+    let s_stepped =
+        b.bench("cycle-stepped replay (same traces)", || replay_stepped(&traces, &arch));
+    let stepped_med = s_stepped.median();
+    println!(
+        "\nfluid is {:.0}x faster than cycle-stepping ({} vs {})",
+        stepped_med / fluid_med,
+        fmt_secs(fluid_med),
+        fmt_secs(stepped_med)
+    );
+
+    // §9.2.3: RED final-step versions (paper: single-tasklet never loses)
+    println!("\n== RED final-step versions (appendix §9.2.3 / 'Fig. 21') ==");
+    let rc = RunConfig {
+        n_dpus: 4,
+        scale: 0.01,
+        ..RunConfig::rank_default()
+    };
+    for v in [RedVersion::Single, RedVersion::TreeBarrier, RedVersion::TreeHandshake] {
+        let r = run_red(v, &rc);
+        assert!(r.verified);
+        println!("{v:?}: DPU {} (simulated)", fmt_secs(r.breakdown.dpu));
+    }
+
+    b.report("ablation_timing");
+}

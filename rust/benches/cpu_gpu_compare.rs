@@ -1,0 +1,43 @@
+//! End-to-end bench for the §5.2 comparison (Figs. 16–17): regenerates the
+//! full PIM-vs-CPU-vs-GPU table and prints the headline ratios next to the
+//! paper's. Run with BENCH_QUICK=1 for the 5-benchmark subset.
+
+use prim_pim::harness::compare::{compare_all, MORE_SUITABLE};
+use prim_pim::util::bencher::{fmt_secs, Bencher};
+use prim_pim::util::stats::geomean;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let mut b = Bencher::new();
+    let mut rows = Vec::new();
+    b.bench("fig16+17: full comparison sweep", || {
+        rows = compare_all(quick);
+        rows.len()
+    });
+    b.report("cpu_gpu_compare");
+
+    let mut s2556 = Vec::new();
+    let mut suitable_vs_gpu = Vec::new();
+    println!("\n{:<10} {:>12} {:>12} {:>12} {:>12}", "bench", "CPU", "GPU", "PIM-2556", "PIM/CPU");
+    for r in &rows {
+        let x = r.cpu_secs / r.pim2556_secs;
+        s2556.push(x);
+        if MORE_SUITABLE.contains(&r.bench) {
+            suitable_vs_gpu.push(r.gpu_secs / r.pim2556_secs);
+        }
+        println!(
+            "{:<10} {:>12} {:>12} {:>12} {:>11.2}x",
+            r.bench,
+            fmt_secs(r.cpu_secs),
+            fmt_secs(r.gpu_secs),
+            fmt_secs(r.pim2556_secs),
+            x
+        );
+    }
+    println!(
+        "\nheadline: 2556-DPU vs CPU geomean {:.2}x (paper: 23.2x on real HW); \
+         vs GPU on the 10 suitable benchmarks {:.2}x (paper: 2.54x)",
+        geomean(&s2556),
+        geomean(&suitable_vs_gpu)
+    );
+}

@@ -1,0 +1,56 @@
+//! End-to-end benches regenerating the §3 microbenchmark figures
+//! (Figs. 4–10): each entry runs the figure's full sweep and reports how
+//! long the *simulator* takes to produce it — the wallclock cost of the
+//! characterization suite.
+
+use prim_pim::arch::DpuArch;
+use prim_pim::micro::{arith, mram, mram_stream, opint, strided, wram_stream, xfer};
+use prim_pim::util::bencher::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let arch = DpuArch::p21();
+
+    b.bench("fig4: arith throughput 4x4x6 sweep", || {
+        arith::fig4_sweep(arch, &[1, 2, 4, 8, 11, 16])
+    });
+    b.bench("fig5: WRAM STREAM sweep", || {
+        wram_stream::fig5_sweep(arch, &[1, 4, 8, 11, 16])
+    });
+    b.bench("fig6: MRAM latency/bw sweep (rd+wr)", || {
+        (mram::fig6_sweep(arch, true), mram::fig6_sweep(arch, false))
+    });
+    b.bench("fig7: MRAM STREAM sweep", || {
+        mram_stream::fig7_sweep(arch, &[1, 2, 4, 8, 16], 16 * 1024)
+    });
+    b.bench("fig8: strided/random sweep", || {
+        let mut v = Vec::new();
+        for s in [1usize, 4, 16, 64] {
+            v.push(strided::coarse_strided_bw(arch, s, 16, 8192));
+            v.push(strided::fine_strided_bw(arch, s, 16, 8192));
+        }
+        v.push(strided::gups_bw(arch, 16, 8192, 2048));
+        v
+    });
+    b.bench("fig9: operational-intensity grid", || {
+        let mut v = Vec::new();
+        for &i in &opint::fig9_intensities() {
+            for t in [2u32, 11, 16] {
+                v.push(opint::throughput_at_intensity(
+                    arch,
+                    prim_pim::arch::DType::I32,
+                    prim_pim::arch::Op::Add,
+                    i,
+                    t,
+                    64,
+                ));
+            }
+        }
+        v
+    });
+    b.bench("fig10: transfer model sweeps", || {
+        (xfer::fig10a_sweep(), xfer::fig10b_sweep(32 << 20, &[1, 4, 16, 64]))
+    });
+
+    b.report("micro_figs (Figs. 4-10 regeneration)");
+}

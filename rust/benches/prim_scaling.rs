@@ -1,0 +1,36 @@
+//! End-to-end benches for the PrIM suite (the Figs. 12–15 machinery): per
+//! benchmark one 16-DPU strong-scaling point, verified, reporting
+//! simulator wallclock and work-item throughput.
+
+use prim_pim::arch::SystemConfig;
+use prim_pim::prim::all_benches;
+use prim_pim::prim::common::RunConfig;
+use prim_pim::util::bencher::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    for bench in all_benches() {
+        let name = bench.name();
+        let scale = prim_pim::harness::harness_scale(name) * 0.5;
+        let rc = RunConfig {
+            n_dpus: 16,
+            n_tasklets: bench.best_tasklets(),
+            scale,
+            seed: 42,
+            sys: SystemConfig::p21_rank(),
+        };
+        let mut items = 0f64;
+        b.bench_items(&format!("{name} @16dpu"), Some(1.0), &mut || {
+            let r = bench.run(&rc);
+            assert!(r.verified, "{name} failed");
+            items = r.work_items as f64;
+            r.breakdown.total()
+        });
+        if let Some(s) = b.samples.last_mut() {
+            s.items = Some(items);
+        }
+    }
+
+    b.report("prim_scaling (16-DPU end-to-end, simulator wallclock)");
+}

@@ -1,0 +1,90 @@
+//! Hot-path microbenches of the simulator itself (the §Perf targets in
+//! DESIGN.md): timing-engine event rate, functional launch overhead,
+//! WRAM/MRAM access costs, transfer engine, and the PJRT fleet estimator.
+
+use prim_pim::arch::{DpuArch, SystemConfig};
+use prim_pim::coordinator::PimSet;
+use prim_pim::dpu::{replay, Ctx, Dpu, Ev, Trace};
+use prim_pim::util::bencher::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let arch = DpuArch::p21();
+
+    // 1. timing engine event throughput
+    let traces: Vec<Trace> = (0..16)
+        .map(|_| {
+            let mut t = Trace::default();
+            for _ in 0..2000 {
+                t.push(Ev::DmaRead(1024));
+                t.push_compute(300);
+                t.push(Ev::DmaWrite(1024));
+            }
+            t
+        })
+        .collect();
+    let n_events = 16.0 * 6000.0;
+    b.bench_items("timing replay (96k events)", Some(n_events), &mut || {
+        replay(&traces, &arch, 16)
+    });
+
+    // 2. launch overhead: empty kernel, 1 DPU × 16 tasklets
+    let mut dpu = Dpu::new(arch);
+    b.bench("launch overhead (16 tasklet threads, noop)", || {
+        dpu.launch(&|ctx: &mut Ctx| ctx.compute(1), 16)
+    });
+
+    // 3. functional DMA + WRAM path
+    let mut dpu2 = Dpu::new(arch);
+    dpu2.mram_store(0, &vec![1i64; 64 * 1024]);
+    b.bench_items("mram_read+wram_get path (512 x 1KB)", Some(512.0 * 1024.0), &mut || {
+        dpu2.launch(
+            &|ctx: &mut Ctx| {
+                let w = ctx.mem_alloc(1024);
+                let mut blk = ctx.tasklet_id as usize;
+                while blk < 512 {
+                    ctx.mram_read(blk * 1024, w, 1024);
+                    let v: Vec<i64> = ctx.wram_get(w, 128);
+                    std::hint::black_box(v[0]);
+                    ctx.compute(128);
+                    blk += ctx.n_tasklets as usize;
+                }
+            },
+            8,
+        )
+    });
+
+    // 4. fleet-wide launch (64 DPUs)
+    let mut set = PimSet::allocate(SystemConfig::p21_rank(), 64);
+    b.bench("64-DPU launch (1k instr/tasklet)", || {
+        set.launch(16, |_d, ctx| ctx.compute(1000))
+    });
+
+    // 5. transfer engine
+    let bufs: Vec<Vec<i64>> = (0..64).map(|i| vec![i as i64; 8192]).collect();
+    b.bench_items("push_to 64 x 64KB", Some(64.0 * 65536.0), &mut || {
+        set.push_to(0, &bufs)
+    });
+
+    // 6. PJRT fleet estimator (if artifacts are built)
+    if prim_pim::runtime::artifacts_available() {
+        let rt = prim_pim::runtime::PjrtRuntime::cpu().unwrap();
+        let est = prim_pim::runtime::FleetEstimator::load(&rt).unwrap();
+        let descs = vec![
+            prim_pim::runtime::DpuDesc {
+                instrs_per_tasklet: 1e6,
+                tasklets: 16.0,
+                n_reads: 1000.0,
+                read_bytes: 1024.0,
+                n_writes: 1000.0,
+                write_bytes: 1024.0,
+            };
+            2048
+        ];
+        b.bench_items("PJRT fleet estimate (2048 DPUs)", Some(2048.0), &mut || {
+            est.estimate(&descs).unwrap()
+        });
+    }
+
+    b.report("simulator_hotpath");
+}

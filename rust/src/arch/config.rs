@@ -1,0 +1,298 @@
+//! DPU and system configuration presets (Table 1 of the paper).
+
+/// Parameters of a single DRAM Processing Unit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DpuArch {
+    /// Core clock in MHz (350 on the 2,556-DPU system, 267 on the 640-DPU
+    /// system; UPMEM targets 400+).
+    pub freq_mhz: u32,
+    /// Hardware threads (tasklets) per DPU.
+    pub n_hw_threads: u32,
+    /// Minimum cycles between two instructions of the same thread: only the
+    /// last 3 of the 14 pipeline stages overlap with the next instruction's
+    /// DISPATCH/FETCH, so instructions of one tasklet dispatch 11 cycles
+    /// apart — the source of the "11 tasklets to fill the pipeline" rule.
+    pub dispatch_interval: u32,
+    /// WRAM scratchpad capacity in bytes (64 KB).
+    pub wram_bytes: usize,
+    /// MRAM bank capacity in bytes (64 MB).
+    pub mram_bytes: usize,
+    /// IRAM capacity in 48-bit instructions (4,096).
+    pub iram_instrs: usize,
+    /// Fixed cost of an MRAM→WRAM DMA transfer, cycles (measured: ~77).
+    pub dma_alpha_read: u32,
+    /// Fixed cost of a WRAM→MRAM DMA transfer, cycles (measured: ~61).
+    pub dma_alpha_write: u32,
+    /// Variable DMA cost in cycles per byte, as a rational (num/den) so the
+    /// paper's 0.5 cy/B is exact: 2 bytes/cycle peak MRAM bandwidth.
+    pub dma_beta_num: u32,
+    pub dma_beta_den: u32,
+    /// DMA engine occupancy overhead per transfer, cycles: the engine can
+    /// overlap the tasklet-visible fixed latency α of the *next* transfer
+    /// with the tail of the current one, so sustained throughput is
+    /// `1 / (κ + β·size)` transfers/cycle rather than `1 / (α + β·size)`.
+    /// κ = 36 reconciles the paper's 624 MB/s COPY-DMA (1,024-B blocks,
+    /// ≥2 tasklets; model: 654 MB/s) with its 72.58 MB/s fine-grained
+    /// 8-B random-access bandwidth at 16 tasklets (model: 70 MB/s) —
+    /// neither is reachable if the full α serialized at the engine.
+    pub dma_engine_overhead: u32,
+    /// Max single DMA transfer size in bytes (SDK 2021.1.1 limit).
+    pub dma_max_bytes: u32,
+    /// Min single DMA transfer size / alignment in bytes.
+    pub dma_align: u32,
+    /// §6 future-PIM ablation: native integer multiply/divide hardware
+    /// (the paper's Key Takeaway 2 recommendation) instead of
+    /// mul_step/div_step sequences and `__muldi3`/`__divdi3`.
+    pub native_muldiv: bool,
+    /// §6 future-PIM ablation: native floating-point units instead of
+    /// software emulation.
+    pub native_fp: bool,
+    /// Instructions charged for mutex lock / unlock (acquire & release are
+    /// single WRAM atomic-ish ops in the SDK).
+    pub mutex_instrs: u32,
+    /// Instructions charged per tasklet for a barrier crossing.
+    pub barrier_instrs: u32,
+    /// Instructions charged for a handshake wait/notify call.
+    pub handshake_instrs: u32,
+}
+
+impl DpuArch {
+    /// The 350 MHz DPU of the 2,556-DPU (P21) system.
+    pub fn p21() -> Self {
+        DpuArch {
+            freq_mhz: 350,
+            ..Self::base()
+        }
+    }
+
+    /// The 267 MHz DPU of the 640-DPU (E19) system.
+    pub fn e19() -> Self {
+        DpuArch {
+            freq_mhz: 267,
+            ..Self::base()
+        }
+    }
+
+    /// Hypothetical next-generation DPU implementing the paper's §6
+    /// recommendations: the 400–450 MHz clock UPMEM targets ([227]/[231]),
+    /// hardware integer multiply/divide, and native FP units.
+    pub fn future() -> Self {
+        DpuArch {
+            freq_mhz: 450,
+            native_muldiv: true,
+            native_fp: true,
+            ..Self::base()
+        }
+    }
+
+    fn base() -> Self {
+        DpuArch {
+            freq_mhz: 350,
+            n_hw_threads: 24,
+            dispatch_interval: 11,
+            wram_bytes: 64 * 1024,
+            mram_bytes: 64 * 1024 * 1024,
+            iram_instrs: 4096,
+            dma_alpha_read: 77,
+            dma_alpha_write: 61,
+            dma_beta_num: 1,
+            dma_beta_den: 2,
+            dma_engine_overhead: 36,
+            dma_max_bytes: 2048,
+            dma_align: 8,
+            native_muldiv: false,
+            native_fp: false,
+            mutex_instrs: 2,
+            barrier_instrs: 4,
+            handshake_instrs: 2,
+        }
+    }
+
+    /// Clock frequency in Hz.
+    pub fn freq_hz(&self) -> f64 {
+        self.freq_mhz as f64 * 1e6
+    }
+
+    /// Cycles → seconds.
+    pub fn cycles_to_secs(&self, cycles: f64) -> f64 {
+        cycles / self.freq_hz()
+    }
+
+    /// DMA latency in cycles for one transfer (Eq. 3: α + β·size).
+    pub fn dma_latency_cycles(&self, read: bool, bytes: u32) -> f64 {
+        let alpha = if read { self.dma_alpha_read } else { self.dma_alpha_write };
+        alpha as f64 + bytes as f64 * self.dma_beta_num as f64 / self.dma_beta_den as f64
+    }
+
+    /// DMA engine occupancy of one transfer in cycles (sustained-rate
+    /// cost; the issuing tasklet still observes the full Eq. 3 latency).
+    pub fn dma_occupancy_cycles(&self, bytes: u32) -> f64 {
+        self.dma_engine_overhead as f64
+            + bytes as f64 * self.dma_beta_num as f64 / self.dma_beta_den as f64
+    }
+
+    /// Theoretical peak MRAM bandwidth, B/s (2 bytes/cycle — Key Obs. 4).
+    pub fn peak_mram_bw(&self) -> f64 {
+        self.freq_hz() * self.dma_beta_den as f64 / self.dma_beta_num as f64
+    }
+
+    /// Theoretical peak WRAM bandwidth for 8-byte accesses, B/s (one 8-byte
+    /// load or store per cycle with a full pipeline).
+    pub fn peak_wram_bw(&self) -> f64 {
+        self.freq_hz() * 8.0
+    }
+
+    /// Peak arithmetic throughput in OPS (1 int add/cycle with a full
+    /// pipeline).
+    pub fn peak_ops(&self) -> f64 {
+        self.freq_hz()
+    }
+}
+
+/// Which of the paper's two machines (or a custom one) is being modeled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    /// 2,556-DPU / 20-DIMM / 350 MHz "P21" system.
+    P21,
+    /// 640-DPU / 10-DIMM / 267 MHz "E19" system.
+    E19,
+    Custom,
+}
+
+/// Whole-system organization (Table 1).
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub kind: SystemKind,
+    pub dpu: DpuArch,
+    /// DPUs per PIM chip.
+    pub dpus_per_chip: u32,
+    /// Chips per rank (8 chips × 8 DPUs = 64 DPUs/rank).
+    pub chips_per_rank: u32,
+    /// Ranks per DIMM (2 on P21, 1 on E19).
+    pub ranks_per_dimm: u32,
+    /// Number of PIM DIMMs.
+    pub n_dimms: u32,
+    /// DPUs unavailable in the real machine (4 faulty on the paper's P21).
+    pub faulty_dpus: u32,
+    /// Host memory-bus theoretical bandwidth per channel (DDR4-2400:
+    /// 19.2 GB/s).
+    pub ddr4_channel_bw: f64,
+    /// Watts per PIM chip (UPMEM: 1.2 W/chip at 350 MHz).
+    pub watts_per_chip: f64,
+}
+
+impl SystemConfig {
+    /// The 2,556-DPU system (20 dual-rank P21 DIMMs, 4 faulty DPUs).
+    pub fn p21_2556() -> Self {
+        SystemConfig {
+            kind: SystemKind::P21,
+            dpu: DpuArch::p21(),
+            dpus_per_chip: 8,
+            chips_per_rank: 8,
+            ranks_per_dimm: 2,
+            n_dimms: 20,
+            faulty_dpus: 4,
+            ddr4_channel_bw: 19.2e9,
+            watts_per_chip: 1.2,
+        }
+    }
+
+    /// The 640-DPU system (10 single-rank E19 DIMMs).
+    pub fn e19_640() -> Self {
+        SystemConfig {
+            kind: SystemKind::E19,
+            dpu: DpuArch::e19(),
+            dpus_per_chip: 8,
+            chips_per_rank: 8,
+            ranks_per_dimm: 1,
+            n_dimms: 10,
+            faulty_dpus: 0,
+            ddr4_channel_bw: 19.2e9,
+            watts_per_chip: 1.2,
+        }
+    }
+
+    /// A single rank of the P21 system — the unit of most scaling studies.
+    pub fn p21_rank() -> Self {
+        SystemConfig {
+            n_dimms: 1,
+            ranks_per_dimm: 1,
+            faulty_dpus: 0,
+            ..Self::p21_2556()
+        }
+    }
+
+    pub fn dpus_per_rank(&self) -> u32 {
+        self.dpus_per_chip * self.chips_per_rank
+    }
+
+    pub fn n_ranks(&self) -> u32 {
+        self.n_dimms * self.ranks_per_dimm
+    }
+
+    /// Usable DPUs (total minus faulty).
+    pub fn n_dpus(&self) -> u32 {
+        self.n_ranks() * self.dpus_per_rank() - self.faulty_dpus
+    }
+
+    /// Total PIM-visible MRAM capacity in bytes.
+    pub fn total_mram(&self) -> u64 {
+        self.n_dpus() as u64 * self.dpu.mram_bytes as u64
+    }
+
+    /// Aggregate peak MRAM bandwidth, B/s (paper: 1.7 TB/s on P21).
+    pub fn aggregate_mram_bw(&self) -> f64 {
+        self.n_dpus() as f64 * self.dpu.peak_mram_bw()
+    }
+
+    /// System TDP estimate (Table 4: chips × 1.2 W).
+    pub fn tdp_watts(&self) -> f64 {
+        let chips = (self.n_ranks() * self.chips_per_rank) as f64;
+        chips * self.watts_per_chip * (self.dpu.freq_mhz as f64 / 350.0).min(1.0).max(0.6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_counts() {
+        let p21 = SystemConfig::p21_2556();
+        assert_eq!(p21.n_dpus(), 2556);
+        assert_eq!(p21.dpus_per_rank(), 64);
+        assert_eq!(p21.n_ranks(), 40);
+        // 159.75 GB of MRAM
+        assert_eq!(p21.total_mram(), 2556 * 64 * 1024 * 1024);
+
+        let e19 = SystemConfig::e19_640();
+        assert_eq!(e19.n_dpus(), 640);
+        assert_eq!(e19.total_mram(), 640 * 64 * 1024 * 1024);
+    }
+
+    #[test]
+    fn peak_bandwidths() {
+        let a = DpuArch::p21();
+        // 2 B/cycle at 350 MHz = 700 MB/s per DPU (paper §2.2)
+        assert!((a.peak_mram_bw() - 700e6).abs() < 1.0);
+        // 8 B/cycle at 350 MHz = 2,800 MB/s WRAM (paper §3.1)
+        assert!((a.peak_wram_bw() - 2800e6).abs() < 1.0);
+        // aggregate ≈ 1.7 TB/s on the fleet
+        let sys = SystemConfig::p21_2556();
+        assert!((sys.aggregate_mram_bw() / 1e12 - 1.7892).abs() < 0.01);
+    }
+
+    #[test]
+    fn dma_latency_eq3() {
+        let a = DpuArch::p21();
+        // paper: 8-byte read = 81 cycles, 128-byte read = 141 cycles
+        assert_eq!(a.dma_latency_cycles(true, 8) as u32, 81);
+        assert_eq!(a.dma_latency_cycles(true, 128) as u32, 141);
+        assert_eq!(a.dma_latency_cycles(false, 8) as u32, 65);
+    }
+
+    #[test]
+    fn e19_is_slower() {
+        assert!(DpuArch::e19().peak_mram_bw() < DpuArch::p21().peak_mram_bw());
+    }
+}

@@ -1,0 +1,13 @@
+//! Architecture parameters and the instruction-cost model of the UPMEM DPU.
+//!
+//! Everything here is taken from the paper (Section 2/3) and the UPMEM
+//! documentation it cites: the pipeline shape, memory sizes, the measured
+//! DMA constants (α, β), and the per-operation instruction counts that the
+//! paper derives from compiled code (Listing 1) and back-solves from
+//! measured throughput via Eq. 1 (`throughput = f / n`).
+
+pub mod config;
+pub mod isa;
+
+pub use config::{DpuArch, SystemConfig, SystemKind};
+pub use isa::{op_instrs, stream_loop_instrs, DType, Op};

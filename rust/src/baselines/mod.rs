@@ -1,0 +1,13 @@
+//! CPU and GPU comparators for the §5.2 comparison (Figs. 16–17).
+//!
+//! We do not have the paper's Xeon E3-1225 v6 or Titan V. Substitution
+//! (DESIGN.md): per-device **roofline models** with per-benchmark
+//! efficiency factors calibrated from the GPU/CPU literature the paper
+//! cites, plus **native measured** single-machine implementations
+//! ([`native`]) used by the examples as a ground-truth sanity check of the
+//! roofline's orders of magnitude.
+
+pub mod native;
+pub mod roofline;
+
+pub use roofline::{shape, titan_v, xeon, Roofline, WorkloadShape};

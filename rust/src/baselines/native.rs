@@ -1,0 +1,121 @@
+//! Native (really-measured) CPU implementations of representative PrIM
+//! workloads, used by the examples as a ground-truth sanity check of the
+//! roofline comparator and as this machine's own "CPU counterpart".
+
+use std::time::Instant;
+
+/// Measured run: (result hash/sum, seconds).
+pub struct Measured<T> {
+    pub value: T,
+    pub secs: f64,
+}
+
+fn timeit<T>(f: impl FnOnce() -> T) -> Measured<T> {
+    let t0 = Instant::now();
+    let value = f();
+    Measured {
+        value,
+        secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// VA: element-wise i32 addition.
+pub fn va(a: &[i32], b: &[i32]) -> Measured<Vec<i32>> {
+    timeit(|| a.iter().zip(b).map(|(x, y)| x.wrapping_add(*y)).collect())
+}
+
+/// RED: i64 sum.
+pub fn red(xs: &[i64]) -> Measured<i64> {
+    timeit(|| xs.iter().sum())
+}
+
+/// HST: 256-bin histogram of 12-bit pixels.
+pub fn hst(pixels: &[u32]) -> Measured<Vec<u32>> {
+    timeit(|| {
+        let mut h = vec![0u32; 256];
+        for &p in pixels {
+            h[(p >> 4) as usize] += 1;
+        }
+        h
+    })
+}
+
+/// GEMV: u32 matrix-vector multiply.
+pub fn gemv(mat: &[u32], x: &[u32], m: usize, n: usize) -> Measured<Vec<u32>> {
+    timeit(|| {
+        let mut y = vec![0u32; m];
+        for (r, out) in y.iter_mut().enumerate() {
+            let row = &mat[r * n..(r + 1) * n];
+            let mut acc = 0u32;
+            for (a, b) in row.iter().zip(x) {
+                acc = acc.wrapping_add(a.wrapping_mul(*b));
+            }
+            *out = acc;
+        }
+        y
+    })
+}
+
+/// SCAN: exclusive prefix sum.
+pub fn scan(xs: &[i64]) -> Measured<Vec<i64>> {
+    timeit(|| {
+        let mut out = Vec::with_capacity(xs.len());
+        let mut acc = 0i64;
+        for &x in xs {
+            out.push(acc);
+            acc += x;
+        }
+        out
+    })
+}
+
+/// BS: binary searches over a sorted array.
+pub fn bs(arr: &[i64], queries: &[i64]) -> Measured<Vec<i64>> {
+    timeit(|| {
+        queries
+            .iter()
+            .map(|q| arr.binary_search(q).map(|i| i as i64).unwrap_or(-1))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn native_va_correct() {
+        let a = vec![1, 2, 3];
+        let b = vec![10, 20, 30];
+        let m = va(&a, &b);
+        assert_eq!(m.value, vec![11, 22, 33]);
+        assert!(m.secs >= 0.0);
+    }
+
+    #[test]
+    fn native_scan_exclusive() {
+        let m = scan(&[5, 7, 2]);
+        assert_eq!(m.value, vec![0, 5, 12]);
+    }
+
+    #[test]
+    fn native_bs_finds() {
+        let mut rng = Rng::new(3);
+        let mut arr = rng.vec_i64(1000, 1 << 30);
+        arr.sort_unstable();
+        arr.dedup();
+        let qs: Vec<i64> = arr.iter().step_by(17).copied().collect();
+        let m = bs(&arr, &qs);
+        for (q, pos) in qs.iter().zip(&m.value) {
+            assert_eq!(arr[*pos as usize], *q);
+        }
+    }
+
+    #[test]
+    fn native_hst_sums_to_n() {
+        let px: Vec<u32> = (0..4096).collect();
+        let m = hst(&px);
+        assert_eq!(m.value.iter().sum::<u32>(), 4096);
+    }
+}

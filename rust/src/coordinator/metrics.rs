@@ -1,0 +1,97 @@
+//! Execution-time breakdown — the exact four buckets of the paper's
+//! Figures 12–15 plus data-volume counters.
+
+/// Accumulated time breakdown of a benchmark run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TimeBreakdown {
+    /// Kernel time on the DPUs (max over concurrent DPUs, summed over
+    /// launches) — the "DPU" bar.
+    pub dpu: f64,
+    /// Host-orchestrated synchronization between launches (host compute +
+    /// mid-run transfers) — the "Inter-DPU" bar.
+    pub inter_dpu: f64,
+    /// Input transfer time — the "CPU-DPU" bar.
+    pub cpu_dpu: f64,
+    /// Result retrieval time — the "DPU-CPU" bar.
+    pub dpu_cpu: f64,
+    /// Bytes moved host→MRAM (input phase).
+    pub bytes_to_dpu: u64,
+    /// Bytes moved MRAM→host (retrieval phase).
+    pub bytes_from_dpu: u64,
+    /// Bytes exchanged during inter-DPU synchronization phases (both
+    /// directions) — the volume a direct DPU↔DPU channel would carry.
+    pub bytes_inter: u64,
+    /// Number of kernel launches.
+    pub launches: u64,
+}
+
+impl TimeBreakdown {
+    /// Total wall time of the run.
+    pub fn total(&self) -> f64 {
+        self.dpu + self.inter_dpu + self.cpu_dpu + self.dpu_cpu
+    }
+
+    /// DPU + Inter-DPU: the quantity the paper uses for the CPU/GPU
+    /// comparison of §5.2 ("we include the time spent in the DPU and the
+    /// time spent for inter-DPU synchronization").
+    pub fn kernel_plus_sync(&self) -> f64 {
+        self.dpu + self.inter_dpu
+    }
+
+    /// Element-wise sum (accumulate repetitions).
+    pub fn add(&mut self, o: &TimeBreakdown) {
+        self.dpu += o.dpu;
+        self.inter_dpu += o.inter_dpu;
+        self.cpu_dpu += o.cpu_dpu;
+        self.dpu_cpu += o.dpu_cpu;
+        self.bytes_to_dpu += o.bytes_to_dpu;
+        self.bytes_from_dpu += o.bytes_from_dpu;
+        self.bytes_inter += o.bytes_inter;
+        self.launches += o.launches;
+    }
+
+    /// Format as milliseconds for tables.
+    pub fn fmt_ms(&self) -> String {
+        format!(
+            "DPU {:.3} ms | Inter-DPU {:.3} ms | CPU-DPU {:.3} ms | DPU-CPU {:.3} ms",
+            self.dpu * 1e3,
+            self.inter_dpu * 1e3,
+            self.cpu_dpu * 1e3,
+            self.dpu_cpu * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals() {
+        let b = TimeBreakdown {
+            dpu: 1.0,
+            inter_dpu: 0.5,
+            cpu_dpu: 0.25,
+            dpu_cpu: 0.25,
+            ..Default::default()
+        };
+        assert_eq!(b.total(), 2.0);
+        assert_eq!(b.kernel_plus_sync(), 1.5);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = TimeBreakdown::default();
+        let b = TimeBreakdown {
+            dpu: 1.0,
+            launches: 2,
+            bytes_to_dpu: 100,
+            ..Default::default()
+        };
+        a.add(&b);
+        a.add(&b);
+        assert_eq!(a.dpu, 2.0);
+        assert_eq!(a.launches, 4);
+        assert_eq!(a.bytes_to_dpu, 200);
+    }
+}

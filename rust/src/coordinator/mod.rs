@@ -1,0 +1,309 @@
+//! L3 coordinator — the rust analogue of the UPMEM host runtime.
+//!
+//! Owns the DPU fleet, the transfer engine, and the host cost model, and
+//! accounts every second into the same four buckets the paper's figures
+//! use: `DPU` (kernel time, max over concurrently-running DPUs),
+//! `Inter-DPU` (host-orchestrated synchronization between launches),
+//! `CPU-DPU` and `DPU-CPU` (input/result transfers).
+
+pub mod metrics;
+pub mod partition;
+
+use crate::arch::SystemConfig;
+use crate::dpu::{Ctx, Dpu, DpuTiming};
+use crate::system::{HostModel, TransferEngine, XferModel};
+use crate::util::pod::Pod;
+
+pub use metrics::TimeBreakdown;
+pub use partition::{chunk_ranges, chunk_ranges_aligned, cyclic_blocks};
+
+/// Statistics of one kernel launch across the allocated DPU set.
+#[derive(Clone, Debug, Default)]
+pub struct LaunchStats {
+    /// Per-DPU timing (cycles etc.).
+    pub timings: Vec<DpuTiming>,
+    /// Seconds of the launch = slowest DPU (they run concurrently).
+    pub secs: f64,
+}
+
+impl LaunchStats {
+    /// Load imbalance: max/mean DPU cycles.
+    pub fn imbalance(&self) -> f64 {
+        if self.timings.is_empty() {
+            return 1.0;
+        }
+        let max = self.timings.iter().map(|t| t.cycles).fold(0.0, f64::max);
+        let mean =
+            self.timings.iter().map(|t| t.cycles).sum::<f64>() / self.timings.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    pub fn total_instrs(&self) -> u64 {
+        self.timings.iter().map(|t| t.instrs).sum()
+    }
+
+    pub fn total_dma_bytes(&self) -> u64 {
+        self.timings.iter().map(|t| t.dma_bytes).sum()
+    }
+}
+
+/// An allocated set of DPUs plus the host-side machinery — the object PrIM
+/// benchmarks are written against (the `dpu_set_t` of the UPMEM SDK).
+pub struct PimSet {
+    pub cfg: SystemConfig,
+    pub dpus: Vec<Dpu>,
+    pub xfer: TransferEngine,
+    pub host: HostModel,
+    pub metrics: TimeBreakdown,
+}
+
+impl PimSet {
+    /// Allocate `n_dpus` DPUs of the configured system
+    /// (`dpu_alloc(n_dpus, ...)`).
+    pub fn allocate(cfg: SystemConfig, n_dpus: u32) -> Self {
+        assert!(n_dpus >= 1, "need at least one DPU");
+        assert!(
+            n_dpus <= cfg.n_dpus(),
+            "requested {n_dpus} DPUs but the {:?} system has {}",
+            cfg.kind,
+            cfg.n_dpus()
+        );
+        let dpus = (0..n_dpus).map(|_| Dpu::new(cfg.dpu)).collect();
+        PimSet {
+            dpus,
+            xfer: TransferEngine::new(XferModel {
+                rank_size: cfg.dpus_per_rank(),
+                ..XferModel::default()
+            }),
+            host: HostModel::default(),
+            metrics: TimeBreakdown::default(),
+            cfg,
+        }
+    }
+
+    pub fn n_dpus(&self) -> u32 {
+        self.dpus.len() as u32
+    }
+
+    /// Does the set span both sockets of the 2,556-DPU machine (>16 ranks)?
+    pub fn spans_sockets(&self) -> bool {
+        self.n_dpus() > 16 * self.cfg.dpus_per_rank()
+    }
+
+    // ------------------------------------------------------------ transfers
+
+    /// Serial CPU→DPU transfer (`dpu_copy_to`); charged to `CPU-DPU`.
+    pub fn copy_to<T: Pod>(&mut self, dpu: usize, mram_off: usize, data: &[T]) {
+        let s = self.xfer.copy_to(&mut self.dpus[dpu], mram_off, data);
+        self.metrics.cpu_dpu += s;
+        self.metrics.bytes_to_dpu += std::mem::size_of_val(data) as u64;
+    }
+
+    /// Serial DPU→CPU transfer (`dpu_copy_from`); charged to `DPU-CPU`.
+    pub fn copy_from<T: Pod>(&mut self, dpu: usize, mram_off: usize, n: usize) -> Vec<T> {
+        let (v, s) = self.xfer.copy_from(&self.dpus[dpu], mram_off, n);
+        self.metrics.dpu_cpu += s;
+        self.metrics.bytes_from_dpu += (n * std::mem::size_of::<T>()) as u64;
+        v
+    }
+
+    /// Parallel CPU→DPU transfer of equal-size buffers (`dpu_push_xfer`).
+    pub fn push_to<T: Pod>(&mut self, mram_off: usize, bufs: &[Vec<T>]) {
+        let s = self.xfer.push_to(&mut self.dpus, mram_off, bufs);
+        self.metrics.cpu_dpu += s;
+        self.metrics.bytes_to_dpu +=
+            bufs.iter().map(|b| std::mem::size_of_val(b.as_slice()) as u64).sum::<u64>();
+    }
+
+    /// Parallel DPU→CPU retrieval of equal-size buffers.
+    pub fn push_from<T: Pod>(&mut self, mram_off: usize, n: usize) -> Vec<Vec<T>> {
+        let (v, s) = self.xfer.push_from(&self.dpus, mram_off, n);
+        self.metrics.dpu_cpu += s;
+        self.metrics.bytes_from_dpu += (self.dpus.len() * n * std::mem::size_of::<T>()) as u64;
+        v
+    }
+
+    /// Broadcast the same buffer to all DPUs (`dpu_broadcast_to`).
+    pub fn broadcast<T: Pod>(&mut self, mram_off: usize, data: &[T]) {
+        let s = self.xfer.broadcast_to(&mut self.dpus, mram_off, data);
+        self.metrics.cpu_dpu += s;
+        self.metrics.bytes_to_dpu +=
+            (self.dpus.len() * std::mem::size_of_val(data)) as u64;
+    }
+
+    /// Variant of the parallel transfers used during *inter-DPU*
+    /// synchronization phases (the paper charges mid-kernel exchanges to
+    /// "Inter-DPU", not to CPU-DPU/DPU-CPU input/output time).
+    pub fn push_to_inter<T: Pod>(&mut self, mram_off: usize, bufs: &[Vec<T>]) {
+        let s = self.xfer.push_to(&mut self.dpus, mram_off, bufs);
+        self.metrics.inter_dpu += s;
+        self.metrics.bytes_inter +=
+            bufs.iter().map(|b| std::mem::size_of_val(b.as_slice()) as u64).sum::<u64>();
+    }
+
+    pub fn push_from_inter<T: Pod>(&mut self, mram_off: usize, n: usize) -> Vec<Vec<T>> {
+        let (v, s) = self.xfer.push_from(&self.dpus, mram_off, n);
+        self.metrics.inter_dpu += s;
+        self.metrics.bytes_inter += (self.dpus.len() * n * std::mem::size_of::<T>()) as u64;
+        v
+    }
+
+    pub fn broadcast_inter<T: Pod>(&mut self, mram_off: usize, data: &[T]) {
+        let s = self.xfer.broadcast_to(&mut self.dpus, mram_off, data);
+        self.metrics.inter_dpu += s;
+        self.metrics.bytes_inter += (self.dpus.len() * std::mem::size_of_val(data)) as u64;
+    }
+
+    pub fn copy_to_inter<T: Pod>(&mut self, dpu: usize, mram_off: usize, data: &[T]) {
+        let s = self.xfer.copy_to(&mut self.dpus[dpu], mram_off, data);
+        self.metrics.inter_dpu += s;
+        self.metrics.bytes_inter += std::mem::size_of_val(data) as u64;
+    }
+
+    pub fn copy_from_inter<T: Pod>(&mut self, dpu: usize, mram_off: usize, n: usize) -> Vec<T> {
+        let (v, s) = self.xfer.copy_from(&self.dpus[dpu], mram_off, n);
+        self.metrics.inter_dpu += s;
+        self.metrics.bytes_inter += (n * std::mem::size_of::<T>()) as u64;
+        v
+    }
+
+    // --------------------------------------------------------------- launch
+
+    /// Launch the SPMD function `f(dpu_idx, ctx)` on every DPU with
+    /// `n_tasklets` tasklets. DPUs execute concurrently on real hardware,
+    /// so the launch is charged `max` of the per-DPU times.
+    pub fn launch<F>(&mut self, n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        let arch = self.cfg.dpu;
+        let mut timings = Vec::with_capacity(self.dpus.len());
+        for (i, dpu) in self.dpus.iter_mut().enumerate() {
+            let g = |ctx: &mut Ctx| f(i, ctx);
+            let run = dpu.launch(&g, n_tasklets);
+            timings.push(run.timing);
+        }
+        let max_cycles = timings.iter().map(|t| t.cycles).fold(0.0, f64::max);
+        let secs = arch.cycles_to_secs(max_cycles);
+        self.metrics.dpu += secs;
+        self.metrics.launches += 1;
+        LaunchStats { timings, secs }
+    }
+
+    /// Sequential-fast-path launch (§Perf): identical semantics to
+    /// [`PimSet::launch`] for kernels without barriers or forward
+    /// handshake waits (see [`crate::dpu::Dpu::launch_seq`]), but with
+    /// zero thread overhead — the lever that makes fleet-scale (2,048-DPU)
+    /// functional simulation tractable on one core.
+    pub fn launch_seq<F>(&mut self, n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        let arch = self.cfg.dpu;
+        let mut timings = Vec::with_capacity(self.dpus.len());
+        for (i, dpu) in self.dpus.iter_mut().enumerate() {
+            let g = |ctx: &mut Ctx| f(i, ctx);
+            let run = dpu.launch_seq(&g, n_tasklets);
+            timings.push(run.timing);
+        }
+        let max_cycles = timings.iter().map(|t| t.cycles).fold(0.0, f64::max);
+        let secs = arch.cycles_to_secs(max_cycles);
+        self.metrics.dpu += secs;
+        self.metrics.launches += 1;
+        LaunchStats { timings, secs }
+    }
+
+    /// Launch on a prefix subset of the DPUs (NW uses fewer DPUs on short
+    /// diagonals). Time is still `max` over the active DPUs.
+    pub fn launch_on<F>(&mut self, dpu_ids: &[usize], n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        let arch = self.cfg.dpu;
+        let mut timings = Vec::with_capacity(dpu_ids.len());
+        for &i in dpu_ids {
+            let g = |ctx: &mut Ctx| f(i, ctx);
+            let run = self.dpus[i].launch(&g, n_tasklets);
+            timings.push(run.timing);
+        }
+        let max_cycles = timings.iter().map(|t| t.cycles).fold(0.0, f64::max);
+        let secs = arch.cycles_to_secs(max_cycles);
+        self.metrics.dpu += secs;
+        self.metrics.launches += 1;
+        LaunchStats { timings, secs }
+    }
+
+    // ----------------------------------------------------------- host model
+
+    /// Charge host-side merge work (bytes streamed, scalar ops executed)
+    /// to the `Inter-DPU` bucket.
+    pub fn host_merge(&mut self, bytes: u64, ops: u64) {
+        let spans = self.spans_sockets();
+        self.metrics.inter_dpu += self.host.merge_numa(bytes, ops, spans);
+    }
+
+    /// Reset accumulated metrics (dataset stays in MRAM).
+    pub fn reset_metrics(&mut self) {
+        self.metrics = TimeBreakdown::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::SystemConfig;
+
+    #[test]
+    fn allocate_and_launch() {
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 4);
+        let bufs: Vec<Vec<i64>> = (0..4).map(|i| vec![i as i64; 16]).collect();
+        set.push_to(0, &bufs);
+        let stats = set.launch(8, |_i, ctx| {
+            let b = ctx.mem_alloc(128);
+            ctx.mram_read(0, b, 128);
+            let v: Vec<i64> = ctx.wram_get(b, 16);
+            let s: i64 = v.iter().sum();
+            ctx.wram_set(b, &[s]);
+            ctx.charge_stream(crate::arch::DType::I64, crate::arch::Op::Add, 16);
+            ctx.mram_write(b, 1024, 8);
+        });
+        assert_eq!(stats.timings.len(), 4);
+        assert!(stats.secs > 0.0);
+        assert!(set.metrics.dpu > 0.0);
+        assert!(set.metrics.cpu_dpu > 0.0);
+        // per-DPU sums
+        for i in 0..4usize {
+            let s = set.copy_from::<i64>(i, 1024, 1);
+            assert_eq!(s[0], 16 * i as i64);
+        }
+        assert!(set.metrics.dpu_cpu > 0.0);
+    }
+
+    #[test]
+    fn launch_charges_max_not_sum() {
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 8);
+        let stats = set.launch(1, |i, ctx| {
+            ctx.compute(1000 * (i as u64 + 1));
+        });
+        // max DPU has 8000 instrs at 1/11 → 88_000 cycles
+        let expect = set.cfg.dpu.cycles_to_secs(88_000.0);
+        assert!((stats.secs - expect).abs() / expect < 0.01);
+    }
+
+    #[test]
+    #[should_panic(expected = "requested")]
+    fn over_allocation_rejected() {
+        PimSet::allocate(SystemConfig::p21_rank(), 65);
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 2);
+        let stats = set.launch(1, |i, ctx| ctx.compute(if i == 0 { 100 } else { 300 }));
+        assert!(stats.imbalance() > 1.4);
+    }
+}

@@ -1,0 +1,92 @@
+//! Workload partitioning helpers (the "split the workload into independent
+//! data blocks" programming recommendation).
+
+use std::ops::Range;
+
+/// Split `n_items` into `n_parts` contiguous balanced ranges (sizes differ
+/// by at most 1; earlier parts get the extra element). Empty ranges are
+/// produced when `n_parts > n_items`.
+pub fn chunk_ranges(n_items: usize, n_parts: usize) -> Vec<Range<usize>> {
+    assert!(n_parts > 0);
+    let base = n_items / n_parts;
+    let extra = n_items % n_parts;
+    let mut out = Vec::with_capacity(n_parts);
+    let mut start = 0;
+    for i in 0..n_parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Split into contiguous ranges whose starts are aligned to `align`
+/// elements (so per-DPU MRAM buffers keep 8-byte DMA alignment). The last
+/// range absorbs the remainder.
+pub fn chunk_ranges_aligned(n_items: usize, n_parts: usize, align: usize) -> Vec<Range<usize>> {
+    assert!(n_parts > 0 && align > 0);
+    let per = n_items.div_ceil(n_parts);
+    let per = per.div_ceil(align) * align;
+    let mut out = Vec::with_capacity(n_parts);
+    let mut start = 0usize;
+    for _ in 0..n_parts {
+        let end = (start + per).min(n_items);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// Block-cyclic assignment of `n_blocks` blocks to `n_workers` workers
+/// (block j → worker j % n_workers) — the intra-DPU tasklet assignment used
+/// by VA and friends. Returns the block indices of each worker.
+pub fn cyclic_blocks(n_blocks: usize, n_workers: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); n_workers];
+    for b in 0..n_blocks {
+        out[b % n_workers].push(b);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for (n, p) in [(100, 7), (5, 8), (64, 64), (0, 3), (1000, 1)] {
+            let rs = chunk_ranges(n, p);
+            assert_eq!(rs.len(), p);
+            let mut cursor = 0;
+            for r in &rs {
+                assert_eq!(r.start, cursor);
+                cursor = r.end;
+            }
+            assert_eq!(cursor, n);
+            let sizes: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    fn aligned_chunks_cover() {
+        let rs = chunk_ranges_aligned(1000, 7, 16);
+        let mut cursor = 0;
+        for r in &rs {
+            assert_eq!(r.start, cursor);
+            assert_eq!(r.start % 16, 0);
+            cursor = r.end;
+        }
+        assert_eq!(cursor, 1000);
+    }
+
+    #[test]
+    fn cyclic_covers_all_blocks() {
+        let asg = cyclic_blocks(10, 3);
+        let mut all: Vec<usize> = asg.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        assert_eq!(asg[0], vec![0, 3, 6, 9]);
+    }
+}

@@ -1,0 +1,531 @@
+//! Fluid event-driven timing replay.
+//!
+//! Replays the per-tasklet traces of one DPU against three resources:
+//!
+//! 1. **Pipeline** — fine-grained multithreading: a tasklet in a compute
+//!    segment progresses at `1 / max(dispatch_interval, A)` instructions
+//!    per cycle, where `A` is the number of concurrently-computing
+//!    tasklets (per-thread dispatch every 11 cycles; aggregate issue of at
+//!    most 1 instruction/cycle). This reproduces Key Observation 1
+//!    (throughput saturates at 11 tasklets) by construction.
+//! 2. **DMA engine** — one transfer at a time, FIFO, latency
+//!    `α + β·bytes` (Eq. 3). Tasklets block on their own transfers;
+//!    with ≥2 tasklets the engine stays busy (Key Observation 5).
+//! 3. **Synchronization** — mutexes serialize critical sections, barriers
+//!    join all tasklets, handshakes order producer/consumer pairs,
+//!    semaphores count.
+//!
+//! The fluid approximation (piecewise-constant progress rates between
+//! events) is validated against a cycle-stepped reference in
+//! [`super::timing_ref`] (ablation bench + tests): divergence is <1% on
+//! microbenchmark traces while running ~1000× faster.
+
+use super::trace::{Ev, Trace};
+use crate::arch::DpuArch;
+use std::collections::VecDeque;
+
+/// Replay result for one DPU launch.
+#[derive(Clone, Debug, Default)]
+pub struct DpuTiming {
+    /// Total cycles until the last tasklet finishes.
+    pub cycles: f64,
+    /// Total pipeline instructions issued.
+    pub instrs: u64,
+    /// Total bytes moved by the DMA engine (both directions).
+    pub dma_bytes: u64,
+    /// Number of DMA transfers.
+    pub dma_count: u64,
+    /// Cycles the DMA engine was busy.
+    pub dma_busy_cycles: f64,
+    /// Instruction-issue cycles (= instrs; pipeline busy fraction is
+    /// `instrs / cycles`).
+    pub pipeline_busy_cycles: f64,
+}
+
+impl DpuTiming {
+    /// Pipeline utilization in [0,1].
+    pub fn pipeline_util(&self) -> f64 {
+        if self.cycles == 0.0 {
+            0.0
+        } else {
+            self.pipeline_busy_cycles / self.cycles
+        }
+    }
+
+    /// DMA engine utilization in [0,1].
+    pub fn dma_util(&self) -> f64 {
+        if self.cycles == 0.0 {
+            0.0
+        } else {
+            self.dma_busy_cycles / self.cycles
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum St {
+    /// Ready to process the next trace event.
+    Ready,
+    Compute {
+        rem: f64,
+    },
+    /// Queued for (or being served by) the DMA engine.
+    Dma,
+    MutexWait(u16),
+    BarrierWait(u16),
+    HsWait {
+        peer: u8,
+        target: u64,
+    },
+    SemWait(u16),
+    Done,
+}
+
+struct Engine<'a> {
+    traces: &'a [Trace],
+    arch: &'a DpuArch,
+    n: usize,
+    idx: Vec<usize>,
+    st: Vec<St>,
+    // DMA engine: transfers start in FIFO order; the engine can start the
+    // next transfer `occupancy` cycles after the previous one started
+    // (request-setup pipelining), while the issuing tasklet observes the
+    // full α+β·size latency.
+    dma_free_at: f64,
+    dma_inflight: Vec<(usize, f64)>, // (tasklet, completion time)
+    // sync
+    mutex_held: [bool; super::MAX_SYNC_IDS],
+    mutex_waiters: Vec<VecDeque<usize>>,
+    barrier_arrived: Vec<Vec<usize>>,
+    notifies: Vec<u64>,
+    sem_val: [i64; super::MAX_SYNC_IDS],
+    sem_waiters: Vec<VecDeque<usize>>,
+    // stats
+    out: DpuTiming,
+}
+
+const EPS: f64 = 1e-6;
+
+impl<'a> Engine<'a> {
+    fn new(traces: &'a [Trace], arch: &'a DpuArch) -> Self {
+        let n = traces.len();
+        Engine {
+            traces,
+            arch,
+            n,
+            idx: vec![0; n],
+            st: vec![St::Ready; n],
+            dma_free_at: 0.0,
+            dma_inflight: Vec::new(),
+            mutex_held: [false; super::MAX_SYNC_IDS],
+            mutex_waiters: (0..super::MAX_SYNC_IDS).map(|_| VecDeque::new()).collect(),
+            barrier_arrived: (0..super::MAX_SYNC_IDS).map(|_| Vec::new()).collect(),
+            notifies: vec![0; 24.max(n)],
+            sem_val: [0; super::MAX_SYNC_IDS],
+            sem_waiters: (0..super::MAX_SYNC_IDS).map(|_| VecDeque::new()).collect(),
+            out: DpuTiming::default(),
+        }
+    }
+
+    /// Schedule a DMA transfer issued by tasklet `t` at time `now`.
+    fn enqueue_dma(&mut self, t: usize, now: f64, read: bool, bytes: u32) {
+        let start = now.max(self.dma_free_at);
+        let lat = self.arch.dma_latency_cycles(read, bytes);
+        let occ = self.arch.dma_occupancy_cycles(bytes);
+        self.dma_free_at = start + occ;
+        self.dma_inflight.push((t, start + lat));
+        self.out.dma_busy_cycles += occ;
+        self.out.dma_bytes += bytes as u64;
+        self.out.dma_count += 1;
+    }
+
+    /// Process events for tasklet `t` until it blocks or finishes.
+    /// May unblock other tasklets (worklist).
+    fn advance(&mut self, t: usize, now: f64, work: &mut Vec<usize>) {
+        loop {
+            let tr = &self.traces[t];
+            if self.idx[t] >= tr.events.len() {
+                self.st[t] = St::Done;
+                return;
+            }
+            let ev = tr.events[self.idx[t]];
+            self.idx[t] += 1;
+            match ev {
+                Ev::Compute(n) => {
+                    self.out.instrs += n;
+                    self.out.pipeline_busy_cycles += n as f64;
+                    self.st[t] = St::Compute { rem: n as f64 };
+                    return;
+                }
+                Ev::DmaRead(b) => {
+                    self.st[t] = St::Dma;
+                    self.enqueue_dma(t, now, true, b);
+                    return;
+                }
+                Ev::DmaWrite(b) => {
+                    self.st[t] = St::Dma;
+                    self.enqueue_dma(t, now, false, b);
+                    return;
+                }
+                Ev::MutexLock(id) => {
+                    let id = id as usize;
+                    if self.mutex_held[id] {
+                        self.st[t] = St::MutexWait(id as u16);
+                        self.mutex_waiters[id].push_back(t);
+                        return;
+                    }
+                    self.mutex_held[id] = true;
+                }
+                Ev::MutexUnlock(id) => {
+                    let id = id as usize;
+                    debug_assert!(self.mutex_held[id]);
+                    if let Some(w) = self.mutex_waiters[id].pop_front() {
+                        // hand the mutex to the head waiter
+                        self.st[w] = St::Ready;
+                        work.push(w);
+                    } else {
+                        self.mutex_held[id] = false;
+                    }
+                }
+                Ev::Barrier(id) => {
+                    let id = id as usize;
+                    self.barrier_arrived[id].push(t);
+                    if self.barrier_arrived[id].len() == self.n {
+                        let arrived = std::mem::take(&mut self.barrier_arrived[id]);
+                        for w in arrived {
+                            if w != t {
+                                self.st[w] = St::Ready;
+                                work.push(w);
+                            }
+                        }
+                        // this tasklet continues immediately
+                    } else {
+                        self.st[t] = St::BarrierWait(id as u16);
+                        return;
+                    }
+                }
+                Ev::HsWait { peer, target } => {
+                    if self.notifies[peer as usize] < target {
+                        self.st[t] = St::HsWait { peer, target };
+                        return;
+                    }
+                }
+                Ev::HsNotify => {
+                    self.notifies[t] += 1;
+                    for w in 0..self.n {
+                        if let St::HsWait { peer, target } = self.st[w] {
+                            if peer as usize == t && self.notifies[t] >= target {
+                                self.st[w] = St::Ready;
+                                work.push(w);
+                            }
+                        }
+                    }
+                }
+                Ev::SemGive(id) => {
+                    let id = id as usize;
+                    if let Some(w) = self.sem_waiters[id].pop_front() {
+                        self.st[w] = St::Ready;
+                        work.push(w);
+                    } else {
+                        self.sem_val[id] += 1;
+                    }
+                }
+                Ev::SemTake(id) => {
+                    let id = id as usize;
+                    if self.sem_val[id] > 0 {
+                        self.sem_val[id] -= 1;
+                    } else {
+                        self.st[t] = St::SemWait(id as u16);
+                        self.sem_waiters[id].push_back(t);
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    fn drain_worklist(&mut self, now: f64, work: &mut Vec<usize>) {
+        // `work` doubles as the stack: advance() pushes newly-unblocked
+        // tasklets onto it — no per-event allocation on the hot path
+        while let Some(t) = work.pop() {
+            if self.st[t] == St::Ready {
+                self.advance(t, now, work);
+            }
+        }
+    }
+
+    fn run(mut self) -> DpuTiming {
+        let mut now = 0.0f64;
+        // kick off: process every tasklet from the start of its trace
+        let mut wl: Vec<usize> = Vec::new();
+        for t in 0..self.n {
+            if self.st[t] == St::Ready {
+                self.advance(t, now, &mut wl);
+            }
+        }
+        self.drain_worklist(now, &mut wl);
+
+        loop {
+            // active compute tasklets
+            let a = self.st.iter().filter(|s| matches!(s, St::Compute { .. })).count();
+            if a == 0 && self.dma_inflight.is_empty() {
+                if self.st.iter().all(|s| *s == St::Done) {
+                    break;
+                }
+                panic!(
+                    "timing deadlock at cycle {now}: states {:?}",
+                    self.st.iter().enumerate().collect::<Vec<_>>()
+                );
+            }
+            let per_instr = self.arch.dispatch_interval.max(a as u32) as f64;
+            // next event time
+            let mut t_next = f64::INFINITY;
+            for s in &self.st {
+                if let St::Compute { rem } = s {
+                    t_next = t_next.min(now + rem * per_instr);
+                }
+            }
+            for &(_, fin) in &self.dma_inflight {
+                t_next = t_next.min(fin);
+            }
+            debug_assert!(t_next.is_finite());
+            let dt = t_next - now;
+            // progress all computing tasklets
+            if dt > 0.0 {
+                for s in self.st.iter_mut() {
+                    if let St::Compute { rem } = s {
+                        *rem = (*rem - dt / per_instr).max(0.0);
+                    }
+                }
+            }
+            now = t_next;
+            // completions
+            let mut wl: Vec<usize> = Vec::new();
+            for t in 0..self.n {
+                if let St::Compute { rem } = self.st[t] {
+                    if rem <= EPS {
+                        self.st[t] = St::Ready;
+                        self.advance(t, now, &mut wl);
+                    }
+                }
+            }
+            let mut i = 0;
+            while i < self.dma_inflight.len() {
+                let (t, fin) = self.dma_inflight[i];
+                if fin <= now + EPS {
+                    self.dma_inflight.swap_remove(i);
+                    self.st[t] = St::Ready;
+                    self.advance(t, now, &mut wl);
+                } else {
+                    i += 1;
+                }
+            }
+            self.drain_worklist(now, &mut wl);
+        }
+        self.out.cycles = now;
+        self.out
+    }
+}
+
+/// Replay the traces of one DPU launch and return cycle accounting.
+///
+/// `n_tasklets` must equal `traces.len()` (barrier arity).
+pub fn replay(traces: &[Trace], arch: &DpuArch, n_tasklets: u32) -> DpuTiming {
+    assert_eq!(traces.len(), n_tasklets as usize);
+    if traces.iter().all(|t| t.events.is_empty()) {
+        return DpuTiming::default();
+    }
+    Engine::new(traces, arch).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DpuArch;
+
+    fn arch() -> DpuArch {
+        DpuArch::p21()
+    }
+
+    fn compute_trace(instrs: u64) -> Trace {
+        let mut t = Trace::default();
+        t.push_compute(instrs);
+        t
+    }
+
+    #[test]
+    fn single_tasklet_dispatch_interval() {
+        // 1 tasklet, n instructions → n * 11 cycles.
+        let tm = replay(&[compute_trace(1000)], &arch(), 1);
+        assert!((tm.cycles - 11_000.0).abs() < 1.0, "{}", tm.cycles);
+    }
+
+    #[test]
+    fn pipeline_saturates_at_11_tasklets() {
+        // T tasklets × n instrs: cycles = n*11 for T ≤ 11, n*T beyond.
+        for t in [1u32, 2, 4, 8, 11, 16, 24] {
+            let traces: Vec<Trace> = (0..t).map(|_| compute_trace(1000)).collect();
+            let tm = replay(&traces, &arch(), t);
+            let expect = 1000.0 * t.max(11) as f64;
+            assert!(
+                (tm.cycles - expect).abs() / expect < 0.01,
+                "T={t}: {} vs {expect}",
+                tm.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn throughput_matches_eq1_at_saturation() {
+        // 16 tasklets of 32-bit adds: 58.33 MOPS at 350 MHz.
+        let n_elem = 10_000u64;
+        let traces: Vec<Trace> = (0..16).map(|_| compute_trace(n_elem * 6)).collect();
+        let tm = replay(&traces, &arch(), 16);
+        let secs = arch().cycles_to_secs(tm.cycles);
+        let mops = (16.0 * n_elem as f64) / secs / 1e6;
+        assert!((mops - 58.33).abs() < 0.5, "mops {mops}");
+    }
+
+    #[test]
+    fn dma_serialization() {
+        // 4 tasklets each issuing one 2048-B read: the engine starts a new
+        // transfer every occupancy = 36 + 1024 cycles; the last tasklet
+        // resumes at 3×1060 + (77 + 1024).
+        let mk = || {
+            let mut t = Trace::default();
+            t.push(Ev::DmaRead(2048));
+            t
+        };
+        let traces = vec![mk(), mk(), mk(), mk()];
+        let tm = replay(&traces, &arch(), 4);
+        let expect = 3.0 * (36.0 + 1024.0) + (77.0 + 1024.0);
+        assert!((tm.cycles - expect).abs() < 1.0, "{} vs {expect}", tm.cycles);
+        assert!(tm.dma_util() > 0.98);
+    }
+
+    #[test]
+    fn fine_grained_random_access_bandwidth() {
+        // Fig. 8b: 16 tasklets doing 8-B read + 8-B write per element →
+        // engine-throughput-bound ≈ 70 MB/s (paper: 72.58 MB/s).
+        let mk = || {
+            let mut t = Trace::default();
+            for _ in 0..100 {
+                t.push(Ev::DmaRead(8));
+                t.push_compute(8);
+                t.push(Ev::DmaWrite(8));
+            }
+            t
+        };
+        let traces: Vec<Trace> = (0..16).map(|_| mk()).collect();
+        let tm = replay(&traces, &arch(), 16);
+        let secs = arch().cycles_to_secs(tm.cycles);
+        let bw = tm.dma_bytes as f64 / secs / 1e6;
+        assert!((bw - 72.58).abs() < 8.0, "fine-grained bw {bw} MB/s (paper 72.58)");
+    }
+
+    #[test]
+    fn dma_overlaps_compute() {
+        // tasklet 0: long compute; tasklet 1: one DMA. Total = max, not sum.
+        let mut t0 = Trace::default();
+        t0.push_compute(10_000);
+        let mut t1 = Trace::default();
+        t1.push(Ev::DmaRead(2048));
+        let tm = replay(&[t0, t1], &arch(), 2);
+        assert!((tm.cycles - 110_000.0).abs() < 2.0, "{}", tm.cycles);
+    }
+
+    #[test]
+    fn mutex_serializes_critical_sections() {
+        // 4 tasklets: lock, 1000 instrs, unlock. Critical sections cannot
+        // overlap → ≥ 4 × 1000 × dispatch/of-active... with FIFO handoff the
+        // total is ≈ 4 × 11,000 (only the holder computes at a time).
+        let mk = || {
+            let mut t = Trace::default();
+            t.push(Ev::MutexLock(0));
+            t.push_compute(1000);
+            t.push(Ev::MutexUnlock(0));
+            t
+        };
+        let traces = vec![mk(), mk(), mk(), mk()];
+        let tm = replay(&traces, &arch(), 4);
+        assert!(tm.cycles >= 4.0 * 11_000.0 - 1.0, "{}", tm.cycles);
+    }
+
+    #[test]
+    fn barrier_joins() {
+        // tasklet 0 computes 100, tasklet 1 computes 10_000, both barrier,
+        // then each computes 100. End ≈ 10_000*? .. both finish ≈ barrier
+        // release + tail.
+        let mk = |n: u64| {
+            let mut t = Trace::default();
+            t.push_compute(n);
+            t.push(Ev::Barrier(0));
+            t.push_compute(100);
+            t
+        };
+        let tm = replay(&[mk(100), mk(10_000)], &arch(), 2);
+        // slow tasklet: 10_000×11 (alone after fast one waits: rate still 1/11)
+        // then both compute 100 more: +100×11
+        let expect = 10_000.0 * 11.0 + 100.0 * 11.0;
+        assert!((tm.cycles - expect).abs() / expect < 0.05, "{} vs {expect}", tm.cycles);
+    }
+
+    #[test]
+    fn handshake_orders_pair() {
+        // t1 waits for t0's notify before computing.
+        let mut t0 = Trace::default();
+        t0.push_compute(5000);
+        t0.push(Ev::HsNotify);
+        let mut t1 = Trace::default();
+        t1.push(Ev::HsWait { peer: 0, target: 1 });
+        t1.push_compute(5000);
+        let tm = replay(&[t0, t1], &arch(), 2);
+        // serial: ≈ 2 × 5000 × 11
+        assert!(tm.cycles > 2.0 * 5000.0 * 11.0 * 0.95, "{}", tm.cycles);
+    }
+
+    #[test]
+    fn semaphore_blocks_until_give() {
+        let mut t0 = Trace::default();
+        t0.push_compute(3000);
+        t0.push(Ev::SemGive(1));
+        let mut t1 = Trace::default();
+        t1.push(Ev::SemTake(1));
+        t1.push_compute(10);
+        let tm = replay(&[t0, t1], &arch(), 2);
+        assert!(tm.cycles >= 3000.0 * 11.0, "{}", tm.cycles);
+    }
+
+    #[test]
+    fn empty_traces_zero_cycles() {
+        let tm = replay(&[Trace::default(), Trace::default()], &arch(), 2);
+        assert_eq!(tm.cycles, 0.0);
+    }
+
+    #[test]
+    fn copy_dma_bandwidth_two_tasklets() {
+        // COPY-DMA: read 1024 + write 1024 per block. With 2 tasklets the
+        // DMA engine is always busy → bw ≈ 1024/(36+512) B/cy ≈ 654 MB/s
+        // at 350 MHz (paper measures 624 MB/s, 4.8% below; theoretical
+        // 2 B/cy bound is 700 MB/s).
+        let blocks = 200u32;
+        let mk = || {
+            let mut t = Trace::default();
+            for _ in 0..blocks {
+                t.push(Ev::DmaRead(1024));
+                t.push(Ev::DmaWrite(1024));
+            }
+            t
+        };
+        let traces = vec![mk(), mk()];
+        let tm = replay(&traces, &arch(), 2);
+        let secs = arch().cycles_to_secs(tm.cycles);
+        let bw = tm.dma_bytes as f64 / secs;
+        assert!(
+            (bw / 1e6 - 624.0).abs() < 40.0,
+            "COPY-DMA bw {} MB/s (paper: 624)",
+            bw / 1e6
+        );
+        assert!(bw < arch().peak_mram_bw(), "must stay under the 2 B/cy roof");
+    }
+}

@@ -1,0 +1,173 @@
+//! Cycle-stepped reference timing model (ablation baseline).
+//!
+//! Steps the DPU one cycle at a time with integer state: each tasklet may
+//! issue one instruction per cycle if (a) its previous instruction was
+//! issued ≥ `dispatch_interval` cycles ago and (b) no other tasklet issued
+//! this cycle (single-issue in-order pipeline); the DMA engine serves one
+//! transfer at a time with integer `α + β·size` latency.
+//!
+//! Only `Compute` / `DmaRead` / `DmaWrite` events are supported — enough
+//! for every §3 microbenchmark trace. The fluid engine
+//! ([`super::timing::replay`]) is validated against this model in tests and
+//! in the `ablation_timing` bench; the fluid engine is ~3 orders of
+//! magnitude faster, which is what makes full-suite simulation tractable.
+
+use super::trace::{Ev, Trace};
+use crate::arch::DpuArch;
+use std::collections::VecDeque;
+
+#[derive(Clone, Copy, PartialEq)]
+enum St {
+    Compute { rem: u64 },
+    Dma,
+    Done,
+}
+
+/// Cycle-stepped replay. Returns total cycles. Panics on sync events.
+pub fn replay_stepped(traces: &[Trace], arch: &DpuArch) -> u64 {
+    let n = traces.len();
+    let mut idx = vec![0usize; n];
+    let mut st: Vec<St> = vec![St::Done; n];
+    let mut next_ok = vec![0u64; n]; // earliest cycle this tasklet may issue
+    let mut dma_free_at = 0u64; // engine may start next transfer here
+    let mut dma_done: Vec<(usize, u64)> = Vec::new(); // (tasklet, completion)
+    let mut rr = 0usize; // round-robin issue pointer
+
+    // load next event of a tasklet; DMA transfers are scheduled immediately
+    // with the same start-time rule as the fluid engine
+    fn fetch(
+        t: usize,
+        cycle: u64,
+        traces: &[Trace],
+        arch: &DpuArch,
+        idx: &mut [usize],
+        st: &mut [St],
+        dma_free_at: &mut u64,
+        dma_done: &mut Vec<(usize, u64)>,
+    ) {
+        if idx[t] >= traces[t].events.len() {
+            st[t] = St::Done;
+            return;
+        }
+        let ev = traces[t].events[idx[t]];
+        idx[t] += 1;
+        match ev {
+            Ev::Compute(k) => st[t] = St::Compute { rem: k },
+            Ev::DmaRead(b) | Ev::DmaWrite(b) => {
+                let read = matches!(ev, Ev::DmaRead(_));
+                st[t] = St::Dma;
+                let start = cycle.max(*dma_free_at);
+                let lat = arch.dma_latency_cycles(read, b).round() as u64;
+                let occ = arch.dma_occupancy_cycles(b).round() as u64;
+                *dma_free_at = start + occ;
+                dma_done.push((t, start + lat));
+            }
+            other => panic!("timing_ref supports compute/dma only, got {other:?}"),
+        }
+    }
+
+    for t in 0..n {
+        fetch(t, 0, traces, arch, &mut idx, &mut st, &mut dma_free_at, &mut dma_done);
+    }
+
+    let mut cycle = 0u64;
+    loop {
+        if st.iter().all(|s| *s == St::Done) {
+            break;
+        }
+        // DMA completions
+        let mut i = 0;
+        while i < dma_done.len() {
+            let (t, fin) = dma_done[i];
+            if fin <= cycle {
+                dma_done.swap_remove(i);
+                fetch(t, cycle, traces, arch, &mut idx, &mut st, &mut dma_free_at, &mut dma_done);
+            } else {
+                i += 1;
+            }
+        }
+        // issue at most one instruction this cycle, round-robin fair
+        for k in 0..n {
+            let t = (rr + k) % n;
+            if let St::Compute { rem } = st[t] {
+                if next_ok[t] <= cycle {
+                    next_ok[t] = cycle + arch.dispatch_interval as u64;
+                    let rem2 = rem - 1;
+                    if rem2 == 0 {
+                        fetch(
+                            t,
+                            cycle,
+                            traces,
+                            arch,
+                            &mut idx,
+                            &mut st,
+                            &mut dma_free_at,
+                            &mut dma_done,
+                        );
+                    } else {
+                        st[t] = St::Compute { rem: rem2 };
+                    }
+                    rr = (t + 1) % n;
+                    break;
+                }
+            }
+        }
+        cycle += 1;
+    }
+    cycle
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DpuArch;
+    use crate::dpu::timing::replay;
+
+    fn compute_trace(instrs: u64) -> Trace {
+        let mut t = Trace::default();
+        t.push_compute(instrs);
+        t
+    }
+
+    #[test]
+    fn stepped_matches_dispatch_interval() {
+        let arch = DpuArch::p21();
+        let c = replay_stepped(&[compute_trace(100)], &arch);
+        // 100 instructions, 11 cycles apart → ≈ 1090..1101 cycles
+        assert!((c as i64 - 1100).abs() <= 11, "{c}");
+    }
+
+    #[test]
+    fn fluid_vs_stepped_compute_only() {
+        let arch = DpuArch::p21();
+        for t in [1u32, 2, 4, 8, 11, 16] {
+            let traces: Vec<Trace> = (0..t).map(|i| compute_trace(500 + i as u64 * 37)).collect();
+            let fluid = replay(&traces, &arch, t).cycles;
+            let stepped = replay_stepped(&traces, &arch) as f64;
+            let err = (fluid - stepped).abs() / stepped;
+            assert!(err < 0.02, "T={t}: fluid {fluid} stepped {stepped} err {err}");
+        }
+    }
+
+    #[test]
+    fn fluid_vs_stepped_mixed_dma() {
+        let arch = DpuArch::p21();
+        for t in [1u32, 2, 4, 8] {
+            let traces: Vec<Trace> = (0..t)
+                .map(|_| {
+                    let mut tr = Trace::default();
+                    for _ in 0..20 {
+                        tr.push(Ev::DmaRead(1024));
+                        tr.push_compute(256);
+                        tr.push(Ev::DmaWrite(1024));
+                    }
+                    tr
+                })
+                .collect();
+            let fluid = replay(&traces, &arch, t).cycles;
+            let stepped = replay_stepped(&traces, &arch) as f64;
+            let err = (fluid - stepped).abs() / stepped;
+            assert!(err < 0.03, "T={t}: fluid {fluid} stepped {stepped} err {err}");
+        }
+    }
+}

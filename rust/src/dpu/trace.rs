@@ -1,0 +1,111 @@
+//! Per-tasklet execution traces.
+//!
+//! Functional execution (real data moving through simulated MRAM/WRAM)
+//! records one [`Trace`] per tasklet; the timing engine
+//! ([`super::timing`]) then replays all traces of a DPU against the
+//! pipeline / DMA-engine / synchronization resources. Recording and timing
+//! are separated so one functional run can be re-timed under different
+//! architecture parameters (350 vs 267 MHz, etc.).
+
+/// One observable event of a tasklet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ev {
+    /// `n` instructions issued into the pipeline (ALU ops, WRAM
+    /// loads/stores, address calculations, branches — all retire 1/cycle
+    /// when the pipeline is full).
+    Compute(u64),
+    /// MRAM→WRAM DMA transfer (`mram_read`), bytes.
+    DmaRead(u32),
+    /// WRAM→MRAM DMA transfer (`mram_write`), bytes.
+    DmaWrite(u32),
+    MutexLock(u16),
+    MutexUnlock(u16),
+    /// Barrier across all tasklets of the DPU.
+    Barrier(u16),
+    /// Wait for `peer`'s `target`-th notify (1-based, counted at record
+    /// time so replay is order-independent).
+    HsWait { peer: u8, target: u64 },
+    HsNotify,
+    SemGive(u16),
+    SemTake(u16),
+}
+
+/// The recorded event sequence of one tasklet.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<Ev>,
+}
+
+impl Trace {
+    /// Append pipeline work, merging with a trailing `Compute` to keep
+    /// traces compact (hot kernels emit millions of tiny charges).
+    #[inline]
+    pub fn push_compute(&mut self, instrs: u64) {
+        if instrs == 0 {
+            return;
+        }
+        if let Some(Ev::Compute(n)) = self.events.last_mut() {
+            *n += instrs;
+        } else {
+            self.events.push(Ev::Compute(instrs));
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: Ev) {
+        self.events.push(ev);
+    }
+
+    /// Total pipeline instructions in the trace.
+    pub fn total_instrs(&self) -> u64 {
+        self.events
+            .iter()
+            .map(|e| if let Ev::Compute(n) = e { *n } else { 0 })
+            .sum()
+    }
+
+    /// Total DMA bytes (read + write).
+    pub fn dma_bytes(&self) -> u64 {
+        self.events
+            .iter()
+            .map(|e| match e {
+                Ev::DmaRead(b) | Ev::DmaWrite(b) => *b as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Number of DMA transfers.
+    pub fn dma_count(&self) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| matches!(e, Ev::DmaRead(_) | Ev::DmaWrite(_)))
+            .count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_merging() {
+        let mut t = Trace::default();
+        t.push_compute(5);
+        t.push_compute(7);
+        assert_eq!(t.events, vec![Ev::Compute(12)]);
+        t.push(Ev::DmaRead(64));
+        t.push_compute(3);
+        assert_eq!(t.events.len(), 3);
+        assert_eq!(t.total_instrs(), 15);
+        assert_eq!(t.dma_bytes(), 64);
+        assert_eq!(t.dma_count(), 1);
+    }
+
+    #[test]
+    fn zero_compute_ignored() {
+        let mut t = Trace::default();
+        t.push_compute(0);
+        assert!(t.events.is_empty());
+    }
+}

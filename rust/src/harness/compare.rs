@@ -1,0 +1,200 @@
+//! Figs. 16–17: PIM vs CPU vs GPU performance and energy.
+//!
+//! Method (DESIGN.md §4): each benchmark runs functionally on one
+//! simulated rank (64 DPUs) at the harness scale; the full-machine PIM
+//! time is the weak-scaling extrapolation
+//! `t(N) = t_DPU(64) + t_InterDPU(64) · N/64`
+//! (kernel time is flat under weak scaling — Key Obs. 17; host-sequential
+//! merge dominates the inter-DPU term and grows linearly — Key Obs. 16).
+//! The CPU/GPU rooflines are evaluated at the same *total* problem size
+//! `items × N/64`. Like the paper, PIM time counts DPU + Inter-DPU only.
+
+use crate::arch::SystemConfig;
+use crate::baselines::roofline::{cpu_time, gpu_time};
+use crate::energy::EnergyModel;
+use crate::prim::all_benches;
+use crate::prim::common::RunConfig;
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+
+/// The 10 benchmarks the paper finds "more suitable" to PIM (Fig. 16's
+/// left group).
+pub const MORE_SUITABLE: [&str; 10] = [
+    "VA", "SEL", "UNI", "BS", "HST-S", "HST-L", "RED", "SCAN-SSA", "SCAN-RSS", "TRNS",
+];
+
+/// Dataset scale for the §5.2 comparison: chosen so the 64-DPU functional
+/// run carries (approximately) the paper's *full-system per-DPU load*
+/// (32-rank dataset ÷ 2,048 DPUs) — the quantity the weak-scaling
+/// extrapolation preserves. SpMV/BFS keep their fixed paper datasets
+/// (which spread ever thinner at scale); wallclock-heavy mutex/DMA-event
+/// benchmarks are capped (their per-item costs are scale-invariant).
+pub fn fig16_scale(bench: &str) -> f64 {
+    match bench {
+        "VA" | "SEL" | "UNI" | "RED" => 2.0,
+        "GEMV" => 1.0,
+        "SCAN-SSA" | "SCAN-RSS" => 2.0,
+        "HST-S" => 1.0,
+        "HST-L" => 0.25,
+        "TS" => 1.0,
+        "BS" => 0.5,
+        "MLP" => 0.5,
+        "SpMV" => 0.025,
+        "BFS" => 0.5,
+        "NW" => 0.1,
+        "TRNS" => 0.1,
+        _ => 1.0,
+    }
+}
+
+pub struct CompareRow {
+    pub bench: &'static str,
+    pub cpu_secs: f64,
+    pub gpu_secs: f64,
+    pub pim640_secs: f64,
+    pub pim2556_secs: f64,
+    pub pim640_bd: crate::coordinator::TimeBreakdown,
+    pub n_items_full: f64,
+}
+
+/// Run the §5.2 comparison for every benchmark.
+pub fn compare_all(quick: bool) -> Vec<CompareRow> {
+    let mut rows = Vec::new();
+    for b in all_benches() {
+        if quick && !matches!(b.name(), "VA" | "BS" | "SpMV" | "BFS" | "RED") {
+            continue;
+        }
+        let scale = fig16_scale(b.name());
+        let run = |sys: SystemConfig| {
+            let rc = RunConfig {
+                n_dpus: 64,
+                n_tasklets: b.best_tasklets(),
+                scale,
+                seed: 42,
+                sys,
+            };
+            b.run(&rc)
+        };
+        let r21 = run(SystemConfig::p21_rank());
+        let r19 = run(SystemConfig {
+            n_dimms: 1,
+            ranks_per_dimm: 1,
+            ..SystemConfig::e19_640()
+        });
+        assert!(r21.verified && r19.verified, "{} failed", b.name());
+
+        let extrap = |bd: &crate::coordinator::TimeBreakdown, n_dpus: f64| {
+            bd.dpu + bd.inter_dpu * n_dpus / 64.0
+        };
+        let pim2556 = extrap(&r21.breakdown, 2556.0);
+        let pim640 = extrap(&r19.breakdown, 640.0);
+        // CPU/GPU solve the full-machine problem (2,556/64 ranks of data);
+        // use the 2,556-DPU scaling for both, like the paper's common axis
+        let items_full = r21.work_items as f64 * 2556.0 / 64.0;
+        rows.push(CompareRow {
+            bench: b.name(),
+            cpu_secs: cpu_time(b.name(), items_full),
+            gpu_secs: gpu_time(b.name(), items_full),
+            pim640_secs: pim640 * 2556.0 / 640.0, // 640-DPU holds 640/2556 of data → same per-DPU load ⇒ time scales with data/DPU ratio
+            pim2556_secs: pim2556,
+            pim640_bd: r19.breakdown,
+            n_items_full: items_full,
+        });
+    }
+    rows
+}
+
+/// Fig. 16: speedup over CPU.
+pub fn fig16(quick: bool) -> Table {
+    let mut t = Table::new(
+        "Fig. 16: speedup over Intel Xeon CPU (paper-method: DPU + Inter-DPU)",
+        &["benchmark", "group", "640-DPU x", "2556-DPU x", "GPU x"],
+    );
+    let rows = compare_all(quick);
+    let (mut s640, mut s2556, mut sgpu) = (vec![], vec![], vec![]);
+    for r in &rows {
+        let x640 = r.cpu_secs / r.pim640_secs;
+        let x2556 = r.cpu_secs / r.pim2556_secs;
+        let xgpu = r.cpu_secs / r.gpu_secs;
+        s640.push(x640);
+        s2556.push(x2556);
+        sgpu.push(xgpu);
+        let group = if MORE_SUITABLE.contains(&r.bench) { "(1) more suitable" } else { "(2) less suitable" };
+        t.row(vec![
+            r.bench.into(),
+            group.into(),
+            Table::fmt(x640),
+            Table::fmt(x2556),
+            Table::fmt(xgpu),
+        ]);
+    }
+    t.row(vec![
+        "GEOMEAN".into(),
+        "".into(),
+        Table::fmt(geomean(&s640)),
+        Table::fmt(geomean(&s2556)),
+        Table::fmt(geomean(&sgpu)),
+    ]);
+    t
+}
+
+/// Fig. 17: energy savings over CPU (640-DPU system + GPU, like the
+/// paper — the 2,556-DPU machine had no energy instrumentation).
+pub fn fig17(quick: bool) -> Table {
+    let mut t = Table::new(
+        "Fig. 17: energy savings over Intel Xeon CPU",
+        &["benchmark", "640-DPU x", "GPU x"],
+    );
+    let em = EnergyModel::default();
+    let e19 = SystemConfig::e19_640();
+    let rows = compare_all(quick);
+    let (mut s640, mut sgpu) = (vec![], vec![]);
+    for r in &rows {
+        // scale the measured 64-DPU breakdown to the full 640-DPU run
+        let mut bd = r.pim640_bd;
+        let f = 2556.0 / 640.0;
+        bd.dpu *= f;
+        bd.inter_dpu *= f * 640.0 / 64.0;
+        let e_pim = em.pim_joules(&e19, 640, &bd);
+        let e_cpu = em.cpu_joules(r.cpu_secs);
+        let e_gpu = em.gpu_joules(r.gpu_secs);
+        let x640 = e_cpu / e_pim;
+        let xgpu = e_cpu / e_gpu;
+        s640.push(x640);
+        sgpu.push(xgpu);
+        t.row(vec![r.bench.into(), Table::fmt(x640), Table::fmt(xgpu)]);
+    }
+    t.row(vec![
+        "GEOMEAN".into(),
+        Table::fmt(geomean(&s640)),
+        Table::fmt(geomean(&sgpu)),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_compare_shape_holds() {
+        let rows = compare_all(true);
+        let get = |n: &str| rows.iter().find(|r| r.bench == n).unwrap();
+        // PIM (2556) beats CPU on the suitable streaming benchmarks…
+        let va = get("VA");
+        assert!(va.cpu_secs / va.pim2556_secs > 1.0, "VA must beat CPU");
+        let red = get("RED");
+        assert!(red.cpu_secs / red.pim2556_secs > 1.0);
+        // …and loses on BFS (inter-DPU-bound), like the paper
+        let bfs = get("BFS");
+        assert!(
+            bfs.cpu_secs / bfs.pim2556_secs < 1.0,
+            "BFS must lose to CPU: {} vs {}",
+            bfs.cpu_secs,
+            bfs.pim2556_secs
+        );
+        // BS: PIM beats even the GPU (paper: 57.5× / 11×)
+        let bs = get("BS");
+        assert!(bs.gpu_secs / bs.pim2556_secs > 1.0, "BS must beat the GPU");
+    }
+}

@@ -1,0 +1,289 @@
+//! Microbenchmark and appendix figure generators (Figs. 4–10, 18–22).
+
+use crate::arch::{DpuArch, DType, Op};
+use crate::micro::{arith, mram, mram_stream, opint, strided, wram_stream, xfer};
+use crate::prim::common::RunConfig;
+use crate::prim::{hst, nw, scan};
+use crate::util::table::Table;
+
+fn tasklet_grid(quick: bool) -> Vec<u32> {
+    if quick {
+        vec![1, 2, 4, 8, 11, 16]
+    } else {
+        (1..=24).collect()
+    }
+}
+
+/// Fig. 4: arithmetic throughput (MOPS) vs tasklets.
+pub fn fig4(quick: bool) -> Table {
+    let mut t = Table::new(
+        "Fig. 4: DPU arithmetic throughput (MOPS) vs #tasklets",
+        &["dtype", "op", "tasklets", "MOPS"],
+    );
+    for (dt, op, n, mops) in arith::fig4_sweep(DpuArch::p21(), &tasklet_grid(quick)) {
+        t.row(vec![
+            dt.name().into(),
+            op.name().into(),
+            n.to_string(),
+            Table::fmt(mops),
+        ]);
+    }
+    t
+}
+
+/// Fig. 5: WRAM STREAM bandwidth vs tasklets.
+pub fn fig5() -> Table {
+    let mut t = Table::new(
+        "Fig. 5: sustained WRAM bandwidth (MB/s) vs #tasklets",
+        &["version", "tasklets", "MB/s"],
+    );
+    for (v, n, bw) in wram_stream::fig5_sweep(DpuArch::p21(), &(1..=16).collect::<Vec<_>>()) {
+        t.row(vec![v.name().into(), n.to_string(), Table::fmt(bw)]);
+    }
+    t
+}
+
+/// Fig. 6: MRAM latency/bandwidth vs transfer size.
+pub fn fig6() -> Table {
+    let mut t = Table::new(
+        "Fig. 6: MRAM read/write latency (cycles) and bandwidth (MB/s) vs size",
+        &["direction", "bytes", "latency (cy)", "model (cy)", "MB/s"],
+    );
+    for read in [true, false] {
+        for p in mram::fig6_sweep(DpuArch::p21(), read) {
+            t.row(vec![
+                if read { "read" } else { "write" }.into(),
+                p.bytes.to_string(),
+                Table::fmt(p.latency_cycles),
+                Table::fmt(p.model_cycles),
+                Table::fmt(p.bandwidth_mbps),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 7: MRAM streaming bandwidth vs tasklets.
+pub fn fig7() -> Table {
+    let mut t = Table::new(
+        "Fig. 7: sustained MRAM bandwidth (MB/s) vs #tasklets (1024-B DMA)",
+        &["version", "tasklets", "MB/s"],
+    );
+    let grid: Vec<u32> = (1..=16).collect();
+    for (v, n, bw) in mram_stream::fig7_sweep(DpuArch::p21(), &grid, 16 * 1024) {
+        t.row(vec![v.name().into(), n.to_string(), Table::fmt(bw)]);
+    }
+    t
+}
+
+/// Fig. 8: strided and random MRAM bandwidth.
+pub fn fig8() -> Table {
+    let mut t = Table::new(
+        "Fig. 8: strided/random MRAM bandwidth (MB/s), 16 tasklets",
+        &["access", "stride", "MB/s"],
+    );
+    let arch = DpuArch::p21();
+    const N: usize = 8 * 1024;
+    for stride in [1usize, 2, 4, 8, 16, 32, 64, 256, 1024, 4096] {
+        t.row(vec![
+            "coarse".into(),
+            stride.to_string(),
+            Table::fmt(strided::coarse_strided_bw(arch, stride.min(N / 8), 16, N)),
+        ]);
+        t.row(vec![
+            "fine".into(),
+            stride.to_string(),
+            Table::fmt(strided::fine_strided_bw(arch, stride.min(N / 8), 16, N)),
+        ]);
+    }
+    t.row(vec![
+        "random (GUPS)".into(),
+        "-".into(),
+        Table::fmt(strided::gups_bw(arch, 16, N, 2048)),
+    ]);
+    t
+}
+
+/// Fig. 9: throughput vs operational intensity.
+pub fn fig9(quick: bool) -> Table {
+    let mut t = Table::new(
+        "Fig. 9: arithmetic throughput (MOPS) vs operational intensity (OP/B)",
+        &["dtype", "op", "intensity", "tasklets", "MOPS"],
+    );
+    let arch = DpuArch::p21();
+    let tasklets: &[u32] = if quick { &[2, 11, 16] } else { &[1, 2, 4, 8, 11, 16] };
+    for (dt, op) in [
+        (DType::I32, Op::Add),
+        (DType::I32, Op::Mul),
+        (DType::F32, Op::Add),
+        (DType::F32, Op::Mul),
+    ] {
+        for &i in &opint::fig9_intensities() {
+            for &nt in tasklets {
+                let mops = opint::throughput_at_intensity(arch, dt, op, i, nt, 64);
+                t.row(vec![
+                    dt.name().into(),
+                    op.name().into(),
+                    format!("{i}"),
+                    nt.to_string(),
+                    Table::fmt(mops),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Fig. 10a: single-DPU CPU↔DPU bandwidth vs size.
+pub fn fig10a() -> Table {
+    let mut t = Table::new(
+        "Fig. 10a: CPU-DPU / DPU-CPU bandwidth vs transfer size (1 DPU)",
+        &["bytes", "CPU->DPU MB/s", "DPU->CPU MB/s"],
+    );
+    for (b, c2d, d2c) in xfer::fig10a_sweep() {
+        t.row(vec![b.to_string(), Table::fmt(c2d), Table::fmt(d2c)]);
+    }
+    t
+}
+
+/// Fig. 10b: serial/parallel/broadcast bandwidth vs #DPUs.
+pub fn fig10b() -> Table {
+    let mut t = Table::new(
+        "Fig. 10b: aggregate transfer bandwidth (GB/s) vs #DPUs (32 MB/DPU)",
+        &["DPUs", "serial C2D", "serial D2C", "parallel C2D", "parallel D2C", "broadcast"],
+    );
+    for r in xfer::fig10b_sweep(32 << 20, &[1, 2, 4, 8, 16, 32, 64]) {
+        t.row(vec![
+            r.n_dpus.to_string(),
+            Table::fmt(r.serial_c2d),
+            Table::fmt(r.serial_d2c),
+            Table::fmt(r.parallel_c2d),
+            Table::fmt(r.parallel_d2c),
+            Table::fmt(r.broadcast),
+        ]);
+    }
+    t
+}
+
+/// Fig. 18 (appendix): throughput vs tasklets at fixed intensities.
+pub fn fig18() -> Table {
+    let mut t = Table::new(
+        "Fig. 18: throughput (MOPS) vs #tasklets at fixed operational intensity",
+        &["intensity (OP/B)", "tasklets", "MOPS"],
+    );
+    let arch = DpuArch::p21();
+    for &i in &[1.0 / 64.0, 1.0 / 16.0, 0.25, 1.0, 4.0] {
+        for nt in [1u32, 2, 4, 8, 11, 16] {
+            let mops = opint::throughput_at_intensity(arch, DType::I32, Op::Add, i, nt, 64);
+            t.row(vec![format!("{i}"), nt.to_string(), Table::fmt(mops)]);
+        }
+    }
+    t
+}
+
+/// Fig. 19 (appendix): NW weak scaling — complete problem vs longest
+/// diagonal.
+pub fn fig19(quick: bool) -> Table {
+    let mut t = Table::new(
+        "Fig. 19: NW weak scaling: full problem vs longest diagonal (DPU ms)",
+        &["DPUs", "full DPU ms", "longest-diag DPU ms", "full Inter-DPU ms"],
+    );
+    let dpus: &[u32] = if quick { &[1, 4, 16] } else { &[1, 4, 16, 64] };
+    for &nd in dpus {
+        // weak scaling: sequence length grows with #DPUs (score matrix
+        // grows quadratically — the paper's §9.2.1 point)
+        let rc = RunConfig {
+            n_dpus: nd,
+            scale: super::harness_scale("NW") * nd as f64 / 8.0,
+            ..RunConfig::rank_default()
+        };
+        let (full, _) = nw::run_nw(&rc, false);
+        let (diag, _) = nw::run_nw(&rc, true);
+        t.row(vec![
+            nd.to_string(),
+            Table::fmt(full.breakdown.dpu * 1e3),
+            Table::fmt(diag.breakdown.dpu * 1e3),
+            Table::fmt(full.breakdown.inter_dpu * 1e3),
+        ]);
+    }
+    t
+}
+
+/// Fig. 20 (appendix §9.2.2): HST-S vs HST-L across histogram sizes.
+pub fn fig20() -> Table {
+    let mut t = Table::new(
+        "Fig. 20: HST-S vs HST-L DPU time (ms) across histogram sizes",
+        &["bins", "HST-S ms", "HST-L ms"],
+    );
+    for bins in [64usize, 256, 1024, 4096] {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.01,
+            ..RunConfig::rank_default()
+        };
+        let rc_l = RunConfig {
+            n_tasklets: 8,
+            ..rc.clone()
+        };
+        // HST-S cannot exceed WRAM: 16 tasklets × bins × 4 B ≤ 48 KB
+        let s_time = if 16 * bins * 4 <= 48 * 1024 {
+            let r = hst::run_hst(hst::HstKind::Short, "HST-S", &rc, bins);
+            assert!(r.verified);
+            Table::fmt(r.breakdown.dpu * 1e3)
+        } else {
+            "n/a (WRAM)".into()
+        };
+        let r = hst::run_hst(hst::HstKind::Long, "HST-L", &rc_l, bins);
+        assert!(r.verified);
+        t.row(vec![bins.to_string(), s_time, Table::fmt(r.breakdown.dpu * 1e3)]);
+    }
+    t
+}
+
+/// Fig. 22 (appendix §9.2.4): SCAN-SSA vs SCAN-RSS across array sizes.
+/// (§9.2.3's RED-version comparison is the `fig21` rows inside the
+/// `ablation_timing` bench and `red::tests`.)
+pub fn fig22() -> Table {
+    let mut t = Table::new(
+        "Fig. 22: SCAN-SSA vs SCAN-RSS total PIM time (ms) across sizes",
+        &["elements", "SSA ms", "RSS ms", "winner"],
+    );
+    for scale in [0.002, 0.01, 0.05, 0.2] {
+        let rc = RunConfig {
+            n_dpus: 8,
+            scale,
+            ..RunConfig::rank_default()
+        };
+        let ssa = scan::run_scan(scan::ScanKind::Ssa, "SCAN-SSA", &rc);
+        let rss = scan::run_scan(scan::ScanKind::Rss, "SCAN-RSS", &rc);
+        assert!(ssa.verified && rss.verified);
+        let (a, b) = (ssa.breakdown.kernel_plus_sync(), rss.breakdown.kernel_plus_sync());
+        t.row(vec![
+            ssa.work_items.to_string(),
+            Table::fmt(a * 1e3),
+            Table::fmt(b * 1e3),
+            if a < b { "SSA" } else { "RSS" }.into(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn quick_figures_render() {
+        assert!(!super::fig5().rows.is_empty());
+        assert!(!super::fig6().rows.is_empty());
+        assert!(!super::fig8().rows.is_empty());
+        assert!(!super::fig10a().rows.is_empty());
+        assert!(!super::fig10b().rows.is_empty());
+        assert!(!super::fig18().rows.is_empty());
+    }
+
+    #[test]
+    fn fig20_hst_crossover_exists() {
+        // HST-L must become competitive (or the only option) at large bins
+        let t = super::fig20();
+        assert!(t.rows.iter().any(|r| r[1].contains("n/a")));
+    }
+}

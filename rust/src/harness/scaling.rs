@@ -1,0 +1,153 @@
+//! Strong/weak scaling experiment runners (Figs. 12–15): the full PrIM
+//! suite with the paper's time breakdown at every point.
+
+use crate::prim::common::{PrimBench, RunConfig};
+use crate::prim::all_benches;
+use crate::util::table::Table;
+
+fn breakdown_row(
+    t: &mut Table,
+    bench: &str,
+    x_label: &str,
+    r: &crate::prim::common::BenchResult,
+) {
+    t.row(vec![
+        bench.into(),
+        x_label.into(),
+        Table::fmt(r.breakdown.dpu * 1e3),
+        Table::fmt(r.breakdown.inter_dpu * 1e3),
+        Table::fmt(r.breakdown.cpu_dpu * 1e3),
+        Table::fmt(r.breakdown.dpu_cpu * 1e3),
+        if r.verified { "ok" } else { "FAIL" }.into(),
+    ]);
+}
+
+const HDRS: [&str; 7] = [
+    "benchmark", "x", "DPU ms", "Inter-DPU ms", "CPU-DPU ms", "DPU-CPU ms", "verified",
+];
+
+fn suite(quick: bool) -> Vec<Box<dyn PrimBench>> {
+    let all = all_benches();
+    if quick {
+        all.into_iter()
+            .filter(|b| matches!(b.name(), "VA" | "SEL" | "BFS" | "RED" | "SCAN-RSS"))
+            .collect()
+    } else {
+        all
+    }
+}
+
+/// Fig. 12: strong scaling over tasklets, one DPU.
+pub fn fig12(quick: bool) -> Table {
+    let mut t = Table::new("Fig. 12: strong scaling, 1 DPU, 1-16 tasklets", &HDRS);
+    let tasklets: &[u32] = if quick { &[1, 4, 16] } else { &[1, 2, 4, 8, 16] };
+    for b in suite(quick) {
+        for &nt in tasklets {
+            let rc = RunConfig {
+                n_dpus: 1,
+                n_tasklets: nt,
+                scale: super::harness_scale(b.name()) * 0.25,
+                ..RunConfig::rank_default()
+            };
+            let r = b.run(&rc);
+            assert!(r.verified, "{} failed at {nt} tasklets", b.name());
+            breakdown_row(&mut t, b.name(), &format!("{nt}t"), &r);
+        }
+    }
+    t
+}
+
+/// Fig. 13: strong scaling over DPUs within one rank.
+pub fn fig13(quick: bool) -> Table {
+    let mut t = Table::new("Fig. 13: strong scaling, 1-64 DPUs (1 rank)", &HDRS);
+    let dpus: &[u32] = if quick { &[1, 4, 16] } else { &[1, 4, 16, 64] };
+    for b in suite(quick) {
+        for &nd in dpus {
+            let rc = RunConfig {
+                n_dpus: nd,
+                n_tasklets: b.best_tasklets(),
+                scale: super::harness_scale(b.name()),
+                ..RunConfig::rank_default()
+            };
+            let r = b.run(&rc);
+            assert!(r.verified, "{} failed at {nd} DPUs", b.name());
+            breakdown_row(&mut t, b.name(), &format!("{nd}d"), &r);
+        }
+    }
+    t
+}
+
+/// Fig. 14: strong scaling over ranks (256–2,048 DPUs) on the full P21
+/// machine. Functional simulation at reduced per-bench scale; CPU-DPU /
+/// DPU-CPU excluded like the paper (transfers are not simultaneous across
+/// ranks).
+pub fn fig14(quick: bool) -> Table {
+    let mut t = Table::new("Fig. 14: strong scaling, 4-32 ranks (256-2048 DPUs)", &HDRS);
+    let dpus: &[u32] = if quick { &[256, 512] } else { &[256, 512, 1024, 2048] };
+    for b in suite(true) {
+        // multi-rank functional simulation: the 5-benchmark representative
+        // subset keeps the full sweep tractable; `repro prim --bench X
+        // --dpus N` runs any of the 16 at any count.
+        for &nd in dpus {
+            let rc = RunConfig {
+                sys: crate::arch::SystemConfig::p21_2556(),
+                n_dpus: nd,
+                n_tasklets: b.best_tasklets(),
+                scale: super::harness_scale(b.name()) * if quick { 0.5 } else { 1.0 },
+                seed: 42,
+            };
+            let r = b.run(&rc);
+            assert!(r.verified, "{} failed at {nd} DPUs", b.name());
+            breakdown_row(&mut t, b.name(), &format!("{nd}d"), &r);
+        }
+    }
+    t
+}
+
+/// Fig. 15: weak scaling, 1–64 DPUs (dataset grows with DPU count).
+pub fn fig15(quick: bool) -> Table {
+    let mut t = Table::new("Fig. 15: weak scaling, 1-64 DPUs (fixed per-DPU load)", &HDRS);
+    let dpus: &[u32] = if quick { &[1, 4, 16] } else { &[1, 4, 16, 64] };
+    for b in suite(quick) {
+        for &nd in dpus {
+            let rc = RunConfig {
+                n_dpus: nd,
+                n_tasklets: b.best_tasklets(),
+                // per-DPU load fixed at (harness scale × paper)/64
+                scale: super::harness_scale(b.name()) * nd as f64 / 64.0,
+                ..RunConfig::rank_default()
+            };
+            let r = b.run(&rc);
+            assert!(r.verified, "{} failed at {nd} DPUs (weak)", b.name());
+            breakdown_row(&mut t, b.name(), &format!("{nd}d"), &r);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn quick_fig12_runs_and_verifies() {
+        let t = super::fig12(true);
+        assert!(t.rows.iter().all(|r| r[6] == "ok"));
+    }
+
+    #[test]
+    fn quick_fig15_weak_scaling_flat_dpu_time() {
+        let t = super::fig15(true);
+        // VA rows: DPU time roughly constant across DPU counts
+        let va: Vec<f64> = t
+            .rows
+            .iter()
+            .filter(|r| r[0] == "VA")
+            .map(|r| r[2].parse::<f64>().unwrap())
+            .collect();
+        assert!(va.len() >= 2);
+        let (min, max) = (
+            va.iter().cloned().fold(f64::MAX, f64::min),
+            va.iter().cloned().fold(0.0, f64::max),
+        );
+        assert!(max / min < 1.6, "weak scaling should be near-flat: {va:?}");
+    }
+}

@@ -1,0 +1,39 @@
+//! # PrIM-RS
+//!
+//! A full-system reproduction of *"Benchmarking a New Paradigm: An
+//! Experimental Analysis of a Real Processing-in-Memory Architecture"*
+//! (Gómez-Luna et al., 2021) — the UPMEM PIM characterization paper and the
+//! PrIM benchmark suite.
+//!
+//! Since UPMEM hardware is not available, the substrate is a
+//! **cycle-accounting simulator** whose timing model is exactly the
+//! analytical model the paper derives and validates against real hardware
+//! (Eq. 1 pipeline throughput, Eq. 3/4 MRAM DMA latency/bandwidth, the
+//! 14-stage / 11-cycle-dispatch fine-grained-multithreaded pipeline, the
+//! serialized per-DPU DMA engine, and the Fig. 10 CPU↔DPU transfer curves).
+//!
+//! Layering (see DESIGN.md):
+//! - [`arch`]    — architecture parameters and the ISA instruction-cost model
+//! - [`dpu`]     — single-DPU functional execution + fluid timing replay
+//! - [`system`]  — ranks/chips organization, CPU↔DPU transfer engine, host model
+//! - [`coordinator`] — L3: partitioning, kernel launch, metrics (the rust
+//!   analogue of the UPMEM host runtime)
+//! - [`runtime`] — PJRT client loading the AOT JAX/Pallas artifacts
+//! - [`energy`]  — energy model for the Fig. 17 comparison
+//! - [`baselines`] — CPU (native + roofline) and GPU (roofline) comparators
+//! - [`micro`]   — Section 3 microbenchmarks (Figs. 4–10, 18)
+//! - [`prim`]    — the 16 PrIM workloads (19 kernels)
+//! - [`harness`] — per-table/per-figure experiment generators
+//! - [`util`]    — RNG, stats, data generators, table output, mini-proptest
+
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod dpu;
+pub mod energy;
+pub mod harness;
+pub mod micro;
+pub mod prim;
+pub mod runtime;
+pub mod system;
+pub mod util;

@@ -1,0 +1,170 @@
+//! `repro` — the PrIM-RS experiment driver.
+//!
+//! Subcommands:
+//! ```text
+//! repro list                         list regenerable tables/figures
+//! repro table <id>                   print Table 1-4
+//! repro figure <id> [--quick]        regenerate a paper figure
+//! repro micro                        all §3 microbenchmark figures (4-10)
+//! repro prim [--bench N] [--dpus D] [--tasklets T] [--scale S]
+//! repro compare [--quick]            Fig. 16 + Fig. 17
+//! repro estimate --dpus N            fleet estimator via the PJRT artifact
+//! repro all [--quick]                everything, CSVs into --outdir
+//! ```
+//! All outputs land in `--outdir` (default `results/`).
+
+use prim_pim::arch::SystemConfig;
+use prim_pim::harness::{self, ALL_IDS};
+use prim_pim::prim::common::{all_benches, bench_by_name, RunConfig};
+use prim_pim::runtime;
+use std::path::PathBuf;
+
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut flags = std::collections::HashMap::new();
+    let mut positional = Vec::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Args { flags, positional }
+}
+
+impl Args {
+    fn flag<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <list|table|figure|micro|prim|compare|estimate|all> [args]\n\
+         run `repro list` for the experiment index"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let cmd = argv[0].as_str();
+    let args = parse_args(&argv[1..]);
+    let outdir = PathBuf::from(args.flag("outdir", "results".to_string()));
+    let quick = args.has("quick");
+
+    match cmd {
+        "list" => {
+            println!("regenerable experiments (DESIGN.md §4):");
+            for id in ALL_IDS {
+                println!("  {id}");
+            }
+        }
+        "table" | "figure" => {
+            let id = args.positional.first().map(|s| s.as_str()).unwrap_or_else(|| usage());
+            harness::run_id(id, &outdir, quick)?;
+        }
+        "micro" => {
+            for id in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10"] {
+                harness::run_id(id, &outdir, quick)?;
+            }
+        }
+        "prim" => {
+            let benches: Vec<Box<dyn prim_pim::prim::PrimBench>> =
+                if let Some(name) = args.flags.get("bench") {
+                    vec![bench_by_name(name)
+                        .unwrap_or_else(|| panic!("unknown benchmark {name}"))]
+                } else {
+                    all_benches()
+                };
+            let n_dpus: u32 = args.flag("dpus", 64);
+            let sys = if n_dpus <= 64 {
+                SystemConfig::p21_rank()
+            } else {
+                SystemConfig::p21_2556()
+            };
+            for b in benches {
+                let rc = RunConfig {
+                    n_dpus,
+                    n_tasklets: args.flag("tasklets", b.best_tasklets()),
+                    scale: args.flag("scale", harness::harness_scale(b.name())),
+                    seed: args.flag("seed", 42),
+                    sys: sys.clone(),
+                };
+                let t0 = std::time::Instant::now();
+                let r = b.run(&rc);
+                println!(
+                    "{:<9} [{}] {} | {} items | sim wall {:.2}s",
+                    r.name,
+                    if r.verified { "ok" } else { "VERIFY-FAIL" },
+                    r.breakdown.fmt_ms(),
+                    r.work_items,
+                    t0.elapsed().as_secs_f64(),
+                );
+            }
+        }
+        "compare" => {
+            harness::run_id("fig16", &outdir, quick)?;
+            harness::run_id("fig17", &outdir, quick)?;
+        }
+        "estimate" => {
+            let n: usize = args.flag("dpus", 2048);
+            let instrs: f64 = args.flag("instrs", 1_000_000.0);
+            let tasklets: f64 = args.flag("tasklets", 16.0);
+            let descs: Vec<runtime::DpuDesc> = (0..n)
+                .map(|_| runtime::DpuDesc {
+                    instrs_per_tasklet: instrs,
+                    tasklets,
+                    n_reads: 1000.0,
+                    read_bytes: 1024.0,
+                    n_writes: 1000.0,
+                    write_bytes: 1024.0,
+                })
+                .collect();
+            let cycles = if runtime::artifacts_available() {
+                let rt = runtime::PjrtRuntime::cpu()?;
+                let est = runtime::FleetEstimator::load(&rt)?;
+                println!("fleet estimator: PJRT artifact (dpu_timing.hlo.txt)");
+                est.estimate(&descs)?
+            } else {
+                println!("fleet estimator: native fallback (run `make artifacts`)");
+                runtime::fleet_cycles_native(&descs)
+            };
+            let max = cycles.iter().cloned().fold(0.0, f64::max);
+            let freq = SystemConfig::p21_2556().dpu.freq_hz();
+            println!(
+                "{n} DPUs, {instrs:.0} instrs/tasklet x {tasklets:.0} tasklets: max {max:.0} cycles = {:.3} ms/launch",
+                max / freq * 1e3
+            );
+        }
+        "all" => {
+            for id in ALL_IDS {
+                println!("--- {id} ---");
+                harness::run_id(id, &outdir, quick)?;
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Fig. 4: arithmetic throughput of one DPU vs number of tasklets, for
+//! {int32,int64,float,double} × {add,sub,mul,div}.
+//!
+//! The microbenchmark is Listing 1: every tasklet streams over a WRAM
+//! buffer performing read-modify-write operations; the loop costs
+//! `stream_loop_instrs(dtype, op)` instructions per element.
+
+use crate::arch::{DpuArch, DType, Op};
+use crate::dpu::{Ctx, Dpu};
+
+/// Elements processed per tasklet (enough to amortize startup exactly).
+const ELEMS_PER_TASKLET: u64 = 32 * 1024;
+
+/// Run the streaming arithmetic microbenchmark; returns measured MOPS.
+pub fn throughput_mops(arch: DpuArch, dtype: DType, op: Op, n_tasklets: u32) -> f64 {
+    let mut dpu = Dpu::new(arch);
+    // functional payload: a real i64 buffer in WRAM per tasklet, so the
+    // benchmark also exercises the wram path (values are irrelevant to
+    // timing, but keep the simulator honest)
+    let run = dpu.launch(
+        &|ctx: &mut Ctx| {
+            let buf = ctx.mem_alloc(1024);
+            ctx.wram_set(buf, &[1i64; 128]);
+            ctx.charge_stream(dtype, op, ELEMS_PER_TASKLET);
+        },
+        n_tasklets,
+    );
+    let total_ops = ELEMS_PER_TASKLET * n_tasklets as u64;
+    let secs = arch.cycles_to_secs(run.timing.cycles);
+    total_ops as f64 / secs / 1e6
+}
+
+/// Full Fig. 4 sweep: (dtype, op, tasklets, MOPS) tuples.
+pub fn fig4_sweep(arch: DpuArch, tasklet_counts: &[u32]) -> Vec<(DType, Op, u32, f64)> {
+    let mut out = Vec::new();
+    for &dt in &[DType::I32, DType::I64, DType::F32, DType::F64] {
+        for &op in &Op::ARITH {
+            for &t in tasklet_counts {
+                out.push((dt, op, t, throughput_mops(arch, dt, op, t)));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::isa::expected_mops;
+
+    #[test]
+    fn saturates_at_11_tasklets_key_obs_1() {
+        let arch = DpuArch::p21();
+        for dt in [DType::I32, DType::F32] {
+            let t10 = throughput_mops(arch, dt, Op::Add, 10);
+            let t11 = throughput_mops(arch, dt, Op::Add, 11);
+            let t16 = throughput_mops(arch, dt, Op::Add, 16);
+            let t24 = throughput_mops(arch, dt, Op::Add, 24);
+            assert!(t11 > t10 * 1.05, "{dt:?}: t11 {t11} vs t10 {t10}");
+            assert!((t16 - t11).abs() / t11 < 0.02, "{dt:?}: flat after 11");
+            assert!((t24 - t11).abs() / t11 < 0.02);
+        }
+    }
+
+    #[test]
+    fn saturated_throughput_matches_paper() {
+        // Fig. 4 measured values at 16 tasklets, 350 MHz.
+        let arch = DpuArch::p21();
+        let cases = [
+            (DType::I32, Op::Add, 58.56),
+            (DType::I64, Op::Add, 50.16),
+            (DType::I32, Op::Mul, 10.27),
+            (DType::F32, Op::Add, 4.91),
+            (DType::F64, Op::Div, 0.16),
+        ];
+        for (dt, op, paper) in cases {
+            let got = throughput_mops(arch, dt, op, 16);
+            assert!(
+                (got - paper).abs() / paper < 0.06,
+                "{dt:?} {op:?}: {got} vs paper {paper}"
+            );
+        }
+    }
+
+    #[test]
+    fn linear_scaling_below_saturation() {
+        let arch = DpuArch::p21();
+        let t1 = throughput_mops(arch, DType::I32, Op::Add, 1);
+        let t2 = throughput_mops(arch, DType::I32, Op::Add, 2);
+        let t8 = throughput_mops(arch, DType::I32, Op::Add, 8);
+        assert!((t2 / t1 - 2.0).abs() < 0.05);
+        assert!((t8 / t1 - 8.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn matches_eq1_model() {
+        let arch = DpuArch::p21();
+        for dt in [DType::I32, DType::I64] {
+            for op in Op::ARITH {
+                let got = throughput_mops(arch, dt, op, 16);
+                let model = expected_mops(dt, op, 350);
+                assert!((got - model).abs() / model < 0.01, "{dt:?} {op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn e19_scales_with_frequency() {
+        let p21 = throughput_mops(DpuArch::p21(), DType::I32, Op::Add, 16);
+        let e19 = throughput_mops(DpuArch::e19(), DType::I32, Op::Add, 16);
+        assert!((p21 / e19 - 350.0 / 267.0).abs() < 0.01);
+    }
+}

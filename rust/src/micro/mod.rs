@@ -1,0 +1,18 @@
+//! Section 3 microbenchmarks: the architecture-characterization suite.
+//!
+//! Each submodule reproduces one experiment family of the paper:
+//! - [`arith`]        — Fig. 4: arithmetic throughput vs tasklets
+//! - [`wram_stream`]  — Fig. 5: sustained WRAM bandwidth (STREAM)
+//! - [`mram`]         — Fig. 6: MRAM DMA latency/bandwidth vs size
+//! - [`mram_stream`]  — Fig. 7: sustained MRAM bandwidth (STREAM + COPY-DMA)
+//! - [`strided`]      — Fig. 8: strided (coarse/fine DMA) and random (GUPS)
+//! - [`opint`]        — Figs. 9/18: throughput vs operational intensity
+//! - [`xfer`]         — Fig. 10: CPU↔DPU transfer bandwidth
+
+pub mod arith;
+pub mod mram;
+pub mod mram_stream;
+pub mod opint;
+pub mod strided;
+pub mod wram_stream;
+pub mod xfer;

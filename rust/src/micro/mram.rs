@@ -1,0 +1,112 @@
+//! Fig. 6: MRAM read/write latency and bandwidth vs DMA transfer size
+//! (8–2,048 B), single tasklet, plus the Eq. 3 linear-model overlay.
+
+use crate::arch::DpuArch;
+use crate::dpu::{Ctx, Dpu};
+
+/// One measurement row of Fig. 6.
+#[derive(Clone, Copy, Debug)]
+pub struct MramPoint {
+    pub bytes: u32,
+    /// Measured latency (cycles per transfer, from the replayed run).
+    pub latency_cycles: f64,
+    /// Analytical Eq. 3 latency (the dashed overlay line).
+    pub model_cycles: f64,
+    /// Sustained bandwidth in MB/s.
+    pub bandwidth_mbps: f64,
+}
+
+/// Measure one transfer size / direction over `reps` transfers.
+pub fn mram_point(arch: DpuArch, read: bool, bytes: u32, reps: u32) -> MramPoint {
+    let mut dpu = Dpu::new(arch);
+    // seed MRAM so reads return real data
+    dpu.mram_store(0, &vec![0xABu8; bytes as usize]);
+    let run = dpu.launch(
+        &|ctx: &mut Ctx| {
+            let buf = ctx.mem_alloc(bytes as usize);
+            for _ in 0..reps {
+                if read {
+                    ctx.mram_read(0, buf, bytes as usize);
+                } else {
+                    ctx.mram_write(buf, 0, bytes as usize);
+                }
+            }
+        },
+        1,
+    );
+    let latency = run.timing.cycles / reps as f64;
+    let secs = arch.cycles_to_secs(run.timing.cycles);
+    MramPoint {
+        bytes,
+        latency_cycles: latency,
+        model_cycles: arch.dma_latency_cycles(read, bytes),
+        bandwidth_mbps: (bytes as u64 * reps as u64) as f64 / secs / 1e6,
+    }
+}
+
+/// The transfer sizes of Fig. 6 (powers of two, 8..2048).
+pub fn fig6_sizes() -> Vec<u32> {
+    (3..=11).map(|s| 1u32 << s).collect()
+}
+
+/// Full Fig. 6 sweep for one direction.
+pub fn fig6_sweep(arch: DpuArch, read: bool) -> Vec<MramPoint> {
+    fig6_sizes().into_iter().map(|b| mram_point(arch, read, b, 64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::linear_fit;
+
+    #[test]
+    fn latency_is_linear_in_size_key_obs_4() {
+        // fit measured latency = a + b·size; expect a≈α, b≈0.5, r²≈1
+        let pts = fig6_sweep(DpuArch::p21(), true);
+        let xs: Vec<f64> = pts.iter().map(|p| p.bytes as f64).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.latency_cycles).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 77.0).abs() < 2.0, "alpha {a}");
+        assert!((b - 0.5).abs() < 0.01, "beta {b}");
+        assert!(r2 > 0.9999);
+    }
+
+    #[test]
+    fn paper_latency_checkpoints() {
+        // paper: 8-B read = 81 cycles, 128-B read = 141 cycles (+74%)
+        let arch = DpuArch::p21();
+        let p8 = mram_point(arch, true, 8, 32);
+        let p128 = mram_point(arch, true, 128, 32);
+        assert!((p8.latency_cycles - 81.0).abs() < 1.0, "{}", p8.latency_cycles);
+        assert!((p128.latency_cycles - 141.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn max_bandwidth_near_628() {
+        // paper: 628.23 MB/s read / 633.22 MB/s write at 2,048 B
+        let arch = DpuArch::p21();
+        let rd = mram_point(arch, true, 2048, 64);
+        let wr = mram_point(arch, false, 2048, 64);
+        assert!((rd.bandwidth_mbps - 628.0).abs() < 30.0, "{}", rd.bandwidth_mbps);
+        assert!(wr.bandwidth_mbps > rd.bandwidth_mbps, "write slightly faster (lower alpha)");
+    }
+
+    #[test]
+    fn read_write_symmetric() {
+        // Fig. 6: read and write curves are very similar
+        let arch = DpuArch::p21();
+        for b in [64u32, 512, 2048] {
+            let rd = mram_point(arch, true, b, 16);
+            let wr = mram_point(arch, false, b, 16);
+            let rel = (rd.latency_cycles - wr.latency_cycles).abs() / rd.latency_cycles;
+            assert!(rel < 0.2, "{b}: {rel}");
+        }
+    }
+
+    #[test]
+    fn measured_matches_model_exactly() {
+        for p in fig6_sweep(DpuArch::p21(), false) {
+            assert!((p.latency_cycles - p.model_cycles).abs() < 0.5);
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Fig. 7: sustained MRAM bandwidth for streaming benchmarks (COPY-DMA,
+//! COPY, ADD, SCALE, TRIAD) with 1,024-byte DMA transfers, vs tasklets.
+//!
+//! COPY/ADD saturate at 4/6 tasklets at the DMA-engine roof (memory-bound,
+//! Key Obs. 5); SCALE/TRIAD saturate at 11 tasklets an order of magnitude
+//! lower (multiplication-bound — their MRAM bandwidth equals their WRAM
+//! bandwidth).
+
+use super::wram_stream::Stream;
+use crate::arch::DpuArch;
+use crate::dpu::{Ctx, Dpu};
+use crate::util::pod::cast_slice_mut;
+
+/// Fig. 7 benchmark variants: the four STREAMs plus COPY-DMA.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MramStream {
+    CopyDma,
+    Stream(Stream),
+}
+
+impl MramStream {
+    pub const ALL: [MramStream; 5] = [
+        MramStream::CopyDma,
+        MramStream::Stream(Stream::Copy),
+        MramStream::Stream(Stream::Add),
+        MramStream::Stream(Stream::Scale),
+        MramStream::Stream(Stream::Triad),
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MramStream::CopyDma => "COPY-DMA",
+            MramStream::Stream(s) => s.name(),
+        }
+    }
+}
+
+/// DMA block size used by the paper's Fig. 7 experiment.
+pub const BLOCK: usize = 1024;
+
+/// Run one Fig. 7 configuration. Streams `total_elems` 8-byte elements
+/// split across tasklets; returns sustained MRAM bandwidth in MB/s
+/// (bytes through the DMA engine / time).
+pub fn mram_stream_bw(arch: DpuArch, version: MramStream, n_tasklets: u32, total_elems: usize) -> f64 {
+    let mut dpu = Dpu::new(arch);
+    let src: Vec<i64> = (0..total_elems as i64).collect();
+    let src2: Vec<i64> = (0..total_elems as i64).map(|x| x * 3).collect();
+    // layout: a at 0, b after a, c after b
+    let abytes = total_elems * 8;
+    dpu.mram_store(0, &src);
+    dpu.mram_store(abytes, &src2);
+    let scalar = 7i64;
+
+    let elems_per_block = BLOCK / 8;
+    let n_blocks = total_elems / elems_per_block;
+
+    let run = dpu.launch(
+        &|ctx: &mut Ctx| {
+            let t = ctx.tasklet_id as usize;
+            let nt = ctx.n_tasklets as usize;
+            let wa = ctx.mem_alloc(BLOCK);
+            let wb = ctx.mem_alloc(BLOCK);
+            let wc = ctx.mem_alloc(BLOCK);
+            // block-cyclic over blocks
+            let mut blk = t;
+            while blk < n_blocks {
+                let off = blk * BLOCK;
+                match version {
+                    MramStream::CopyDma => {
+                        // MRAM→WRAM→MRAM without touching the core
+                        ctx.mram_read(off, wa, BLOCK);
+                        ctx.mram_write(wa, 2 * abytes + off, BLOCK);
+                    }
+                    MramStream::Stream(s) => {
+                        ctx.mram_read(off, wa, BLOCK);
+                        let needs_b = matches!(s, Stream::Add | Stream::Triad);
+                        if needs_b {
+                            ctx.mram_read(abytes + off, wb, BLOCK);
+                        }
+                        // functional element work
+                        let av: Vec<i64> = ctx.wram_get(wa, elems_per_block);
+                        let bv: Vec<i64> = if needs_b {
+                            ctx.wram_get(wb, elems_per_block)
+                        } else {
+                            Vec::new()
+                        };
+                        let cv: Vec<i64> = match s {
+                            Stream::Copy => av,
+                            Stream::Add => av.iter().zip(&bv).map(|(x, y)| x + y).collect(),
+                            Stream::Scale => av.iter().map(|x| x * scalar).collect(),
+                            Stream::Triad => {
+                                av.iter().zip(&bv).map(|(x, y)| x + y * scalar).collect()
+                            }
+                        };
+                        ctx.wram(|w| {
+                            cast_slice_mut::<i64>(&mut w[wc..wc + BLOCK]).copy_from_slice(&cv)
+                        });
+                        // pipeline cost of the unrolled loop
+                        let (instrs, _) = s.cost();
+                        ctx.compute(elems_per_block as u64 * instrs);
+                        ctx.mram_write(wc, 2 * abytes + off, BLOCK);
+                    }
+                }
+                blk += nt;
+            }
+        },
+        n_tasklets,
+    );
+    let secs = arch.cycles_to_secs(run.timing.cycles);
+    run.timing.dma_bytes as f64 / secs / 1e6
+}
+
+/// Fig. 7 sweep: (version, tasklets, MB/s).
+pub fn fig7_sweep(arch: DpuArch, tasklet_counts: &[u32], total_elems: usize) -> Vec<(MramStream, u32, f64)> {
+    let mut out = Vec::new();
+    for v in MramStream::ALL {
+        for &t in tasklet_counts {
+            out.push((v, t, mram_stream_bw(arch, v, t, total_elems)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 16 * 1024; // 128 KB per array — enough blocks for 16 tasklets
+
+    #[test]
+    fn copy_dma_saturates_at_2_tasklets() {
+        let arch = DpuArch::p21();
+        let b1 = mram_stream_bw(arch, MramStream::CopyDma, 1, N);
+        let b2 = mram_stream_bw(arch, MramStream::CopyDma, 2, N);
+        let b8 = mram_stream_bw(arch, MramStream::CopyDma, 8, N);
+        assert!(b2 > b1);
+        assert!((b8 - b2).abs() / b2 < 0.03, "flat after 2: {b2} vs {b8}");
+        // paper: 624 MB/s; model: ~654
+        assert!((b2 - 624.0).abs() < 40.0, "{b2}");
+    }
+
+    #[test]
+    fn copy_add_memory_bound_key_obs_5() {
+        // COPY saturates by ~4 tasklets, ADD by ~6, both near COPY-DMA bw
+        let arch = DpuArch::p21();
+        let copy4 = mram_stream_bw(arch, MramStream::Stream(Stream::Copy), 4, N);
+        let copy16 = mram_stream_bw(arch, MramStream::Stream(Stream::Copy), 16, N);
+        assert!((copy16 - copy4).abs() / copy4 < 0.05, "{copy4} vs {copy16}");
+        let add8 = mram_stream_bw(arch, MramStream::Stream(Stream::Add), 8, N);
+        let add16 = mram_stream_bw(arch, MramStream::Stream(Stream::Add), 16, N);
+        assert!((add16 - add8).abs() / add8 < 0.05);
+        assert!(copy16 > 550.0, "{copy16}");
+    }
+
+    #[test]
+    fn scale_triad_compute_bound() {
+        // SCALE/TRIAD: pipeline-bound; MRAM bw ≈ WRAM bw (42 / 61.7 MB/s)
+        let arch = DpuArch::p21();
+        let scale = mram_stream_bw(arch, MramStream::Stream(Stream::Scale), 16, N);
+        let triad = mram_stream_bw(arch, MramStream::Stream(Stream::Triad), 16, N);
+        assert!((scale - 42.0).abs() < 6.0, "{scale}");
+        assert!((triad - 61.7).abs() < 8.0, "{triad}");
+        // saturation at 11, not earlier
+        let scale8 = mram_stream_bw(arch, MramStream::Stream(Stream::Scale), 8, N);
+        let scale11 = mram_stream_bw(arch, MramStream::Stream(Stream::Scale), 11, N);
+        assert!(scale11 > scale8 * 1.2);
+    }
+
+    #[test]
+    fn copy_functional_correctness() {
+        // the COPY variant must actually copy a→c through WRAM
+        let arch = DpuArch::p21();
+        let mut dpu = Dpu::new(arch);
+        let n = 1024usize;
+        let src: Vec<i64> = (0..n as i64).map(|x| x * 11).collect();
+        dpu.mram_store(0, &src);
+        let abytes = n * 8;
+        dpu.launch(
+            &|ctx: &mut Ctx| {
+                let w = ctx.mem_alloc(BLOCK);
+                let mut blk = ctx.tasklet_id as usize;
+                let nblocks = n * 8 / BLOCK;
+                while blk < nblocks {
+                    ctx.mram_read(blk * BLOCK, w, BLOCK);
+                    ctx.mram_write(w, 2 * abytes + blk * BLOCK, BLOCK);
+                    blk += ctx.n_tasklets as usize;
+                }
+            },
+            4,
+        );
+        let out: Vec<i64> = dpu.mram_load(2 * abytes, n);
+        assert_eq!(out, src);
+    }
+}

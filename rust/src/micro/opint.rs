@@ -1,0 +1,140 @@
+//! Figs. 9 & 18: arithmetic throughput vs operational intensity (the
+//! roofline-style experiment that establishes Key Observation 6: the DPU is
+//! fundamentally compute-bound).
+//!
+//! The microbenchmark streams 1,024-B blocks MRAM→WRAM→MRAM and performs a
+//! variable number of arithmetic operations per block; operational
+//! intensity = ops / bytes-accessed-from-MRAM. At low intensity the DMA
+//! engine dominates (memory-bound region, throughput ∝ intensity); past
+//! the *throughput saturation point* the pipeline dominates (compute-bound
+//! plateau at Eq. 1).
+
+use crate::arch::{isa, DpuArch, DType, Op};
+use crate::dpu::{Ctx, Dpu};
+
+/// DMA block size.
+const BLOCK: usize = 1024;
+
+/// Measure arithmetic throughput (MOPS) at a given operational intensity
+/// (operations per MRAM byte; the paper sweeps 1/2048 .. 8).
+pub fn throughput_at_intensity(
+    arch: DpuArch,
+    dtype: DType,
+    op: Op,
+    intensity: f64,
+    n_tasklets: u32,
+    n_blocks_total: usize,
+) -> f64 {
+    // bytes per block counted as read+write (the block is streamed back)
+    let bytes_per_block = (2 * BLOCK) as f64;
+    let ops_per_block = (intensity * bytes_per_block).max(0.0);
+    // each operation is a full read-modify-write loop iteration on a WRAM
+    // operand (Listing 1 structure): addr calc + ld + op + st + loop ctrl
+    let instrs_per_op = isa::stream_loop_instrs(dtype, op) as u64;
+
+    let mut dpu = Dpu::new(arch);
+    dpu.mram_store(0, &vec![1u8; n_blocks_total * BLOCK]);
+    let run = dpu.launch(
+        &|ctx: &mut Ctx| {
+            let w = ctx.mem_alloc(BLOCK);
+            let mut blk = ctx.tasklet_id as usize;
+            // accumulate fractional ops per block so low intensities are exact
+            let mut carry = 0f64;
+            while blk < n_blocks_total {
+                ctx.mram_read(blk * BLOCK, w, BLOCK);
+                carry += ops_per_block;
+                let ops_now = carry as u64;
+                carry -= ops_now as f64;
+                ctx.compute(ops_now * instrs_per_op);
+                ctx.mram_write(w, blk * BLOCK, BLOCK);
+                blk += ctx.n_tasklets as usize;
+            }
+        },
+        n_tasklets,
+    );
+    let total_ops = intensity * bytes_per_block * n_blocks_total as f64;
+    let secs = arch.cycles_to_secs(run.timing.cycles);
+    total_ops / secs / 1e6
+}
+
+/// The intensity grid of Fig. 9 (powers of two from 1/2048 to 8 OP/B).
+pub fn fig9_intensities() -> Vec<f64> {
+    (-11..=3).map(|e| 2f64.powi(e)).collect()
+}
+
+/// Find the throughput saturation point: the smallest grid intensity whose
+/// throughput is ≥95% of the plateau.
+pub fn saturation_point(arch: DpuArch, dtype: DType, op: Op, n_tasklets: u32) -> f64 {
+    let grid = fig9_intensities();
+    let plateau = throughput_at_intensity(arch, dtype, op, 8.0, n_tasklets, 64);
+    for &i in &grid {
+        let t = throughput_at_intensity(arch, dtype, op, i, n_tasklets, 64);
+        if t >= 0.95 * plateau {
+            return i;
+        }
+    }
+    8.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_bound_then_compute_bound() {
+        let arch = DpuArch::p21();
+        // memory-bound region: throughput grows ~linearly with intensity
+        let lo = throughput_at_intensity(arch, DType::I32, Op::Add, 1.0 / 512.0, 16, 64);
+        let mid = throughput_at_intensity(arch, DType::I32, Op::Add, 1.0 / 128.0, 16, 64);
+        assert!((mid / lo - 4.0).abs() < 0.5, "{mid} vs {lo}");
+        // compute-bound plateau
+        let hi = throughput_at_intensity(arch, DType::I32, Op::Add, 4.0, 16, 64);
+        let hi2 = throughput_at_intensity(arch, DType::I32, Op::Add, 8.0, 16, 64);
+        assert!((hi2 - hi).abs() / hi < 0.1, "{hi} vs {hi2}");
+    }
+
+    #[test]
+    fn saturation_at_low_intensity_key_obs_6() {
+        // int32 add saturates below 1 OP/B — the DPU is compute-bound
+        let arch = DpuArch::p21();
+        let sat = saturation_point(arch, DType::I32, Op::Add, 16);
+        assert!(sat <= 1.0, "saturation at {sat} OP/B");
+    }
+
+    #[test]
+    fn expensive_ops_saturate_earlier() {
+        // mul (29 instrs) saturates at lower intensity than add (1 instr);
+        // f32 mul (178) earlier still (paper: 1/4 vs 1/32 vs 1/128)
+        let arch = DpuArch::p21();
+        let s_add = saturation_point(arch, DType::I32, Op::Add, 16);
+        let s_mul = saturation_point(arch, DType::I32, Op::Mul, 16);
+        let s_fmul = saturation_point(arch, DType::F32, Op::Mul, 16);
+        assert!(s_mul < s_add, "mul {s_mul} vs add {s_add}");
+        assert!(s_fmul < s_mul, "fmul {s_fmul} vs mul {s_mul}");
+    }
+
+    #[test]
+    fn fig18_memory_bound_saturates_below_11_tasklets() {
+        // at very low intensity, throughput is DMA-bound: it saturates
+        // with a handful of tasklets (paper: 2; model: ~4 — both ≪ 11)
+        let arch = DpuArch::p21();
+        let t4 = throughput_at_intensity(arch, DType::I32, Op::Add, 1.0 / 64.0, 4, 64);
+        let t8 = throughput_at_intensity(arch, DType::I32, Op::Add, 1.0 / 64.0, 8, 64);
+        let t16 = throughput_at_intensity(arch, DType::I32, Op::Add, 1.0 / 64.0, 16, 64);
+        assert!((t16 - t8).abs() / t8 < 0.10, "{t8} vs {t16}");
+        assert!(t8 < t4 * 1.6, "sublinear past saturation: {t4} vs {t8}");
+        // in the compute-bound region 11 tasklets are needed
+        let c8 = throughput_at_intensity(arch, DType::I32, Op::Add, 8.0, 8, 64);
+        let c11 = throughput_at_intensity(arch, DType::I32, Op::Add, 8.0, 11, 64);
+        assert!(c11 > c8 * 1.2, "{c8} vs {c11}");
+    }
+
+    #[test]
+    fn plateau_equals_eq1_throughput() {
+        let arch = DpuArch::p21();
+        let hi = throughput_at_intensity(arch, DType::I32, Op::Mul, 8.0, 16, 64);
+        // the compute-bound plateau is the Fig. 4 streaming throughput
+        let expect = crate::arch::isa::expected_mops(DType::I32, Op::Mul, 350);
+        assert!((hi - expect).abs() / expect < 0.1, "{hi} vs {expect}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Fig. 8: sustained MRAM bandwidth for strided and random access.
+//!
+//! Two strategies (Programming Recommendation 4):
+//! * **coarse-grained DMA** — fetch full 1,024-B blocks and stride inside
+//!   WRAM (what a CPU cache line does): effective bandwidth falls as
+//!   1/stride because unused data is transferred;
+//! * **fine-grained DMA** — fetch exactly the 8-B elements used: bandwidth
+//!   is engine-throughput-bound (~72 MB/s at 16 tasklets) independent of
+//!   stride, so it wins for strides ≥ 16.
+//!
+//! Random access (GUPS read-modify-write) uses fine-grained DMA by nature.
+//!
+//! Reported bandwidth is **effective** (useful bytes / time), matching the
+//! paper's accounting (e.g. stride-16 coarse = 622/16 ≈ 38.9 MB/s).
+
+use crate::arch::{DpuArch, DType, Op};
+use crate::dpu::{Ctx, Dpu};
+use crate::util::Rng;
+
+/// Copy `a[i] -> c[i]` for i = 0, s, 2s, ... with coarse-grained DMA.
+/// Returns effective MB/s.
+pub fn coarse_strided_bw(arch: DpuArch, stride: usize, n_tasklets: u32, total_elems: usize) -> f64 {
+    const BLOCK: usize = 1024;
+    let mut dpu = Dpu::new(arch);
+    let src: Vec<i64> = (0..total_elems as i64).collect();
+    dpu.mram_store(0, &src);
+    let abytes = total_elems * 8;
+    let elems_per_block = BLOCK / 8;
+    let n_blocks = total_elems * 8 / BLOCK;
+
+    let run = dpu.launch(
+        &|ctx: &mut Ctx| {
+            let wa = ctx.mem_alloc(BLOCK);
+            let wc = ctx.mem_alloc(BLOCK);
+            let mut blk = ctx.tasklet_id as usize;
+            while blk < n_blocks {
+                ctx.mram_read(blk * BLOCK, wa, BLOCK);
+                // stride inside WRAM: copy every stride-th element
+                let av: Vec<i64> = ctx.wram_get(wa, elems_per_block);
+                let mut cv: Vec<i64> = ctx.wram_get(wc, elems_per_block);
+                let mut i = 0;
+                while i < elems_per_block {
+                    cv[i] = av[i];
+                    i += stride;
+                }
+                ctx.wram_set(wc, &cv);
+                ctx.charge_stream(DType::I64, Op::Add, elems_per_block.div_ceil(stride) as u64);
+                ctx.mram_write(wc, abytes + blk * BLOCK, BLOCK);
+                blk += ctx.n_tasklets as usize;
+            }
+        },
+        n_tasklets,
+    );
+    let useful = 16 * (total_elems / stride) as u64; // 8 read + 8 written per used element
+    useful as f64 / arch.cycles_to_secs(run.timing.cycles) / 1e6
+}
+
+/// Copy every stride-th element with 8-B fine-grained DMA transfers.
+pub fn fine_strided_bw(arch: DpuArch, stride: usize, n_tasklets: u32, total_elems: usize) -> f64 {
+    let mut dpu = Dpu::new(arch);
+    let src: Vec<i64> = (0..total_elems as i64).collect();
+    dpu.mram_store(0, &src);
+    let abytes = total_elems * 8;
+    let used = total_elems / stride;
+
+    let run = dpu.launch(
+        &|ctx: &mut Ctx| {
+            let w = ctx.mem_alloc(8);
+            let t = ctx.tasklet_id as usize;
+            let nt = ctx.n_tasklets as usize;
+            let mut k = t;
+            while k < used {
+                let i = k * stride;
+                ctx.mram_read(i * 8, w, 8);
+                ctx.compute(4); // address arithmetic + loop
+                ctx.mram_write(w, abytes + i * 8, 8);
+                k += nt;
+            }
+        },
+        n_tasklets,
+    );
+    (16 * used) as f64 / arch.cycles_to_secs(run.timing.cycles) / 1e6
+}
+
+/// GUPS: random read-modify-write over the array, fine-grained DMA.
+pub fn gups_bw(arch: DpuArch, n_tasklets: u32, total_elems: usize, n_updates: usize) -> f64 {
+    let mut dpu = Dpu::new(arch);
+    let src: Vec<i64> = vec![1; total_elems];
+    dpu.mram_store(0, &src);
+    // pre-generate random indices (the paper's a[] index array)
+    let mut rng = Rng::new(0x6F5);
+    let idx: Vec<usize> = (0..n_updates).map(|_| rng.below(total_elems as u64) as usize).collect();
+
+    let run = dpu.launch(
+        &|ctx: &mut Ctx| {
+            let w = ctx.mem_alloc(8);
+            let t = ctx.tasklet_id as usize;
+            let nt = ctx.n_tasklets as usize;
+            let mut k = t;
+            while k < idx.len() {
+                let i = idx[k];
+                ctx.mram_read(i * 8, w, 8);
+                let v: Vec<i64> = ctx.wram_get(w, 1);
+                ctx.wram_set(w, &[v[0].wrapping_add(0x5DEECE)]);
+                ctx.charge_stream(DType::I64, Op::Add, 1);
+                ctx.mram_write(w, i * 8, 8);
+                k += nt;
+            }
+        },
+        n_tasklets,
+    );
+    (16 * n_updates) as f64 / arch.cycles_to_secs(run.timing.cycles) / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 8 * 1024;
+
+    #[test]
+    fn coarse_bw_falls_with_stride() {
+        let arch = DpuArch::p21();
+        let s1 = coarse_strided_bw(arch, 1, 16, N);
+        let s4 = coarse_strided_bw(arch, 4, 16, N);
+        let s16 = coarse_strided_bw(arch, 16, 16, N);
+        // paper: 622 → ~1/4 → ~1/16 (38.95)
+        assert!((s1 - 622.0).abs() < 45.0, "{s1}");
+        assert!((s4 / s1 - 0.25).abs() < 0.05, "{s4} vs {s1}");
+        assert!((s16 - 38.95).abs() < 6.0, "{s16}");
+    }
+
+    #[test]
+    fn fine_bw_flat_with_stride() {
+        let arch = DpuArch::p21();
+        let s16 = fine_strided_bw(arch, 16, 16, N);
+        let s64 = fine_strided_bw(arch, 64, 16, N);
+        // paper: 72.58 MB/s, independent of stride
+        assert!((s16 - 72.58).abs() < 10.0, "{s16}");
+        assert!((s64 - s16).abs() / s16 < 0.1);
+    }
+
+    #[test]
+    fn crossover_at_stride_16_rec_4() {
+        // coarse wins for small strides, fine for stride ≥ 16
+        let arch = DpuArch::p21();
+        assert!(coarse_strided_bw(arch, 4, 16, N) > fine_strided_bw(arch, 4, 16, N));
+        assert!(fine_strided_bw(arch, 16, 16, N) > coarse_strided_bw(arch, 16, 16, N) * 0.9);
+        assert!(fine_strided_bw(arch, 64, 16, N) > coarse_strided_bw(arch, 64, 16, N));
+    }
+
+    #[test]
+    fn gups_matches_fine_grained() {
+        let arch = DpuArch::p21();
+        let g = gups_bw(arch, 16, N, 2048);
+        assert!((g - 70.0).abs() < 12.0, "{g} (paper 72.58)");
+    }
+
+    #[test]
+    fn gups_functional_updates_land() {
+        let arch = DpuArch::p21();
+        let mut dpu = Dpu::new(arch);
+        dpu.mram_store(0, &vec![0i64; 64]);
+        let idx = [3usize, 17, 42];
+        dpu.launch(
+            &|ctx: &mut Ctx| {
+                if ctx.tasklet_id == 0 {
+                    let w = ctx.mem_alloc(8);
+                    for &i in &idx {
+                        ctx.mram_read(i * 8, w, 8);
+                        let v: Vec<i64> = ctx.wram_get(w, 1);
+                        ctx.wram_set(w, &[v[0] + 1]);
+                        ctx.mram_write(w, i * 8, 8);
+                    }
+                }
+            },
+            2,
+        );
+        let out: Vec<i64> = dpu.mram_load(0, 64);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, if idx.contains(&i) { 1 } else { 0 });
+        }
+    }
+}

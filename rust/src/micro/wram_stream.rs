@@ -1,0 +1,196 @@
+//! Fig. 5: sustained WRAM bandwidth for the four STREAM versions (COPY,
+//! ADD, SCALE, TRIAD) on 64-bit integers, loops unrolled (no loop-control
+//! instructions), as a function of tasklet count.
+//!
+//! Instruction costs per element (paper §3.1.1/§3.1.3):
+//! COPY  = ld + sd                          = 2 instrs / 16 B
+//! ADD   = 2·ld + add + addc + sd           = 5 instrs / 24 B
+//! SCALE = ld + __muldi3 + sd               = 2 + 132 instrs / 16 B
+//! TRIAD = 2·ld + __muldi3 + add + addc + sd = 3 + 134 instrs / 24 B
+
+use crate::arch::{isa, DpuArch, DType, Op};
+use crate::dpu::{Ctx, Dpu};
+
+/// STREAM versions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stream {
+    Copy,
+    Add,
+    Scale,
+    Triad,
+}
+
+impl Stream {
+    pub const ALL: [Stream; 4] = [Stream::Copy, Stream::Add, Stream::Scale, Stream::Triad];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stream::Copy => "COPY",
+            Stream::Add => "ADD",
+            Stream::Scale => "SCALE",
+            Stream::Triad => "TRIAD",
+        }
+    }
+
+    /// (instructions, bytes accessed) per 64-bit element, unrolled.
+    pub fn cost(self) -> (u64, u64) {
+        let mul = isa::op_instrs(DType::I64, Op::Mul) as u64;
+        let add = isa::op_instrs(DType::I64, Op::Add) as u64;
+        match self {
+            Stream::Copy => (2, 16),
+            Stream::Add => (3 + add, 24),
+            Stream::Scale => (2 + mul, 16),
+            Stream::Triad => (3 + mul + add, 24),
+        }
+    }
+}
+
+/// Elements per tasklet (WRAM-resident arrays, as in the paper).
+const ELEMS_PER_TASKLET: u64 = 512;
+/// Outer repetitions to lengthen the run.
+const REPS: u64 = 64;
+
+/// Sustained WRAM bandwidth in MB/s for one STREAM version.
+pub fn wram_bw_mbps(arch: DpuArch, version: Stream, n_tasklets: u32) -> f64 {
+    let (instrs, bytes) = version.cost();
+    let mut dpu = Dpu::new(arch);
+    let run = dpu.launch(
+        &|ctx: &mut Ctx| {
+            // functional payload: three small WRAM arrays per tasklet
+            let a = ctx.mem_alloc(256);
+            let b = ctx.mem_alloc(256);
+            let c = ctx.mem_alloc(256);
+            ctx.wram_set(a, &[1i64; 32]);
+            ctx.wram_set(b, &[2i64; 32]);
+            let scalar = 3i64;
+            // one real pass for correctness of the wram path
+            let av: Vec<i64> = ctx.wram_get(a, 32);
+            let bv: Vec<i64> = ctx.wram_get(b, 32);
+            let cv: Vec<i64> = match version {
+                Stream::Copy => av.clone(),
+                Stream::Add => av.iter().zip(&bv).map(|(x, y)| x + y).collect(),
+                Stream::Scale => av.iter().map(|x| x * scalar).collect(),
+                Stream::Triad => av.iter().zip(&bv).map(|(x, y)| x + y * scalar).collect(),
+            };
+            ctx.wram_set(c, &cv);
+            // timing: the unrolled stream loop
+            ctx.compute(ELEMS_PER_TASKLET * REPS * instrs);
+        },
+        n_tasklets,
+    );
+    let total_bytes = ELEMS_PER_TASKLET * REPS * bytes * n_tasklets as u64;
+    let secs = arch.cycles_to_secs(run.timing.cycles);
+    total_bytes as f64 / secs / 1e6
+}
+
+/// Fig. 5 sweep: (version, tasklets, MB/s).
+pub fn fig5_sweep(arch: DpuArch, tasklet_counts: &[u32]) -> Vec<(Stream, u32, f64)> {
+    let mut out = Vec::new();
+    for v in Stream::ALL {
+        for &t in tasklet_counts {
+            out.push((v, t, wram_bw_mbps(arch, v, t)));
+        }
+    }
+    out
+}
+
+/// WRAM access pattern for the footnote-10 microbenchmark.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WramPattern {
+    Unit,
+    Strided(usize),
+    Random,
+}
+
+/// The paper's footnote-10 microbenchmark (Key Observation 3):
+/// `c[a[i]] = b[a[i]]` where the index array `a` is unit-stride, strided,
+/// or random — WRAM bandwidth must be identical for all three, because
+/// every 8-B WRAM load/store is one pipeline cycle regardless of address.
+/// Returns sustained MB/s.
+pub fn wram_pattern_bw(arch: DpuArch, pattern: WramPattern, n_tasklets: u32) -> f64 {
+    use crate::util::Rng;
+    // 16 tasklets × 3 arrays × 1 KB = 48 KB of the 64-KB WRAM
+    const N: usize = 128; // elements per tasklet array
+    const REPS: u64 = 64;
+    let mut dpu = crate::dpu::Dpu::new(arch);
+    let run = dpu.launch(
+        &|ctx: &mut Ctx| {
+            let a = ctx.mem_alloc(N * 8);
+            let b = ctx.mem_alloc(N * 8);
+            let c = ctx.mem_alloc(N * 8);
+            // build the index array
+            let mut rng = Rng::new(ctx.tasklet_id as u64 + 1);
+            let idx: Vec<i64> = (0..N)
+                .map(|i| match pattern {
+                    WramPattern::Unit => i as i64,
+                    WramPattern::Strided(s) => ((i * s) % N) as i64,
+                    WramPattern::Random => rng.below(N as u64) as i64,
+                })
+                .collect();
+            ctx.wram_set(a, &idx);
+            ctx.wram_set(b, &(0..N as i64).map(|x| x * 3).collect::<Vec<_>>());
+            // functional pass: c[a[i]] = b[a[i]]
+            let av: Vec<i64> = ctx.wram_get(a, N);
+            let bv: Vec<i64> = ctx.wram_get(b, N);
+            let mut cv = vec![0i64; N];
+            for &j in &av {
+                cv[j as usize] = bv[j as usize];
+            }
+            ctx.wram_set(c, &cv);
+            // timing: per element ld a[i], ld b[a[i]], st c[a[i]], loop —
+            // identical instruction count for every pattern
+            ctx.compute(REPS * N as u64 * (3 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64);
+        },
+        n_tasklets,
+    );
+    let bytes = REPS * N as u64 * 24 * n_tasklets as u64; // ld idx + ld + st
+    bytes as f64 / arch.cycles_to_secs(run.timing.cycles) / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_reaches_2800_mbps() {
+        // paper: 2,818.98 MB/s measured, 2,800 theoretical
+        let bw = wram_bw_mbps(DpuArch::p21(), Stream::Copy, 16);
+        assert!((bw - 2800.0).abs() < 60.0, "{bw}");
+    }
+
+    #[test]
+    fn add_reaches_1680_mbps() {
+        let bw = wram_bw_mbps(DpuArch::p21(), Stream::Add, 16);
+        assert!((bw - 1680.0).abs() < 40.0, "{bw}");
+    }
+
+    #[test]
+    fn scale_triad_order_of_magnitude_lower() {
+        // paper: SCALE 42.03, TRIAD 61.66 MB/s (multiplication-bound)
+        let scale = wram_bw_mbps(DpuArch::p21(), Stream::Scale, 16);
+        let triad = wram_bw_mbps(DpuArch::p21(), Stream::Triad, 16);
+        assert!((scale - 42.03).abs() < 4.0, "{scale}");
+        assert!((triad - 61.66).abs() < 5.0, "{triad}");
+    }
+
+    #[test]
+    fn wram_bw_pattern_independent_key_obs_3() {
+        // footnote 10: unit-stride, strided, and random WRAM access all
+        // sustain the same bandwidth
+        let arch = DpuArch::p21();
+        let unit = wram_pattern_bw(arch, WramPattern::Unit, 16);
+        let strided = wram_pattern_bw(arch, WramPattern::Strided(7), 16);
+        let random = wram_pattern_bw(arch, WramPattern::Random, 16);
+        assert!((strided - unit).abs() / unit < 1e-9, "{unit} vs {strided}");
+        assert!((random - unit).abs() / unit < 1e-9, "{unit} vs {random}");
+    }
+
+    #[test]
+    fn saturates_at_11() {
+        let b10 = wram_bw_mbps(DpuArch::p21(), Stream::Copy, 10);
+        let b11 = wram_bw_mbps(DpuArch::p21(), Stream::Copy, 11);
+        let b16 = wram_bw_mbps(DpuArch::p21(), Stream::Copy, 16);
+        assert!(b11 > b10);
+        assert!((b16 - b11).abs() / b11 < 0.02);
+    }
+}

@@ -1,0 +1,108 @@
+//! Fig. 10: CPU↔DPU transfer bandwidth sweeps.
+//!
+//! (a) single-DPU transfer size sweep 8 B – 32 MB;
+//! (b) serial / parallel / broadcast aggregate bandwidth for 1–64 DPUs in
+//!     one rank at 32 MB per DPU.
+//!
+//! Small sizes also move real bytes through the [`TransferEngine`] to keep
+//! the functional path exercised; large sizes query the calibrated model
+//! directly.
+
+use crate::arch::DpuArch;
+use crate::dpu::Dpu;
+use crate::system::{Dir, TransferEngine, XferModel};
+
+/// Fig. 10a: (bytes, cpu→dpu MB/s, dpu→cpu MB/s) for one DPU.
+pub fn fig10a_sweep() -> Vec<(usize, f64, f64)> {
+    let m = XferModel::default();
+    let mut out = Vec::new();
+    let mut size = 8usize;
+    while size <= 32 * 1024 * 1024 {
+        out.push((
+            size,
+            m.serial_bw(Dir::CpuToDpu, size) / 1e6,
+            m.serial_bw(Dir::DpuToCpu, size) / 1e6,
+        ));
+        size *= 4;
+    }
+    out
+}
+
+/// Fig. 10b row: aggregate bandwidth (GB/s) of each transfer mode for `n`
+/// DPUs at `bytes` per DPU.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig10bRow {
+    pub n_dpus: u32,
+    pub serial_c2d: f64,
+    pub serial_d2c: f64,
+    pub parallel_c2d: f64,
+    pub parallel_d2c: f64,
+    pub broadcast: f64,
+}
+
+/// Fig. 10b sweep over DPU counts within one rank.
+pub fn fig10b_sweep(bytes: usize, dpu_counts: &[u32]) -> Vec<Fig10bRow> {
+    let m = XferModel::default();
+    dpu_counts
+        .iter()
+        .map(|&n| {
+            let total = n as f64 * bytes as f64;
+            Fig10bRow {
+                n_dpus: n,
+                serial_c2d: total / (n as f64 * m.serial_secs(Dir::CpuToDpu, bytes)) / 1e9,
+                serial_d2c: total / (n as f64 * m.serial_secs(Dir::DpuToCpu, bytes)) / 1e9,
+                parallel_c2d: total / m.parallel_secs(Dir::CpuToDpu, bytes, n) / 1e9,
+                parallel_d2c: total / m.parallel_secs(Dir::DpuToCpu, bytes, n) / 1e9,
+                broadcast: total / m.broadcast_secs(bytes, n) / 1e9,
+            }
+        })
+        .collect()
+}
+
+/// Functional smoke transfer: round-trip `n` i64 per DPU through the
+/// engine and verify the data (used by tests and the harness preamble).
+pub fn roundtrip_check(arch: DpuArch, n_dpus: u32, n: usize) -> bool {
+    let eng = TransferEngine::new(XferModel::default());
+    let mut dpus: Vec<Dpu> = (0..n_dpus).map(|_| Dpu::new(arch)).collect();
+    let bufs: Vec<Vec<i64>> = (0..n_dpus as i64).map(|i| (0..n as i64).map(|j| i * 1000 + j).collect()).collect();
+    eng.push_to(&mut dpus, 0, &bufs);
+    let (back, _) = eng.push_from::<i64>(&dpus, 0, n);
+    back == bufs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10a_monotone_key_obs_7() {
+        let sweep = fig10a_sweep();
+        for w in sweep.windows(2) {
+            assert!(w[1].1 >= w[0].1, "c2d bandwidth must grow with size");
+            assert!(w[1].2 >= w[0].2);
+        }
+        // ends near 330 / 120 MB/s
+        let last = sweep.last().unwrap();
+        assert!((last.1 - 330.0).abs() < 15.0, "{}", last.1);
+        assert!((last.2 - 120.0).abs() < 10.0);
+    }
+
+    #[test]
+    fn fig10b_parallel_grows_serial_flat() {
+        let rows = fig10b_sweep(32 << 20, &[1, 4, 16, 64]);
+        assert!((rows[3].parallel_c2d - 6.68).abs() < 0.2);
+        assert!((rows[3].parallel_d2c - 4.74).abs() < 0.2);
+        assert!((rows[3].broadcast - 16.88).abs() < 0.6);
+        // serial flat
+        assert!((rows[0].serial_c2d - rows[3].serial_c2d).abs() < 1e-9);
+        // parallel monotone
+        for w in rows.windows(2) {
+            assert!(w[1].parallel_c2d > w[0].parallel_c2d);
+        }
+    }
+
+    #[test]
+    fn functional_roundtrip() {
+        assert!(roundtrip_check(DpuArch::p21(), 8, 64));
+    }
+}

@@ -1,0 +1,277 @@
+//! BFS — Breadth-First Search (§4.8). Graph processing; uint64 bit-vectors;
+//! random access; barrier + mutex intra-DPU; **heavy inter-DPU
+//! synchronization** — the frontier is unioned by the host after every
+//! level, which is why BFS scales worst of the suite (§5.1/§5.2).
+//!
+//! Top-down: vertices are range-partitioned; every DPU keeps a local copy
+//! of the visited bit-vector and produces a next-frontier bit-vector from
+//! the neighbor lists of its owned frontier vertices (mutex-protected
+//! updates).
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use crate::arch::{isa, DType, Op};
+use crate::coordinator::{chunk_ranges, PimSet};
+use crate::dpu::Ctx;
+use crate::util::data::rmat_graph;
+
+/// loc-gowalla statistics: ~197 K vertices, ~1.9 M (directed) edges.
+const PAPER_V: usize = 196_591;
+const PAPER_E: usize = 1_900_654;
+
+pub struct Bfs;
+
+impl PrimBench for Bfs {
+    fn name(&self) -> &'static str {
+        "BFS"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Graph processing",
+            sequential: true,
+            strided: false,
+            random: true,
+            ops: "bitwise logic",
+            dtype: "uint64_t",
+            intra_sync: "barrier, mutex",
+            inter_sync: true,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        // keep the three WRAM bit-vectors (3 × V/8 bytes) plus per-tasklet
+        // buffers inside the 64 KB WRAM: cap vertices at 96 K
+        let v = rc.scaled(PAPER_V).min(96 * 1024);
+        let e = rc.scaled(PAPER_E).min(v * 12);
+        let g = rmat_graph(v, e, rc.seed);
+        let src = (0..v).max_by_key(|&u| g.row_ptr[u + 1] - g.row_ptr[u]).unwrap_or(0);
+        let dist_ref = g.bfs_ref(src);
+
+        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let nd = rc.n_dpus as usize;
+        let parts = chunk_ranges(v, nd);
+        let words = v.div_ceil(64);
+
+        // input distribution: per-DPU CSR slices (serial copies — sizes
+        // differ, §5.1.1). MRAM layout per DPU:
+        //   [0]            rebased row_ptr (rows+1 u32)
+        //   [ci_off]       neighbor lists (u32)
+        //   [fr_off]       current frontier bit-vector (words u64)
+        //   [nx_off]       next frontier bit-vector
+        //   [vis_off]      visited bit-vector
+        let mut layouts = Vec::with_capacity(nd);
+        for (d, r) in parts.iter().enumerate() {
+            let base = g.row_ptr[r.start];
+            let rp: Vec<u32> = g.row_ptr[r.start..=r.end].iter().map(|x| x - base).collect();
+            let deg = (g.row_ptr[r.end] - base) as usize;
+            let ci = g.col_idx[base as usize..base as usize + deg].to_vec();
+            let ci_off = (rp.len() * 4 + 7) & !7;
+            let fr_off = ci_off + ((deg * 4 + 7) & !7);
+            let nx_off = fr_off + words * 8;
+            let vis_off = nx_off + words * 8;
+            set.copy_to(d, 0, &rp);
+            set.copy_to(d, ci_off, &ci);
+            // zero visited + next
+            set.copy_to(d, nx_off, &vec![0u64; 2 * words]);
+            layouts.push((r.clone(), ci_off, fr_off, nx_off, vis_off));
+        }
+
+        // frontier bootstrap
+        let mut frontier = vec![0u64; words];
+        frontier[src / 64] |= 1 << (src % 64);
+        let mut dist = vec![u32::MAX; v];
+        dist[src] = 0;
+        let mut level = 0u32;
+        let mut total_instrs = 0u64;
+
+        let per_edge = (2 * isa::WRAM_LS + isa::ADDR_CALC) as u64
+            + isa::op_instrs(DType::U64, Op::Bitwise) as u64;
+
+        loop {
+            // distribute the current frontier (inter-DPU phase). The MRAM
+            // destinations differ per DPU (CSR slices have different
+            // sizes), so these are serial per-DPU copies, not a broadcast.
+            let frontier_now = frontier.clone();
+            for (d, (_, _, fr_off, ..)) in layouts.iter().enumerate() {
+                set.copy_to_inter(d, *fr_off, &frontier_now);
+            }
+
+            let layouts_ref = &layouts;
+            let stats = set.launch(rc.n_tasklets, |d, ctx: &mut Ctx| {
+                let (rows, ci_off, fr_off, nx_off, vis_off) = layouts_ref[d].clone();
+                let n_rows = rows.len();
+                // shared WRAM bit-vectors
+                let wfr = ctx.mem_alloc_shared(1, words * 8);
+                let wnx = ctx.mem_alloc_shared(2, words * 8);
+                let wvis = ctx.mem_alloc_shared(3, words * 8);
+                let wtmp = ctx.mem_alloc(1024);
+                // tasklet 0 stages the bit-vectors MRAM→WRAM
+                if ctx.tasklet_id == 0 {
+                    let mut off = 0;
+                    while off < words * 8 {
+                        let take = (words * 8 - off).min(1024);
+                        ctx.mram_read(fr_off + off, wfr + off, take);
+                        ctx.mram_read(nx_off + off, wnx + off, take);
+                        ctx.mram_read(vis_off + off, wvis + off, take);
+                        off += take;
+                    }
+                    // visited |= frontier (mark current level as seen)
+                    let fr: Vec<u64> = ctx.wram_get(wfr, words);
+                    let mut vis: Vec<u64> = ctx.wram_get(wvis, words);
+                    for (a, b) in vis.iter_mut().zip(&fr) {
+                        *a |= *b;
+                    }
+                    ctx.wram_set(wvis, &vis);
+                    ctx.charge_ops(DType::U64, Op::Bitwise, words as u64);
+                }
+                ctx.barrier(0);
+
+                let fr: Vec<u64> = ctx.wram_get(wfr, words);
+                let vis: Vec<u64> = ctx.wram_get(wvis, words);
+                let my = chunk_ranges(n_rows, ctx.n_tasklets as usize)
+                    [ctx.tasklet_id as usize]
+                    .clone();
+                for lr in my {
+                    let gv = rows.start + lr;
+                    ctx.charge_ops(DType::U64, Op::Bitwise, 1);
+                    if fr[gv / 64] & (1 << (gv % 64)) == 0 {
+                        continue;
+                    }
+                    // stream this vertex's neighbor list
+                    // row_ptr pair (aligned fetch)
+                    let rp0 = (lr * 4) & !7;
+                    ctx.mram_read(rp0, wtmp, 16.min(1024));
+                    let wv: Vec<u32> = ctx.wram_get(wtmp, 4);
+                    let idx = (lr * 4 - rp0) / 4;
+                    let (s, e) = (wv[idx] as usize, wv[idx + 1] as usize);
+                    ctx.compute(4);
+                    let mut k = s;
+                    while k < e {
+                        let k0 = k & !1;
+                        let cnt = (e - k).min(256 - (k - k0));
+                        let span = (k - k0 + cnt + 1) & !1;
+                        ctx.mram_read(ci_off + k0 * 4, wtmp, span * 4);
+                        let nbrs: Vec<u32> = ctx.wram_get(wtmp, span);
+                        for i in 0..cnt {
+                            let w = nbrs[k - k0 + i] as usize;
+                            // visited test + next-frontier update
+                            if vis[w / 64] & (1 << (w % 64)) == 0 {
+                                ctx.mutex_lock(0);
+                                ctx.wram(|wr| {
+                                    let words_mut = crate::util::pod::cast_slice_mut::<u64>(
+                                        &mut wr[wnx..wnx + words * 8],
+                                    );
+                                    words_mut[w / 64] |= 1 << (w % 64);
+                                });
+                                ctx.charge_ops(DType::U64, Op::Bitwise, 2);
+                                ctx.mutex_unlock(0);
+                            }
+                        }
+                        ctx.compute(cnt as u64 * per_edge);
+                        k += cnt;
+                    }
+                }
+
+                ctx.barrier(1);
+                // tasklet 0 writes back next + visited
+                if ctx.tasklet_id == 0 {
+                    let mut off = 0;
+                    while off < words * 8 {
+                        let take = (words * 8 - off).min(1024);
+                        ctx.mram_write(wnx + off, nx_off + off, take);
+                        ctx.mram_write(wvis + off, vis_off + off, take);
+                        off += take;
+                    }
+                }
+            });
+            total_instrs += stats.total_instrs();
+
+            // host gathers per-DPU next frontiers and unions sequentially
+            level += 1;
+            let mut next = vec![0u64; words];
+            for (d, (.., nx_off, _)) in layouts.iter().enumerate() {
+                let part = set.copy_from_inter::<u64>(d, *nx_off, words);
+                for (a, b) in next.iter_mut().zip(&part) {
+                    *a |= *b;
+                }
+                // zero the DPU's next-frontier for the following level
+                set.copy_to_inter(d, *nx_off, &vec![0u64; words]);
+            }
+            set.host_merge((nd * words * 8) as u64, (nd * words) as u64);
+
+            // strip already-visited, assign distances
+            let mut any = false;
+            for w in 0..words {
+                let mut bits = next[w];
+                // remove vertices already at a distance
+                for b in 0..64 {
+                    let vtx = w * 64 + b;
+                    if bits & (1 << b) != 0 {
+                        if vtx < v && dist[vtx] == u32::MAX {
+                            dist[vtx] = level;
+                            any = true;
+                        } else {
+                            bits &= !(1 << b);
+                        }
+                    }
+                }
+                next[w] = bits;
+            }
+            frontier = next;
+            if !any {
+                break;
+            }
+        }
+
+        let verified = dist == dist_ref;
+
+        BenchResult {
+            name: self.name(),
+            breakdown: set.metrics,
+            verified,
+            work_items: g.n_edges() as u64,
+            dpu_instrs: total_instrs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verifies_small() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.002,
+            ..RunConfig::rank_default()
+        };
+        let r = Bfs.run(&rc);
+        assert!(r.verified);
+        assert!(r.breakdown.inter_dpu > 0.0, "BFS must pay inter-DPU sync");
+    }
+
+    #[test]
+    fn inter_dpu_grows_with_dpus_key_obs_16() {
+        let mk = |nd: u32| {
+            let rc = RunConfig {
+                n_dpus: nd,
+                scale: 0.002,
+                ..RunConfig::rank_default()
+            };
+            Bfs.run(&rc).breakdown.inter_dpu
+        };
+        assert!(mk(16) > mk(2), "frontier union cost scales with DPU count");
+    }
+
+    #[test]
+    fn single_dpu_correct() {
+        let rc = RunConfig {
+            n_dpus: 1,
+            n_tasklets: 8,
+            scale: 0.001,
+            ..RunConfig::rank_default()
+        };
+        assert!(Bfs.run(&rc).verified);
+    }
+}

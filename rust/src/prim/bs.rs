@@ -1,0 +1,172 @@
+//! BS — Binary Search (§4.6). Data analytics; int64; sequential query
+//! stream + random array probes; no synchronization. The sorted array is
+//! replicated on every DPU; query values are partitioned.
+//!
+//! Random probes into the MRAM-resident array use fine-grained 8-B DMA —
+//! the access pattern that makes BS weak on GPUs (uncoalescible) and is
+//! why the 640-DPU system already beats the Titan V on it (§5.2).
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use crate::arch::{isa, DType, Op};
+use crate::coordinator::{chunk_ranges, PimSet};
+use crate::dpu::Ctx;
+use crate::util::data::sorted_with_queries;
+
+/// Paper dataset (Table 3): 2 M-element sorted array, 256 K queries.
+const PAPER_N: usize = 2_000_000;
+const PAPER_Q: usize = 262_144;
+
+pub struct Bs;
+
+impl PrimBench for Bs {
+    fn name(&self) -> &'static str {
+        "BS"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Data analytics",
+            sequential: true,
+            strided: false,
+            random: true,
+            ops: "compare",
+            dtype: "int64_t",
+            intra_sync: "",
+            inter_sync: false,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        let n = rc.scaled(PAPER_N);
+        let q = rc.scaled(PAPER_Q);
+        let (arr, queries) = sorted_with_queries(n, q, rc.seed);
+
+        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let nd = rc.n_dpus as usize;
+        // the array is replicated in each DPU (CPU-DPU cost grows with
+        // DPU count — the paper's Fig. 13 note)
+        set.broadcast(0, &arr);
+        let arr_bytes = n * 8;
+        // queries partitioned equally
+        let per_q = q.div_ceil(nd);
+        let qbufs: Vec<Vec<i64>> = (0..nd)
+            .map(|d| {
+                let lo = (d * per_q).min(q);
+                let hi = ((d + 1) * per_q).min(q);
+                let mut v = queries[lo..hi].to_vec();
+                v.resize(per_q, arr[0]); // pad with a findable value
+                v
+            })
+            .collect();
+        set.push_to(arr_bytes, &qbufs);
+        let out_off = arr_bytes + per_q * 8;
+
+        let per_step = (2 * isa::ADDR_CALC + isa::LOOP_CTRL) as u64
+            + isa::op_instrs(DType::I64, Op::Cmp) as u64;
+
+        let stats = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+            let wq = ctx.mem_alloc(1024);
+            let we = ctx.mem_alloc(8);
+            let wo = ctx.mem_alloc(8);
+            let my = chunk_ranges(per_q, ctx.n_tasklets as usize)[ctx.tasklet_id as usize].clone();
+            let mut k = my.start;
+            while k < my.end {
+                let cnt = (my.end - k).min(128);
+                ctx.mram_read(arr_bytes + k * 8, wq, ((cnt * 8 + 7) & !7).max(8));
+                let qs: Vec<i64> = ctx.wram_get(wq, cnt);
+                for (i, qv) in qs.iter().enumerate() {
+                    // binary search with fine-grained MRAM probes
+                    let (mut lo, mut hi) = (0usize, n);
+                    let mut pos = -1i64;
+                    while lo < hi {
+                        let mid = (lo + hi) / 2;
+                        ctx.mram_read(mid * 8, we, 8);
+                        let v: Vec<i64> = ctx.wram_get(we, 1);
+                        ctx.compute(per_step);
+                        match v[0].cmp(qv) {
+                            std::cmp::Ordering::Equal => {
+                                pos = mid as i64;
+                                break;
+                            }
+                            std::cmp::Ordering::Less => lo = mid + 1,
+                            std::cmp::Ordering::Greater => hi = mid,
+                        }
+                    }
+                    ctx.wram_set(wo, &[pos]);
+                    ctx.mram_write(wo, out_off + (k + i) * 8, 8);
+                }
+                k += cnt;
+            }
+        });
+
+        let out = set.push_from::<i64>(out_off, per_q);
+        let mut verified = true;
+        'outer: for d in 0..nd {
+            let lo = (d * per_q).min(q);
+            let hi = ((d + 1) * per_q).min(q);
+            for (i, gq) in (lo..hi).enumerate() {
+                let pos = out[d][i];
+                if pos < 0 || arr[pos as usize] != queries[gq] {
+                    verified = false;
+                    break 'outer;
+                }
+            }
+        }
+
+        BenchResult {
+            name: self.name(),
+            breakdown: set.metrics,
+            verified,
+            work_items: q as u64,
+            dpu_instrs: stats.total_instrs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verifies_small() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.001,
+            ..RunConfig::rank_default()
+        };
+        let r = Bs.run(&rc);
+        assert!(r.verified);
+    }
+
+    #[test]
+    fn cpu_dpu_does_not_shrink_with_more_dpus() {
+        // the replicated array makes input volume grow with DPU count
+        let mk = |nd: u32| {
+            let rc = RunConfig {
+                n_dpus: nd,
+                scale: 0.001,
+                ..RunConfig::rank_default()
+            };
+            Bs.run(&rc).breakdown.cpu_dpu
+        };
+        assert!(mk(16) >= mk(4) * 0.9);
+    }
+
+    #[test]
+    fn memory_bound_scaling_limited_past_8_tasklets() {
+        // BS does one comparison per probed element → fine-grained-DMA
+        // bound; paper sees only 3% gain from 8 → 16 tasklets
+        let mk = |t: u32| {
+            let rc = RunConfig {
+                n_dpus: 1,
+                n_tasklets: t,
+                scale: 0.0005,
+                ..RunConfig::rank_default()
+            };
+            Bs.run(&rc).breakdown.dpu
+        };
+        let t8 = mk(8);
+        let t16 = mk(16);
+        assert!(t8 / t16 < 1.30, "{}", t8 / t16);
+    }
+}

@@ -1,0 +1,145 @@
+//! Shared benchmark infrastructure: run configuration, results, the
+//! `PrimBench` trait, and the Table 2 taxonomy.
+
+use crate::arch::SystemConfig;
+use crate::coordinator::TimeBreakdown;
+
+/// Run configuration for a PrIM benchmark.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub sys: SystemConfig,
+    /// DPUs to allocate.
+    pub n_dpus: u32,
+    /// Tasklets per DPU.
+    pub n_tasklets: u32,
+    /// Dataset scale factor relative to the paper's Table 3 sizes
+    /// (1.0 = paper size; the harness defaults keep full-suite functional
+    /// simulation laptop-tractable and EXPERIMENTS.md records the factor).
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl RunConfig {
+    /// One-rank default: 64 DPUs, 16 tasklets, quarter-scale data.
+    pub fn rank_default() -> Self {
+        RunConfig {
+            sys: SystemConfig::p21_rank(),
+            n_dpus: 64,
+            n_tasklets: 16,
+            scale: 0.25,
+            seed: 42,
+        }
+    }
+
+    /// Single-DPU default.
+    pub fn one_dpu() -> Self {
+        RunConfig {
+            n_dpus: 1,
+            ..Self::rank_default()
+        }
+    }
+
+    /// Scale an element count, keeping it positive and 8-aligned.
+    pub fn scaled(&self, paper_n: usize) -> usize {
+        (((paper_n as f64 * self.scale) as usize).max(16) + 7) & !7
+    }
+}
+
+/// Outcome of one benchmark run.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: &'static str,
+    pub breakdown: TimeBreakdown,
+    /// Output checked against the native reference.
+    pub verified: bool,
+    /// Problem-size indicator (elements / queries / cells) for
+    /// throughput reporting.
+    pub work_items: u64,
+    /// Total DPU pipeline instructions (from the replayed timings).
+    pub dpu_instrs: u64,
+}
+
+/// Table 2 row: the workload taxonomy.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchTraits {
+    pub domain: &'static str,
+    pub sequential: bool,
+    pub strided: bool,
+    pub random: bool,
+    pub ops: &'static str,
+    pub dtype: &'static str,
+    pub intra_sync: &'static str,
+    pub inter_sync: bool,
+}
+
+/// A PrIM workload.
+pub trait PrimBench: Sync {
+    fn name(&self) -> &'static str;
+    fn traits(&self) -> BenchTraits;
+    /// Best-performing tasklet count from the Fig. 12 study (16 for most;
+    /// 8 for the mutex-heavy HST-L / TRNS step 3).
+    fn best_tasklets(&self) -> u32 {
+        16
+    }
+    fn run(&self, rc: &RunConfig) -> BenchResult;
+}
+
+/// All 16 benchmarks in the paper's Table 2 order.
+pub fn all_benches() -> Vec<Box<dyn PrimBench>> {
+    vec![
+        Box::new(super::va::Va),
+        Box::new(super::gemv::Gemv),
+        Box::new(super::spmv::Spmv),
+        Box::new(super::sel::Sel),
+        Box::new(super::uni::Uni),
+        Box::new(super::bs::Bs),
+        Box::new(super::ts::Ts),
+        Box::new(super::bfs::Bfs),
+        Box::new(super::mlp::Mlp),
+        Box::new(super::nw::Nw),
+        Box::new(super::hst::HstS),
+        Box::new(super::hst::HstL),
+        Box::new(super::red::Red::default()),
+        Box::new(super::scan::ScanSsa),
+        Box::new(super::scan::ScanRss),
+        Box::new(super::trns::Trns),
+    ]
+}
+
+/// Look up a benchmark by its short name (case-insensitive).
+pub fn bench_by_name(name: &str) -> Option<Box<dyn PrimBench>> {
+    let lname = name.to_ascii_lowercase();
+    all_benches().into_iter().find(|b| b.name().to_ascii_lowercase() == lname)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sixteen_benchmarks_registered() {
+        let bs = all_benches();
+        assert_eq!(bs.len(), 16);
+        let names: Vec<&str> = bs.iter().map(|b| b.name()).collect();
+        for expected in [
+            "VA", "GEMV", "SpMV", "SEL", "UNI", "BS", "TS", "BFS", "MLP", "NW", "HST-S",
+            "HST-L", "RED", "SCAN-SSA", "SCAN-RSS", "TRNS",
+        ] {
+            assert!(names.contains(&expected), "missing {expected}");
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(bench_by_name("va").is_some());
+        assert!(bench_by_name("Scan-SSA").is_some());
+        assert!(bench_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn scaled_is_aligned() {
+        let rc = RunConfig::rank_default();
+        assert_eq!(rc.scaled(1000) % 8, 0);
+        assert!(rc.scaled(1) >= 16);
+    }
+}

@@ -1,0 +1,163 @@
+//! GEMV — Matrix-Vector Multiply (§4.2). Dense linear algebra; uint32;
+//! sequential reads; no synchronization. Rows are partitioned across DPUs
+//! (linear assignment), the input vector is replicated on every DPU.
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use crate::arch::{isa, DType, Op};
+use crate::coordinator::{chunk_ranges, PimSet};
+use crate::dpu::Ctx;
+use crate::util::Rng;
+
+/// Paper dataset (Table 3, 1 DPU – 1 rank): 8192 × 1024.
+const PAPER_M: usize = 8192;
+pub const N_COLS: usize = 1024;
+const BLOCK: usize = 1024;
+const EPB: usize = BLOCK / 4;
+
+pub struct Gemv;
+
+/// Shared GEMV kernel body, reused by MLP (§4.9). Computes
+/// `y[r] = Σ_c m[r][c] * x[c]` for the DPU's row chunk living in MRAM at
+/// `mat_off`, with x at `x_off` (n u32 words), writing y at `y_off`.
+pub fn gemv_kernel(ctx: &mut Ctx, rows: usize, n: usize, mat_off: usize, x_off: usize, y_off: usize, relu: bool) {
+    let n_blocks = n / EPB;
+    let wm = ctx.mem_alloc(BLOCK);
+    let wx = ctx.mem_alloc(BLOCK);
+    let wy = ctx.mem_alloc(8);
+    let arch = ctx.arch();
+    let instrs_per_elem = (2 * isa::WRAM_LS + isa::LOOP_CTRL) as u64
+        + isa::op_instrs_for(&arch, DType::U32, Op::Mul) as u64
+        + isa::op_instrs_for(&arch, DType::U32, Op::Add) as u64;
+    // consecutive row subset per tasklet
+    let ranges = chunk_ranges(rows, ctx.n_tasklets as usize);
+    let my = ranges[ctx.tasklet_id as usize].clone();
+    for r in my {
+        let mut acc: u32 = 0;
+        for blk in 0..n_blocks {
+            ctx.mram_read(mat_off + (r * n + blk * EPB) * 4, wm, BLOCK);
+            ctx.mram_read(x_off + blk * EPB * 4, wx, BLOCK);
+            // zero-copy dot-product over the two staged blocks
+            ctx.wram_zip::<u32>(wx, wm, EPB, |xv, mv| {
+                for (a, b) in mv.iter().zip(xv) {
+                    acc = acc.wrapping_add(a.wrapping_mul(*b));
+                }
+            });
+            ctx.compute(EPB as u64 * instrs_per_elem);
+        }
+        let out = if relu {
+            // ReLU on signed view (MLP): max(acc, 0)
+            if (acc as i32) < 0 {
+                0
+            } else {
+                acc
+            }
+        } else {
+            acc
+        };
+        if relu {
+            ctx.charge_ops(DType::I32, Op::Cmp, 1);
+        }
+        // accumulate one output word; pad store to the 8-B DMA minimum
+        ctx.wram_set(wy, &[out, 0]);
+        ctx.mram_write(wy, y_off + r * 8, 8);
+    }
+}
+
+impl PrimBench for Gemv {
+    fn name(&self) -> &'static str {
+        "GEMV"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Dense linear algebra",
+            sequential: true,
+            strided: false,
+            random: false,
+            ops: "add, mul",
+            dtype: "uint32_t",
+            intra_sync: "",
+            inter_sync: false,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        let nd = rc.n_dpus as usize;
+        // scale rows; keep N_COLS fixed like the paper's 1-rank dataset
+        let m = rc.scaled(PAPER_M).div_ceil(nd) * nd;
+        let n = N_COLS;
+        let mut rng = Rng::new(rc.seed);
+        let mat: Vec<u32> = (0..m * n).map(|_| rng.next_u32() >> 16).collect();
+        let x: Vec<u32> = (0..n).map(|_| rng.next_u32() >> 16).collect();
+
+        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let rows_per = m / nd;
+        let mat_bufs: Vec<Vec<u32>> =
+            (0..nd).map(|d| mat[d * rows_per * n..(d + 1) * rows_per * n].to_vec()).collect();
+        let mat_bytes = rows_per * n * 4;
+        set.push_to(0, &mat_bufs);
+        set.broadcast(mat_bytes, &x);
+        let y_off = mat_bytes + n * 4;
+
+        let stats = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+            gemv_kernel(ctx, rows_per, n, 0, mat_bytes, y_off, false);
+        });
+
+        let out = set.push_from::<u32>(y_off, rows_per * 2);
+        let y: Vec<u32> = out.iter().flat_map(|c| c.iter().step_by(2).copied()).collect();
+
+        // reference
+        let mut verified = true;
+        for r in 0..m {
+            let mut acc: u32 = 0;
+            for c in 0..n {
+                acc = acc.wrapping_add(mat[r * n + c].wrapping_mul(x[c]));
+            }
+            if y[r] != acc {
+                verified = false;
+                break;
+            }
+        }
+
+        BenchResult {
+            name: self.name(),
+            breakdown: set.metrics,
+            verified,
+            work_items: (m * n) as u64,
+            dpu_instrs: stats.total_instrs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verifies_small() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.01,
+            ..RunConfig::rank_default()
+        };
+        let r = Gemv.run(&rc);
+        assert!(r.verified);
+        assert!(r.breakdown.dpu > 0.0);
+    }
+
+    #[test]
+    fn mul_heavy_slower_than_va_per_byte() {
+        // GEMV uses 32-bit mul (29 instrs) → far lower throughput per
+        // element than VA's native add
+        let rc = RunConfig {
+            n_dpus: 2,
+            scale: 0.004,
+            ..RunConfig::rank_default()
+        };
+        let g = Gemv.run(&rc);
+        let per_elem = g.breakdown.dpu / g.work_items as f64;
+        let v = super::super::va::Va.run(&rc);
+        let va_per_elem = v.breakdown.dpu / v.work_items as f64;
+        assert!(per_elem > 2.0 * va_per_elem, "{per_elem} vs {va_per_elem}");
+    }
+}

@@ -1,0 +1,284 @@
+//! HST — Image Histogram (§4.11), both variants.
+//!
+//! * **HST-S**: per-tasklet private WRAM histograms, barrier, parallel
+//!   merge (tasklet t reduces bin range t across all private copies).
+//!   Histogram size limited to ~256 bins × 16 tasklets by WRAM.
+//! * **HST-L**: one shared WRAM histogram per DPU, every update inside a
+//!   mutex — scales worse with tasklets (best at 8, Key Obs. 11) but
+//!   supports larger histograms.
+//!
+//! §9.2.2 (Fig. 20 in our harness) compares the two across histogram
+//! sizes via [`run_hst`]'s `bins` parameter.
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use crate::arch::{isa, DType, Op};
+use crate::coordinator::PimSet;
+use crate::dpu::Ctx;
+use crate::util::data::natural_image;
+use crate::util::pod::cast_slice_mut;
+
+/// Paper dataset (Table 3): 1536 × 1024 natural image, 12-bit depth.
+const PAPER_PIXELS: usize = 1536 * 1024;
+const DEPTH_BITS: u32 = 12;
+const BLOCK: usize = 1024;
+const EPB: usize = BLOCK / 4;
+
+#[derive(Clone, Copy, PartialEq)]
+pub enum HstKind {
+    Short,
+    Long,
+}
+
+/// Run either histogram variant with `bins` buckets. Pixel values are
+/// 12-bit; bucket = value >> (12 - log2(bins)).
+pub fn run_hst(kind: HstKind, name: &'static str, rc: &RunConfig, bins: usize) -> BenchResult {
+    assert!(bins.is_power_of_two() && bins <= 4096);
+    let shift = DEPTH_BITS - (bins as f64).log2() as u32;
+    let n = rc.scaled(PAPER_PIXELS);
+    let pixels = natural_image(n, DEPTH_BITS, rc.seed);
+
+    let mut hist_ref = vec![0u32; bins];
+    for &p in &pixels {
+        hist_ref[(p >> shift) as usize] += 1;
+    }
+
+    let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+    let nd = rc.n_dpus as usize;
+    let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
+    // pad with a sentinel bucket-0 value and correct afterwards
+    let pad_count = per * nd - n;
+    let bufs: Vec<Vec<u32>> = (0..nd)
+        .map(|d| {
+            let lo = (d * per).min(n);
+            let hi = ((d + 1) * per).min(n);
+            let mut v = pixels[lo..hi].to_vec();
+            v.resize(per, 0);
+            v
+        })
+        .collect();
+    set.push_to(0, &bufs);
+    let out_off = per * 4;
+
+    let per_pixel = (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
+        + isa::op_instrs(DType::U32, Op::Add) as u64
+        + 1; // shift
+
+    let n_blocks = per / EPB;
+    let stats = set.launch(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+        let t = ctx.tasklet_id as usize;
+        let nt = ctx.n_tasklets as usize;
+        let win = ctx.mem_alloc(BLOCK);
+        match kind {
+            HstKind::Short => {
+                // private histograms in one shared region (so the merge
+                // phase can read all of them)
+                let hists = ctx.mem_alloc_shared(1, nt * bins * 4);
+                let my_hist = hists + t * bins * 4;
+                let mut local = vec![0u32; bins];
+                let mut blk = t;
+                while blk < n_blocks {
+                    ctx.mram_read(blk * BLOCK, win, BLOCK);
+                    let px: Vec<u32> = ctx.wram_get(win, EPB);
+                    for p in px {
+                        local[(p >> shift) as usize] += 1;
+                    }
+                    ctx.compute(EPB as u64 * per_pixel);
+                    blk += nt;
+                }
+                ctx.wram_set(my_hist, &local);
+                ctx.barrier(0);
+                // parallel merge: tasklet t reduces its bin range (ranges
+                // rounded to even bins so MRAM writes stay 8-B aligned)
+                let lo = (t * bins / nt) & !1;
+                let hi = if t + 1 == nt { bins } else { ((t + 1) * bins / nt) & !1 };
+                if hi > lo {
+                    let mut merged = vec![0u32; hi - lo];
+                    for other in 0..nt {
+                        let h: Vec<u32> = ctx.wram_get(hists + other * bins * 4 + lo * 4, hi - lo);
+                        for (m, v) in merged.iter_mut().zip(&h) {
+                            *m += v;
+                        }
+                    }
+                    ctx.charge_ops(DType::U32, Op::Add, ((hi - lo) * nt) as u64);
+                    // write this bin range to MRAM (8-B aligned slices)
+                    ctx.wram_set(hists + lo * 4, &merged);
+                    let lo_b = (lo * 4) & !7;
+                    let hi_b = (hi * 4 + 7) & !7;
+                    ctx.mram_write(hists + lo_b, out_off + lo_b, hi_b - lo_b);
+                }
+            }
+            HstKind::Long => {
+                // one shared histogram; mutex-protected updates
+                let hist = ctx.mem_alloc_shared(1, bins * 4);
+                let mut blk = t;
+                while blk < n_blocks {
+                    ctx.mram_read(blk * BLOCK, win, BLOCK);
+                    let px: Vec<u32> = ctx.wram_get(win, EPB);
+                    for p in px {
+                        let b = (p >> shift) as usize;
+                        ctx.mutex_lock(0);
+                        ctx.wram(|w| {
+                            cast_slice_mut::<u32>(&mut w[hist..hist + bins * 4])[b] += 1;
+                        });
+                        ctx.charge_ops(DType::U32, Op::Add, 1);
+                        ctx.mutex_unlock(0);
+                    }
+                    ctx.compute(EPB as u64 * (per_pixel - 1));
+                    blk += nt;
+                }
+                ctx.barrier(0);
+                if t == 0 {
+                    let mut off = 0;
+                    while off < bins * 4 {
+                        let take = (bins * 4 - off).min(1024);
+                        ctx.mram_write(hist + off, out_off + off, take.max(8));
+                        off += take;
+                    }
+                }
+            }
+        }
+    });
+
+    // host: gather per-DPU histograms (equal sizes → parallel) and merge
+    let parts = set.push_from::<u32>(out_off, bins);
+    let mut hist = vec![0u32; bins];
+    for p in &parts {
+        for (h, v) in hist.iter_mut().zip(p) {
+            *h += v;
+        }
+    }
+    set.host_merge((nd * bins * 4) as u64, (nd * bins) as u64);
+    // padding correction: pad pixels counted in bucket 0
+    hist[0] -= pad_count as u32;
+
+    let verified = hist == hist_ref;
+
+    BenchResult {
+        name,
+        breakdown: set.metrics,
+        verified,
+        work_items: n as u64,
+        dpu_instrs: stats.total_instrs(),
+    }
+}
+
+pub struct HstS;
+
+impl PrimBench for HstS {
+    fn name(&self) -> &'static str {
+        "HST-S"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Image processing",
+            sequential: true,
+            strided: false,
+            random: true,
+            ops: "add",
+            dtype: "uint32_t",
+            intra_sync: "barrier",
+            inter_sync: true,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        run_hst(HstKind::Short, "HST-S", rc, 256)
+    }
+}
+
+pub struct HstL;
+
+impl PrimBench for HstL {
+    fn name(&self) -> &'static str {
+        "HST-L"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Image processing",
+            sequential: true,
+            strided: false,
+            random: true,
+            ops: "add",
+            dtype: "uint32_t",
+            intra_sync: "barrier, mutex",
+            inter_sync: true,
+        }
+    }
+
+    fn best_tasklets(&self) -> u32 {
+        8 // mutex contention makes 16 slower (Key Obs. 11)
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        run_hst(HstKind::Long, "HST-L", rc, 256)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hst_s_verifies() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.01,
+            ..RunConfig::rank_default()
+        };
+        assert!(HstS.run(&rc).verified);
+    }
+
+    #[test]
+    fn hst_l_verifies() {
+        let rc = RunConfig {
+            n_dpus: 2,
+            n_tasklets: 8,
+            scale: 0.005,
+            ..RunConfig::rank_default()
+        };
+        assert!(HstL.run(&rc).verified);
+    }
+
+    #[test]
+    fn hst_l_mutex_contention_hurts() {
+        // HST-L at 16 tasklets should NOT be meaningfully faster than at 8
+        // (paper: best at 8)
+        let mk = |t: u32| {
+            let rc = RunConfig {
+                n_dpus: 1,
+                n_tasklets: t,
+                scale: 0.002,
+                ..RunConfig::rank_default()
+            };
+            HstL.run(&rc).breakdown.dpu
+        };
+        let t8 = mk(8);
+        let t16 = mk(16);
+        assert!(t16 > t8 * 0.9, "t8 {t8} t16 {t16}");
+        // while HST-S keeps scaling
+        let mk_s = |t: u32| {
+            let rc = RunConfig {
+                n_dpus: 1,
+                n_tasklets: t,
+                scale: 0.002,
+                ..RunConfig::rank_default()
+            };
+            HstS.run(&rc).breakdown.dpu
+        };
+        assert!(mk_s(16) < mk_s(8));
+    }
+
+    #[test]
+    fn larger_bins_supported_by_hst_l() {
+        let rc = RunConfig {
+            n_dpus: 2,
+            n_tasklets: 8,
+            scale: 0.002,
+            ..RunConfig::rank_default()
+        };
+        let r = run_hst(HstKind::Long, "HST-L", &rc, 4096);
+        assert!(r.verified);
+    }
+}

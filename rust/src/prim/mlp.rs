@@ -1,0 +1,140 @@
+//! MLP — Multilayer Perceptron inference (§4.9). Neural networks; int32;
+//! sequential; each of the 3 fully-connected layers is a GEMV + ReLU
+//! (reusing the GEMV kernel); between layers the host gathers the output
+//! vector chunks and redistributes them as the next layer's input —
+//! the inter-DPU phase that burdens MLP at scale (§5.1).
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::gemv::gemv_kernel;
+use crate::coordinator::PimSet;
+use crate::dpu::Ctx;
+use crate::util::Rng;
+
+/// Paper dataset (Table 3, 1 DPU – 1 rank): 3 layers × 2 K neurons.
+const PAPER_NEURONS: usize = 2048;
+const LAYERS: usize = 3;
+
+pub struct Mlp;
+
+impl PrimBench for Mlp {
+    fn name(&self) -> &'static str {
+        "MLP"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Neural networks",
+            sequential: true,
+            strided: false,
+            random: false,
+            ops: "add, mul, compare",
+            dtype: "int32_t",
+            intra_sync: "",
+            inter_sync: true,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        let nd = rc.n_dpus as usize;
+        // square layers; dimension must be a multiple of 256 (DMA blocks)
+        // and of the DPU count (row partitioning)
+        let unit = 256 * nd / gcd(256, nd);
+        let m = rc.scaled(PAPER_NEURONS).div_ceil(unit) * unit;
+        let mut rng = Rng::new(rc.seed);
+        // small weights so int32 accumulation stays far from overflow
+        let weights: Vec<Vec<u32>> =
+            (0..LAYERS).map(|_| (0..m * m).map(|_| rng.below(5) as u32).collect()).collect();
+        let x0: Vec<u32> = (0..m).map(|_| rng.below(9) as u32).collect();
+
+        // reference forward pass
+        let mut h = x0.clone();
+        for w in &weights {
+            let mut next = vec![0u32; m];
+            for (r, out) in next.iter_mut().enumerate() {
+                let mut acc: u32 = 0;
+                for c in 0..m {
+                    acc = acc.wrapping_add(w[r * m + c].wrapping_mul(h[c]));
+                }
+                *out = if (acc as i32) < 0 { 0 } else { acc };
+            }
+            h = next;
+        }
+        let y_ref = h;
+
+        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let rows_per = m / nd;
+        // MRAM layout per DPU: W1 | W2 | W3 | x | y
+        let wl_bytes = rows_per * m * 4;
+        for (l, w) in weights.iter().enumerate() {
+            let bufs: Vec<Vec<u32>> =
+                (0..nd).map(|d| w[d * rows_per * m..(d + 1) * rows_per * m].to_vec()).collect();
+            set.push_to(l * wl_bytes, &bufs);
+        }
+        let x_off = LAYERS * wl_bytes;
+        let y_off = x_off + m * 4;
+        set.broadcast(x_off, &x0);
+
+        let mut total_instrs = 0u64;
+        for l in 0..LAYERS {
+            let stats = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+                gemv_kernel(ctx, rows_per, m, l * wl_bytes, x_off, y_off, true);
+            });
+            total_instrs += stats.total_instrs();
+            if l + 1 < LAYERS {
+                // host: gather y chunks, rebuild the vector, redistribute
+                let parts = set.push_from_inter::<u32>(y_off, rows_per * 2);
+                let next: Vec<u32> =
+                    parts.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
+                set.host_merge((m * 4) as u64, m as u64);
+                set.broadcast_inter(x_off, &next);
+            }
+        }
+
+        let out = set.push_from::<u32>(y_off, rows_per * 2);
+        let y: Vec<u32> = out.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
+        let verified = y == y_ref;
+
+        BenchResult {
+            name: self.name(),
+            breakdown: set.metrics,
+            verified,
+            work_items: (LAYERS * m * m) as u64,
+            dpu_instrs: total_instrs,
+        }
+    }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verifies_small() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.06,
+            ..RunConfig::rank_default()
+        };
+        let r = Mlp.run(&rc);
+        assert!(r.verified);
+        assert!(r.breakdown.inter_dpu > 0.0, "layer exchange is inter-DPU");
+    }
+
+    #[test]
+    fn single_dpu_no_distribution_overhead() {
+        let rc = RunConfig {
+            n_dpus: 1,
+            scale: 0.06,
+            ..RunConfig::rank_default()
+        };
+        assert!(Mlp.run(&rc).verified);
+    }
+}

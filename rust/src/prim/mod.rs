@@ -1,0 +1,28 @@
+//! The PrIM benchmark suite: 16 workloads (19 kernels) ported 1:1 from the
+//! paper's §4 descriptions onto the simulated UPMEM system.
+//!
+//! Every benchmark (a) generates a deterministic synthetic dataset with the
+//! paper's statistics, (b) distributes it with the same transfer pattern
+//! the paper describes (parallel / serial / broadcast), (c) runs the same
+//! tasklet-level algorithm against the [`crate::dpu::Ctx`] API with the
+//! same synchronization primitives, (d) retrieves and merges results on
+//! the host, and (e) **verifies** the output against a native reference —
+//! returning the paper's four-bucket time breakdown.
+
+pub mod bfs;
+pub mod bs;
+pub mod common;
+pub mod gemv;
+pub mod hst;
+pub mod mlp;
+pub mod nw;
+pub mod red;
+pub mod scan;
+pub mod sel;
+pub mod spmv;
+pub mod trns;
+pub mod ts;
+pub mod uni;
+pub mod va;
+
+pub use common::{all_benches, bench_by_name, BenchResult, BenchTraits, PrimBench, RunConfig};

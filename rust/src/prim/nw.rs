@@ -1,0 +1,354 @@
+//! NW — Needleman-Wunsch global sequence alignment (§4.10).
+//! Bioinformatics; int32; sequential + strided; barrier intra-DPU;
+//! **the heaviest inter-DPU benchmark**: the host exchanges block
+//! boundaries after every anti-diagonal, and the number of active DPUs
+//! varies per diagonal — the sources of NW's sublinear scaling (§5.1).
+//!
+//! Structure: the (L+1)² score matrix is tiled into B×B blocks; blocks on
+//! the same anti-diagonal run in parallel (one per DPU, multiple rounds if
+//! the diagonal is longer than the DPU count); inside a block, tasklets
+//! compute 2×2 sub-blocks in a wavefront with a barrier per sub-diagonal.
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use crate::arch::{isa, DType, Op};
+use crate::coordinator::PimSet;
+use crate::dpu::Ctx;
+use crate::util::data::dna_pair;
+use crate::util::pod::cast_slice_mut;
+
+/// Paper dataset (Table 3, 1 DPU – 1 rank): 2,560 base pairs.
+const PAPER_BPS: usize = 2560;
+const MATCH: i32 = 1;
+const MISMATCH: i32 = -1;
+const GAP: i32 = -2;
+/// Small sub-block edge (paper: 2).
+const SUB: usize = 2;
+
+fn reference_nw(a: &[u8], b: &[u8]) -> Vec<Vec<i32>> {
+    let (la, lb) = (a.len(), b.len());
+    let mut m = vec![vec![0i32; la + 1]; lb + 1];
+    for j in 0..=la {
+        m[0][j] = j as i32 * GAP;
+    }
+    for i in 0..=lb {
+        m[i][0] = i as i32 * GAP;
+    }
+    for i in 1..=lb {
+        for j in 1..=la {
+            let sub = if a[j - 1] == b[i - 1] { MATCH } else { MISMATCH };
+            m[i][j] = (m[i - 1][j - 1] + sub)
+                .max(m[i - 1][j] + GAP)
+                .max(m[i][j - 1] + GAP);
+        }
+    }
+    m
+}
+
+pub struct Nw;
+
+impl PrimBench for Nw {
+    fn name(&self) -> &'static str {
+        "NW"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Bioinformatics",
+            sequential: true,
+            strided: true,
+            random: false,
+            ops: "add, sub, compare",
+            dtype: "int32_t",
+            intra_sync: "barrier",
+            inter_sync: true,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        run_nw(rc, false).0
+    }
+}
+
+/// Run NW; if `longest_diag_only`, time only the diagonal with the most
+/// blocks (the §9.2.1 / Fig. 19 experiment). Returns (result, L).
+pub fn run_nw(rc: &RunConfig, longest_diag_only: bool) -> (BenchResult, usize) {
+    let nd = rc.n_dpus as usize;
+    // large-block edge: paper uses L/#DPUs; cap so the (B+1)² WRAM block
+    // fits; round L up to a whole number of blocks
+    let l0 = rc.scaled(PAPER_BPS);
+    let bsz = (l0 / nd).clamp(8, 96) & !1;
+    let l = l0.div_ceil(bsz) * bsz;
+    let nb = l / bsz;
+    let (a, b) = dna_pair(l, l, rc.seed);
+    let m_ref = reference_nw(&a, &b);
+
+    let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+    // MRAM layout: a | b | top | left | corner | block_out
+    let a_off = 0usize;
+    let seq_bytes = (l + 7) & !7;
+    let b_off = seq_bytes;
+    let top_off = 2 * seq_bytes;
+    let left_off = top_off + ((bsz * 4 + 7) & !7);
+    let corner_off = left_off + ((bsz * 4 + 7) & !7);
+    let out_off = corner_off + 8;
+    set.broadcast(a_off, &a);
+    set.broadcast(b_off, &b);
+
+    // host-side full score matrix
+    let mut m = vec![vec![0i32; l + 1]; l + 1];
+    for j in 0..=l {
+        m[0][j] = j as i32 * GAP;
+    }
+    for i in 0..=l {
+        m[i][0] = i as i32 * GAP;
+    }
+
+    let per_cell = (4 * isa::WRAM_LS + isa::LOOP_CTRL) as u64
+        + 3 * isa::op_instrs(DType::I32, Op::Cmp) as u64
+        + 2 * isa::op_instrs(DType::I32, Op::Add) as u64;
+
+    let mut total_instrs = 0u64;
+    let longest_diag = nb - 1; // 0-based diagonal with nb blocks
+    let mut metrics_longest = crate::coordinator::TimeBreakdown::default();
+
+    for d in 0..(2 * nb - 1) {
+        // blocks (bi, bj) with bi + bj == d
+        let blocks: Vec<(usize, usize)> = (0..nb)
+            .filter_map(|bi| {
+                let bj = d.checked_sub(bi)?;
+                (bj < nb).then_some((bi, bj))
+            })
+            .collect();
+        let metrics_before = set.metrics;
+        for round in blocks.chunks(nd) {
+            // send boundaries to each assigned DPU
+            for (slot, &(bi, bj)) in round.iter().enumerate() {
+                let top: Vec<i32> = (0..bsz).map(|j| m[bi * bsz][bj * bsz + 1 + j]).collect();
+                let left: Vec<i32> = (0..bsz).map(|i| m[bi * bsz + 1 + i][bj * bsz]).collect();
+                let corner = [m[bi * bsz][bj * bsz], 0];
+                set.copy_to_inter(slot, top_off, &top);
+                set.copy_to_inter(slot, left_off, &left);
+                set.copy_to_inter(slot, corner_off, &corner);
+            }
+            let assignment: Vec<(usize, usize)> = round.to_vec();
+            let dpu_ids: Vec<usize> = (0..round.len()).collect();
+            // a wavefront diagonal has at most B/SUB sub-blocks: extra
+            // tasklets only pay barrier overhead (both on real hardware
+            // and in simulator wallclock)
+            let tl = rc.n_tasklets.min((bsz / SUB) as u32).max(1);
+            let stats = set.launch_on(&dpu_ids, tl, |slot, ctx: &mut Ctx| {
+                let (bi, bj) = assignment[slot];
+                nw_block_kernel(
+                    ctx, bsz, bi, bj, a_off, b_off, top_off, left_off, corner_off, out_off,
+                    per_cell,
+                );
+            });
+            total_instrs += stats.total_instrs();
+            // retrieve blocks into the host matrix
+            for (slot, &(bi, bj)) in round.iter().enumerate() {
+                let cells = set.copy_from_inter::<i32>(slot, out_off, bsz * bsz);
+                for i in 0..bsz {
+                    for j in 0..bsz {
+                        m[bi * bsz + 1 + i][bj * bsz + 1 + j] = cells[i * bsz + j];
+                    }
+                }
+                set.host_merge((bsz * bsz * 4) as u64, (bsz * bsz) as u64);
+            }
+        }
+        if longest_diag_only && d == longest_diag {
+            metrics_longest = set.metrics;
+            // subtract everything before this diagonal
+            metrics_longest.dpu -= metrics_before.dpu;
+            metrics_longest.inter_dpu -= metrics_before.inter_dpu;
+            metrics_longest.cpu_dpu -= metrics_before.cpu_dpu;
+            metrics_longest.dpu_cpu -= metrics_before.dpu_cpu;
+        }
+    }
+
+    let verified = m == m_ref;
+    let breakdown = if longest_diag_only { metrics_longest } else { set.metrics };
+    (
+        BenchResult {
+            name: "NW",
+            breakdown,
+            verified,
+            work_items: (l * l) as u64,
+            dpu_instrs: total_instrs,
+        },
+        l,
+    )
+}
+
+/// Compute one B×B block with a tasklet wavefront over SUB×SUB sub-blocks.
+#[allow(clippy::too_many_arguments)]
+fn nw_block_kernel(
+    ctx: &mut Ctx,
+    bsz: usize,
+    bi: usize,
+    bj: usize,
+    a_off: usize,
+    b_off: usize,
+    top_off: usize,
+    left_off: usize,
+    corner_off: usize,
+    out_off: usize,
+    per_cell: u64,
+) {
+    let t = ctx.tasklet_id as usize;
+    let nt = ctx.n_tasklets as usize;
+    let w = bsz + 1;
+    // shared score block (B+1)×(B+1)
+    let wblk = ctx.mem_alloc_shared(1, w * w * 4);
+    let wtmp = ctx.mem_alloc(((bsz * 4 + 7) & !7).max(16));
+    // sequence slices are staged by tasklet 0 and read by all
+    let wseq = ctx.mem_alloc_shared(2, ((bsz + 7) & !7) * 2);
+
+    // tasklet 0 stages boundaries and sequence slices
+    if t == 0 {
+        // top row + corner + left col into the block frame
+        ctx.mram_read(corner_off, wtmp, 8);
+        let c: Vec<i32> = ctx.wram_get(wtmp, 1);
+        ctx.wram(|wr| {
+            cast_slice_mut::<i32>(&mut wr[wblk..wblk + w * w * 4])[0] = c[0];
+        });
+        ctx.mram_read(top_off, wtmp, (bsz * 4 + 7) & !7);
+        let top: Vec<i32> = ctx.wram_get(wtmp, bsz);
+        ctx.mram_read(left_off, wtmp, (bsz * 4 + 7) & !7);
+        let left: Vec<i32> = ctx.wram_get(wtmp, bsz);
+        ctx.wram(|wr| {
+            let blk = cast_slice_mut::<i32>(&mut wr[wblk..wblk + w * w * 4]);
+            for j in 0..bsz {
+                blk[j + 1] = top[j];
+            }
+            for i in 0..bsz {
+                blk[(i + 1) * w] = left[i];
+            }
+        });
+        // sequence slices a[bj*B..], b[bi*B..]
+        let abase = (a_off + bj * bsz) & !7;
+        let ashift = a_off + bj * bsz - abase;
+        ctx.mram_read(abase, wtmp, ((ashift + bsz + 7) & !7).min(1024));
+        let ab: Vec<u8> = ctx.wram_get(wtmp, ashift + bsz);
+        ctx.wram(|wr| {
+            let dst = wseq;
+            wr[dst..dst + bsz].copy_from_slice(&ab[ashift..ashift + bsz]);
+        });
+        let bbase = (b_off + bi * bsz) & !7;
+        let bshift = b_off + bi * bsz - bbase;
+        ctx.mram_read(bbase, wtmp, ((bshift + bsz + 7) & !7).min(1024));
+        let bb: Vec<u8> = ctx.wram_get(wtmp, bshift + bsz);
+        ctx.wram(|wr| {
+            let dst = wseq + ((bsz + 7) & !7);
+            wr[dst..dst + bsz].copy_from_slice(&bb[bshift..bshift + bsz]);
+        });
+        ctx.compute((2 * bsz + 2) as u64);
+    }
+    ctx.barrier(0);
+
+    let aseq: Vec<u8> = ctx.wram_get(wseq, bsz);
+    let bseq: Vec<u8> = ctx.wram_get(wseq + ((bsz + 7) & !7), bsz);
+
+    // wavefront over SUB×SUB sub-blocks
+    let ns = bsz / SUB;
+    for sd in 0..(2 * ns - 1) {
+        let subs: Vec<(usize, usize)> = (0..ns)
+            .filter_map(|si| {
+                let sj = sd.checked_sub(si)?;
+                (sj < ns).then_some((si, sj))
+            })
+            .collect();
+        for (k, &(si, sj)) in subs.iter().enumerate() {
+            if k % nt != t {
+                continue;
+            }
+            ctx.wram(|wr| {
+                let blk = cast_slice_mut::<i32>(&mut wr[wblk..wblk + w * w * 4]);
+                for di in 0..SUB {
+                    for dj in 0..SUB {
+                        let i = si * SUB + di + 1;
+                        let j = sj * SUB + dj + 1;
+                        let sub = if aseq[j - 1] == bseq[i - 1] { MATCH } else { MISMATCH };
+                        blk[i * w + j] = (blk[(i - 1) * w + (j - 1)] + sub)
+                            .max(blk[(i - 1) * w + j] + GAP)
+                            .max(blk[i * w + (j - 1)] + GAP);
+                    }
+                }
+            });
+            ctx.compute((SUB * SUB) as u64 * per_cell);
+        }
+        ctx.barrier(1);
+    }
+
+    // tasklet 0 writes the block (without frame) back to MRAM, row-wise
+    if t == 0 {
+        let row_bytes = (bsz * 4 + 7) & !7;
+        for i in 0..bsz {
+            ctx.wram(|wr| {
+                let blk: Vec<i32> = {
+                    let s = crate::util::pod::cast_slice::<i32>(&wr[wblk..wblk + w * w * 4]);
+                    s[(i + 1) * w + 1..(i + 1) * w + 1 + bsz].to_vec()
+                };
+                crate::util::pod::write_pod_slice(wr, wtmp, &blk);
+            });
+            ctx.mram_write(wtmp, out_off + i * row_bytes, row_bytes);
+        }
+    }
+    ctx.barrier(2);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verifies_small() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.05,
+            ..RunConfig::rank_default()
+        };
+        let (r, _) = run_nw(&rc, false);
+        assert!(r.verified);
+        assert!(r.breakdown.inter_dpu > 0.0, "NW is inter-DPU heavy");
+    }
+
+    #[test]
+    fn single_dpu_verifies() {
+        let rc = RunConfig {
+            n_dpus: 1,
+            n_tasklets: 8,
+            scale: 0.02,
+            ..RunConfig::rank_default()
+        };
+        assert!(run_nw(&rc, false).0.verified);
+    }
+
+    #[test]
+    fn inter_dpu_dominates_at_scale_key_obs_16() {
+        let rc = RunConfig {
+            n_dpus: 8,
+            scale: 0.1,
+            ..RunConfig::rank_default()
+        };
+        let (r, _) = run_nw(&rc, false);
+        assert!(
+            r.breakdown.inter_dpu > r.breakdown.dpu,
+            "inter {} vs dpu {}",
+            r.breakdown.inter_dpu,
+            r.breakdown.dpu
+        );
+    }
+
+    #[test]
+    fn longest_diag_subset_of_total() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.05,
+            ..RunConfig::rank_default()
+        };
+        let (full, _) = run_nw(&rc, false);
+        let (diag, _) = run_nw(&rc, true);
+        assert!(diag.breakdown.dpu <= full.breakdown.dpu);
+        assert!(diag.breakdown.dpu > 0.0);
+    }
+}

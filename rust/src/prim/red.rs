@@ -1,0 +1,224 @@
+//! RED — Reduction (§4.12). Parallel primitives; int64; sequential +
+//! strided; barrier intra-DPU; host merges per-DPU partials.
+//!
+//! Three variants of the final intra-DPU step (§9.2.3 / Fig. 21 in our
+//! harness):
+//! * `Single` — tasklet 0 sums the per-tasklet partials (the version the
+//!   paper ships, since it is never slower);
+//! * `TreeBarrier` — log₂(T) rounds of pairwise adds with a barrier
+//!   between rounds;
+//! * `TreeHandshake` — the same tree with handshake pairs instead of
+//!   barriers.
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use crate::arch::{isa, DType, Op};
+use crate::coordinator::{chunk_ranges, PimSet};
+use crate::dpu::Ctx;
+use crate::util::pod::cast_slice_mut;
+use crate::util::Rng;
+
+/// Paper dataset (Table 3): 6.3 M int64 elements.
+const PAPER_N: usize = 6_300_000;
+const BLOCK: usize = 1024;
+const EPB: usize = BLOCK / 8;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RedVersion {
+    #[default]
+    Single,
+    TreeBarrier,
+    TreeHandshake,
+}
+
+#[derive(Default)]
+pub struct Red {
+    pub version: RedVersion,
+}
+
+impl PrimBench for Red {
+    fn name(&self) -> &'static str {
+        "RED"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Parallel primitives",
+            sequential: true,
+            strided: true,
+            random: false,
+            ops: "add",
+            dtype: "int64_t",
+            intra_sync: "barrier",
+            inter_sync: true,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        run_red(self.version, rc)
+    }
+}
+
+pub fn run_red(version: RedVersion, rc: &RunConfig) -> BenchResult {
+    let n = rc.scaled(PAPER_N);
+    let mut rng = Rng::new(rc.seed);
+    let input = rng.vec_i64(n, 1 << 24);
+    let sum_ref: i64 = input.iter().sum();
+
+    let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+    let nd = rc.n_dpus as usize;
+    let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
+    let bufs: Vec<Vec<i64>> = (0..nd)
+        .map(|d| {
+            let lo = (d * per).min(n);
+            let hi = ((d + 1) * per).min(n);
+            let mut v = input[lo..hi].to_vec();
+            v.resize(per, 0); // additive identity
+            v
+        })
+        .collect();
+    set.push_to(0, &bufs);
+    let out_off = per * 8;
+
+    let per_elem = (isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
+        + isa::op_instrs(DType::I64, Op::Add) as u64;
+    let n_blocks = per / EPB;
+
+    let stats = set.launch(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+        let t = ctx.tasklet_id as usize;
+        let nt = ctx.n_tasklets as usize;
+        let win = ctx.mem_alloc(BLOCK);
+        let slots = ctx.mem_alloc_shared(1, nt * 8);
+        let wres = ctx.mem_alloc(8);
+        // phase 1: local accumulation (block-cyclic)
+        let mut acc = 0i64;
+        let mut blk = t;
+        while blk < n_blocks {
+            ctx.mram_read(blk * BLOCK, win, BLOCK);
+            let v: Vec<i64> = ctx.wram_get(win, EPB);
+            acc += v.iter().sum::<i64>();
+            ctx.compute(EPB as u64 * per_elem);
+            blk += nt;
+        }
+        ctx.wram_set(slots + t * 8, &[acc]);
+        // phase 2: combine partials
+        match version {
+            RedVersion::Single => {
+                ctx.barrier(0);
+                if t == 0 {
+                    let parts: Vec<i64> = ctx.wram_get(slots, nt);
+                    let total: i64 = parts.iter().sum();
+                    ctx.charge_stream(DType::I64, Op::Add, nt as u64);
+                    ctx.wram_set(wres, &[total]);
+                    ctx.mram_write(wres, out_off, 8);
+                }
+            }
+            RedVersion::TreeBarrier => {
+                let mut stride = 1usize;
+                let mut bid = 1u16;
+                while stride < nt {
+                    ctx.barrier(bid);
+                    bid += 1;
+                    if t % (2 * stride) == 0 && t + stride < nt {
+                        ctx.wram(|w| {
+                            let s = cast_slice_mut::<i64>(&mut w[slots..slots + nt * 8]);
+                            s[t] += s[t + stride];
+                        });
+                        ctx.charge_stream(DType::I64, Op::Add, 1);
+                    }
+                    stride *= 2;
+                }
+                ctx.barrier(bid);
+                if t == 0 {
+                    let total: Vec<i64> = ctx.wram_get(slots, 1);
+                    ctx.wram_set(wres, &[total[0]]);
+                    ctx.mram_write(wres, out_off, 8);
+                }
+            }
+            RedVersion::TreeHandshake => {
+                // tasklet t waits for its tree children before adding
+                let mut stride = 1usize;
+                while stride < nt {
+                    if t % (2 * stride) == 0 {
+                        if t + stride < nt {
+                            ctx.handshake_wait_for((t + stride) as u32);
+                            ctx.wram(|w| {
+                                let s = cast_slice_mut::<i64>(&mut w[slots..slots + nt * 8]);
+                                s[t] += s[t + stride];
+                            });
+                            ctx.charge_stream(DType::I64, Op::Add, 1);
+                        }
+                    } else if t % (2 * stride) == stride {
+                        ctx.handshake_notify();
+                        break;
+                    }
+                    stride *= 2;
+                }
+                if t == 0 {
+                    let total: Vec<i64> = ctx.wram_get(slots, 1);
+                    ctx.wram_set(wres, &[total[0]]);
+                    ctx.mram_write(wres, out_off, 8);
+                }
+            }
+        }
+    });
+
+    // host: gather per-DPU sums (8 B each, serial) and reduce
+    let mut total = 0i64;
+    for d in 0..nd {
+        total += set.copy_from::<i64>(d, out_off, 1)[0];
+    }
+    set.host_merge((nd * 8) as u64, nd as u64);
+
+    BenchResult {
+        name: "RED",
+        breakdown: set.metrics,
+        verified: total == sum_ref,
+        work_items: n as u64,
+        dpu_instrs: stats.total_instrs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_versions_verify() {
+        for v in [RedVersion::Single, RedVersion::TreeBarrier, RedVersion::TreeHandshake] {
+            let rc = RunConfig {
+                n_dpus: 4,
+                scale: 0.002,
+                ..RunConfig::rank_default()
+            };
+            let r = run_red(v, &rc);
+            assert!(r.verified, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn tree_versions_with_odd_tasklets() {
+        for v in [RedVersion::TreeBarrier, RedVersion::TreeHandshake] {
+            for nt in [3u32, 5, 7, 12] {
+                let rc = RunConfig {
+                    n_dpus: 2,
+                    n_tasklets: nt,
+                    scale: 0.001,
+                    ..RunConfig::rank_default()
+                };
+                assert!(run_red(v, &rc).verified, "{v:?} nt={nt}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_never_slower_appendix_9_2_3() {
+        let rc = RunConfig {
+            n_dpus: 1,
+            scale: 0.01,
+            ..RunConfig::rank_default()
+        };
+        let single = run_red(RedVersion::Single, &rc).breakdown.dpu;
+        let tree_b = run_red(RedVersion::TreeBarrier, &rc).breakdown.dpu;
+        assert!(single <= tree_b * 1.05, "single {single} tree {tree_b}");
+    }
+}

@@ -1,0 +1,339 @@
+//! SCAN — Prefix Sum (§4.13), both versions.
+//!
+//! * **SCAN-SSA** (Scan-Scan-Add): local exclusive scan per DPU → host
+//!   scans the per-DPU totals → an Add kernel shifts every element.
+//!   Less synchronization; 4N MRAM accesses.
+//! * **SCAN-RSS** (Reduce-Scan-Scan): local reduction per DPU → host scans
+//!   totals → a local scan kernel seeded with the DPU base. One barrier
+//!   more, but only 3N+1 MRAM accesses — wins for large arrays (§9.2.4 /
+//!   Fig. 22 in our harness).
+//!
+//! Intra-DPU, both use the SEL-style handshake chain to propagate tasklet
+//! prefixes.
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use crate::arch::{isa, DType, Op};
+use crate::coordinator::{chunk_ranges, PimSet};
+use crate::dpu::Ctx;
+use crate::util::Rng;
+
+/// Paper dataset (Table 3): 3.8 M int64 elements.
+const PAPER_N: usize = 3_800_000;
+const BLOCK: usize = 1024;
+const EPB: usize = BLOCK / 8;
+
+#[derive(Clone, Copy, PartialEq)]
+pub enum ScanKind {
+    Ssa,
+    Rss,
+}
+
+/// Intra-DPU exclusive scan of `per` elements at MRAM 0 → output at
+/// `out_off`, starting from `base_off` (8-B MRAM cell holding the DPU
+/// base). Tasklet prefix chain via handshake + MRAM slots at `slot_off`.
+fn local_scan_kernel(ctx: &mut Ctx, per: usize, slot_off: usize, out_off: usize, base_off: usize) {
+    let t = ctx.tasklet_id as usize;
+    let nt = ctx.n_tasklets as usize;
+    let win = ctx.mem_alloc(BLOCK);
+    let wout = ctx.mem_alloc(BLOCK);
+    let wslot = ctx.mem_alloc(8);
+    let my = chunk_ranges(per, nt)[t].clone();
+    let per_elem = (2 * isa::WRAM_LS + isa::LOOP_CTRL) as u64
+        + isa::op_instrs(DType::I64, Op::Add) as u64;
+
+    // pass 1: local sum
+    let mut sum = 0i64;
+    let mut k = my.start;
+    while k < my.end {
+        let cnt = (my.end - k).min(EPB);
+        ctx.mram_read(k * 8, win, cnt * 8);
+        let v: Vec<i64> = ctx.wram_get(win, cnt);
+        sum += v.iter().sum::<i64>();
+        ctx.compute(cnt as u64 * per_elem);
+        k += cnt;
+    }
+
+    // chain: receive my prefix base
+    let mut base = if t == 0 {
+        ctx.mram_read(base_off, wslot, 8);
+        let b: Vec<i64> = ctx.wram_get(wslot, 1);
+        b[0]
+    } else {
+        ctx.handshake_wait_for(t as u32 - 1);
+        ctx.mram_read(slot_off + (t - 1) * 8, wslot, 8);
+        ctx.wram_get::<i64>(wslot, 1)[0]
+    };
+    ctx.wram_set(wslot, &[base + sum]);
+    ctx.mram_write(wslot, slot_off + t * 8, 8);
+    if t + 1 < nt {
+        ctx.handshake_notify();
+    }
+
+    // pass 2: exclusive scan writing output
+    let mut k = my.start;
+    while k < my.end {
+        let cnt = (my.end - k).min(EPB);
+        ctx.mram_read(k * 8, win, cnt * 8);
+        let v: Vec<i64> = ctx.wram_get(win, cnt);
+        let mut out = Vec::with_capacity(cnt);
+        for x in v {
+            out.push(base);
+            base += x;
+        }
+        ctx.wram_set(wout, &out);
+        ctx.compute(cnt as u64 * per_elem);
+        ctx.mram_write(wout, out_off + k * 8, cnt * 8);
+        k += cnt;
+    }
+}
+
+pub fn run_scan(kind: ScanKind, name: &'static str, rc: &RunConfig) -> BenchResult {
+    let n = rc.scaled(PAPER_N);
+    let mut rng = Rng::new(rc.seed);
+    let input = rng.vec_i64(n, 1 << 20);
+    // exclusive scan reference
+    let mut scan_ref = Vec::with_capacity(n);
+    let mut acc = 0i64;
+    for &x in &input {
+        scan_ref.push(acc);
+        acc += x;
+    }
+
+    let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+    let nd = rc.n_dpus as usize;
+    let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
+    let bufs: Vec<Vec<i64>> = (0..nd)
+        .map(|d| {
+            let lo = (d * per).min(n);
+            let hi = ((d + 1) * per).min(n);
+            let mut v = input[lo..hi].to_vec();
+            v.resize(per, 0);
+            v
+        })
+        .collect();
+    set.push_to(0, &bufs);
+    let slot_off = per * 8;
+    let base_off = slot_off + rc.n_tasklets as usize * 8;
+    let out_off = base_off + 8;
+    // zero bases
+    let zero = vec![0i64; 1];
+    set.broadcast(base_off, &zero);
+
+    let mut total_instrs = 0u64;
+    match kind {
+        ScanKind::Ssa => {
+            // kernel 1: local scan (base 0)
+            let s1 = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+                local_scan_kernel(ctx, per, slot_off, out_off, base_off);
+            });
+            total_instrs += s1.total_instrs();
+            // host: gather per-DPU totals (last chain slot), scan, send bases
+            let last_slot = slot_off + (rc.n_tasklets as usize - 1) * 8;
+            let mut bases = Vec::with_capacity(nd);
+            let mut running = 0i64;
+            for d in 0..nd {
+                bases.push(running);
+                running += set.copy_from_inter::<i64>(d, last_slot, 1)[0];
+            }
+            set.host_merge((nd * 8) as u64, nd as u64);
+            for (d, b) in bases.iter().enumerate() {
+                set.copy_to_inter(d, base_off, &[*b]);
+            }
+            // kernel 2: Add base to every output element
+            let per_elem = (2 * isa::WRAM_LS + isa::LOOP_CTRL) as u64
+                + isa::op_instrs(DType::I64, Op::Add) as u64;
+            let s2 = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+                let win = ctx.mem_alloc(BLOCK);
+                let wb = ctx.mem_alloc(8);
+                ctx.mram_read(base_off, wb, 8);
+                let base = ctx.wram_get::<i64>(wb, 1)[0];
+                let my = chunk_ranges(per, ctx.n_tasklets as usize)
+                    [ctx.tasklet_id as usize]
+                    .clone();
+                let mut k = my.start;
+                while k < my.end {
+                    let cnt = (my.end - k).min(EPB);
+                    ctx.mram_read(out_off + k * 8, win, cnt * 8);
+                    let v: Vec<i64> = ctx.wram_get(win, cnt);
+                    let o: Vec<i64> = v.iter().map(|x| x + base).collect();
+                    ctx.wram_set(win, &o);
+                    ctx.compute(cnt as u64 * per_elem);
+                    ctx.mram_write(win, out_off + k * 8, cnt * 8);
+                    k += cnt;
+                }
+            });
+            total_instrs += s2.total_instrs();
+        }
+        ScanKind::Rss => {
+            // kernel 1: per-DPU reduction (reuse the chain: the last slot
+            // after a scan pass 1 is the DPU total; a pure reduction is
+            // cheaper — one pass, one barrier)
+            let per_elem = (isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
+                + isa::op_instrs(DType::I64, Op::Add) as u64;
+            let n_blocks = per / EPB;
+            let s1 = set.launch(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+                let t = ctx.tasklet_id as usize;
+                let nt = ctx.n_tasklets as usize;
+                let win = ctx.mem_alloc(BLOCK);
+                let slots = ctx.mem_alloc_shared(1, nt * 8);
+                let wres = ctx.mem_alloc(8);
+                let mut acc = 0i64;
+                let mut blk = t;
+                while blk < n_blocks {
+                    ctx.mram_read(blk * BLOCK, win, BLOCK);
+                    let v: Vec<i64> = ctx.wram_get(win, EPB);
+                    acc += v.iter().sum::<i64>();
+                    ctx.compute(EPB as u64 * per_elem);
+                    blk += nt;
+                }
+                ctx.wram_set(slots + t * 8, &[acc]);
+                ctx.barrier(0);
+                if t == 0 {
+                    let parts: Vec<i64> = ctx.wram_get(slots, nt);
+                    ctx.charge_stream(DType::I64, Op::Add, nt as u64);
+                    ctx.wram_set(wres, &[parts.iter().sum::<i64>()]);
+                    ctx.mram_write(wres, slot_off, 8);
+                }
+            });
+            total_instrs += s1.total_instrs();
+            // host scan of totals
+            let mut bases = Vec::with_capacity(nd);
+            let mut running = 0i64;
+            for d in 0..nd {
+                bases.push(running);
+                running += set.copy_from_inter::<i64>(d, slot_off, 1)[0];
+            }
+            set.host_merge((nd * 8) as u64, nd as u64);
+            for (d, b) in bases.iter().enumerate() {
+                set.copy_to_inter(d, base_off, &[*b]);
+            }
+            // kernel 2: local scan seeded with the base
+            let s2 = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+                local_scan_kernel(ctx, per, slot_off, out_off, base_off);
+            });
+            total_instrs += s2.total_instrs();
+        }
+    }
+
+    // retrieve the full scanned array (parallel — equal sizes)
+    let parts = set.push_from::<i64>(out_off, per);
+    let mut result = Vec::with_capacity(n);
+    for (d, p) in parts.iter().enumerate() {
+        let lo = (d * per).min(n);
+        let hi = ((d + 1) * per).min(n);
+        result.extend_from_slice(&p[..hi - lo]);
+    }
+    let verified = result == scan_ref;
+
+    BenchResult {
+        name,
+        breakdown: set.metrics,
+        verified,
+        work_items: n as u64,
+        dpu_instrs: total_instrs,
+    }
+}
+
+pub struct ScanSsa;
+
+impl PrimBench for ScanSsa {
+    fn name(&self) -> &'static str {
+        "SCAN-SSA"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Parallel primitives",
+            sequential: true,
+            strided: false,
+            random: false,
+            ops: "add",
+            dtype: "int64_t",
+            intra_sync: "handshake, barrier",
+            inter_sync: true,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        run_scan(ScanKind::Ssa, "SCAN-SSA", rc)
+    }
+}
+
+pub struct ScanRss;
+
+impl PrimBench for ScanRss {
+    fn name(&self) -> &'static str {
+        "SCAN-RSS"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Parallel primitives",
+            sequential: true,
+            strided: false,
+            random: false,
+            ops: "add",
+            dtype: "int64_t",
+            intra_sync: "handshake, barrier",
+            inter_sync: true,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        run_scan(ScanKind::Rss, "SCAN-RSS", rc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ssa_verifies() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.002,
+            ..RunConfig::rank_default()
+        };
+        let r = ScanSsa.run(&rc);
+        assert!(r.verified);
+        assert!(r.breakdown.inter_dpu > 0.0);
+    }
+
+    #[test]
+    fn rss_verifies() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.002,
+            ..RunConfig::rank_default()
+        };
+        assert!(ScanRss.run(&rc).verified);
+    }
+
+    #[test]
+    fn rss_fewer_dma_bytes_than_ssa() {
+        // RSS does 3N+1 MRAM accesses vs SSA's 4N
+        let rc = RunConfig {
+            n_dpus: 2,
+            scale: 0.004,
+            ..RunConfig::rank_default()
+        };
+        let ssa = ScanSsa.run(&rc);
+        let rss = ScanRss.run(&rc);
+        assert!(rss.breakdown.dpu < ssa.breakdown.dpu, "RSS wins for large arrays");
+    }
+
+    #[test]
+    fn odd_tasklet_counts() {
+        for nt in [1u32, 3, 13] {
+            let rc = RunConfig {
+                n_dpus: 2,
+                n_tasklets: nt,
+                scale: 0.001,
+                ..RunConfig::rank_default()
+            };
+            assert!(ScanSsa.run(&rc).verified, "nt={nt}");
+            assert!(ScanRss.run(&rc).verified, "nt={nt}");
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! SpMV — Sparse Matrix-Vector Multiply (§4.3). Sparse linear algebra;
+//! float; CSR; sequential + random access; no synchronization primitives,
+//! but serial transfers (per-DPU sizes differ) and heavy float
+//! multiplication — the reasons SpMV is one of the three benchmarks where
+//! PIM loses to the CPU (§5.2).
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use crate::arch::{isa, DType, Op};
+use crate::coordinator::{chunk_ranges, PimSet};
+use crate::dpu::Ctx;
+use crate::util::data::{banded_matrix, Csr};
+
+/// bcsstk30 statistics: n = 28,924, ~2.04 M nonzeros (~70/row, banded).
+const PAPER_N: usize = 28_924;
+const BAND: usize = 48;
+const FILL: f64 = 0.72;
+const BLOCK: usize = 1024;
+
+pub struct Spmv;
+
+impl PrimBench for Spmv {
+    fn name(&self) -> &'static str {
+        "SpMV"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Sparse linear algebra",
+            sequential: true,
+            strided: false,
+            random: true,
+            ops: "add, mul",
+            dtype: "float",
+            intra_sync: "",
+            inter_sync: false,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        let n = rc.scaled(PAPER_N);
+        let mat: Csr = banded_matrix(n, BAND, FILL, rc.seed);
+        let x: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.25).collect();
+        let y_ref = mat.spmv_ref(&x);
+
+        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let nd = rc.n_dpus as usize;
+        let row_parts = chunk_ranges(n, nd);
+
+        // x replicated on every DPU (broadcast); CSR pieces are serial
+        // per-DPU copies because sizes differ (§5.1.1)
+        let x_off = 0usize;
+        let x_bytes = (n * 4 + 7) & !7;
+        set.broadcast(x_off, &x);
+
+        // per-DPU layout after x: row_ptr (rebased), col_idx, values
+        let mut layouts = Vec::with_capacity(nd);
+        for (d, r) in row_parts.iter().enumerate() {
+            let rp_raw: Vec<u32> = mat.row_ptr[r.start..=r.end].to_vec();
+            let base = rp_raw[0];
+            let rp: Vec<u32> = rp_raw.iter().map(|v| v - base).collect();
+            let nnz = (mat.row_ptr[r.end] - mat.row_ptr[r.start]) as usize;
+            let ci = mat.col_idx[base as usize..base as usize + nnz].to_vec();
+            let vals = mat.values[base as usize..base as usize + nnz].to_vec();
+            let rp_off = x_bytes;
+            let ci_off = rp_off + ((rp.len() * 4 + 7) & !7);
+            let va_off = ci_off + ((nnz * 4 + 7) & !7);
+            let y_off = va_off + ((nnz * 4 + 7) & !7);
+            set.copy_to(d, rp_off, &rp);
+            set.copy_to(d, ci_off, &ci);
+            set.copy_to(d, va_off, &vals);
+            layouts.push((r.clone(), rp_off, ci_off, va_off, y_off, nnz));
+        }
+
+        let per_nnz_instrs = (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
+            + isa::op_instrs_for(&rc.sys.dpu, DType::F32, Op::Mul) as u64
+            + isa::op_instrs_for(&rc.sys.dpu, DType::F32, Op::Add) as u64;
+
+        let layouts_ref = &layouts;
+        let stats = set.launch_seq(rc.n_tasklets, |d, ctx: &mut Ctx| {
+            let (rows, rp_off, ci_off, va_off, y_off, _) = layouts_ref[d].clone();
+            let n_rows = rows.len();
+            let wrp = ctx.mem_alloc(BLOCK);
+            let wci = ctx.mem_alloc(BLOCK);
+            let wva = ctx.mem_alloc(BLOCK);
+            let wx = ctx.mem_alloc(8);
+            let wy = ctx.mem_alloc(8);
+            let my = chunk_ranges(n_rows, ctx.n_tasklets as usize)[ctx.tasklet_id as usize].clone();
+            for r in my {
+                // row extent (row_ptr is sequential: small cached reads)
+                let rp_byte = rp_off + r * 4 & !7;
+                ctx.mram_read(rp_byte, wrp, 8);
+                let words: Vec<u32> = ctx.wram_get(wrp, 2);
+                let (s, e) = if (rp_off + r * 4) % 8 == 0 {
+                    (words[0] as usize, words[1] as usize)
+                } else {
+                    // unaligned pair: fetch next word too
+                    ctx.mram_read(rp_byte + 8, wrp, 8);
+                    let w2: Vec<u32> = ctx.wram_get(wrp, 2);
+                    (words[1] as usize, w2[0] as usize)
+                };
+                ctx.compute(4);
+                let mut acc = 0f32;
+                let mut k = s;
+                while k < e {
+                    let k0 = k & !1; // 8-byte-aligned element index
+                    let avail = BLOCK / 4 - (k - k0);
+                    let cnt = (e - k).min(avail);
+                    let span = (k - k0 + cnt + 1) & !1; // even element count
+                    ctx.mram_read(ci_off + k0 * 4, wci, span * 4);
+                    ctx.mram_read(va_off + k0 * 4, wva, span * 4);
+                    let cis: Vec<u32> = ctx.wram_get(wci, span);
+                    let vas: Vec<f32> = ctx.wram_get(wva, span);
+                    for i in 0..cnt {
+                        let ci = cis[k - k0 + i] as usize;
+                        let va = vas[k - k0 + i];
+                        // random-access x element: fine-grained 8-B DMA
+                        ctx.mram_read((x_off + ci * 4) & !7, wx, 8);
+                        let xw: Vec<f32> = ctx.wram_get(wx, 2);
+                        let xv = xw[(ci * 4 % 8) / 4];
+                        acc += va * xv;
+                    }
+                    ctx.compute(cnt as u64 * per_nnz_instrs);
+                    k += cnt;
+                }
+                ctx.wram_set(wy, &[acc, 0.0]);
+                ctx.mram_write(wy, y_off + r * 8, 8);
+            }
+        });
+
+        // serial result retrieval (per paper)
+        let mut verified = true;
+        for (d, (rows, .., y_off, _nnz)) in layouts.iter().map(|l| l.clone()).enumerate() {
+            let pairs = set.copy_from::<f32>(d, y_off, rows.len() * 2);
+            for (i, r) in rows.clone().enumerate() {
+                let got = pairs[i * 2];
+                let want = y_ref[r];
+                if (got - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                    verified = false;
+                }
+            }
+        }
+
+        BenchResult {
+            name: self.name(),
+            breakdown: set.metrics,
+            verified,
+            work_items: mat.nnz() as u64,
+            dpu_instrs: stats.total_instrs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verifies_small() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.01,
+            ..RunConfig::rank_default()
+        };
+        let r = Spmv.run(&rc);
+        assert!(r.verified);
+    }
+
+    #[test]
+    fn float_mul_dominates_time() {
+        // SpMV per-nnz cost should dwarf VA per-element cost (f32 mul = 178)
+        let rc = RunConfig {
+            n_dpus: 2,
+            scale: 0.01,
+            ..RunConfig::rank_default()
+        };
+        let r = Spmv.run(&rc);
+        let per_nnz = r.breakdown.dpu / r.work_items as f64;
+        let v = super::super::va::Va.run(&rc);
+        let per_elem = v.breakdown.dpu / v.work_items as f64;
+        assert!(per_nnz > 10.0 * per_elem);
+    }
+}

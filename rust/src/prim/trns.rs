@@ -1,0 +1,210 @@
+//! TRNS — In-place Matrix Transposition (§4.14). The 3-step tiled
+//! algorithm: the M×N array is factored as M'×m × N'×n;
+//!
+//! * **step 1** happens *during the CPU→DPU transfer*: M'×m serial
+//!   transfers of n elements each per DPU — tiny transfers, which is why
+//!   TRNS's CPU-DPU bar dominates Fig. 12 (Key Obs. 13);
+//! * **step 2** (kernel): each tasklet transposes m×n tiles in WRAM;
+//! * **step 3** (kernel): tasklets collaborate on the transposition of the
+//!   M'×n array of m-element tiles, following permutation cycles with a
+//!   mutex-protected flag bit-vector (the UPMEM ISA has no atomics).
+//!
+//! int64 elements; step-3 is mutex-limited, so its best tasklet count is 8
+//! (Key Obs. 11).
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use crate::arch::{isa, DType, Op};
+use crate::coordinator::PimSet;
+use crate::dpu::Ctx;
+use crate::util::pod::cast_slice_mut;
+use crate::util::Rng;
+
+/// Paper factorization (Table 3): 12288 × 16 × #DPUs × 8.
+const PAPER_MPRIME: usize = 12_288;
+pub const TILE_M: usize = 16;
+pub const TILE_N: usize = 8;
+
+pub struct Trns;
+
+impl PrimBench for Trns {
+    fn name(&self) -> &'static str {
+        "TRNS"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Parallel primitives",
+            sequential: true,
+            strided: false,
+            random: true,
+            ops: "add, sub, mul",
+            dtype: "int64_t",
+            intra_sync: "mutex",
+            inter_sync: false,
+        }
+    }
+
+    fn best_tasklets(&self) -> u32 {
+        8
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        let nd = rc.n_dpus as usize;
+        let mp = rc.scaled(PAPER_MPRIME).max(TILE_N * 2); // M'
+        let (m, n) = (mp * TILE_M, nd * TILE_N); // full matrix M×N
+        let mut rng = Rng::new(rc.seed);
+        let mat: Vec<i64> = (0..m * n).map(|_| rng.next_u64() as i64).collect();
+
+        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        // step 1: M'×m transfers of n elements per DPU; DPU d receives
+        // column-tile d laid out as [j][r][n] (j = 0..M', r = 0..m)
+        for d in 0..nd {
+            for j in 0..mp {
+                for r in 0..TILE_M {
+                    let row = j * TILE_M + r;
+                    let src = &mat[row * n + d * TILE_N..row * n + d * TILE_N + TILE_N];
+                    set.copy_to(d, (j * TILE_M + r) * TILE_N * 8, src);
+                }
+            }
+        }
+        let in_bytes = mp * TILE_M * TILE_N * 8;
+        let flags_off = in_bytes; // step-3 flag area (one byte-vec word per pos)
+        let out_off = in_bytes + ((mp * TILE_N).div_ceil(64) * 8);
+
+        let tile_bytes = TILE_M * TILE_N * 8; // 1 KB tiles
+        let per_elem_s2 = (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64;
+        // step 2: transpose each m×n tile in place (WRAM)
+        let s2 = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+            let wt = ctx.mem_alloc(tile_bytes);
+            let mut j = ctx.tasklet_id as usize;
+            while j < mp {
+                ctx.mram_read(j * tile_bytes, wt, tile_bytes);
+                let tile: Vec<i64> = ctx.wram_get(wt, TILE_M * TILE_N);
+                let mut tr = vec![0i64; TILE_M * TILE_N];
+                for r in 0..TILE_M {
+                    for c in 0..TILE_N {
+                        tr[c * TILE_M + r] = tile[r * TILE_N + c];
+                    }
+                }
+                ctx.wram_set(wt, &tr);
+                ctx.compute((TILE_M * TILE_N) as u64 * per_elem_s2);
+                ctx.mram_write(wt, j * tile_bytes, tile_bytes);
+                j += ctx.n_tasklets as usize;
+            }
+        });
+
+        // step 3: transpose the M'×n grid of m-element tiles: position
+        // (j, c) → (c, j). Cycle-following with a mutex-protected claimed
+        // bit-vector; output written to a separate MRAM region (the paper
+        // does it in place; a scratch output keeps the same DMA traffic —
+        // one read + one write per tile — without the cycle bookkeeping
+        // affecting data layout).
+        let grid = mp * TILE_N;
+        let vec_bytes = TILE_M * 8; // m-element tile vector = 128 B
+        let per_tile_s3 = (4 * isa::ADDR_CALC + isa::LOOP_CTRL) as u64
+            + 2 * isa::op_instrs_for(&rc.sys.dpu, DType::I64, Op::Mul) as u64;
+        let s3 = set.launch_seq(self.best_tasklets().min(rc.n_tasklets), |_d, ctx: &mut Ctx| {
+            let t = ctx.tasklet_id as usize;
+            let nt = ctx.n_tasklets as usize;
+            let wv = ctx.mem_alloc(vec_bytes);
+            let words = grid.div_ceil(64);
+            let wflags = ctx.mem_alloc_shared(1, words * 8);
+            // claim positions cyclically
+            let mut pos = t;
+            while pos < grid {
+                // claim with mutex (flags in shared WRAM)
+                ctx.mutex_lock(0);
+                let claimed = ctx.wram(|wr| {
+                    let f = cast_slice_mut::<u64>(&mut wr[wflags..wflags + words * 8]);
+                    let was = f[pos / 64] & (1 << (pos % 64)) != 0;
+                    f[pos / 64] |= 1 << (pos % 64);
+                    was
+                });
+                ctx.charge_ops(DType::U64, Op::Bitwise, 2);
+                ctx.mutex_unlock(0);
+                if !claimed {
+                    let (j, c) = (pos / TILE_N, pos % TILE_N);
+                    // source: after step 2, tile j holds [c][r] vectors:
+                    // vector (j, c) at j*tile + c*m
+                    ctx.mram_read(j * tile_bytes + c * vec_bytes, wv, vec_bytes);
+                    ctx.compute(per_tile_s3);
+                    // destination: (c, j) in the n×M' grid
+                    ctx.mram_write(wv, out_off + (c * mp + j) * vec_bytes, vec_bytes);
+                }
+                pos += nt;
+            }
+        });
+
+        // retrieval: DPU d holds rows d*n' .. of the transposed matrix
+        // (equal sizes → parallel)
+        let parts = set.push_from::<i64>(out_off, grid * TILE_M);
+        // verify: T[dn + c][j*m + r] == mat[(j*m + r)*n + d*n + c]
+        let mut verified = true;
+        'outer: for (d, p) in parts.iter().enumerate() {
+            for c in 0..TILE_N {
+                for j in 0..mp {
+                    for r in 0..TILE_M {
+                        let got = p[(c * mp + j) * TILE_M + r];
+                        let want = mat[(j * TILE_M + r) * n + d * TILE_N + c];
+                        if got != want {
+                            verified = false;
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+        }
+
+        BenchResult {
+            name: self.name(),
+            breakdown: set.metrics,
+            verified,
+            work_items: (m * n) as u64,
+            dpu_instrs: s2.total_instrs() + s3.total_instrs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verifies_small() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.002,
+            ..RunConfig::rank_default()
+        };
+        let r = Trns.run(&rc);
+        assert!(r.verified);
+    }
+
+    #[test]
+    fn cpu_dpu_dominates_key_obs_13() {
+        // step-1's tiny serial transfers must dominate the breakdown
+        let rc = RunConfig {
+            n_dpus: 2,
+            scale: 0.01,
+            ..RunConfig::rank_default()
+        };
+        let r = Trns.run(&rc);
+        assert!(
+            r.breakdown.cpu_dpu > r.breakdown.dpu,
+            "cpu_dpu {} vs dpu {}",
+            r.breakdown.cpu_dpu,
+            r.breakdown.dpu
+        );
+    }
+
+    #[test]
+    fn single_dpu_verifies() {
+        let rc = RunConfig {
+            n_dpus: 1,
+            n_tasklets: 8,
+            scale: 0.002,
+            ..RunConfig::rank_default()
+        };
+        assert!(Trns.run(&rc).verified);
+    }
+}

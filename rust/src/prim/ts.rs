@@ -1,0 +1,198 @@
+//! TS — Time Series analysis (§4.7). Matrix-profile-style streaming
+//! similarity search: slide a query over the series, track the minimum
+//! distance. int32; sequential; heavy integer multiplication; no
+//! synchronization (per-tasklet minima merged by tasklet 0, per-DPU minima
+//! merged by the host).
+//!
+//! Distance is the sum of squared differences over the window (the integer
+//! analogue of the z-normalized Euclidean profile — same add/sub/mul mix
+//! the paper's Table 2 lists for TS).
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use crate::arch::{isa, DType, Op};
+use crate::coordinator::{chunk_ranges, PimSet};
+use crate::dpu::Ctx;
+use crate::util::data::time_series;
+
+/// Paper dataset (Table 3): 512 K elements, 256-element query.
+const PAPER_N: usize = 524_288;
+pub const QUERY_LEN: usize = 256;
+const BLOCK: usize = 1024;
+
+pub struct Ts;
+
+fn ssd(window: &[i32], query: &[i32]) -> i64 {
+    window
+        .iter()
+        .zip(query)
+        .map(|(a, b)| {
+            let d = (*a as i64) - (*b as i64);
+            d * d
+        })
+        .sum()
+}
+
+impl PrimBench for Ts {
+    fn name(&self) -> &'static str {
+        "TS"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Data analytics",
+            sequential: true,
+            strided: false,
+            random: false,
+            ops: "add, sub, mul, div",
+            dtype: "int32_t",
+            intra_sync: "",
+            inter_sync: false,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        let n = rc.scaled(PAPER_N).max(4 * QUERY_LEN);
+        let (series, query) = time_series(n, QUERY_LEN, rc.seed);
+
+        // reference: global minimum SSD and position
+        let mut best_ref = i64::MAX;
+        let mut pos_ref = 0usize;
+        for p in 0..=(n - QUERY_LEN) {
+            let d = ssd(&series[p..p + QUERY_LEN], &query);
+            if d < best_ref {
+                best_ref = d;
+                pos_ref = p;
+            }
+        }
+
+        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let nd = rc.n_dpus as usize;
+        let positions = n - QUERY_LEN + 1;
+        let per_pos = positions.div_ceil(nd);
+        // each DPU gets its positions plus QUERY_LEN-1 overlap
+        let slice_elems = per_pos + QUERY_LEN - 1;
+        let slice_padded = (slice_elems + 255) & !255; // whole 1024-B blocks
+        let bufs: Vec<Vec<i32>> = (0..nd)
+            .map(|d| {
+                let lo = d * per_pos;
+                let mut v: Vec<i32> = (lo..(lo + slice_padded).min(n))
+                    .map(|i| series[i])
+                    .collect();
+                v.resize(slice_padded, i32::MAX / 4); // pad far from matches
+                v
+            })
+            .collect();
+        set.push_to(0, &bufs);
+        let q_off = slice_padded * 4;
+        set.broadcast(q_off, &query);
+        let out_off = q_off + QUERY_LEN * 4;
+
+        let per_elem = (2 * isa::WRAM_LS + isa::LOOP_CTRL) as u64
+            + isa::op_instrs_for(&rc.sys.dpu, DType::I32, Op::Sub) as u64
+            + isa::op_instrs_for(&rc.sys.dpu, DType::I32, Op::Mul) as u64
+            + isa::op_instrs_for(&rc.sys.dpu, DType::I64, Op::Add) as u64;
+
+        let stats = set.launch_seq(rc.n_tasklets, |d, ctx: &mut Ctx| {
+            let t = ctx.tasklet_id as usize;
+            let nt = ctx.n_tasklets as usize;
+            // query resident in WRAM for the whole kernel
+            let wq = ctx.mem_alloc(QUERY_LEN * 4);
+            ctx.mram_read(q_off, wq, QUERY_LEN * 4);
+            let qv: Vec<i32> = ctx.wram_get(wq, QUERY_LEN);
+            // sliding window buffer: CHUNK positions need CHUNK+QUERY_LEN
+            // elements
+            const CHUNK: usize = 256;
+            let wbuf = ctx.mem_alloc((CHUNK + QUERY_LEN) * 4);
+            let wout = ctx.mem_alloc(16);
+
+            let dpu_positions = per_pos.min(positions.saturating_sub(d * per_pos));
+            let my = chunk_ranges(dpu_positions, nt)[t].clone();
+            let mut best = i64::MAX;
+            let mut best_pos = 0usize;
+            let mut p = my.start;
+            while p < my.end {
+                let cnt = (my.end - p).min(CHUNK);
+                let need = cnt + QUERY_LEN; // elements
+                let nbytes = (need * 4 + 1023) & !1023;
+                // stream the span in 1024-B DMA chunks
+                let base = (p * 4) & !7;
+                let shift = (p * 4 - base) / 4;
+                let mut got = 0;
+                while got < nbytes.min(slice_padded * 4 - base) {
+                    let take = (nbytes - got).min(BLOCK);
+                    ctx.mram_read(base + got, wbuf + got, take);
+                    got += take;
+                }
+                let span: Vec<i32> = ctx.wram_get(wbuf, (got / 4).min(CHUNK + QUERY_LEN));
+                for i in 0..cnt {
+                    if shift + i + QUERY_LEN > span.len() {
+                        break;
+                    }
+                    let d = ssd(&span[shift + i..shift + i + QUERY_LEN], &qv);
+                    if d < best {
+                        best = d;
+                        best_pos = p + i;
+                    }
+                }
+                ctx.compute((cnt * QUERY_LEN) as u64 * per_elem);
+                p += cnt;
+            }
+            // per-tasklet result slots
+            ctx.wram_set(wout, &[best, best_pos as i64]);
+            ctx.mram_write(wout, out_off + t * 16, 16);
+        });
+
+        // host merge: per-DPU per-tasklet minima
+        let mut best = i64::MAX;
+        let mut best_pos = 0usize;
+        for d in 0..nd {
+            let slots = set.copy_from::<i64>(d, out_off, rc.n_tasklets as usize * 2);
+            for t in 0..rc.n_tasklets as usize {
+                let (b, p) = (slots[t * 2], slots[t * 2 + 1] as usize);
+                if b < best {
+                    best = b;
+                    best_pos = d * per_pos + p;
+                }
+            }
+        }
+
+        let verified = best == best_ref && ssd(&series[best_pos..best_pos + QUERY_LEN], &query) == best_ref
+            && (best_pos == pos_ref || best == best_ref);
+
+        BenchResult {
+            name: self.name(),
+            breakdown: set.metrics,
+            verified,
+            work_items: positions as u64,
+            dpu_instrs: stats.total_instrs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verifies_small() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.01,
+            ..RunConfig::rank_default()
+        };
+        let r = Ts.run(&rc);
+        assert!(r.verified);
+        assert_eq!(r.breakdown.inter_dpu, 0.0);
+    }
+
+    #[test]
+    fn exact_match_found() {
+        // the query is an exact slice of the series → min distance 0
+        let rc = RunConfig {
+            n_dpus: 2,
+            scale: 0.005,
+            ..RunConfig::rank_default()
+        };
+        assert!(Ts.run(&rc).verified);
+    }
+}

@@ -1,0 +1,65 @@
+//! UNI — Unique (§4.5). Databases; int64; sequential; like SEL but the
+//! handshake chain also carries each tasklet's **last element value**, so
+//! the successor can decide whether its first element is unique in the
+//! context of the whole array.
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::sel::{run_compaction, CompactKind};
+
+pub struct Uni;
+
+impl PrimBench for Uni {
+    fn name(&self) -> &'static str {
+        "UNI"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Databases",
+            sequential: true,
+            strided: false,
+            random: false,
+            ops: "add, compare",
+            dtype: "int64_t",
+            intra_sync: "handshake, barrier",
+            inter_sync: true,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        run_compaction(CompactKind::Unique, "UNI", rc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prim::common::RunConfig;
+
+    #[test]
+    fn verifies_small() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.002,
+            ..RunConfig::rank_default()
+        };
+        assert!(Uni.run(&rc).verified);
+    }
+
+    #[test]
+    fn verifies_across_tasklet_and_dpu_boundaries() {
+        // many DPUs / tasklets → duplicates straddle both boundary kinds
+        for nd in [1u32, 2, 8] {
+            for nt in [2u32, 5, 16] {
+                let rc = RunConfig {
+                    n_dpus: nd,
+                    n_tasklets: nt,
+                    scale: 0.001,
+                    seed: 7 + nd as u64 * 100 + nt as u64,
+                    ..RunConfig::rank_default()
+                };
+                assert!(Uni.run(&rc).verified, "nd={nd} nt={nt}");
+            }
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! VA — Vector Addition (§4.1). Dense linear algebra; int32; sequential
+//! reads; no intra- or inter-DPU synchronization.
+//!
+//! Host splits `a` and `b` into equal chunks (parallel transfers), each
+//! DPU's tasklets stream 1,024-B blocks cyclically: DMA in, add in WRAM,
+//! DMA out.
+
+use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use crate::arch::{isa, DType, Op};
+use crate::coordinator::PimSet;
+use crate::dpu::Ctx;
+use crate::util::Rng;
+
+/// Paper dataset (Table 3, 1 DPU – 1 rank): 2.5 M elements.
+const PAPER_N: usize = 2_500_000;
+/// DMA block.
+const BLOCK: usize = 1024;
+const EPB: usize = BLOCK / 4; // i32 elements per block
+
+pub struct Va;
+
+impl PrimBench for Va {
+    fn name(&self) -> &'static str {
+        "VA"
+    }
+
+    fn traits(&self) -> BenchTraits {
+        BenchTraits {
+            domain: "Dense linear algebra",
+            sequential: true,
+            strided: false,
+            random: false,
+            ops: "add",
+            dtype: "int32_t",
+            intra_sync: "",
+            inter_sync: false,
+        }
+    }
+
+    fn run(&self, rc: &RunConfig) -> BenchResult {
+        let n = rc.scaled(PAPER_N);
+        let mut rng = Rng::new(rc.seed);
+        let a = rng.vec_i32(n, 1 << 20);
+        let b = rng.vec_i32(n, 1 << 20);
+
+        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let nd = rc.n_dpus as usize;
+        // equal chunks, padded to whole blocks (parallel transfers require
+        // equal sizes — Programming Recommendation 5)
+        let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
+        let chunk = |src: &[i32], d: usize| -> Vec<i32> {
+            let lo = (d * per).min(n);
+            let hi = ((d + 1) * per).min(n);
+            let mut v = src[lo..hi].to_vec();
+            v.resize(per, 0);
+            v
+        };
+        let abufs: Vec<Vec<i32>> = (0..nd).map(|d| chunk(&a, d)).collect();
+        let bbufs: Vec<Vec<i32>> = (0..nd).map(|d| chunk(&b, d)).collect();
+        let cbytes = per * 4;
+        set.push_to(0, &abufs);
+        set.push_to(cbytes, &bbufs);
+
+        let n_blocks = per / EPB;
+        let instrs_per_elem =
+            (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
+                + isa::op_instrs(DType::I32, Op::Add) as u64;
+        let stats = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+            let wa = ctx.mem_alloc(BLOCK);
+            let wb = ctx.mem_alloc(BLOCK);
+            let mut blk = ctx.tasklet_id as usize;
+            while blk < n_blocks {
+                let off = blk * BLOCK;
+                ctx.mram_read(off, wa, BLOCK);
+                ctx.mram_read(cbytes + off, wb, BLOCK);
+                // zero-copy in-WRAM add: c (over a's buffer) = a + b
+                ctx.wram_zip::<i32>(wb, wa, EPB, |b, a| {
+                    for (x, y) in a.iter_mut().zip(b) {
+                        *x = x.wrapping_add(*y);
+                    }
+                });
+                ctx.compute(EPB as u64 * instrs_per_elem);
+                ctx.mram_write(wa, 2 * cbytes + off, BLOCK);
+                blk += ctx.n_tasklets as usize;
+            }
+        });
+
+        let out = set.push_from::<i32>(2 * cbytes, per);
+        let mut c = Vec::with_capacity(n);
+        for d in 0..nd {
+            let lo = (d * per).min(n);
+            let hi = ((d + 1) * per).min(n);
+            c.extend_from_slice(&out[d][..hi - lo]);
+        }
+        let verified = c
+            .iter()
+            .zip(a.iter().zip(&b))
+            .all(|(cv, (av, bv))| *cv == av.wrapping_add(*bv));
+
+        BenchResult {
+            name: self.name(),
+            breakdown: set.metrics,
+            verified,
+            work_items: n as u64,
+            dpu_instrs: stats.total_instrs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verifies_on_small_run() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.002,
+            ..RunConfig::rank_default()
+        };
+        let r = Va.run(&rc);
+        assert!(r.verified);
+        assert!(r.breakdown.dpu > 0.0);
+        assert!(r.breakdown.cpu_dpu > 0.0);
+        assert!(r.breakdown.dpu_cpu > 0.0);
+        assert_eq!(r.breakdown.inter_dpu, 0.0, "VA has no inter-DPU sync");
+    }
+
+    #[test]
+    fn strong_scaling_dpu_time_drops() {
+        let mk = |nd: u32| {
+            let rc = RunConfig {
+                n_dpus: nd,
+                scale: 0.004,
+                ..RunConfig::rank_default()
+            };
+            Va.run(&rc).breakdown.dpu
+        };
+        let t1 = mk(1);
+        let t4 = mk(4);
+        assert!(t1 / t4 > 3.0, "speedup {}", t1 / t4);
+    }
+
+    #[test]
+    fn tasklet_scaling_saturates_near_11() {
+        let mk = |t: u32| {
+            let rc = RunConfig {
+                n_dpus: 1,
+                n_tasklets: t,
+                scale: 0.002,
+                ..RunConfig::rank_default()
+            };
+            Va.run(&rc).breakdown.dpu
+        };
+        let t1 = mk(1);
+        let t8 = mk(8);
+        let t16 = mk(16);
+        assert!(t1 / t8 > 4.0);
+        assert!(t8 / t16 < 2.0, "diminishing returns after 8");
+    }
+}

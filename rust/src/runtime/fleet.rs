@@ -1,0 +1,132 @@
+//! Fleet timing estimator: the AOT `dpu_timing` artifact (L1 Pallas kernel
+//! lowered through L2) evaluated from rust, plus a native fallback.
+//!
+//! The coordinator uses this to predict full-scale (2,556-DPU) scaling
+//! shapes from per-DPU workload descriptors without functionally
+//! simulating every DPU — the descriptor model is the same first-order
+//! analytical model (pipeline vs DMA roofline) as the fluid engine.
+
+use anyhow::Result;
+
+/// Fleet width the artifact was lowered at (python/compile/model.py).
+pub const FLEET_N: usize = 2048;
+
+/// Workload descriptor of one DPU for the analytical model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DpuDesc {
+    /// Pipeline instructions per tasklet.
+    pub instrs_per_tasklet: f64,
+    /// Tasklets launched.
+    pub tasklets: f64,
+    /// MRAM→WRAM transfers and their (uniform) size.
+    pub n_reads: f64,
+    pub read_bytes: f64,
+    /// WRAM→MRAM transfers and their size.
+    pub n_writes: f64,
+    pub write_bytes: f64,
+}
+
+/// Native evaluation of the analytical model (used when artifacts are not
+/// built, and as the cross-check oracle for the PJRT path).
+pub fn fleet_cycles_native(descs: &[DpuDesc]) -> Vec<f64> {
+    const DISPATCH: f64 = 11.0;
+    const ALPHA_R: f64 = 77.0;
+    const ALPHA_W: f64 = 61.0;
+    const BETA: f64 = 0.5;
+    descs
+        .iter()
+        .map(|d| {
+            let pipeline = d.instrs_per_tasklet * DISPATCH.max(d.tasklets);
+            let dma = d.n_reads * (ALPHA_R + BETA * d.read_bytes)
+                + d.n_writes * (ALPHA_W + BETA * d.write_bytes);
+            pipeline.max(dma)
+        })
+        .collect()
+}
+
+/// PJRT-backed fleet estimator.
+pub struct FleetEstimator {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl FleetEstimator {
+    /// Load `artifacts/dpu_timing.hlo.txt` and compile it.
+    pub fn load(rt: &super::PjrtRuntime) -> Result<Self> {
+        Ok(FleetEstimator {
+            exe: rt.load("dpu_timing.hlo.txt")?,
+        })
+    }
+
+    /// Estimate cycles for each descriptor (chunks of `FLEET_N`, padded).
+    pub fn estimate(&self, descs: &[DpuDesc]) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(descs.len());
+        for chunk in descs.chunks(FLEET_N) {
+            let mut cols = [(); 6].map(|_| vec![0f32; FLEET_N]);
+            for (i, d) in chunk.iter().enumerate() {
+                cols[0][i] = d.instrs_per_tasklet as f32;
+                cols[1][i] = d.tasklets.max(1.0) as f32;
+                cols[2][i] = d.n_reads as f32;
+                cols[3][i] = d.read_bytes as f32;
+                cols[4][i] = d.n_writes as f32;
+                cols[5][i] = d.write_bytes as f32;
+            }
+            let dims: &[i64] = &[FLEET_N as i64];
+            let inputs: Vec<(&[f32], &[i64])> =
+                cols.iter().map(|c| (c.as_slice(), dims)).collect();
+            let res = super::run_f32(&self.exe, &inputs)?;
+            out.extend(res[..chunk.len()].iter().map(|&x| x as f64));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_model_pipeline_vs_dma() {
+        let compute_bound = DpuDesc {
+            instrs_per_tasklet: 1_000_000.0,
+            tasklets: 16.0,
+            n_reads: 10.0,
+            read_bytes: 1024.0,
+            ..Default::default()
+        };
+        let memory_bound = DpuDesc {
+            instrs_per_tasklet: 100.0,
+            tasklets: 16.0,
+            n_reads: 100_000.0,
+            read_bytes: 1024.0,
+            ..Default::default()
+        };
+        let c = fleet_cycles_native(&[compute_bound, memory_bound]);
+        assert_eq!(c[0], 16_000_000.0);
+        assert_eq!(c[1], 100_000.0 * (77.0 + 512.0));
+    }
+
+    #[test]
+    fn pjrt_matches_native() {
+        if !super::super::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = super::super::PjrtRuntime::cpu().unwrap();
+        let est = FleetEstimator::load(&rt).unwrap();
+        let descs: Vec<DpuDesc> = (0..100)
+            .map(|i| DpuDesc {
+                instrs_per_tasklet: 1000.0 * (i + 1) as f64,
+                tasklets: (1 + i % 24) as f64,
+                n_reads: (i * 10) as f64,
+                read_bytes: 1024.0,
+                n_writes: (i * 5) as f64,
+                write_bytes: 512.0,
+            })
+            .collect();
+        let pjrt = est.estimate(&descs).unwrap();
+        let native = fleet_cycles_native(&descs);
+        for (a, b) in pjrt.iter().zip(&native) {
+            assert!((a - b).abs() / b.max(1.0) < 1e-5, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! MLP oracle: the AOT 3-layer MLP (Pallas GEMV+ReLU layers) executed via
+//! PJRT — the host-side "CPU counterpart" of the PrIM MLP workload and the
+//! numeric oracle for the DPU-simulated MLP/GEMV results.
+
+use anyhow::Result;
+
+/// Layer width the artifact was lowered at (python/compile/model.py).
+pub const MLP_DIM: usize = 1024;
+
+/// PJRT-backed 3-layer MLP.
+pub struct MlpOracle {
+    exe: xla::PjRtLoadedExecutable,
+    pub w: [Vec<f32>; 3],
+    pub b: [Vec<f32>; 3],
+}
+
+impl MlpOracle {
+    /// Load `artifacts/mlp.hlo.txt` and attach weights (row-major
+    /// `MLP_DIM × MLP_DIM`).
+    pub fn load(rt: &super::PjrtRuntime, w: [Vec<f32>; 3], b: [Vec<f32>; 3]) -> Result<Self> {
+        for wi in &w {
+            assert_eq!(wi.len(), MLP_DIM * MLP_DIM);
+        }
+        for bi in &b {
+            assert_eq!(bi.len(), MLP_DIM);
+        }
+        Ok(MlpOracle {
+            exe: rt.load("mlp.hlo.txt")?,
+            w,
+            b,
+        })
+    }
+
+    /// Forward pass: y = relu(W3·relu(W2·relu(W1·x+b1)+b2)+b3).
+    pub fn forward(&self, x: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(x.len(), MLP_DIM);
+        let d = MLP_DIM as i64;
+        let vdims: &[i64] = &[d];
+        let mdims: &[i64] = &[d, d];
+        super::run_f32(
+            &self.exe,
+            &[
+                (x, vdims),
+                (&self.w[0], mdims),
+                (&self.b[0], vdims),
+                (&self.w[1], mdims),
+                (&self.b[1], vdims),
+                (&self.w[2], mdims),
+                (&self.b[2], vdims),
+            ],
+        )
+    }
+
+    /// Native reference forward pass (for cross-checking the PJRT path and
+    /// for use when artifacts are absent).
+    pub fn forward_native(w: &[Vec<f32>; 3], b: &[Vec<f32>; 3], x: &[f32]) -> Vec<f32> {
+        let mut h = x.to_vec();
+        for l in 0..3 {
+            let mut next = vec![0f32; MLP_DIM];
+            for (r, out) in next.iter_mut().enumerate() {
+                let row = &w[l][r * MLP_DIM..(r + 1) * MLP_DIM];
+                let mut acc = 0f32;
+                for (a, c) in row.iter().zip(&h) {
+                    acc += a * c;
+                }
+                *out = (acc + b[l][r]).max(0.0);
+            }
+            h = next;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn params(seed: u64) -> ([Vec<f32>; 3], [Vec<f32>; 3], Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let mut mat = || -> Vec<f32> {
+            (0..MLP_DIM * MLP_DIM).map(|_| (rng.f32() - 0.5) * 0.06).collect()
+        };
+        let w = [mat(), mat(), mat()];
+        let mut rng2 = Rng::new(seed + 1);
+        let mut vec = || -> Vec<f32> { (0..MLP_DIM).map(|_| rng2.f32() - 0.5).collect() };
+        let b = [vec(), vec(), vec()];
+        let x = vec();
+        (w, b, x)
+    }
+
+    #[test]
+    fn native_relu_nonnegative() {
+        let (w, b, x) = params(3);
+        let y = MlpOracle::forward_native(&w, &b, &x);
+        assert_eq!(y.len(), MLP_DIM);
+        assert!(y.iter().all(|&v| v >= 0.0));
+        assert!(y.iter().any(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn pjrt_matches_native() {
+        if !super::super::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (w, b, x) = params(7);
+        let rt = super::super::PjrtRuntime::cpu().unwrap();
+        let oracle = MlpOracle::load(&rt, w.clone(), b.clone()).unwrap();
+        let got = oracle.forward(&x).unwrap();
+        let want = MlpOracle::forward_native(&w, &b, &x);
+        for (g, wnt) in got.iter().zip(&want) {
+            assert!(
+                (g - wnt).abs() <= 1e-3 * (1.0 + wnt.abs()),
+                "{g} vs {wnt}"
+            );
+        }
+    }
+}

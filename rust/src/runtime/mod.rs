@@ -1,0 +1,123 @@
+//! PJRT runtime: load and execute the AOT JAX/Pallas artifacts from rust.
+//!
+//! Python runs once at build time (`make artifacts`) and lowers the L2
+//! model to **HLO text** (`artifacts/*.hlo.txt`); this module compiles the
+//! text on the PJRT CPU client (`xla` crate 0.1.6 / xla_extension 0.5.1)
+//! and executes it on the request path. Text is the interchange format
+//! because jax ≥ 0.5 serialized protos use 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects.
+
+pub mod fleet;
+pub mod mlp;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+pub use fleet::{fleet_cycles_native, DpuDesc, FleetEstimator, FLEET_N};
+pub use mlp::{MlpOracle, MLP_DIM};
+
+/// Locate the artifacts directory: `$PRIM_ARTIFACTS`, else
+/// `<manifest>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("PRIM_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Do the AOT artifacts exist? (Tests skip PJRT paths when absent.)
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("mlp.hlo.txt").exists()
+        && artifacts_dir().join("dpu_timing.hlo.txt").exists()
+}
+
+/// A PJRT CPU client; compiled executables are created via [`Self::load`].
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = artifacts_dir().join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?} (run `make artifacts`)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {file}"))
+    }
+}
+
+/// Execute a compiled computation on f32 literals and return the f32
+/// contents of the (single, tupled) output.
+pub fn run_f32(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[(&[f32], &[i64])],
+) -> Result<Vec<f32>> {
+    let mut lits = Vec::with_capacity(inputs.len());
+    for (data, dims) in inputs {
+        let lit = xla::Literal::vec1(data);
+        let lit = if dims.len() == 1 {
+            lit
+        } else {
+            lit.reshape(dims).context("reshaping input literal")?
+        };
+        lits.push(lit);
+    }
+    let result = exe.execute::<xla::Literal>(&lits)?[0][0]
+        .to_literal_sync()
+        .context("fetching result")?;
+    // jax lowering uses return_tuple=True → unwrap the 1-tuple
+    let out = result.to_tuple1().context("unwrapping result tuple")?;
+    out.to_vec::<f32>().context("reading f32 result")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_resolves() {
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts"));
+    }
+
+    #[test]
+    fn load_and_run_fleet_artifact() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let exe = rt.load("dpu_timing.hlo.txt").unwrap();
+        let n = FLEET_N;
+        let instrs = vec![1000.0f32; n];
+        let tasklets = vec![16.0f32; n];
+        let zeros = vec![0.0f32; n];
+        let dims: &[i64] = &[n as i64];
+        let out = run_f32(
+            &exe,
+            &[
+                (&instrs, dims),
+                (&tasklets, dims),
+                (&zeros, dims),
+                (&zeros, dims),
+                (&zeros, dims),
+                (&zeros, dims),
+            ],
+        )
+        .unwrap();
+        assert_eq!(out.len(), n);
+        // pipeline = 1000 * max(11,16) = 16000
+        assert!((out[0] - 16_000.0).abs() < 1e-3, "{}", out[0]);
+    }
+}

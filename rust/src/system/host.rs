@@ -1,0 +1,101 @@
+//! Host-CPU cost model for the inter-DPU synchronization phases.
+//!
+//! All inter-DPU communication goes through the host (there is no direct
+//! DPU↔DPU channel), so benchmarks with global phases — frontier union in
+//! BFS, partial-result merging in SEL/UNI/RED/HST, the intermediate scan of
+//! SCAN-SSA/SCAN-RSS, diagonal exchange in NW — pay host compute in
+//! addition to the transfer time. The paper's "Inter-DPU" bars contain
+//! both; we model host compute with simple sustained-rate parameters of the
+//! Intel Xeon Silver 4215 host and *measure* the functional merge work we
+//! actually perform.
+
+/// Sustained-rate model of the host CPU (single socket, single thread —
+/// the SDK's merge loops are sequential, §5.1.1's BFS analysis).
+#[derive(Clone, Debug)]
+pub struct HostModel {
+    /// Sustained scalar integer op rate, ops/s.
+    pub int_ops_per_sec: f64,
+    /// Sustained float op rate, ops/s.
+    pub float_ops_per_sec: f64,
+    /// Sustained main-memory streaming bandwidth, B/s.
+    pub mem_bw: f64,
+    /// Penalty factor for a second-socket (remote NUMA) access — the paper
+    /// observes the Inter-DPU jump from 1,024 to 2,048 DPUs on the
+    /// dual-socket system.
+    pub numa_penalty: f64,
+}
+
+impl Default for HostModel {
+    fn default() -> Self {
+        HostModel {
+            // Xeon Silver 4215 @2.5 GHz, ~1 scalar op/cycle sustained in
+            // pointer-ful merge loops.
+            int_ops_per_sec: 2.5e9,
+            float_ops_per_sec: 2.0e9,
+            // single-thread streaming (~1/3 of the 37.5 GB/s socket peak)
+            mem_bw: 12.0e9,
+            numa_penalty: 1.6,
+        }
+    }
+}
+
+impl HostModel {
+    /// Seconds to run `ops` scalar integer operations on the host.
+    pub fn int_ops(&self, ops: u64) -> f64 {
+        ops as f64 / self.int_ops_per_sec
+    }
+
+    /// Seconds to run `ops` scalar float operations on the host.
+    pub fn float_ops(&self, ops: u64) -> f64 {
+        ops as f64 / self.float_ops_per_sec
+    }
+
+    /// Seconds to stream `bytes` through host memory (merge copies).
+    pub fn stream(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.mem_bw
+    }
+
+    /// Seconds for a host-side merge touching `bytes` and executing `ops`
+    /// (max of the two roofs — the host overlaps loads with ALU work).
+    pub fn merge(&self, bytes: u64, ops: u64) -> f64 {
+        self.stream(bytes).max(self.int_ops(ops))
+    }
+
+    /// NUMA-degraded merge (used when the DPU set spans >16 ranks, i.e.
+    /// DIMMs on both sockets of the 2,556-DPU machine).
+    pub fn merge_numa(&self, bytes: u64, ops: u64, spans_sockets: bool) -> f64 {
+        let t = self.merge(bytes, ops);
+        if spans_sockets {
+            t * self.numa_penalty
+        } else {
+            t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_sane() {
+        let h = HostModel::default();
+        assert!(h.int_ops(2_500_000_000) > 0.99);
+        assert!(h.stream(12_000_000_000) > 0.99);
+    }
+
+    #[test]
+    fn merge_is_max_of_roofs() {
+        let h = HostModel::default();
+        // compute-heavy merge bound by ops
+        assert_eq!(h.merge(8, 1_000_000), h.int_ops(1_000_000));
+        // memory-heavy merge bound by bytes
+        assert_eq!(h.merge(1 << 30, 8), h.stream(1 << 30));
+    }
+
+    #[test]
+    fn numa_penalty_applies() {
+        let h = HostModel::default();
+        assert!(h.merge_numa(1 << 20, 0, true) > h.merge_numa(1 << 20, 0, false));
+    }
+}

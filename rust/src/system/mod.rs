@@ -1,0 +1,10 @@
+//! System-level organization: the CPU↔DPU transfer engine (the UPMEM SDK's
+//! `dpu_copy_to/from`, `dpu_prepare_xfer`/`dpu_push_xfer`,
+//! `dpu_broadcast_to`) and the host-CPU cost model used for inter-DPU
+//! synchronization phases.
+
+pub mod host;
+pub mod transfer;
+
+pub use host::HostModel;
+pub use transfer::{Dir, TransferEngine, XferModel};

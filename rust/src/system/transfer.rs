@@ -1,0 +1,318 @@
+//! CPU↔DPU transfer bandwidth model + functional data movement.
+//!
+//! Calibrated to the paper's Fig. 10 measurements on the 2,556-DPU system:
+//!
+//! * single-DPU transfers ramp linearly with size up to ~2 KB, then
+//!   saturate (Key Obs. 7) at 0.33 GB/s CPU→DPU / 0.12 GB/s DPU→CPU for
+//!   32 MB — the asymmetry comes from the SDK's asynchronous AVX *writes*
+//!   vs synchronous AVX *reads* (Key Obs. 9);
+//! * parallel transfers inside a rank scale sublinearly with DPU count
+//!   (Key Obs. 8): 6.68 GB/s CPU→DPU and 4.74 GB/s DPU→CPU at 64 DPUs
+//!   (20.13× / 38.76× over one DPU);
+//! * broadcast reaches 16.88 GB/s thanks to CPU cache locality;
+//! * everything stays below the 19.2 GB/s DDR4-2400 channel peak — the gap
+//!   is the SDK transposition library that scatters 64-bit words across
+//!   the 8 chips of a rank;
+//! * transfers to different **ranks are serialized** (§5.1.1: "these
+//!   transfers are not simultaneous across ranks").
+//!
+//! The model is a saturating-hyperbola family: single-transfer time
+//! `t(s) = t0 + s/BW∞`; parallel aggregate bandwidth
+//! `BW(N) = A·N/(N+B)` at the 32 MB calibration point, scaled by the
+//! single-DPU size curve for other sizes.
+
+use crate::dpu::Dpu;
+use crate::util::pod::Pod;
+
+/// Direction of a host↔MRAM transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// Host main memory → MRAM (`dpu_copy_to` / push_xfer TO_DPU).
+    CpuToDpu,
+    /// MRAM → host main memory (`dpu_copy_from` / push_xfer FROM_DPU).
+    DpuToCpu,
+}
+
+/// Bandwidth-model parameters (defaults = 2,556-DPU system calibration).
+#[derive(Clone, Debug)]
+pub struct XferModel {
+    /// Fixed software+bus latency of one serial transfer, seconds.
+    pub t0: f64,
+    /// Asymptotic single-DPU CPU→DPU bandwidth, B/s.
+    pub bw_c2d: f64,
+    /// Asymptotic single-DPU DPU→CPU bandwidth, B/s.
+    pub bw_d2c: f64,
+    /// Parallel CPU→DPU hyperbola (A in B/s, B dimensionless):
+    /// aggregate BW at N DPUs (32 MB each) = A·N/(N+B).
+    pub par_c2d: (f64, f64),
+    /// Parallel DPU→CPU hyperbola.
+    pub par_d2c: (f64, f64),
+    /// Broadcast hyperbola.
+    pub par_bcast: (f64, f64),
+    /// DPUs per rank (parallelism domain).
+    pub rank_size: u32,
+}
+
+/// Reference size at which the parallel hyperbolas are calibrated.
+const CAL_SIZE: f64 = 32.0 * 1024.0 * 1024.0;
+
+impl Default for XferModel {
+    fn default() -> Self {
+        // Fits to Fig. 10 (see module docs): bw(1 dpu, 32MB) = 0.33 / 0.12
+        // GB/s; bw(64) = 6.68 / 4.74; broadcast(64) = 16.88.
+        XferModel {
+            t0: 2.5e-6,
+            bw_c2d: 0.342e9,
+            bw_d2c: 0.125e9,
+            par_c2d: (9.62e9, 28.1),
+            par_d2c: (11.87e9, 96.3),
+            par_bcast: (24.3e9, 28.1),
+            rank_size: 64,
+        }
+    }
+}
+
+impl XferModel {
+    /// Seconds for one serial transfer of `bytes` to/from one MRAM bank.
+    pub fn serial_secs(&self, dir: Dir, bytes: usize) -> f64 {
+        let bw = match dir {
+            Dir::CpuToDpu => self.bw_c2d,
+            Dir::DpuToCpu => self.bw_d2c,
+        };
+        self.t0 + bytes as f64 / bw
+    }
+
+    /// Effective single-DPU bandwidth at `bytes` (B/s).
+    pub fn serial_bw(&self, dir: Dir, bytes: usize) -> f64 {
+        bytes as f64 / self.serial_secs(dir, bytes)
+    }
+
+    /// Aggregate bandwidth of a parallel transfer of `bytes` per DPU to
+    /// `n` DPUs **within one rank** (B/s).
+    pub fn parallel_bw(&self, dir: Dir, bytes: usize, n: u32) -> f64 {
+        let n = n.min(self.rank_size);
+        let (a, b) = match dir {
+            Dir::CpuToDpu => self.par_c2d,
+            Dir::DpuToCpu => self.par_d2c,
+        };
+        let bw32 = a * n as f64 / (n as f64 + b);
+        // scale by the size curve so small parallel transfers keep the
+        // fixed-cost penalty of Fig. 10a
+        let scale = self.serial_bw(dir, bytes)
+            / self.serial_bw(dir, CAL_SIZE as usize);
+        bw32 * scale.min(1.0)
+    }
+
+    /// Seconds for a parallel transfer of `bytes` per DPU to `n` DPUs,
+    /// serialized across ranks.
+    pub fn parallel_secs(&self, dir: Dir, bytes: usize, n: u32) -> f64 {
+        if n == 0 || bytes == 0 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        let mut left = n;
+        while left > 0 {
+            let in_rank = left.min(self.rank_size);
+            let bw = self.parallel_bw(dir, bytes, in_rank);
+            total += in_rank as f64 * bytes as f64 / bw;
+            left -= in_rank;
+        }
+        total
+    }
+
+    /// Seconds to broadcast `bytes` to each of `n` DPUs.
+    pub fn broadcast_secs(&self, bytes: usize, n: u32) -> f64 {
+        if n == 0 || bytes == 0 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        let mut left = n;
+        while left > 0 {
+            let in_rank = left.min(self.rank_size);
+            let (a, b) = self.par_bcast;
+            let bw32 = a * in_rank as f64 / (in_rank as f64 + b);
+            let scale = (self.serial_bw(Dir::CpuToDpu, bytes)
+                / self.serial_bw(Dir::CpuToDpu, CAL_SIZE as usize))
+            .min(1.0);
+            total += in_rank as f64 * bytes as f64 / (bw32 * scale);
+            left -= in_rank;
+        }
+        total
+    }
+}
+
+// ------------------------------------------------------------------ engine
+
+/// Functional + timed transfer engine over a set of DPUs.
+///
+/// All functions move real bytes and return modeled seconds; the
+/// coordinator accumulates the seconds into the `CPU-DPU` / `DPU-CPU`
+/// breakdown of the paper's figures.
+pub struct TransferEngine {
+    pub model: XferModel,
+}
+
+impl TransferEngine {
+    pub fn new(model: XferModel) -> Self {
+        TransferEngine { model }
+    }
+
+    /// `dpu_copy_to`: serial transfer of `data` to one DPU's MRAM.
+    pub fn copy_to<T: Pod>(&self, dpu: &mut Dpu, mram_off: usize, data: &[T]) -> f64 {
+        dpu.mram_store(mram_off, data);
+        self.model.serial_secs(Dir::CpuToDpu, std::mem::size_of_val(data))
+    }
+
+    /// `dpu_copy_from`: serial transfer from one DPU's MRAM.
+    pub fn copy_from<T: Pod>(&self, dpu: &Dpu, mram_off: usize, n: usize) -> (Vec<T>, f64) {
+        let v = dpu.mram_load(mram_off, n);
+        let secs = self
+            .model
+            .serial_secs(Dir::DpuToCpu, n * std::mem::size_of::<T>());
+        (v, secs)
+    }
+
+    /// `dpu_prepare_xfer` + `dpu_push_xfer(TO_DPU)`: parallel transfer of
+    /// per-DPU buffers (all the **same size**, as the SDK requires).
+    pub fn push_to<T: Pod>(&self, dpus: &mut [Dpu], mram_off: usize, bufs: &[Vec<T>]) -> f64 {
+        assert_eq!(dpus.len(), bufs.len(), "one buffer per DPU");
+        let size = bufs.first().map_or(0, |b| b.len());
+        assert!(
+            bufs.iter().all(|b| b.len() == size),
+            "parallel transfers require equal sizes (UPMEM SDK 2021.1.1)"
+        );
+        for (d, b) in dpus.iter_mut().zip(bufs) {
+            d.mram_store(mram_off, b);
+        }
+        self.model.parallel_secs(
+            Dir::CpuToDpu,
+            size * std::mem::size_of::<T>(),
+            dpus.len() as u32,
+        )
+    }
+
+    /// `dpu_push_xfer(FROM_DPU)`: parallel retrieval of equal-size buffers.
+    pub fn push_from<T: Pod>(
+        &self,
+        dpus: &[Dpu],
+        mram_off: usize,
+        n: usize,
+    ) -> (Vec<Vec<T>>, f64) {
+        let out: Vec<Vec<T>> = dpus.iter().map(|d| d.mram_load(mram_off, n)).collect();
+        let secs = self.model.parallel_secs(
+            Dir::DpuToCpu,
+            n * std::mem::size_of::<T>(),
+            dpus.len() as u32,
+        );
+        (out, secs)
+    }
+
+    /// `dpu_broadcast_to`: same buffer to every DPU.
+    pub fn broadcast_to<T: Pod>(&self, dpus: &mut [Dpu], mram_off: usize, data: &[T]) -> f64 {
+        for d in dpus.iter_mut() {
+            d.mram_store(mram_off, data);
+        }
+        self.model
+            .broadcast_secs(std::mem::size_of_val(data), dpus.len() as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DpuArch;
+
+    fn model() -> XferModel {
+        XferModel::default()
+    }
+
+    #[test]
+    fn fig10_calibration_points() {
+        let m = model();
+        let mb32 = 32 * 1024 * 1024;
+        // single-DPU 32 MB: 0.33 / 0.12 GB/s
+        assert!((m.serial_bw(Dir::CpuToDpu, mb32) / 1e9 - 0.33).abs() < 0.02);
+        assert!((m.serial_bw(Dir::DpuToCpu, mb32) / 1e9 - 0.12).abs() < 0.01);
+        // 64-DPU parallel: 6.68 / 4.74 GB/s
+        assert!((m.parallel_bw(Dir::CpuToDpu, mb32, 64) / 1e9 - 6.68).abs() < 0.15);
+        assert!((m.parallel_bw(Dir::DpuToCpu, mb32, 64) / 1e9 - 4.74).abs() < 0.15);
+        // broadcast 64: 16.88 GB/s
+        let t = m.broadcast_secs(mb32, 64);
+        let bw = 64.0 * mb32 as f64 / t / 1e9;
+        assert!((bw - 16.88).abs() < 0.4, "bcast {bw}");
+    }
+
+    #[test]
+    fn cpu_to_dpu_faster_than_back() {
+        let m = model();
+        for n in [1u32, 8, 64] {
+            assert!(
+                m.parallel_bw(Dir::CpuToDpu, 1 << 20, n) > m.parallel_bw(Dir::DpuToCpu, 1 << 20, n)
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_scales_sublinearly() {
+        let m = model();
+        let b1 = m.parallel_bw(Dir::CpuToDpu, 32 << 20, 1);
+        let b64 = m.parallel_bw(Dir::CpuToDpu, 32 << 20, 64);
+        let gain = b64 / b1;
+        assert!(gain > 15.0 && gain < 25.0, "gain {gain} (paper: 20.13x)");
+    }
+
+    #[test]
+    fn serial_flat_across_dpus() {
+        // serial transfers: total time grows linearly with DPU count, so
+        // aggregate bandwidth is flat (Fig. 10b "serial" lines).
+        let m = model();
+        let per = m.serial_secs(Dir::CpuToDpu, 32 << 20);
+        let agg_bw_8 = 8.0 * (32 << 20) as f64 / (8.0 * per);
+        let agg_bw_64 = 64.0 * (32 << 20) as f64 / (64.0 * per);
+        assert!((agg_bw_8 - agg_bw_64).abs() < 1.0);
+    }
+
+    #[test]
+    fn ranks_serialize() {
+        let m = model();
+        let one_rank = m.parallel_secs(Dir::CpuToDpu, 1 << 20, 64);
+        let two_ranks = m.parallel_secs(Dir::CpuToDpu, 1 << 20, 128);
+        assert!((two_ranks - 2.0 * one_rank).abs() / one_rank < 1e-9);
+    }
+
+    #[test]
+    fn below_ddr4_peak() {
+        let m = model();
+        for n in [1u32, 16, 64] {
+            assert!(m.parallel_bw(Dir::CpuToDpu, 32 << 20, n) < 19.2e9);
+        }
+        assert!(64.0 * (32u64 << 20) as f64 / m.broadcast_secs(32 << 20, 64) < 19.2e9);
+    }
+
+    #[test]
+    fn engine_moves_data() {
+        let eng = TransferEngine::new(model());
+        let mut dpus: Vec<Dpu> = (0..4).map(|_| Dpu::new(DpuArch::p21())).collect();
+        let bufs: Vec<Vec<i64>> = (0..4).map(|i| vec![i as i64; 8]).collect();
+        let secs = eng.push_to(&mut dpus, 0, &bufs);
+        assert!(secs > 0.0);
+        let (back, secs2) = eng.push_from::<i64>(&dpus, 0, 8);
+        assert!(secs2 > secs, "read-back slower (Key Obs. 9)");
+        assert_eq!(back, bufs);
+        // broadcast
+        let secs3 = eng.broadcast_to(&mut dpus, 1024, &[7i64; 4]);
+        assert!(secs3 > 0.0);
+        for d in &dpus {
+            assert_eq!(d.mram_load::<i64>(1024, 4), vec![7i64; 4]);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "equal sizes")]
+    fn unequal_parallel_rejected() {
+        let eng = TransferEngine::new(model());
+        let mut dpus: Vec<Dpu> = (0..2).map(|_| Dpu::new(DpuArch::p21())).collect();
+        let bufs = vec![vec![1i64; 4], vec![1i64; 8]];
+        eng.push_to(&mut dpus, 0, &bufs);
+    }
+}

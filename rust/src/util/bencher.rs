@@ -1,0 +1,135 @@
+//! Minimal benchmarking harness (the vendored crate set has no criterion).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! timed repetitions, median/mean/stddev report, and an optional
+//! comparison column. Wall-clock is measured with `std::time::Instant`.
+
+use super::stats::{mean, median, stddev};
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub secs: Vec<f64>,
+    /// Optional work amount for throughput reporting (items per rep).
+    pub items: Option<f64>,
+}
+
+impl Sample {
+    pub fn median(&self) -> f64 {
+        median(&self.secs)
+    }
+}
+
+/// Runner collecting samples.
+pub struct Bencher {
+    pub samples: Vec<Sample>,
+    warmup: usize,
+    reps: usize,
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // honor a quick mode for CI-ish runs
+        let quick = std::env::var("BENCH_QUICK").is_ok();
+        Bencher {
+            samples: Vec::new(),
+            warmup: if quick { 0 } else { 1 },
+            reps: if quick { 2 } else { 5 },
+        }
+    }
+
+    /// Time `f` (called `reps` times after warmup).
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Sample {
+        self.bench_items(name, None, &mut f)
+    }
+
+    /// Time `f`, reporting throughput for `items` work items per call.
+    pub fn bench_items<R>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut impl FnMut() -> R,
+    ) -> &Sample {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut secs = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        self.samples.push(Sample {
+            name: name.to_string(),
+            secs,
+            items,
+        });
+        self.samples.last().unwrap()
+    }
+
+    /// Print the report table.
+    pub fn report(&self, title: &str) {
+        println!("\n== bench: {title} ==");
+        println!(
+            "{:<44} {:>12} {:>12} {:>10} {:>14}",
+            "name", "median", "mean", "stddev", "throughput"
+        );
+        for s in &self.samples {
+            let med = median(&s.secs);
+            let thr = s
+                .items
+                .map(|n| format!("{:.2} M/s", n / med / 1e6))
+                .unwrap_or_else(|| "-".to_string());
+            println!(
+                "{:<44} {:>12} {:>12} {:>10} {:>14}",
+                s.name,
+                fmt_secs(med),
+                fmt_secs(mean(&s.secs)),
+                fmt_secs(stddev(&s.secs)),
+                thr
+            );
+        }
+    }
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_collects_samples() {
+        let mut b = Bencher::new();
+        b.bench("noop", || 1 + 1);
+        assert_eq!(b.samples.len(), 1);
+        assert!(!b.samples[0].secs.is_empty());
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with("ms"));
+        assert!(fmt_secs(2e-6).ends_with("us"));
+        assert!(fmt_secs(2e-9).ends_with("ns"));
+    }
+}

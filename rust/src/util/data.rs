@@ -1,0 +1,302 @@
+//! Synthetic dataset generators with the statistics of the paper's inputs.
+//!
+//! The paper uses external datasets we cannot download (bcsstk30 from
+//! Matrix Market, loc-gowalla from SNAP, a van Hateren natural image). Each
+//! generator below matches the *property that the kernel is sensitive to*:
+//! sparsity structure (banded SPD pattern), degree skew (rMat power law —
+//! which the paper itself uses for BFS weak scaling), and pixel-value
+//! distribution (natural images are low-entropy / bimodal).
+
+use super::rng::Rng;
+
+/// CSR sparse matrix (f32 values), the format used by SpMV and BFS.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Dense reference SpMV: y = A * x.
+    pub fn spmv_ref(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_cols);
+        let mut y = vec![0f32; self.n_rows];
+        for r in 0..self.n_rows {
+            let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            let mut acc = 0f32;
+            for k in s..e {
+                acc += self.values[k] * x[self.col_idx[k] as usize];
+            }
+            y[r] = acc;
+        }
+        y
+    }
+}
+
+/// Banded symmetric-positive-definite-like pattern, the structure class of
+/// bcsstk30 (a stiffness matrix: dense band around the diagonal with
+/// irregular row population). `band` is the half-bandwidth; `fill` the
+/// expected fraction of in-band entries present.
+pub fn banded_matrix(n: usize, band: usize, fill: f64, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    let mut col_idx = Vec::new();
+    let mut values = Vec::new();
+    row_ptr.push(0u32);
+    for r in 0..n {
+        let lo = r.saturating_sub(band);
+        let hi = (r + band + 1).min(n);
+        for c in lo..hi {
+            if c == r || rng.chance(fill) {
+                col_idx.push(c as u32);
+                values.push(rng.f32() * 2.0 - 1.0);
+            }
+        }
+        row_ptr.push(col_idx.len() as u32);
+    }
+    Csr {
+        n_rows: n,
+        n_cols: n,
+        row_ptr,
+        col_idx,
+        values,
+    }
+}
+
+/// Unweighted directed graph in CSR (adjacency) form for BFS.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n_vertices: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+}
+
+impl Graph {
+    pub fn n_edges(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Reference BFS distances from `src` (u32::MAX = unreachable).
+    pub fn bfs_ref(&self, src: usize) -> Vec<u32> {
+        let mut dist = vec![u32::MAX; self.n_vertices];
+        let mut frontier = vec![src];
+        dist[src] = 0;
+        let mut level = 0u32;
+        while !frontier.is_empty() {
+            level += 1;
+            let mut next = Vec::new();
+            for &v in &frontier {
+                let (s, e) = (self.row_ptr[v] as usize, self.row_ptr[v + 1] as usize);
+                for &w in &self.col_idx[s..e] {
+                    if dist[w as usize] == u32::MAX {
+                        dist[w as usize] = level;
+                        next.push(w as usize);
+                    }
+                }
+            }
+            frontier = next;
+        }
+        dist
+    }
+}
+
+/// R-MAT power-law graph (the generator the paper itself uses for BFS weak
+/// scaling): recursive quadrant selection with probabilities (a,b,c,d) =
+/// (0.57, 0.19, 0.19, 0.05), deduplicated, symmetrized like loc-gowalla
+/// (an undirected friendship graph).
+pub fn rmat_graph(n_vertices: usize, n_edges: usize, seed: u64) -> Graph {
+    let scale = (n_vertices.max(2) as f64).log2().ceil() as u32;
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(2 * n_edges);
+    for _ in 0..n_edges {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.f64();
+            let (du, dv) = if r < 0.57 {
+                (0, 0)
+            } else if r < 0.76 {
+                (0, 1)
+            } else if r < 0.95 {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        let (u, v) = (u % n_vertices.max(1), v % n_vertices.max(1));
+        if u != v {
+            edges.push((u as u32, v as u32));
+            edges.push((v as u32, u as u32));
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    let mut row_ptr = vec![0u32; n_vertices + 1];
+    for &(u, _) in &edges {
+        row_ptr[u as usize + 1] += 1;
+    }
+    for i in 0..n_vertices {
+        row_ptr[i + 1] += row_ptr[i];
+    }
+    let col_idx = edges.iter().map(|&(_, v)| v).collect();
+    Graph {
+        n_vertices,
+        row_ptr,
+        col_idx,
+    }
+}
+
+/// Synthetic "natural image" pixel stream: mixture of two broad Gaussians
+/// (sky/ground bimodality of the van Hateren set), clamped to the sensor
+/// depth. `depth_bits` ≤ 16; HST bins index these values.
+pub fn natural_image(n_pixels: usize, depth_bits: u32, seed: u64) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    let max = (1u32 << depth_bits) - 1;
+    let mut px = Vec::with_capacity(n_pixels);
+    for _ in 0..n_pixels {
+        let (mu, sigma) = if rng.chance(0.6) {
+            (0.3, 0.12)
+        } else {
+            (0.7, 0.15)
+        };
+        // Box–Muller
+        let u1 = rng.f64().max(1e-12);
+        let u2 = rng.f64();
+        let g = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        let v = ((mu + sigma * g).clamp(0.0, 1.0) * max as f64) as u32;
+        px.push(v);
+    }
+    px
+}
+
+/// Sorted i64 array + query values for binary search.
+pub fn sorted_with_queries(n: usize, n_queries: usize, seed: u64) -> (Vec<i64>, Vec<i64>) {
+    let mut rng = Rng::new(seed);
+    // strictly increasing so every element is found at a unique position
+    let mut arr = Vec::with_capacity(n);
+    let mut v = 0i64;
+    for _ in 0..n {
+        v += 1 + rng.below(4) as i64;
+        arr.push(v);
+    }
+    let queries = (0..n_queries).map(|_| arr[rng.below(n as u64) as usize]).collect();
+    (arr, queries)
+}
+
+/// Random-walk time series (matrix-profile workloads are run on physiological
+/// / sensor random-walk-like signals) as i32, plus a query drawn from it.
+pub fn time_series(n: usize, query_len: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let mut ts = Vec::with_capacity(n);
+    let mut v: i64 = 0;
+    for _ in 0..n {
+        v += rng.below(201) as i64 - 100;
+        ts.push(v.clamp(i32::MIN as i64, i32::MAX as i64) as i32);
+    }
+    let start = rng.below((n - query_len) as u64) as usize;
+    let query = ts[start..start + query_len].to_vec();
+    (ts, query)
+}
+
+/// DNA-like sequences (values 0..4) for Needleman–Wunsch.
+pub fn dna_pair(len_a: usize, len_b: usize, seed: u64) -> (Vec<u8>, Vec<u8>) {
+    let mut rng = Rng::new(seed);
+    let a: Vec<u8> = (0..len_a).map(|_| rng.below(4) as u8).collect();
+    // b = a with ~20% point mutations, so alignment is meaningful
+    let b: Vec<u8> = (0..len_b)
+        .map(|i| {
+            if i < a.len() && !rng.chance(0.2) {
+                a[i]
+            } else {
+                rng.below(4) as u8
+            }
+        })
+        .collect();
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banded_structure() {
+        let m = banded_matrix(100, 8, 0.5, 1);
+        assert_eq!(m.row_ptr.len(), 101);
+        assert_eq!(m.row_ptr[100] as usize, m.nnz());
+        // diagonal always present, entries within band
+        for r in 0..100usize {
+            let (s, e) = (m.row_ptr[r] as usize, m.row_ptr[r + 1] as usize);
+            assert!(m.col_idx[s..e].contains(&(r as u32)));
+            for &c in &m.col_idx[s..e] {
+                assert!((c as i64 - r as i64).unsigned_abs() <= 8);
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_ref_identity_band() {
+        // band 0, fill 0 -> diagonal matrix
+        let m = banded_matrix(10, 0, 0.0, 2);
+        let x: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let y = m.spmv_ref(&x);
+        for i in 0..10 {
+            assert!((y[i] - m.values[i] * x[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rmat_valid_csr() {
+        let g = rmat_graph(256, 2048, 3);
+        assert_eq!(g.row_ptr.len(), 257);
+        assert_eq!(*g.row_ptr.last().unwrap() as usize, g.n_edges());
+        for &c in &g.col_idx {
+            assert!((c as usize) < 256);
+        }
+        // power-law-ish: max degree well above mean
+        let degs: Vec<u32> = (0..256).map(|v| g.row_ptr[v + 1] - g.row_ptr[v]).collect();
+        let max = *degs.iter().max().unwrap() as f64;
+        let mean = g.n_edges() as f64 / 256.0;
+        assert!(max > 2.0 * mean, "max {max} mean {mean}");
+    }
+
+    #[test]
+    fn bfs_ref_line_graph() {
+        // path 0-1-2-3
+        let g = Graph {
+            n_vertices: 4,
+            row_ptr: vec![0, 1, 3, 5, 6],
+            col_idx: vec![1, 0, 2, 1, 3, 2],
+        };
+        assert_eq!(g.bfs_ref(0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn image_in_depth() {
+        let px = natural_image(1000, 8, 4);
+        assert!(px.iter().all(|&p| p < 256));
+    }
+
+    #[test]
+    fn sorted_queries_found() {
+        let (arr, qs) = sorted_with_queries(1000, 50, 5);
+        assert!(arr.windows(2).all(|w| w[0] < w[1]));
+        for q in qs {
+            assert!(arr.binary_search(&q).is_ok());
+        }
+    }
+
+    #[test]
+    fn dna_alphabet() {
+        let (a, b) = dna_pair(64, 64, 6);
+        assert!(a.iter().chain(b.iter()).all(|&c| c < 4));
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared utilities: deterministic RNG, plain-old-data casts, statistics,
+//! synthetic dataset generators, table/CSV output, and a minimal
+//! property-based-testing framework (the vendored crate set has no proptest).
+
+pub mod bencher;
+pub mod data;
+pub mod pod;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use pod::{cast_slice, cast_slice_mut, Pod};
+pub use rng::Rng;

@@ -1,0 +1,160 @@
+//! Minimal plain-old-data casting (the vendored crate set has no bytemuck).
+//!
+//! Simulated DPU memories (MRAM/WRAM) are stored as `Vec<u64>`-backed byte
+//! buffers so that any `Pod` slice view (align ≤ 8) is valid as long as the
+//! byte offset is a multiple of the element size — which mirrors the UPMEM
+//! SDK's own 8-byte alignment rules for DMA transfers.
+
+/// Types that are safe to reinterpret to/from raw bytes.
+///
+/// # Safety
+/// Implementors must be `repr(C)` scalars with no padding and no invalid bit
+/// patterns.
+pub unsafe trait Pod: Copy + Send + Sync + 'static {}
+
+unsafe impl Pod for u8 {}
+unsafe impl Pod for i8 {}
+unsafe impl Pod for u16 {}
+unsafe impl Pod for i16 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for i32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for i64 {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+
+/// View a byte slice as a `&[T]`. Panics on misalignment or ragged length.
+pub fn cast_slice<T: Pod>(bytes: &[u8]) -> &[T] {
+    let size = std::mem::size_of::<T>();
+    assert_eq!(bytes.len() % size, 0, "ragged cast: {} % {}", bytes.len(), size);
+    assert_eq!(
+        bytes.as_ptr() as usize % std::mem::align_of::<T>(),
+        0,
+        "misaligned cast"
+    );
+    // SAFETY: alignment and length checked above; T is Pod.
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const T, bytes.len() / size) }
+}
+
+/// View a mutable byte slice as a `&mut [T]`.
+pub fn cast_slice_mut<T: Pod>(bytes: &mut [u8]) -> &mut [T] {
+    let size = std::mem::size_of::<T>();
+    assert_eq!(bytes.len() % size, 0, "ragged cast: {} % {}", bytes.len(), size);
+    assert_eq!(
+        bytes.as_ptr() as usize % std::mem::align_of::<T>(),
+        0,
+        "misaligned cast"
+    );
+    // SAFETY: alignment and length checked above; T is Pod.
+    unsafe { std::slice::from_raw_parts_mut(bytes.as_mut_ptr() as *mut T, bytes.len() / size) }
+}
+
+/// Copy a typed slice into a byte buffer at `off`.
+pub fn write_pod_slice<T: Pod>(bytes: &mut [u8], off: usize, src: &[T]) {
+    let size = std::mem::size_of::<T>();
+    let dst = &mut bytes[off..off + src.len() * size];
+    // SAFETY: T is Pod; ranges checked by the slice index above.
+    unsafe {
+        std::ptr::copy_nonoverlapping(src.as_ptr() as *const u8, dst.as_mut_ptr(), dst.len());
+    }
+}
+
+/// Read a typed vector out of a byte buffer at `off`.
+pub fn read_pod_vec<T: Pod>(bytes: &[u8], off: usize, n: usize) -> Vec<T> {
+    let size = std::mem::size_of::<T>();
+    let src = &bytes[off..off + n * size];
+    let mut out = Vec::<T>::with_capacity(n);
+    // SAFETY: T is Pod; `out` capacity is n; src length is n*size.
+    unsafe {
+        std::ptr::copy_nonoverlapping(src.as_ptr(), out.as_mut_ptr() as *mut u8, src.len());
+        out.set_len(n);
+    }
+    out
+}
+
+/// A byte buffer backed by `u64` storage, guaranteeing 8-byte base alignment.
+#[derive(Clone, Debug, Default)]
+pub struct AlignedBuf {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    /// New buffer of `len` zeroed bytes.
+    pub fn new(len: usize) -> Self {
+        AlignedBuf {
+            words: vec![0u64; len.div_ceil(8)],
+            len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Grow (zero-filled) so that at least `len` bytes are addressable.
+    pub fn ensure(&mut self, len: usize) {
+        if len > self.len {
+            self.words.resize(len.div_ceil(8), 0);
+            self.len = len;
+        }
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: u64 storage reinterpreted as bytes; len <= words*8.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len) }
+    }
+
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        // SAFETY: as above.
+        unsafe { std::slice::from_raw_parts_mut(self.words.as_mut_ptr() as *mut u8, self.len) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_i32() {
+        let mut buf = AlignedBuf::new(64);
+        write_pod_slice(buf.bytes_mut(), 8, &[1i32, -2, 3, 4]);
+        let v: Vec<i32> = read_pod_vec(buf.bytes(), 8, 4);
+        assert_eq!(v, vec![1, -2, 3, 4]);
+    }
+
+    #[test]
+    fn cast_alignment_from_aligned_buf() {
+        let mut buf = AlignedBuf::new(32);
+        write_pod_slice(buf.bytes_mut(), 0, &[1u64, 2, 3, 4]);
+        let s: &[u64] = cast_slice(buf.bytes());
+        assert_eq!(s, &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn ensure_grows_zeroed() {
+        let mut buf = AlignedBuf::new(8);
+        buf.ensure(24);
+        assert_eq!(buf.len(), 24);
+        assert!(buf.bytes().iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn f64_roundtrip() {
+        let mut buf = AlignedBuf::new(16);
+        write_pod_slice(buf.bytes_mut(), 0, &[1.5f64, -2.25]);
+        let v: Vec<f64> = read_pod_vec(buf.bytes(), 0, 2);
+        assert_eq!(v, vec![1.5, -2.25]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_cast_panics() {
+        let b = [0u8; 7];
+        let _: &[u32] = cast_slice(&b);
+    }
+}

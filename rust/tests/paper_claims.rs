@@ -1,0 +1,157 @@
+//! The paper's Key Observations and Takeaways, asserted end-to-end against
+//! the simulator — the repository-level statement of what "reproduces the
+//! paper" means.
+
+use prim_pim::arch::{DpuArch, DType, Op};
+use prim_pim::micro::{arith, mram, mram_stream, strided};
+use prim_pim::prim::common::{PrimBench, RunConfig};
+use prim_pim::util::stats::linear_fit;
+
+/// KEY OBSERVATION 1: arithmetic throughput saturates at 11+ tasklets for
+/// every data type and operation.
+#[test]
+fn key_obs_1_saturation_at_11() {
+    let arch = DpuArch::p21();
+    for dt in [DType::I32, DType::I64, DType::F32, DType::F64] {
+        for op in Op::ARITH {
+            let t11 = arith::throughput_mops(arch, dt, op, 11);
+            let t24 = arith::throughput_mops(arch, dt, op, 24);
+            assert!((t24 - t11).abs() / t11 < 0.02, "{dt:?} {op:?}");
+        }
+    }
+}
+
+/// KEY OBSERVATION 2: native add/sub fast; mul/div/FP an order of
+/// magnitude (or more) slower.
+#[test]
+fn key_obs_2_operation_hierarchy() {
+    let arch = DpuArch::p21();
+    let add = arith::throughput_mops(arch, DType::I32, Op::Add, 16);
+    let mul = arith::throughput_mops(arch, DType::I32, Op::Mul, 16);
+    let fdiv = arith::throughput_mops(arch, DType::F64, Op::Div, 16);
+    assert!(add / mul > 4.0, "add {add} vs mul {mul}");
+    assert!(add / fdiv > 100.0, "add {add} vs f64-div {fdiv}");
+}
+
+/// KEY OBSERVATION 4: MRAM latency is linear in transfer size (α + β·size)
+/// with β = 0.5 cycles/byte.
+#[test]
+fn key_obs_4_linear_mram_latency() {
+    let pts = mram::fig6_sweep(DpuArch::p21(), true);
+    let xs: Vec<f64> = pts.iter().map(|p| p.bytes as f64).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.latency_cycles).collect();
+    let (_a, b, r2) = linear_fit(&xs, &ys);
+    assert!((b - 0.5).abs() < 0.02);
+    assert!(r2 > 0.999);
+}
+
+/// KEY OBSERVATION 5: memory-bound streaming (COPY) saturates below 11
+/// tasklets; compute-bound streaming (SCALE) needs all 11.
+#[test]
+fn key_obs_5_memory_vs_compute_bound() {
+    use mram_stream::{mram_stream_bw, MramStream};
+    use prim_pim::micro::wram_stream::Stream;
+    let arch = DpuArch::p21();
+    let n = 16 * 1024;
+    // COPY: flat from 6 tasklets on
+    let c6 = mram_stream_bw(arch, MramStream::Stream(Stream::Copy), 6, n);
+    let c16 = mram_stream_bw(arch, MramStream::Stream(Stream::Copy), 16, n);
+    assert!((c16 - c6).abs() / c6 < 0.08, "COPY {c6} vs {c16}");
+    // SCALE: still gaining at 11
+    let s8 = mram_stream_bw(arch, MramStream::Stream(Stream::Scale), 8, n);
+    let s11 = mram_stream_bw(arch, MramStream::Stream(Stream::Scale), 11, n);
+    assert!(s11 > s8 * 1.25, "SCALE {s8} vs {s11}");
+}
+
+/// PROGRAMMING RECOMMENDATION 4: coarse-grained DMA for small strides,
+/// fine-grained for stride ≥ 16 and random access.
+#[test]
+fn prog_rec_4_stride_crossover() {
+    let arch = DpuArch::p21();
+    let n = 8 * 1024;
+    assert!(strided::coarse_strided_bw(arch, 2, 16, n) > strided::fine_strided_bw(arch, 2, 16, n));
+    assert!(strided::fine_strided_bw(arch, 32, 16, n) > strided::coarse_strided_bw(arch, 32, 16, n));
+}
+
+/// KEY OBSERVATION 11: mutex-heavy kernels stop scaling with tasklets.
+#[test]
+fn key_obs_11_mutex_limits_scaling() {
+    use prim_pim::prim::hst::{run_hst, HstKind};
+    let mk = |t: u32| RunConfig {
+        n_dpus: 1,
+        n_tasklets: t,
+        scale: 0.002,
+        ..RunConfig::rank_default()
+    };
+    let l8 = run_hst(HstKind::Long, "HST-L", &mk(8), 256).breakdown.dpu;
+    let l16 = run_hst(HstKind::Long, "HST-L", &mk(16), 256).breakdown.dpu;
+    // no meaningful gain from 8 → 16 under the mutex
+    assert!(l16 > 0.85 * l8, "HST-L t8={l8} t16={l16}");
+}
+
+/// KEY OBSERVATION 17: equally-sized problems per DPU + little sync →
+/// flat weak scaling of the DPU kernel time.
+#[test]
+fn key_obs_17_weak_scaling_flat() {
+    let b = prim_pim::prim::bench_by_name("RED").unwrap();
+    let mut times = Vec::new();
+    for nd in [1u32, 4, 16] {
+        let rc = RunConfig {
+            n_dpus: nd,
+            n_tasklets: 16,
+            scale: 0.002 * nd as f64,
+            ..RunConfig::rank_default()
+        };
+        let r = b.run(&rc);
+        assert!(r.verified);
+        times.push(r.breakdown.dpu);
+    }
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    let min = times.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(max / min < 1.3, "weak scaling {times:?}");
+}
+
+/// KEY TAKEAWAY 3 / KEY OBSERVATION 16: inter-DPU-communication-heavy
+/// workloads (BFS, NW) are dominated by host synchronization, which grows
+/// with DPU count.
+#[test]
+fn takeaway_3_inter_dpu_dominates_bfs_nw() {
+    let mk = |name: &str, nd: u32| {
+        let b = prim_pim::prim::bench_by_name(name).unwrap();
+        let rc = RunConfig {
+            n_dpus: nd,
+            n_tasklets: 16,
+            scale: if name == "NW" { 0.05 } else { 0.01 },
+            ..RunConfig::rank_default()
+        };
+        b.run(&rc)
+    };
+    let bfs = mk("BFS", 32);
+    assert!(bfs.breakdown.inter_dpu > bfs.breakdown.dpu, "BFS inter-bound at 32 DPUs");
+    let nw = mk("NW", 32);
+    assert!(nw.breakdown.inter_dpu > nw.breakdown.dpu, "NW inter-bound at 32 DPUs");
+    // and VA is not
+    let va = mk("VA", 32);
+    assert!(va.breakdown.inter_dpu < va.breakdown.dpu);
+}
+
+/// KEY TAKEAWAY 1/2 summary: a streaming native-add workload (VA) uses the
+/// DPU pipeline efficiently, an FP-mul workload (SpMV) does not.
+#[test]
+fn takeaway_1_2_pipeline_suitability() {
+    let mk = |name: &str| {
+        let b = prim_pim::prim::bench_by_name(name).unwrap();
+        let rc = RunConfig {
+            n_dpus: 2,
+            n_tasklets: 16,
+            scale: 0.005,
+            ..RunConfig::rank_default()
+        };
+        b.run(&rc)
+    };
+    let va = mk("VA");
+    let spmv = mk("SpMV");
+    let va_per_item = va.breakdown.dpu / va.work_items as f64;
+    let spmv_per_item = spmv.breakdown.dpu / spmv.work_items as f64;
+    assert!(spmv_per_item > 5.0 * va_per_item);
+}

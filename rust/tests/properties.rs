@@ -1,0 +1,277 @@
+//! Property-based tests (hand-rolled framework in `util::proptest`) over
+//! the coordinator, transfer engine, timing engine, and benchmark kernels.
+
+use prim_pim::arch::{DpuArch, SystemConfig};
+use prim_pim::coordinator::{chunk_ranges, chunk_ranges_aligned, cyclic_blocks, PimSet};
+use prim_pim::dpu::{replay, timing_ref::replay_stepped, Ctx, Ev, Trace};
+use prim_pim::prim::common::RunConfig;
+use prim_pim::util::proptest::{props, Gen};
+
+// ----------------------------------------------------------- partitioning
+
+#[test]
+fn prop_chunk_ranges_partition_exactly() {
+    props("chunk_ranges partitions", 200, |g: &mut Gen| {
+        let n = g.usize_in(0..10_000);
+        let p = g.usize_in(1..100);
+        let rs = chunk_ranges(n, p);
+        assert_eq!(rs.len(), p);
+        let mut cursor = 0;
+        for r in &rs {
+            assert_eq!(r.start, cursor, "contiguous");
+            cursor = r.end;
+        }
+        assert_eq!(cursor, n, "covers");
+        let sizes: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1, "balanced");
+    });
+}
+
+#[test]
+fn prop_aligned_chunks_partition() {
+    props("aligned chunks partition", 200, |g: &mut Gen| {
+        let n = g.usize_in(0..10_000);
+        let p = g.usize_in(1..64);
+        let align = 1 << g.usize_in(0..7);
+        let rs = chunk_ranges_aligned(n, p, align);
+        let mut cursor = 0;
+        for r in &rs {
+            assert_eq!(r.start, cursor);
+            if r.start < n {
+                // non-empty ranges start aligned; empty trailing ranges
+                // are clipped to n, which need not be aligned
+                assert_eq!(r.start % align, 0);
+            }
+            cursor = r.end;
+        }
+        assert_eq!(cursor, n);
+    });
+}
+
+#[test]
+fn prop_cyclic_blocks_cover_once() {
+    props("cyclic blocks cover", 100, |g: &mut Gen| {
+        let blocks = g.usize_in(0..500);
+        let workers = g.usize_in(1..32);
+        let asg = cyclic_blocks(blocks, workers);
+        let mut seen: Vec<usize> = asg.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..blocks).collect::<Vec<_>>());
+    });
+}
+
+// -------------------------------------------------------- transfer engine
+
+#[test]
+fn prop_transfer_roundtrip() {
+    props("push_to/push_from roundtrip", 30, |g: &mut Gen| {
+        let nd = g.usize_in(1..9);
+        let n = g.usize_in(1..200);
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), nd as u32);
+        let bufs: Vec<Vec<i64>> = (0..nd).map(|_| g.vec_i64(n..n + 1, -1000..1000)).collect();
+        set.push_to(0, &bufs);
+        let back = set.push_from::<i64>(0, n);
+        assert_eq!(back, bufs);
+        // broadcast reaches every DPU identically
+        let msg = g.vec_i64(8..9, 0..100);
+        set.broadcast(4096, &msg);
+        for d in 0..nd {
+            assert_eq!(set.copy_from::<i64>(d, 4096, 8), msg);
+        }
+    });
+}
+
+#[test]
+fn prop_transfer_times_scale_with_bytes() {
+    props("transfer time monotone in size", 50, |g: &mut Gen| {
+        let m = prim_pim::system::XferModel::default();
+        let a = g.usize_in(8..1 << 20);
+        let b = a * 2;
+        use prim_pim::system::Dir;
+        for dir in [Dir::CpuToDpu, Dir::DpuToCpu] {
+            assert!(m.serial_secs(dir, b) > m.serial_secs(dir, a));
+            assert!(m.parallel_secs(dir, b, 16) > m.parallel_secs(dir, a, 16));
+        }
+    });
+}
+
+// ----------------------------------------------------------- timing engine
+
+fn random_trace(g: &mut Gen, max_events: usize) -> Trace {
+    let mut t = Trace::default();
+    let n = g.usize_in(1..max_events);
+    for _ in 0..n {
+        if g.bool() {
+            t.push_compute(g.usize_in(1..5000) as u64);
+        } else {
+            let bytes = (g.usize_in(1..256) * 8) as u32;
+            if g.bool() {
+                t.push(Ev::DmaRead(bytes));
+            } else {
+                t.push(Ev::DmaWrite(bytes));
+            }
+        }
+    }
+    t
+}
+
+#[test]
+fn prop_fluid_matches_stepped_reference() {
+    props("fluid vs cycle-stepped timing", 25, |g: &mut Gen| {
+        let arch = DpuArch::p21();
+        let nt = g.usize_in(1..9);
+        let traces: Vec<Trace> = (0..nt).map(|_| random_trace(g, 12)).collect();
+        let fluid = replay(&traces, &arch, nt as u32).cycles;
+        let stepped = replay_stepped(&traces, &arch) as f64;
+        let err = (fluid - stepped).abs() / stepped.max(1.0);
+        assert!(err < 0.05, "fluid {fluid} vs stepped {stepped} ({err:.3})");
+    });
+}
+
+#[test]
+fn prop_timing_monotone_in_work() {
+    props("more instructions never faster", 50, |g: &mut Gen| {
+        let arch = DpuArch::p21();
+        let nt = g.usize_in(1..17);
+        let base = g.usize_in(100..100_000) as u64;
+        let extra = g.usize_in(1..50_000) as u64;
+        let mk = |instrs: u64| -> Vec<Trace> {
+            (0..nt)
+                .map(|_| {
+                    let mut t = Trace::default();
+                    t.push_compute(instrs);
+                    t
+                })
+                .collect()
+        };
+        let t1 = replay(&mk(base), &arch, nt as u32).cycles;
+        let t2 = replay(&mk(base + extra), &arch, nt as u32).cycles;
+        assert!(t2 > t1);
+    });
+}
+
+#[test]
+fn prop_timing_deterministic() {
+    props("replay deterministic", 25, |g: &mut Gen| {
+        let arch = DpuArch::p21();
+        let nt = g.usize_in(1..9);
+        let traces: Vec<Trace> = (0..nt).map(|_| random_trace(g, 10)).collect();
+        let a = replay(&traces, &arch, nt as u32);
+        let b = replay(&traces, &arch, nt as u32);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.instrs, b.instrs);
+    });
+}
+
+#[test]
+fn prop_frequency_scales_time_not_cycles() {
+    props("cycles independent of frequency", 25, |g: &mut Gen| {
+        let nt = g.usize_in(1..9);
+        let traces: Vec<Trace> = (0..nt).map(|_| random_trace(g, 8)).collect();
+        let p21 = replay(&traces, &DpuArch::p21(), nt as u32).cycles;
+        let e19 = replay(&traces, &DpuArch::e19(), nt as u32).cycles;
+        assert!((p21 - e19).abs() < 1e-6, "same microarchitecture, same cycles");
+    });
+}
+
+// ----------------------------------------------------- kernels end-to-end
+
+#[test]
+fn prop_dpu_kernel_sum_matches_host() {
+    props("DPU sum == host sum", 20, |g: &mut Gen| {
+        let nt = g.usize_in(1..17) as u32;
+        let data = g.vec_i64(16..512, -1_000_000..1_000_000);
+        let n = data.len() & !7;
+        let data = &data[..n.max(8)];
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 1);
+        set.copy_to(0, 0, data);
+        let total_off = (data.len() * 8 + 7) & !7;
+        let n_items = data.len();
+        set.launch(nt, |_d, ctx: &mut Ctx| {
+            let t = ctx.tasklet_id as usize;
+            let slots = ctx.mem_alloc_shared(1, ctx.n_tasklets as usize * 8);
+            let buf = ctx.mem_alloc(1024);
+            let my = chunk_ranges(n_items, ctx.n_tasklets as usize)[t].clone();
+            let mut acc = 0i64;
+            let mut k = my.start;
+            while k < my.end {
+                let cnt = (my.end - k).min(128);
+                let k0 = k & !0usize;
+                ctx.mram_read(k0 * 8, buf, ((cnt * 8 + 7) & !7).max(8));
+                let v: Vec<i64> = ctx.wram_get(buf, cnt);
+                acc += v.iter().sum::<i64>();
+                ctx.compute(cnt as u64 * 3);
+                k += cnt;
+            }
+            ctx.wram_set(slots + t * 8, &[acc]);
+            ctx.barrier(0);
+            if t == 0 {
+                let parts: Vec<i64> = ctx.wram_get(slots, ctx.n_tasklets as usize);
+                ctx.wram_set(slots, &[parts.iter().sum::<i64>()]);
+                ctx.wram(|w| {
+                    let v = prim_pim::util::pod::read_pod_vec::<i64>(w, slots, 1);
+                    prim_pim::util::pod::write_pod_slice(w, slots, &v);
+                });
+                let total: Vec<i64> = ctx.wram_get(slots, 1);
+                ctx.wram_set(slots, &total);
+                ctx.mram_write(slots, total_off, 8);
+            }
+        });
+        let got = set.copy_from::<i64>(0, total_off, 1)[0];
+        assert_eq!(got, data.iter().sum::<i64>());
+    });
+}
+
+#[test]
+fn prop_sel_uni_match_reference_any_config() {
+    props("SEL/UNI reference equality", 12, |g: &mut Gen| {
+        use prim_pim::prim::sel::Sel;
+        use prim_pim::prim::uni::Uni;
+        use prim_pim::prim::common::PrimBench;
+        let rc = RunConfig {
+            n_dpus: [1u32, 2, 4, 8][g.usize_in(0..4)],
+            n_tasklets: [1u32, 3, 8, 16][g.usize_in(0..4)],
+            scale: 0.0005 + g.f64() * 0.002,
+            seed: g.rng().next_u64(),
+            sys: SystemConfig::p21_rank(),
+        };
+        assert!(Sel.run(&rc).verified, "{rc:?}");
+        assert!(Uni.run(&rc).verified, "{rc:?}");
+    });
+}
+
+#[test]
+fn prop_scan_matches_reference_any_config() {
+    props("SCAN reference equality", 10, |g: &mut Gen| {
+        use prim_pim::prim::common::PrimBench;
+        use prim_pim::prim::scan::{ScanRss, ScanSsa};
+        let rc = RunConfig {
+            n_dpus: [1u32, 3, 8][g.usize_in(0..3)],
+            n_tasklets: [2u32, 7, 16][g.usize_in(0..3)],
+            scale: 0.0005 + g.f64() * 0.002,
+            seed: g.rng().next_u64(),
+            sys: SystemConfig::p21_rank(),
+        };
+        assert!(ScanSsa.run(&rc).verified, "{rc:?}");
+        assert!(ScanRss.run(&rc).verified, "{rc:?}");
+    });
+}
+
+#[test]
+fn prop_fleet_native_equals_formula() {
+    props("fleet estimator formula", 100, |g: &mut Gen| {
+        use prim_pim::runtime::{fleet_cycles_native, DpuDesc};
+        let d = DpuDesc {
+            instrs_per_tasklet: g.usize_in(0..1_000_000) as f64,
+            tasklets: g.usize_in(1..25) as f64,
+            n_reads: g.usize_in(0..10_000) as f64,
+            read_bytes: (g.usize_in(1..257) * 8) as f64,
+            n_writes: g.usize_in(0..10_000) as f64,
+            write_bytes: (g.usize_in(1..257) * 8) as f64,
+        };
+        let c = fleet_cycles_native(&[d])[0];
+        let pipeline = d.instrs_per_tasklet * 11f64.max(d.tasklets);
+        let dma = d.n_reads * (77.0 + 0.5 * d.read_bytes) + d.n_writes * (61.0 + 0.5 * d.write_bytes);
+        assert_eq!(c, pipeline.max(dma));
+    });
+}
