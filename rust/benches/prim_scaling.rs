@@ -19,6 +19,7 @@ fn main() {
             scale,
             seed: 42,
             sys: SystemConfig::p21_rank(),
+            exec: Default::default(),
         };
         let mut items = 0f64;
         b.bench_items(&format!("{name} @16dpu"), Some(1.0), &mut || {

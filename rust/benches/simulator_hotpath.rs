@@ -2,10 +2,11 @@
 //! DESIGN.md): timing-engine event rate, functional launch overhead,
 //! WRAM/MRAM access costs, transfer engine, and the PJRT fleet estimator.
 
-use prim_pim::arch::{DpuArch, SystemConfig};
-use prim_pim::coordinator::PimSet;
+use prim_pim::arch::{DType, DpuArch, Op, SystemConfig};
+use prim_pim::coordinator::{ParallelExecutor, PimSet, SerialExecutor};
 use prim_pim::dpu::{replay, Ctx, Dpu, Ev, Trace};
 use prim_pim::util::bencher::Bencher;
+use std::sync::Arc;
 
 fn main() {
     let mut b = Bencher::new();
@@ -59,6 +60,43 @@ fn main() {
     b.bench("64-DPU launch (1k instr/tasklet)", || {
         set.launch(16, |_d, ctx| ctx.compute(1000))
     });
+
+    // 4b. fleet execution engine: the same ≥256-DPU launch walked serially
+    // vs sharded across host cores (both bit-identical in modeled time —
+    // see rust/tests/executor_equivalence.rs). BENCH_QUICK shrinks the
+    // fleet for CI smoke runs.
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let fleet_dpus: u32 = if quick { 64 } else { 256 };
+    let fleet_blocks: usize = if quick { 32 } else { 128 };
+    let fleet_kernel = move |_d: usize, ctx: &mut Ctx| {
+        let w = ctx.mem_alloc(1024);
+        let mut blk = ctx.tasklet_id as usize;
+        while blk < fleet_blocks {
+            ctx.mram_read(blk * 1024, w, 1024);
+            ctx.charge_stream(DType::I32, Op::Add, 256);
+            ctx.mram_write(w, blk * 1024, 1024);
+            blk += ctx.n_tasklets as usize;
+        }
+    };
+    let sys = SystemConfig::p21_2556();
+    let mut serial_set = PimSet::allocate_with(sys.clone(), fleet_dpus, Arc::new(SerialExecutor));
+    let mut parallel_set =
+        PimSet::allocate_with(sys, fleet_dpus, Arc::new(ParallelExecutor::default()));
+    let t_serial = b
+        .bench(&format!("{fleet_dpus}-DPU fleet launch (serial exec)"), || {
+            serial_set.launch_seq(16, fleet_kernel)
+        })
+        .median();
+    let t_parallel = b
+        .bench(&format!("{fleet_dpus}-DPU fleet launch (parallel exec)"), || {
+            parallel_set.launch_seq(16, fleet_kernel)
+        })
+        .median();
+    println!(
+        "fleet executor speedup at {fleet_dpus} DPUs: {:.2}x (parallel over serial, {} host cores)",
+        t_serial / t_parallel,
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
 
     // 5. transfer engine
     let bufs: Vec<Vec<i64>> = (0..64).map(|i| vec![i as i64; 8192]).collect();

@@ -29,6 +29,7 @@ fn main() {
             scale: 0.05,
             seed: 100 + f as u64,
             sys: sys.clone(),
+            exec: Default::default(),
         };
         let r = run_hst(HstKind::Short, "HST-S", &rc, 256);
         assert!(r.verified, "frame {f} failed verification");

@@ -5,8 +5,20 @@ fn main() {
     let scale: f64 = std::env::args().nth(2).unwrap().parse().unwrap();
     let nd: u32 = std::env::args().nth(3).map(|s| s.parse().unwrap()).unwrap_or(64);
     let b = bench_by_name(&name).unwrap();
-    let rc = RunConfig { n_dpus: nd, n_tasklets: b.best_tasklets(), scale, seed: 42, sys: SystemConfig::p21_rank() };
+    let rc = RunConfig {
+        n_dpus: nd,
+        n_tasklets: b.best_tasklets(),
+        scale,
+        seed: 42,
+        sys: SystemConfig::p21_rank(),
+        exec: Default::default(),
+    };
     let t0 = std::time::Instant::now();
     let r = b.run(&rc);
-    println!("{name} scale {scale} nd {nd}: wall {:.2}s verified={} dpu={:.4}s", t0.elapsed().as_secs_f64(), r.verified, r.breakdown.dpu);
+    println!(
+        "{name} scale {scale} nd {nd}: wall {:.2}s verified={} dpu={:.4}s",
+        t0.elapsed().as_secs_f64(),
+        r.verified,
+        r.breakdown.dpu
+    );
 }

@@ -1,0 +1,325 @@
+//! Fleet execution engine: how a launch (or transfer fan-out) walks the
+//! allocated DPU set.
+//!
+//! On real UPMEM hardware the 2,048+ DPUs of the paper's headline
+//! experiments (Figs. 11–16, Table 3) execute *concurrently*; the modeled
+//! seconds already account for that (`max` over per-DPU cycles). This
+//! module makes the **simulator wallclock** concurrent too: a
+//! [`FleetExecutor`] abstracts the per-DPU iteration so the hottest loop
+//! in the codebase runs either serially ([`SerialExecutor`], the
+//! determinism/debugging baseline) or sharded across host cores
+//! ([`ParallelExecutor`]).
+//!
+//! # Determinism contract
+//!
+//! Both executors are **bit-identical** by construction:
+//!
+//! * every DPU owns its private MRAM/WRAM, and kernels may only capture
+//!   host data by shared reference (`Fn(usize, &mut Ctx) + Sync`), so the
+//!   functional result of a DPU does not depend on when its neighbours
+//!   run;
+//! * per-DPU timings are produced by the trace replay, a pure function of
+//!   that DPU's traces;
+//! * the parallel path shards the slot vector into *contiguous* chunks
+//!   and re-assembles the per-shard timing vectors in shard order, so the
+//!   merged `Vec<DpuTiming>` is in DPU-index order — exactly the serial
+//!   ordering — and every downstream fold (`max` for `LaunchStats::secs`,
+//!   sums for instruction counts) sees operands in the same order.
+//!
+//! `rust/tests/executor_equivalence.rs` pins this contract for the
+//! no-sync (VA), intra-DPU-sync (RED) and inter-DPU-sync (BFS) workload
+//! classes.
+
+use crate::dpu::{Ctx, Dpu, DpuTiming};
+use std::sync::Arc;
+
+/// One unit of fleet work: a global DPU index plus exclusive access to
+/// that DPU.
+pub type FleetSlot<'a> = (usize, &'a mut Dpu);
+
+// Compile-time pin of the Send audit: fleet slots carry `&mut Dpu` across
+// worker threads, so `Dpu` (arch params + MRAM bank) and the timing
+// results must stay `Send`. Per-DPU RNG state does not exist (the host
+// `Rng` runs before launches) and trace buffers live inside `Ctx`, which
+// never crosses the executor boundary.
+fn _assert_send<T: Send>() {}
+fn _executor_send_audit() {
+    _assert_send::<Dpu>();
+    _assert_send::<DpuTiming>();
+    _assert_send::<FleetSlot<'_>>();
+}
+
+/// A kernel launch request, shared (read-only) by all executor workers.
+pub struct LaunchJob<'k> {
+    /// The SPMD kernel: `f(dpu_idx, ctx)`.
+    pub kernel: &'k (dyn Fn(usize, &mut Ctx) + Sync),
+    /// Tasklets per DPU.
+    pub n_tasklets: u32,
+    /// Use the sequential tasklet fast path ([`Dpu::launch_seq`])
+    /// instead of one OS thread per tasklet ([`Dpu::launch`]).
+    pub seq_tasklets: bool,
+}
+
+impl LaunchJob<'_> {
+    /// Run the job on one DPU and return its replayed timing.
+    fn run_one(&self, idx: usize, dpu: &mut Dpu) -> DpuTiming {
+        let g = |ctx: &mut Ctx| (self.kernel)(idx, ctx);
+        let run = if self.seq_tasklets {
+            dpu.launch_seq(&g, self.n_tasklets)
+        } else {
+            dpu.launch(&g, self.n_tasklets)
+        };
+        run.timing
+    }
+}
+
+/// Strategy for walking a set of fleet slots.
+///
+/// Implementations must return timings **in slot order** and must call
+/// `op`/the kernel exactly once per slot; beyond that they are free to
+/// schedule the slots on any number of host threads (each slot holds
+/// exclusive access to its DPU, so slots never alias).
+pub trait FleetExecutor: Send + Sync {
+    /// Short name for logs/benches ("serial" / "parallel").
+    fn name(&self) -> &'static str;
+
+    /// Launch `job` on every slot; per-DPU timings in slot order.
+    fn launch(&self, slots: &mut [FleetSlot<'_>], job: &LaunchJob<'_>) -> Vec<DpuTiming>;
+
+    /// Apply `op` to every slot (the transfer fan-out primitive).
+    fn for_each(&self, slots: &mut [FleetSlot<'_>], op: &(dyn Fn(usize, &mut Dpu) + Sync));
+}
+
+/// The original single-threaded walk: slots in order, on the calling
+/// thread. Kept as the determinism baseline and for debugging (panics
+/// surface with an undisturbed stack, no shard boundaries).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SerialExecutor;
+
+impl FleetExecutor for SerialExecutor {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+
+    fn launch(&self, slots: &mut [FleetSlot<'_>], job: &LaunchJob<'_>) -> Vec<DpuTiming> {
+        slots.iter_mut().map(|(i, dpu)| job.run_one(*i, dpu)).collect()
+    }
+
+    fn for_each(&self, slots: &mut [FleetSlot<'_>], op: &(dyn Fn(usize, &mut Dpu) + Sync)) {
+        for (i, dpu) in slots.iter_mut() {
+            op(*i, dpu);
+        }
+    }
+}
+
+/// Shards the slot vector into contiguous chunks, one scoped thread per
+/// chunk, and merges per-shard results deterministically by slot order.
+///
+/// Fleet wallclock drops from O(n_dpus) to O(n_dpus / cores); the modeled
+/// seconds are unchanged (see the module-level determinism contract).
+///
+/// Worker sizing is one shard per host core even for the threaded
+/// [`Dpu::launch`] path (where each DPU additionally spawns `n_tasklets`
+/// OS threads): those tasklet threads serialize on their *own* DPU's
+/// WRAM/MRAM mutexes, so per-DPU contention is independent of the shard
+/// count and the extra threads are mostly parked — one shard keeps
+/// roughly one core busy. Cap the pool explicitly with
+/// `ParallelExecutor::new(n)` / `PRIM_THREADS=n` if the host is shared.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelExecutor {
+    /// Worker-thread cap; 0 = one worker per available host core.
+    pub threads: usize,
+}
+
+impl ParallelExecutor {
+    pub fn new(threads: usize) -> Self {
+        ParallelExecutor { threads }
+    }
+
+    /// Workers to actually spawn for `n_items` slots.
+    fn workers(&self, n_items: usize) -> usize {
+        let cap = if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        };
+        cap.min(n_items).max(1)
+    }
+}
+
+impl Default for ParallelExecutor {
+    fn default() -> Self {
+        ParallelExecutor::new(0)
+    }
+}
+
+impl FleetExecutor for ParallelExecutor {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn launch(&self, slots: &mut [FleetSlot<'_>], job: &LaunchJob<'_>) -> Vec<DpuTiming> {
+        let n = slots.len();
+        let workers = self.workers(n);
+        if workers <= 1 {
+            return SerialExecutor.launch(slots, job);
+        }
+        let chunk = n.div_ceil(workers);
+        let shards: Vec<Vec<DpuTiming>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = slots
+                .chunks_mut(chunk)
+                .map(|shard| {
+                    scope.spawn(move || {
+                        shard
+                            .iter_mut()
+                            .map(|(i, dpu)| job.run_one(*i, dpu))
+                            .collect::<Vec<DpuTiming>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
+                .collect()
+        });
+        // deterministic merge: shards are contiguous slot ranges in order
+        let mut timings = Vec::with_capacity(n);
+        for s in shards {
+            timings.extend(s);
+        }
+        timings
+    }
+
+    fn for_each(&self, slots: &mut [FleetSlot<'_>], op: &(dyn Fn(usize, &mut Dpu) + Sync)) {
+        let workers = self.workers(slots.len());
+        if workers <= 1 {
+            SerialExecutor.for_each(slots, op);
+            return;
+        }
+        let chunk = slots.len().div_ceil(workers);
+        std::thread::scope(|scope| {
+            for shard in slots.chunks_mut(chunk) {
+                scope.spawn(move || {
+                    for (i, dpu) in shard.iter_mut() {
+                        op(*i, dpu);
+                    }
+                });
+            }
+        });
+    }
+}
+
+/// Executor selection carried by `prim::common::RunConfig` (and anything
+/// else that allocates a `PimSet`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecChoice {
+    /// Resolve from the environment: `PRIM_EXECUTOR=serial|parallel`,
+    /// `PRIM_THREADS=N` (unset → parallel over all cores).
+    #[default]
+    Auto,
+    Serial,
+    /// Parallel with a worker cap; 0 = all available cores.
+    Parallel(usize),
+}
+
+impl ExecChoice {
+    /// Parse the `PRIM_EXECUTOR` / `PRIM_THREADS` pair. Unknown or unset
+    /// executor names resolve to the parallel engine (the fast default);
+    /// an unparsable thread count means "all cores".
+    pub fn parse(executor: Option<&str>, threads: Option<&str>) -> Self {
+        let threads = threads.and_then(|v| v.trim().parse::<usize>().ok()).unwrap_or(0);
+        match executor.map(str::trim) {
+            Some(s) if s.eq_ignore_ascii_case("serial") => ExecChoice::Serial,
+            _ => ExecChoice::Parallel(threads),
+        }
+    }
+
+    /// Resolve from the process environment (never returns `Auto`).
+    pub fn from_env() -> Self {
+        let executor = std::env::var("PRIM_EXECUTOR").ok();
+        let threads = std::env::var("PRIM_THREADS").ok();
+        Self::parse(executor.as_deref(), threads.as_deref())
+    }
+
+    /// Build the chosen executor.
+    pub fn build(self) -> Arc<dyn FleetExecutor> {
+        match self {
+            ExecChoice::Auto => Self::from_env().build(),
+            ExecChoice::Serial => Arc::new(SerialExecutor),
+            ExecChoice::Parallel(threads) => Arc::new(ParallelExecutor::new(threads)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DpuArch;
+
+    fn fleet(n: usize) -> Vec<Dpu> {
+        (0..n).map(|_| Dpu::new(DpuArch::p21())).collect()
+    }
+
+    fn timings_with(exec: &dyn FleetExecutor, dpus: &mut [Dpu]) -> Vec<DpuTiming> {
+        let kernel = |i: usize, ctx: &mut Ctx| {
+            ctx.compute(100 * (i as u64 + 1));
+        };
+        let job = LaunchJob {
+            kernel: &kernel,
+            n_tasklets: 2,
+            seq_tasklets: true,
+        };
+        let mut slots: Vec<FleetSlot<'_>> = dpus.iter_mut().enumerate().collect();
+        exec.launch(&mut slots, &job)
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let mut a = fleet(13);
+        let mut b = fleet(13);
+        let ts = timings_with(&SerialExecutor, &mut a);
+        let tp = timings_with(&ParallelExecutor::new(4), &mut b);
+        assert_eq!(ts.len(), tp.len());
+        for (s, p) in ts.iter().zip(&tp) {
+            assert_eq!(s.cycles.to_bits(), p.cycles.to_bits());
+            assert_eq!(s.instrs, p.instrs);
+            assert_eq!(s.dma_bytes, p.dma_bytes);
+        }
+    }
+
+    #[test]
+    fn parallel_for_each_touches_every_slot_once() {
+        let mut dpus = fleet(9);
+        let exec = ParallelExecutor::new(3);
+        let mut slots: Vec<FleetSlot<'_>> = dpus.iter_mut().enumerate().collect();
+        exec.for_each(&mut slots, &|i, dpu| {
+            dpu.mram_store(0, &[i as i64 + 1]);
+        });
+        for (i, d) in dpus.iter().enumerate() {
+            assert_eq!(d.mram_load::<i64>(0, 1), vec![i as i64 + 1]);
+        }
+    }
+
+    #[test]
+    fn worker_count_clamps() {
+        let e = ParallelExecutor::new(8);
+        assert_eq!(e.workers(3), 3);
+        assert_eq!(e.workers(100), 8);
+        assert!(ParallelExecutor::new(0).workers(100) >= 1);
+    }
+
+    #[test]
+    fn choice_parsing() {
+        assert_eq!(ExecChoice::parse(Some("serial"), None), ExecChoice::Serial);
+        assert_eq!(ExecChoice::parse(Some("SERIAL"), Some("4")), ExecChoice::Serial);
+        assert_eq!(ExecChoice::parse(Some("parallel"), Some("4")), ExecChoice::Parallel(4));
+        assert_eq!(ExecChoice::parse(None, None), ExecChoice::Parallel(0));
+        assert_eq!(ExecChoice::parse(Some("bogus"), Some("x")), ExecChoice::Parallel(0));
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(SerialExecutor.name(), "serial");
+        assert_eq!(ParallelExecutor::default().name(), "parallel");
+    }
+}

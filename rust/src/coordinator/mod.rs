@@ -6,6 +6,7 @@
 //! `Inter-DPU` (host-orchestrated synchronization between launches),
 //! `CPU-DPU` and `DPU-CPU` (input/result transfers).
 
+pub mod executor;
 pub mod metrics;
 pub mod partition;
 
@@ -13,7 +14,11 @@ use crate::arch::SystemConfig;
 use crate::dpu::{Ctx, Dpu, DpuTiming};
 use crate::system::{HostModel, TransferEngine, XferModel};
 use crate::util::pod::Pod;
+use std::sync::Arc;
 
+pub use executor::{
+    ExecChoice, FleetExecutor, FleetSlot, LaunchJob, ParallelExecutor, SerialExecutor,
+};
 pub use metrics::TimeBreakdown;
 pub use partition::{chunk_ranges, chunk_ranges_aligned, cyclic_blocks};
 
@@ -59,12 +64,22 @@ pub struct PimSet {
     pub xfer: TransferEngine,
     pub host: HostModel,
     pub metrics: TimeBreakdown,
+    /// Fleet execution engine: walks the DPU set on launches and parallel
+    /// transfers (serial baseline or multi-core sharding; see
+    /// [`executor`]). Both engines are bit-identical in modeled time.
+    pub exec: Arc<dyn FleetExecutor>,
 }
 
 impl PimSet {
     /// Allocate `n_dpus` DPUs of the configured system
-    /// (`dpu_alloc(n_dpus, ...)`).
+    /// (`dpu_alloc(n_dpus, ...)`), with the executor resolved from the
+    /// environment (`PRIM_EXECUTOR` / `PRIM_THREADS`; default parallel).
     pub fn allocate(cfg: SystemConfig, n_dpus: u32) -> Self {
+        Self::allocate_with(cfg, n_dpus, ExecChoice::Auto.build())
+    }
+
+    /// Allocate with an explicit fleet executor.
+    pub fn allocate_with(cfg: SystemConfig, n_dpus: u32, exec: Arc<dyn FleetExecutor>) -> Self {
         assert!(n_dpus >= 1, "need at least one DPU");
         assert!(
             n_dpus <= cfg.n_dpus(),
@@ -81,8 +96,15 @@ impl PimSet {
             }),
             host: HostModel::default(),
             metrics: TimeBreakdown::default(),
+            exec,
             cfg,
         }
+    }
+
+    /// Swap the fleet executor (builder style).
+    pub fn with_executor(mut self, exec: Arc<dyn FleetExecutor>) -> Self {
+        self.exec = exec;
+        self
     }
 
     pub fn n_dpus(&self) -> u32 {
@@ -113,7 +135,7 @@ impl PimSet {
 
     /// Parallel CPU→DPU transfer of equal-size buffers (`dpu_push_xfer`).
     pub fn push_to<T: Pod>(&mut self, mram_off: usize, bufs: &[Vec<T>]) {
-        let s = self.xfer.push_to(&mut self.dpus, mram_off, bufs);
+        let s = self.xfer.push_to(&*self.exec, &mut self.dpus, mram_off, bufs);
         self.metrics.cpu_dpu += s;
         self.metrics.bytes_to_dpu +=
             bufs.iter().map(|b| std::mem::size_of_val(b.as_slice()) as u64).sum::<u64>();
@@ -121,7 +143,7 @@ impl PimSet {
 
     /// Parallel DPU→CPU retrieval of equal-size buffers.
     pub fn push_from<T: Pod>(&mut self, mram_off: usize, n: usize) -> Vec<Vec<T>> {
-        let (v, s) = self.xfer.push_from(&self.dpus, mram_off, n);
+        let (v, s) = self.xfer.push_from(&*self.exec, &mut self.dpus, mram_off, n);
         self.metrics.dpu_cpu += s;
         self.metrics.bytes_from_dpu += (self.dpus.len() * n * std::mem::size_of::<T>()) as u64;
         v
@@ -129,7 +151,7 @@ impl PimSet {
 
     /// Broadcast the same buffer to all DPUs (`dpu_broadcast_to`).
     pub fn broadcast<T: Pod>(&mut self, mram_off: usize, data: &[T]) {
-        let s = self.xfer.broadcast_to(&mut self.dpus, mram_off, data);
+        let s = self.xfer.broadcast_to(&*self.exec, &mut self.dpus, mram_off, data);
         self.metrics.cpu_dpu += s;
         self.metrics.bytes_to_dpu +=
             (self.dpus.len() * std::mem::size_of_val(data)) as u64;
@@ -139,21 +161,21 @@ impl PimSet {
     /// synchronization phases (the paper charges mid-kernel exchanges to
     /// "Inter-DPU", not to CPU-DPU/DPU-CPU input/output time).
     pub fn push_to_inter<T: Pod>(&mut self, mram_off: usize, bufs: &[Vec<T>]) {
-        let s = self.xfer.push_to(&mut self.dpus, mram_off, bufs);
+        let s = self.xfer.push_to(&*self.exec, &mut self.dpus, mram_off, bufs);
         self.metrics.inter_dpu += s;
         self.metrics.bytes_inter +=
             bufs.iter().map(|b| std::mem::size_of_val(b.as_slice()) as u64).sum::<u64>();
     }
 
     pub fn push_from_inter<T: Pod>(&mut self, mram_off: usize, n: usize) -> Vec<Vec<T>> {
-        let (v, s) = self.xfer.push_from(&self.dpus, mram_off, n);
+        let (v, s) = self.xfer.push_from(&*self.exec, &mut self.dpus, mram_off, n);
         self.metrics.inter_dpu += s;
         self.metrics.bytes_inter += (self.dpus.len() * n * std::mem::size_of::<T>()) as u64;
         v
     }
 
     pub fn broadcast_inter<T: Pod>(&mut self, mram_off: usize, data: &[T]) {
-        let s = self.xfer.broadcast_to(&mut self.dpus, mram_off, data);
+        let s = self.xfer.broadcast_to(&*self.exec, &mut self.dpus, mram_off, data);
         self.metrics.inter_dpu += s;
         self.metrics.bytes_inter += (self.dpus.len() * std::mem::size_of_val(data)) as u64;
     }
@@ -180,41 +202,27 @@ impl PimSet {
     where
         F: Fn(usize, &mut Ctx) + Sync,
     {
-        let arch = self.cfg.dpu;
-        let mut timings = Vec::with_capacity(self.dpus.len());
-        for (i, dpu) in self.dpus.iter_mut().enumerate() {
-            let g = |ctx: &mut Ctx| f(i, ctx);
-            let run = dpu.launch(&g, n_tasklets);
-            timings.push(run.timing);
-        }
-        let max_cycles = timings.iter().map(|t| t.cycles).fold(0.0, f64::max);
-        let secs = arch.cycles_to_secs(max_cycles);
-        self.metrics.dpu += secs;
-        self.metrics.launches += 1;
-        LaunchStats { timings, secs }
+        self.run_job(
+            &LaunchJob { kernel: &f, n_tasklets, seq_tasklets: false },
+            None,
+        )
     }
 
-    /// Sequential-fast-path launch (§Perf): identical semantics to
+    /// Sequential-tasklet-fast-path launch (§Perf): identical semantics to
     /// [`PimSet::launch`] for kernels without barriers or forward
     /// handshake waits (see [`crate::dpu::Dpu::launch_seq`]), but with
-    /// zero thread overhead — the lever that makes fleet-scale (2,048-DPU)
-    /// functional simulation tractable on one core.
+    /// zero per-tasklet thread overhead. Combined with the parallel fleet
+    /// executor this is the lever that makes 2,048-DPU functional
+    /// simulation tractable: one OS thread per *shard* instead of one per
+    /// tasklet.
     pub fn launch_seq<F>(&mut self, n_tasklets: u32, f: F) -> LaunchStats
     where
         F: Fn(usize, &mut Ctx) + Sync,
     {
-        let arch = self.cfg.dpu;
-        let mut timings = Vec::with_capacity(self.dpus.len());
-        for (i, dpu) in self.dpus.iter_mut().enumerate() {
-            let g = |ctx: &mut Ctx| f(i, ctx);
-            let run = dpu.launch_seq(&g, n_tasklets);
-            timings.push(run.timing);
-        }
-        let max_cycles = timings.iter().map(|t| t.cycles).fold(0.0, f64::max);
-        let secs = arch.cycles_to_secs(max_cycles);
-        self.metrics.dpu += secs;
-        self.metrics.launches += 1;
-        LaunchStats { timings, secs }
+        self.run_job(
+            &LaunchJob { kernel: &f, n_tasklets, seq_tasklets: true },
+            None,
+        )
     }
 
     /// Launch on a prefix subset of the DPUs (NW uses fewer DPUs on short
@@ -223,13 +231,36 @@ impl PimSet {
     where
         F: Fn(usize, &mut Ctx) + Sync,
     {
+        self.run_job(
+            &LaunchJob { kernel: &f, n_tasklets, seq_tasklets: false },
+            Some(dpu_ids),
+        )
+    }
+
+    /// Common launch path: build the slot vector (whole fleet or a
+    /// subset), hand it to the fleet executor, and account the modeled
+    /// seconds. Timings come back in slot order, so the metrics folds are
+    /// executor-independent (see [`executor`]'s determinism contract).
+    fn run_job(&mut self, job: &LaunchJob<'_>, subset: Option<&[usize]>) -> LaunchStats {
         let arch = self.cfg.dpu;
-        let mut timings = Vec::with_capacity(dpu_ids.len());
-        for &i in dpu_ids {
-            let g = |ctx: &mut Ctx| f(i, ctx);
-            let run = self.dpus[i].launch(&g, n_tasklets);
-            timings.push(run.timing);
-        }
+        let exec = Arc::clone(&self.exec);
+        let timings = match subset {
+            None => {
+                let mut slots: Vec<FleetSlot<'_>> =
+                    self.dpus.iter_mut().enumerate().collect();
+                exec.launch(&mut slots, job)
+            }
+            Some(ids) => {
+                let mut by_idx: Vec<Option<&mut Dpu>> =
+                    self.dpus.iter_mut().map(Some).collect();
+                let mut slots: Vec<FleetSlot<'_>> = Vec::with_capacity(ids.len());
+                for &i in ids {
+                    let dpu = by_idx[i].take().expect("duplicate DPU id in launch_on");
+                    slots.push((i, dpu));
+                }
+                exec.launch(&mut slots, job)
+            }
+        };
         let max_cycles = timings.iter().map(|t| t.cycles).fold(0.0, f64::max);
         let secs = arch.cycles_to_secs(max_cycles);
         self.metrics.dpu += secs;
@@ -305,5 +336,58 @@ mod tests {
         let mut set = PimSet::allocate(SystemConfig::p21_rank(), 2);
         let stats = set.launch(1, |i, ctx| ctx.compute(if i == 0 { 100 } else { 300 }));
         assert!(stats.imbalance() > 1.4);
+    }
+
+    /// Serial and parallel executors produce bit-identical stats and data
+    /// through the full PimSet surface (push_to / launch / launch_on /
+    /// push_from).
+    #[test]
+    fn executors_bit_identical_through_pimset() {
+        let run = |exec: Arc<dyn FleetExecutor>| {
+            let mut set = PimSet::allocate_with(SystemConfig::p21_rank(), 8, exec);
+            let bufs: Vec<Vec<i64>> = (0..8).map(|i| vec![i as i64 + 1; 16]).collect();
+            set.push_to(0, &bufs);
+            let s1 = set.launch(4, |d, ctx| {
+                let b = ctx.mem_alloc(128);
+                ctx.mram_read(0, b, 128);
+                let v: Vec<i64> = ctx.wram_get(b, 16);
+                let sum: i64 = v.iter().sum();
+                ctx.wram_set(b, &[sum]);
+                ctx.charge_stream(crate::arch::DType::I64, crate::arch::Op::Add, 16);
+                ctx.compute(10 * d as u64);
+                ctx.mram_write(b, 1024, 8);
+            });
+            let s2 = set.launch_on(&[1, 3, 5], 2, |d, ctx| ctx.compute(50 * d as u64 + 7));
+            let out = set.push_from::<i64>(1024, 1);
+            (s1, s2, out, set.metrics)
+        };
+        let (a1, a2, ao, am) = run(Arc::new(SerialExecutor));
+        let (b1, b2, bo, bm) = run(Arc::new(ParallelExecutor::new(4)));
+        assert_eq!(ao, bo, "functional outputs must not depend on the executor");
+        assert_eq!(am, bm, "time breakdown must be bit-identical");
+        assert_eq!(a1.secs.to_bits(), b1.secs.to_bits());
+        assert_eq!(a2.secs.to_bits(), b2.secs.to_bits());
+        assert_eq!(a1.timings.len(), b1.timings.len());
+        assert_eq!(a2.timings.len(), 3);
+        for (s, p) in a1.timings.iter().zip(&b1.timings).chain(a2.timings.iter().zip(&b2.timings))
+        {
+            assert_eq!(s.cycles.to_bits(), p.cycles.to_bits());
+            assert_eq!(s.instrs, p.instrs);
+            assert_eq!(s.dma_bytes, p.dma_bytes);
+        }
+    }
+
+    #[test]
+    fn broadcast_goes_through_executor() {
+        let mut set = PimSet::allocate_with(
+            SystemConfig::p21_rank(),
+            6,
+            Arc::new(ParallelExecutor::new(3)),
+        );
+        set.broadcast(0, &[9i64; 8]);
+        for d in 0..6 {
+            assert_eq!(set.copy_from::<i64>(d, 0, 8), vec![9i64; 8]);
+        }
+        assert!(set.metrics.cpu_dpu > 0.0);
     }
 }

@@ -275,7 +275,8 @@ impl Ctx {
     /// be `size_of::<T>()`-aligned within WRAM (base is 8-B aligned).
     pub fn wram_view<T: Pod, R>(&self, off: usize, n: usize, f: impl FnOnce(&[T]) -> R) -> R {
         self.wram(|w| {
-            let view = crate::util::pod::cast_slice::<T>(&w[off..off + n * std::mem::size_of::<T>()]);
+            let view =
+                crate::util::pod::cast_slice::<T>(&w[off..off + n * std::mem::size_of::<T>()]);
             f(view)
         })
     }
@@ -315,7 +316,11 @@ impl Ctx {
 
     fn check_dma(&self, bytes: usize) {
         let a = &self.shared.arch;
-        assert!(bytes > 0 && bytes % a.dma_align as usize == 0, "DMA size {bytes} not a multiple of {}", a.dma_align);
+        assert!(
+            bytes > 0 && bytes % a.dma_align as usize == 0,
+            "DMA size {bytes} not a multiple of {}",
+            a.dma_align
+        );
         assert!(
             bytes <= a.dma_max_bytes as usize,
             "DMA size {bytes} exceeds SDK max {}",
@@ -352,7 +357,13 @@ impl Ctx {
     }
 
     /// Large logical transfer split into SDK-sized DMA chunks.
-    pub fn mram_read_large(&mut self, mram_off: usize, wram_off: usize, bytes: usize, chunk: usize) {
+    pub fn mram_read_large(
+        &mut self,
+        mram_off: usize,
+        wram_off: usize,
+        bytes: usize,
+        chunk: usize,
+    ) {
         let mut done = 0;
         while done < bytes {
             let n = chunk.min(bytes - done);

@@ -72,6 +72,7 @@ pub fn compare_all(quick: bool) -> Vec<CompareRow> {
                 scale,
                 seed: 42,
                 sys,
+                exec: Default::default(),
             };
             b.run(&rc)
         };
@@ -119,7 +120,11 @@ pub fn fig16(quick: bool) -> Table {
         s640.push(x640);
         s2556.push(x2556);
         sgpu.push(xgpu);
-        let group = if MORE_SUITABLE.contains(&r.bench) { "(1) more suitable" } else { "(2) less suitable" };
+        let group = if MORE_SUITABLE.contains(&r.bench) {
+            "(1) more suitable"
+        } else {
+            "(2) less suitable"
+        };
         t.row(vec![
             r.bench.into(),
             group.into(),

@@ -73,6 +73,7 @@ pub fn future_benches(quick: bool) -> Table {
                 scale: super::harness_scale(name) * 0.5,
                 seed: 42,
                 sys,
+                exec: Default::default(),
             };
             let r = b.run(&rc);
             assert!(r.verified, "{name} failed under ablation");
@@ -108,6 +109,7 @@ pub fn future_interdpu(quick: bool) -> Table {
             scale: super::harness_scale(name) * 0.5,
             seed: 42,
             sys: SystemConfig::p21_rank(),
+            exec: Default::default(),
         };
         let r = b.run(&rc);
         assert!(r.verified);

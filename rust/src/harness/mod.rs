@@ -74,7 +74,11 @@ pub fn run_id(id: &str, outdir: &Path, quick: bool) -> anyhow::Result<()> {
     };
     for (i, t) in tables.iter().enumerate() {
         println!("{}", t.render());
-        let suffix = if tables.len() > 1 { format!("{}_{}", id, (b'a' + i as u8) as char) } else { id.to_string() };
+        let suffix = if tables.len() > 1 {
+            format!("{}_{}", id, (b'a' + i as u8) as char)
+        } else {
+            id.to_string()
+        };
         t.save_csv(outdir, &suffix)?;
     }
     Ok(())

@@ -1,5 +1,9 @@
 //! Strong/weak scaling experiment runners (Figs. 12–15): the full PrIM
 //! suite with the paper's time breakdown at every point.
+//!
+//! Runs use `RunConfig`'s default executor (`ExecChoice::Auto` → the
+//! parallel fleet engine unless `PRIM_EXECUTOR=serial`), so the
+//! 256–2,048-DPU sweeps of Fig. 14/15 shard across every host core.
 
 use crate::prim::common::{PrimBench, RunConfig};
 use crate::prim::all_benches;
@@ -95,6 +99,7 @@ pub fn fig14(quick: bool) -> Table {
                 n_tasklets: b.best_tasklets(),
                 scale: super::harness_scale(b.name()) * if quick { 0.5 } else { 1.0 },
                 seed: 42,
+                exec: Default::default(),
             };
             let r = b.run(&rc);
             assert!(r.verified, "{} failed at {nd} DPUs", b.name());

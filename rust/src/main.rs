@@ -7,6 +7,7 @@
 //! repro figure <id> [--quick]        regenerate a paper figure
 //! repro micro                        all §3 microbenchmark figures (4-10)
 //! repro prim [--bench N] [--dpus D] [--tasklets T] [--scale S]
+//!            [--executor serial|parallel] [--threads N]
 //! repro compare [--quick]            Fig. 16 + Fig. 17
 //! repro estimate --dpus N            fleet estimator via the PJRT artifact
 //! repro all [--quick]                everything, CSVs into --outdir
@@ -14,6 +15,7 @@
 //! All outputs land in `--outdir` (default `results/`).
 
 use prim_pim::arch::SystemConfig;
+use prim_pim::coordinator::ExecChoice;
 use prim_pim::harness::{self, ALL_IDS};
 use prim_pim::prim::common::{all_benches, bench_by_name, RunConfig};
 use prim_pim::runtime;
@@ -104,6 +106,21 @@ fn main() -> anyhow::Result<()> {
             } else {
                 SystemConfig::p21_2556()
             };
+            // fleet executor: CLI flags win, else PRIM_EXECUTOR/PRIM_THREADS.
+            // Unlike the lenient env-var path, an explicit --executor value
+            // must be valid — a typo must not silently select parallel.
+            let exec = if args.has("executor") || args.has("threads") {
+                let name = args.flags.get("executor").map(String::as_str);
+                if let Some(n) = name {
+                    if !n.eq_ignore_ascii_case("serial") && !n.eq_ignore_ascii_case("parallel") {
+                        eprintln!("unknown --executor '{n}' (expected serial|parallel)");
+                        std::process::exit(2);
+                    }
+                }
+                ExecChoice::parse(name, args.flags.get("threads").map(String::as_str))
+            } else {
+                ExecChoice::Auto
+            };
             for b in benches {
                 let rc = RunConfig {
                     n_dpus,
@@ -111,6 +128,7 @@ fn main() -> anyhow::Result<()> {
                     scale: args.flag("scale", harness::harness_scale(b.name())),
                     seed: args.flag("seed", 42),
                     sys: sys.clone(),
+                    exec,
                 };
                 let t0 = std::time::Instant::now();
                 let r = b.run(&rc);

@@ -41,7 +41,12 @@ pub const BLOCK: usize = 1024;
 /// Run one Fig. 7 configuration. Streams `total_elems` 8-byte elements
 /// split across tasklets; returns sustained MRAM bandwidth in MB/s
 /// (bytes through the DMA engine / time).
-pub fn mram_stream_bw(arch: DpuArch, version: MramStream, n_tasklets: u32, total_elems: usize) -> f64 {
+pub fn mram_stream_bw(
+    arch: DpuArch,
+    version: MramStream,
+    n_tasklets: u32,
+    total_elems: usize,
+) -> f64 {
     let mut dpu = Dpu::new(arch);
     let src: Vec<i64> = (0..total_elems as i64).collect();
     let src2: Vec<i64> = (0..total_elems as i64).map(|x| x * 3).collect();
@@ -111,7 +116,11 @@ pub fn mram_stream_bw(arch: DpuArch, version: MramStream, n_tasklets: u32, total
 }
 
 /// Fig. 7 sweep: (version, tasklets, MB/s).
-pub fn fig7_sweep(arch: DpuArch, tasklet_counts: &[u32], total_elems: usize) -> Vec<(MramStream, u32, f64)> {
+pub fn fig7_sweep(
+    arch: DpuArch,
+    tasklet_counts: &[u32],
+    total_elems: usize,
+) -> Vec<(MramStream, u32, f64)> {
     let mut out = Vec::new();
     for v in MramStream::ALL {
         for &t in tasklet_counts {

@@ -139,7 +139,9 @@ pub fn wram_pattern_bw(arch: DpuArch, pattern: WramPattern, n_tasklets: u32) -> 
             ctx.wram_set(c, &cv);
             // timing: per element ld a[i], ld b[a[i]], st c[a[i]], loop —
             // identical instruction count for every pattern
-            ctx.compute(REPS * N as u64 * (3 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64);
+            ctx.compute(
+                REPS * N as u64 * (3 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64,
+            );
         },
         n_tasklets,
     );

@@ -62,11 +62,14 @@ pub fn fig10b_sweep(bytes: usize, dpu_counts: &[u32]) -> Vec<Fig10bRow> {
 /// Functional smoke transfer: round-trip `n` i64 per DPU through the
 /// engine and verify the data (used by tests and the harness preamble).
 pub fn roundtrip_check(arch: DpuArch, n_dpus: u32, n: usize) -> bool {
+    let exec = crate::coordinator::executor::SerialExecutor;
     let eng = TransferEngine::new(XferModel::default());
     let mut dpus: Vec<Dpu> = (0..n_dpus).map(|_| Dpu::new(arch)).collect();
-    let bufs: Vec<Vec<i64>> = (0..n_dpus as i64).map(|i| (0..n as i64).map(|j| i * 1000 + j).collect()).collect();
-    eng.push_to(&mut dpus, 0, &bufs);
-    let (back, _) = eng.push_from::<i64>(&dpus, 0, n);
+    let bufs: Vec<Vec<i64>> = (0..n_dpus as i64)
+        .map(|i| (0..n as i64).map(|j| i * 1000 + j).collect())
+        .collect();
+    eng.push_to(&exec, &mut dpus, 0, &bufs);
+    let (back, _) = eng.push_from::<i64>(&exec, &mut dpus, 0, n);
     back == bufs
 }
 

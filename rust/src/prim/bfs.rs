@@ -10,7 +10,7 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::{chunk_ranges, PimSet};
+use crate::coordinator::chunk_ranges;
 use crate::dpu::Ctx;
 use crate::util::data::rmat_graph;
 
@@ -47,7 +47,7 @@ impl PrimBench for Bfs {
         let src = (0..v).max_by_key(|&u| g.row_ptr[u + 1] - g.row_ptr[u]).unwrap_or(0);
         let dist_ref = g.bfs_ref(src);
 
-        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let mut set = rc.alloc();
         let nd = rc.n_dpus as usize;
         let parts = chunk_ranges(v, nd);
         let words = v.div_ceil(64);

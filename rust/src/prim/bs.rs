@@ -8,7 +8,7 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::{chunk_ranges, PimSet};
+use crate::coordinator::chunk_ranges;
 use crate::dpu::Ctx;
 use crate::util::data::sorted_with_queries;
 
@@ -41,7 +41,7 @@ impl PrimBench for Bs {
         let q = rc.scaled(PAPER_Q);
         let (arr, queries) = sorted_with_queries(n, q, rc.seed);
 
-        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let mut set = rc.alloc();
         let nd = rc.n_dpus as usize;
         // the array is replicated in each DPU (CPU-DPU cost grows with
         // DPU count — the paper's Fig. 13 note)

@@ -2,7 +2,9 @@
 //! `PrimBench` trait, and the Table 2 taxonomy.
 
 use crate::arch::SystemConfig;
-use crate::coordinator::TimeBreakdown;
+use crate::coordinator::{PimSet, TimeBreakdown};
+
+pub use crate::coordinator::ExecChoice;
 
 /// Run configuration for a PrIM benchmark.
 #[derive(Clone, Debug)]
@@ -17,6 +19,12 @@ pub struct RunConfig {
     /// simulation laptop-tractable and EXPERIMENTS.md records the factor).
     pub scale: f64,
     pub seed: u64,
+    /// Fleet execution engine for launches and parallel transfers.
+    /// `Auto` resolves `PRIM_EXECUTOR=serial|parallel` / `PRIM_THREADS=N`
+    /// (default: parallel over all host cores). Serial and parallel are
+    /// bit-identical in results and modeled time — see
+    /// `rust/tests/executor_equivalence.rs`.
+    pub exec: ExecChoice,
 }
 
 impl RunConfig {
@@ -28,6 +36,7 @@ impl RunConfig {
             n_tasklets: 16,
             scale: 0.25,
             seed: 42,
+            exec: ExecChoice::Auto,
         }
     }
 
@@ -42,6 +51,19 @@ impl RunConfig {
     /// Scale an element count, keeping it positive and 8-aligned.
     pub fn scaled(&self, paper_n: usize) -> usize {
         (((paper_n as f64 * self.scale) as usize).max(16) + 7) & !7
+    }
+
+    /// Override the fleet executor (builder style, handy in tests).
+    pub fn with_exec(mut self, exec: ExecChoice) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Allocate the configured PIM set (`sys` × `n_dpus`) behind the
+    /// configured fleet executor — the one allocation path every PrIM
+    /// workload uses.
+    pub fn alloc(&self) -> PimSet {
+        PimSet::allocate_with(self.sys.clone(), self.n_dpus, self.exec.build())
     }
 }
 
@@ -141,5 +163,14 @@ mod tests {
         let rc = RunConfig::rank_default();
         assert_eq!(rc.scaled(1000) % 8, 0);
         assert!(rc.scaled(1) >= 16);
+    }
+
+    #[test]
+    fn alloc_respects_exec_choice() {
+        let rc = RunConfig { n_dpus: 2, ..RunConfig::rank_default() };
+        let rc = rc.with_exec(ExecChoice::Serial);
+        assert_eq!(rc.alloc().exec.name(), "serial");
+        let rc = rc.with_exec(ExecChoice::Parallel(3));
+        assert_eq!(rc.alloc().exec.name(), "parallel");
     }
 }

@@ -4,7 +4,7 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::{chunk_ranges, PimSet};
+use crate::coordinator::chunk_ranges;
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -19,7 +19,15 @@ pub struct Gemv;
 /// Shared GEMV kernel body, reused by MLP (§4.9). Computes
 /// `y[r] = Σ_c m[r][c] * x[c]` for the DPU's row chunk living in MRAM at
 /// `mat_off`, with x at `x_off` (n u32 words), writing y at `y_off`.
-pub fn gemv_kernel(ctx: &mut Ctx, rows: usize, n: usize, mat_off: usize, x_off: usize, y_off: usize, relu: bool) {
+pub fn gemv_kernel(
+    ctx: &mut Ctx,
+    rows: usize,
+    n: usize,
+    mat_off: usize,
+    x_off: usize,
+    y_off: usize,
+    relu: bool,
+) {
     let n_blocks = n / EPB;
     let wm = ctx.mem_alloc(BLOCK);
     let wx = ctx.mem_alloc(BLOCK);
@@ -90,7 +98,7 @@ impl PrimBench for Gemv {
         let mat: Vec<u32> = (0..m * n).map(|_| rng.next_u32() >> 16).collect();
         let x: Vec<u32> = (0..n).map(|_| rng.next_u32() >> 16).collect();
 
-        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let mut set = rc.alloc();
         let rows_per = m / nd;
         let mat_bufs: Vec<Vec<u32>> =
             (0..nd).map(|d| mat[d * rows_per * n..(d + 1) * rows_per * n].to_vec()).collect();

@@ -12,7 +12,6 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::PimSet;
 use crate::dpu::Ctx;
 use crate::util::data::natural_image;
 use crate::util::pod::cast_slice_mut;
@@ -42,7 +41,7 @@ pub fn run_hst(kind: HstKind, name: &'static str, rc: &RunConfig, bins: usize) -
         hist_ref[(p >> shift) as usize] += 1;
     }
 
-    let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+    let mut set = rc.alloc();
     let nd = rc.n_dpus as usize;
     let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
     // pad with a sentinel bucket-0 value and correct afterwards

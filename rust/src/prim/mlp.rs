@@ -6,7 +6,6 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use super::gemv::gemv_kernel;
-use crate::coordinator::PimSet;
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -61,7 +60,7 @@ impl PrimBench for Mlp {
         }
         let y_ref = h;
 
-        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let mut set = rc.alloc();
         let rows_per = m / nd;
         // MRAM layout per DPU: W1 | W2 | W3 | x | y
         let wl_bytes = rows_per * m * 4;

@@ -11,7 +11,6 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::PimSet;
 use crate::dpu::Ctx;
 use crate::util::data::dna_pair;
 use crate::util::pod::cast_slice_mut;
@@ -82,7 +81,7 @@ pub fn run_nw(rc: &RunConfig, longest_diag_only: bool) -> (BenchResult, usize) {
     let (a, b) = dna_pair(l, l, rc.seed);
     let m_ref = reference_nw(&a, &b);
 
-    let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+    let mut set = rc.alloc();
     // MRAM layout: a | b | top | left | corner | block_out
     let a_off = 0usize;
     let seq_bytes = (l + 7) & !7;

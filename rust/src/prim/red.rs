@@ -12,7 +12,7 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::{chunk_ranges, PimSet};
+use crate::coordinator::chunk_ranges;
 use crate::dpu::Ctx;
 use crate::util::pod::cast_slice_mut;
 use crate::util::Rng;
@@ -64,7 +64,7 @@ pub fn run_red(version: RedVersion, rc: &RunConfig) -> BenchResult {
     let input = rng.vec_i64(n, 1 << 24);
     let sum_ref: i64 = input.iter().sum();
 
-    let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+    let mut set = rc.alloc();
     let nd = rc.n_dpus as usize;
     let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
     let bufs: Vec<Vec<i64>> = (0..nd)

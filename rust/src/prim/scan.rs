@@ -13,7 +13,7 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::{chunk_ranges, PimSet};
+use crate::coordinator::chunk_ranges;
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -99,7 +99,7 @@ pub fn run_scan(kind: ScanKind, name: &'static str, rc: &RunConfig) -> BenchResu
         acc += x;
     }
 
-    let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+    let mut set = rc.alloc();
     let nd = rc.n_dpus as usize;
     let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
     let bufs: Vec<Vec<i64>> = (0..nd)

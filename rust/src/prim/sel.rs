@@ -12,7 +12,7 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::{chunk_ranges, PimSet};
+use crate::coordinator::chunk_ranges;
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -201,7 +201,7 @@ pub fn run_compaction(kind: CompactKind, name: &'static str, rc: &RunConfig) -> 
         }
     };
 
-    let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+    let mut set = rc.alloc();
     let nd = rc.n_dpus as usize;
     let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
     // pad with values that are filtered out (SEL) / merged (UNI)

@@ -6,7 +6,7 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::{chunk_ranges, PimSet};
+use crate::coordinator::chunk_ranges;
 use crate::dpu::Ctx;
 use crate::util::data::{banded_matrix, Csr};
 
@@ -42,7 +42,7 @@ impl PrimBench for Spmv {
         let x: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.25).collect();
         let y_ref = mat.spmv_ref(&x);
 
-        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let mut set = rc.alloc();
         let nd = rc.n_dpus as usize;
         let row_parts = chunk_ranges(n, nd);
 

@@ -14,7 +14,6 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::PimSet;
 use crate::dpu::Ctx;
 use crate::util::pod::cast_slice_mut;
 use crate::util::Rng;
@@ -55,7 +54,7 @@ impl PrimBench for Trns {
         let mut rng = Rng::new(rc.seed);
         let mat: Vec<i64> = (0..m * n).map(|_| rng.next_u64() as i64).collect();
 
-        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let mut set = rc.alloc();
         // step 1: M'×m transfers of n elements per DPU; DPU d receives
         // column-tile d laid out as [j][r][n] (j = 0..M', r = 0..m)
         for d in 0..nd {

@@ -10,7 +10,7 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::{chunk_ranges, PimSet};
+use crate::coordinator::chunk_ranges;
 use crate::dpu::Ctx;
 use crate::util::data::time_series;
 
@@ -65,7 +65,7 @@ impl PrimBench for Ts {
             }
         }
 
-        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let mut set = rc.alloc();
         let nd = rc.n_dpus as usize;
         let positions = n - QUERY_LEN + 1;
         let per_pos = positions.div_ceil(nd);
@@ -156,7 +156,8 @@ impl PrimBench for Ts {
             }
         }
 
-        let verified = best == best_ref && ssd(&series[best_pos..best_pos + QUERY_LEN], &query) == best_ref
+        let verified = best == best_ref
+            && ssd(&series[best_pos..best_pos + QUERY_LEN], &query) == best_ref
             && (best_pos == pos_ref || best == best_ref);
 
         BenchResult {

@@ -7,7 +7,6 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::PimSet;
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -43,7 +42,7 @@ impl PrimBench for Va {
         let a = rng.vec_i32(n, 1 << 20);
         let b = rng.vec_i32(n, 1 << 20);
 
-        let mut set = PimSet::allocate(rc.sys.clone(), rc.n_dpus);
+        let mut set = rc.alloc();
         let nd = rc.n_dpus as usize;
         // equal chunks, padded to whole blocks (parallel transfers require
         // equal sizes — Programming Recommendation 5)

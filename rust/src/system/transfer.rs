@@ -21,8 +21,10 @@
 //! `BW(N) = A·N/(N+B)` at the 32 MB calibration point, scaled by the
 //! single-DPU size curve for other sizes.
 
+use crate::coordinator::executor::{FleetExecutor, FleetSlot};
 use crate::dpu::Dpu;
 use crate::util::pod::Pod;
+use std::sync::OnceLock;
 
 /// Direction of a host↔MRAM transfer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -173,47 +175,68 @@ impl TransferEngine {
     }
 
     /// `dpu_prepare_xfer` + `dpu_push_xfer(TO_DPU)`: parallel transfer of
-    /// per-DPU buffers (all the **same size**, as the SDK requires).
-    pub fn push_to<T: Pod>(&self, dpus: &mut [Dpu], mram_off: usize, bufs: &[Vec<T>]) -> f64 {
+    /// per-DPU buffers (all the **same size**, as the SDK requires). The
+    /// functional byte movement fans out across the fleet executor's
+    /// workers; the modeled seconds depend only on sizes and DPU count.
+    pub fn push_to<T: Pod>(
+        &self,
+        exec: &dyn FleetExecutor,
+        dpus: &mut [Dpu],
+        mram_off: usize,
+        bufs: &[Vec<T>],
+    ) -> f64 {
         assert_eq!(dpus.len(), bufs.len(), "one buffer per DPU");
         let size = bufs.first().map_or(0, |b| b.len());
         assert!(
             bufs.iter().all(|b| b.len() == size),
             "parallel transfers require equal sizes (UPMEM SDK 2021.1.1)"
         );
-        for (d, b) in dpus.iter_mut().zip(bufs) {
-            d.mram_store(mram_off, b);
-        }
-        self.model.parallel_secs(
-            Dir::CpuToDpu,
-            size * std::mem::size_of::<T>(),
-            dpus.len() as u32,
-        )
+        let n_dpus = dpus.len() as u32;
+        let mut slots: Vec<FleetSlot<'_>> = dpus.iter_mut().enumerate().collect();
+        exec.for_each(&mut slots, &|i, dpu| dpu.mram_store(mram_off, &bufs[i]));
+        self.model
+            .parallel_secs(Dir::CpuToDpu, size * std::mem::size_of::<T>(), n_dpus)
     }
 
     /// `dpu_push_xfer(FROM_DPU)`: parallel retrieval of equal-size buffers.
+    /// Per-DPU output vectors are filled by the executor's workers into
+    /// index-addressed cells, so the returned order is DPU order whatever
+    /// the schedule.
     pub fn push_from<T: Pod>(
         &self,
-        dpus: &[Dpu],
+        exec: &dyn FleetExecutor,
+        dpus: &mut [Dpu],
         mram_off: usize,
         n: usize,
     ) -> (Vec<Vec<T>>, f64) {
-        let out: Vec<Vec<T>> = dpus.iter().map(|d| d.mram_load(mram_off, n)).collect();
-        let secs = self.model.parallel_secs(
-            Dir::DpuToCpu,
-            n * std::mem::size_of::<T>(),
-            dpus.len() as u32,
-        );
+        let n_dpus = dpus.len() as u32;
+        let cells: Vec<OnceLock<Vec<T>>> = (0..dpus.len()).map(|_| OnceLock::new()).collect();
+        let mut slots: Vec<FleetSlot<'_>> = dpus.iter_mut().enumerate().collect();
+        exec.for_each(&mut slots, &|i, dpu| {
+            let _ = cells[i].set(dpu.mram_load(mram_off, n));
+        });
+        let out: Vec<Vec<T>> = cells
+            .into_iter()
+            .map(|c| c.into_inner().expect("executor must visit every DPU"))
+            .collect();
+        let secs = self
+            .model
+            .parallel_secs(Dir::DpuToCpu, n * std::mem::size_of::<T>(), n_dpus);
         (out, secs)
     }
 
     /// `dpu_broadcast_to`: same buffer to every DPU.
-    pub fn broadcast_to<T: Pod>(&self, dpus: &mut [Dpu], mram_off: usize, data: &[T]) -> f64 {
-        for d in dpus.iter_mut() {
-            d.mram_store(mram_off, data);
-        }
-        self.model
-            .broadcast_secs(std::mem::size_of_val(data), dpus.len() as u32)
+    pub fn broadcast_to<T: Pod>(
+        &self,
+        exec: &dyn FleetExecutor,
+        dpus: &mut [Dpu],
+        mram_off: usize,
+        data: &[T],
+    ) -> f64 {
+        let n_dpus = dpus.len() as u32;
+        let mut slots: Vec<FleetSlot<'_>> = dpus.iter_mut().enumerate().collect();
+        exec.for_each(&mut slots, &|_i, dpu| dpu.mram_store(mram_off, data));
+        self.model.broadcast_secs(std::mem::size_of_val(data), n_dpus)
     }
 }
 
@@ -291,28 +314,35 @@ mod tests {
 
     #[test]
     fn engine_moves_data() {
-        let eng = TransferEngine::new(model());
-        let mut dpus: Vec<Dpu> = (0..4).map(|_| Dpu::new(DpuArch::p21())).collect();
-        let bufs: Vec<Vec<i64>> = (0..4).map(|i| vec![i as i64; 8]).collect();
-        let secs = eng.push_to(&mut dpus, 0, &bufs);
-        assert!(secs > 0.0);
-        let (back, secs2) = eng.push_from::<i64>(&dpus, 0, 8);
-        assert!(secs2 > secs, "read-back slower (Key Obs. 9)");
-        assert_eq!(back, bufs);
-        // broadcast
-        let secs3 = eng.broadcast_to(&mut dpus, 1024, &[7i64; 4]);
-        assert!(secs3 > 0.0);
-        for d in &dpus {
-            assert_eq!(d.mram_load::<i64>(1024, 4), vec![7i64; 4]);
+        use crate::coordinator::executor::{ParallelExecutor, SerialExecutor};
+        for exec in [
+            &SerialExecutor as &dyn FleetExecutor,
+            &ParallelExecutor::new(2) as &dyn FleetExecutor,
+        ] {
+            let eng = TransferEngine::new(model());
+            let mut dpus: Vec<Dpu> = (0..4).map(|_| Dpu::new(DpuArch::p21())).collect();
+            let bufs: Vec<Vec<i64>> = (0..4).map(|i| vec![i as i64; 8]).collect();
+            let secs = eng.push_to(exec, &mut dpus, 0, &bufs);
+            assert!(secs > 0.0);
+            let (back, secs2) = eng.push_from::<i64>(exec, &mut dpus, 0, 8);
+            assert!(secs2 > secs, "read-back slower (Key Obs. 9)");
+            assert_eq!(back, bufs);
+            // broadcast
+            let secs3 = eng.broadcast_to(exec, &mut dpus, 1024, &[7i64; 4]);
+            assert!(secs3 > 0.0);
+            for d in &dpus {
+                assert_eq!(d.mram_load::<i64>(1024, 4), vec![7i64; 4]);
+            }
         }
     }
 
     #[test]
     #[should_panic(expected = "equal sizes")]
     fn unequal_parallel_rejected() {
+        use crate::coordinator::executor::SerialExecutor;
         let eng = TransferEngine::new(model());
         let mut dpus: Vec<Dpu> = (0..2).map(|_| Dpu::new(DpuArch::p21())).collect();
         let bufs = vec![vec![1i64; 4], vec![1i64; 8]];
-        eng.push_to(&mut dpus, 0, &bufs);
+        eng.push_to(&SerialExecutor, &mut dpus, 0, &bufs);
     }
 }

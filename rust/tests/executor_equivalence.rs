@@ -1,0 +1,65 @@
+//! Executor-equivalence contract: the parallel fleet executor must be
+//! **bit-identical** to the serial baseline — same functional outputs
+//! (`verified` against the native reference), same accumulated
+//! `LaunchStats.secs` (the `breakdown.dpu` bucket is the sum of per-launch
+//! `secs`), and the same `TimeBreakdown` buckets and byte counters.
+//!
+//! The three workloads cover the Table 2 synchronization classes:
+//! * VA  — no intra- or inter-DPU synchronization (pure streaming);
+//! * RED — intra-DPU sync (barriers + the threaded `launch` path);
+//! * BFS — inter-DPU sync (host-mediated frontier union between launches).
+
+use prim_pim::arch::SystemConfig;
+use prim_pim::prim::common::{bench_by_name, BenchResult, ExecChoice, RunConfig};
+
+fn run_with(name: &str, exec: ExecChoice) -> BenchResult {
+    let b = bench_by_name(name).expect("known benchmark");
+    let rc = RunConfig {
+        sys: SystemConfig::p21_rank(),
+        n_dpus: 4,
+        n_tasklets: 16,
+        scale: prim_pim::harness::harness_scale(name) * 0.05,
+        seed: 99,
+        exec,
+    };
+    b.run(&rc)
+}
+
+fn assert_executors_identical(name: &str) {
+    let s = run_with(name, ExecChoice::Serial);
+    let p = run_with(name, ExecChoice::Parallel(4));
+    assert!(s.verified, "{name}: serial run failed verification");
+    assert!(p.verified, "{name}: parallel run failed verification");
+    assert_eq!(s.work_items, p.work_items, "{name}: work items differ");
+    assert_eq!(s.dpu_instrs, p.dpu_instrs, "{name}: DPU instruction counts differ");
+    // TimeBreakdown derives PartialEq over raw f64s — this demands
+    // bit-identical DPU / Inter-DPU / CPU-DPU / DPU-CPU seconds, byte
+    // counters, and launch counts.
+    assert_eq!(s.breakdown, p.breakdown, "{name}: time breakdown differs");
+}
+
+#[test]
+fn va_no_sync_class() {
+    assert_executors_identical("VA");
+}
+
+#[test]
+fn red_intra_dpu_sync_class() {
+    assert_executors_identical("RED");
+}
+
+#[test]
+fn bfs_inter_dpu_sync_class() {
+    assert_executors_identical("BFS");
+}
+
+/// The parallel executor must also be self-consistent across worker
+/// counts (shard boundaries shift, results must not).
+#[test]
+fn parallel_worker_count_invariant() {
+    let a = run_with("VA", ExecChoice::Parallel(2));
+    let b = run_with("VA", ExecChoice::Parallel(7));
+    assert!(a.verified && b.verified);
+    assert_eq!(a.breakdown, b.breakdown);
+    assert_eq!(a.dpu_instrs, b.dpu_instrs);
+}

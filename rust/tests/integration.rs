@@ -13,6 +13,7 @@ fn small_rc(nd: u32, scale_mult: f64) -> impl Fn(&str) -> RunConfig {
         scale: prim_pim::harness::harness_scale(bench) * 0.05 * scale_mult,
         seed: 1234,
         sys: SystemConfig::p21_rank(),
+        exec: Default::default(),
     }
 }
 
@@ -58,6 +59,7 @@ fn e19_is_slower_than_p21() {
             scale: 0.005,
             seed: 7,
             sys,
+            exec: Default::default(),
         };
         let p21 = b.run(&mk(SystemConfig::p21_rank()));
         let e19 = b.run(&mk(SystemConfig {

@@ -70,7 +70,9 @@ fn prog_rec_4_stride_crossover() {
     let arch = DpuArch::p21();
     let n = 8 * 1024;
     assert!(strided::coarse_strided_bw(arch, 2, 16, n) > strided::fine_strided_bw(arch, 2, 16, n));
-    assert!(strided::fine_strided_bw(arch, 32, 16, n) > strided::coarse_strided_bw(arch, 32, 16, n));
+    assert!(
+        strided::fine_strided_bw(arch, 32, 16, n) > strided::coarse_strided_bw(arch, 32, 16, n)
+    );
 }
 
 /// KEY OBSERVATION 11: mutex-heavy kernels stop scaling with tasklets.

@@ -234,6 +234,7 @@ fn prop_sel_uni_match_reference_any_config() {
             scale: 0.0005 + g.f64() * 0.002,
             seed: g.rng().next_u64(),
             sys: SystemConfig::p21_rank(),
+            exec: Default::default(),
         };
         assert!(Sel.run(&rc).verified, "{rc:?}");
         assert!(Uni.run(&rc).verified, "{rc:?}");
@@ -251,6 +252,7 @@ fn prop_scan_matches_reference_any_config() {
             scale: 0.0005 + g.f64() * 0.002,
             seed: g.rng().next_u64(),
             sys: SystemConfig::p21_rank(),
+            exec: Default::default(),
         };
         assert!(ScanSsa.run(&rc).verified, "{rc:?}");
         assert!(ScanRss.run(&rc).verified, "{rc:?}");
@@ -271,7 +273,8 @@ fn prop_fleet_native_equals_formula() {
         };
         let c = fleet_cycles_native(&[d])[0];
         let pipeline = d.instrs_per_tasklet * 11f64.max(d.tasklets);
-        let dma = d.n_reads * (77.0 + 0.5 * d.read_bytes) + d.n_writes * (61.0 + 0.5 * d.write_bytes);
+        let dma = d.n_reads * (77.0 + 0.5 * d.read_bytes)
+            + d.n_writes * (61.0 + 0.5 * d.write_bytes);
         assert_eq!(c, pipeline.max(dma));
     });
 }
