@@ -98,10 +98,16 @@ fn main() {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
 
-    // 5. transfer engine
+    // 5. transfer engine (typed-symbol builder: equal and ragged fan-out)
     let bufs: Vec<Vec<i64>> = (0..64).map(|i| vec![i as i64; 8192]).collect();
-    b.bench_items("push_to 64 x 64KB", Some(64.0 * 65536.0), &mut || {
-        set.push_to(0, &bufs)
+    let sym = set.symbol::<i64>(8192);
+    b.bench_items("xfer equal 64 x 64KB", Some(64.0 * 65536.0), &mut || {
+        set.xfer(sym).to().equal(&bufs)
+    });
+    let ragged: Vec<Vec<i64>> = (0..64).map(|i| vec![i as i64; 128 * (i + 1)]).collect();
+    let ragged_bytes: f64 = ragged.iter().map(|b| b.len() as f64 * 8.0).sum();
+    b.bench_items("xfer ragged 64 x (1KB..64KB)", Some(ragged_bytes), &mut || {
+        set.xfer(sym).to().ragged(&ragged)
     });
 
     // 6. PJRT fleet estimator (if artifacts are built)

@@ -37,22 +37,23 @@ fn main() -> anyhow::Result<()> {
         (0..REQUESTS).map(|_| (0..dim).map(|_| rng.below(4) as u32).collect()).collect();
 
     // ---- PIM side: distribute the model across 16 simulated DPUs
+    // (typed MRAM symbols: W1 | W2 | W3 | x | y)
     let mut set = PimSet::allocate(SystemConfig::p21_rank(), N_DPUS as u32);
     let rows_per = dim / N_DPUS;
-    let wl_bytes = rows_per * dim * 4;
+    let w_syms: Vec<_> = (0..LAYERS).map(|_| set.symbol::<u32>(rows_per * dim)).collect();
+    let x_sym = set.symbol::<u32>(dim);
+    let y_sym = set.symbol::<u32>(rows_per * 2);
     for (l, w) in weights.iter().enumerate() {
         let bufs: Vec<Vec<u32>> = (0..N_DPUS)
             .map(|d| w[d * rows_per * dim..(d + 1) * rows_per * dim].to_vec())
             .collect();
-        set.push_to(l * wl_bytes, &bufs);
+        set.xfer(w_syms[l]).to().equal(&bufs);
     }
-    let x_off = LAYERS * wl_bytes;
-    let y_off = x_off + dim * 4;
     println!(
         "model loaded: {} layers x {} DPUs ({:.1} MB/DPU)",
         LAYERS,
         N_DPUS,
-        (LAYERS * wl_bytes) as f64 / 1e6
+        (LAYERS * rows_per * dim * 4) as f64 / 1e6
     );
 
     // ---- host side: the AOT JAX/Pallas oracle through PJRT
@@ -78,20 +79,21 @@ fn main() -> anyhow::Result<()> {
     for (i, x) in requests.iter().enumerate() {
         // serve on PIM: 3 layers with host gather/redistribute between
         let before = set.metrics;
-        set.broadcast(x_off, x);
+        set.xfer(x_sym).to().broadcast(x);
         for l in 0..LAYERS {
+            let w_sym = w_syms[l];
             set.launch(16, |_d, ctx: &mut Ctx| {
-                gemv_kernel(ctx, rows_per, dim, l * wl_bytes, x_off, y_off, true);
+                gemv_kernel(ctx, rows_per, dim, w_sym.off(), x_sym.off(), y_sym.off(), true);
             });
             if l + 1 < LAYERS {
-                let parts = set.push_from_inter::<u32>(y_off, rows_per * 2);
+                let parts = set.xfer(y_sym).inter().from().all();
                 let next: Vec<u32> =
                     parts.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
                 set.host_merge((dim * 4) as u64, dim as u64);
-                set.broadcast_inter(x_off, &next);
+                set.xfer(x_sym).inter().to().broadcast(&next);
             }
         }
-        let parts = set.push_from::<u32>(y_off, rows_per * 2);
+        let parts = set.xfer(y_sym).from().all();
         let y_pim: Vec<u32> = parts.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
         let lat = set.metrics.total() - before.total();
         pim_lat.push(lat);

@@ -2,6 +2,10 @@
 //! written against the UPMEM-style API, verify the result, and print the
 //! paper-style time breakdown.
 //!
+//! Data movement uses the typed-symbol API: carve MRAM regions from the
+//! fleet layout (`set.symbol`), then transfer through the builder
+//! (`set.xfer(sym).to().ragged(..)` etc.) — no hand-computed offsets.
+//!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
@@ -15,45 +19,56 @@ fn main() {
     // 1. allocate 8 DPUs of the 2,556-DPU (P21) system
     let mut set = PimSet::allocate(SystemConfig::p21_rank(), 8);
 
-    // 2. build a dataset and push equal chunks to the DPUs (parallel xfer)
-    let n = 64 * 1024usize;
+    // 2. build a dataset; 65,000 elements do NOT divide evenly by 8 DPUs,
+    //    so the chunks are pushed with a ragged parallel transfer
+    let n = 65_000usize;
     let mut rng = Rng::new(1);
     let a = rng.vec_i32(n, 1 << 20);
     let b = rng.vec_i32(n, 1 << 20);
-    let per = n / 8;
-    let abufs: Vec<Vec<i32>> = (0..8).map(|d| a[d * per..(d + 1) * per].to_vec()).collect();
-    let bbufs: Vec<Vec<i32>> = (0..8).map(|d| b[d * per..(d + 1) * per].to_vec()).collect();
-    set.push_to(0, &abufs);
-    set.push_to(per * 4, &bbufs);
+    let per = n.div_ceil(8).div_ceil(256) * 256; // whole 1,024-B blocks
+    let chunk = |src: &[i32], d: usize| src[(d * per).min(n)..((d + 1) * per).min(n)].to_vec();
+    let abufs: Vec<Vec<i32>> = (0..8).map(|d| chunk(&a, d)).collect();
+    let bbufs: Vec<Vec<i32>> = (0..8).map(|d| chunk(&b, d)).collect();
+    let counts: Vec<usize> = abufs.iter().map(Vec::len).collect();
+    let a_sym = set.symbol::<i32>(per);
+    let b_sym = set.symbol::<i32>(per);
+    let c_sym = set.symbol::<i32>(per);
+    set.xfer(a_sym).to().ragged(&abufs);
+    set.xfer(b_sym).to().ragged(&bbufs);
 
     // 3. launch 16 tasklets per DPU: stream 1,024-B blocks, add, write back
-    let blocks = per * 4 / 1024;
-    set.launch(16, |_dpu, ctx: &mut Ctx| {
+    let counts_ref = &counts;
+    set.launch(16, |d, ctx: &mut Ctx| {
+        let my_bytes = counts_ref[d] * 4;
+        let blocks = my_bytes.div_ceil(1024);
         let wa = ctx.mem_alloc(1024);
         let wb = ctx.mem_alloc(1024);
         let mut blk = ctx.tasklet_id as usize;
         while blk < blocks {
             let off = blk * 1024;
-            ctx.mram_read(off, wa, 1024);
-            ctx.mram_read(per * 4 + off, wb, 1024);
-            let av: Vec<i32> = ctx.wram_get(wa, 256);
-            let bv: Vec<i32> = ctx.wram_get(wb, 256);
+            let take = (my_bytes - off).min(1024);
+            ctx.mram_read(a_sym.off() + off, wa, take);
+            ctx.mram_read(b_sym.off() + off, wb, take);
+            let av: Vec<i32> = ctx.wram_get(wa, take / 4);
+            let bv: Vec<i32> = ctx.wram_get(wb, take / 4);
             let cv: Vec<i32> = av.iter().zip(&bv).map(|(x, y)| x.wrapping_add(*y)).collect();
             ctx.wram_set(wa, &cv);
-            ctx.charge_stream(DType::I32, Op::Add, 256);
-            ctx.mram_write(wa, 2 * per * 4 + off, 1024);
+            ctx.charge_stream(DType::I32, Op::Add, (take / 4) as u64);
+            ctx.mram_write(wa, c_sym.off() + off, take);
             blk += ctx.n_tasklets as usize;
         }
     });
 
-    // 4. retrieve and verify
-    let out = set.push_from::<i32>(2 * per * 4, per);
-    let ok = out.iter().enumerate().all(|(d, chunk)| {
-        chunk.iter().enumerate().all(|(i, v)| {
-            let g = d * per + i;
-            *v == a[g].wrapping_add(b[g])
-        })
-    });
+    // 4. retrieve (ragged — each DPU returns exactly its share) and verify
+    let out = set.xfer(c_sym).from().ragged(&counts);
+    let mut c: Vec<i32> = Vec::with_capacity(n);
+    for part in &out {
+        c.extend_from_slice(part);
+    }
+    let ok = c
+        .iter()
+        .enumerate()
+        .all(|(g, v)| *v == a[g].wrapping_add(b[g]));
 
     println!("vector-add on 8 simulated DPUs: {}", if ok { "VERIFIED" } else { "FAILED" });
     println!("  {}", set.metrics.fmt_ms());

@@ -1,0 +1,242 @@
+//! Typed MRAM layout: a per-fleet bump allocator and `Symbol<T>` handles.
+//!
+//! The UPMEM SDK addresses DPU memory through *named program symbols*
+//! (`DPU_MRAM_HEAP_POINTER_NAME` plus whatever the kernel declares); the
+//! host never does pointer arithmetic against raw MRAM offsets. Our first
+//! API generation did exactly that — every workload hand-computed
+//! `mram_off: usize` values and kept them consistent across host and
+//! kernel by discipline alone. `MramLayout` replaces the discipline with a
+//! bump allocator: each fleet owns one layout, every region is carved out
+//! exactly once, all offsets respect the 8-byte DMA alignment rule
+//! (`DpuArch::dma_align`), and the resulting [`Symbol`] is the only
+//! currency the transfer builder (`PimSet::xfer`) accepts.
+//!
+//! Offsets are deterministic: the same allocation sequence always yields
+//! the same layout, so modeled timing and functional results stay
+//! reproducible across runs and executors.
+
+use crate::util::pod::Pod;
+use std::fmt;
+use std::marker::PhantomData;
+
+/// The MRAM DMA alignment rule every region start must satisfy.
+pub const DMA_ALIGN: usize = 8;
+
+/// Per-fleet bump allocator over one DPU's 64-MB MRAM bank.
+///
+/// Every DPU in a set shares the same layout (SPMD symbols live at the
+/// same offset in every bank, exactly like linker-placed symbols in the
+/// real SDK). Allocation never reuses space; `reset` starts a fresh
+/// program layout.
+#[derive(Clone, Debug)]
+pub struct MramLayout {
+    capacity: usize,
+    cursor: usize,
+}
+
+impl MramLayout {
+    /// A fresh layout over a bank of `capacity` bytes.
+    pub fn new(capacity: usize) -> Self {
+        MramLayout { capacity, cursor: 0 }
+    }
+
+    /// Carve out a region of `elems` elements of `T`, 8-byte aligned and
+    /// disjoint from every previously allocated region. Panics when the
+    /// bank is exhausted.
+    pub fn alloc<T: Pod>(&mut self, elems: usize) -> Symbol<T> {
+        let bytes = elems
+            .checked_mul(std::mem::size_of::<T>())
+            .expect("MRAM symbol size overflows usize");
+        let off = self.cursor;
+        let end = off.checked_add(bytes).expect("MRAM layout cursor overflows usize");
+        assert!(
+            end <= self.capacity,
+            "MRAM layout overflow: {bytes} B requested at offset {off} in a {} B bank",
+            self.capacity
+        );
+        self.cursor = (end + DMA_ALIGN - 1) & !(DMA_ALIGN - 1);
+        Symbol { off, elems, _elem: PhantomData }
+    }
+
+    /// Bytes consumed so far (next allocation offset).
+    pub fn used(&self) -> usize {
+        self.cursor
+    }
+
+    /// Bytes still available.
+    pub fn remaining(&self) -> usize {
+        self.capacity.saturating_sub(self.cursor)
+    }
+
+    /// Bank size this layout manages.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Forget all allocations (a new kernel program's layout).
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+/// A typed handle to an MRAM region: element type, byte offset, and
+/// capacity in elements. The analogue of a named program symbol in the
+/// UPMEM SDK — transfers address symbols, never raw offsets.
+///
+/// `Symbol` is `Copy` (two words), so kernels capture it by value and use
+/// [`Symbol::off`] / [`Symbol::byte_at`] for their DMA addressing.
+pub struct Symbol<T: Pod> {
+    off: usize,
+    elems: usize,
+    // fn() -> T keeps Symbol Send + Sync + Copy independent of T's autotraits.
+    _elem: PhantomData<fn() -> T>,
+}
+
+impl<T: Pod> Clone for Symbol<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T: Pod> Copy for Symbol<T> {}
+
+impl<T: Pod> fmt::Debug for Symbol<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Symbol<{}>[off={}, elems={}]",
+            std::any::type_name::<T>(),
+            self.off,
+            self.elems
+        )
+    }
+}
+
+impl<T: Pod> Symbol<T> {
+    /// Wrap a hand-placed region (legacy interop; prefer
+    /// [`MramLayout::alloc`]). The offset must satisfy the 8-byte DMA
+    /// alignment rule.
+    pub fn raw(off: usize, elems: usize) -> Self {
+        assert!(off % DMA_ALIGN == 0, "symbol offset {off} violates the 8-B DMA alignment");
+        Symbol { off, elems, _elem: PhantomData }
+    }
+
+    /// Alignment-unchecked constructor for the deprecated raw-offset
+    /// `PimSet` wrappers, whose pre-Symbol API never required 8-B-aligned
+    /// offsets. Everything else goes through [`Symbol::raw`] or the
+    /// allocator.
+    pub(crate) fn raw_unchecked(off: usize, elems: usize) -> Self {
+        Symbol { off, elems, _elem: PhantomData }
+    }
+
+    /// Byte offset of the region start in every DPU's MRAM bank.
+    pub fn off(&self) -> usize {
+        self.off
+    }
+
+    /// Capacity in elements of `T`.
+    pub fn len(&self) -> usize {
+        self.elems
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.elems == 0
+    }
+
+    /// Capacity in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.elems * std::mem::size_of::<T>()
+    }
+
+    /// Byte offset of element `elem` (may equal the one-past-the-end
+    /// position; useful for kernel-side DMA addressing).
+    pub fn byte_at(&self, elem: usize) -> usize {
+        assert!(
+            elem <= self.elems,
+            "element {elem} out of bounds for {self:?}"
+        );
+        self.off + elem * std::mem::size_of::<T>()
+    }
+
+    /// Sub-symbol of `elems` elements starting at element `start`. The
+    /// slice start must itself land on an 8-byte boundary (it becomes a
+    /// transfer target).
+    pub fn slice(&self, start: usize, elems: usize) -> Symbol<T> {
+        assert!(
+            start + elems <= self.elems,
+            "slice {start}..{} out of bounds for {self:?}",
+            start + elems
+        );
+        Symbol::raw(self.byte_at(start), elems)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_is_aligned_and_disjoint() {
+        let mut l = MramLayout::new(1 << 20);
+        let a = l.alloc::<u8>(13);
+        let b = l.alloc::<i32>(7);
+        let c = l.alloc::<i64>(0);
+        let d = l.alloc::<i64>(4);
+        for off in [a.off(), b.off(), c.off(), d.off()] {
+            assert_eq!(off % DMA_ALIGN, 0);
+        }
+        assert!(a.off() + a.size_bytes() <= b.off());
+        assert!(b.off() + b.size_bytes() <= c.off());
+        assert!(c.off() + c.size_bytes() <= d.off());
+        assert_eq!(l.used(), d.off() + d.size_bytes());
+    }
+
+    #[test]
+    fn deterministic_offsets() {
+        let run = || {
+            let mut l = MramLayout::new(1 << 16);
+            (l.alloc::<i32>(100).off(), l.alloc::<u64>(9).off(), l.alloc::<u8>(3).off())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    #[should_panic(expected = "MRAM layout overflow")]
+    fn overflow_rejected() {
+        let mut l = MramLayout::new(64);
+        l.alloc::<i64>(9);
+    }
+
+    #[test]
+    fn reset_reuses_bank() {
+        let mut l = MramLayout::new(128);
+        l.alloc::<i64>(16);
+        assert_eq!(l.remaining(), 0);
+        l.reset();
+        assert_eq!(l.alloc::<i64>(16).off(), 0);
+    }
+
+    #[test]
+    fn slice_and_byte_at() {
+        let mut l = MramLayout::new(1 << 10);
+        let s = l.alloc::<i64>(32);
+        let sub = s.slice(4, 8);
+        assert_eq!(sub.off(), s.off() + 32);
+        assert_eq!(sub.len(), 8);
+        assert_eq!(s.byte_at(32), s.off() + 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_bounds_checked() {
+        let mut l = MramLayout::new(1 << 10);
+        let s = l.alloc::<i32>(8);
+        let _ = s.slice(4, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "DMA alignment")]
+    fn misaligned_raw_rejected() {
+        let _ = Symbol::<i32>::raw(4, 8);
+    }
+}

@@ -1,6 +1,21 @@
 //! Execution-time breakdown — the exact four buckets of the paper's
 //! Figures 12–15 plus data-volume counters.
 
+/// The accounting bucket a transfer is charged to. The paper splits every
+/// host↔DPU byte into input time (`CPU-DPU`), result-retrieval time
+/// (`DPU-CPU`), or host-orchestrated mid-run synchronization
+/// (`Inter-DPU`); the transfer builder makes the choice explicit instead
+/// of duplicating `_inter` method variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bucket {
+    /// Input distribution — the "CPU-DPU" bar.
+    CpuDpu,
+    /// Result retrieval — the "DPU-CPU" bar.
+    DpuCpu,
+    /// Mid-run exchange between launches — the "Inter-DPU" bar.
+    InterDpu,
+}
+
 /// Accumulated time breakdown of a benchmark run.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct TimeBreakdown {
@@ -26,6 +41,26 @@ pub struct TimeBreakdown {
 }
 
 impl TimeBreakdown {
+    /// Charge `secs` of transfer time and `bytes` of volume to `bucket` —
+    /// the single accounting path behind every transfer in the builder
+    /// (previously copy-pasted across ten `PimSet` methods).
+    pub fn account(&mut self, bucket: Bucket, secs: f64, bytes: u64) {
+        match bucket {
+            Bucket::CpuDpu => {
+                self.cpu_dpu += secs;
+                self.bytes_to_dpu += bytes;
+            }
+            Bucket::DpuCpu => {
+                self.dpu_cpu += secs;
+                self.bytes_from_dpu += bytes;
+            }
+            Bucket::InterDpu => {
+                self.inter_dpu += secs;
+                self.bytes_inter += bytes;
+            }
+        }
+    }
+
     /// Total wall time of the run.
     pub fn total(&self) -> f64 {
         self.dpu + self.inter_dpu + self.cpu_dpu + self.dpu_cpu
@@ -77,6 +112,18 @@ mod tests {
         };
         assert_eq!(b.total(), 2.0);
         assert_eq!(b.kernel_plus_sync(), 1.5);
+    }
+
+    #[test]
+    fn account_routes_to_buckets() {
+        let mut b = TimeBreakdown::default();
+        b.account(Bucket::CpuDpu, 1.0, 10);
+        b.account(Bucket::DpuCpu, 2.0, 20);
+        b.account(Bucket::InterDpu, 4.0, 40);
+        assert_eq!((b.cpu_dpu, b.bytes_to_dpu), (1.0, 10));
+        assert_eq!((b.dpu_cpu, b.bytes_from_dpu), (2.0, 20));
+        assert_eq!((b.inter_dpu, b.bytes_inter), (4.0, 40));
+        assert_eq!(b.dpu, 0.0);
     }
 
     #[test]

@@ -1,12 +1,21 @@
 //! L3 coordinator — the rust analogue of the UPMEM host runtime.
 //!
-//! Owns the DPU fleet, the transfer engine, and the host cost model, and
-//! accounts every second into the same four buckets the paper's figures
-//! use: `DPU` (kernel time, max over concurrently-running DPUs),
-//! `Inter-DPU` (host-orchestrated synchronization between launches),
-//! `CPU-DPU` and `DPU-CPU` (input/result transfers).
+//! Owns the DPU fleet, the transfer engine, the MRAM layout, and the host
+//! cost model, and accounts every second into the same four buckets the
+//! paper's figures use: `DPU` (kernel time, max over concurrently-running
+//! DPUs), `Inter-DPU` (host-orchestrated synchronization between
+//! launches), `CPU-DPU` and `DPU-CPU` (input/result transfers).
+//!
+//! Data movement goes through **typed MRAM symbols** and a single builder
+//! entry point ([`PimSet::xfer`]): allocate regions from the per-fleet
+//! [`MramLayout`], then pick a direction (`to`/`from`), a distribution
+//! (`one`, `equal`, `ragged`, `broadcast`), and — when the transfer is a
+//! mid-run exchange — an accounting [`Bucket`]. The legacy
+//! `copy_to`/`push_to`/`broadcast` family survives one release as
+//! deprecated thin wrappers.
 
 pub mod executor;
+pub mod layout;
 pub mod metrics;
 pub mod partition;
 
@@ -19,8 +28,9 @@ use std::sync::Arc;
 pub use executor::{
     ExecChoice, FleetExecutor, FleetSlot, LaunchJob, ParallelExecutor, SerialExecutor,
 };
-pub use metrics::TimeBreakdown;
-pub use partition::{chunk_ranges, chunk_ranges_aligned, cyclic_blocks};
+pub use layout::{MramLayout, Symbol};
+pub use metrics::{Bucket, TimeBreakdown};
+pub use partition::{chunk_ranges, chunk_ranges_aligned, cyclic_blocks, ragged_counts};
 
 /// Statistics of one kernel launch across the allocated DPU set.
 #[derive(Clone, Debug, Default)]
@@ -61,9 +71,14 @@ impl LaunchStats {
 pub struct PimSet {
     pub cfg: SystemConfig,
     pub dpus: Vec<Dpu>,
-    pub xfer: TransferEngine,
+    /// CPU↔DPU transfer engine (bandwidth model + functional movement).
+    pub engine: TransferEngine,
     pub host: HostModel,
     pub metrics: TimeBreakdown,
+    /// Per-fleet MRAM layout: every transferred region is carved out of
+    /// this bump allocator as a typed [`Symbol`] (same offset in every
+    /// DPU's bank, like linker-placed SDK symbols).
+    pub layout: MramLayout,
     /// Fleet execution engine: walks the DPU set on launches and parallel
     /// transfers (serial baseline or multi-core sharding; see
     /// [`executor`]). Both engines are bit-identical in modeled time.
@@ -90,12 +105,13 @@ impl PimSet {
         let dpus = (0..n_dpus).map(|_| Dpu::new(cfg.dpu)).collect();
         PimSet {
             dpus,
-            xfer: TransferEngine::new(XferModel {
+            engine: TransferEngine::new(XferModel {
                 rank_size: cfg.dpus_per_rank(),
                 ..XferModel::default()
             }),
             host: HostModel::default(),
             metrics: TimeBreakdown::default(),
+            layout: MramLayout::new(cfg.dpu.mram_bytes),
             exec,
             cfg,
         }
@@ -118,79 +134,30 @@ impl PimSet {
 
     // ------------------------------------------------------------ transfers
 
-    /// Serial CPU→DPU transfer (`dpu_copy_to`); charged to `CPU-DPU`.
-    pub fn copy_to<T: Pod>(&mut self, dpu: usize, mram_off: usize, data: &[T]) {
-        let s = self.xfer.copy_to(&mut self.dpus[dpu], mram_off, data);
-        self.metrics.cpu_dpu += s;
-        self.metrics.bytes_to_dpu += std::mem::size_of_val(data) as u64;
+    /// Allocate a typed MRAM region from the fleet layout (shorthand for
+    /// `set.layout.alloc`).
+    pub fn symbol<T: Pod>(&mut self, elems: usize) -> Symbol<T> {
+        self.layout.alloc(elems)
     }
 
-    /// Serial DPU→CPU transfer (`dpu_copy_from`); charged to `DPU-CPU`.
-    pub fn copy_from<T: Pod>(&mut self, dpu: usize, mram_off: usize, n: usize) -> Vec<T> {
-        let (v, s) = self.xfer.copy_from(&self.dpus[dpu], mram_off, n);
-        self.metrics.dpu_cpu += s;
-        self.metrics.bytes_from_dpu += (n * std::mem::size_of::<T>()) as u64;
-        v
-    }
-
-    /// Parallel CPU→DPU transfer of equal-size buffers (`dpu_push_xfer`).
-    pub fn push_to<T: Pod>(&mut self, mram_off: usize, bufs: &[Vec<T>]) {
-        let s = self.xfer.push_to(&*self.exec, &mut self.dpus, mram_off, bufs);
-        self.metrics.cpu_dpu += s;
-        self.metrics.bytes_to_dpu +=
-            bufs.iter().map(|b| std::mem::size_of_val(b.as_slice()) as u64).sum::<u64>();
-    }
-
-    /// Parallel DPU→CPU retrieval of equal-size buffers.
-    pub fn push_from<T: Pod>(&mut self, mram_off: usize, n: usize) -> Vec<Vec<T>> {
-        let (v, s) = self.xfer.push_from(&*self.exec, &mut self.dpus, mram_off, n);
-        self.metrics.dpu_cpu += s;
-        self.metrics.bytes_from_dpu += (self.dpus.len() * n * std::mem::size_of::<T>()) as u64;
-        v
-    }
-
-    /// Broadcast the same buffer to all DPUs (`dpu_broadcast_to`).
-    pub fn broadcast<T: Pod>(&mut self, mram_off: usize, data: &[T]) {
-        let s = self.xfer.broadcast_to(&*self.exec, &mut self.dpus, mram_off, data);
-        self.metrics.cpu_dpu += s;
-        self.metrics.bytes_to_dpu +=
-            (self.dpus.len() * std::mem::size_of_val(data)) as u64;
-    }
-
-    /// Variant of the parallel transfers used during *inter-DPU*
-    /// synchronization phases (the paper charges mid-kernel exchanges to
-    /// "Inter-DPU", not to CPU-DPU/DPU-CPU input/output time).
-    pub fn push_to_inter<T: Pod>(&mut self, mram_off: usize, bufs: &[Vec<T>]) {
-        let s = self.xfer.push_to(&*self.exec, &mut self.dpus, mram_off, bufs);
-        self.metrics.inter_dpu += s;
-        self.metrics.bytes_inter +=
-            bufs.iter().map(|b| std::mem::size_of_val(b.as_slice()) as u64).sum::<u64>();
-    }
-
-    pub fn push_from_inter<T: Pod>(&mut self, mram_off: usize, n: usize) -> Vec<Vec<T>> {
-        let (v, s) = self.xfer.push_from(&*self.exec, &mut self.dpus, mram_off, n);
-        self.metrics.inter_dpu += s;
-        self.metrics.bytes_inter += (self.dpus.len() * n * std::mem::size_of::<T>()) as u64;
-        v
-    }
-
-    pub fn broadcast_inter<T: Pod>(&mut self, mram_off: usize, data: &[T]) {
-        let s = self.xfer.broadcast_to(&*self.exec, &mut self.dpus, mram_off, data);
-        self.metrics.inter_dpu += s;
-        self.metrics.bytes_inter += (self.dpus.len() * std::mem::size_of_val(data)) as u64;
-    }
-
-    pub fn copy_to_inter<T: Pod>(&mut self, dpu: usize, mram_off: usize, data: &[T]) {
-        let s = self.xfer.copy_to(&mut self.dpus[dpu], mram_off, data);
-        self.metrics.inter_dpu += s;
-        self.metrics.bytes_inter += std::mem::size_of_val(data) as u64;
-    }
-
-    pub fn copy_from_inter<T: Pod>(&mut self, dpu: usize, mram_off: usize, n: usize) -> Vec<T> {
-        let (v, s) = self.xfer.copy_from(&self.dpus[dpu], mram_off, n);
-        self.metrics.inter_dpu += s;
-        self.metrics.bytes_inter += (n * std::mem::size_of::<T>()) as u64;
-        v
+    /// The unified transfer entry point: start a transfer against `sym`.
+    /// Chain a [`Bucket`] override (`.bucket(..)` / `.inter()`), pick the
+    /// direction (`.to()` / `.from()`), then a distribution terminal:
+    ///
+    /// ```no_run
+    /// # use prim_pim::arch::SystemConfig;
+    /// # use prim_pim::coordinator::PimSet;
+    /// # let mut set = PimSet::allocate(SystemConfig::p21_rank(), 4);
+    /// let sym = set.symbol::<i64>(1024);
+    /// let bufs: Vec<Vec<i64>> = (0..4usize).map(|d| vec![d as i64; 256 + 64 * d]).collect();
+    /// set.xfer(sym).to().ragged(&bufs);            // per-DPU sizes, CPU-DPU bucket
+    /// set.xfer(sym).inter().to().broadcast(&[1]);  // same bytes everywhere, Inter-DPU
+    /// let lens: Vec<usize> = bufs.iter().map(Vec::len).collect();
+    /// let back = set.xfer(sym).from().ragged(&lens);
+    /// # let _ = back;
+    /// ```
+    pub fn xfer<T: Pod>(&mut self, sym: Symbol<T>) -> Xfer<'_, T> {
+        Xfer { set: self, sym, bucket: None }
     }
 
     // --------------------------------------------------------------- launch
@@ -277,9 +244,260 @@ impl PimSet {
         self.metrics.inter_dpu += self.host.merge_numa(bytes, ops, spans);
     }
 
+    /// Charge host merge work to an explicit bucket (SEL/UNI charge their
+    /// retrieval-time merge to `DPU-CPU`, per the paper's methodology).
+    pub fn host_merge_in(&mut self, bucket: Bucket, bytes: u64, ops: u64) {
+        let spans = self.spans_sockets();
+        let secs = self.host.merge_numa(bytes, ops, spans);
+        self.metrics.account(bucket, secs, 0);
+    }
+
     /// Reset accumulated metrics (dataset stays in MRAM).
     pub fn reset_metrics(&mut self) {
         self.metrics = TimeBreakdown::default();
+    }
+
+    // -------------------------------------------- deprecated legacy surface
+    //
+    // The pre-Symbol API: raw `mram_off` offsets, ten near-duplicate
+    // methods. Each is a thin wrapper over the builder now; kept one
+    // release for out-of-tree callers.
+
+    /// Serial CPU→DPU transfer (`dpu_copy_to`); charged to `CPU-DPU`.
+    #[deprecated(note = "use `set.xfer(sym).to().one(dpu, data)` with a typed Symbol")]
+    pub fn copy_to<T: Pod>(&mut self, dpu: usize, mram_off: usize, data: &[T]) {
+        self.xfer(Symbol::<T>::raw_unchecked(mram_off, data.len())).to().one(dpu, data);
+    }
+
+    /// Serial DPU→CPU transfer (`dpu_copy_from`); charged to `DPU-CPU`.
+    #[deprecated(note = "use `set.xfer(sym).from().one(dpu, n)` with a typed Symbol")]
+    pub fn copy_from<T: Pod>(&mut self, dpu: usize, mram_off: usize, n: usize) -> Vec<T> {
+        self.xfer(Symbol::<T>::raw_unchecked(mram_off, n)).from().one(dpu, n)
+    }
+
+    /// Parallel CPU→DPU transfer of equal-size buffers (`dpu_push_xfer`).
+    #[deprecated(note = "use `set.xfer(sym).to().equal(bufs)` with a typed Symbol")]
+    pub fn push_to<T: Pod>(&mut self, mram_off: usize, bufs: &[Vec<T>]) {
+        // size the compat symbol from the widest buffer so misuse still
+        // reaches the engine's "equal sizes" diagnostic, not check_fits
+        let elems = bufs.iter().map(Vec::len).max().unwrap_or(0);
+        self.xfer(Symbol::<T>::raw_unchecked(mram_off, elems)).to().equal(bufs);
+    }
+
+    /// Parallel DPU→CPU retrieval of equal-size buffers.
+    #[deprecated(note = "use `set.xfer(sym).from().equal(n)` with a typed Symbol")]
+    pub fn push_from<T: Pod>(&mut self, mram_off: usize, n: usize) -> Vec<Vec<T>> {
+        self.xfer(Symbol::<T>::raw_unchecked(mram_off, n)).from().equal(n)
+    }
+
+    /// Broadcast the same buffer to all DPUs (`dpu_broadcast_to`).
+    #[deprecated(note = "use `set.xfer(sym).to().broadcast(data)` with a typed Symbol")]
+    pub fn broadcast<T: Pod>(&mut self, mram_off: usize, data: &[T]) {
+        self.xfer(Symbol::<T>::raw_unchecked(mram_off, data.len())).to().broadcast(data);
+    }
+
+    /// Inter-DPU-bucket variant of [`PimSet::push_to`].
+    #[deprecated(note = "use `set.xfer(sym).inter().to().equal(bufs)`")]
+    pub fn push_to_inter<T: Pod>(&mut self, mram_off: usize, bufs: &[Vec<T>]) {
+        let elems = bufs.iter().map(Vec::len).max().unwrap_or(0);
+        self.xfer(Symbol::<T>::raw_unchecked(mram_off, elems)).inter().to().equal(bufs);
+    }
+
+    /// Inter-DPU-bucket variant of [`PimSet::push_from`].
+    #[deprecated(note = "use `set.xfer(sym).inter().from().equal(n)`")]
+    pub fn push_from_inter<T: Pod>(&mut self, mram_off: usize, n: usize) -> Vec<Vec<T>> {
+        self.xfer(Symbol::<T>::raw_unchecked(mram_off, n)).inter().from().equal(n)
+    }
+
+    /// Inter-DPU-bucket variant of [`PimSet::broadcast`].
+    #[deprecated(note = "use `set.xfer(sym).inter().to().broadcast(data)`")]
+    pub fn broadcast_inter<T: Pod>(&mut self, mram_off: usize, data: &[T]) {
+        self.xfer(Symbol::<T>::raw_unchecked(mram_off, data.len())).inter().to().broadcast(data);
+    }
+
+    /// Inter-DPU-bucket variant of [`PimSet::copy_to`].
+    #[deprecated(note = "use `set.xfer(sym).inter().to().one(dpu, data)`")]
+    pub fn copy_to_inter<T: Pod>(&mut self, dpu: usize, mram_off: usize, data: &[T]) {
+        self.xfer(Symbol::<T>::raw_unchecked(mram_off, data.len())).inter().to().one(dpu, data);
+    }
+
+    /// Inter-DPU-bucket variant of [`PimSet::copy_from`].
+    #[deprecated(note = "use `set.xfer(sym).inter().from().one(dpu, n)`")]
+    pub fn copy_from_inter<T: Pod>(&mut self, dpu: usize, mram_off: usize, n: usize) -> Vec<T> {
+        self.xfer(Symbol::<T>::raw_unchecked(mram_off, n)).inter().from().one(dpu, n)
+    }
+}
+
+// ------------------------------------------------------- transfer builder
+
+/// A transfer in the making: symbol chosen, bucket optionally overridden,
+/// direction not yet picked. See [`PimSet::xfer`].
+#[must_use = "a transfer does nothing until a direction + distribution terminal runs"]
+pub struct Xfer<'s, T: Pod> {
+    set: &'s mut PimSet,
+    sym: Symbol<T>,
+    bucket: Option<Bucket>,
+}
+
+impl<'s, T: Pod> Xfer<'s, T> {
+    /// Charge this transfer to an explicit accounting bucket. Defaults:
+    /// `to` → [`Bucket::CpuDpu`], `from` → [`Bucket::DpuCpu`].
+    pub fn bucket(mut self, bucket: Bucket) -> Self {
+        self.bucket = Some(bucket);
+        self
+    }
+
+    /// Shorthand for `.bucket(Bucket::InterDpu)` — mid-run exchanges
+    /// between launches (the paper's "Inter-DPU" bar).
+    pub fn inter(self) -> Self {
+        self.bucket(Bucket::InterDpu)
+    }
+
+    /// Host → MRAM direction.
+    pub fn to(self) -> ToXfer<'s, T> {
+        let bucket = self.bucket.unwrap_or(Bucket::CpuDpu);
+        ToXfer { set: self.set, sym: self.sym, bucket }
+    }
+
+    /// MRAM → host direction.
+    // An inherent `from` cannot be confused with `From::from` here: it
+    // takes `self` and continues the builder chain.
+    #[allow(clippy::should_implement_trait)]
+    pub fn from(self) -> FromXfer<'s, T> {
+        let bucket = self.bucket.unwrap_or(Bucket::DpuCpu);
+        FromXfer { set: self.set, sym: self.sym, bucket }
+    }
+}
+
+/// Host→MRAM transfer with direction fixed; pick a distribution terminal.
+#[must_use = "a transfer does nothing until a distribution terminal runs"]
+pub struct ToXfer<'s, T: Pod> {
+    set: &'s mut PimSet,
+    sym: Symbol<T>,
+    bucket: Bucket,
+}
+
+/// Shared bounds check of every builder terminal: a transfer may not
+/// exceed its symbol's capacity.
+fn check_fits<T: Pod>(sym: &Symbol<T>, elems: usize) {
+    assert!(
+        elems <= sym.len(),
+        "transfer of {elems} elements overflows {sym:?}"
+    );
+}
+
+impl<T: Pod> ToXfer<'_, T> {
+    /// Serial transfer to a single DPU (`dpu_copy_to`).
+    pub fn one(self, dpu: usize, data: &[T]) {
+        check_fits(&self.sym, data.len());
+        let secs = self.set.engine.copy_to(&mut self.set.dpus[dpu], self.sym.off(), data);
+        self.set.metrics.account(self.bucket, secs, std::mem::size_of_val(data) as u64);
+    }
+
+    /// Parallel transfer of equal-size per-DPU buffers (`dpu_push_xfer`,
+    /// the 2021.1.1 SDK shape).
+    pub fn equal(self, bufs: &[Vec<T>]) {
+        for b in bufs {
+            check_fits(&self.sym, b.len());
+        }
+        let secs = self.set.engine.push_to(
+            &*self.set.exec,
+            &mut self.set.dpus,
+            self.sym.off(),
+            bufs,
+        );
+        let bytes: u64 =
+            bufs.iter().map(|b| std::mem::size_of_val(b.as_slice()) as u64).sum();
+        self.set.metrics.account(self.bucket, secs, bytes);
+    }
+
+    /// Parallel transfer with **per-DPU sizes** — the generalization that
+    /// retires the sentinel-padding workarounds (empty buffers skip their
+    /// DPU entirely).
+    pub fn ragged(self, bufs: &[Vec<T>]) {
+        for b in bufs {
+            check_fits(&self.sym, b.len());
+        }
+        let secs = self.set.engine.push_to_ragged(
+            &*self.set.exec,
+            &mut self.set.dpus,
+            self.sym.off(),
+            bufs,
+        );
+        let bytes: u64 =
+            bufs.iter().map(|b| std::mem::size_of_val(b.as_slice()) as u64).sum();
+        self.set.metrics.account(self.bucket, secs, bytes);
+    }
+
+    /// Same buffer to every DPU (`dpu_broadcast_to`).
+    pub fn broadcast(self, data: &[T]) {
+        check_fits(&self.sym, data.len());
+        let secs = self.set.engine.broadcast_to(
+            &*self.set.exec,
+            &mut self.set.dpus,
+            self.sym.off(),
+            data,
+        );
+        let bytes = (self.set.dpus.len() * std::mem::size_of_val(data)) as u64;
+        self.set.metrics.account(self.bucket, secs, bytes);
+    }
+}
+
+/// MRAM→host transfer with direction fixed; pick a distribution terminal.
+#[must_use = "a transfer does nothing until a distribution terminal runs"]
+pub struct FromXfer<'s, T: Pod> {
+    set: &'s mut PimSet,
+    sym: Symbol<T>,
+    bucket: Bucket,
+}
+
+impl<T: Pod> FromXfer<'_, T> {
+    /// Serial retrieval of `n` elements from a single DPU
+    /// (`dpu_copy_from`).
+    pub fn one(self, dpu: usize, n: usize) -> Vec<T> {
+        check_fits(&self.sym, n);
+        let (v, secs) = self.set.engine.copy_from(&self.set.dpus[dpu], self.sym.off(), n);
+        self.set
+            .metrics
+            .account(self.bucket, secs, (n * std::mem::size_of::<T>()) as u64);
+        v
+    }
+
+    /// Parallel retrieval of `n` elements from every DPU.
+    pub fn equal(self, n: usize) -> Vec<Vec<T>> {
+        check_fits(&self.sym, n);
+        let (v, secs) = self.set.engine.push_from(
+            &*self.set.exec,
+            &mut self.set.dpus,
+            self.sym.off(),
+            n,
+        );
+        let bytes = (self.set.dpus.len() * n * std::mem::size_of::<T>()) as u64;
+        self.set.metrics.account(self.bucket, secs, bytes);
+        v
+    }
+
+    /// Parallel retrieval of the whole symbol from every DPU.
+    pub fn all(self) -> Vec<Vec<T>> {
+        let n = self.sym.len();
+        self.equal(n)
+    }
+
+    /// Parallel retrieval with **per-DPU lengths** (a zero length skips
+    /// that DPU and returns an empty vector for it).
+    pub fn ragged(self, lens: &[usize]) -> Vec<Vec<T>> {
+        for &n in lens {
+            check_fits(&self.sym, n);
+        }
+        let (v, secs) = self.set.engine.push_from_ragged(
+            &*self.set.exec,
+            &mut self.set.dpus,
+            self.sym.off(),
+            lens,
+        );
+        let bytes: u64 = lens.iter().map(|&n| (n * std::mem::size_of::<T>()) as u64).sum();
+        self.set.metrics.account(self.bucket, secs, bytes);
+        v
     }
 }
 
@@ -291,16 +509,19 @@ mod tests {
     #[test]
     fn allocate_and_launch() {
         let mut set = PimSet::allocate(SystemConfig::p21_rank(), 4);
+        let data = set.symbol::<i64>(16);
+        let out = set.symbol::<i64>(1);
         let bufs: Vec<Vec<i64>> = (0..4).map(|i| vec![i as i64; 16]).collect();
-        set.push_to(0, &bufs);
-        let stats = set.launch(8, |_i, ctx| {
+        set.xfer(data).to().equal(&bufs);
+        let out_off = out.off();
+        let stats = set.launch(8, move |_i, ctx| {
             let b = ctx.mem_alloc(128);
-            ctx.mram_read(0, b, 128);
+            ctx.mram_read(data.off(), b, 128);
             let v: Vec<i64> = ctx.wram_get(b, 16);
             let s: i64 = v.iter().sum();
             ctx.wram_set(b, &[s]);
             ctx.charge_stream(crate::arch::DType::I64, crate::arch::Op::Add, 16);
-            ctx.mram_write(b, 1024, 8);
+            ctx.mram_write(b, out_off, 8);
         });
         assert_eq!(stats.timings.len(), 4);
         assert!(stats.secs > 0.0);
@@ -308,7 +529,7 @@ mod tests {
         assert!(set.metrics.cpu_dpu > 0.0);
         // per-DPU sums
         for i in 0..4usize {
-            let s = set.copy_from::<i64>(i, 1024, 1);
+            let s = set.xfer(out).from().one(i, 1);
             assert_eq!(s[0], 16 * i as i64);
         }
         assert!(set.metrics.dpu_cpu > 0.0);
@@ -339,26 +560,29 @@ mod tests {
     }
 
     /// Serial and parallel executors produce bit-identical stats and data
-    /// through the full PimSet surface (push_to / launch / launch_on /
-    /// push_from).
+    /// through the full PimSet surface (equal push / launch / launch_on /
+    /// equal gather).
     #[test]
     fn executors_bit_identical_through_pimset() {
         let run = |exec: Arc<dyn FleetExecutor>| {
             let mut set = PimSet::allocate_with(SystemConfig::p21_rank(), 8, exec);
+            let data = set.symbol::<i64>(16);
+            let out = set.symbol::<i64>(1);
             let bufs: Vec<Vec<i64>> = (0..8).map(|i| vec![i as i64 + 1; 16]).collect();
-            set.push_to(0, &bufs);
-            let s1 = set.launch(4, |d, ctx| {
+            set.xfer(data).to().equal(&bufs);
+            let out_off = out.off();
+            let s1 = set.launch(4, move |d, ctx| {
                 let b = ctx.mem_alloc(128);
-                ctx.mram_read(0, b, 128);
+                ctx.mram_read(data.off(), b, 128);
                 let v: Vec<i64> = ctx.wram_get(b, 16);
                 let sum: i64 = v.iter().sum();
                 ctx.wram_set(b, &[sum]);
                 ctx.charge_stream(crate::arch::DType::I64, crate::arch::Op::Add, 16);
                 ctx.compute(10 * d as u64);
-                ctx.mram_write(b, 1024, 8);
+                ctx.mram_write(b, out_off, 8);
             });
             let s2 = set.launch_on(&[1, 3, 5], 2, |d, ctx| ctx.compute(50 * d as u64 + 7));
-            let out = set.push_from::<i64>(1024, 1);
+            let out = set.xfer(out).from().equal(1);
             (s1, s2, out, set.metrics)
         };
         let (a1, a2, ao, am) = run(Arc::new(SerialExecutor));
@@ -384,10 +608,72 @@ mod tests {
             6,
             Arc::new(ParallelExecutor::new(3)),
         );
-        set.broadcast(0, &[9i64; 8]);
+        let sym = set.symbol::<i64>(8);
+        set.xfer(sym).to().broadcast(&[9i64; 8]);
         for d in 0..6 {
-            assert_eq!(set.copy_from::<i64>(d, 0, 8), vec![9i64; 8]);
+            assert_eq!(set.xfer(sym).from().one(d, 8), vec![9i64; 8]);
         }
         assert!(set.metrics.cpu_dpu > 0.0);
+    }
+
+    #[test]
+    fn ragged_roundtrip_and_accounting() {
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 4);
+        let sym = set.symbol::<i32>(64);
+        let bufs: Vec<Vec<i32>> =
+            vec![vec![1; 64], vec![2; 8], Vec::new(), vec![4; 24]];
+        set.xfer(sym).to().ragged(&bufs);
+        let sent: usize = bufs.iter().map(|b| b.len() * 4).sum();
+        assert_eq!(set.metrics.bytes_to_dpu, sent as u64);
+        assert!(set.metrics.cpu_dpu > 0.0);
+        let lens: Vec<usize> = bufs.iter().map(Vec::len).collect();
+        let back = set.xfer(sym).from().ragged(&lens);
+        assert_eq!(back, bufs);
+        assert_eq!(set.metrics.bytes_from_dpu, sent as u64);
+    }
+
+    #[test]
+    fn bucket_override_routes_every_terminal() {
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 2);
+        let sym = set.symbol::<i64>(8);
+        set.xfer(sym).inter().to().broadcast(&[1i64; 8]);
+        set.xfer(sym).inter().to().one(0, &[2i64; 4]);
+        let _ = set.xfer(sym).inter().from().equal(4);
+        let _ = set.xfer(sym).bucket(Bucket::InterDpu).from().ragged(&[2, 4]);
+        assert_eq!(set.metrics.cpu_dpu, 0.0);
+        assert_eq!(set.metrics.dpu_cpu, 0.0);
+        assert!(set.metrics.inter_dpu > 0.0);
+        assert_eq!(set.metrics.bytes_to_dpu, 0);
+        assert_eq!(set.metrics.bytes_from_dpu, 0);
+        assert_eq!(
+            set.metrics.bytes_inter,
+            (2 * 64 + 32 + 2 * 32 + 48) as u64
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows")]
+    fn builder_rejects_symbol_overflow() {
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 2);
+        let sym = set.symbol::<i64>(4);
+        set.xfer(sym).to().broadcast(&[0i64; 8]);
+    }
+
+    /// The deprecated raw-offset family stays functional (thin wrappers
+    /// over the builder) for one release.
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_wrappers_still_work() {
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 4);
+        let bufs: Vec<Vec<i64>> = (0..4).map(|i| vec![i as i64; 16]).collect();
+        set.push_to(0, &bufs);
+        assert_eq!(set.push_from::<i64>(0, 16), bufs);
+        set.broadcast(256, &[7i64; 4]);
+        assert_eq!(set.copy_from::<i64>(3, 256, 4), vec![7i64; 4]);
+        set.copy_to_inter(1, 512, &[1i64]);
+        assert_eq!(set.copy_from_inter::<i64>(1, 512, 1), vec![1i64]);
+        assert!(set.metrics.cpu_dpu > 0.0);
+        assert!(set.metrics.dpu_cpu > 0.0);
+        assert!(set.metrics.inter_dpu > 0.0);
     }
 }

@@ -37,6 +37,16 @@ pub fn chunk_ranges_aligned(n_items: usize, n_parts: usize, align: usize) -> Vec
     out
 }
 
+/// Per-DPU element counts of a contiguous ragged split: DPU `d` owns the
+/// slice `[d*per, d*per + count_d)` with `count_d = per.min(n_items -
+/// d*per)` (zero once the items run out) — the share vector the transfer
+/// builder's `ragged` terminals take. Counts always sum to `n_items`
+/// when `per * n_parts >= n_items`.
+pub fn ragged_counts(n_items: usize, per: usize, n_parts: usize) -> Vec<usize> {
+    assert!(per > 0 || n_items == 0, "zero stride cannot cover {n_items} items");
+    (0..n_parts).map(|d| per.min(n_items.saturating_sub(d * per))).collect()
+}
+
 /// Block-cyclic assignment of `n_blocks` blocks to `n_workers` workers
 /// (block j → worker j % n_workers) — the intra-DPU tasklet assignment used
 /// by VA and friends. Returns the block indices of each worker.
@@ -51,6 +61,20 @@ pub fn cyclic_blocks(n_blocks: usize, n_workers: usize) -> Vec<Vec<usize>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn ragged_counts_sum_to_items() {
+        for (n, per, p) in [(7504, 1280, 7), (100, 8, 13), (0, 16, 4), (64, 64, 1)] {
+            let counts = ragged_counts(n, per, p);
+            assert_eq!(counts.len(), p);
+            assert_eq!(counts.iter().sum::<usize>(), n, "n={n} per={per} p={p}");
+            assert!(counts.iter().all(|&c| c <= per));
+            // monotone: full shares first, then the tail, then zeros
+            for w in counts.windows(2) {
+                assert!(w[0] >= w[1]);
+            }
+        }
+    }
 
     #[test]
     fn chunks_cover_exactly() {

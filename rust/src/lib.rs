@@ -17,7 +17,10 @@
 //! - [`dpu`]     — single-DPU functional execution + fluid timing replay
 //! - [`system`]  — ranks/chips organization, CPU↔DPU transfer engine, host model
 //! - [`coordinator`] — L3: partitioning, kernel launch, metrics (the rust
-//!   analogue of the UPMEM host runtime), and the fleet execution engine
+//!   analogue of the UPMEM host runtime), the typed MRAM layout + transfer
+//!   builder ([`coordinator::layout`]: `Symbol<T>` regions moved via
+//!   `PimSet::xfer` with equal/ragged/broadcast distributions and explicit
+//!   accounting buckets), and the fleet execution engine
 //!   ([`coordinator::executor`]: serial baseline vs multi-core sharding,
 //!   bit-identical in modeled time)
 //! - [`runtime`] — PJRT client loading the AOT JAX/Pallas artifacts

@@ -4,13 +4,13 @@
 //! (b) serial / parallel / broadcast aggregate bandwidth for 1–64 DPUs in
 //!     one rank at 32 MB per DPU.
 //!
-//! Small sizes also move real bytes through the [`TransferEngine`] to keep
-//! the functional path exercised; large sizes query the calibrated model
-//! directly.
+//! Small sizes also move real bytes through the typed-symbol transfer
+//! builder to keep the functional path exercised; large sizes query the
+//! calibrated model directly.
 
-use crate::arch::DpuArch;
-use crate::dpu::Dpu;
-use crate::system::{Dir, TransferEngine, XferModel};
+use crate::arch::SystemConfig;
+use crate::coordinator::PimSet;
+use crate::system::{Dir, XferModel};
 
 /// Fig. 10a: (bytes, cpu→dpu MB/s, dpu→cpu MB/s) for one DPU.
 pub fn fig10a_sweep() -> Vec<(usize, f64, f64)> {
@@ -59,18 +59,30 @@ pub fn fig10b_sweep(bytes: usize, dpu_counts: &[u32]) -> Vec<Fig10bRow> {
         .collect()
 }
 
-/// Functional smoke transfer: round-trip `n` i64 per DPU through the
-/// engine and verify the data (used by tests and the harness preamble).
-pub fn roundtrip_check(arch: DpuArch, n_dpus: u32, n: usize) -> bool {
-    let exec = crate::coordinator::executor::SerialExecutor;
-    let eng = TransferEngine::new(XferModel::default());
-    let mut dpus: Vec<Dpu> = (0..n_dpus).map(|_| Dpu::new(arch)).collect();
-    let bufs: Vec<Vec<i64>> = (0..n_dpus as i64)
+/// Functional smoke transfer: round-trip up to `n` i64 per DPU through
+/// the typed symbol + builder path — an equal-size leg and a ragged leg —
+/// and verify the data (used by tests and the harness preamble).
+pub fn roundtrip_check(sys: SystemConfig, n_dpus: u32, n: usize) -> bool {
+    let mut set = PimSet::allocate_with(
+        sys,
+        n_dpus,
+        std::sync::Arc::new(crate::coordinator::executor::SerialExecutor),
+    );
+    let sym = set.symbol::<i64>(n);
+    let equal: Vec<Vec<i64>> = (0..n_dpus as i64)
         .map(|i| (0..n as i64).map(|j| i * 1000 + j).collect())
         .collect();
-    eng.push_to(&exec, &mut dpus, 0, &bufs);
-    let (back, _) = eng.push_from::<i64>(&exec, &mut dpus, 0, n);
-    back == bufs
+    set.xfer(sym).to().equal(&equal);
+    if set.xfer(sym).from().equal(n) != equal {
+        return false;
+    }
+    // ragged: DPU d keeps only its first d+1 elements' worth of data
+    let ragged: Vec<Vec<i64>> = (0..n_dpus as usize)
+        .map(|d| equal[d][..(d + 1).min(n)].to_vec())
+        .collect();
+    let lens: Vec<usize> = ragged.iter().map(Vec::len).collect();
+    set.xfer(sym).to().ragged(&ragged);
+    set.xfer(sym).from().ragged(&lens) == ragged
 }
 
 #[cfg(test)]
@@ -106,6 +118,6 @@ mod tests {
 
     #[test]
     fn functional_roundtrip() {
-        assert!(roundtrip_check(DpuArch::p21(), 8, 64));
+        assert!(roundtrip_check(SystemConfig::p21_rank(), 8, 64));
     }
 }

@@ -53,27 +53,36 @@ impl PrimBench for Bfs {
         let words = v.div_ceil(64);
 
         // input distribution: per-DPU CSR slices (serial copies — sizes
-        // differ, §5.1.1). MRAM layout per DPU:
-        //   [0]            rebased row_ptr (rows+1 u32)
-        //   [ci_off]       neighbor lists (u32)
-        //   [fr_off]       current frontier bit-vector (words u64)
-        //   [nx_off]       next frontier bit-vector
-        //   [vis_off]      visited bit-vector
-        let mut layouts = Vec::with_capacity(nd);
+        // differ, §5.1.1). Fleet-wide symbols sized for the widest slice:
+        //   rp_sym   rebased row_ptr (rows+1 u32)
+        //   ci_sym   neighbor lists (u32)
+        //   fr_sym   current frontier bit-vector (words u64)
+        //   nx_sym   next frontier bit-vector
+        //   vis_sym  visited bit-vector
+        let max_rows = parts.iter().map(|r| r.len()).max().unwrap_or(0);
+        let max_deg = parts
+            .iter()
+            .map(|r| (g.row_ptr[r.end] - g.row_ptr[r.start]) as usize)
+            .max()
+            .unwrap_or(0);
+        let rp_sym = set.symbol::<u32>(max_rows + 1);
+        let ci_sym = set.symbol::<u32>(max_deg);
+        let fr_sym = set.symbol::<u64>(words);
+        // next + visited adjacent, so both zero together in one transfer
+        let nxvis_sym = set.symbol::<u64>(2 * words);
+        let nx_sym = nxvis_sym.slice(0, words);
+        let vis_sym = nxvis_sym.slice(words, words);
+        let mut row_parts = Vec::with_capacity(nd);
         for (d, r) in parts.iter().enumerate() {
             let base = g.row_ptr[r.start];
             let rp: Vec<u32> = g.row_ptr[r.start..=r.end].iter().map(|x| x - base).collect();
             let deg = (g.row_ptr[r.end] - base) as usize;
             let ci = g.col_idx[base as usize..base as usize + deg].to_vec();
-            let ci_off = (rp.len() * 4 + 7) & !7;
-            let fr_off = ci_off + ((deg * 4 + 7) & !7);
-            let nx_off = fr_off + words * 8;
-            let vis_off = nx_off + words * 8;
-            set.copy_to(d, 0, &rp);
-            set.copy_to(d, ci_off, &ci);
+            set.xfer(rp_sym).to().one(d, &rp);
+            set.xfer(ci_sym).to().one(d, &ci);
             // zero visited + next
-            set.copy_to(d, nx_off, &vec![0u64; 2 * words]);
-            layouts.push((r.clone(), ci_off, fr_off, nx_off, vis_off));
+            set.xfer(nxvis_sym).to().one(d, &vec![0u64; 2 * words]);
+            row_parts.push(r.clone());
         }
 
         // frontier bootstrap
@@ -88,17 +97,20 @@ impl PrimBench for Bfs {
             + isa::op_instrs(DType::U64, Op::Bitwise) as u64;
 
         loop {
-            // distribute the current frontier (inter-DPU phase). The MRAM
-            // destinations differ per DPU (CSR slices have different
-            // sizes), so these are serial per-DPU copies, not a broadcast.
+            // distribute the current frontier (inter-DPU phase). Each DPU
+            // keeps a private copy it mutates, so these are serial per-DPU
+            // copies, not a broadcast (matching the PrIM host loop).
             let frontier_now = frontier.clone();
-            for (d, (_, _, fr_off, ..)) in layouts.iter().enumerate() {
-                set.copy_to_inter(d, *fr_off, &frontier_now);
+            for d in 0..nd {
+                set.xfer(fr_sym).inter().to().one(d, &frontier_now);
             }
 
-            let layouts_ref = &layouts;
+            let (ci_off, fr_off, nx_off, vis_off) =
+                (ci_sym.off(), fr_sym.off(), nx_sym.off(), vis_sym.off());
+            let rp_off = rp_sym.off();
+            let row_parts_ref = &row_parts;
             let stats = set.launch(rc.n_tasklets, |d, ctx: &mut Ctx| {
-                let (rows, ci_off, fr_off, nx_off, vis_off) = layouts_ref[d].clone();
+                let rows = row_parts_ref[d].clone();
                 let n_rows = rows.len();
                 // shared WRAM bit-vectors
                 let wfr = ctx.mem_alloc_shared(1, words * 8);
@@ -140,7 +152,7 @@ impl PrimBench for Bfs {
                     // stream this vertex's neighbor list
                     // row_ptr pair (aligned fetch)
                     let rp0 = (lr * 4) & !7;
-                    ctx.mram_read(rp0, wtmp, 16.min(1024));
+                    ctx.mram_read(rp_off + rp0, wtmp, 16.min(1024));
                     let wv: Vec<u32> = ctx.wram_get(wtmp, 4);
                     let idx = (lr * 4 - rp0) / 4;
                     let (s, e) = (wv[idx] as usize, wv[idx + 1] as usize);
@@ -189,13 +201,13 @@ impl PrimBench for Bfs {
             // host gathers per-DPU next frontiers and unions sequentially
             level += 1;
             let mut next = vec![0u64; words];
-            for (d, (.., nx_off, _)) in layouts.iter().enumerate() {
-                let part = set.copy_from_inter::<u64>(d, *nx_off, words);
+            for d in 0..nd {
+                let part = set.xfer(nx_sym).inter().from().one(d, words);
                 for (a, b) in next.iter_mut().zip(&part) {
                     *a |= *b;
                 }
                 // zero the DPU's next-frontier for the following level
-                set.copy_to_inter(d, *nx_off, &vec![0u64; words]);
+                set.xfer(nx_sym).inter().to().one(d, &vec![0u64; words]);
             }
             set.host_merge((nd * words * 8) as u64, (nd * words) as u64);
 

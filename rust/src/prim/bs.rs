@@ -8,7 +8,7 @@
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::chunk_ranges;
+use crate::coordinator::{chunk_ranges, ragged_counts};
 use crate::dpu::Ctx;
 use crate::util::data::sorted_with_queries;
 
@@ -45,34 +45,34 @@ impl PrimBench for Bs {
         let nd = rc.n_dpus as usize;
         // the array is replicated in each DPU (CPU-DPU cost grows with
         // DPU count — the paper's Fig. 13 note)
-        set.broadcast(0, &arr);
-        let arr_bytes = n * 8;
-        // queries partitioned equally
+        let arr_sym = set.symbol::<i64>(n);
+        set.xfer(arr_sym).to().broadcast(&arr);
+        // queries partitioned contiguously; ragged transfers carry each
+        // DPU's exact share (no "findable value" padding)
         let per_q = q.div_ceil(nd);
+        let q_counts = ragged_counts(q, per_q, nd);
         let qbufs: Vec<Vec<i64>> = (0..nd)
-            .map(|d| {
-                let lo = (d * per_q).min(q);
-                let hi = ((d + 1) * per_q).min(q);
-                let mut v = queries[lo..hi].to_vec();
-                v.resize(per_q, arr[0]); // pad with a findable value
-                v
-            })
+            .map(|d| queries[(d * per_q).min(q)..((d + 1) * per_q).min(q)].to_vec())
             .collect();
-        set.push_to(arr_bytes, &qbufs);
-        let out_off = arr_bytes + per_q * 8;
+        let q_sym = set.symbol::<i64>(per_q);
+        let out_sym = set.symbol::<i64>(per_q);
+        set.xfer(q_sym).to().ragged(&qbufs);
 
         let per_step = (2 * isa::ADDR_CALC + isa::LOOP_CTRL) as u64
             + isa::op_instrs(DType::I64, Op::Cmp) as u64;
 
-        let stats = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+        let q_counts_ref = &q_counts;
+        let stats = set.launch_seq(rc.n_tasklets, |d, ctx: &mut Ctx| {
             let wq = ctx.mem_alloc(1024);
             let we = ctx.mem_alloc(8);
             let wo = ctx.mem_alloc(8);
-            let my = chunk_ranges(per_q, ctx.n_tasklets as usize)[ctx.tasklet_id as usize].clone();
+            let my = chunk_ranges(q_counts_ref[d], ctx.n_tasklets as usize)
+                [ctx.tasklet_id as usize]
+                .clone();
             let mut k = my.start;
             while k < my.end {
                 let cnt = (my.end - k).min(128);
-                ctx.mram_read(arr_bytes + k * 8, wq, ((cnt * 8 + 7) & !7).max(8));
+                ctx.mram_read(q_sym.off() + k * 8, wq, ((cnt * 8 + 7) & !7).max(8));
                 let qs: Vec<i64> = ctx.wram_get(wq, cnt);
                 for (i, qv) in qs.iter().enumerate() {
                     // binary search with fine-grained MRAM probes
@@ -80,7 +80,7 @@ impl PrimBench for Bs {
                     let mut pos = -1i64;
                     while lo < hi {
                         let mid = (lo + hi) / 2;
-                        ctx.mram_read(mid * 8, we, 8);
+                        ctx.mram_read(arr_sym.off() + mid * 8, we, 8);
                         let v: Vec<i64> = ctx.wram_get(we, 1);
                         ctx.compute(per_step);
                         match v[0].cmp(qv) {
@@ -93,18 +93,17 @@ impl PrimBench for Bs {
                         }
                     }
                     ctx.wram_set(wo, &[pos]);
-                    ctx.mram_write(wo, out_off + (k + i) * 8, 8);
+                    ctx.mram_write(wo, out_sym.off() + (k + i) * 8, 8);
                 }
                 k += cnt;
             }
         });
 
-        let out = set.push_from::<i64>(out_off, per_q);
+        let out = set.xfer(out_sym).from().ragged(&q_counts);
         let mut verified = true;
         'outer: for d in 0..nd {
             let lo = (d * per_q).min(q);
-            let hi = ((d + 1) * per_q).min(q);
-            for (i, gq) in (lo..hi).enumerate() {
+            for (i, gq) in (lo..lo + q_counts[d]).enumerate() {
                 let pos = out[d][i];
                 if pos < 0 || arr[pos as usize] != queries[gq] {
                     verified = false;

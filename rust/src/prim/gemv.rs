@@ -102,16 +102,17 @@ impl PrimBench for Gemv {
         let rows_per = m / nd;
         let mat_bufs: Vec<Vec<u32>> =
             (0..nd).map(|d| mat[d * rows_per * n..(d + 1) * rows_per * n].to_vec()).collect();
-        let mat_bytes = rows_per * n * 4;
-        set.push_to(0, &mat_bufs);
-        set.broadcast(mat_bytes, &x);
-        let y_off = mat_bytes + n * 4;
+        let mat_sym = set.symbol::<u32>(rows_per * n);
+        let x_sym = set.symbol::<u32>(n);
+        let y_sym = set.symbol::<u32>(rows_per * 2);
+        set.xfer(mat_sym).to().equal(&mat_bufs);
+        set.xfer(x_sym).to().broadcast(&x);
 
         let stats = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
-            gemv_kernel(ctx, rows_per, n, 0, mat_bytes, y_off, false);
+            gemv_kernel(ctx, rows_per, n, mat_sym.off(), x_sym.off(), y_sym.off(), false);
         });
 
-        let out = set.push_from::<u32>(y_off, rows_per * 2);
+        let out = set.xfer(y_sym).from().all();
         let y: Vec<u32> = out.iter().flat_map(|c| c.iter().step_by(2).copied()).collect();
 
         // reference

@@ -9,9 +9,14 @@
 //!
 //! §9.2.2 (Fig. 20 in our harness) compares the two across histogram
 //! sizes via [`run_hst`]'s `bins` parameter.
+//!
+//! Pixels are distributed with **ragged** parallel transfers, so each DPU
+//! counts exactly its share — the old equal-size path padded the tail DPU
+//! with sentinel zero pixels and subtracted them from bucket 0 afterwards.
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
+use crate::coordinator::ragged_counts;
 use crate::dpu::Ctx;
 use crate::util::data::natural_image;
 use crate::util::pod::cast_slice_mut;
@@ -20,7 +25,6 @@ use crate::util::pod::cast_slice_mut;
 const PAPER_PIXELS: usize = 1536 * 1024;
 const DEPTH_BITS: u32 = 12;
 const BLOCK: usize = 1024;
-const EPB: usize = BLOCK / 4;
 
 #[derive(Clone, Copy, PartialEq)]
 pub enum HstKind {
@@ -43,29 +47,28 @@ pub fn run_hst(kind: HstKind, name: &'static str, rc: &RunConfig, bins: usize) -
 
     let mut set = rc.alloc();
     let nd = rc.n_dpus as usize;
-    let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
-    // pad with a sentinel bucket-0 value and correct afterwards
-    let pad_count = per * nd - n;
+    // exact contiguous pixel shares (8-element granularity keeps ragged
+    // slices DMA-aligned); no bucket-0 sentinel padding, no correction
+    let per = n.div_ceil(nd).div_ceil(8) * 8;
+    let counts = ragged_counts(n, per, nd);
     let bufs: Vec<Vec<u32>> = (0..nd)
-        .map(|d| {
-            let lo = (d * per).min(n);
-            let hi = ((d + 1) * per).min(n);
-            let mut v = pixels[lo..hi].to_vec();
-            v.resize(per, 0);
-            v
-        })
+        .map(|d| pixels[(d * per).min(n)..((d + 1) * per).min(n)].to_vec())
         .collect();
-    set.push_to(0, &bufs);
-    let out_off = per * 4;
+    let px_sym = set.symbol::<u32>(per);
+    let hist_sym = set.symbol::<u32>(bins.max(2));
+    set.xfer(px_sym).to().ragged(&bufs);
+    let out_off = hist_sym.off();
 
     let per_pixel = (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
         + isa::op_instrs(DType::U32, Op::Add) as u64
         + 1; // shift
 
-    let n_blocks = per / EPB;
-    let stats = set.launch(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+    let counts_ref = &counts;
+    let stats = set.launch(rc.n_tasklets, |d, ctx: &mut Ctx| {
         let t = ctx.tasklet_id as usize;
         let nt = ctx.n_tasklets as usize;
+        let my_bytes = counts_ref[d] * 4;
+        let n_blocks = my_bytes.div_ceil(BLOCK);
         let win = ctx.mem_alloc(BLOCK);
         match kind {
             HstKind::Short => {
@@ -76,12 +79,13 @@ pub fn run_hst(kind: HstKind, name: &'static str, rc: &RunConfig, bins: usize) -
                 let mut local = vec![0u32; bins];
                 let mut blk = t;
                 while blk < n_blocks {
-                    ctx.mram_read(blk * BLOCK, win, BLOCK);
-                    let px: Vec<u32> = ctx.wram_get(win, EPB);
+                    let take = (my_bytes - blk * BLOCK).min(BLOCK);
+                    ctx.mram_read(px_sym.off() + blk * BLOCK, win, take);
+                    let px: Vec<u32> = ctx.wram_get(win, take / 4);
                     for p in px {
                         local[(p >> shift) as usize] += 1;
                     }
-                    ctx.compute(EPB as u64 * per_pixel);
+                    ctx.compute((take / 4) as u64 * per_pixel);
                     blk += nt;
                 }
                 ctx.wram_set(my_hist, &local);
@@ -111,8 +115,9 @@ pub fn run_hst(kind: HstKind, name: &'static str, rc: &RunConfig, bins: usize) -
                 let hist = ctx.mem_alloc_shared(1, bins * 4);
                 let mut blk = t;
                 while blk < n_blocks {
-                    ctx.mram_read(blk * BLOCK, win, BLOCK);
-                    let px: Vec<u32> = ctx.wram_get(win, EPB);
+                    let take = (my_bytes - blk * BLOCK).min(BLOCK);
+                    ctx.mram_read(px_sym.off() + blk * BLOCK, win, take);
+                    let px: Vec<u32> = ctx.wram_get(win, take / 4);
                     for p in px {
                         let b = (p >> shift) as usize;
                         ctx.mutex_lock(0);
@@ -122,7 +127,7 @@ pub fn run_hst(kind: HstKind, name: &'static str, rc: &RunConfig, bins: usize) -
                         ctx.charge_ops(DType::U32, Op::Add, 1);
                         ctx.mutex_unlock(0);
                     }
-                    ctx.compute(EPB as u64 * (per_pixel - 1));
+                    ctx.compute((take / 4) as u64 * (per_pixel - 1));
                     blk += nt;
                 }
                 ctx.barrier(0);
@@ -139,7 +144,7 @@ pub fn run_hst(kind: HstKind, name: &'static str, rc: &RunConfig, bins: usize) -
     });
 
     // host: gather per-DPU histograms (equal sizes → parallel) and merge
-    let parts = set.push_from::<u32>(out_off, bins);
+    let parts = set.xfer(hist_sym).from().equal(bins);
     let mut hist = vec![0u32; bins];
     for p in &parts {
         for (h, v) in hist.iter_mut().zip(p) {
@@ -147,8 +152,6 @@ pub fn run_hst(kind: HstKind, name: &'static str, rc: &RunConfig, bins: usize) -
         }
     }
     set.host_merge((nd * bins * 4) as u64, (nd * bins) as u64);
-    // padding correction: pad pixels counted in bucket 0
-    hist[0] -= pad_count as u32;
 
     let verified = hist == hist_ref;
 
@@ -227,6 +230,21 @@ mod tests {
             ..RunConfig::rank_default()
         };
         assert!(HstS.run(&rc).verified);
+    }
+
+    #[test]
+    fn ragged_input_counts_no_pad_pixels() {
+        // pixel count not divisible by the DPU count: every bucket must
+        // still match the reference without any bucket-0 correction, and
+        // the pushed volume is exactly the image
+        let rc = RunConfig {
+            n_dpus: 6,
+            scale: 0.011,
+            ..RunConfig::rank_default()
+        };
+        let r = HstS.run(&rc);
+        assert!(r.verified);
+        assert_eq!(r.breakdown.bytes_to_dpu, rc.scaled(1536 * 1024) as u64 * 4);
     }
 
     #[test]

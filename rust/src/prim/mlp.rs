@@ -63,33 +63,34 @@ impl PrimBench for Mlp {
         let mut set = rc.alloc();
         let rows_per = m / nd;
         // MRAM layout per DPU: W1 | W2 | W3 | x | y
-        let wl_bytes = rows_per * m * 4;
+        let w_syms: Vec<_> = (0..LAYERS).map(|_| set.symbol::<u32>(rows_per * m)).collect();
+        let x_sym = set.symbol::<u32>(m);
+        let y_sym = set.symbol::<u32>(rows_per * 2);
         for (l, w) in weights.iter().enumerate() {
             let bufs: Vec<Vec<u32>> =
                 (0..nd).map(|d| w[d * rows_per * m..(d + 1) * rows_per * m].to_vec()).collect();
-            set.push_to(l * wl_bytes, &bufs);
+            set.xfer(w_syms[l]).to().equal(&bufs);
         }
-        let x_off = LAYERS * wl_bytes;
-        let y_off = x_off + m * 4;
-        set.broadcast(x_off, &x0);
+        set.xfer(x_sym).to().broadcast(&x0);
 
         let mut total_instrs = 0u64;
         for l in 0..LAYERS {
+            let w_sym = w_syms[l];
             let stats = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
-                gemv_kernel(ctx, rows_per, m, l * wl_bytes, x_off, y_off, true);
+                gemv_kernel(ctx, rows_per, m, w_sym.off(), x_sym.off(), y_sym.off(), true);
             });
             total_instrs += stats.total_instrs();
             if l + 1 < LAYERS {
                 // host: gather y chunks, rebuild the vector, redistribute
-                let parts = set.push_from_inter::<u32>(y_off, rows_per * 2);
+                let parts = set.xfer(y_sym).inter().from().all();
                 let next: Vec<u32> =
                     parts.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
                 set.host_merge((m * 4) as u64, m as u64);
-                set.broadcast_inter(x_off, &next);
+                set.xfer(x_sym).inter().to().broadcast(&next);
             }
         }
 
-        let out = set.push_from::<u32>(y_off, rows_per * 2);
+        let out = set.xfer(y_sym).from().all();
         let y: Vec<u32> = out.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
         let verified = y == y_ref;
 

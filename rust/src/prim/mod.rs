@@ -2,8 +2,9 @@
 //! paper's §4 descriptions onto the simulated UPMEM system.
 //!
 //! Every benchmark (a) generates a deterministic synthetic dataset with the
-//! paper's statistics, (b) distributes it with the same transfer pattern
-//! the paper describes (parallel / serial / broadcast), (c) runs the same
+//! paper's statistics, (b) distributes it through typed MRAM symbols and
+//! the transfer builder with the same pattern the paper describes
+//! (parallel equal/ragged, serial per-DPU, broadcast), (c) runs the same
 //! tasklet-level algorithm against the [`crate::dpu::Ctx`] API with the
 //! same synchronization primitives, (d) retrieves and merges results on
 //! the host, and (e) **verifies** the output against a native reference —

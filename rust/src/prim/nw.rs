@@ -83,15 +83,17 @@ pub fn run_nw(rc: &RunConfig, longest_diag_only: bool) -> (BenchResult, usize) {
 
     let mut set = rc.alloc();
     // MRAM layout: a | b | top | left | corner | block_out
-    let a_off = 0usize;
-    let seq_bytes = (l + 7) & !7;
-    let b_off = seq_bytes;
-    let top_off = 2 * seq_bytes;
-    let left_off = top_off + ((bsz * 4 + 7) & !7);
-    let corner_off = left_off + ((bsz * 4 + 7) & !7);
-    let out_off = corner_off + 8;
-    set.broadcast(a_off, &a);
-    set.broadcast(b_off, &b);
+    let a_sym = set.symbol::<u8>(l);
+    let b_sym = set.symbol::<u8>(l);
+    let top_sym = set.symbol::<i32>(bsz);
+    let left_sym = set.symbol::<i32>(bsz);
+    let corner_sym = set.symbol::<i32>(2);
+    let out_sym = set.symbol::<i32>(bsz * bsz);
+    let (a_off, b_off) = (a_sym.off(), b_sym.off());
+    let (top_off, left_off) = (top_sym.off(), left_sym.off());
+    let (corner_off, out_off) = (corner_sym.off(), out_sym.off());
+    set.xfer(a_sym).to().broadcast(&a);
+    set.xfer(b_sym).to().broadcast(&b);
 
     // host-side full score matrix
     let mut m = vec![vec![0i32; l + 1]; l + 1];
@@ -125,9 +127,9 @@ pub fn run_nw(rc: &RunConfig, longest_diag_only: bool) -> (BenchResult, usize) {
                 let top: Vec<i32> = (0..bsz).map(|j| m[bi * bsz][bj * bsz + 1 + j]).collect();
                 let left: Vec<i32> = (0..bsz).map(|i| m[bi * bsz + 1 + i][bj * bsz]).collect();
                 let corner = [m[bi * bsz][bj * bsz], 0];
-                set.copy_to_inter(slot, top_off, &top);
-                set.copy_to_inter(slot, left_off, &left);
-                set.copy_to_inter(slot, corner_off, &corner);
+                set.xfer(top_sym).inter().to().one(slot, &top);
+                set.xfer(left_sym).inter().to().one(slot, &left);
+                set.xfer(corner_sym).inter().to().one(slot, &corner);
             }
             let assignment: Vec<(usize, usize)> = round.to_vec();
             let dpu_ids: Vec<usize> = (0..round.len()).collect();
@@ -145,7 +147,7 @@ pub fn run_nw(rc: &RunConfig, longest_diag_only: bool) -> (BenchResult, usize) {
             total_instrs += stats.total_instrs();
             // retrieve blocks into the host matrix
             for (slot, &(bi, bj)) in round.iter().enumerate() {
-                let cells = set.copy_from_inter::<i32>(slot, out_off, bsz * bsz);
+                let cells = set.xfer(out_sym).inter().from().one(slot, bsz * bsz);
                 for i in 0..bsz {
                     for j in 0..bsz {
                         m[bi * bsz + 1 + i][bj * bsz + 1 + j] = cells[i * bsz + j];

@@ -72,12 +72,14 @@ pub fn run_red(version: RedVersion, rc: &RunConfig) -> BenchResult {
             let lo = (d * per).min(n);
             let hi = ((d + 1) * per).min(n);
             let mut v = input[lo..hi].to_vec();
-            v.resize(per, 0); // additive identity
+            v.resize(per, 0); // additive identity (not a sentinel hack)
             v
         })
         .collect();
-    set.push_to(0, &bufs);
-    let out_off = per * 8;
+    let in_sym = set.symbol::<i64>(per);
+    let sum_sym = set.symbol::<i64>(1);
+    set.xfer(in_sym).to().equal(&bufs);
+    let out_off = sum_sym.off();
 
     let per_elem = (isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
         + isa::op_instrs(DType::I64, Op::Add) as u64;
@@ -93,7 +95,7 @@ pub fn run_red(version: RedVersion, rc: &RunConfig) -> BenchResult {
         let mut acc = 0i64;
         let mut blk = t;
         while blk < n_blocks {
-            ctx.mram_read(blk * BLOCK, win, BLOCK);
+            ctx.mram_read(in_sym.off() + blk * BLOCK, win, BLOCK);
             let v: Vec<i64> = ctx.wram_get(win, EPB);
             acc += v.iter().sum::<i64>();
             ctx.compute(EPB as u64 * per_elem);
@@ -165,7 +167,7 @@ pub fn run_red(version: RedVersion, rc: &RunConfig) -> BenchResult {
     // host: gather per-DPU sums (8 B each, serial) and reduce
     let mut total = 0i64;
     for d in 0..nd {
-        total += set.copy_from::<i64>(d, out_off, 1)[0];
+        total += set.xfer(sum_sym).from().one(d, 1)[0];
     }
     set.host_merge((nd * 8) as u64, nd as u64);
 

@@ -28,10 +28,17 @@ pub enum ScanKind {
     Rss,
 }
 
-/// Intra-DPU exclusive scan of `per` elements at MRAM 0 → output at
+/// Intra-DPU exclusive scan of `per` elements at `in_off` → output at
 /// `out_off`, starting from `base_off` (8-B MRAM cell holding the DPU
 /// base). Tasklet prefix chain via handshake + MRAM slots at `slot_off`.
-fn local_scan_kernel(ctx: &mut Ctx, per: usize, slot_off: usize, out_off: usize, base_off: usize) {
+fn local_scan_kernel(
+    ctx: &mut Ctx,
+    per: usize,
+    in_off: usize,
+    slot_off: usize,
+    out_off: usize,
+    base_off: usize,
+) {
     let t = ctx.tasklet_id as usize;
     let nt = ctx.n_tasklets as usize;
     let win = ctx.mem_alloc(BLOCK);
@@ -46,7 +53,7 @@ fn local_scan_kernel(ctx: &mut Ctx, per: usize, slot_off: usize, out_off: usize,
     let mut k = my.start;
     while k < my.end {
         let cnt = (my.end - k).min(EPB);
-        ctx.mram_read(k * 8, win, cnt * 8);
+        ctx.mram_read(in_off + k * 8, win, cnt * 8);
         let v: Vec<i64> = ctx.wram_get(win, cnt);
         sum += v.iter().sum::<i64>();
         ctx.compute(cnt as u64 * per_elem);
@@ -73,7 +80,7 @@ fn local_scan_kernel(ctx: &mut Ctx, per: usize, slot_off: usize, out_off: usize,
     let mut k = my.start;
     while k < my.end {
         let cnt = (my.end - k).min(EPB);
-        ctx.mram_read(k * 8, win, cnt * 8);
+        ctx.mram_read(in_off + k * 8, win, cnt * 8);
         let v: Vec<i64> = ctx.wram_get(win, cnt);
         let mut out = Vec::with_capacity(cnt);
         for x in v {
@@ -107,37 +114,38 @@ pub fn run_scan(kind: ScanKind, name: &'static str, rc: &RunConfig) -> BenchResu
             let lo = (d * per).min(n);
             let hi = ((d + 1) * per).min(n);
             let mut v = input[lo..hi].to_vec();
-            v.resize(per, 0);
+            v.resize(per, 0); // additive identity
             v
         })
         .collect();
-    set.push_to(0, &bufs);
-    let slot_off = per * 8;
-    let base_off = slot_off + rc.n_tasklets as usize * 8;
-    let out_off = base_off + 8;
+    let in_sym = set.symbol::<i64>(per);
+    let slot_sym = set.symbol::<i64>(rc.n_tasklets as usize);
+    let base_sym = set.symbol::<i64>(1);
+    let out_sym = set.symbol::<i64>(per);
+    set.xfer(in_sym).to().equal(&bufs);
+    let (slot_off, base_off, out_off) = (slot_sym.off(), base_sym.off(), out_sym.off());
     // zero bases
-    let zero = vec![0i64; 1];
-    set.broadcast(base_off, &zero);
+    set.xfer(base_sym).to().broadcast(&[0i64]);
 
     let mut total_instrs = 0u64;
     match kind {
         ScanKind::Ssa => {
             // kernel 1: local scan (base 0)
             let s1 = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
-                local_scan_kernel(ctx, per, slot_off, out_off, base_off);
+                local_scan_kernel(ctx, per, in_sym.off(), slot_off, out_off, base_off);
             });
             total_instrs += s1.total_instrs();
             // host: gather per-DPU totals (last chain slot), scan, send bases
-            let last_slot = slot_off + (rc.n_tasklets as usize - 1) * 8;
+            let last_slot = slot_sym.slice(rc.n_tasklets as usize - 1, 1);
             let mut bases = Vec::with_capacity(nd);
             let mut running = 0i64;
             for d in 0..nd {
                 bases.push(running);
-                running += set.copy_from_inter::<i64>(d, last_slot, 1)[0];
+                running += set.xfer(last_slot).inter().from().one(d, 1)[0];
             }
             set.host_merge((nd * 8) as u64, nd as u64);
             for (d, b) in bases.iter().enumerate() {
-                set.copy_to_inter(d, base_off, &[*b]);
+                set.xfer(base_sym).inter().to().one(d, &[*b]);
             }
             // kernel 2: Add base to every output element
             let per_elem = (2 * isa::WRAM_LS + isa::LOOP_CTRL) as u64
@@ -180,7 +188,7 @@ pub fn run_scan(kind: ScanKind, name: &'static str, rc: &RunConfig) -> BenchResu
                 let mut acc = 0i64;
                 let mut blk = t;
                 while blk < n_blocks {
-                    ctx.mram_read(blk * BLOCK, win, BLOCK);
+                    ctx.mram_read(in_sym.off() + blk * BLOCK, win, BLOCK);
                     let v: Vec<i64> = ctx.wram_get(win, EPB);
                     acc += v.iter().sum::<i64>();
                     ctx.compute(EPB as u64 * per_elem);
@@ -201,22 +209,22 @@ pub fn run_scan(kind: ScanKind, name: &'static str, rc: &RunConfig) -> BenchResu
             let mut running = 0i64;
             for d in 0..nd {
                 bases.push(running);
-                running += set.copy_from_inter::<i64>(d, slot_off, 1)[0];
+                running += set.xfer(slot_sym).inter().from().one(d, 1)[0];
             }
             set.host_merge((nd * 8) as u64, nd as u64);
             for (d, b) in bases.iter().enumerate() {
-                set.copy_to_inter(d, base_off, &[*b]);
+                set.xfer(base_sym).inter().to().one(d, &[*b]);
             }
             // kernel 2: local scan seeded with the base
             let s2 = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
-                local_scan_kernel(ctx, per, slot_off, out_off, base_off);
+                local_scan_kernel(ctx, per, in_sym.off(), slot_off, out_off, base_off);
             });
             total_instrs += s2.total_instrs();
         }
     }
 
     // retrieve the full scanned array (parallel — equal sizes)
-    let parts = set.push_from::<i64>(out_off, per);
+    let parts = set.xfer(out_sym).from().all();
     let mut result = Vec::with_capacity(n);
     for (d, p) in parts.iter().enumerate() {
         let lo = (d * per).min(n);

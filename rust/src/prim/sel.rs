@@ -7,12 +7,16 @@
 //! through a handshake chain (an inherent prefix sum), and DMA-writes its
 //! compacted elements at the received offset.
 //!
+//! Inputs are distributed with **ragged** parallel transfers: each DPU
+//! receives exactly its slice of the array (the old equal-size path forced
+//! sentinel padding with values the predicate had to filter back out).
+//!
 //! The same machinery implements UNI (§4.5) — the handshake additionally
 //! carries the predecessor's last element value.
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::chunk_ranges;
+use crate::coordinator::{chunk_ranges, ragged_counts, Bucket, Symbol};
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -34,30 +38,45 @@ pub enum CompactKind {
     Unique,
 }
 
-/// Run the block-compaction kernel on an allocated set whose DPUs hold
-/// `per` elements each at MRAM offset 0. Returns (per-DPU output counts
-/// offsets are fixed): output data at `out_off`, count at `cnt_off`.
-///
-/// MRAM layout: input [0, per*8); chain slots [slot_off ..); output
-/// [out_off ..); count at cnt_off.
-pub fn compact_layout(per: usize, n_tasklets: u32) -> (usize, usize, usize) {
-    let slot_off = per * 8;
-    // slot per tasklet: (cumulative_count, last_value) pairs
-    let out_off = slot_off + n_tasklets as usize * 16;
-    let cnt_off = out_off + per * 8;
-    (slot_off, out_off, cnt_off)
+/// MRAM symbols of the compaction kernel, shared by host and kernel sides.
+/// `input`/`output` are sized for the widest per-DPU slice; per-DPU
+/// element counts ride in the launch closure.
+#[derive(Clone, Copy)]
+pub struct CompactSyms {
+    /// Input slice (per-DPU length varies; ragged transfers).
+    pub input: Symbol<i64>,
+    /// Handshake chain slots: (cumulative_count, last_value) per tasklet.
+    pub slots: Symbol<i64>,
+    /// Compacted output.
+    pub output: Symbol<i64>,
+    /// (DPU total count, DPU last value).
+    pub count: Symbol<i64>,
 }
 
-pub fn compact_kernel(ctx: &mut Ctx, kind: CompactKind, per: usize) {
+impl CompactSyms {
+    /// Carve the four regions for slices of up to `max_per` elements.
+    pub fn alloc(set: &mut crate::coordinator::PimSet, max_per: usize, n_tasklets: u32) -> Self {
+        CompactSyms {
+            input: set.symbol::<i64>(max_per),
+            slots: set.symbol::<i64>(n_tasklets as usize * 2),
+            output: set.symbol::<i64>(max_per),
+            count: set.symbol::<i64>(2),
+        }
+    }
+}
+
+pub fn compact_kernel(ctx: &mut Ctx, kind: CompactKind, syms: CompactSyms, my_elems: usize) {
     let t = ctx.tasklet_id as usize;
     let nt = ctx.n_tasklets as usize;
-    let (slot_off, out_off, cnt_off) = compact_layout(per, ctx.n_tasklets);
+    let in_off = syms.input.off();
+    let slot_off = syms.slots.off();
+    let out_off = syms.output.off();
     let win = ctx.mem_alloc(BLOCK);
     let wout = ctx.mem_alloc(BLOCK);
     let wslot = ctx.mem_alloc(16);
 
     // contiguous range per tasklet
-    let my = chunk_ranges(per, nt)[t].clone();
+    let my = chunk_ranges(my_elems, nt)[t].clone();
     let per_elem = (isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
         + isa::op_instrs(DType::I64, Op::Cmp) as u64
         + isa::op_instrs(DType::I64, Op::Add) as u64;
@@ -74,7 +93,7 @@ pub fn compact_kernel(ctx: &mut Ctx, kind: CompactKind, per: usize) {
     let mut blk = my.start;
     while blk < my.end {
         let cnt = (my.end - blk).min(EPB);
-        ctx.mram_read(blk * 8, win, ((cnt * 8 + 7) & !7).max(8));
+        ctx.mram_read(in_off + blk * 8, win, ((cnt * 8 + 7) & !7).max(8));
         let v: Vec<i64> = ctx.wram_get(win, cnt);
         for (i, x) in v.iter().enumerate() {
             let keep = match kind {
@@ -109,7 +128,7 @@ pub fn compact_kernel(ctx: &mut Ctx, kind: CompactKind, per: usize) {
 
     // UNI: if our first element equals predecessor's last, it is not unique
     if kind == CompactKind::Unique && !my.is_empty() && t > 0 {
-        ctx.mram_read(my.start * 8 & !7, win, 8);
+        ctx.mram_read((in_off + my.start * 8) & !7, win, 8);
         let first: Vec<i64> = ctx.wram_get(win, 1);
         if first[0] == prev_last {
             kept -= 1;
@@ -126,7 +145,7 @@ pub fn compact_kernel(ctx: &mut Ctx, kind: CompactKind, per: usize) {
     if t + 1 < nt {
         ctx.handshake_notify();
     } else {
-        ctx.mram_write(wslot, cnt_off, 16);
+        ctx.mram_write(wslot, syms.count.off(), 16);
     }
 
     // pass 2: re-stream, compact, write at global base
@@ -136,7 +155,7 @@ pub fn compact_kernel(ctx: &mut Ctx, kind: CompactKind, per: usize) {
     let mut blk = my.start;
     while blk < my.end {
         let cnt = (my.end - blk).min(EPB);
-        ctx.mram_read(blk * 8, win, ((cnt * 8 + 7) & !7).max(8));
+        ctx.mram_read(in_off + blk * 8, win, ((cnt * 8 + 7) & !7).max(8));
         let v: Vec<i64> = ctx.wram_get(win, cnt);
         for x in v {
             let keep = match kind {
@@ -204,32 +223,25 @@ pub fn run_compaction(kind: CompactKind, name: &'static str, rc: &RunConfig) -> 
     let mut set = rc.alloc();
     let nd = rc.n_dpus as usize;
     let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
-    // pad with values that are filtered out (SEL) / merged (UNI)
-    let pad = match kind {
-        CompactKind::Select => 0i64, // even → removed
-        CompactKind::Unique => *input.last().unwrap(),
-    };
+    let syms = CompactSyms::alloc(&mut set, per, rc.n_tasklets);
+    // exact per-DPU slices — ragged transfers need no predicate-aware
+    // sentinel padding
+    let counts = ragged_counts(n, per, nd);
     let bufs: Vec<Vec<i64>> = (0..nd)
-        .map(|d| {
-            let lo = (d * per).min(n);
-            let hi = ((d + 1) * per).min(n);
-            let mut v = input[lo..hi].to_vec();
-            v.resize(per, pad);
-            v
-        })
+        .map(|d| input[(d * per).min(n)..((d + 1) * per).min(n)].to_vec())
         .collect();
-    set.push_to(0, &bufs);
+    set.xfer(syms.input).to().ragged(&bufs);
 
-    let stats = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
-        compact_kernel(ctx, kind, per);
+    let counts_ref = &counts;
+    let stats = set.launch_seq(rc.n_tasklets, |d, ctx: &mut Ctx| {
+        compact_kernel(ctx, kind, syms, counts_ref[d]);
     });
 
     // serial retrieval + host merge (the paper's final merge step)
-    let (_, out_off, cnt_off) = compact_layout(per, rc.n_tasklets);
     let mut result: Vec<i64> = Vec::new();
     for d in 0..nd {
-        let cnt = set.copy_from::<i64>(d, cnt_off, 1)[0] as usize;
-        let vals = set.copy_from::<i64>(d, out_off, cnt);
+        let cnt = set.xfer(syms.count).from().one(d, 1)[0] as usize;
+        let vals = set.xfer(syms.output).from().one(d, cnt);
         // host merge: UNI must also dedup across DPU boundaries. The merge
         // is part of result *retrieval* (the paper's SEL/UNI merge happens
         // while serially copying each DPU's output into place), so its
@@ -244,15 +256,10 @@ pub fn run_compaction(kind: CompactKind, name: &'static str, rc: &RunConfig) -> 
                 }
             }
         }
-        let spans = set.spans_sockets();
-        set.metrics.dpu_cpu += set.host.merge_numa((cnt * 8) as u64, cnt as u64, spans);
+        set.host_merge_in(Bucket::DpuCpu, (cnt * 8) as u64, cnt as u64);
     }
 
-    // padded tail elements of the last DPU may appear once; trim UNI pad
-    let verified = match kind {
-        CompactKind::Select => result == reference,
-        CompactKind::Unique => result == reference,
-    };
+    let verified = result == reference;
 
     BenchResult {
         name,
@@ -313,6 +320,19 @@ mod tests {
             ..RunConfig::rank_default()
         };
         assert!(Sel.run(&rc).verified);
+    }
+
+    #[test]
+    fn ragged_input_moves_exactly_n_elements() {
+        let rc = RunConfig {
+            n_dpus: 5,
+            scale: 0.002,
+            ..RunConfig::rank_default()
+        };
+        let n = rc.scaled(PAPER_N) as u64;
+        let r = Sel.run(&rc);
+        assert!(r.verified);
+        assert_eq!(r.breakdown.bytes_to_dpu, n * 8, "no sentinel padding pushed");
     }
 
     #[test]

@@ -46,13 +46,23 @@ impl PrimBench for Spmv {
         let nd = rc.n_dpus as usize;
         let row_parts = chunk_ranges(n, nd);
 
+        // symbol capacities: the widest per-DPU CSR slice (symbols live at
+        // one fleet-wide offset, like linker-placed SDK symbols)
+        let max_rows = row_parts.iter().map(|r| r.len()).max().unwrap_or(0);
+        let max_nnz = row_parts
+            .iter()
+            .map(|r| (mat.row_ptr[r.end] - mat.row_ptr[r.start]) as usize)
+            .max()
+            .unwrap_or(0);
+        let x_sym = set.symbol::<f32>(n);
+        let rp_sym = set.symbol::<u32>(max_rows + 1);
+        let ci_sym = set.symbol::<u32>(max_nnz);
+        let va_sym = set.symbol::<f32>(max_nnz);
+        let y_sym = set.symbol::<f32>(max_rows * 2);
+
         // x replicated on every DPU (broadcast); CSR pieces are serial
         // per-DPU copies because sizes differ (§5.1.1)
-        let x_off = 0usize;
-        let x_bytes = (n * 4 + 7) & !7;
-        set.broadcast(x_off, &x);
-
-        // per-DPU layout after x: row_ptr (rebased), col_idx, values
+        set.xfer(x_sym).to().broadcast(&x);
         let mut layouts = Vec::with_capacity(nd);
         for (d, r) in row_parts.iter().enumerate() {
             let rp_raw: Vec<u32> = mat.row_ptr[r.start..=r.end].to_vec();
@@ -61,15 +71,13 @@ impl PrimBench for Spmv {
             let nnz = (mat.row_ptr[r.end] - mat.row_ptr[r.start]) as usize;
             let ci = mat.col_idx[base as usize..base as usize + nnz].to_vec();
             let vals = mat.values[base as usize..base as usize + nnz].to_vec();
-            let rp_off = x_bytes;
-            let ci_off = rp_off + ((rp.len() * 4 + 7) & !7);
-            let va_off = ci_off + ((nnz * 4 + 7) & !7);
-            let y_off = va_off + ((nnz * 4 + 7) & !7);
-            set.copy_to(d, rp_off, &rp);
-            set.copy_to(d, ci_off, &ci);
-            set.copy_to(d, va_off, &vals);
-            layouts.push((r.clone(), rp_off, ci_off, va_off, y_off, nnz));
+            set.xfer(rp_sym).to().one(d, &rp);
+            set.xfer(ci_sym).to().one(d, &ci);
+            set.xfer(va_sym).to().one(d, &vals);
+            layouts.push((r.clone(), nnz));
         }
+        let (x_off, rp_off, ci_off, va_off, y_off) =
+            (x_sym.off(), rp_sym.off(), ci_sym.off(), va_sym.off(), y_sym.off());
 
         let per_nnz_instrs = (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
             + isa::op_instrs_for(&rc.sys.dpu, DType::F32, Op::Mul) as u64
@@ -77,7 +85,7 @@ impl PrimBench for Spmv {
 
         let layouts_ref = &layouts;
         let stats = set.launch_seq(rc.n_tasklets, |d, ctx: &mut Ctx| {
-            let (rows, rp_off, ci_off, va_off, y_off, _) = layouts_ref[d].clone();
+            let (rows, _) = layouts_ref[d].clone();
             let n_rows = rows.len();
             let wrp = ctx.mem_alloc(BLOCK);
             let wci = ctx.mem_alloc(BLOCK);
@@ -129,8 +137,8 @@ impl PrimBench for Spmv {
 
         // serial result retrieval (per paper)
         let mut verified = true;
-        for (d, (rows, .., y_off, _nnz)) in layouts.iter().map(|l| l.clone()).enumerate() {
-            let pairs = set.copy_from::<f32>(d, y_off, rows.len() * 2);
+        for (d, (rows, _nnz)) in layouts.iter().cloned().enumerate() {
+            let pairs = set.xfer(y_sym).from().one(d, rows.len() * 2);
             for (i, r) in rows.clone().enumerate() {
                 let got = pairs[i * 2];
                 let want = y_ref[r];

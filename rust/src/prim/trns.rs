@@ -55,6 +55,10 @@ impl PrimBench for Trns {
         let mat: Vec<i64> = (0..m * n).map(|_| rng.next_u64() as i64).collect();
 
         let mut set = rc.alloc();
+        let grid = mp * TILE_N;
+        let in_sym = set.symbol::<i64>(mp * TILE_M * TILE_N);
+        // (step-3 claim flags live entirely in shared WRAM — no MRAM region)
+        let out_sym = set.symbol::<i64>(grid * TILE_M);
         // step 1: M'×m transfers of n elements per DPU; DPU d receives
         // column-tile d laid out as [j][r][n] (j = 0..M', r = 0..m)
         for d in 0..nd {
@@ -62,13 +66,11 @@ impl PrimBench for Trns {
                 for r in 0..TILE_M {
                     let row = j * TILE_M + r;
                     let src = &mat[row * n + d * TILE_N..row * n + d * TILE_N + TILE_N];
-                    set.copy_to(d, (j * TILE_M + r) * TILE_N * 8, src);
+                    set.xfer(in_sym.slice((j * TILE_M + r) * TILE_N, TILE_N)).to().one(d, src);
                 }
             }
         }
-        let in_bytes = mp * TILE_M * TILE_N * 8;
-        let flags_off = in_bytes; // step-3 flag area (one byte-vec word per pos)
-        let out_off = in_bytes + ((mp * TILE_N).div_ceil(64) * 8);
+        let (in_off, out_off) = (in_sym.off(), out_sym.off());
 
         let tile_bytes = TILE_M * TILE_N * 8; // 1 KB tiles
         let per_elem_s2 = (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64;
@@ -77,7 +79,7 @@ impl PrimBench for Trns {
             let wt = ctx.mem_alloc(tile_bytes);
             let mut j = ctx.tasklet_id as usize;
             while j < mp {
-                ctx.mram_read(j * tile_bytes, wt, tile_bytes);
+                ctx.mram_read(in_off + j * tile_bytes, wt, tile_bytes);
                 let tile: Vec<i64> = ctx.wram_get(wt, TILE_M * TILE_N);
                 let mut tr = vec![0i64; TILE_M * TILE_N];
                 for r in 0..TILE_M {
@@ -87,7 +89,7 @@ impl PrimBench for Trns {
                 }
                 ctx.wram_set(wt, &tr);
                 ctx.compute((TILE_M * TILE_N) as u64 * per_elem_s2);
-                ctx.mram_write(wt, j * tile_bytes, tile_bytes);
+                ctx.mram_write(wt, in_off + j * tile_bytes, tile_bytes);
                 j += ctx.n_tasklets as usize;
             }
         });
@@ -98,7 +100,6 @@ impl PrimBench for Trns {
         // does it in place; a scratch output keeps the same DMA traffic —
         // one read + one write per tile — without the cycle bookkeeping
         // affecting data layout).
-        let grid = mp * TILE_N;
         let vec_bytes = TILE_M * 8; // m-element tile vector = 128 B
         let per_tile_s3 = (4 * isa::ADDR_CALC + isa::LOOP_CTRL) as u64
             + 2 * isa::op_instrs_for(&rc.sys.dpu, DType::I64, Op::Mul) as u64;
@@ -125,7 +126,7 @@ impl PrimBench for Trns {
                     let (j, c) = (pos / TILE_N, pos % TILE_N);
                     // source: after step 2, tile j holds [c][r] vectors:
                     // vector (j, c) at j*tile + c*m
-                    ctx.mram_read(j * tile_bytes + c * vec_bytes, wv, vec_bytes);
+                    ctx.mram_read(in_off + j * tile_bytes + c * vec_bytes, wv, vec_bytes);
                     ctx.compute(per_tile_s3);
                     // destination: (c, j) in the n×M' grid
                     ctx.mram_write(wv, out_off + (c * mp + j) * vec_bytes, vec_bytes);
@@ -136,7 +137,7 @@ impl PrimBench for Trns {
 
         // retrieval: DPU d holds rows d*n' .. of the transposed matrix
         // (equal sizes → parallel)
-        let parts = set.push_from::<i64>(out_off, grid * TILE_M);
+        let parts = set.xfer(out_sym).from().all();
         // verify: T[dn + c][j*m + r] == mat[(j*m + r)*n + d*n + c]
         let mut verified = true;
         'outer: for (d, p) in parts.iter().enumerate() {

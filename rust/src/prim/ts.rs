@@ -4,6 +4,12 @@
 //! synchronization (per-tasklet minima merged by tasklet 0, per-DPU minima
 //! merged by the host).
 //!
+//! Each DPU receives its position range plus the QUERY_LEN−1 window
+//! overlap as a **ragged** transfer of exactly that many elements. (The
+//! equal-size transfer path used to round every slice up to whole 1,024-B
+//! blocks and fill the tail with `i32::MAX / 4` sentinels chosen to sort
+//! far from any real match — a correction the ragged path deletes.)
+//!
 //! Distance is the sum of squared differences over the window (the integer
 //! analogue of the z-normalized Euclidean profile — same add/sub/mul mix
 //! the paper's Table 2 lists for TS).
@@ -68,36 +74,40 @@ impl PrimBench for Ts {
         let mut set = rc.alloc();
         let nd = rc.n_dpus as usize;
         let positions = n - QUERY_LEN + 1;
-        let per_pos = positions.div_ceil(nd);
-        // each DPU gets its positions plus QUERY_LEN-1 overlap
-        let slice_elems = per_pos + QUERY_LEN - 1;
-        let slice_padded = (slice_elems + 255) & !255; // whole 1024-B blocks
+        // even per-DPU position stride keeps every ragged slice start on
+        // the 8-B DMA boundary (i32 elements)
+        let per_pos = positions.div_ceil(nd).div_ceil(2) * 2;
+        // each DPU gets its positions plus QUERY_LEN-1 overlap, rounded up
+        // to an even element count with *real* neighboring data (never a
+        // sentinel); the final slice ends exactly at the series end
+        let slice_elems = per_pos + QUERY_LEN; // even; QUERY_LEN-1 overlap + 1
+        let counts: Vec<usize> =
+            (0..nd).map(|d| slice_elems.min(n.saturating_sub(d * per_pos))).collect();
         let bufs: Vec<Vec<i32>> = (0..nd)
             .map(|d| {
-                let lo = d * per_pos;
-                let mut v: Vec<i32> = (lo..(lo + slice_padded).min(n))
-                    .map(|i| series[i])
-                    .collect();
-                v.resize(slice_padded, i32::MAX / 4); // pad far from matches
-                v
+                let lo = (d * per_pos).min(n);
+                series[lo..lo + counts[d]].to_vec()
             })
             .collect();
-        set.push_to(0, &bufs);
-        let q_off = slice_padded * 4;
-        set.broadcast(q_off, &query);
-        let out_off = q_off + QUERY_LEN * 4;
+        let series_sym = set.symbol::<i32>(slice_elems);
+        let q_sym = set.symbol::<i32>(QUERY_LEN);
+        let out_sym = set.symbol::<i64>(rc.n_tasklets as usize * 2);
+        set.xfer(series_sym).to().ragged(&bufs);
+        set.xfer(q_sym).to().broadcast(&query);
 
         let per_elem = (2 * isa::WRAM_LS + isa::LOOP_CTRL) as u64
             + isa::op_instrs_for(&rc.sys.dpu, DType::I32, Op::Sub) as u64
             + isa::op_instrs_for(&rc.sys.dpu, DType::I32, Op::Mul) as u64
             + isa::op_instrs_for(&rc.sys.dpu, DType::I64, Op::Add) as u64;
 
+        let counts_ref = &counts;
         let stats = set.launch_seq(rc.n_tasklets, |d, ctx: &mut Ctx| {
             let t = ctx.tasklet_id as usize;
             let nt = ctx.n_tasklets as usize;
+            let slice_bytes = counts_ref[d] * 4;
             // query resident in WRAM for the whole kernel
             let wq = ctx.mem_alloc(QUERY_LEN * 4);
-            ctx.mram_read(q_off, wq, QUERY_LEN * 4);
+            ctx.mram_read(q_sym.off(), wq, QUERY_LEN * 4);
             let qv: Vec<i32> = ctx.wram_get(wq, QUERY_LEN);
             // sliding window buffer: CHUNK positions need CHUNK+QUERY_LEN
             // elements
@@ -114,13 +124,15 @@ impl PrimBench for Ts {
                 let cnt = (my.end - p).min(CHUNK);
                 let need = cnt + QUERY_LEN; // elements
                 let nbytes = (need * 4 + 1023) & !1023;
-                // stream the span in 1024-B DMA chunks
+                // stream the span in 1024-B DMA chunks, clamped to the
+                // DPU's exact slice (no sentinel blocks to overrun into)
                 let base = (p * 4) & !7;
                 let shift = (p * 4 - base) / 4;
+                let limit = nbytes.min(slice_bytes - base);
                 let mut got = 0;
-                while got < nbytes.min(slice_padded * 4 - base) {
-                    let take = (nbytes - got).min(BLOCK);
-                    ctx.mram_read(base + got, wbuf + got, take);
+                while got < limit {
+                    let take = (limit - got).min(BLOCK);
+                    ctx.mram_read(series_sym.off() + base + got, wbuf + got, take);
                     got += take;
                 }
                 let span: Vec<i32> = ctx.wram_get(wbuf, (got / 4).min(CHUNK + QUERY_LEN));
@@ -139,14 +151,14 @@ impl PrimBench for Ts {
             }
             // per-tasklet result slots
             ctx.wram_set(wout, &[best, best_pos as i64]);
-            ctx.mram_write(wout, out_off + t * 16, 16);
+            ctx.mram_write(wout, out_sym.off() + t * 16, 16);
         });
 
         // host merge: per-DPU per-tasklet minima
         let mut best = i64::MAX;
         let mut best_pos = 0usize;
         for d in 0..nd {
-            let slots = set.copy_from::<i64>(d, out_off, rc.n_tasklets as usize * 2);
+            let slots = set.xfer(out_sym).from().one(d, rc.n_tasklets as usize * 2);
             for t in 0..rc.n_tasklets as usize {
                 let (b, p) = (slots[t * 2], slots[t * 2 + 1] as usize);
                 if b < best {
@@ -184,6 +196,31 @@ mod tests {
         let r = Ts.run(&rc);
         assert!(r.verified);
         assert_eq!(r.breakdown.inter_dpu, 0.0);
+    }
+
+    #[test]
+    fn ragged_slices_carry_no_sentinel_blocks() {
+        let rc = RunConfig {
+            n_dpus: 3,
+            scale: 0.01,
+            ..RunConfig::rank_default()
+        };
+        let r = Ts.run(&rc);
+        assert!(r.verified);
+        // expected input volume: exact overlap slices + broadcast query —
+        // not whole-block-rounded sentinel-padded slices
+        let n = rc.scaled(524_288).max(4 * QUERY_LEN);
+        let positions = n - QUERY_LEN + 1;
+        let per_pos = positions.div_ceil(3).div_ceil(2) * 2;
+        let slices: usize = (0..3usize)
+            .map(|d| (per_pos + QUERY_LEN).min(n.saturating_sub(d * per_pos)))
+            .sum();
+        let expect = (slices + 3 * QUERY_LEN) * 4;
+        assert_eq!(r.breakdown.bytes_to_dpu, expect as u64);
+        // independent regression pin: strictly below what the old
+        // whole-1024-B-block sentinel layout would have pushed
+        let padded = 3 * ((per_pos + QUERY_LEN - 1 + 255) & !255) + 3 * QUERY_LEN;
+        assert!(r.breakdown.bytes_to_dpu < (padded * 4) as u64, "block padding crept back");
     }
 
     #[test]

@@ -1,12 +1,14 @@
 //! VA — Vector Addition (§4.1). Dense linear algebra; int32; sequential
 //! reads; no intra- or inter-DPU synchronization.
 //!
-//! Host splits `a` and `b` into equal chunks (parallel transfers), each
-//! DPU's tasklets stream 1,024-B blocks cyclically: DMA in, add in WRAM,
-//! DMA out.
+//! Host splits `a` and `b` into contiguous chunks pushed with **ragged**
+//! parallel transfers (the tail DPU simply receives fewer elements — no
+//! sentinel padding), each DPU's tasklets stream 1,024-B blocks
+//! cyclically: DMA in, add in WRAM, DMA out.
 
 use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
 use crate::arch::{isa, DType, Op};
+use crate::coordinator::ragged_counts;
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -44,52 +46,50 @@ impl PrimBench for Va {
 
         let mut set = rc.alloc();
         let nd = rc.n_dpus as usize;
-        // equal chunks, padded to whole blocks (parallel transfers require
-        // equal sizes — Programming Recommendation 5)
+        // contiguous chunks of whole blocks; the tail chunk keeps its real
+        // size (ragged transfers — no padding, no result trimming)
         let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
-        let chunk = |src: &[i32], d: usize| -> Vec<i32> {
-            let lo = (d * per).min(n);
-            let hi = ((d + 1) * per).min(n);
-            let mut v = src[lo..hi].to_vec();
-            v.resize(per, 0);
-            v
-        };
+        let counts = ragged_counts(n, per, nd);
+        let chunk = |src: &[i32], d: usize| src[(d * per).min(n)..((d + 1) * per).min(n)].to_vec();
         let abufs: Vec<Vec<i32>> = (0..nd).map(|d| chunk(&a, d)).collect();
         let bbufs: Vec<Vec<i32>> = (0..nd).map(|d| chunk(&b, d)).collect();
-        let cbytes = per * 4;
-        set.push_to(0, &abufs);
-        set.push_to(cbytes, &bbufs);
+        let a_sym = set.symbol::<i32>(per);
+        let b_sym = set.symbol::<i32>(per);
+        let c_sym = set.symbol::<i32>(per);
+        set.xfer(a_sym).to().ragged(&abufs);
+        set.xfer(b_sym).to().ragged(&bbufs);
 
-        let n_blocks = per / EPB;
         let instrs_per_elem =
             (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
                 + isa::op_instrs(DType::I32, Op::Add) as u64;
-        let stats = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+        let counts_ref = &counts;
+        let stats = set.launch_seq(rc.n_tasklets, |d, ctx: &mut Ctx| {
+            let my_bytes = counts_ref[d] * 4;
+            let n_blocks = my_bytes.div_ceil(BLOCK);
             let wa = ctx.mem_alloc(BLOCK);
             let wb = ctx.mem_alloc(BLOCK);
             let mut blk = ctx.tasklet_id as usize;
             while blk < n_blocks {
                 let off = blk * BLOCK;
-                ctx.mram_read(off, wa, BLOCK);
-                ctx.mram_read(cbytes + off, wb, BLOCK);
+                let take = (my_bytes - off).min(BLOCK);
+                ctx.mram_read(a_sym.off() + off, wa, take);
+                ctx.mram_read(b_sym.off() + off, wb, take);
                 // zero-copy in-WRAM add: c (over a's buffer) = a + b
-                ctx.wram_zip::<i32>(wb, wa, EPB, |b, a| {
+                ctx.wram_zip::<i32>(wb, wa, take / 4, |b, a| {
                     for (x, y) in a.iter_mut().zip(b) {
                         *x = x.wrapping_add(*y);
                     }
                 });
-                ctx.compute(EPB as u64 * instrs_per_elem);
-                ctx.mram_write(wa, 2 * cbytes + off, BLOCK);
+                ctx.compute((take / 4) as u64 * instrs_per_elem);
+                ctx.mram_write(wa, c_sym.off() + off, take);
                 blk += ctx.n_tasklets as usize;
             }
         });
 
-        let out = set.push_from::<i32>(2 * cbytes, per);
+        let out = set.xfer(c_sym).from().ragged(&counts);
         let mut c = Vec::with_capacity(n);
-        for d in 0..nd {
-            let lo = (d * per).min(n);
-            let hi = ((d + 1) * per).min(n);
-            c.extend_from_slice(&out[d][..hi - lo]);
+        for part in &out {
+            c.extend_from_slice(part);
         }
         let verified = c
             .iter()
@@ -123,6 +123,22 @@ mod tests {
         assert!(r.breakdown.cpu_dpu > 0.0);
         assert!(r.breakdown.dpu_cpu > 0.0);
         assert_eq!(r.breakdown.inter_dpu, 0.0, "VA has no inter-DPU sync");
+    }
+
+    #[test]
+    fn ragged_moves_exactly_the_dataset() {
+        // no sentinel padding: bytes moved == 2n in + n out, even when n
+        // does not divide evenly across the DPUs
+        let rc = RunConfig {
+            n_dpus: 7,
+            scale: 0.003,
+            ..RunConfig::rank_default()
+        };
+        let n = rc.scaled(2_500_000) as u64;
+        let r = Va.run(&rc);
+        assert!(r.verified);
+        assert_eq!(r.breakdown.bytes_to_dpu, 2 * n * 4);
+        assert_eq!(r.breakdown.bytes_from_dpu, n * 4);
     }
 
     #[test]

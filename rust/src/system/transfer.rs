@@ -122,6 +122,28 @@ impl XferModel {
         total
     }
 
+    /// Seconds for a parallel transfer with **per-DPU sizes** (the
+    /// `dpu_push_xfer` generalization newer SDKs expose). Each DPU's
+    /// shard is charged at the size-scaled aggregate bandwidth of its
+    /// rank — the per-shard single-DPU size curve of Fig. 10a applied to
+    /// the rank hyperbola — and ranks stay serialized (§5.1.1). For
+    /// uniform sizes this reduces to [`XferModel::parallel_secs`]'s
+    /// per-rank terms; zero-length shards cost nothing and do not count
+    /// toward the rank's parallelism.
+    pub fn ragged_secs(&self, dir: Dir, sizes: &[usize]) -> f64 {
+        let rank = (self.rank_size.max(1)) as usize;
+        let mut total = 0.0;
+        for shard in sizes.chunks(rank) {
+            let in_rank = shard.iter().filter(|&&b| b > 0).count() as u32;
+            for &bytes in shard {
+                if bytes > 0 {
+                    total += bytes as f64 / self.parallel_bw(dir, bytes, in_rank);
+                }
+            }
+        }
+        total
+    }
+
     /// Seconds to broadcast `bytes` to each of `n` DPUs.
     pub fn broadcast_secs(&self, bytes: usize, n: u32) -> f64 {
         if n == 0 || bytes == 0 {
@@ -222,6 +244,55 @@ impl TransferEngine {
         let secs = self
             .model
             .parallel_secs(Dir::DpuToCpu, n * std::mem::size_of::<T>(), n_dpus);
+        (out, secs)
+    }
+
+    /// Ragged `dpu_push_xfer(TO_DPU)`: parallel transfer of per-DPU
+    /// buffers of **independent sizes** (what the equal-size SDK
+    /// restriction forced workloads to fake with sentinel padding).
+    /// Functional fan-out across the executor; seconds from
+    /// [`XferModel::ragged_secs`].
+    pub fn push_to_ragged<T: Pod>(
+        &self,
+        exec: &dyn FleetExecutor,
+        dpus: &mut [Dpu],
+        mram_off: usize,
+        bufs: &[Vec<T>],
+    ) -> f64 {
+        assert_eq!(dpus.len(), bufs.len(), "one buffer per DPU");
+        let mut slots: Vec<FleetSlot<'_>> = dpus.iter_mut().enumerate().collect();
+        exec.for_each(&mut slots, &|i, dpu| {
+            if !bufs[i].is_empty() {
+                dpu.mram_store(mram_off, &bufs[i]);
+            }
+        });
+        let sizes: Vec<usize> =
+            bufs.iter().map(|b| std::mem::size_of_val(b.as_slice())).collect();
+        self.model.ragged_secs(Dir::CpuToDpu, &sizes)
+    }
+
+    /// Ragged `dpu_push_xfer(FROM_DPU)`: parallel retrieval of `lens[i]`
+    /// elements from DPU `i` (a zero length skips that DPU).
+    pub fn push_from_ragged<T: Pod>(
+        &self,
+        exec: &dyn FleetExecutor,
+        dpus: &mut [Dpu],
+        mram_off: usize,
+        lens: &[usize],
+    ) -> (Vec<Vec<T>>, f64) {
+        assert_eq!(dpus.len(), lens.len(), "one length per DPU");
+        let cells: Vec<OnceLock<Vec<T>>> = (0..dpus.len()).map(|_| OnceLock::new()).collect();
+        let mut slots: Vec<FleetSlot<'_>> = dpus.iter_mut().enumerate().collect();
+        exec.for_each(&mut slots, &|i, dpu| {
+            let v = if lens[i] == 0 { Vec::new() } else { dpu.mram_load(mram_off, lens[i]) };
+            let _ = cells[i].set(v);
+        });
+        let out: Vec<Vec<T>> = cells
+            .into_iter()
+            .map(|c| c.into_inner().expect("executor must visit every DPU"))
+            .collect();
+        let sizes: Vec<usize> = lens.iter().map(|n| n * std::mem::size_of::<T>()).collect();
+        let secs = self.model.ragged_secs(Dir::DpuToCpu, &sizes);
         (out, secs)
     }
 
@@ -336,6 +407,8 @@ mod tests {
         }
     }
 
+    /// The equal-size path (`push_to`, the 2021.1.1 SDK restriction) still
+    /// rejects ragged buffers — `push_to_ragged` is the sanctioned route.
     #[test]
     #[should_panic(expected = "equal sizes")]
     fn unequal_parallel_rejected() {
@@ -344,5 +417,61 @@ mod tests {
         let mut dpus: Vec<Dpu> = (0..2).map(|_| Dpu::new(DpuArch::p21())).collect();
         let bufs = vec![vec![1i64; 4], vec![1i64; 8]];
         eng.push_to(&SerialExecutor, &mut dpus, 0, &bufs);
+    }
+
+    #[test]
+    fn ragged_engine_moves_exact_bytes() {
+        use crate::coordinator::executor::{ParallelExecutor, SerialExecutor};
+        for exec in [
+            &SerialExecutor as &dyn FleetExecutor,
+            &ParallelExecutor::new(3) as &dyn FleetExecutor,
+        ] {
+            let eng = TransferEngine::new(model());
+            let mut dpus: Vec<Dpu> = (0..5).map(|_| Dpu::new(DpuArch::p21())).collect();
+            let bufs: Vec<Vec<i64>> = vec![
+                vec![1; 16],
+                vec![2; 4],
+                Vec::new(),
+                vec![4; 64],
+                vec![5; 8],
+            ];
+            let secs = eng.push_to_ragged(exec, &mut dpus, 0, &bufs);
+            assert!(secs > 0.0);
+            let lens: Vec<usize> = bufs.iter().map(Vec::len).collect();
+            let (back, secs2) = eng.push_from_ragged::<i64>(exec, &mut dpus, 0, &lens);
+            assert_eq!(back, bufs);
+            assert!(secs2 > secs, "read-back slower (Key Obs. 9)");
+        }
+    }
+
+    #[test]
+    fn ragged_secs_matches_parallel_secs_for_uniform_sizes() {
+        let m = model();
+        for n in [1usize, 7, 64, 100] {
+            for bytes in [64usize, 1 << 20] {
+                let sizes = vec![bytes; n];
+                let ragged = m.ragged_secs(Dir::CpuToDpu, &sizes);
+                let equal = m.parallel_secs(Dir::CpuToDpu, bytes, n as u32);
+                assert!(
+                    (ragged - equal).abs() / equal < 1e-9,
+                    "n={n} bytes={bytes}: {ragged} vs {equal}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_secs_serializes_ranks_and_skips_empty_shards() {
+        let m = model();
+        let one_rank = m.ragged_secs(Dir::CpuToDpu, &vec![1 << 20; 64]);
+        let two_ranks = m.ragged_secs(Dir::CpuToDpu, &vec![1 << 20; 128]);
+        assert!((two_ranks - 2.0 * one_rank).abs() / one_rank < 1e-9);
+        // zero-length shards neither cost time nor dilute the rank BW
+        let mut sizes = vec![1 << 20; 8];
+        sizes.resize(64, 0);
+        let with_zeros = m.ragged_secs(Dir::CpuToDpu, &sizes);
+        let without = m.ragged_secs(Dir::CpuToDpu, &vec![1 << 20; 8]);
+        assert!((with_zeros - without).abs() / without < 1e-9);
+        assert_eq!(m.ragged_secs(Dir::DpuToCpu, &[]), 0.0);
     }
 }

@@ -10,7 +10,11 @@
 //! * BFS — inter-DPU sync (host-mediated frontier union between launches).
 
 use prim_pim::arch::SystemConfig;
+use prim_pim::coordinator::{
+    FleetExecutor, ParallelExecutor, PimSet, SerialExecutor, TimeBreakdown,
+};
 use prim_pim::prim::common::{bench_by_name, BenchResult, ExecChoice, RunConfig};
+use std::sync::Arc;
 
 fn run_with(name: &str, exec: ExecChoice) -> BenchResult {
     let b = bench_by_name(name).expect("known benchmark");
@@ -53,6 +57,13 @@ fn bfs_inter_dpu_sync_class() {
     assert_executors_identical("BFS");
 }
 
+/// TS distributes its slices with ragged transfers — pin the ragged
+/// workload class across executors too.
+#[test]
+fn ts_ragged_transfer_class() {
+    assert_executors_identical("TS");
+}
+
 /// The parallel executor must also be self-consistent across worker
 /// counts (shard boundaries shift, results must not).
 #[test]
@@ -62,4 +73,64 @@ fn parallel_worker_count_invariant() {
     assert!(a.verified && b.verified);
     assert_eq!(a.breakdown, b.breakdown);
     assert_eq!(a.dpu_instrs, b.dpu_instrs);
+}
+
+/// Ragged transfers and `launch_on` subsets through the typed-symbol
+/// builder: serial and parallel executors must agree bit-for-bit on both
+/// the moved bytes and every accounting bucket.
+#[test]
+fn ragged_and_subset_launch_bit_identical() {
+    let lens: [usize; 8] = [160, 8, 96, 0, 64, 32, 8, 120];
+    let active: [usize; 5] = [0, 2, 4, 5, 7];
+    let run = |exec: Arc<dyn FleetExecutor>| -> (Vec<Vec<i64>>, TimeBreakdown, u64) {
+        let mut set = PimSet::allocate_with(SystemConfig::p21_rank(), 8, exec);
+        let in_sym = set.symbol::<i64>(160);
+        let out_sym = set.symbol::<i64>(160);
+        let bufs: Vec<Vec<i64>> = lens
+            .iter()
+            .enumerate()
+            .map(|(d, &n)| (0..n as i64).map(|j| d as i64 * 1000 + j).collect())
+            .collect();
+        set.xfer(in_sym).to().ragged(&bufs);
+        // copy in→out on a subset of the DPUs, with DPU-dependent compute
+        let lens_ref = &lens;
+        let stats = set.launch_on(&active, 4, |d, ctx| {
+            let bytes = lens_ref[d] * 8;
+            if bytes > 0 {
+                let w = ctx.mem_alloc(bytes.min(1024));
+                let mut off = 0;
+                while off < bytes {
+                    let take = (bytes - off).min(1024);
+                    ctx.mram_read(in_sym.off() + off, w, take);
+                    ctx.mram_write(w, out_sym.off() + off, take);
+                    off += take;
+                }
+            }
+            ctx.compute(17 * d as u64 + 3);
+        });
+        // gather only what the active DPUs produced (inactive → length 0)
+        let mut out_lens = [0usize; 8];
+        for &d in &active {
+            out_lens[d] = lens[d];
+        }
+        let out = set
+            .xfer(out_sym)
+            .bucket(prim_pim::coordinator::Bucket::InterDpu)
+            .from()
+            .ragged(&out_lens);
+        (out, set.metrics, stats.total_instrs())
+    };
+    let (so, sm, si) = run(Arc::new(SerialExecutor));
+    let (po, pm, pi) = run(Arc::new(ParallelExecutor::new(3)));
+    assert_eq!(so, po, "ragged payloads must not depend on the executor");
+    assert_eq!(sm, pm, "time breakdown must be bit-identical");
+    assert_eq!(si, pi);
+    // and the data is the expected per-DPU prefix for active DPUs
+    for &d in &active {
+        let expect: Vec<i64> = (0..lens[d] as i64).map(|j| d as i64 * 1000 + j).collect();
+        assert_eq!(so[d], expect, "dpu {d}");
+    }
+    for d in [1usize, 3, 6] {
+        assert!(so[d].is_empty(), "inactive dpu {d} contributes nothing");
+    }
 }

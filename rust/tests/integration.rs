@@ -150,14 +150,15 @@ fn pjrt_runtime_end_to_end_if_artifacts() {
 fn metrics_accumulate_across_phases() {
     use prim_pim::coordinator::PimSet;
     let mut set = PimSet::allocate(SystemConfig::p21_rank(), 2);
-    set.broadcast(0, &[1i64; 64]);
+    let sym = set.symbol::<i64>(64);
+    set.xfer(sym).to().broadcast(&[1i64; 64]);
     let cpu_dpu_1 = set.metrics.cpu_dpu;
     assert!(cpu_dpu_1 > 0.0);
     set.launch(4, |_d, ctx| ctx.compute(100));
     assert!(set.metrics.dpu > 0.0);
     set.launch(4, |_d, ctx| ctx.compute(100));
     assert_eq!(set.metrics.launches, 2);
-    let _ = set.copy_from::<i64>(0, 0, 8);
+    let _ = set.xfer(sym).from().one(0, 8);
     assert!(set.metrics.dpu_cpu > 0.0);
     set.reset_metrics();
     assert_eq!(set.metrics.launches, 0);

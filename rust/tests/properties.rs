@@ -1,8 +1,11 @@
 //! Property-based tests (hand-rolled framework in `util::proptest`) over
-//! the coordinator, transfer engine, timing engine, and benchmark kernels.
+//! the coordinator, MRAM layout, transfer engine, timing engine, and
+//! benchmark kernels.
 
 use prim_pim::arch::{DpuArch, SystemConfig};
-use prim_pim::coordinator::{chunk_ranges, chunk_ranges_aligned, cyclic_blocks, PimSet};
+use prim_pim::coordinator::{
+    chunk_ranges, chunk_ranges_aligned, cyclic_blocks, MramLayout, PimSet,
+};
 use prim_pim::dpu::{replay, timing_ref::replay_stepped, Ctx, Ev, Trace};
 use prim_pim::prim::common::RunConfig;
 use prim_pim::util::proptest::{props, Gen};
@@ -60,23 +63,60 @@ fn prop_cyclic_blocks_cover_once() {
     });
 }
 
+// ------------------------------------------------------------ MRAM layout
+
+#[test]
+fn prop_mram_layout_aligned_disjoint_deterministic() {
+    props("MramLayout alignment/overlap/determinism", 60, |g: &mut Gen| {
+        let n_allocs = g.usize_in(1..40);
+        let cap = 1 << 22;
+        let mut l1 = MramLayout::new(cap);
+        let mut l2 = MramLayout::new(cap);
+        let mut prev_end = 0usize;
+        for i in 0..n_allocs {
+            let elems = g.usize_in(0..4096);
+            // mixed element widths; both layouts replay the same sequence
+            let (off, bytes, off2) = match i % 4 {
+                0 => (l1.alloc::<u8>(elems).off(), elems, l2.alloc::<u8>(elems).off()),
+                1 => (l1.alloc::<i32>(elems).off(), elems * 4, l2.alloc::<i32>(elems).off()),
+                2 => (l1.alloc::<i64>(elems).off(), elems * 8, l2.alloc::<i64>(elems).off()),
+                _ => (l1.alloc::<f32>(elems).off(), elems * 4, l2.alloc::<f32>(elems).off()),
+            };
+            assert_eq!(off % 8, 0, "8-B DMA alignment");
+            assert!(off >= prev_end, "regions must not overlap");
+            assert_eq!(off, off2, "offsets are deterministic");
+            prev_end = off + bytes;
+        }
+        assert!(l1.used() <= cap);
+        assert_eq!(l1.used(), l2.used());
+        assert_eq!(l1.remaining(), cap - l1.used());
+    });
+}
+
 // -------------------------------------------------------- transfer engine
 
 #[test]
 fn prop_transfer_roundtrip() {
-    props("push_to/push_from roundtrip", 30, |g: &mut Gen| {
+    props("equal/ragged/broadcast roundtrip", 30, |g: &mut Gen| {
         let nd = g.usize_in(1..9);
         let n = g.usize_in(1..200);
         let mut set = PimSet::allocate(SystemConfig::p21_rank(), nd as u32);
+        let sym = set.symbol::<i64>(n);
         let bufs: Vec<Vec<i64>> = (0..nd).map(|_| g.vec_i64(n..n + 1, -1000..1000)).collect();
-        set.push_to(0, &bufs);
-        let back = set.push_from::<i64>(0, n);
+        set.xfer(sym).to().equal(&bufs);
+        let back = set.xfer(sym).from().equal(n);
         assert_eq!(back, bufs);
+        // ragged roundtrip: random per-DPU prefix lengths
+        let ragged: Vec<Vec<i64>> = (0..nd).map(|_| g.vec_i64(0..n + 1, -1000..1000)).collect();
+        let lens: Vec<usize> = ragged.iter().map(Vec::len).collect();
+        set.xfer(sym).to().ragged(&ragged);
+        assert_eq!(set.xfer(sym).from().ragged(&lens), ragged);
         // broadcast reaches every DPU identically
+        let bsym = set.symbol::<i64>(8);
         let msg = g.vec_i64(8..9, 0..100);
-        set.broadcast(4096, &msg);
+        set.xfer(bsym).to().broadcast(&msg);
         for d in 0..nd {
-            assert_eq!(set.copy_from::<i64>(d, 4096, 8), msg);
+            assert_eq!(set.xfer(bsym).from().one(d, 8), msg);
         }
     });
 }
@@ -184,8 +224,11 @@ fn prop_dpu_kernel_sum_matches_host() {
         let n = data.len() & !7;
         let data = &data[..n.max(8)];
         let mut set = PimSet::allocate(SystemConfig::p21_rank(), 1);
-        set.copy_to(0, 0, data);
-        let total_off = (data.len() * 8 + 7) & !7;
+        let data_sym = set.symbol::<i64>(data.len());
+        let total_sym = set.symbol::<i64>(1);
+        set.xfer(data_sym).to().one(0, data);
+        let in_off = data_sym.off();
+        let total_off = total_sym.off();
         let n_items = data.len();
         set.launch(nt, |_d, ctx: &mut Ctx| {
             let t = ctx.tasklet_id as usize;
@@ -197,7 +240,7 @@ fn prop_dpu_kernel_sum_matches_host() {
             while k < my.end {
                 let cnt = (my.end - k).min(128);
                 let k0 = k & !0usize;
-                ctx.mram_read(k0 * 8, buf, ((cnt * 8 + 7) & !7).max(8));
+                ctx.mram_read(in_off + k0 * 8, buf, ((cnt * 8 + 7) & !7).max(8));
                 let v: Vec<i64> = ctx.wram_get(buf, cnt);
                 acc += v.iter().sum::<i64>();
                 ctx.compute(cnt as u64 * 3);
@@ -217,7 +260,7 @@ fn prop_dpu_kernel_sum_matches_host() {
                 ctx.mram_write(slots, total_off, 8);
             }
         });
-        let got = set.copy_from::<i64>(0, total_off, 1)[0];
+        let got = set.xfer(total_sym).from().one(0, 1)[0];
         assert_eq!(got, data.iter().sum::<i64>());
     });
 }
