@@ -88,6 +88,21 @@ pub trait FleetExecutor: Send + Sync {
 
     /// Apply `op` to every slot (the transfer fan-out primitive).
     fn for_each(&self, slots: &mut [FleetSlot<'_>], op: &(dyn Fn(usize, &mut Dpu) + Sync));
+
+    /// Two-stage overlapped schedule — the building block of the
+    /// pipelined `Session::execute_batch`. `fleet` is the fleet-side
+    /// stage (kernel launch + transfers of the current request); `host`
+    /// is an independent host-side stage (staging the next request's
+    /// input buffers). The default (serial) schedule runs fleet **then**
+    /// host — the bit-identical reference order; the parallel executor
+    /// runs `host` on a scoped thread concurrently with `fleet`. The two
+    /// stages cannot share mutable state (the borrow checker enforces
+    /// that at the call site), so the schedules cannot diverge
+    /// functionally.
+    fn overlap(&self, fleet: Box<dyn FnOnce() + '_>, host: Box<dyn FnOnce() + Send + '_>) {
+        fleet();
+        host();
+    }
 }
 
 /// The original single-threaded walk: slots in order, on the calling
@@ -207,6 +222,17 @@ impl FleetExecutor for ParallelExecutor {
             }
         });
     }
+
+    /// Genuine wallclock overlap: the host stage runs on its own scoped
+    /// thread while the fleet stage executes on the calling thread (which
+    /// may itself shard across workers via [`ParallelExecutor::launch`]).
+    fn overlap(&self, fleet: Box<dyn FnOnce() + '_>, host: Box<dyn FnOnce() + Send + '_>) {
+        std::thread::scope(|scope| {
+            let h = scope.spawn(host);
+            fleet();
+            h.join().unwrap_or_else(|e| std::panic::resume_unwind(e));
+        });
+    }
 }
 
 /// Executor selection carried by `prim::common::RunConfig` (and anything
@@ -315,6 +341,44 @@ mod tests {
         assert_eq!(ExecChoice::parse(Some("parallel"), Some("4")), ExecChoice::Parallel(4));
         assert_eq!(ExecChoice::parse(None, None), ExecChoice::Parallel(0));
         assert_eq!(ExecChoice::parse(Some("bogus"), Some("x")), ExecChoice::Parallel(0));
+    }
+
+    #[test]
+    fn overlap_runs_both_stages_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for exec in [
+            &SerialExecutor as &dyn FleetExecutor,
+            &ParallelExecutor::new(2) as &dyn FleetExecutor,
+        ] {
+            let fleet_runs = AtomicUsize::new(0);
+            let host_runs = AtomicUsize::new(0);
+            exec.overlap(
+                Box::new(|| {
+                    fleet_runs.fetch_add(1, Ordering::SeqCst);
+                }),
+                Box::new(|| {
+                    host_runs.fetch_add(1, Ordering::SeqCst);
+                }),
+            );
+            assert_eq!(fleet_runs.load(Ordering::SeqCst), 1, "{}", exec.name());
+            assert_eq!(host_runs.load(Ordering::SeqCst), 1, "{}", exec.name());
+        }
+    }
+
+    /// The two overlap stages touch disjoint state, so serial and
+    /// parallel schedules produce identical values.
+    #[test]
+    fn overlap_results_identical_across_executors() {
+        let run = |exec: &dyn FleetExecutor| {
+            let mut launched = 0u64;
+            let mut staged: Option<Vec<u64>> = None;
+            exec.overlap(
+                Box::new(|| launched = 41 + 1),
+                Box::new(|| staged = Some((0..8).map(|i| i * 3).collect())),
+            );
+            (launched, staged)
+        };
+        assert_eq!(run(&SerialExecutor), run(&ParallelExecutor::new(4)));
     }
 
     #[test]

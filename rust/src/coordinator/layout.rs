@@ -121,14 +121,6 @@ impl<T: Pod> Symbol<T> {
         Symbol { off, elems, _elem: PhantomData }
     }
 
-    /// Alignment-unchecked constructor for the deprecated raw-offset
-    /// `PimSet` wrappers, whose pre-Symbol API never required 8-B-aligned
-    /// offsets. Everything else goes through [`Symbol::raw`] or the
-    /// allocator.
-    pub(crate) fn raw_unchecked(off: usize, elems: usize) -> Self {
-        Symbol { off, elems, _elem: PhantomData }
-    }
-
     /// Byte offset of the region start in every DPU's MRAM bank.
     pub fn off(&self) -> usize {
         self.off

@@ -38,6 +38,12 @@ pub struct TimeBreakdown {
     pub bytes_inter: u64,
     /// Number of kernel launches.
     pub launches: u64,
+    /// Seconds of CPU-DPU push time hidden under a preceding kernel
+    /// launch by the pipelined batch schedule (§6's overlap
+    /// recommendation; see `coordinator::session`). The component buckets
+    /// above keep their full values — `total()` subtracts this credit, so
+    /// a serialized schedule (`overlapped == 0`) is unchanged.
+    pub overlapped: f64,
 }
 
 impl TimeBreakdown {
@@ -61,9 +67,10 @@ impl TimeBreakdown {
         }
     }
 
-    /// Total wall time of the run.
+    /// Total wall time of the run: the four buckets minus whatever the
+    /// pipelined schedule hid under kernel launches.
     pub fn total(&self) -> f64 {
-        self.dpu + self.inter_dpu + self.cpu_dpu + self.dpu_cpu
+        self.dpu + self.inter_dpu + self.cpu_dpu + self.dpu_cpu - self.overlapped
     }
 
     /// DPU + Inter-DPU: the quantity the paper uses for the CPU/GPU
@@ -83,6 +90,24 @@ impl TimeBreakdown {
         self.bytes_from_dpu += o.bytes_from_dpu;
         self.bytes_inter += o.bytes_inter;
         self.launches += o.launches;
+        self.overlapped += o.overlapped;
+    }
+
+    /// Element-wise difference since an earlier snapshot of the same
+    /// accumulator (metrics are monotonic within a run, so plain
+    /// subtraction is exact).
+    pub fn delta(&self, since: &TimeBreakdown) -> TimeBreakdown {
+        TimeBreakdown {
+            dpu: self.dpu - since.dpu,
+            inter_dpu: self.inter_dpu - since.inter_dpu,
+            cpu_dpu: self.cpu_dpu - since.cpu_dpu,
+            dpu_cpu: self.dpu_cpu - since.dpu_cpu,
+            bytes_to_dpu: self.bytes_to_dpu - since.bytes_to_dpu,
+            bytes_from_dpu: self.bytes_from_dpu - since.bytes_from_dpu,
+            bytes_inter: self.bytes_inter - since.bytes_inter,
+            launches: self.launches - since.launches,
+            overlapped: self.overlapped - since.overlapped,
+        }
     }
 
     /// Format as milliseconds for tables.
@@ -124,6 +149,39 @@ mod tests {
         assert_eq!((b.dpu_cpu, b.bytes_from_dpu), (2.0, 20));
         assert_eq!((b.inter_dpu, b.bytes_inter), (4.0, 40));
         assert_eq!(b.dpu, 0.0);
+    }
+
+    #[test]
+    fn overlapped_credits_total_only() {
+        let mut b = TimeBreakdown {
+            dpu: 1.0,
+            cpu_dpu: 0.5,
+            ..Default::default()
+        };
+        b.overlapped = 0.3;
+        assert_eq!(b.total(), 1.2);
+        assert_eq!(b.kernel_plus_sync(), 1.0, "overlap never touches kernel+sync");
+        assert_eq!(b.cpu_dpu, 0.5, "component buckets keep full values");
+    }
+
+    #[test]
+    fn delta_is_elementwise() {
+        let a = TimeBreakdown {
+            dpu: 1.0,
+            cpu_dpu: 2.0,
+            bytes_to_dpu: 100,
+            launches: 3,
+            ..Default::default()
+        };
+        let mut b = a;
+        b.dpu += 0.5;
+        b.bytes_to_dpu += 10;
+        b.launches += 1;
+        let d = b.delta(&a);
+        assert_eq!(d.dpu, 0.5);
+        assert_eq!(d.cpu_dpu, 0.0);
+        assert_eq!(d.bytes_to_dpu, 10);
+        assert_eq!(d.launches, 1);
     }
 
     #[test]

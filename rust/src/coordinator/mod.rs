@@ -10,14 +10,18 @@
 //! entry point ([`PimSet::xfer`]): allocate regions from the per-fleet
 //! [`MramLayout`], then pick a direction (`to`/`from`), a distribution
 //! (`one`, `equal`, `ragged`, `broadcast`), and — when the transfer is a
-//! mid-run exchange — an accounting [`Bucket`]. The legacy
-//! `copy_to`/`push_to`/`broadcast` family survives one release as
-//! deprecated thin wrappers.
+//! mid-run exchange — an accounting [`Bucket`]. (The pre-Symbol
+//! raw-offset `copy_to`/`push_to`/`broadcast` family lived one release as
+//! deprecated wrappers and is now gone.)
+//!
+//! Long-lived serving state is a [`Session`]: a `PimSet` kept warm across
+//! many requests, with batched, pipelined execution (see [`session`]).
 
 pub mod executor;
 pub mod layout;
 pub mod metrics;
 pub mod partition;
+pub mod session;
 
 use crate::arch::SystemConfig;
 use crate::dpu::{Ctx, Dpu, DpuTiming};
@@ -31,6 +35,7 @@ pub use executor::{
 pub use layout::{MramLayout, Symbol};
 pub use metrics::{Bucket, TimeBreakdown};
 pub use partition::{chunk_ranges, chunk_ranges_aligned, cyclic_blocks, ragged_counts};
+pub use session::Session;
 
 /// Statistics of one kernel launch across the allocated DPU set.
 #[derive(Clone, Debug, Default)]
@@ -255,76 +260,6 @@ impl PimSet {
     /// Reset accumulated metrics (dataset stays in MRAM).
     pub fn reset_metrics(&mut self) {
         self.metrics = TimeBreakdown::default();
-    }
-
-    // -------------------------------------------- deprecated legacy surface
-    //
-    // The pre-Symbol API: raw `mram_off` offsets, ten near-duplicate
-    // methods. Each is a thin wrapper over the builder now; kept one
-    // release for out-of-tree callers.
-
-    /// Serial CPU→DPU transfer (`dpu_copy_to`); charged to `CPU-DPU`.
-    #[deprecated(note = "use `set.xfer(sym).to().one(dpu, data)` with a typed Symbol")]
-    pub fn copy_to<T: Pod>(&mut self, dpu: usize, mram_off: usize, data: &[T]) {
-        self.xfer(Symbol::<T>::raw_unchecked(mram_off, data.len())).to().one(dpu, data);
-    }
-
-    /// Serial DPU→CPU transfer (`dpu_copy_from`); charged to `DPU-CPU`.
-    #[deprecated(note = "use `set.xfer(sym).from().one(dpu, n)` with a typed Symbol")]
-    pub fn copy_from<T: Pod>(&mut self, dpu: usize, mram_off: usize, n: usize) -> Vec<T> {
-        self.xfer(Symbol::<T>::raw_unchecked(mram_off, n)).from().one(dpu, n)
-    }
-
-    /// Parallel CPU→DPU transfer of equal-size buffers (`dpu_push_xfer`).
-    #[deprecated(note = "use `set.xfer(sym).to().equal(bufs)` with a typed Symbol")]
-    pub fn push_to<T: Pod>(&mut self, mram_off: usize, bufs: &[Vec<T>]) {
-        // size the compat symbol from the widest buffer so misuse still
-        // reaches the engine's "equal sizes" diagnostic, not check_fits
-        let elems = bufs.iter().map(Vec::len).max().unwrap_or(0);
-        self.xfer(Symbol::<T>::raw_unchecked(mram_off, elems)).to().equal(bufs);
-    }
-
-    /// Parallel DPU→CPU retrieval of equal-size buffers.
-    #[deprecated(note = "use `set.xfer(sym).from().equal(n)` with a typed Symbol")]
-    pub fn push_from<T: Pod>(&mut self, mram_off: usize, n: usize) -> Vec<Vec<T>> {
-        self.xfer(Symbol::<T>::raw_unchecked(mram_off, n)).from().equal(n)
-    }
-
-    /// Broadcast the same buffer to all DPUs (`dpu_broadcast_to`).
-    #[deprecated(note = "use `set.xfer(sym).to().broadcast(data)` with a typed Symbol")]
-    pub fn broadcast<T: Pod>(&mut self, mram_off: usize, data: &[T]) {
-        self.xfer(Symbol::<T>::raw_unchecked(mram_off, data.len())).to().broadcast(data);
-    }
-
-    /// Inter-DPU-bucket variant of [`PimSet::push_to`].
-    #[deprecated(note = "use `set.xfer(sym).inter().to().equal(bufs)`")]
-    pub fn push_to_inter<T: Pod>(&mut self, mram_off: usize, bufs: &[Vec<T>]) {
-        let elems = bufs.iter().map(Vec::len).max().unwrap_or(0);
-        self.xfer(Symbol::<T>::raw_unchecked(mram_off, elems)).inter().to().equal(bufs);
-    }
-
-    /// Inter-DPU-bucket variant of [`PimSet::push_from`].
-    #[deprecated(note = "use `set.xfer(sym).inter().from().equal(n)`")]
-    pub fn push_from_inter<T: Pod>(&mut self, mram_off: usize, n: usize) -> Vec<Vec<T>> {
-        self.xfer(Symbol::<T>::raw_unchecked(mram_off, n)).inter().from().equal(n)
-    }
-
-    /// Inter-DPU-bucket variant of [`PimSet::broadcast`].
-    #[deprecated(note = "use `set.xfer(sym).inter().to().broadcast(data)`")]
-    pub fn broadcast_inter<T: Pod>(&mut self, mram_off: usize, data: &[T]) {
-        self.xfer(Symbol::<T>::raw_unchecked(mram_off, data.len())).inter().to().broadcast(data);
-    }
-
-    /// Inter-DPU-bucket variant of [`PimSet::copy_to`].
-    #[deprecated(note = "use `set.xfer(sym).inter().to().one(dpu, data)`")]
-    pub fn copy_to_inter<T: Pod>(&mut self, dpu: usize, mram_off: usize, data: &[T]) {
-        self.xfer(Symbol::<T>::raw_unchecked(mram_off, data.len())).inter().to().one(dpu, data);
-    }
-
-    /// Inter-DPU-bucket variant of [`PimSet::copy_from`].
-    #[deprecated(note = "use `set.xfer(sym).inter().from().one(dpu, n)`")]
-    pub fn copy_from_inter<T: Pod>(&mut self, dpu: usize, mram_off: usize, n: usize) -> Vec<T> {
-        self.xfer(Symbol::<T>::raw_unchecked(mram_off, n)).inter().from().one(dpu, n)
     }
 }
 
@@ -657,23 +592,5 @@ mod tests {
         let mut set = PimSet::allocate(SystemConfig::p21_rank(), 2);
         let sym = set.symbol::<i64>(4);
         set.xfer(sym).to().broadcast(&[0i64; 8]);
-    }
-
-    /// The deprecated raw-offset family stays functional (thin wrappers
-    /// over the builder) for one release.
-    #[test]
-    #[allow(deprecated)]
-    fn legacy_wrappers_still_work() {
-        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 4);
-        let bufs: Vec<Vec<i64>> = (0..4).map(|i| vec![i as i64; 16]).collect();
-        set.push_to(0, &bufs);
-        assert_eq!(set.push_from::<i64>(0, 16), bufs);
-        set.broadcast(256, &[7i64; 4]);
-        assert_eq!(set.copy_from::<i64>(3, 256, 4), vec![7i64; 4]);
-        set.copy_to_inter(1, 512, &[1i64]);
-        assert_eq!(set.copy_from_inter::<i64>(1, 512, 1), vec![1i64]);
-        assert!(set.metrics.cpu_dpu > 0.0);
-        assert!(set.metrics.dpu_cpu > 0.0);
-        assert!(set.metrics.inter_dpu > 0.0);
     }
 }

@@ -1,0 +1,381 @@
+//! Persistent PIM sessions: warm MRAM state + batched, pipelined
+//! execution.
+//!
+//! The paper's §5.2 breakdowns show CPU-DPU/DPU-CPU transfer dominating
+//! many PrIM workloads, and §6 recommends amortizing input loads across
+//! kernel invocations and overlapping transfers with computation. A
+//! [`Session`] is the host-side object that makes both expressible: it
+//! owns one allocated [`PimSet`] (fleet + `MramLayout` + metrics) for its
+//! whole lifetime, so a workload can **load** its dataset into MRAM once
+//! and then **execute** many requests against the warm state — paying the
+//! big input distribution a single time instead of per run.
+//!
+//! [`Session::execute_batch`] additionally pipelines a request stream:
+//! with pipelining enabled, the host-side staging of request *i + 1*
+//! (input generation + partitioning into per-DPU buffers) runs
+//! concurrently with the execution of request *i* (the fleet executor's
+//! two-stage [`FleetExecutor::overlap`] schedule), and the modeled
+//! CPU-DPU push time of request *i + 1* is overlapped under the modeled
+//! launch window of request *i* in whole-**rank** chunks — transfers to
+//! different ranks are serialized (§5.1.1), so a rank's push either fits
+//! under the remaining launch window or waits. The hidden seconds
+//! accumulate in [`super::TimeBreakdown::overlapped`]; the component
+//! buckets keep their full values and `TimeBreakdown::total()` subtracts
+//! the credit. The serial executor runs the same schedule without wallclock
+//! overlap (fleet stage, then host stage) and is the bit-identical
+//! reference: staging is pure host work, so the two orders cannot
+//! diverge, and the overlap credit is computed from modeled seconds that
+//! are themselves executor-independent.
+
+use super::executor::FleetExecutor;
+use super::{LaunchStats, PimSet};
+use crate::dpu::Ctx;
+use std::any::Any;
+use std::sync::Arc;
+
+/// A persistent serving session: one allocated fleet, resident MRAM
+/// state, and accumulated metrics across many requests.
+pub struct Session {
+    /// The fleet this session keeps warm. Metrics accumulate across
+    /// requests; `set.reset_metrics()` starts a new measurement window
+    /// without touching MRAM.
+    pub set: PimSet,
+    /// Tasklets per DPU for this session's launches.
+    pub n_tasklets: u32,
+    /// Total DPU pipeline instructions across all launches (the
+    /// `BenchResult::dpu_instrs` feed).
+    pub instrs: u64,
+    /// Requests completed through [`Session::execute_batch`].
+    pub requests_done: u64,
+    pipeline: bool,
+    state: Option<Box<dyn Any + Send>>,
+    loaded: Option<&'static str>,
+}
+
+impl Session {
+    /// Wrap an allocated fleet. The set must come from the same
+    /// `RunConfig` the workload's `prepare` saw (partitioning is derived
+    /// from the DPU count).
+    pub fn new(set: PimSet, n_tasklets: u32) -> Self {
+        Session {
+            set,
+            n_tasklets,
+            instrs: 0,
+            requests_done: 0,
+            pipeline: false,
+            state: None,
+            loaded: None,
+        }
+    }
+
+    /// Enable/disable pipelined batching (builder style).
+    pub fn with_pipeline(mut self, on: bool) -> Self {
+        self.pipeline = on;
+        self
+    }
+
+    pub fn set_pipeline(&mut self, on: bool) {
+        self.pipeline = on;
+    }
+
+    pub fn pipelined(&self) -> bool {
+        self.pipeline
+    }
+
+    // ------------------------------------------------------ workload state
+
+    /// Record which workload's dataset is resident in MRAM.
+    pub fn mark_loaded(&mut self, name: &'static str) {
+        self.loaded = Some(name);
+    }
+
+    /// Workload currently loaded into this session, if any.
+    pub fn loaded(&self) -> Option<&'static str> {
+        self.loaded
+    }
+
+    /// Install the workload's session state (symbols + per-request
+    /// scratch). Replaces any previous state.
+    pub fn put_state<S: Any + Send>(&mut self, state: S) {
+        self.state = Some(Box::new(state));
+    }
+
+    /// Borrow the workload state installed by `load`.
+    pub fn state<S: Any>(&self) -> &S {
+        self.state
+            .as_ref()
+            .and_then(|b| b.downcast_ref::<S>())
+            .unwrap_or_else(|| {
+                panic!(
+                    "session state is not a {} (loaded: {:?})",
+                    std::any::type_name::<S>(),
+                    self.loaded
+                )
+            })
+    }
+
+    /// Mutably borrow the workload state.
+    pub fn state_mut<S: Any>(&mut self) -> &mut S {
+        let loaded = self.loaded;
+        self.state
+            .as_mut()
+            .and_then(|b| b.downcast_mut::<S>())
+            .unwrap_or_else(|| {
+                panic!(
+                    "session state is not a {} (loaded: {loaded:?})",
+                    std::any::type_name::<S>()
+                )
+            })
+    }
+
+    // ------------------------------------------------------------ launches
+
+    /// [`PimSet::launch`] with session-level instruction accounting.
+    pub fn launch<F>(&mut self, n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        let stats = self.set.launch(n_tasklets, f);
+        self.instrs += stats.total_instrs();
+        stats
+    }
+
+    /// [`PimSet::launch_seq`] with session-level instruction accounting.
+    pub fn launch_seq<F>(&mut self, n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        let stats = self.set.launch_seq(n_tasklets, f);
+        self.instrs += stats.total_instrs();
+        stats
+    }
+
+    /// [`PimSet::launch_on`] with session-level instruction accounting.
+    pub fn launch_on<F>(&mut self, dpu_ids: &[usize], n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        let stats = self.set.launch_on(dpu_ids, n_tasklets, f);
+        self.instrs += stats.total_instrs();
+        stats
+    }
+
+    // ------------------------------------------------------------- batches
+
+    /// Run a request batch through two caller-provided stages:
+    ///
+    /// * `stage(req) -> S` — pure host-side staging (input generation +
+    ///   partitioning into per-DPU buffers); must not touch the session;
+    /// * `exec(session, req, staged)` — push the staged input and launch
+    ///   kernels against the resident state.
+    ///
+    /// Serialized mode runs `stage`/`exec` strictly alternating. With
+    /// [`Session::pipelined`] on, the staging of request *i + 1* runs
+    /// under the execution of request *i* (the executor's two-stage
+    /// overlap schedule), and the modeled CPU-DPU push seconds of each
+    /// warm request are hidden under the previous request's launch
+    /// window in whole-rank chunks ([`super::TimeBreakdown::overlapped`]).
+    pub fn execute_batch<R, S, FS, FE>(
+        &mut self,
+        reqs: &[R],
+        stage: FS,
+        mut exec: FE,
+    ) -> Vec<LaunchStats>
+    where
+        R: Sync,
+        S: Send,
+        FS: Fn(&R) -> S + Sync,
+        FE: FnMut(&mut Session, &R, S) -> LaunchStats,
+    {
+        let fleet: Arc<dyn FleetExecutor> = Arc::clone(&self.set.exec);
+        let pipeline = self.pipeline;
+        let rank = self.set.cfg.dpus_per_rank().max(1) as usize;
+        let n_ranks = (self.set.n_dpus() as usize).div_ceil(rank);
+        let mut out = Vec::with_capacity(reqs.len());
+        let mut staged: Option<S> = reqs.first().map(|r| stage(r));
+        // modeled launch seconds of the previous request — the window the
+        // next request's push may hide under
+        let mut headroom = 0.0f64;
+        for (i, req) in reqs.iter().enumerate() {
+            let cur = staged.take().expect("request input staged");
+            let before = self.set.metrics;
+            let stats = if pipeline {
+                if let Some(next_req) = reqs.get(i + 1) {
+                    let mut stats_slot: Option<LaunchStats> = None;
+                    let mut next_slot: Option<S> = None;
+                    {
+                        let this = &mut *self;
+                        let exec_ref = &mut exec;
+                        let stats_ref = &mut stats_slot;
+                        let stage_ref = &stage;
+                        let next_ref = &mut next_slot;
+                        fleet.overlap(
+                            Box::new(move || {
+                                *stats_ref = Some(exec_ref(this, req, cur));
+                            }),
+                            Box::new(move || {
+                                *next_ref = Some(stage_ref(next_req));
+                            }),
+                        );
+                    }
+                    staged = next_slot;
+                    stats_slot.expect("fleet stage must run")
+                } else {
+                    exec(self, req, cur)
+                }
+            } else {
+                let stats = exec(self, req, cur);
+                staged = reqs.get(i + 1).map(|r| stage(r));
+                stats
+            };
+            if pipeline && i > 0 {
+                let push = self.set.metrics.cpu_dpu - before.cpu_dpu;
+                self.set.metrics.overlapped += rank_granular_overlap(push, headroom, n_ranks);
+            }
+            headroom = self.set.metrics.dpu - before.dpu;
+            self.requests_done += 1;
+            out.push(stats);
+        }
+        out
+    }
+}
+
+/// Seconds of a CPU-DPU push that fit under a `window_secs` launch
+/// window, in whole-rank chunks. Pushes to different ranks are serialized
+/// (§5.1.1), so the schedulable unit is one rank's push — a chunk either
+/// fits entirely in the remaining window or is not overlapped.
+///
+/// This is a deliberate **what-if of the paper's §6 recommendation**: the
+/// shipping UPMEM runtime cannot touch a rank's MRAM while its DPUs run,
+/// so on today's hardware the credit is unrealizable — the model answers
+/// "what would double-buffered request symbols plus launch-concurrent
+/// transfers buy", the improvement §6 argues for. Functionally nothing
+/// races: pushes are applied in strict serial order between launches, and
+/// only the modeled seconds are credited.
+fn rank_granular_overlap(push_secs: f64, window_secs: f64, n_ranks: usize) -> f64 {
+    if push_secs <= 0.0 || window_secs <= 0.0 || n_ranks == 0 {
+        return 0.0;
+    }
+    let chunk = push_secs / n_ranks as f64;
+    if chunk <= 0.0 {
+        return 0.0;
+    }
+    let fitting = (window_secs / chunk).floor().min(n_ranks as f64);
+    (chunk * fitting).min(push_secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::SystemConfig;
+    use crate::coordinator::{ExecChoice, Symbol, TimeBreakdown};
+
+    fn session(exec: ExecChoice) -> Session {
+        Session::new(
+            PimSet::allocate_with(SystemConfig::p21_rank(), 4, exec.build()),
+            8,
+        )
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let mut s = session(ExecChoice::Serial);
+        s.put_state((7u64, vec![1i32, 2]));
+        s.mark_loaded("X");
+        assert_eq!(s.loaded(), Some("X"));
+        assert_eq!(s.state::<(u64, Vec<i32>)>().0, 7);
+        s.state_mut::<(u64, Vec<i32>)>().1.push(3);
+        assert_eq!(s.state::<(u64, Vec<i32>)>().1, vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "session state is not a")]
+    fn state_type_mismatch_panics() {
+        let mut s = session(ExecChoice::Serial);
+        s.put_state(1u8);
+        let _ = s.state::<u64>();
+    }
+
+    #[test]
+    fn launch_wrappers_accumulate_instrs() {
+        let mut s = session(ExecChoice::Serial);
+        s.launch_seq(2, |_d, ctx| ctx.compute(50));
+        let after_one = s.instrs;
+        assert!(after_one > 0);
+        s.launch(2, |_d, ctx| ctx.compute(50));
+        assert_eq!(s.instrs, 2 * after_one);
+    }
+
+    /// One synthetic "workload": each request pushes a buffer and runs a
+    /// kernel over it. Used to pin the batch schedules against each other.
+    fn run_batch(exec: ExecChoice, pipeline: bool) -> (Vec<Vec<i64>>, TimeBreakdown, u64) {
+        let mut sess = session(exec).with_pipeline(pipeline);
+        let sym: Symbol<i64> = sess.set.symbol::<i64>(64);
+        let out_sym: Symbol<i64> = sess.set.symbol::<i64>(64);
+        sess.put_state(Vec::<Vec<i64>>::new());
+        let reqs: Vec<u64> = (0..4).collect();
+        sess.execute_batch(
+            &reqs,
+            |r| -> Vec<Vec<i64>> {
+                (0..4u64).map(|d| vec![(r * 10 + d) as i64; 64]).collect()
+            },
+            |s: &mut Session, _r: &u64, bufs: Vec<Vec<i64>>| {
+                s.set.xfer(sym).to().equal(&bufs);
+                let stats = s.launch_seq(2, |_d, ctx| {
+                    let w = ctx.mem_alloc(512);
+                    ctx.mram_read(sym.off(), w, 512);
+                    let v: Vec<i64> = ctx.wram_get(w, 64);
+                    let doubled: Vec<i64> = v.iter().map(|x| x * 2).collect();
+                    ctx.wram_set(w, &doubled);
+                    ctx.compute(64 * 20);
+                    ctx.mram_write(w, out_sym.off(), 512);
+                });
+                let got = s.set.xfer(out_sym).from().equal(64);
+                s.state_mut::<Vec<Vec<i64>>>().push(got.into_iter().flatten().collect());
+                stats
+            },
+        );
+        let results = std::mem::take(sess.state_mut::<Vec<Vec<i64>>>());
+        (results, sess.set.metrics, sess.requests_done)
+    }
+
+    #[test]
+    fn pipelined_batch_bit_identical_to_serialized_except_overlap() {
+        let (r_ser, m_ser, n_ser) = run_batch(ExecChoice::Serial, false);
+        let (r_pip, m_pip, n_pip) = run_batch(ExecChoice::Serial, true);
+        assert_eq!(r_ser, r_pip, "pipelining must not change results");
+        assert_eq!(n_ser, n_pip);
+        // every bucket identical; only the overlap credit differs
+        assert_eq!(m_ser.dpu.to_bits(), m_pip.dpu.to_bits());
+        assert_eq!(m_ser.cpu_dpu.to_bits(), m_pip.cpu_dpu.to_bits());
+        assert_eq!(m_ser.dpu_cpu.to_bits(), m_pip.dpu_cpu.to_bits());
+        assert_eq!(m_ser.inter_dpu.to_bits(), m_pip.inter_dpu.to_bits());
+        assert_eq!(m_ser.bytes_to_dpu, m_pip.bytes_to_dpu);
+        assert_eq!(m_ser.overlapped, 0.0);
+        assert!(m_pip.overlapped > 0.0, "warm pushes must hide under launches");
+        assert!(m_pip.total() < m_ser.total());
+        assert!(m_pip.overlapped <= m_pip.cpu_dpu, "cannot hide more than the pushes");
+    }
+
+    #[test]
+    fn batch_bit_identical_across_executors() {
+        for pipeline in [false, true] {
+            let (r_s, m_s, _) = run_batch(ExecChoice::Serial, pipeline);
+            let (r_p, m_p, _) = run_batch(ExecChoice::Parallel(3), pipeline);
+            assert_eq!(r_s, r_p, "pipeline={pipeline}");
+            assert_eq!(m_s, m_p, "pipeline={pipeline}");
+        }
+    }
+
+    #[test]
+    fn rank_granularity_of_overlap() {
+        // one rank: all-or-nothing
+        assert_eq!(rank_granular_overlap(1.0, 0.5, 1), 0.0);
+        assert_eq!(rank_granular_overlap(1.0, 1.5, 1), 1.0);
+        // four ranks: whole chunks of 0.25
+        assert_eq!(rank_granular_overlap(1.0, 0.6, 4), 0.5);
+        assert_eq!(rank_granular_overlap(1.0, 10.0, 4), 1.0);
+        assert_eq!(rank_granular_overlap(0.0, 1.0, 4), 0.0);
+        assert_eq!(rank_granular_overlap(1.0, 0.0, 4), 0.0);
+    }
+}

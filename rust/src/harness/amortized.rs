@@ -1,0 +1,85 @@
+//! `amortized` — the serving-style experiment the paper's §6
+//! recommendations motivate: amortize input distribution across kernel
+//! invocations and overlap CPU-DPU transfers with computation.
+//!
+//! For a set of workloads this reports, per benchmark:
+//! * the **cold** load cost (allocation + resident input push) a one-shot
+//!   run pays on every call;
+//! * the **warm** steady-state per-request breakdown against a persistent
+//!   `coordinator::Session`;
+//! * the amortization factor (n one-shot runs vs cold + n warm requests);
+//! * **serialized vs pipelined** batch totals, with the modeled seconds
+//!   the rank-granular overlap schedule hides under kernel launches —
+//!   results are bit-identical between the two schedules by construction
+//!   (see `rust/tests/executor_equivalence.rs`).
+
+use crate::arch::SystemConfig;
+use crate::prim::common::{ExecChoice, RunConfig};
+use crate::prim::workload::{serve, workload_by_name};
+use crate::util::table::Table;
+
+/// Benchmarks shown in the experiment: the query-style set that gains
+/// true multi-request batching, plus one streaming representative.
+const SERVED: [&str; 5] = ["BS", "TS", "GEMV", "MLP", "VA"];
+
+pub fn amortized(quick: bool) -> Table {
+    let names: &[&str] = if quick { &SERVED[..2] } else { &SERVED };
+    let requests = if quick { 4 } else { 8 };
+    let mut t = Table::new(
+        &format!("amortized — cold vs warm vs pipelined serving ({requests} requests)"),
+        &[
+            "bench",
+            "cold_ms",
+            "warm_req_ms",
+            "warm_cpu_dpu_ms",
+            "amortize_x",
+            "serial_batch_ms",
+            "pipelined_batch_ms",
+            "overlap_hidden_ms",
+            "verified",
+        ],
+    );
+    for name in names {
+        let w = workload_by_name(name).expect("known workload");
+        let rc = RunConfig {
+            sys: SystemConfig::p21_rank(),
+            n_dpus: if quick { 16 } else { 32 },
+            n_tasklets: w.best_tasklets(),
+            scale: super::harness_scale(name) * if quick { 0.1 } else { 0.25 },
+            seed: 42,
+            exec: ExecChoice::Auto,
+        };
+        let ser = serve(w.as_ref(), &rc, requests, false);
+        let pip = serve(w.as_ref(), &rc, requests, true);
+        let steady = ser.steady_state();
+        let oneshot = (ser.cold.total() + steady.total()) * requests as f64;
+        let amortized_total = ser.cold.total() + ser.warm.total();
+        t.row(vec![
+            name.to_string(),
+            Table::fmt(ser.cold.total() * 1e3),
+            Table::fmt(steady.total() * 1e3),
+            Table::fmt(steady.cpu_dpu * 1e3),
+            Table::fmt(oneshot / amortized_total.max(f64::MIN_POSITIVE)),
+            Table::fmt(ser.warm.total() * 1e3),
+            Table::fmt(pip.warm.total() * 1e3),
+            Table::fmt(pip.warm.overlapped * 1e3),
+            (ser.verified && pip.verified).to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_table_has_expected_shape() {
+        let t = amortized(true);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.headers.len(), 9);
+        for row in &t.rows {
+            assert_eq!(row[8], "true", "{} must verify", row[0]);
+        }
+    }
+}

@@ -3,6 +3,7 @@
 //! Each generator returns a [`crate::util::table::Table`]; the CLI prints
 //! it and saves `results/<id>.csv`. The full index lives in DESIGN.md §4.
 
+pub mod amortized;
 pub mod compare;
 pub mod figures;
 pub mod future;
@@ -14,11 +15,12 @@ use std::path::Path;
 
 /// All experiment ids the harness can regenerate (`future` = the §6
 /// recommendations implemented as an ablation, beyond the paper's own
-/// evaluation).
-pub const ALL_IDS: [&str; 22] = [
+/// evaluation; `amortized` = the cold/warm/pipelined serving study over
+/// persistent sessions).
+pub const ALL_IDS: [&str; 23] = [
     "table1", "table2", "table3", "table4", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
     "fig10", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
-    "fig22", "future",
+    "fig22", "future", "amortized",
 ];
 
 /// Per-benchmark dataset scale used by the harness (relative to Table 3
@@ -70,6 +72,7 @@ pub fn run_id(id: &str, outdir: &Path, quick: bool) -> anyhow::Result<()> {
             future::future_benches(quick),
             future::future_interdpu(quick),
         ],
+        "amortized" => vec![amortized::amortized(quick)],
         other => anyhow::bail!("unknown experiment id '{other}' (see `repro list`)"),
     };
     for (i, t) in tables.iter().enumerate() {

@@ -8,6 +8,9 @@
 //! repro micro                        all §3 microbenchmark figures (4-10)
 //! repro prim [--bench N] [--dpus D] [--tasklets T] [--scale S]
 //!            [--executor serial|parallel] [--threads N]
+//!            [--json] [--quick]      --json writes BENCH_PRIM.json
+//! repro serve --bench N [--requests R] [--pipeline] [--dpus D]
+//!            [--tasklets T] [--scale S]   persistent-session serving
 //! repro compare [--quick]            Fig. 16 + Fig. 17
 //! repro estimate --dpus N            fleet estimator via the PJRT artifact
 //! repro all [--quick]                everything, CSVs into --outdir
@@ -17,9 +20,10 @@
 use prim_pim::arch::SystemConfig;
 use prim_pim::coordinator::ExecChoice;
 use prim_pim::harness::{self, ALL_IDS};
-use prim_pim::prim::common::{all_benches, bench_by_name, RunConfig};
+use prim_pim::prim::common::{all_benches, bench_by_name, BenchResult, RunConfig};
+use prim_pim::prim::workload::{serve, workload_by_name};
 use prim_pim::runtime;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 struct Args {
     flags: std::collections::HashMap<String, String>,
@@ -49,21 +53,102 @@ fn parse_args(argv: &[String]) -> Args {
 }
 
 impl Args {
+    /// Typed flag lookup. A *present but unparsable* value is a hard error
+    /// (exit 2), matching the `--executor` validation — `--dpus abc` must
+    /// not silently fall back to the default.
     fn flag<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
-        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        match self.flags.get(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!(
+                    "invalid value '{v}' for --{name} (expected a {})",
+                    std::any::type_name::<T>()
+                );
+                std::process::exit(2);
+            }),
+        }
     }
 
     fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
     }
+
+    /// Fleet executor resolution: CLI flags win, else
+    /// `PRIM_EXECUTOR`/`PRIM_THREADS`. Unlike the lenient env-var path, an
+    /// explicit `--executor` value must be valid — a typo must not
+    /// silently select parallel.
+    fn exec_choice(&self) -> ExecChoice {
+        if self.has("executor") || self.has("threads") {
+            let name = self.flags.get("executor").map(String::as_str);
+            if let Some(n) = name {
+                if !n.eq_ignore_ascii_case("serial") && !n.eq_ignore_ascii_case("parallel") {
+                    eprintln!("unknown --executor '{n}' (expected serial|parallel)");
+                    std::process::exit(2);
+                }
+            }
+            ExecChoice::parse(name, self.flags.get("threads").map(String::as_str))
+        } else {
+            ExecChoice::Auto
+        }
+    }
 }
 
 fn usage() -> ! {
     eprintln!(
-        "usage: repro <list|table|figure|micro|prim|compare|estimate|all> [args]\n\
+        "usage: repro <list|table|figure|micro|prim|serve|compare|estimate|all> [args]\n\
          run `repro list` for the experiment index"
     );
     std::process::exit(2);
+}
+
+/// System picked from the DPU count: one rank up to 64, else the
+/// 2,556-DPU machine.
+fn system_for(n_dpus: u32) -> SystemConfig {
+    if n_dpus <= 64 {
+        SystemConfig::p21_rank()
+    } else {
+        SystemConfig::p21_2556()
+    }
+}
+
+/// Escape nothing fancy: our names are plain ASCII identifiers, so JSON
+/// string encoding is direct quoting.
+fn bench_results_json(results: &[BenchResult]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in results.iter().enumerate() {
+        let b = &r.breakdown;
+        out.push_str(&format!(
+            "  {{\"name\": \"{}\", \"verified\": {}, \"work_items\": {}, \"dpu_instrs\": {},\n   \
+             \"dpu_secs\": {:e}, \"inter_dpu_secs\": {:e}, \"cpu_dpu_secs\": {:e}, \
+             \"dpu_cpu_secs\": {:e}, \"total_secs\": {:e},\n   \
+             \"bytes_to_dpu\": {}, \"bytes_from_dpu\": {}, \"bytes_inter\": {}, \
+             \"launches\": {}}}{}\n",
+            r.name,
+            r.verified,
+            r.work_items,
+            r.dpu_instrs,
+            b.dpu,
+            b.inter_dpu,
+            b.cpu_dpu,
+            b.dpu_cpu,
+            b.total(),
+            b.bytes_to_dpu,
+            b.bytes_from_dpu,
+            b.bytes_inter,
+            b.launches,
+            if i + 1 < results.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+fn write_bench_json(outdir: &Path, results: &[BenchResult]) -> anyhow::Result<()> {
+    std::fs::create_dir_all(outdir)?;
+    let path = outdir.join("BENCH_PRIM.json");
+    std::fs::write(&path, bench_results_json(results))?;
+    println!("wrote {}", path.display());
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -101,31 +186,17 @@ fn main() -> anyhow::Result<()> {
                     all_benches()
                 };
             let n_dpus: u32 = args.flag("dpus", 64);
-            let sys = if n_dpus <= 64 {
-                SystemConfig::p21_rank()
-            } else {
-                SystemConfig::p21_2556()
-            };
-            // fleet executor: CLI flags win, else PRIM_EXECUTOR/PRIM_THREADS.
-            // Unlike the lenient env-var path, an explicit --executor value
-            // must be valid — a typo must not silently select parallel.
-            let exec = if args.has("executor") || args.has("threads") {
-                let name = args.flags.get("executor").map(String::as_str);
-                if let Some(n) = name {
-                    if !n.eq_ignore_ascii_case("serial") && !n.eq_ignore_ascii_case("parallel") {
-                        eprintln!("unknown --executor '{n}' (expected serial|parallel)");
-                        std::process::exit(2);
-                    }
-                }
-                ExecChoice::parse(name, args.flags.get("threads").map(String::as_str))
-            } else {
-                ExecChoice::Auto
-            };
+            let sys = system_for(n_dpus);
+            let exec = args.exec_choice();
+            // --quick shrinks every dataset 20× below the harness scale
+            // (the CI smoke setting behind the BENCH_PRIM.json artifact)
+            let scale_factor = if quick { 0.05 } else { 1.0 };
+            let mut results: Vec<BenchResult> = Vec::new();
             for b in benches {
                 let rc = RunConfig {
                     n_dpus,
                     n_tasklets: args.flag("tasklets", b.best_tasklets()),
-                    scale: args.flag("scale", harness::harness_scale(b.name())),
+                    scale: args.flag("scale", harness::harness_scale(b.name()) * scale_factor),
                     seed: args.flag("seed", 42),
                     sys: sys.clone(),
                     exec,
@@ -140,7 +211,61 @@ fn main() -> anyhow::Result<()> {
                     r.work_items,
                     t0.elapsed().as_secs_f64(),
                 );
+                results.push(r);
             }
+            if args.has("json") {
+                write_bench_json(&outdir, &results)?;
+            }
+        }
+        "serve" => {
+            let name = args.flags.get("bench").cloned().unwrap_or_else(|| {
+                eprintln!("serve requires --bench <name> (e.g. --bench BS)");
+                std::process::exit(2);
+            });
+            let w = workload_by_name(&name).unwrap_or_else(|| {
+                eprintln!("unknown benchmark {name}");
+                std::process::exit(2);
+            });
+            let n_requests: usize = args.flag("requests", 8);
+            let pipeline = args.has("pipeline");
+            let n_dpus: u32 = args.flag("dpus", 64);
+            let rc = RunConfig {
+                n_dpus,
+                n_tasklets: args.flag("tasklets", w.best_tasklets()),
+                scale: args.flag("scale", harness::harness_scale(w.name())),
+                seed: args.flag("seed", 42),
+                sys: system_for(n_dpus),
+                exec: args.exec_choice(),
+            };
+            let t0 = std::time::Instant::now();
+            let rep = serve(w.as_ref(), &rc, n_requests, pipeline);
+            println!(
+                "{} · {} DPUs · {} requests · {} schedule · [{}]",
+                rep.name,
+                n_dpus,
+                n_requests,
+                if pipeline { "pipelined" } else { "serialized" },
+                if rep.verified { "ok" } else { "VERIFY-FAIL" },
+            );
+            println!("cold load : {}", rep.cold.fmt_ms());
+            for (i, r) in rep.requests.iter().enumerate() {
+                println!("request {i:>2}: {}", r.fmt_ms());
+            }
+            let steady = rep.steady_state();
+            println!("steady    : {}", steady.fmt_ms());
+            let amortized = rep.cold.total() + rep.warm.total();
+            let oneshot = (rep.cold.total() + steady.total()) * n_requests as f64;
+            println!(
+                "warm total {:.3} ms (overlap hidden {:.3} ms) | cold+warm {:.3} ms vs {:.3} ms \
+                 for {} one-shot runs ({:.2}x)",
+                rep.warm.total() * 1e3,
+                rep.warm.overlapped * 1e3,
+                amortized * 1e3,
+                oneshot * 1e3,
+                n_requests,
+                oneshot / amortized.max(f64::MIN_POSITIVE),
+            );
+            println!("sim wall {:.2}s", t0.elapsed().as_secs_f64());
         }
         "compare" => {
             harness::run_id("fig16", &outdir, quick)?;

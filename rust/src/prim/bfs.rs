@@ -7,12 +7,19 @@
 //! of the visited bit-vector and produces a next-frontier bit-vector from
 //! the neighbor lists of its owned frontier vertices (mutex-protected
 //! updates).
+//!
+//! Lifecycle: the CSR slices are resident; each request traverses from a
+//! fresh root (request 0 keeps the paper's max-degree root), paying only a
+//! small bit-vector reset instead of re-pushing the graph.
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
+use super::workload::{Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::chunk_ranges;
+use crate::coordinator::{chunk_ranges, LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
-use crate::util::data::rmat_graph;
+use crate::util::data::{rmat_graph, Graph};
+use crate::util::Rng;
+use std::ops::Range;
 
 /// loc-gowalla statistics: ~197 K vertices, ~1.9 M (directed) edges.
 const PAPER_V: usize = 196_591;
@@ -20,7 +27,39 @@ const PAPER_E: usize = 1_900_654;
 
 pub struct Bfs;
 
-impl PrimBench for Bfs {
+pub struct BfsData {
+    g: Graph,
+    v: usize,
+    /// The paper's root: the maximum-degree vertex (request 0 uses it).
+    max_degree_root: usize,
+}
+
+struct BfsState {
+    rp_sym: Symbol<u32>,
+    ci_sym: Symbol<u32>,
+    fr_sym: Symbol<u64>,
+    nxvis_sym: Symbol<u64>,
+    words: usize,
+    row_parts: Vec<Range<usize>>,
+    /// Most recent traversal (root + distances), for retrieval.
+    cur: Option<BfsOut>,
+}
+
+/// One request's staged input: the traversal root.
+pub struct BfsStaged {
+    pub root: usize,
+}
+
+/// Result of the last traversal. BFS's distances are assembled host-side
+/// during the level loop (the inter-DPU phase *is* the retrieval), so
+/// `retrieve` reports them without further transfers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BfsOut {
+    pub root: usize,
+    pub dist: Vec<u32>,
+}
+
+impl Workload for Bfs {
     fn name(&self) -> &'static str {
         "BFS"
     }
@@ -38,79 +77,129 @@ impl PrimBench for Bfs {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
         // keep the three WRAM bit-vectors (3 × V/8 bytes) plus per-tasklet
         // buffers inside the 64 KB WRAM: cap vertices at 96 K
         let v = rc.scaled(PAPER_V).min(96 * 1024);
         let e = rc.scaled(PAPER_E).min(v * 12);
         let g = rmat_graph(v, e, rc.seed);
-        let src = (0..v).max_by_key(|&u| g.row_ptr[u + 1] - g.row_ptr[u]).unwrap_or(0);
-        let dist_ref = g.bfs_ref(src);
+        let max_degree_root =
+            (0..v).max_by_key(|&u| g.row_ptr[u + 1] - g.row_ptr[u]).unwrap_or(0);
+        let work = g.n_edges() as u64;
+        Dataset::new(work, BfsData { g, v, max_degree_root })
+    }
 
-        let mut set = rc.alloc();
-        let nd = rc.n_dpus as usize;
-        let parts = chunk_ranges(v, nd);
-        let words = v.div_ceil(64);
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        let d = ds.get::<BfsData>();
+        let nd = sess.set.n_dpus() as usize;
+        let parts = chunk_ranges(d.v, nd);
+        let words = d.v.div_ceil(64);
 
         // input distribution: per-DPU CSR slices (serial copies — sizes
         // differ, §5.1.1). Fleet-wide symbols sized for the widest slice:
         //   rp_sym   rebased row_ptr (rows+1 u32)
         //   ci_sym   neighbor lists (u32)
         //   fr_sym   current frontier bit-vector (words u64)
-        //   nx_sym   next frontier bit-vector
-        //   vis_sym  visited bit-vector
+        //   nxvis    next frontier + visited bit-vectors (adjacent, so
+        //            both reset together in one transfer per request)
         let max_rows = parts.iter().map(|r| r.len()).max().unwrap_or(0);
         let max_deg = parts
             .iter()
-            .map(|r| (g.row_ptr[r.end] - g.row_ptr[r.start]) as usize)
+            .map(|r| (d.g.row_ptr[r.end] - d.g.row_ptr[r.start]) as usize)
             .max()
             .unwrap_or(0);
-        let rp_sym = set.symbol::<u32>(max_rows + 1);
-        let ci_sym = set.symbol::<u32>(max_deg);
-        let fr_sym = set.symbol::<u64>(words);
-        // next + visited adjacent, so both zero together in one transfer
-        let nxvis_sym = set.symbol::<u64>(2 * words);
+        let rp_sym = sess.set.symbol::<u32>(max_rows + 1);
+        let ci_sym = sess.set.symbol::<u32>(max_deg);
+        let fr_sym = sess.set.symbol::<u64>(words);
+        let nxvis_sym = sess.set.symbol::<u64>(2 * words);
+        for (i, r) in parts.iter().enumerate() {
+            let base = d.g.row_ptr[r.start];
+            let rp: Vec<u32> = d.g.row_ptr[r.start..=r.end].iter().map(|x| x - base).collect();
+            let deg = (d.g.row_ptr[r.end] - base) as usize;
+            let ci = d.g.col_idx[base as usize..base as usize + deg].to_vec();
+            sess.set.xfer(rp_sym).to().one(i, &rp);
+            sess.set.xfer(ci_sym).to().one(i, &ci);
+        }
+        sess.put_state(BfsState {
+            rp_sym,
+            ci_sym,
+            fr_sym,
+            nxvis_sym,
+            words,
+            row_parts: parts,
+            cur: None,
+        });
+        sess.mark_loaded("BFS");
+    }
+
+    fn stage(&self, ds: &Dataset, req: &Request) -> Staged {
+        let d = ds.get::<BfsData>();
+        let root = if req.id == 0 {
+            d.max_degree_root
+        } else {
+            // a fresh seeded root with at least one edge (else the paper's)
+            let mut rng = Rng::new(req.seed);
+            let cand = rng.below(d.v as u64) as usize;
+            if d.g.row_ptr[cand + 1] > d.g.row_ptr[cand] {
+                cand
+            } else {
+                d.max_degree_root
+            }
+        };
+        Staged::new(BfsStaged { root })
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        staged: Staged,
+    ) -> LaunchStats {
+        let d = ds.get::<BfsData>();
+        let BfsStaged { root } = staged.take::<BfsStaged>();
+        let (rp_sym, ci_sym, fr_sym, nxvis_sym, words, row_parts) = {
+            let st = sess.state::<BfsState>();
+            (st.rp_sym, st.ci_sym, st.fr_sym, st.nxvis_sym, st.words, st.row_parts.clone())
+        };
         let nx_sym = nxvis_sym.slice(0, words);
         let vis_sym = nxvis_sym.slice(words, words);
-        let mut row_parts = Vec::with_capacity(nd);
-        for (d, r) in parts.iter().enumerate() {
-            let base = g.row_ptr[r.start];
-            let rp: Vec<u32> = g.row_ptr[r.start..=r.end].iter().map(|x| x - base).collect();
-            let deg = (g.row_ptr[r.end] - base) as usize;
-            let ci = g.col_idx[base as usize..base as usize + deg].to_vec();
-            set.xfer(rp_sym).to().one(d, &rp);
-            set.xfer(ci_sym).to().one(d, &ci);
-            // zero visited + next
-            set.xfer(nxvis_sym).to().one(d, &vec![0u64; 2 * words]);
-            row_parts.push(r.clone());
+        let nd = sess.set.n_dpus() as usize;
+        let v = d.v;
+
+        // per-request state reset: zero next + visited on every DPU (the
+        // only warm CPU-DPU cost — the graph itself stays resident)
+        let zeros = vec![0u64; 2 * words];
+        for i in 0..nd {
+            sess.set.xfer(nxvis_sym).to().one(i, &zeros);
         }
 
         // frontier bootstrap
         let mut frontier = vec![0u64; words];
-        frontier[src / 64] |= 1 << (src % 64);
+        frontier[root / 64] |= 1 << (root % 64);
         let mut dist = vec![u32::MAX; v];
-        dist[src] = 0;
+        dist[root] = 0;
         let mut level = 0u32;
-        let mut total_instrs = 0u64;
 
         let per_edge = (2 * isa::WRAM_LS + isa::ADDR_CALC) as u64
             + isa::op_instrs(DType::U64, Op::Bitwise) as u64;
 
+        let mut last_stats = LaunchStats::default();
         loop {
             // distribute the current frontier (inter-DPU phase). Each DPU
             // keeps a private copy it mutates, so these are serial per-DPU
             // copies, not a broadcast (matching the PrIM host loop).
             let frontier_now = frontier.clone();
-            for d in 0..nd {
-                set.xfer(fr_sym).inter().to().one(d, &frontier_now);
+            for i in 0..nd {
+                sess.set.xfer(fr_sym).inter().to().one(i, &frontier_now);
             }
 
             let (ci_off, fr_off, nx_off, vis_off) =
                 (ci_sym.off(), fr_sym.off(), nx_sym.off(), vis_sym.off());
             let rp_off = rp_sym.off();
             let row_parts_ref = &row_parts;
-            let stats = set.launch(rc.n_tasklets, |d, ctx: &mut Ctx| {
-                let rows = row_parts_ref[d].clone();
+            let stats = sess.launch(sess.n_tasklets, |dpu, ctx: &mut Ctx| {
+                let rows = row_parts_ref[dpu].clone();
                 let n_rows = rows.len();
                 // shared WRAM bit-vectors
                 let wfr = ctx.mem_alloc_shared(1, words * 8);
@@ -196,20 +285,20 @@ impl PrimBench for Bfs {
                     }
                 }
             });
-            total_instrs += stats.total_instrs();
+            last_stats = stats;
 
             // host gathers per-DPU next frontiers and unions sequentially
             level += 1;
             let mut next = vec![0u64; words];
-            for d in 0..nd {
-                let part = set.xfer(nx_sym).inter().from().one(d, words);
+            for i in 0..nd {
+                let part = sess.set.xfer(nx_sym).inter().from().one(i, words);
                 for (a, b) in next.iter_mut().zip(&part) {
                     *a |= *b;
                 }
                 // zero the DPU's next-frontier for the following level
-                set.xfer(nx_sym).inter().to().one(d, &vec![0u64; words]);
+                sess.set.xfer(nx_sym).inter().to().one(i, &vec![0u64; words]);
             }
-            set.host_merge((nd * words * 8) as u64, (nd * words) as u64);
+            sess.set.host_merge((nd * words * 8) as u64, (nd * words) as u64);
 
             // strip already-visited, assign distances
             let mut any = false;
@@ -235,21 +324,30 @@ impl PrimBench for Bfs {
             }
         }
 
-        let verified = dist == dist_ref;
+        sess.state_mut::<BfsState>().cur = Some(BfsOut { root, dist });
+        last_stats
+    }
 
-        BenchResult {
-            name: self.name(),
-            breakdown: set.metrics,
-            verified,
-            work_items: g.n_edges() as u64,
-            dpu_instrs: total_instrs,
-        }
+    fn retrieve(&self, sess: &mut Session, _ds: &Dataset) -> Output {
+        let out = sess
+            .state::<BfsState>()
+            .cur
+            .clone()
+            .expect("BFS retrieve before any execute");
+        Output::new(out)
+    }
+
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        let d = ds.get::<BfsData>();
+        let o = out.get::<BfsOut>();
+        o.dist == d.g.bfs_ref(o.root)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prim::common::PrimBench;
 
     #[test]
     fn verifies_small() {
@@ -285,5 +383,36 @@ mod tests {
             ..RunConfig::rank_default()
         };
         assert!(Bfs.run(&rc).verified);
+    }
+
+    /// Multi-root serving: each warm request traverses from a fresh root
+    /// against the resident graph, and verifies against the reference for
+    /// *that* root.
+    #[test]
+    fn serves_fresh_roots_against_resident_graph() {
+        let rc = RunConfig {
+            n_dpus: 2,
+            n_tasklets: 8,
+            scale: 0.001,
+            ..RunConfig::rank_default()
+        };
+        let ds = Bfs.prepare(&rc);
+        let mut sess = rc.session();
+        Bfs.load(&mut sess, &ds);
+        let graph_bytes = sess.set.metrics.bytes_to_dpu;
+        let mut roots = Vec::new();
+        for req in Request::stream(rc.seed, 3) {
+            let staged = Bfs.stage(&ds, &req);
+            Bfs.execute(&mut sess, &ds, &req, staged);
+            let out = Bfs.retrieve(&mut sess, &ds);
+            assert!(Bfs.verify(&ds, &out), "request {}", req.id);
+            roots.push(out.get::<BfsOut>().root);
+        }
+        assert_eq!(roots[0], ds.get::<BfsData>().max_degree_root);
+        // warm CPU-DPU traffic is only the per-request bit-vector reset,
+        // never the CSR slices
+        let words = ds.get::<BfsData>().v.div_ceil(64) as u64;
+        let resets = 3 * 2 * words * 8 * sess.set.n_dpus() as u64;
+        assert_eq!(sess.set.metrics.bytes_to_dpu, graph_bytes + resets);
     }
 }

@@ -5,12 +5,20 @@
 //! Random probes into the MRAM-resident array use fine-grained 8-B DMA —
 //! the access pattern that makes BS weak on GPUs (uncoalescible) and is
 //! why the 640-DPU system already beats the Titan V on it (§5.2).
+//!
+//! Lifecycle: the replicated sorted array is the big resident input; each
+//! request stages a fresh query batch (drawn from the array, so every
+//! query is findable) — the canonical query-serving workload: warm
+//! requests pay only the small query push, and pipelined batches hide it
+//! under the previous request's launch.
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
+use super::workload::{Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::{chunk_ranges, ragged_counts};
+use crate::coordinator::{chunk_ranges, ragged_counts, LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::data::sorted_with_queries;
+use crate::util::Rng;
 
 /// Paper dataset (Table 3): 2 M-element sorted array, 256 K queries.
 const PAPER_N: usize = 2_000_000;
@@ -18,7 +26,38 @@ const PAPER_Q: usize = 262_144;
 
 pub struct Bs;
 
-impl PrimBench for Bs {
+/// Host dataset: the sorted array plus the per-DPU query partition shape.
+pub struct BsData {
+    arr: Vec<i64>,
+    n: usize,
+    q: usize,
+    per_q: usize,
+    q_counts: Vec<usize>,
+    nd: usize,
+}
+
+struct BsState {
+    arr_sym: Symbol<i64>,
+    q_sym: Symbol<i64>,
+    out_sym: Symbol<i64>,
+    /// Queries of the most recent request (for verification).
+    cur_queries: Vec<i64>,
+}
+
+/// One request's staged input: the query batch, pre-partitioned.
+pub struct BsStaged {
+    pub queries: Vec<i64>,
+    pub qbufs: Vec<Vec<i64>>,
+}
+
+/// Retrieved result: per-DPU found positions plus the queries they answer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BsOut {
+    pub queries: Vec<i64>,
+    pub positions: Vec<Vec<i64>>,
+}
+
+impl Workload for Bs {
     fn name(&self) -> &'static str {
         "BS"
     }
@@ -36,37 +75,69 @@ impl PrimBench for Bs {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
         let n = rc.scaled(PAPER_N);
         let q = rc.scaled(PAPER_Q);
-        let (arr, queries) = sorted_with_queries(n, q, rc.seed);
-
-        let mut set = rc.alloc();
+        // queries are per-request (staged from the request seed), so only
+        // the array is generated here
+        let (arr, _) = sorted_with_queries(n, 0, rc.seed);
         let nd = rc.n_dpus as usize;
-        // the array is replicated in each DPU (CPU-DPU cost grows with
-        // DPU count — the paper's Fig. 13 note)
-        let arr_sym = set.symbol::<i64>(n);
-        set.xfer(arr_sym).to().broadcast(&arr);
         // queries partitioned contiguously; ragged transfers carry each
         // DPU's exact share (no "findable value" padding)
         let per_q = q.div_ceil(nd);
         let q_counts = ragged_counts(q, per_q, nd);
-        let qbufs: Vec<Vec<i64>> = (0..nd)
-            .map(|d| queries[(d * per_q).min(q)..((d + 1) * per_q).min(q)].to_vec())
-            .collect();
-        let q_sym = set.symbol::<i64>(per_q);
-        let out_sym = set.symbol::<i64>(per_q);
-        set.xfer(q_sym).to().ragged(&qbufs);
+        Dataset::new(q as u64, BsData { arr, n, q, per_q, q_counts, nd })
+    }
 
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        let d = ds.get::<BsData>();
+        assert_eq!(sess.set.n_dpus() as usize, d.nd, "session fleet must match the dataset");
+        // the array is replicated in each DPU (CPU-DPU cost grows with
+        // DPU count — the paper's Fig. 13 note)
+        let arr_sym = sess.set.symbol::<i64>(d.n);
+        let q_sym = sess.set.symbol::<i64>(d.per_q);
+        let out_sym = sess.set.symbol::<i64>(d.per_q);
+        sess.set.xfer(arr_sym).to().broadcast(&d.arr);
+        sess.put_state(BsState { arr_sym, q_sym, out_sym, cur_queries: Vec::new() });
+        sess.mark_loaded("BS");
+    }
+
+    fn stage(&self, ds: &Dataset, req: &Request) -> Staged {
+        let d = ds.get::<BsData>();
+        let mut rng = Rng::new(req.seed);
+        // queries drawn from the resident array: every query findable
+        let queries: Vec<i64> =
+            (0..d.q).map(|_| d.arr[rng.below(d.n as u64) as usize]).collect();
+        let qbufs: Vec<Vec<i64>> = (0..d.nd)
+            .map(|i| queries[(i * d.per_q).min(d.q)..((i + 1) * d.per_q).min(d.q)].to_vec())
+            .collect();
+        Staged::new(BsStaged { queries, qbufs })
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        staged: Staged,
+    ) -> LaunchStats {
+        let d = ds.get::<BsData>();
+        let BsStaged { queries, qbufs } = staged.take::<BsStaged>();
+        let (arr_sym, q_sym, out_sym) = {
+            let st = sess.state::<BsState>();
+            (st.arr_sym, st.q_sym, st.out_sym)
+        };
+        sess.set.xfer(q_sym).to().ragged(&qbufs);
+
+        let n = d.n;
         let per_step = (2 * isa::ADDR_CALC + isa::LOOP_CTRL) as u64
             + isa::op_instrs(DType::I64, Op::Cmp) as u64;
-
-        let q_counts_ref = &q_counts;
-        let stats = set.launch_seq(rc.n_tasklets, |d, ctx: &mut Ctx| {
+        let q_counts_ref = &d.q_counts;
+        let stats = sess.launch_seq(sess.n_tasklets, |dpu, ctx: &mut Ctx| {
             let wq = ctx.mem_alloc(1024);
             let we = ctx.mem_alloc(8);
             let wo = ctx.mem_alloc(8);
-            let my = chunk_ranges(q_counts_ref[d], ctx.n_tasklets as usize)
+            let my = chunk_ranges(q_counts_ref[dpu], ctx.n_tasklets as usize)
                 [ctx.tasklet_id as usize]
                 .clone();
             let mut k = my.start;
@@ -98,33 +169,44 @@ impl PrimBench for Bs {
                 k += cnt;
             }
         });
+        sess.state_mut::<BsState>().cur_queries = queries;
+        stats
+    }
 
-        let out = set.xfer(out_sym).from().ragged(&q_counts);
-        let mut verified = true;
-        'outer: for d in 0..nd {
-            let lo = (d * per_q).min(q);
-            for (i, gq) in (lo..lo + q_counts[d]).enumerate() {
-                let pos = out[d][i];
-                if pos < 0 || arr[pos as usize] != queries[gq] {
-                    verified = false;
-                    break 'outer;
+    fn retrieve(&self, sess: &mut Session, ds: &Dataset) -> Output {
+        let d = ds.get::<BsData>();
+        let out_sym = sess.state::<BsState>().out_sym;
+        let positions = sess.set.xfer(out_sym).from().ragged(&d.q_counts);
+        Output::new(BsOut { queries: sess.state::<BsState>().cur_queries.clone(), positions })
+    }
+
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        let d = ds.get::<BsData>();
+        let o = out.get::<BsOut>();
+        if o.queries.len() != d.q {
+            return false;
+        }
+        for dpu in 0..d.nd {
+            let lo = (dpu * d.per_q).min(d.q);
+            if o.positions[dpu].len() != d.q_counts[dpu] {
+                return false;
+            }
+            for (i, gq) in (lo..lo + d.q_counts[dpu]).enumerate() {
+                let pos = o.positions[dpu][i];
+                if pos < 0 || d.arr[pos as usize] != o.queries[gq] {
+                    return false;
                 }
             }
         }
-
-        BenchResult {
-            name: self.name(),
-            breakdown: set.metrics,
-            verified,
-            work_items: q as u64,
-            dpu_instrs: stats.total_instrs(),
-        }
+        true
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prim::common::PrimBench;
+    use crate::prim::workload::serve;
 
     #[test]
     fn verifies_small() {
@@ -167,5 +249,59 @@ mod tests {
         let t8 = mk(8);
         let t16 = mk(16);
         assert!(t8 / t16 < 1.30, "{}", t8 / t16);
+    }
+
+    /// Warm serving: the array broadcast happens once, and each warm
+    /// request's CPU-DPU time is only the small query push — the
+    /// amortization §6 recommends.
+    #[test]
+    fn warm_requests_amortize_the_array_broadcast() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.002,
+            ..RunConfig::rank_default()
+        };
+        let rep = serve(&Bs, &rc, 4, false);
+        assert!(rep.verified);
+        assert_eq!(rep.requests.len(), 4);
+        let steady = rep.steady_state();
+        // the array itself is never re-pushed; the remaining warm CPU-DPU
+        // time is only the query batch (array:queries ≈ 7.6:1 in Table 3)
+        assert!(
+            steady.cpu_dpu < rep.cold.cpu_dpu / 4.0,
+            "warm input push {} must be far below the cold load {}",
+            steady.cpu_dpu,
+            rep.cold.cpu_dpu
+        );
+        // every warm request pushes exactly the query batch
+        let d = Bs.prepare(&rc);
+        let q = d.get::<BsData>().q;
+        for r in &rep.requests {
+            assert_eq!(r.bytes_to_dpu, (q * 8) as u64);
+        }
+    }
+
+    /// The pipelined batch hides query pushes under launches: bit-identical
+    /// results, strictly smaller modeled total.
+    #[test]
+    fn pipelined_batching_hides_query_pushes() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.002,
+            ..RunConfig::rank_default()
+        };
+        let ser = serve(&Bs, &rc, 4, false);
+        let pip = serve(&Bs, &rc, 4, true);
+        assert!(ser.verified && pip.verified);
+        assert_eq!(
+            ser.output.get::<BsOut>(),
+            pip.output.get::<BsOut>(),
+            "pipelining must not change results"
+        );
+        assert_eq!(ser.warm.cpu_dpu.to_bits(), pip.warm.cpu_dpu.to_bits());
+        assert_eq!(ser.warm.dpu.to_bits(), pip.warm.dpu.to_bits());
+        assert_eq!(ser.warm.overlapped, 0.0);
+        assert!(pip.warm.overlapped > 0.0, "query pushes must hide under launches");
+        assert!(pip.warm.total() < ser.warm.total());
     }
 }

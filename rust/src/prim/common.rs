@@ -2,7 +2,7 @@
 //! `PrimBench` trait, and the Table 2 taxonomy.
 
 use crate::arch::SystemConfig;
-use crate::coordinator::{PimSet, TimeBreakdown};
+use crate::coordinator::{PimSet, Session, TimeBreakdown};
 
 pub use crate::coordinator::ExecChoice;
 
@@ -65,6 +65,11 @@ impl RunConfig {
     pub fn alloc(&self) -> PimSet {
         PimSet::allocate_with(self.sys.clone(), self.n_dpus, self.exec.build())
     }
+
+    /// Allocate a persistent serving session over [`RunConfig::alloc`].
+    pub fn session(&self) -> Session {
+        Session::new(self.alloc(), self.n_tasklets)
+    }
 }
 
 /// Outcome of one benchmark run.
@@ -94,7 +99,14 @@ pub struct BenchTraits {
     pub inter_sync: bool,
 }
 
-/// A PrIM workload.
+/// The one-shot benchmark surface: allocate, load, execute one request,
+/// retrieve, verify — in a single call.
+///
+/// Since the staged-lifecycle redesign this is a *compatibility shim*:
+/// every [`crate::prim::workload::Workload`] gets a blanket `PrimBench`
+/// impl whose `run` drives the stages through a fresh
+/// `coordinator::Session` (see `prim::workload::run_oneshot`). Serving
+/// paths that want warm state use the stages directly.
 pub trait PrimBench: Sync {
     fn name(&self) -> &'static str;
     fn traits(&self) -> BenchTraits;
@@ -119,8 +131,8 @@ pub fn all_benches() -> Vec<Box<dyn PrimBench>> {
         Box::new(super::bfs::Bfs),
         Box::new(super::mlp::Mlp),
         Box::new(super::nw::Nw),
-        Box::new(super::hst::HstS),
-        Box::new(super::hst::HstL),
+        Box::new(super::hst::Hst::short()),
+        Box::new(super::hst::Hst::long()),
         Box::new(super::red::Red::default()),
         Box::new(super::scan::ScanSsa),
         Box::new(super::scan::ScanRss),

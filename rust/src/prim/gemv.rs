@@ -1,10 +1,15 @@
 //! GEMV — Matrix-Vector Multiply (§4.2). Dense linear algebra; uint32;
 //! sequential reads; no synchronization. Rows are partitioned across DPUs
 //! (linear assignment), the input vector is replicated on every DPU.
+//!
+//! Lifecycle: the matrix is resident (loaded once); each request carries a
+//! fresh input vector `x` — a query-style workload that amortizes the
+//! dominant matrix distribution across requests.
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
+use super::workload::{Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::chunk_ranges;
+use crate::coordinator::{chunk_ranges, LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -71,7 +76,40 @@ pub fn gemv_kernel(
     }
 }
 
-impl PrimBench for Gemv {
+/// Host dataset: the row-partitioned matrix.
+pub struct GemvData {
+    mat: Vec<u32>,
+    m: usize,
+    n: usize,
+    rows_per: usize,
+}
+
+#[derive(Clone, Copy)]
+struct GemvSyms {
+    mat_sym: Symbol<u32>,
+    x_sym: Symbol<u32>,
+    y_sym: Symbol<u32>,
+}
+
+struct GemvState {
+    syms: GemvSyms,
+    /// Input vector of the most recent request (for verification).
+    cur_x: Vec<u32>,
+}
+
+/// One request's staged input.
+pub struct GemvStaged {
+    pub x: Vec<u32>,
+}
+
+/// Retrieved result: the request's input vector and the product.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GemvOut {
+    pub x: Vec<u32>,
+    pub y: Vec<u32>,
+}
+
+impl Workload for Gemv {
     fn name(&self) -> &'static str {
         "GEMV"
     }
@@ -89,58 +127,91 @@ impl PrimBench for Gemv {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
         let nd = rc.n_dpus as usize;
         // scale rows; keep N_COLS fixed like the paper's 1-rank dataset
         let m = rc.scaled(PAPER_M).div_ceil(nd) * nd;
         let n = N_COLS;
         let mut rng = Rng::new(rc.seed);
         let mat: Vec<u32> = (0..m * n).map(|_| rng.next_u32() >> 16).collect();
-        let x: Vec<u32> = (0..n).map(|_| rng.next_u32() >> 16).collect();
+        Dataset::new((m * n) as u64, GemvData { mat, m, n, rows_per: m / nd })
+    }
 
-        let mut set = rc.alloc();
-        let rows_per = m / nd;
-        let mat_bufs: Vec<Vec<u32>> =
-            (0..nd).map(|d| mat[d * rows_per * n..(d + 1) * rows_per * n].to_vec()).collect();
-        let mat_sym = set.symbol::<u32>(rows_per * n);
-        let x_sym = set.symbol::<u32>(n);
-        let y_sym = set.symbol::<u32>(rows_per * 2);
-        set.xfer(mat_sym).to().equal(&mat_bufs);
-        set.xfer(x_sym).to().broadcast(&x);
-
-        let stats = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
-            gemv_kernel(ctx, rows_per, n, mat_sym.off(), x_sym.off(), y_sym.off(), false);
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        let d = ds.get::<GemvData>();
+        let nd = sess.set.n_dpus() as usize;
+        assert_eq!(d.rows_per * nd, d.m, "session fleet must match the prepared dataset");
+        let mat_bufs: Vec<Vec<u32>> = (0..nd)
+            .map(|i| d.mat[i * d.rows_per * d.n..(i + 1) * d.rows_per * d.n].to_vec())
+            .collect();
+        let mat_sym = sess.set.symbol::<u32>(d.rows_per * d.n);
+        let x_sym = sess.set.symbol::<u32>(d.n);
+        let y_sym = sess.set.symbol::<u32>(d.rows_per * 2);
+        sess.set.xfer(mat_sym).to().equal(&mat_bufs);
+        sess.put_state(GemvState {
+            syms: GemvSyms { mat_sym, x_sym, y_sym },
+            cur_x: Vec::new(),
         });
+        sess.mark_loaded("GEMV");
+    }
 
-        let out = set.xfer(y_sym).from().all();
+    fn stage(&self, ds: &Dataset, req: &Request) -> Staged {
+        let d = ds.get::<GemvData>();
+        let mut rng = Rng::new(req.seed);
+        let x: Vec<u32> = (0..d.n).map(|_| rng.next_u32() >> 16).collect();
+        Staged::new(GemvStaged { x })
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        staged: Staged,
+    ) -> LaunchStats {
+        let d = ds.get::<GemvData>();
+        let GemvStaged { x } = staged.take::<GemvStaged>();
+        let syms = sess.state::<GemvState>().syms;
+        sess.set.xfer(syms.x_sym).to().broadcast(&x);
+        let rows_per = d.rows_per;
+        let n = d.n;
+        let stats = sess.launch_seq(sess.n_tasklets, move |_d, ctx: &mut Ctx| {
+            gemv_kernel(ctx, rows_per, n, syms.mat_sym.off(), syms.x_sym.off(), syms.y_sym.off(), false);
+        });
+        sess.state_mut::<GemvState>().cur_x = x;
+        stats
+    }
+
+    fn retrieve(&self, sess: &mut Session, _ds: &Dataset) -> Output {
+        let syms = sess.state::<GemvState>().syms;
+        let out = sess.set.xfer(syms.y_sym).from().all();
         let y: Vec<u32> = out.iter().flat_map(|c| c.iter().step_by(2).copied()).collect();
+        Output::new(GemvOut { x: sess.state::<GemvState>().cur_x.clone(), y })
+    }
 
-        // reference
-        let mut verified = true;
-        for r in 0..m {
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        let d = ds.get::<GemvData>();
+        let o = out.get::<GemvOut>();
+        if o.y.len() != d.m || o.x.len() != d.n {
+            return false;
+        }
+        for r in 0..d.m {
             let mut acc: u32 = 0;
-            for c in 0..n {
-                acc = acc.wrapping_add(mat[r * n + c].wrapping_mul(x[c]));
+            for c in 0..d.n {
+                acc = acc.wrapping_add(d.mat[r * d.n + c].wrapping_mul(o.x[c]));
             }
-            if y[r] != acc {
-                verified = false;
-                break;
+            if o.y[r] != acc {
+                return false;
             }
         }
-
-        BenchResult {
-            name: self.name(),
-            breakdown: set.metrics,
-            verified,
-            work_items: (m * n) as u64,
-            dpu_instrs: stats.total_instrs(),
-        }
+        true
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prim::common::PrimBench;
 
     #[test]
     fn verifies_small() {
@@ -168,5 +239,32 @@ mod tests {
         let v = super::super::va::Va.run(&rc);
         let va_per_elem = v.breakdown.dpu / v.work_items as f64;
         assert!(per_elem > 2.0 * va_per_elem, "{per_elem} vs {va_per_elem}");
+    }
+
+    /// Multi-request batching: every request multiplies a fresh vector
+    /// against the resident matrix, and each verifies.
+    #[test]
+    fn serves_fresh_vectors_against_resident_matrix() {
+        let rc = RunConfig {
+            n_dpus: 2,
+            scale: 0.004,
+            ..RunConfig::rank_default()
+        };
+        let ds = Gemv.prepare(&rc);
+        let mut sess = rc.session();
+        Gemv.load(&mut sess, &ds);
+        let mat_bytes = sess.set.metrics.bytes_to_dpu;
+        let mut seen = Vec::new();
+        for req in Request::stream(rc.seed, 3) {
+            let staged = Gemv.stage(&ds, &req);
+            Gemv.execute(&mut sess, &ds, &req, staged);
+            let out = Gemv.retrieve(&mut sess, &ds);
+            assert!(Gemv.verify(&ds, &out), "request {}", req.id);
+            seen.push(out.get::<GemvOut>().x.clone());
+        }
+        assert_ne!(seen[0], seen[1], "requests carry distinct vectors");
+        // the matrix was pushed exactly once; only x broadcasts follow
+        let x_bytes = (3 * sess.set.n_dpus() as usize * seen[0].len() * 4) as u64;
+        assert_eq!(sess.set.metrics.bytes_to_dpu, mat_bytes + x_bytes);
     }
 }

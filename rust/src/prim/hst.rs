@@ -13,10 +13,15 @@
 //! Pixels are distributed with **ragged** parallel transfers, so each DPU
 //! counts exactly its share — the old equal-size path padded the tail DPU
 //! with sentinel zero pixels and subtracted them from bucket 0 afterwards.
+//!
+//! Lifecycle: the image is resident; warm requests re-count it (streaming
+//! workload — the shared WRAM histogram is fresh per launch, so
+//! re-execution is exact).
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
+use super::workload::{Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::ragged_counts;
+use crate::coordinator::{ragged_counts, LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::data::natural_image;
 use crate::util::pod::cast_slice_mut;
@@ -32,195 +37,249 @@ pub enum HstKind {
     Long,
 }
 
-/// Run either histogram variant with `bins` buckets. Pixel values are
-/// 12-bit; bucket = value >> (12 - log2(bins)).
-pub fn run_hst(kind: HstKind, name: &'static str, rc: &RunConfig, bins: usize) -> BenchResult {
-    assert!(bins.is_power_of_two() && bins <= 4096);
-    let shift = DEPTH_BITS - (bins as f64).log2() as u32;
-    let n = rc.scaled(PAPER_PIXELS);
-    let pixels = natural_image(n, DEPTH_BITS, rc.seed);
-
-    let mut hist_ref = vec![0u32; bins];
-    for &p in &pixels {
-        hist_ref[(p >> shift) as usize] += 1;
-    }
-
-    let mut set = rc.alloc();
-    let nd = rc.n_dpus as usize;
-    // exact contiguous pixel shares (8-element granularity keeps ragged
-    // slices DMA-aligned); no bucket-0 sentinel padding, no correction
-    let per = n.div_ceil(nd).div_ceil(8) * 8;
-    let counts = ragged_counts(n, per, nd);
-    let bufs: Vec<Vec<u32>> = (0..nd)
-        .map(|d| pixels[(d * per).min(n)..((d + 1) * per).min(n)].to_vec())
-        .collect();
-    let px_sym = set.symbol::<u32>(per);
-    let hist_sym = set.symbol::<u32>(bins.max(2));
-    set.xfer(px_sym).to().ragged(&bufs);
-    let out_off = hist_sym.off();
-
-    let per_pixel = (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
-        + isa::op_instrs(DType::U32, Op::Add) as u64
-        + 1; // shift
-
-    let counts_ref = &counts;
-    let stats = set.launch(rc.n_tasklets, |d, ctx: &mut Ctx| {
-        let t = ctx.tasklet_id as usize;
-        let nt = ctx.n_tasklets as usize;
-        let my_bytes = counts_ref[d] * 4;
-        let n_blocks = my_bytes.div_ceil(BLOCK);
-        let win = ctx.mem_alloc(BLOCK);
-        match kind {
-            HstKind::Short => {
-                // private histograms in one shared region (so the merge
-                // phase can read all of them)
-                let hists = ctx.mem_alloc_shared(1, nt * bins * 4);
-                let my_hist = hists + t * bins * 4;
-                let mut local = vec![0u32; bins];
-                let mut blk = t;
-                while blk < n_blocks {
-                    let take = (my_bytes - blk * BLOCK).min(BLOCK);
-                    ctx.mram_read(px_sym.off() + blk * BLOCK, win, take);
-                    let px: Vec<u32> = ctx.wram_get(win, take / 4);
-                    for p in px {
-                        local[(p >> shift) as usize] += 1;
-                    }
-                    ctx.compute((take / 4) as u64 * per_pixel);
-                    blk += nt;
-                }
-                ctx.wram_set(my_hist, &local);
-                ctx.barrier(0);
-                // parallel merge: tasklet t reduces its bin range (ranges
-                // rounded to even bins so MRAM writes stay 8-B aligned)
-                let lo = (t * bins / nt) & !1;
-                let hi = if t + 1 == nt { bins } else { ((t + 1) * bins / nt) & !1 };
-                if hi > lo {
-                    let mut merged = vec![0u32; hi - lo];
-                    for other in 0..nt {
-                        let h: Vec<u32> = ctx.wram_get(hists + other * bins * 4 + lo * 4, hi - lo);
-                        for (m, v) in merged.iter_mut().zip(&h) {
-                            *m += v;
-                        }
-                    }
-                    ctx.charge_ops(DType::U32, Op::Add, ((hi - lo) * nt) as u64);
-                    // write this bin range to MRAM (8-B aligned slices)
-                    ctx.wram_set(hists + lo * 4, &merged);
-                    let lo_b = (lo * 4) & !7;
-                    let hi_b = (hi * 4 + 7) & !7;
-                    ctx.mram_write(hists + lo_b, out_off + lo_b, hi_b - lo_b);
-                }
-            }
-            HstKind::Long => {
-                // one shared histogram; mutex-protected updates
-                let hist = ctx.mem_alloc_shared(1, bins * 4);
-                let mut blk = t;
-                while blk < n_blocks {
-                    let take = (my_bytes - blk * BLOCK).min(BLOCK);
-                    ctx.mram_read(px_sym.off() + blk * BLOCK, win, take);
-                    let px: Vec<u32> = ctx.wram_get(win, take / 4);
-                    for p in px {
-                        let b = (p >> shift) as usize;
-                        ctx.mutex_lock(0);
-                        ctx.wram(|w| {
-                            cast_slice_mut::<u32>(&mut w[hist..hist + bins * 4])[b] += 1;
-                        });
-                        ctx.charge_ops(DType::U32, Op::Add, 1);
-                        ctx.mutex_unlock(0);
-                    }
-                    ctx.compute((take / 4) as u64 * (per_pixel - 1));
-                    blk += nt;
-                }
-                ctx.barrier(0);
-                if t == 0 {
-                    let mut off = 0;
-                    while off < bins * 4 {
-                        let take = (bins * 4 - off).min(1024);
-                        ctx.mram_write(hist + off, out_off + off, take.max(8));
-                        off += take;
-                    }
-                }
-            }
-        }
-    });
-
-    // host: gather per-DPU histograms (equal sizes → parallel) and merge
-    let parts = set.xfer(hist_sym).from().equal(bins);
-    let mut hist = vec![0u32; bins];
-    for p in &parts {
-        for (h, v) in hist.iter_mut().zip(p) {
-            *h += v;
-        }
-    }
-    set.host_merge((nd * bins * 4) as u64, (nd * bins) as u64);
-
-    let verified = hist == hist_ref;
-
-    BenchResult {
-        name,
-        breakdown: set.metrics,
-        verified,
-        work_items: n as u64,
-        dpu_instrs: stats.total_instrs(),
-    }
+/// A parameterized histogram workload: variant + bucket count. The
+/// Table 2 entries are `Hst::short()` (256 bins) and `Hst::long()` (256 bins,
+/// long); the Fig. 20 study sweeps `bins`.
+pub struct Hst {
+    pub kind: HstKind,
+    pub name: &'static str,
+    pub bins: usize,
 }
 
-pub struct HstS;
+pub struct HstData {
+    pixels: Vec<u32>,
+    hist_ref: Vec<u32>,
+    shift: u32,
+    n: usize,
+    counts: Vec<usize>,
+}
 
-impl PrimBench for HstS {
+struct HstState {
+    px_sym: Symbol<u32>,
+    hist_sym: Symbol<u32>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HstOut {
+    pub hist: Vec<u32>,
+}
+
+impl Workload for Hst {
     fn name(&self) -> &'static str {
-        "HST-S"
+        self.name
     }
 
     fn traits(&self) -> BenchTraits {
-        BenchTraits {
-            domain: "Image processing",
-            sequential: true,
-            strided: false,
-            random: true,
-            ops: "add",
-            dtype: "uint32_t",
-            intra_sync: "barrier",
-            inter_sync: true,
-        }
-    }
-
-    fn run(&self, rc: &RunConfig) -> BenchResult {
-        run_hst(HstKind::Short, "HST-S", rc, 256)
-    }
-}
-
-pub struct HstL;
-
-impl PrimBench for HstL {
-    fn name(&self) -> &'static str {
-        "HST-L"
-    }
-
-    fn traits(&self) -> BenchTraits {
-        BenchTraits {
-            domain: "Image processing",
-            sequential: true,
-            strided: false,
-            random: true,
-            ops: "add",
-            dtype: "uint32_t",
-            intra_sync: "barrier, mutex",
-            inter_sync: true,
+        match self.kind {
+            HstKind::Short => BenchTraits {
+                domain: "Image processing",
+                sequential: true,
+                strided: false,
+                random: true,
+                ops: "add",
+                dtype: "uint32_t",
+                intra_sync: "barrier",
+                inter_sync: true,
+            },
+            HstKind::Long => BenchTraits {
+                domain: "Image processing",
+                sequential: true,
+                strided: false,
+                random: true,
+                ops: "add",
+                dtype: "uint32_t",
+                intra_sync: "barrier, mutex",
+                inter_sync: true,
+            },
         }
     }
 
     fn best_tasklets(&self) -> u32 {
-        8 // mutex contention makes 16 slower (Key Obs. 11)
+        match self.kind {
+            HstKind::Short => 16,
+            // mutex contention makes 16 slower (Key Obs. 11)
+            HstKind::Long => 8,
+        }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
-        run_hst(HstKind::Long, "HST-L", rc, 256)
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
+        assert!(self.bins.is_power_of_two() && self.bins <= 4096);
+        let shift = DEPTH_BITS - (self.bins as f64).log2() as u32;
+        let n = rc.scaled(PAPER_PIXELS);
+        let pixels = natural_image(n, DEPTH_BITS, rc.seed);
+        let mut hist_ref = vec![0u32; self.bins];
+        for &p in &pixels {
+            hist_ref[(p >> shift) as usize] += 1;
+        }
+        // exact contiguous pixel shares (8-element granularity keeps
+        // ragged slices DMA-aligned); no bucket-0 sentinel padding
+        let nd = rc.n_dpus as usize;
+        let per = n.div_ceil(nd).div_ceil(8) * 8;
+        let counts = ragged_counts(n, per, nd);
+        Dataset::new(n as u64, HstData { pixels, hist_ref, shift, n, counts })
+    }
+
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        let d = ds.get::<HstData>();
+        let nd = sess.set.n_dpus() as usize;
+        assert_eq!(nd, d.counts.len(), "session fleet must match the dataset");
+        let per = d.n.div_ceil(nd).div_ceil(8) * 8;
+        let bufs: Vec<Vec<u32>> = (0..nd)
+            .map(|i| d.pixels[(i * per).min(d.n)..((i + 1) * per).min(d.n)].to_vec())
+            .collect();
+        let px_sym = sess.set.symbol::<u32>(per);
+        let hist_sym = sess.set.symbol::<u32>(self.bins.max(2));
+        sess.set.xfer(px_sym).to().ragged(&bufs);
+        sess.put_state(HstState { px_sym, hist_sym });
+        sess.mark_loaded(self.name);
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        _staged: Staged,
+    ) -> LaunchStats {
+        let d = ds.get::<HstData>();
+        let (px_sym, hist_sym) = {
+            let st = sess.state::<HstState>();
+            (st.px_sym, st.hist_sym)
+        };
+        let out_off = hist_sym.off();
+        let (bins, shift, kind) = (self.bins, d.shift, self.kind);
+        let per_pixel = (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
+            + isa::op_instrs(DType::U32, Op::Add) as u64
+            + 1; // shift
+        let counts_ref = &d.counts;
+        sess.launch(sess.n_tasklets, move |dpu, ctx: &mut Ctx| {
+            let t = ctx.tasklet_id as usize;
+            let nt = ctx.n_tasklets as usize;
+            let my_bytes = counts_ref[dpu] * 4;
+            let n_blocks = my_bytes.div_ceil(BLOCK);
+            let win = ctx.mem_alloc(BLOCK);
+            match kind {
+                HstKind::Short => {
+                    // private histograms in one shared region (so the merge
+                    // phase can read all of them)
+                    let hists = ctx.mem_alloc_shared(1, nt * bins * 4);
+                    let my_hist = hists + t * bins * 4;
+                    let mut local = vec![0u32; bins];
+                    let mut blk = t;
+                    while blk < n_blocks {
+                        let take = (my_bytes - blk * BLOCK).min(BLOCK);
+                        ctx.mram_read(px_sym.off() + blk * BLOCK, win, take);
+                        let px: Vec<u32> = ctx.wram_get(win, take / 4);
+                        for p in px {
+                            local[(p >> shift) as usize] += 1;
+                        }
+                        ctx.compute((take / 4) as u64 * per_pixel);
+                        blk += nt;
+                    }
+                    ctx.wram_set(my_hist, &local);
+                    ctx.barrier(0);
+                    // parallel merge: tasklet t reduces its bin range (ranges
+                    // rounded to even bins so MRAM writes stay 8-B aligned)
+                    let lo = (t * bins / nt) & !1;
+                    let hi = if t + 1 == nt { bins } else { ((t + 1) * bins / nt) & !1 };
+                    if hi > lo {
+                        let mut merged = vec![0u32; hi - lo];
+                        for other in 0..nt {
+                            let h: Vec<u32> =
+                                ctx.wram_get(hists + other * bins * 4 + lo * 4, hi - lo);
+                            for (m, v) in merged.iter_mut().zip(&h) {
+                                *m += v;
+                            }
+                        }
+                        ctx.charge_ops(DType::U32, Op::Add, ((hi - lo) * nt) as u64);
+                        // write this bin range to MRAM (8-B aligned slices)
+                        ctx.wram_set(hists + lo * 4, &merged);
+                        let lo_b = (lo * 4) & !7;
+                        let hi_b = (hi * 4 + 7) & !7;
+                        ctx.mram_write(hists + lo_b, out_off + lo_b, hi_b - lo_b);
+                    }
+                }
+                HstKind::Long => {
+                    // one shared histogram; mutex-protected updates
+                    let hist = ctx.mem_alloc_shared(1, bins * 4);
+                    let mut blk = t;
+                    while blk < n_blocks {
+                        let take = (my_bytes - blk * BLOCK).min(BLOCK);
+                        ctx.mram_read(px_sym.off() + blk * BLOCK, win, take);
+                        let px: Vec<u32> = ctx.wram_get(win, take / 4);
+                        for p in px {
+                            let b = (p >> shift) as usize;
+                            ctx.mutex_lock(0);
+                            ctx.wram(|w| {
+                                cast_slice_mut::<u32>(&mut w[hist..hist + bins * 4])[b] += 1;
+                            });
+                            ctx.charge_ops(DType::U32, Op::Add, 1);
+                            ctx.mutex_unlock(0);
+                        }
+                        ctx.compute((take / 4) as u64 * (per_pixel - 1));
+                        blk += nt;
+                    }
+                    ctx.barrier(0);
+                    if t == 0 {
+                        let mut off = 0;
+                        while off < bins * 4 {
+                            let take = (bins * 4 - off).min(1024);
+                            ctx.mram_write(hist + off, out_off + off, take.max(8));
+                            off += take;
+                        }
+                    }
+                }
+            }
+        })
+    }
+
+    fn retrieve(&self, sess: &mut Session, _ds: &Dataset) -> Output {
+        let hist_sym = sess.state::<HstState>().hist_sym;
+        let nd = sess.set.n_dpus() as usize;
+        // host: gather per-DPU histograms (equal sizes → parallel) and merge
+        let parts = sess.set.xfer(hist_sym).from().equal(self.bins);
+        let mut hist = vec![0u32; self.bins];
+        for p in &parts {
+            for (h, v) in hist.iter_mut().zip(p) {
+                *h += v;
+            }
+        }
+        sess.set.host_merge((nd * self.bins * 4) as u64, (nd * self.bins) as u64);
+        Output::new(HstOut { hist })
+    }
+
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        out.get::<HstOut>().hist == ds.get::<HstData>().hist_ref
+    }
+}
+
+/// Run either histogram variant with `bins` buckets (the Fig. 20 sweep).
+/// Pixel values are 12-bit; bucket = value >> (12 - log2(bins)).
+pub fn run_hst(
+    kind: HstKind,
+    name: &'static str,
+    rc: &RunConfig,
+    bins: usize,
+) -> crate::prim::common::BenchResult {
+    super::workload::run_oneshot(&Hst { kind, name, bins }, rc)
+}
+
+impl Hst {
+    /// The Table 2 "HST-S" entry: private per-tasklet histograms.
+    pub const fn short() -> Hst {
+        Hst { kind: HstKind::Short, name: "HST-S", bins: 256 }
+    }
+
+    /// The Table 2 "HST-L" entry: one mutex-protected shared histogram.
+    pub const fn long() -> Hst {
+        Hst { kind: HstKind::Long, name: "HST-L", bins: 256 }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prim::common::PrimBench;
 
     #[test]
     fn hst_s_verifies() {
@@ -229,7 +288,7 @@ mod tests {
             scale: 0.01,
             ..RunConfig::rank_default()
         };
-        assert!(HstS.run(&rc).verified);
+        assert!(Hst::short().run(&rc).verified);
     }
 
     #[test]
@@ -242,7 +301,7 @@ mod tests {
             scale: 0.011,
             ..RunConfig::rank_default()
         };
-        let r = HstS.run(&rc);
+        let r = Hst::short().run(&rc);
         assert!(r.verified);
         assert_eq!(r.breakdown.bytes_to_dpu, rc.scaled(1536 * 1024) as u64 * 4);
     }
@@ -255,7 +314,7 @@ mod tests {
             scale: 0.005,
             ..RunConfig::rank_default()
         };
-        assert!(HstL.run(&rc).verified);
+        assert!(Hst::long().run(&rc).verified);
     }
 
     #[test]
@@ -269,7 +328,7 @@ mod tests {
                 scale: 0.002,
                 ..RunConfig::rank_default()
             };
-            HstL.run(&rc).breakdown.dpu
+            Hst::long().run(&rc).breakdown.dpu
         };
         let t8 = mk(8);
         let t16 = mk(16);
@@ -282,7 +341,7 @@ mod tests {
                 scale: 0.002,
                 ..RunConfig::rank_default()
             };
-            HstS.run(&rc).breakdown.dpu
+            Hst::short().run(&rc).breakdown.dpu
         };
         assert!(mk_s(16) < mk_s(8));
     }
@@ -297,5 +356,29 @@ mod tests {
         };
         let r = run_hst(HstKind::Long, "HST-L", &rc, 4096);
         assert!(r.verified);
+    }
+
+    /// Warm re-execute is exact: the shared WRAM histogram is fresh per
+    /// launch, so a second count of the resident image matches the first.
+    #[test]
+    fn warm_recount_is_exact() {
+        use crate::prim::workload::Request;
+        let rc = RunConfig {
+            n_dpus: 3,
+            n_tasklets: 8,
+            scale: 0.003,
+            ..RunConfig::rank_default()
+        };
+        for w in [Hst::short(), Hst::long()] {
+            let ds = w.prepare(&rc);
+            let mut sess = rc.session();
+            w.load(&mut sess, &ds);
+            w.execute(&mut sess, &ds, &Request::new(0, rc.seed), Staged::empty());
+            let first = w.retrieve(&mut sess, &ds);
+            w.execute(&mut sess, &ds, &Request::new(1, rc.seed ^ 3), Staged::empty());
+            let second = w.retrieve(&mut sess, &ds);
+            assert_eq!(first.get::<HstOut>(), second.get::<HstOut>());
+            assert!(w.verify(&ds, &second), "{}", Workload::name(&w));
+        }
     }
 }

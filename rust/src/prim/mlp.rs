@@ -3,9 +3,15 @@
 //! (reusing the GEMV kernel); between layers the host gathers the output
 //! vector chunks and redistributes them as the next layer's input —
 //! the inter-DPU phase that burdens MLP at scale (§5.1).
+//!
+//! Lifecycle: the weight matrices are resident (the classic
+//! inference-serving shape); each request broadcasts a fresh input vector
+//! and runs the 3-layer forward pass.
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
 use super::gemv::gemv_kernel;
+use super::workload::{Dataset, Output, Request, Staged, Workload};
+use crate::coordinator::{LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -15,7 +21,31 @@ const LAYERS: usize = 3;
 
 pub struct Mlp;
 
-impl PrimBench for Mlp {
+pub struct MlpData {
+    weights: Vec<Vec<u32>>,
+    m: usize,
+    rows_per: usize,
+}
+
+struct MlpState {
+    w_syms: Vec<Symbol<u32>>,
+    x_sym: Symbol<u32>,
+    y_sym: Symbol<u32>,
+    cur_x: Vec<u32>,
+}
+
+pub struct MlpStaged {
+    pub x0: Vec<u32>,
+}
+
+/// Retrieved result: the request's input and the final layer activations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MlpOut {
+    pub x0: Vec<u32>,
+    pub y: Vec<u32>,
+}
+
+impl Workload for Mlp {
     fn name(&self) -> &'static str {
         "MLP"
     }
@@ -33,7 +63,7 @@ impl PrimBench for Mlp {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
         let nd = rc.n_dpus as usize;
         // square layers; dimension must be a multiple of 256 (DMA blocks)
         // and of the DPU count (row partitioning)
@@ -43,64 +73,96 @@ impl PrimBench for Mlp {
         // small weights so int32 accumulation stays far from overflow
         let weights: Vec<Vec<u32>> =
             (0..LAYERS).map(|_| (0..m * m).map(|_| rng.below(5) as u32).collect()).collect();
-        let x0: Vec<u32> = (0..m).map(|_| rng.below(9) as u32).collect();
+        Dataset::new((LAYERS * m * m) as u64, MlpData { weights, m, rows_per: m / nd })
+    }
 
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        let d = ds.get::<MlpData>();
+        let nd = sess.set.n_dpus() as usize;
+        assert_eq!(d.rows_per * nd, d.m, "session fleet must match the dataset");
+        // MRAM layout per DPU: W1 | W2 | W3 | x | y
+        let w_syms: Vec<Symbol<u32>> =
+            (0..LAYERS).map(|_| sess.set.symbol::<u32>(d.rows_per * d.m)).collect();
+        let x_sym = sess.set.symbol::<u32>(d.m);
+        let y_sym = sess.set.symbol::<u32>(d.rows_per * 2);
+        for (l, w) in d.weights.iter().enumerate() {
+            let bufs: Vec<Vec<u32>> = (0..nd)
+                .map(|i| w[i * d.rows_per * d.m..(i + 1) * d.rows_per * d.m].to_vec())
+                .collect();
+            sess.set.xfer(w_syms[l]).to().equal(&bufs);
+        }
+        sess.put_state(MlpState { w_syms, x_sym, y_sym, cur_x: Vec::new() });
+        sess.mark_loaded("MLP");
+    }
+
+    fn stage(&self, ds: &Dataset, req: &Request) -> Staged {
+        let d = ds.get::<MlpData>();
+        let mut rng = Rng::new(req.seed);
+        let x0: Vec<u32> = (0..d.m).map(|_| rng.below(9) as u32).collect();
+        Staged::new(MlpStaged { x0 })
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        staged: Staged,
+    ) -> LaunchStats {
+        let d = ds.get::<MlpData>();
+        let MlpStaged { x0 } = staged.take::<MlpStaged>();
+        let (w_syms, x_sym, y_sym) = {
+            let st = sess.state::<MlpState>();
+            (st.w_syms.clone(), st.x_sym, st.y_sym)
+        };
+        let (m, rows_per) = (d.m, d.rows_per);
+        sess.set.xfer(x_sym).to().broadcast(&x0);
+
+        let mut last_stats = LaunchStats::default();
+        for (l, w_sym) in w_syms.iter().copied().enumerate() {
+            last_stats = sess.launch_seq(sess.n_tasklets, move |_d, ctx: &mut Ctx| {
+                gemv_kernel(ctx, rows_per, m, w_sym.off(), x_sym.off(), y_sym.off(), true);
+            });
+            if l + 1 < LAYERS {
+                // host: gather y chunks, rebuild the vector, redistribute
+                let parts = sess.set.xfer(y_sym).inter().from().all();
+                let next: Vec<u32> =
+                    parts.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
+                sess.set.host_merge((m * 4) as u64, m as u64);
+                sess.set.xfer(x_sym).inter().to().broadcast(&next);
+            }
+        }
+        sess.state_mut::<MlpState>().cur_x = x0;
+        last_stats
+    }
+
+    fn retrieve(&self, sess: &mut Session, _ds: &Dataset) -> Output {
+        let y_sym = sess.state::<MlpState>().y_sym;
+        let out = sess.set.xfer(y_sym).from().all();
+        let y: Vec<u32> = out.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
+        Output::new(MlpOut { x0: sess.state::<MlpState>().cur_x.clone(), y })
+    }
+
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        let d = ds.get::<MlpData>();
+        let o = out.get::<MlpOut>();
+        if o.x0.len() != d.m || o.y.len() != d.m {
+            return false;
+        }
         // reference forward pass
-        let mut h = x0.clone();
-        for w in &weights {
-            let mut next = vec![0u32; m];
+        let mut h = o.x0.clone();
+        for w in &d.weights {
+            let mut next = vec![0u32; d.m];
             for (r, out) in next.iter_mut().enumerate() {
                 let mut acc: u32 = 0;
-                for c in 0..m {
-                    acc = acc.wrapping_add(w[r * m + c].wrapping_mul(h[c]));
+                for c in 0..d.m {
+                    acc = acc.wrapping_add(w[r * d.m + c].wrapping_mul(h[c]));
                 }
                 *out = if (acc as i32) < 0 { 0 } else { acc };
             }
             h = next;
         }
-        let y_ref = h;
-
-        let mut set = rc.alloc();
-        let rows_per = m / nd;
-        // MRAM layout per DPU: W1 | W2 | W3 | x | y
-        let w_syms: Vec<_> = (0..LAYERS).map(|_| set.symbol::<u32>(rows_per * m)).collect();
-        let x_sym = set.symbol::<u32>(m);
-        let y_sym = set.symbol::<u32>(rows_per * 2);
-        for (l, w) in weights.iter().enumerate() {
-            let bufs: Vec<Vec<u32>> =
-                (0..nd).map(|d| w[d * rows_per * m..(d + 1) * rows_per * m].to_vec()).collect();
-            set.xfer(w_syms[l]).to().equal(&bufs);
-        }
-        set.xfer(x_sym).to().broadcast(&x0);
-
-        let mut total_instrs = 0u64;
-        for l in 0..LAYERS {
-            let w_sym = w_syms[l];
-            let stats = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
-                gemv_kernel(ctx, rows_per, m, w_sym.off(), x_sym.off(), y_sym.off(), true);
-            });
-            total_instrs += stats.total_instrs();
-            if l + 1 < LAYERS {
-                // host: gather y chunks, rebuild the vector, redistribute
-                let parts = set.xfer(y_sym).inter().from().all();
-                let next: Vec<u32> =
-                    parts.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
-                set.host_merge((m * 4) as u64, m as u64);
-                set.xfer(x_sym).inter().to().broadcast(&next);
-            }
-        }
-
-        let out = set.xfer(y_sym).from().all();
-        let y: Vec<u32> = out.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
-        let verified = y == y_ref;
-
-        BenchResult {
-            name: self.name(),
-            breakdown: set.metrics,
-            verified,
-            work_items: (LAYERS * m * m) as u64,
-            dpu_instrs: total_instrs,
-        }
+        o.y == h
     }
 }
 
@@ -115,6 +177,7 @@ fn gcd(a: usize, b: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prim::common::PrimBench;
 
     #[test]
     fn verifies_small() {
@@ -136,5 +199,31 @@ mod tests {
             ..RunConfig::rank_default()
         };
         assert!(Mlp.run(&rc).verified);
+    }
+
+    /// Inference serving: the weights load once; every request runs the
+    /// forward pass on a fresh input and verifies.
+    #[test]
+    fn weight_load_amortizes_across_inferences() {
+        let rc = RunConfig {
+            n_dpus: 2,
+            scale: 0.06,
+            ..RunConfig::rank_default()
+        };
+        let ds = Mlp.prepare(&rc);
+        let mut sess = rc.session();
+        Mlp.load(&mut sess, &ds);
+        let weight_bytes = sess.set.metrics.bytes_to_dpu;
+        for req in Request::stream(rc.seed, 2) {
+            let staged = Mlp.stage(&ds, &req);
+            Mlp.execute(&mut sess, &ds, &req, staged);
+            let out = Mlp.retrieve(&mut sess, &ds);
+            assert!(Mlp.verify(&ds, &out), "request {}", req.id);
+        }
+        let m = ds.get::<MlpData>().m as u64;
+        let x_bytes = 2 * sess.set.n_dpus() as u64 * m * 4;
+        assert_eq!(sess.set.metrics.bytes_to_dpu, weight_bytes + x_bytes);
+        // warm input is tiny next to the resident weights: m² × 3 vs m
+        assert!(weight_bytes > 100 * x_bytes);
     }
 }

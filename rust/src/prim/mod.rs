@@ -1,18 +1,23 @@
 //! The PrIM benchmark suite: 16 workloads (19 kernels) ported 1:1 from the
 //! paper's §4 descriptions onto the simulated UPMEM system.
 //!
-//! Every benchmark (a) generates a deterministic synthetic dataset with the
-//! paper's statistics, (b) distributes it through typed MRAM symbols and
-//! the transfer builder with the same pattern the paper describes
-//! (parallel equal/ragged, serial per-DPU, broadcast), (c) runs the same
-//! tasklet-level algorithm against the [`crate::dpu::Ctx`] API with the
-//! same synchronization primitives, (d) retrieves and merges results on
-//! the host, and (e) **verifies** the output against a native reference —
-//! returning the paper's four-bucket time breakdown.
+//! Every benchmark is a staged [`workload::Workload`]: it (a) **prepares**
+//! a deterministic synthetic dataset with the paper's statistics, (b)
+//! **loads** it through typed MRAM symbols and the transfer builder with
+//! the same pattern the paper describes (parallel equal/ragged, serial
+//! per-DPU, broadcast), (c) **executes** requests with the same
+//! tasklet-level algorithm against the [`crate::dpu::Ctx`] API and the
+//! same synchronization primitives, (d) **retrieves** and merges results
+//! on the host, and (e) **verifies** the output against a native
+//! reference — returning the paper's four-bucket time breakdown. The
+//! one-shot [`common::PrimBench::run`] is a compatibility shim over the
+//! stages; persistent sessions serve many requests against warm state
+//! (see [`workload`] and `coordinator::session`).
 
 pub mod bfs;
 pub mod bs;
 pub mod common;
+pub mod workload;
 pub mod gemv;
 pub mod hst;
 pub mod mlp;
@@ -27,3 +32,7 @@ pub mod uni;
 pub mod va;
 
 pub use common::{all_benches, bench_by_name, BenchResult, BenchTraits, PrimBench, RunConfig};
+pub use workload::{
+    all_workloads, run_oneshot, serve, workload_by_name, Dataset, Output, Request, ServeReport,
+    Staged, Workload,
+};

@@ -8,10 +8,17 @@
 //! the same anti-diagonal run in parallel (one per DPU, multiple rounds if
 //! the diagonal is longer than the DPU count); inside a block, tasklets
 //! compute 2×2 sub-blocks in a wavefront with a barrier per sub-diagonal.
+//!
+//! Lifecycle: the two sequences are resident (broadcast once); a warm
+//! request re-runs the whole wavefront — the boundary exchange is
+//! per-request inter-DPU traffic by construction.
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
+use super::workload::{Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
+use crate::coordinator::{LaunchStats, Session, Symbol, TimeBreakdown};
 use crate::dpu::Ctx;
+use crate::prim::common::BenchResult;
 use crate::util::data::dna_pair;
 use crate::util::pod::cast_slice_mut;
 
@@ -45,7 +52,32 @@ fn reference_nw(a: &[u8], b: &[u8]) -> Vec<Vec<i32>> {
 
 pub struct Nw;
 
-impl PrimBench for Nw {
+pub struct NwData {
+    a: Vec<u8>,
+    b: Vec<u8>,
+    m_ref: Vec<Vec<i32>>,
+    l: usize,
+    bsz: usize,
+    nb: usize,
+}
+
+struct NwState {
+    a_sym: Symbol<u8>,
+    b_sym: Symbol<u8>,
+    top_sym: Symbol<i32>,
+    left_sym: Symbol<i32>,
+    corner_sym: Symbol<i32>,
+    out_sym: Symbol<i32>,
+    cur_m: Option<Vec<Vec<i32>>>,
+}
+
+/// Retrieved result: the full score matrix of the last alignment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NwOut {
+    pub m: Vec<Vec<i32>>,
+}
+
+impl Workload for Nw {
     fn name(&self) -> &'static str {
         "NW"
     }
@@ -63,37 +95,84 @@ impl PrimBench for Nw {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
-        run_nw(rc, false).0
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
+        let nd = rc.n_dpus as usize;
+        // large-block edge: paper uses L/#DPUs; cap so the (B+1)² WRAM
+        // block fits; round L up to a whole number of blocks
+        let l0 = rc.scaled(PAPER_BPS);
+        let bsz = (l0 / nd).clamp(8, 96) & !1;
+        let l = l0.div_ceil(bsz) * bsz;
+        let nb = l / bsz;
+        let (a, b) = dna_pair(l, l, rc.seed);
+        let m_ref = reference_nw(&a, &b);
+        Dataset::new((l * l) as u64, NwData { a, b, m_ref, l, bsz, nb })
+    }
+
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        let d = ds.get::<NwData>();
+        // MRAM layout: a | b | top | left | corner | block_out
+        let a_sym = sess.set.symbol::<u8>(d.l);
+        let b_sym = sess.set.symbol::<u8>(d.l);
+        let top_sym = sess.set.symbol::<i32>(d.bsz);
+        let left_sym = sess.set.symbol::<i32>(d.bsz);
+        let corner_sym = sess.set.symbol::<i32>(2);
+        let out_sym = sess.set.symbol::<i32>(d.bsz * d.bsz);
+        sess.set.xfer(a_sym).to().broadcast(&d.a);
+        sess.set.xfer(b_sym).to().broadcast(&d.b);
+        sess.put_state(NwState {
+            a_sym,
+            b_sym,
+            top_sym,
+            left_sym,
+            corner_sym,
+            out_sym,
+            cur_m: None,
+        });
+        sess.mark_loaded("NW");
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        _staged: Staged,
+    ) -> LaunchStats {
+        nw_execute(sess, ds, false).0
+    }
+
+    fn retrieve(&self, sess: &mut Session, _ds: &Dataset) -> Output {
+        let m = sess
+            .state::<NwState>()
+            .cur_m
+            .clone()
+            .expect("NW retrieve before any execute");
+        Output::new(NwOut { m })
+    }
+
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        out.get::<NwOut>().m == ds.get::<NwData>().m_ref
     }
 }
 
-/// Run NW; if `longest_diag_only`, time only the diagonal with the most
-/// blocks (the §9.2.1 / Fig. 19 experiment). Returns (result, L).
-pub fn run_nw(rc: &RunConfig, longest_diag_only: bool) -> (BenchResult, usize) {
-    let nd = rc.n_dpus as usize;
-    // large-block edge: paper uses L/#DPUs; cap so the (B+1)² WRAM block
-    // fits; round L up to a whole number of blocks
-    let l0 = rc.scaled(PAPER_BPS);
-    let bsz = (l0 / nd).clamp(8, 96) & !1;
-    let l = l0.div_ceil(bsz) * bsz;
-    let nb = l / bsz;
-    let (a, b) = dna_pair(l, l, rc.seed);
-    let m_ref = reference_nw(&a, &b);
-
-    let mut set = rc.alloc();
-    // MRAM layout: a | b | top | left | corner | block_out
-    let a_sym = set.symbol::<u8>(l);
-    let b_sym = set.symbol::<u8>(l);
-    let top_sym = set.symbol::<i32>(bsz);
-    let left_sym = set.symbol::<i32>(bsz);
-    let corner_sym = set.symbol::<i32>(2);
-    let out_sym = set.symbol::<i32>(bsz * bsz);
+/// The anti-diagonal wavefront over the loaded session. Returns the stats
+/// of the final launch plus (when `longest_diag_only`) the metrics delta
+/// of the busiest diagonal (the §9.2.1 / Fig. 19 experiment).
+fn nw_execute(
+    sess: &mut Session,
+    ds: &Dataset,
+    longest_diag_only: bool,
+) -> (LaunchStats, TimeBreakdown) {
+    let d = ds.get::<NwData>();
+    let (a_sym, b_sym, top_sym, left_sym, corner_sym, out_sym) = {
+        let st = sess.state::<NwState>();
+        (st.a_sym, st.b_sym, st.top_sym, st.left_sym, st.corner_sym, st.out_sym)
+    };
     let (a_off, b_off) = (a_sym.off(), b_sym.off());
     let (top_off, left_off) = (top_sym.off(), left_sym.off());
     let (corner_off, out_off) = (corner_sym.off(), out_sym.off());
-    set.xfer(a_sym).to().broadcast(&a);
-    set.xfer(b_sym).to().broadcast(&b);
+    let (l, bsz, nb) = (d.l, d.bsz, d.nb);
+    let nd = sess.set.n_dpus() as usize;
 
     // host-side full score matrix
     let mut m = vec![vec![0i32; l + 1]; l + 1];
@@ -108,73 +187,81 @@ pub fn run_nw(rc: &RunConfig, longest_diag_only: bool) -> (BenchResult, usize) {
         + 3 * isa::op_instrs(DType::I32, Op::Cmp) as u64
         + 2 * isa::op_instrs(DType::I32, Op::Add) as u64;
 
-    let mut total_instrs = 0u64;
     let longest_diag = nb - 1; // 0-based diagonal with nb blocks
-    let mut metrics_longest = crate::coordinator::TimeBreakdown::default();
+    let mut metrics_longest = TimeBreakdown::default();
+    let mut last_stats = LaunchStats::default();
 
-    for d in 0..(2 * nb - 1) {
-        // blocks (bi, bj) with bi + bj == d
+    for diag in 0..(2 * nb - 1) {
+        // blocks (bi, bj) with bi + bj == diag
         let blocks: Vec<(usize, usize)> = (0..nb)
             .filter_map(|bi| {
-                let bj = d.checked_sub(bi)?;
+                let bj = diag.checked_sub(bi)?;
                 (bj < nb).then_some((bi, bj))
             })
             .collect();
-        let metrics_before = set.metrics;
+        let metrics_before = sess.set.metrics;
         for round in blocks.chunks(nd) {
             // send boundaries to each assigned DPU
             for (slot, &(bi, bj)) in round.iter().enumerate() {
                 let top: Vec<i32> = (0..bsz).map(|j| m[bi * bsz][bj * bsz + 1 + j]).collect();
                 let left: Vec<i32> = (0..bsz).map(|i| m[bi * bsz + 1 + i][bj * bsz]).collect();
                 let corner = [m[bi * bsz][bj * bsz], 0];
-                set.xfer(top_sym).inter().to().one(slot, &top);
-                set.xfer(left_sym).inter().to().one(slot, &left);
-                set.xfer(corner_sym).inter().to().one(slot, &corner);
+                sess.set.xfer(top_sym).inter().to().one(slot, &top);
+                sess.set.xfer(left_sym).inter().to().one(slot, &left);
+                sess.set.xfer(corner_sym).inter().to().one(slot, &corner);
             }
             let assignment: Vec<(usize, usize)> = round.to_vec();
             let dpu_ids: Vec<usize> = (0..round.len()).collect();
             // a wavefront diagonal has at most B/SUB sub-blocks: extra
             // tasklets only pay barrier overhead (both on real hardware
             // and in simulator wallclock)
-            let tl = rc.n_tasklets.min((bsz / SUB) as u32).max(1);
-            let stats = set.launch_on(&dpu_ids, tl, |slot, ctx: &mut Ctx| {
+            let tl = sess.n_tasklets.min((bsz / SUB) as u32).max(1);
+            let stats = sess.launch_on(&dpu_ids, tl, |slot, ctx: &mut Ctx| {
                 let (bi, bj) = assignment[slot];
                 nw_block_kernel(
                     ctx, bsz, bi, bj, a_off, b_off, top_off, left_off, corner_off, out_off,
                     per_cell,
                 );
             });
-            total_instrs += stats.total_instrs();
+            last_stats = stats;
             // retrieve blocks into the host matrix
             for (slot, &(bi, bj)) in round.iter().enumerate() {
-                let cells = set.xfer(out_sym).inter().from().one(slot, bsz * bsz);
+                let cells = sess.set.xfer(out_sym).inter().from().one(slot, bsz * bsz);
                 for i in 0..bsz {
                     for j in 0..bsz {
                         m[bi * bsz + 1 + i][bj * bsz + 1 + j] = cells[i * bsz + j];
                     }
                 }
-                set.host_merge((bsz * bsz * 4) as u64, (bsz * bsz) as u64);
+                sess.set.host_merge((bsz * bsz * 4) as u64, (bsz * bsz) as u64);
             }
         }
-        if longest_diag_only && d == longest_diag {
-            metrics_longest = set.metrics;
-            // subtract everything before this diagonal
-            metrics_longest.dpu -= metrics_before.dpu;
-            metrics_longest.inter_dpu -= metrics_before.inter_dpu;
-            metrics_longest.cpu_dpu -= metrics_before.cpu_dpu;
-            metrics_longest.dpu_cpu -= metrics_before.dpu_cpu;
+        if longest_diag_only && diag == longest_diag {
+            metrics_longest = sess.set.metrics.delta(&metrics_before);
         }
     }
 
-    let verified = m == m_ref;
-    let breakdown = if longest_diag_only { metrics_longest } else { set.metrics };
+    sess.state_mut::<NwState>().cur_m = Some(m);
+    (last_stats, metrics_longest)
+}
+
+/// Run NW one-shot; if `longest_diag_only`, report only the diagonal with
+/// the most blocks (the §9.2.1 / Fig. 19 experiment). Returns (result, L).
+pub fn run_nw(rc: &RunConfig, longest_diag_only: bool) -> (BenchResult, usize) {
+    let ds = Nw.prepare(rc);
+    let l = ds.get::<NwData>().l;
+    let mut sess = rc.session();
+    Nw.load(&mut sess, &ds);
+    let (_stats, metrics_longest) = nw_execute(&mut sess, &ds, longest_diag_only);
+    let out = Nw.retrieve(&mut sess, &ds);
+    let verified = Nw.verify(&ds, &out);
+    let breakdown = if longest_diag_only { metrics_longest } else { sess.set.metrics };
     (
         BenchResult {
             name: "NW",
             breakdown,
             verified,
-            work_items: (l * l) as u64,
-            dpu_instrs: total_instrs,
+            work_items: ds.work_items,
+            dpu_instrs: sess.instrs,
         },
         l,
     )

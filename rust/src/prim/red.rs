@@ -9,10 +9,14 @@
 //!   between rounds;
 //! * `TreeHandshake` — the same tree with handshake pairs instead of
 //!   barriers.
+//!
+//! Lifecycle: the input array is resident; warm requests re-reduce it
+//! (streaming workload).
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
+use super::workload::{run_oneshot, Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::chunk_ranges;
+use crate::coordinator::{LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::pod::cast_slice_mut;
 use crate::util::Rng;
@@ -35,7 +39,24 @@ pub struct Red {
     pub version: RedVersion,
 }
 
-impl PrimBench for Red {
+pub struct RedData {
+    input: Vec<i64>,
+    sum_ref: i64,
+    n: usize,
+    per: usize,
+}
+
+struct RedState {
+    in_sym: Symbol<i64>,
+    sum_sym: Symbol<i64>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RedOut {
+    pub total: i64,
+}
+
+impl Workload for Red {
     fn name(&self) -> &'static str {
         "RED"
     }
@@ -53,131 +74,154 @@ impl PrimBench for Red {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
-        run_red(self.version, rc)
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
+        let n = rc.scaled(PAPER_N);
+        let mut rng = Rng::new(rc.seed);
+        let input = rng.vec_i64(n, 1 << 24);
+        let sum_ref: i64 = input.iter().sum();
+        let nd = rc.n_dpus as usize;
+        let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
+        Dataset::new(n as u64, RedData { input, sum_ref, n, per })
     }
-}
 
-pub fn run_red(version: RedVersion, rc: &RunConfig) -> BenchResult {
-    let n = rc.scaled(PAPER_N);
-    let mut rng = Rng::new(rc.seed);
-    let input = rng.vec_i64(n, 1 << 24);
-    let sum_ref: i64 = input.iter().sum();
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        let d = ds.get::<RedData>();
+        let nd = sess.set.n_dpus() as usize;
+        let bufs: Vec<Vec<i64>> = (0..nd)
+            .map(|i| {
+                let lo = (i * d.per).min(d.n);
+                let hi = ((i + 1) * d.per).min(d.n);
+                let mut v = d.input[lo..hi].to_vec();
+                v.resize(d.per, 0); // additive identity (not a sentinel hack)
+                v
+            })
+            .collect();
+        let in_sym = sess.set.symbol::<i64>(d.per);
+        let sum_sym = sess.set.symbol::<i64>(1);
+        sess.set.xfer(in_sym).to().equal(&bufs);
+        sess.put_state(RedState { in_sym, sum_sym });
+        sess.mark_loaded("RED");
+    }
 
-    let mut set = rc.alloc();
-    let nd = rc.n_dpus as usize;
-    let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
-    let bufs: Vec<Vec<i64>> = (0..nd)
-        .map(|d| {
-            let lo = (d * per).min(n);
-            let hi = ((d + 1) * per).min(n);
-            let mut v = input[lo..hi].to_vec();
-            v.resize(per, 0); // additive identity (not a sentinel hack)
-            v
-        })
-        .collect();
-    let in_sym = set.symbol::<i64>(per);
-    let sum_sym = set.symbol::<i64>(1);
-    set.xfer(in_sym).to().equal(&bufs);
-    let out_off = sum_sym.off();
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        _staged: Staged,
+    ) -> LaunchStats {
+        let d = ds.get::<RedData>();
+        let (in_sym, sum_sym) = {
+            let st = sess.state::<RedState>();
+            (st.in_sym, st.sum_sym)
+        };
+        let out_off = sum_sym.off();
+        let version = self.version;
+        let per_elem = (isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
+            + isa::op_instrs(DType::I64, Op::Add) as u64;
+        let n_blocks = d.per / EPB;
 
-    let per_elem = (isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
-        + isa::op_instrs(DType::I64, Op::Add) as u64;
-    let n_blocks = per / EPB;
-
-    let stats = set.launch(rc.n_tasklets, |_d, ctx: &mut Ctx| {
-        let t = ctx.tasklet_id as usize;
-        let nt = ctx.n_tasklets as usize;
-        let win = ctx.mem_alloc(BLOCK);
-        let slots = ctx.mem_alloc_shared(1, nt * 8);
-        let wres = ctx.mem_alloc(8);
-        // phase 1: local accumulation (block-cyclic)
-        let mut acc = 0i64;
-        let mut blk = t;
-        while blk < n_blocks {
-            ctx.mram_read(in_sym.off() + blk * BLOCK, win, BLOCK);
-            let v: Vec<i64> = ctx.wram_get(win, EPB);
-            acc += v.iter().sum::<i64>();
-            ctx.compute(EPB as u64 * per_elem);
-            blk += nt;
-        }
-        ctx.wram_set(slots + t * 8, &[acc]);
-        // phase 2: combine partials
-        match version {
-            RedVersion::Single => {
-                ctx.barrier(0);
-                if t == 0 {
-                    let parts: Vec<i64> = ctx.wram_get(slots, nt);
-                    let total: i64 = parts.iter().sum();
-                    ctx.charge_stream(DType::I64, Op::Add, nt as u64);
-                    ctx.wram_set(wres, &[total]);
-                    ctx.mram_write(wres, out_off, 8);
-                }
+        sess.launch(sess.n_tasklets, move |_d, ctx: &mut Ctx| {
+            let t = ctx.tasklet_id as usize;
+            let nt = ctx.n_tasklets as usize;
+            let win = ctx.mem_alloc(BLOCK);
+            let slots = ctx.mem_alloc_shared(1, nt * 8);
+            let wres = ctx.mem_alloc(8);
+            // phase 1: local accumulation (block-cyclic)
+            let mut acc = 0i64;
+            let mut blk = t;
+            while blk < n_blocks {
+                ctx.mram_read(in_sym.off() + blk * BLOCK, win, BLOCK);
+                let v: Vec<i64> = ctx.wram_get(win, EPB);
+                acc += v.iter().sum::<i64>();
+                ctx.compute(EPB as u64 * per_elem);
+                blk += nt;
             }
-            RedVersion::TreeBarrier => {
-                let mut stride = 1usize;
-                let mut bid = 1u16;
-                while stride < nt {
-                    ctx.barrier(bid);
-                    bid += 1;
-                    if t % (2 * stride) == 0 && t + stride < nt {
-                        ctx.wram(|w| {
-                            let s = cast_slice_mut::<i64>(&mut w[slots..slots + nt * 8]);
-                            s[t] += s[t + stride];
-                        });
-                        ctx.charge_stream(DType::I64, Op::Add, 1);
+            ctx.wram_set(slots + t * 8, &[acc]);
+            // phase 2: combine partials
+            match version {
+                RedVersion::Single => {
+                    ctx.barrier(0);
+                    if t == 0 {
+                        let parts: Vec<i64> = ctx.wram_get(slots, nt);
+                        let total: i64 = parts.iter().sum();
+                        ctx.charge_stream(DType::I64, Op::Add, nt as u64);
+                        ctx.wram_set(wres, &[total]);
+                        ctx.mram_write(wres, out_off, 8);
                     }
-                    stride *= 2;
                 }
-                ctx.barrier(bid);
-                if t == 0 {
-                    let total: Vec<i64> = ctx.wram_get(slots, 1);
-                    ctx.wram_set(wres, &[total[0]]);
-                    ctx.mram_write(wres, out_off, 8);
-                }
-            }
-            RedVersion::TreeHandshake => {
-                // tasklet t waits for its tree children before adding
-                let mut stride = 1usize;
-                while stride < nt {
-                    if t % (2 * stride) == 0 {
-                        if t + stride < nt {
-                            ctx.handshake_wait_for((t + stride) as u32);
+                RedVersion::TreeBarrier => {
+                    let mut stride = 1usize;
+                    let mut bid = 1u16;
+                    while stride < nt {
+                        ctx.barrier(bid);
+                        bid += 1;
+                        if t % (2 * stride) == 0 && t + stride < nt {
                             ctx.wram(|w| {
                                 let s = cast_slice_mut::<i64>(&mut w[slots..slots + nt * 8]);
                                 s[t] += s[t + stride];
                             });
                             ctx.charge_stream(DType::I64, Op::Add, 1);
                         }
-                    } else if t % (2 * stride) == stride {
-                        ctx.handshake_notify();
-                        break;
+                        stride *= 2;
                     }
-                    stride *= 2;
+                    ctx.barrier(bid);
+                    if t == 0 {
+                        let total: Vec<i64> = ctx.wram_get(slots, 1);
+                        ctx.wram_set(wres, &[total[0]]);
+                        ctx.mram_write(wres, out_off, 8);
+                    }
                 }
-                if t == 0 {
-                    let total: Vec<i64> = ctx.wram_get(slots, 1);
-                    ctx.wram_set(wres, &[total[0]]);
-                    ctx.mram_write(wres, out_off, 8);
+                RedVersion::TreeHandshake => {
+                    // tasklet t waits for its tree children before adding
+                    let mut stride = 1usize;
+                    while stride < nt {
+                        if t % (2 * stride) == 0 {
+                            if t + stride < nt {
+                                ctx.handshake_wait_for((t + stride) as u32);
+                                ctx.wram(|w| {
+                                    let s =
+                                        cast_slice_mut::<i64>(&mut w[slots..slots + nt * 8]);
+                                    s[t] += s[t + stride];
+                                });
+                                ctx.charge_stream(DType::I64, Op::Add, 1);
+                            }
+                        } else if t % (2 * stride) == stride {
+                            ctx.handshake_notify();
+                            break;
+                        }
+                        stride *= 2;
+                    }
+                    if t == 0 {
+                        let total: Vec<i64> = ctx.wram_get(slots, 1);
+                        ctx.wram_set(wres, &[total[0]]);
+                        ctx.mram_write(wres, out_off, 8);
+                    }
                 }
             }
+        })
+    }
+
+    fn retrieve(&self, sess: &mut Session, _ds: &Dataset) -> Output {
+        let sum_sym = sess.state::<RedState>().sum_sym;
+        let nd = sess.set.n_dpus() as usize;
+        // host: gather per-DPU sums (8 B each, serial) and reduce
+        let mut total = 0i64;
+        for i in 0..nd {
+            total += sess.set.xfer(sum_sym).from().one(i, 1)[0];
         }
-    });
-
-    // host: gather per-DPU sums (8 B each, serial) and reduce
-    let mut total = 0i64;
-    for d in 0..nd {
-        total += set.xfer(sum_sym).from().one(d, 1)[0];
+        sess.set.host_merge((nd * 8) as u64, nd as u64);
+        Output::new(RedOut { total })
     }
-    set.host_merge((nd * 8) as u64, nd as u64);
 
-    BenchResult {
-        name: "RED",
-        breakdown: set.metrics,
-        verified: total == sum_ref,
-        work_items: n as u64,
-        dpu_instrs: stats.total_instrs(),
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        out.get::<RedOut>().total == ds.get::<RedData>().sum_ref
     }
+}
+
+/// One-shot run of a specific reduction variant (Fig. 21 / benches).
+pub fn run_red(version: RedVersion, rc: &RunConfig) -> crate::prim::common::BenchResult {
+    run_oneshot(&Red { version }, rc)
 }
 
 #[cfg(test)]

@@ -10,10 +10,15 @@
 //!
 //! Intra-DPU, both use the SEL-style handshake chain to propagate tasklet
 //! prefixes.
+//!
+//! Lifecycle: the input array is resident; each warm request re-scans it
+//! from a zeroed base (the base cell is re-broadcast per request, so
+//! re-execution is exact even though the inter-DPU phase overwrites it).
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
+use super::workload::{run_oneshot, Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::chunk_ranges;
+use crate::coordinator::{chunk_ranges, LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -94,7 +99,28 @@ fn local_scan_kernel(
     }
 }
 
-pub fn run_scan(kind: ScanKind, name: &'static str, rc: &RunConfig) -> BenchResult {
+// ------------------------------------------------ shared lifecycle stages
+
+struct ScanData {
+    input: Vec<i64>,
+    scan_ref: Vec<i64>,
+    n: usize,
+    per: usize,
+}
+
+struct ScanState {
+    in_sym: Symbol<i64>,
+    slot_sym: Symbol<i64>,
+    base_sym: Symbol<i64>,
+    out_sym: Symbol<i64>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScanOut {
+    pub result: Vec<i64>,
+}
+
+fn prepare_scan(rc: &RunConfig) -> Dataset {
     let n = rc.scaled(PAPER_N);
     let mut rng = Rng::new(rc.seed);
     let input = rng.vec_i64(n, 1 << 20);
@@ -105,52 +131,67 @@ pub fn run_scan(kind: ScanKind, name: &'static str, rc: &RunConfig) -> BenchResu
         scan_ref.push(acc);
         acc += x;
     }
-
-    let mut set = rc.alloc();
     let nd = rc.n_dpus as usize;
     let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
+    Dataset::new(n as u64, ScanData { input, scan_ref, n, per })
+}
+
+fn load_scan(sess: &mut Session, ds: &Dataset) {
+    let d = ds.get::<ScanData>();
+    let nd = sess.set.n_dpus() as usize;
     let bufs: Vec<Vec<i64>> = (0..nd)
-        .map(|d| {
-            let lo = (d * per).min(n);
-            let hi = ((d + 1) * per).min(n);
-            let mut v = input[lo..hi].to_vec();
-            v.resize(per, 0); // additive identity
+        .map(|i| {
+            let lo = (i * d.per).min(d.n);
+            let hi = ((i + 1) * d.per).min(d.n);
+            let mut v = d.input[lo..hi].to_vec();
+            v.resize(d.per, 0); // additive identity
             v
         })
         .collect();
-    let in_sym = set.symbol::<i64>(per);
-    let slot_sym = set.symbol::<i64>(rc.n_tasklets as usize);
-    let base_sym = set.symbol::<i64>(1);
-    let out_sym = set.symbol::<i64>(per);
-    set.xfer(in_sym).to().equal(&bufs);
-    let (slot_off, base_off, out_off) = (slot_sym.off(), base_sym.off(), out_sym.off());
-    // zero bases
-    set.xfer(base_sym).to().broadcast(&[0i64]);
+    let in_sym = sess.set.symbol::<i64>(d.per);
+    let slot_sym = sess.set.symbol::<i64>(sess.n_tasklets as usize);
+    let base_sym = sess.set.symbol::<i64>(1);
+    let out_sym = sess.set.symbol::<i64>(d.per);
+    sess.set.xfer(in_sym).to().equal(&bufs);
+    sess.put_state(ScanState { in_sym, slot_sym, base_sym, out_sym });
+}
 
-    let mut total_instrs = 0u64;
+fn execute_scan(kind: ScanKind, sess: &mut Session, ds: &Dataset) -> LaunchStats {
+    let d = ds.get::<ScanData>();
+    let (in_sym, slot_sym, base_sym, out_sym) = {
+        let st = sess.state::<ScanState>();
+        (st.in_sym, st.slot_sym, st.base_sym, st.out_sym)
+    };
+    let (slot_off, base_off, out_off) = (slot_sym.off(), base_sym.off(), out_sym.off());
+    let nd = sess.set.n_dpus() as usize;
+    let nt = sess.n_tasklets;
+    let per = d.per;
+    // zero bases — the inter-DPU phase below overwrites the cell, so a
+    // warm re-execute must reset it to reproduce the cold run exactly
+    sess.set.xfer(base_sym).to().broadcast(&[0i64]);
+
     match kind {
         ScanKind::Ssa => {
             // kernel 1: local scan (base 0)
-            let s1 = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+            sess.launch_seq(nt, |_d, ctx: &mut Ctx| {
                 local_scan_kernel(ctx, per, in_sym.off(), slot_off, out_off, base_off);
             });
-            total_instrs += s1.total_instrs();
             // host: gather per-DPU totals (last chain slot), scan, send bases
-            let last_slot = slot_sym.slice(rc.n_tasklets as usize - 1, 1);
+            let last_slot = slot_sym.slice(nt as usize - 1, 1);
             let mut bases = Vec::with_capacity(nd);
             let mut running = 0i64;
-            for d in 0..nd {
+            for i in 0..nd {
                 bases.push(running);
-                running += set.xfer(last_slot).inter().from().one(d, 1)[0];
+                running += sess.set.xfer(last_slot).inter().from().one(i, 1)[0];
             }
-            set.host_merge((nd * 8) as u64, nd as u64);
-            for (d, b) in bases.iter().enumerate() {
-                set.xfer(base_sym).inter().to().one(d, &[*b]);
+            sess.set.host_merge((nd * 8) as u64, nd as u64);
+            for (i, b) in bases.iter().enumerate() {
+                sess.set.xfer(base_sym).inter().to().one(i, &[*b]);
             }
             // kernel 2: Add base to every output element
             let per_elem = (2 * isa::WRAM_LS + isa::LOOP_CTRL) as u64
                 + isa::op_instrs(DType::I64, Op::Add) as u64;
-            let s2 = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+            sess.launch_seq(nt, |_d, ctx: &mut Ctx| {
                 let win = ctx.mem_alloc(BLOCK);
                 let wb = ctx.mem_alloc(8);
                 ctx.mram_read(base_off, wb, 8);
@@ -169,8 +210,7 @@ pub fn run_scan(kind: ScanKind, name: &'static str, rc: &RunConfig) -> BenchResu
                     ctx.mram_write(win, out_off + k * 8, cnt * 8);
                     k += cnt;
                 }
-            });
-            total_instrs += s2.total_instrs();
+            })
         }
         ScanKind::Rss => {
             // kernel 1: per-DPU reduction (reuse the chain: the last slot
@@ -179,11 +219,11 @@ pub fn run_scan(kind: ScanKind, name: &'static str, rc: &RunConfig) -> BenchResu
             let per_elem = (isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
                 + isa::op_instrs(DType::I64, Op::Add) as u64;
             let n_blocks = per / EPB;
-            let s1 = set.launch(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+            sess.launch(nt, |_d, ctx: &mut Ctx| {
                 let t = ctx.tasklet_id as usize;
-                let nt = ctx.n_tasklets as usize;
+                let ntl = ctx.n_tasklets as usize;
                 let win = ctx.mem_alloc(BLOCK);
-                let slots = ctx.mem_alloc_shared(1, nt * 8);
+                let slots = ctx.mem_alloc_shared(1, ntl * 8);
                 let wres = ctx.mem_alloc(8);
                 let mut acc = 0i64;
                 let mut blk = t;
@@ -192,59 +232,57 @@ pub fn run_scan(kind: ScanKind, name: &'static str, rc: &RunConfig) -> BenchResu
                     let v: Vec<i64> = ctx.wram_get(win, EPB);
                     acc += v.iter().sum::<i64>();
                     ctx.compute(EPB as u64 * per_elem);
-                    blk += nt;
+                    blk += ntl;
                 }
                 ctx.wram_set(slots + t * 8, &[acc]);
                 ctx.barrier(0);
                 if t == 0 {
-                    let parts: Vec<i64> = ctx.wram_get(slots, nt);
-                    ctx.charge_stream(DType::I64, Op::Add, nt as u64);
+                    let parts: Vec<i64> = ctx.wram_get(slots, ntl);
+                    ctx.charge_stream(DType::I64, Op::Add, ntl as u64);
                     ctx.wram_set(wres, &[parts.iter().sum::<i64>()]);
                     ctx.mram_write(wres, slot_off, 8);
                 }
             });
-            total_instrs += s1.total_instrs();
             // host scan of totals
             let mut bases = Vec::with_capacity(nd);
             let mut running = 0i64;
-            for d in 0..nd {
+            for i in 0..nd {
                 bases.push(running);
-                running += set.xfer(slot_sym).inter().from().one(d, 1)[0];
+                running += sess.set.xfer(slot_sym).inter().from().one(i, 1)[0];
             }
-            set.host_merge((nd * 8) as u64, nd as u64);
-            for (d, b) in bases.iter().enumerate() {
-                set.xfer(base_sym).inter().to().one(d, &[*b]);
+            sess.set.host_merge((nd * 8) as u64, nd as u64);
+            for (i, b) in bases.iter().enumerate() {
+                sess.set.xfer(base_sym).inter().to().one(i, &[*b]);
             }
             // kernel 2: local scan seeded with the base
-            let s2 = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+            sess.launch_seq(nt, |_d, ctx: &mut Ctx| {
                 local_scan_kernel(ctx, per, in_sym.off(), slot_off, out_off, base_off);
-            });
-            total_instrs += s2.total_instrs();
+            })
         }
     }
+}
 
+fn retrieve_scan(sess: &mut Session, ds: &Dataset) -> Output {
+    let d = ds.get::<ScanData>();
+    let out_sym = sess.state::<ScanState>().out_sym;
     // retrieve the full scanned array (parallel — equal sizes)
-    let parts = set.xfer(out_sym).from().all();
-    let mut result = Vec::with_capacity(n);
-    for (d, p) in parts.iter().enumerate() {
-        let lo = (d * per).min(n);
-        let hi = ((d + 1) * per).min(n);
+    let parts = sess.set.xfer(out_sym).from().all();
+    let mut result = Vec::with_capacity(d.n);
+    for (i, p) in parts.iter().enumerate() {
+        let lo = (i * d.per).min(d.n);
+        let hi = ((i + 1) * d.per).min(d.n);
         result.extend_from_slice(&p[..hi - lo]);
     }
-    let verified = result == scan_ref;
+    Output::new(ScanOut { result })
+}
 
-    BenchResult {
-        name,
-        breakdown: set.metrics,
-        verified,
-        work_items: n as u64,
-        dpu_instrs: total_instrs,
-    }
+fn verify_scan(ds: &Dataset, out: &Output) -> bool {
+    out.get::<ScanOut>().result == ds.get::<ScanData>().scan_ref
 }
 
 pub struct ScanSsa;
 
-impl PrimBench for ScanSsa {
+impl Workload for ScanSsa {
     fn name(&self) -> &'static str {
         "SCAN-SSA"
     }
@@ -262,14 +300,37 @@ impl PrimBench for ScanSsa {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
-        run_scan(ScanKind::Ssa, "SCAN-SSA", rc)
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
+        prepare_scan(rc)
+    }
+
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        load_scan(sess, ds);
+        sess.mark_loaded("SCAN-SSA");
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        _staged: Staged,
+    ) -> LaunchStats {
+        execute_scan(ScanKind::Ssa, sess, ds)
+    }
+
+    fn retrieve(&self, sess: &mut Session, ds: &Dataset) -> Output {
+        retrieve_scan(sess, ds)
+    }
+
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        verify_scan(ds, out)
     }
 }
 
 pub struct ScanRss;
 
-impl PrimBench for ScanRss {
+impl Workload for ScanRss {
     fn name(&self) -> &'static str {
         "SCAN-RSS"
     }
@@ -287,14 +348,50 @@ impl PrimBench for ScanRss {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
-        run_scan(ScanKind::Rss, "SCAN-RSS", rc)
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
+        prepare_scan(rc)
+    }
+
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        load_scan(sess, ds);
+        sess.mark_loaded("SCAN-RSS");
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        _staged: Staged,
+    ) -> LaunchStats {
+        execute_scan(ScanKind::Rss, sess, ds)
+    }
+
+    fn retrieve(&self, sess: &mut Session, ds: &Dataset) -> Output {
+        retrieve_scan(sess, ds)
+    }
+
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        verify_scan(ds, out)
+    }
+}
+
+/// One-shot run of a specific scan variant (kept for the Fig. 22 harness).
+pub fn run_scan(
+    kind: ScanKind,
+    _name: &'static str,
+    rc: &RunConfig,
+) -> crate::prim::common::BenchResult {
+    match kind {
+        ScanKind::Ssa => run_oneshot(&ScanSsa, rc),
+        ScanKind::Rss => run_oneshot(&ScanRss, rc),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prim::common::PrimBench;
 
     #[test]
     fn ssa_verifies() {
@@ -342,6 +439,29 @@ mod tests {
             };
             assert!(ScanSsa.run(&rc).verified, "nt={nt}");
             assert!(ScanRss.run(&rc).verified, "nt={nt}");
+        }
+    }
+
+    /// The base cell is overwritten by the inter-DPU phase; the
+    /// per-request reset makes warm re-execution exact for both variants.
+    #[test]
+    fn warm_rescan_is_exact() {
+        for (w, name) in [(&ScanSsa as &dyn Workload, "SSA"), (&ScanRss as &dyn Workload, "RSS")] {
+            let rc = RunConfig {
+                n_dpus: 3,
+                scale: 0.001,
+                ..RunConfig::rank_default()
+            };
+            let ds = w.prepare(&rc);
+            let mut sess = rc.session();
+            w.load(&mut sess, &ds);
+            w.execute(&mut sess, &ds, &Request::new(0, rc.seed), Staged::empty());
+            let first = w.retrieve(&mut sess, &ds);
+            assert!(w.verify(&ds, &first), "{name} cold");
+            w.execute(&mut sess, &ds, &Request::new(1, rc.seed ^ 5), Staged::empty());
+            let second = w.retrieve(&mut sess, &ds);
+            assert!(w.verify(&ds, &second), "{name} warm");
+            assert_eq!(first.get::<ScanOut>(), second.get::<ScanOut>());
         }
     }
 }

@@ -13,10 +13,15 @@
 //!
 //! The same machinery implements UNI (§4.5) — the handshake additionally
 //! carries the predecessor's last element value.
+//!
+//! Lifecycle: the input array is resident; warm requests re-run the
+//! compaction against it (streaming workload — the kernel never mutates
+//! its input region, so re-execution is exact).
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
+use super::workload::{Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::{chunk_ranges, ragged_counts, Bucket, Symbol};
+use crate::coordinator::{chunk_ranges, ragged_counts, Bucket, LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -185,8 +190,27 @@ pub fn compact_kernel(ctx: &mut Ctx, kind: CompactKind, syms: CompactSyms, my_el
     }
 }
 
-/// Shared host-side driver for SEL/UNI.
-pub fn run_compaction(kind: CompactKind, name: &'static str, rc: &RunConfig) -> BenchResult {
+// ------------------------------------------------ shared lifecycle stages
+
+pub(super) struct CompactData {
+    input: Vec<i64>,
+    reference: Vec<i64>,
+    n: usize,
+    per: usize,
+    counts: Vec<usize>,
+}
+
+struct CompactState {
+    syms: CompactSyms,
+}
+
+/// Retrieved, host-merged compaction result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompactOut {
+    pub result: Vec<i64>,
+}
+
+pub(super) fn prepare_compact(kind: CompactKind, rc: &RunConfig) -> Dataset {
     let n = rc.scaled(PAPER_N);
     let mut rng = Rng::new(rc.seed);
     // UNI wants runs of equal consecutive values; SEL wants a value mix
@@ -220,28 +244,44 @@ pub fn run_compaction(kind: CompactKind, name: &'static str, rc: &RunConfig) -> 
         }
     };
 
-    let mut set = rc.alloc();
     let nd = rc.n_dpus as usize;
     let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
-    let syms = CompactSyms::alloc(&mut set, per, rc.n_tasklets);
+    let counts = ragged_counts(n, per, nd);
+    Dataset::new(n as u64, CompactData { input, reference, n, per, counts })
+}
+
+pub(super) fn load_compact(sess: &mut Session, ds: &Dataset) {
+    let d = ds.get::<CompactData>();
+    let nd = sess.set.n_dpus() as usize;
+    assert_eq!(nd, d.counts.len(), "session fleet must match the dataset");
+    let syms = CompactSyms::alloc(&mut sess.set, d.per, sess.n_tasklets);
     // exact per-DPU slices — ragged transfers need no predicate-aware
     // sentinel padding
-    let counts = ragged_counts(n, per, nd);
     let bufs: Vec<Vec<i64>> = (0..nd)
-        .map(|d| input[(d * per).min(n)..((d + 1) * per).min(n)].to_vec())
+        .map(|i| d.input[(i * d.per).min(d.n)..((i + 1) * d.per).min(d.n)].to_vec())
         .collect();
-    set.xfer(syms.input).to().ragged(&bufs);
+    sess.set.xfer(syms.input).to().ragged(&bufs);
+    sess.put_state(CompactState { syms });
+}
 
-    let counts_ref = &counts;
-    let stats = set.launch_seq(rc.n_tasklets, |d, ctx: &mut Ctx| {
-        compact_kernel(ctx, kind, syms, counts_ref[d]);
-    });
+pub(super) fn execute_compact(kind: CompactKind, sess: &mut Session, ds: &Dataset) -> LaunchStats {
+    let d = ds.get::<CompactData>();
+    let syms = sess.state::<CompactState>().syms;
+    let counts_ref = &d.counts;
+    sess.launch_seq(sess.n_tasklets, move |dpu, ctx: &mut Ctx| {
+        compact_kernel(ctx, kind, syms, counts_ref[dpu]);
+    })
+}
 
+pub(super) fn retrieve_compact(kind: CompactKind, sess: &mut Session, ds: &Dataset) -> Output {
+    let d = ds.get::<CompactData>();
+    let syms = sess.state::<CompactState>().syms;
+    let nd = sess.set.n_dpus() as usize;
     // serial retrieval + host merge (the paper's final merge step)
-    let mut result: Vec<i64> = Vec::new();
-    for d in 0..nd {
-        let cnt = set.xfer(syms.count).from().one(d, 1)[0] as usize;
-        let vals = set.xfer(syms.output).from().one(d, cnt);
+    let mut result: Vec<i64> = Vec::with_capacity(d.n);
+    for dpu in 0..nd {
+        let cnt = sess.set.xfer(syms.count).from().one(dpu, 1)[0] as usize;
+        let vals = sess.set.xfer(syms.output).from().one(dpu, cnt);
         // host merge: UNI must also dedup across DPU boundaries. The merge
         // is part of result *retrieval* (the paper's SEL/UNI merge happens
         // while serially copying each DPU's output into place), so its
@@ -256,23 +296,18 @@ pub fn run_compaction(kind: CompactKind, name: &'static str, rc: &RunConfig) -> 
                 }
             }
         }
-        set.host_merge_in(Bucket::DpuCpu, (cnt * 8) as u64, cnt as u64);
+        sess.set.host_merge_in(Bucket::DpuCpu, (cnt * 8) as u64, cnt as u64);
     }
+    Output::new(CompactOut { result })
+}
 
-    let verified = result == reference;
-
-    BenchResult {
-        name,
-        breakdown: set.metrics,
-        verified,
-        work_items: n as u64,
-        dpu_instrs: stats.total_instrs(),
-    }
+pub(super) fn verify_compact(ds: &Dataset, out: &Output) -> bool {
+    out.get::<CompactOut>().result == ds.get::<CompactData>().reference
 }
 
 pub struct Sel;
 
-impl PrimBench for Sel {
+impl Workload for Sel {
     fn name(&self) -> &'static str {
         "SEL"
     }
@@ -290,14 +325,38 @@ impl PrimBench for Sel {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
-        run_compaction(CompactKind::Select, "SEL", rc)
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
+        prepare_compact(CompactKind::Select, rc)
+    }
+
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        load_compact(sess, ds);
+        sess.mark_loaded("SEL");
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        _staged: Staged,
+    ) -> LaunchStats {
+        execute_compact(CompactKind::Select, sess, ds)
+    }
+
+    fn retrieve(&self, sess: &mut Session, ds: &Dataset) -> Output {
+        retrieve_compact(CompactKind::Select, sess, ds)
+    }
+
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        verify_compact(ds, out)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prim::common::PrimBench;
 
     #[test]
     fn verifies_small() {
@@ -347,5 +406,29 @@ mod tests {
             Sel.run(&rc).breakdown.dpu_cpu
         };
         assert!(mk(8) > mk(2));
+    }
+
+    /// Warm re-execute: the compaction kernel never mutates its input, so
+    /// a second request reproduces the result bit-for-bit with no reload.
+    #[test]
+    fn warm_reexecute_is_exact() {
+        let rc = RunConfig {
+            n_dpus: 3,
+            scale: 0.001,
+            ..RunConfig::rank_default()
+        };
+        let ds = Sel.prepare(&rc);
+        let mut sess = rc.session();
+        Sel.load(&mut sess, &ds);
+        let req0 = Request::new(0, rc.seed);
+        Sel.execute(&mut sess, &ds, &req0, Staged::empty());
+        let first = Sel.retrieve(&mut sess, &ds);
+        let pushed = sess.set.metrics.bytes_to_dpu;
+        let req1 = Request::new(1, rc.seed ^ 99);
+        Sel.execute(&mut sess, &ds, &req1, Staged::empty());
+        let second = Sel.retrieve(&mut sess, &ds);
+        assert_eq!(first.get::<CompactOut>(), second.get::<CompactOut>());
+        assert!(Sel.verify(&ds, &second));
+        assert_eq!(sess.set.metrics.bytes_to_dpu, pushed, "no input reload");
     }
 }

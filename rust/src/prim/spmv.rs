@@ -3,12 +3,17 @@
 //! but serial transfers (per-DPU sizes differ) and heavy float
 //! multiplication — the reasons SpMV is one of the three benchmarks where
 //! PIM loses to the CPU (§5.2).
+//!
+//! Lifecycle: the CSR slices and the replicated `x` vector are resident;
+//! warm requests re-execute the multiply (streaming workload).
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
+use super::workload::{Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::chunk_ranges;
+use crate::coordinator::{chunk_ranges, LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::data::{banded_matrix, Csr};
+use std::ops::Range;
 
 /// bcsstk30 statistics: n = 28,924, ~2.04 M nonzeros (~70/row, banded).
 const PAPER_N: usize = 28_924;
@@ -18,7 +23,33 @@ const BLOCK: usize = 1024;
 
 pub struct Spmv;
 
-impl PrimBench for Spmv {
+pub struct SpmvData {
+    mat: Csr,
+    x: Vec<f32>,
+    y_ref: Vec<f32>,
+    n: usize,
+    row_parts: Vec<Range<usize>>,
+}
+
+#[derive(Clone, Copy)]
+struct SpmvSyms {
+    x_sym: Symbol<f32>,
+    rp_sym: Symbol<u32>,
+    ci_sym: Symbol<u32>,
+    va_sym: Symbol<f32>,
+    y_sym: Symbol<f32>,
+}
+
+struct SpmvState {
+    syms: SpmvSyms,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpmvOut {
+    pub y: Vec<f32>,
+}
+
+impl Workload for Spmv {
     fn name(&self) -> &'static str {
         "SpMV"
     }
@@ -36,56 +67,78 @@ impl PrimBench for Spmv {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
         let n = rc.scaled(PAPER_N);
         let mat: Csr = banded_matrix(n, BAND, FILL, rc.seed);
         let x: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.25).collect();
         let y_ref = mat.spmv_ref(&x);
+        let row_parts = chunk_ranges(n, rc.n_dpus as usize);
+        let work = mat.nnz() as u64;
+        Dataset::new(work, SpmvData { mat, x, y_ref, n, row_parts })
+    }
 
-        let mut set = rc.alloc();
-        let nd = rc.n_dpus as usize;
-        let row_parts = chunk_ranges(n, nd);
-
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        let d = ds.get::<SpmvData>();
+        let nd = sess.set.n_dpus() as usize;
+        assert_eq!(nd, d.row_parts.len(), "session fleet must match the prepared dataset");
         // symbol capacities: the widest per-DPU CSR slice (symbols live at
         // one fleet-wide offset, like linker-placed SDK symbols)
-        let max_rows = row_parts.iter().map(|r| r.len()).max().unwrap_or(0);
-        let max_nnz = row_parts
+        let max_rows = d.row_parts.iter().map(|r| r.len()).max().unwrap_or(0);
+        let max_nnz = d
+            .row_parts
             .iter()
-            .map(|r| (mat.row_ptr[r.end] - mat.row_ptr[r.start]) as usize)
+            .map(|r| (d.mat.row_ptr[r.end] - d.mat.row_ptr[r.start]) as usize)
             .max()
             .unwrap_or(0);
-        let x_sym = set.symbol::<f32>(n);
-        let rp_sym = set.symbol::<u32>(max_rows + 1);
-        let ci_sym = set.symbol::<u32>(max_nnz);
-        let va_sym = set.symbol::<f32>(max_nnz);
-        let y_sym = set.symbol::<f32>(max_rows * 2);
+        let x_sym = sess.set.symbol::<f32>(d.n);
+        let rp_sym = sess.set.symbol::<u32>(max_rows + 1);
+        let ci_sym = sess.set.symbol::<u32>(max_nnz);
+        let va_sym = sess.set.symbol::<f32>(max_nnz);
+        let y_sym = sess.set.symbol::<f32>(max_rows * 2);
 
         // x replicated on every DPU (broadcast); CSR pieces are serial
         // per-DPU copies because sizes differ (§5.1.1)
-        set.xfer(x_sym).to().broadcast(&x);
-        let mut layouts = Vec::with_capacity(nd);
-        for (d, r) in row_parts.iter().enumerate() {
-            let rp_raw: Vec<u32> = mat.row_ptr[r.start..=r.end].to_vec();
+        sess.set.xfer(x_sym).to().broadcast(&d.x);
+        for (i, r) in d.row_parts.iter().enumerate() {
+            let rp_raw: Vec<u32> = d.mat.row_ptr[r.start..=r.end].to_vec();
             let base = rp_raw[0];
             let rp: Vec<u32> = rp_raw.iter().map(|v| v - base).collect();
-            let nnz = (mat.row_ptr[r.end] - mat.row_ptr[r.start]) as usize;
-            let ci = mat.col_idx[base as usize..base as usize + nnz].to_vec();
-            let vals = mat.values[base as usize..base as usize + nnz].to_vec();
-            set.xfer(rp_sym).to().one(d, &rp);
-            set.xfer(ci_sym).to().one(d, &ci);
-            set.xfer(va_sym).to().one(d, &vals);
-            layouts.push((r.clone(), nnz));
+            let nnz = (d.mat.row_ptr[r.end] - d.mat.row_ptr[r.start]) as usize;
+            let ci = d.mat.col_idx[base as usize..base as usize + nnz].to_vec();
+            let vals = d.mat.values[base as usize..base as usize + nnz].to_vec();
+            sess.set.xfer(rp_sym).to().one(i, &rp);
+            sess.set.xfer(ci_sym).to().one(i, &ci);
+            sess.set.xfer(va_sym).to().one(i, &vals);
         }
-        let (x_off, rp_off, ci_off, va_off, y_off) =
-            (x_sym.off(), rp_sym.off(), ci_sym.off(), va_sym.off(), y_sym.off());
+        sess.put_state(SpmvState {
+            syms: SpmvSyms { x_sym, rp_sym, ci_sym, va_sym, y_sym },
+        });
+        sess.mark_loaded("SpMV");
+    }
 
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        _staged: Staged,
+    ) -> LaunchStats {
+        let d = ds.get::<SpmvData>();
+        let syms = sess.state::<SpmvState>().syms;
+        let (x_off, rp_off, ci_off, va_off, y_off) = (
+            syms.x_sym.off(),
+            syms.rp_sym.off(),
+            syms.ci_sym.off(),
+            syms.va_sym.off(),
+            syms.y_sym.off(),
+        );
+        let arch = sess.set.cfg.dpu;
         let per_nnz_instrs = (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
-            + isa::op_instrs_for(&rc.sys.dpu, DType::F32, Op::Mul) as u64
-            + isa::op_instrs_for(&rc.sys.dpu, DType::F32, Op::Add) as u64;
-
-        let layouts_ref = &layouts;
-        let stats = set.launch_seq(rc.n_tasklets, |d, ctx: &mut Ctx| {
-            let (rows, _) = layouts_ref[d].clone();
+            + isa::op_instrs_for(&arch, DType::F32, Op::Mul) as u64
+            + isa::op_instrs_for(&arch, DType::F32, Op::Add) as u64;
+        let row_parts = &d.row_parts;
+        sess.launch_seq(sess.n_tasklets, |dpu, ctx: &mut Ctx| {
+            let rows = row_parts[dpu].clone();
             let n_rows = rows.len();
             let wrp = ctx.mem_alloc(BLOCK);
             let wci = ctx.mem_alloc(BLOCK);
@@ -133,34 +186,38 @@ impl PrimBench for Spmv {
                 ctx.wram_set(wy, &[acc, 0.0]);
                 ctx.mram_write(wy, y_off + r * 8, 8);
             }
-        });
+        })
+    }
 
+    fn retrieve(&self, sess: &mut Session, ds: &Dataset) -> Output {
+        let d = ds.get::<SpmvData>();
+        let y_sym = sess.state::<SpmvState>().syms.y_sym;
         // serial result retrieval (per paper)
-        let mut verified = true;
-        for (d, (rows, _nnz)) in layouts.iter().cloned().enumerate() {
-            let pairs = set.xfer(y_sym).from().one(d, rows.len() * 2);
-            for (i, r) in rows.clone().enumerate() {
-                let got = pairs[i * 2];
-                let want = y_ref[r];
-                if (got - want).abs() > 1e-3 * (1.0 + want.abs()) {
-                    verified = false;
-                }
+        let mut y = vec![0f32; d.n];
+        for (i, rows) in d.row_parts.iter().enumerate() {
+            let pairs = sess.set.xfer(y_sym).from().one(i, rows.len() * 2);
+            for (k, r) in rows.clone().enumerate() {
+                y[r] = pairs[k * 2];
             }
         }
+        Output::new(SpmvOut { y })
+    }
 
-        BenchResult {
-            name: self.name(),
-            breakdown: set.metrics,
-            verified,
-            work_items: mat.nnz() as u64,
-            dpu_instrs: stats.total_instrs(),
-        }
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        let d = ds.get::<SpmvData>();
+        let o = out.get::<SpmvOut>();
+        o.y.len() == d.y_ref.len()
+            && o.y
+                .iter()
+                .zip(&d.y_ref)
+                .all(|(got, want)| (got - want).abs() <= 1e-3 * (1.0 + want.abs()))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prim::common::PrimBench;
 
     #[test]
     fn verifies_small() {

@@ -11,9 +11,17 @@
 //!
 //! int64 elements; step-3 is mutex-limited, so its best tasklet count is 8
 //! (Key Obs. 11).
+//!
+//! Lifecycle: TRNS is the suite's exception — its input layout **is** the
+//! step-1 transfer, and step 2 transposes it in place, so every request
+//! (warm or cold) re-pushes the matrix. The staged API makes Key Obs. 13
+//! structural: `load` only carves symbols; `execute` pays the dominant
+//! CPU-DPU cost each time.
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
+use super::workload::{Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
+use crate::coordinator::{LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::pod::cast_slice_mut;
 use crate::util::Rng;
@@ -25,7 +33,26 @@ pub const TILE_N: usize = 8;
 
 pub struct Trns;
 
-impl PrimBench for Trns {
+pub struct TrnsData {
+    mat: Vec<i64>,
+    mp: usize,
+    grid: usize,
+    n: usize,
+    nd: usize,
+}
+
+#[derive(Clone, Copy)]
+struct TrnsState {
+    in_sym: Symbol<i64>,
+    out_sym: Symbol<i64>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TrnsOut {
+    pub parts: Vec<Vec<i64>>,
+}
+
+impl Workload for Trns {
     fn name(&self) -> &'static str {
         "TRNS"
     }
@@ -47,35 +74,56 @@ impl PrimBench for Trns {
         8
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
         let nd = rc.n_dpus as usize;
         let mp = rc.scaled(PAPER_MPRIME).max(TILE_N * 2); // M'
         let (m, n) = (mp * TILE_M, nd * TILE_N); // full matrix M×N
         let mut rng = Rng::new(rc.seed);
         let mat: Vec<i64> = (0..m * n).map(|_| rng.next_u64() as i64).collect();
+        Dataset::new((m * n) as u64, TrnsData { mat, mp, grid: mp * TILE_N, n, nd })
+    }
 
-        let mut set = rc.alloc();
-        let grid = mp * TILE_N;
-        let in_sym = set.symbol::<i64>(mp * TILE_M * TILE_N);
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        let d = ds.get::<TrnsData>();
+        assert_eq!(sess.set.n_dpus() as usize, d.nd, "session fleet must match the dataset");
+        let in_sym = sess.set.symbol::<i64>(d.mp * TILE_M * TILE_N);
         // (step-3 claim flags live entirely in shared WRAM — no MRAM region)
-        let out_sym = set.symbol::<i64>(grid * TILE_M);
-        // step 1: M'×m transfers of n elements per DPU; DPU d receives
-        // column-tile d laid out as [j][r][n] (j = 0..M', r = 0..m)
-        for d in 0..nd {
+        let out_sym = sess.set.symbol::<i64>(d.grid * TILE_M);
+        sess.put_state(TrnsState { in_sym, out_sym });
+        sess.mark_loaded("TRNS");
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        _staged: Staged,
+    ) -> LaunchStats {
+        let d = ds.get::<TrnsData>();
+        let st = *sess.state::<TrnsState>();
+        let (in_off, out_off) = (st.in_sym.off(), st.out_sym.off());
+        let (mp, grid, n, nd) = (d.mp, d.grid, d.n, d.nd);
+
+        // step 1: M'×m transfers of n elements per DPU; DPU dd receives
+        // column-tile dd laid out as [j][r][n] (j = 0..M', r = 0..m)
+        for dd in 0..nd {
             for j in 0..mp {
                 for r in 0..TILE_M {
                     let row = j * TILE_M + r;
-                    let src = &mat[row * n + d * TILE_N..row * n + d * TILE_N + TILE_N];
-                    set.xfer(in_sym.slice((j * TILE_M + r) * TILE_N, TILE_N)).to().one(d, src);
+                    let src = &d.mat[row * n + dd * TILE_N..row * n + dd * TILE_N + TILE_N];
+                    sess.set
+                        .xfer(st.in_sym.slice((j * TILE_M + r) * TILE_N, TILE_N))
+                        .to()
+                        .one(dd, src);
                 }
             }
         }
-        let (in_off, out_off) = (in_sym.off(), out_sym.off());
 
         let tile_bytes = TILE_M * TILE_N * 8; // 1 KB tiles
         let per_elem_s2 = (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64;
         // step 2: transpose each m×n tile in place (WRAM)
-        let s2 = set.launch_seq(rc.n_tasklets, |_d, ctx: &mut Ctx| {
+        sess.launch_seq(sess.n_tasklets, |_d, ctx: &mut Ctx| {
             let wt = ctx.mem_alloc(tile_bytes);
             let mut j = ctx.tasklet_id as usize;
             while j < mp {
@@ -101,9 +149,11 @@ impl PrimBench for Trns {
         // one read + one write per tile — without the cycle bookkeeping
         // affecting data layout).
         let vec_bytes = TILE_M * 8; // m-element tile vector = 128 B
+        let arch = sess.set.cfg.dpu;
         let per_tile_s3 = (4 * isa::ADDR_CALC + isa::LOOP_CTRL) as u64
-            + 2 * isa::op_instrs_for(&rc.sys.dpu, DType::I64, Op::Mul) as u64;
-        let s3 = set.launch_seq(self.best_tasklets().min(rc.n_tasklets), |_d, ctx: &mut Ctx| {
+            + 2 * isa::op_instrs_for(&arch, DType::I64, Op::Mul) as u64;
+        let s3_tasklets = Workload::best_tasklets(self).min(sess.n_tasklets);
+        sess.launch_seq(s3_tasklets, |_d, ctx: &mut Ctx| {
             let t = ctx.tasklet_id as usize;
             let nt = ctx.n_tasklets as usize;
             let wv = ctx.mem_alloc(vec_bytes);
@@ -133,41 +183,41 @@ impl PrimBench for Trns {
                 }
                 pos += nt;
             }
-        });
+        })
+    }
 
-        // retrieval: DPU d holds rows d*n' .. of the transposed matrix
+    fn retrieve(&self, sess: &mut Session, _ds: &Dataset) -> Output {
+        let out_sym = sess.state::<TrnsState>().out_sym;
+        // retrieval: DPU dd holds rows dd*n' .. of the transposed matrix
         // (equal sizes → parallel)
-        let parts = set.xfer(out_sym).from().all();
-        // verify: T[dn + c][j*m + r] == mat[(j*m + r)*n + d*n + c]
-        let mut verified = true;
-        'outer: for (d, p) in parts.iter().enumerate() {
+        Output::new(TrnsOut { parts: sess.set.xfer(out_sym).from().all() })
+    }
+
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        let d = ds.get::<TrnsData>();
+        let o = out.get::<TrnsOut>();
+        // T[dn + c][j*m + r] == mat[(j*m + r)*n + d*n + c]
+        for (dd, p) in o.parts.iter().enumerate() {
             for c in 0..TILE_N {
-                for j in 0..mp {
+                for j in 0..d.mp {
                     for r in 0..TILE_M {
-                        let got = p[(c * mp + j) * TILE_M + r];
-                        let want = mat[(j * TILE_M + r) * n + d * TILE_N + c];
+                        let got = p[(c * d.mp + j) * TILE_M + r];
+                        let want = d.mat[(j * TILE_M + r) * d.n + dd * TILE_N + c];
                         if got != want {
-                            verified = false;
-                            break 'outer;
+                            return false;
                         }
                     }
                 }
             }
         }
-
-        BenchResult {
-            name: self.name(),
-            breakdown: set.metrics,
-            verified,
-            work_items: (m * n) as u64,
-            dpu_instrs: s2.total_instrs() + s3.total_instrs(),
-        }
+        true
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prim::common::PrimBench;
 
     #[test]
     fn verifies_small() {

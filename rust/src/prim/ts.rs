@@ -13,12 +13,19 @@
 //! Distance is the sum of squared differences over the window (the integer
 //! analogue of the z-normalized Euclidean profile — same add/sub/mul mix
 //! the paper's Table 2 lists for TS).
+//!
+//! Lifecycle: the series slices are resident; each request stages a fresh
+//! query window (an exact slice of the series at a seeded position, so a
+//! zero-distance match always exists) — query-style serving over warm
+//! series data.
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
+use super::workload::{Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::chunk_ranges;
+use crate::coordinator::{chunk_ranges, LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::data::time_series;
+use crate::util::Rng;
 
 /// Paper dataset (Table 3): 512 K elements, 256-element query.
 const PAPER_N: usize = 524_288;
@@ -38,7 +45,37 @@ fn ssd(window: &[i32], query: &[i32]) -> i64 {
         .sum()
 }
 
-impl PrimBench for Ts {
+/// Host dataset: the series plus the per-DPU overlap-slice partition.
+pub struct TsData {
+    series: Vec<i32>,
+    n: usize,
+    positions: usize,
+    per_pos: usize,
+    slice_elems: usize,
+    counts: Vec<usize>,
+    nd: usize,
+}
+
+struct TsState {
+    series_sym: Symbol<i32>,
+    q_sym: Symbol<i32>,
+    out_sym: Symbol<i64>,
+    cur_query: Vec<i32>,
+}
+
+pub struct TsStaged {
+    pub query: Vec<i32>,
+}
+
+/// Retrieved result: the query and the global minimum it found.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TsOut {
+    pub query: Vec<i32>,
+    pub best: i64,
+    pub best_pos: usize,
+}
+
+impl Workload for Ts {
     fn name(&self) -> &'static str {
         "TS"
     }
@@ -56,22 +93,9 @@ impl PrimBench for Ts {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
         let n = rc.scaled(PAPER_N).max(4 * QUERY_LEN);
-        let (series, query) = time_series(n, QUERY_LEN, rc.seed);
-
-        // reference: global minimum SSD and position
-        let mut best_ref = i64::MAX;
-        let mut pos_ref = 0usize;
-        for p in 0..=(n - QUERY_LEN) {
-            let d = ssd(&series[p..p + QUERY_LEN], &query);
-            if d < best_ref {
-                best_ref = d;
-                pos_ref = p;
-            }
-        }
-
-        let mut set = rc.alloc();
+        let (series, _seed_query) = time_series(n, QUERY_LEN, rc.seed);
         let nd = rc.n_dpus as usize;
         let positions = n - QUERY_LEN + 1;
         // even per-DPU position stride keeps every ragged slice start on
@@ -83,28 +107,65 @@ impl PrimBench for Ts {
         let slice_elems = per_pos + QUERY_LEN; // even; QUERY_LEN-1 overlap + 1
         let counts: Vec<usize> =
             (0..nd).map(|d| slice_elems.min(n.saturating_sub(d * per_pos))).collect();
-        let bufs: Vec<Vec<i32>> = (0..nd)
-            .map(|d| {
-                let lo = (d * per_pos).min(n);
-                series[lo..lo + counts[d]].to_vec()
+        Dataset::new(
+            positions as u64,
+            TsData { series, n, positions, per_pos, slice_elems, counts, nd },
+        )
+    }
+
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        let d = ds.get::<TsData>();
+        assert_eq!(sess.set.n_dpus() as usize, d.nd, "session fleet must match the dataset");
+        let bufs: Vec<Vec<i32>> = (0..d.nd)
+            .map(|i| {
+                let lo = (i * d.per_pos).min(d.n);
+                d.series[lo..lo + d.counts[i]].to_vec()
             })
             .collect();
-        let series_sym = set.symbol::<i32>(slice_elems);
-        let q_sym = set.symbol::<i32>(QUERY_LEN);
-        let out_sym = set.symbol::<i64>(rc.n_tasklets as usize * 2);
-        set.xfer(series_sym).to().ragged(&bufs);
-        set.xfer(q_sym).to().broadcast(&query);
+        let series_sym = sess.set.symbol::<i32>(d.slice_elems);
+        let q_sym = sess.set.symbol::<i32>(QUERY_LEN);
+        let out_sym = sess.set.symbol::<i64>(sess.n_tasklets as usize * 2);
+        sess.set.xfer(series_sym).to().ragged(&bufs);
+        sess.put_state(TsState { series_sym, q_sym, out_sym, cur_query: Vec::new() });
+        sess.mark_loaded("TS");
+    }
 
+    fn stage(&self, ds: &Dataset, req: &Request) -> Staged {
+        let d = ds.get::<TsData>();
+        // the query is an exact window of the series at a seeded position,
+        // so every request has a zero-distance match to find
+        let mut rng = Rng::new(req.seed);
+        let pos = rng.below(d.positions as u64) as usize;
+        Staged::new(TsStaged { query: d.series[pos..pos + QUERY_LEN].to_vec() })
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        staged: Staged,
+    ) -> LaunchStats {
+        let d = ds.get::<TsData>();
+        let TsStaged { query } = staged.take::<TsStaged>();
+        let (series_sym, q_sym, out_sym) = {
+            let st = sess.state::<TsState>();
+            (st.series_sym, st.q_sym, st.out_sym)
+        };
+        sess.set.xfer(q_sym).to().broadcast(&query);
+
+        let arch = sess.set.cfg.dpu;
         let per_elem = (2 * isa::WRAM_LS + isa::LOOP_CTRL) as u64
-            + isa::op_instrs_for(&rc.sys.dpu, DType::I32, Op::Sub) as u64
-            + isa::op_instrs_for(&rc.sys.dpu, DType::I32, Op::Mul) as u64
-            + isa::op_instrs_for(&rc.sys.dpu, DType::I64, Op::Add) as u64;
+            + isa::op_instrs_for(&arch, DType::I32, Op::Sub) as u64
+            + isa::op_instrs_for(&arch, DType::I32, Op::Mul) as u64
+            + isa::op_instrs_for(&arch, DType::I64, Op::Add) as u64;
 
-        let counts_ref = &counts;
-        let stats = set.launch_seq(rc.n_tasklets, |d, ctx: &mut Ctx| {
+        let (per_pos, positions) = (d.per_pos, d.positions);
+        let counts_ref = &d.counts;
+        let stats = sess.launch_seq(sess.n_tasklets, |dpu, ctx: &mut Ctx| {
             let t = ctx.tasklet_id as usize;
             let nt = ctx.n_tasklets as usize;
-            let slice_bytes = counts_ref[d] * 4;
+            let slice_bytes = counts_ref[dpu] * 4;
             // query resident in WRAM for the whole kernel
             let wq = ctx.mem_alloc(QUERY_LEN * 4);
             ctx.mram_read(q_sym.off(), wq, QUERY_LEN * 4);
@@ -115,7 +176,7 @@ impl PrimBench for Ts {
             let wbuf = ctx.mem_alloc((CHUNK + QUERY_LEN) * 4);
             let wout = ctx.mem_alloc(16);
 
-            let dpu_positions = per_pos.min(positions.saturating_sub(d * per_pos));
+            let dpu_positions = per_pos.min(positions.saturating_sub(dpu * per_pos));
             let my = chunk_ranges(dpu_positions, nt)[t].clone();
             let mut best = i64::MAX;
             let mut best_pos = 0usize;
@@ -140,9 +201,9 @@ impl PrimBench for Ts {
                     if shift + i + QUERY_LEN > span.len() {
                         break;
                     }
-                    let d = ssd(&span[shift + i..shift + i + QUERY_LEN], &qv);
-                    if d < best {
-                        best = d;
+                    let dist = ssd(&span[shift + i..shift + i + QUERY_LEN], &qv);
+                    if dist < best {
+                        best = dist;
                         best_pos = p + i;
                     }
                 }
@@ -153,38 +214,53 @@ impl PrimBench for Ts {
             ctx.wram_set(wout, &[best, best_pos as i64]);
             ctx.mram_write(wout, out_sym.off() + t * 16, 16);
         });
+        sess.state_mut::<TsState>().cur_query = query;
+        stats
+    }
 
+    fn retrieve(&self, sess: &mut Session, ds: &Dataset) -> Output {
+        let d = ds.get::<TsData>();
+        let out_sym = sess.state::<TsState>().out_sym;
+        let nt = sess.n_tasklets as usize;
         // host merge: per-DPU per-tasklet minima
         let mut best = i64::MAX;
         let mut best_pos = 0usize;
-        for d in 0..nd {
-            let slots = set.xfer(out_sym).from().one(d, rc.n_tasklets as usize * 2);
-            for t in 0..rc.n_tasklets as usize {
+        for dpu in 0..d.nd {
+            let slots = sess.set.xfer(out_sym).from().one(dpu, nt * 2);
+            for t in 0..nt {
                 let (b, p) = (slots[t * 2], slots[t * 2 + 1] as usize);
                 if b < best {
                     best = b;
-                    best_pos = d * per_pos + p;
+                    best_pos = dpu * d.per_pos + p;
                 }
             }
         }
+        Output::new(TsOut { query: sess.state::<TsState>().cur_query.clone(), best, best_pos })
+    }
 
-        let verified = best == best_ref
-            && ssd(&series[best_pos..best_pos + QUERY_LEN], &query) == best_ref
-            && (best_pos == pos_ref || best == best_ref);
-
-        BenchResult {
-            name: self.name(),
-            breakdown: set.metrics,
-            verified,
-            work_items: positions as u64,
-            dpu_instrs: stats.total_instrs(),
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        let d = ds.get::<TsData>();
+        let o = out.get::<TsOut>();
+        if o.query.len() != QUERY_LEN || o.best_pos + QUERY_LEN > d.n {
+            return false;
         }
+        // reference: global minimum SSD over all positions
+        let mut best_ref = i64::MAX;
+        for p in 0..=(d.n - QUERY_LEN) {
+            let dist = ssd(&d.series[p..p + QUERY_LEN], &o.query);
+            if dist < best_ref {
+                best_ref = dist;
+            }
+        }
+        o.best == best_ref && ssd(&d.series[o.best_pos..o.best_pos + QUERY_LEN], &o.query) == best_ref
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prim::common::PrimBench;
+    use crate::prim::workload::serve;
 
     #[test]
     fn verifies_small() {
@@ -232,5 +308,22 @@ mod tests {
             ..RunConfig::rank_default()
         };
         assert!(Ts.run(&rc).verified);
+    }
+
+    /// Serving: every warm request slides a fresh query over the resident
+    /// series, re-pushing only QUERY_LEN elements per DPU.
+    #[test]
+    fn warm_requests_push_only_the_query() {
+        let rc = RunConfig {
+            n_dpus: 3,
+            scale: 0.005,
+            ..RunConfig::rank_default()
+        };
+        let rep = serve(&Ts, &rc, 3, false);
+        assert!(rep.verified);
+        for r in &rep.requests {
+            assert_eq!(r.bytes_to_dpu, (3 * QUERY_LEN * 4) as u64);
+        }
+        assert!(rep.steady_state().cpu_dpu < rep.cold.cpu_dpu / 4.0);
     }
 }

@@ -3,12 +3,16 @@
 //! the successor can decide whether its first element is unique in the
 //! context of the whole array.
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
-use super::sel::{run_compaction, CompactKind};
+use super::common::{BenchTraits, RunConfig};
+use super::sel::{
+    execute_compact, load_compact, prepare_compact, retrieve_compact, verify_compact, CompactKind,
+};
+use super::workload::{Dataset, Output, Request, Staged, Workload};
+use crate::coordinator::{LaunchStats, Session};
 
 pub struct Uni;
 
-impl PrimBench for Uni {
+impl Workload for Uni {
     fn name(&self) -> &'static str {
         "UNI"
     }
@@ -26,15 +30,38 @@ impl PrimBench for Uni {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
-        run_compaction(CompactKind::Unique, "UNI", rc)
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
+        prepare_compact(CompactKind::Unique, rc)
+    }
+
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        load_compact(sess, ds);
+        sess.mark_loaded("UNI");
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        _staged: Staged,
+    ) -> LaunchStats {
+        execute_compact(CompactKind::Unique, sess, ds)
+    }
+
+    fn retrieve(&self, sess: &mut Session, ds: &Dataset) -> Output {
+        retrieve_compact(CompactKind::Unique, sess, ds)
+    }
+
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        verify_compact(ds, out)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::prim::common::RunConfig;
+    use crate::prim::common::{PrimBench, RunConfig};
 
     #[test]
     fn verifies_small() {

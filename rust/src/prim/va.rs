@@ -5,10 +5,15 @@
 //! parallel transfers (the tail DPU simply receives fewer elements — no
 //! sentinel padding), each DPU's tasklets stream 1,024-B blocks
 //! cyclically: DMA in, add in WRAM, DMA out.
+//!
+//! Lifecycle: the two input vectors are resident (loaded once); a warm
+//! request re-executes the add against them — a streaming workload in the
+//! staged API.
 
-use super::common::{BenchResult, BenchTraits, PrimBench, RunConfig};
+use super::common::{BenchTraits, RunConfig};
+use super::workload::{Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::ragged_counts;
+use crate::coordinator::{ragged_counts, LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -20,7 +25,31 @@ const EPB: usize = BLOCK / 4; // i32 elements per block
 
 pub struct Va;
 
-impl PrimBench for Va {
+/// Host dataset: inputs, reference sum, and the per-DPU partition.
+pub struct VaData {
+    a: Vec<i32>,
+    b: Vec<i32>,
+    c_ref: Vec<i32>,
+    n: usize,
+    per: usize,
+    counts: Vec<usize>,
+}
+
+/// Resident MRAM state.
+#[derive(Clone, Copy)]
+struct VaState {
+    a_sym: Symbol<i32>,
+    b_sym: Symbol<i32>,
+    c_sym: Symbol<i32>,
+}
+
+/// Retrieved result of the last request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VaOut {
+    pub c: Vec<i32>,
+}
+
+impl Workload for Va {
     fn name(&self) -> &'static str {
         "VA"
     }
@@ -38,33 +67,52 @@ impl PrimBench for Va {
         }
     }
 
-    fn run(&self, rc: &RunConfig) -> BenchResult {
+    fn prepare(&self, rc: &RunConfig) -> Dataset {
         let n = rc.scaled(PAPER_N);
         let mut rng = Rng::new(rc.seed);
         let a = rng.vec_i32(n, 1 << 20);
         let b = rng.vec_i32(n, 1 << 20);
-
-        let mut set = rc.alloc();
-        let nd = rc.n_dpus as usize;
+        let c_ref: Vec<i32> =
+            a.iter().zip(&b).map(|(x, y)| x.wrapping_add(*y)).collect();
         // contiguous chunks of whole blocks; the tail chunk keeps its real
         // size (ragged transfers — no padding, no result trimming)
+        let nd = rc.n_dpus as usize;
         let per = n.div_ceil(nd).div_ceil(EPB) * EPB;
         let counts = ragged_counts(n, per, nd);
-        let chunk = |src: &[i32], d: usize| src[(d * per).min(n)..((d + 1) * per).min(n)].to_vec();
-        let abufs: Vec<Vec<i32>> = (0..nd).map(|d| chunk(&a, d)).collect();
-        let bbufs: Vec<Vec<i32>> = (0..nd).map(|d| chunk(&b, d)).collect();
-        let a_sym = set.symbol::<i32>(per);
-        let b_sym = set.symbol::<i32>(per);
-        let c_sym = set.symbol::<i32>(per);
-        set.xfer(a_sym).to().ragged(&abufs);
-        set.xfer(b_sym).to().ragged(&bbufs);
+        Dataset::new(n as u64, VaData { a, b, c_ref, n, per, counts })
+    }
 
-        let instrs_per_elem =
-            (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
-                + isa::op_instrs(DType::I32, Op::Add) as u64;
-        let counts_ref = &counts;
-        let stats = set.launch_seq(rc.n_tasklets, |d, ctx: &mut Ctx| {
-            let my_bytes = counts_ref[d] * 4;
+    fn load(&self, sess: &mut Session, ds: &Dataset) {
+        let d = ds.get::<VaData>();
+        let nd = sess.set.n_dpus() as usize;
+        assert_eq!(nd, d.counts.len(), "session fleet must match the prepared dataset");
+        let chunk =
+            |src: &[i32], i: usize| src[(i * d.per).min(d.n)..((i + 1) * d.per).min(d.n)].to_vec();
+        let abufs: Vec<Vec<i32>> = (0..nd).map(|i| chunk(&d.a, i)).collect();
+        let bbufs: Vec<Vec<i32>> = (0..nd).map(|i| chunk(&d.b, i)).collect();
+        let a_sym = sess.set.symbol::<i32>(d.per);
+        let b_sym = sess.set.symbol::<i32>(d.per);
+        let c_sym = sess.set.symbol::<i32>(d.per);
+        sess.set.xfer(a_sym).to().ragged(&abufs);
+        sess.set.xfer(b_sym).to().ragged(&bbufs);
+        sess.put_state(VaState { a_sym, b_sym, c_sym });
+        sess.mark_loaded("VA");
+    }
+
+    fn execute(
+        &self,
+        sess: &mut Session,
+        ds: &Dataset,
+        _req: &Request,
+        _staged: Staged,
+    ) -> LaunchStats {
+        let d = ds.get::<VaData>();
+        let st = *sess.state::<VaState>();
+        let instrs_per_elem = (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
+            + isa::op_instrs(DType::I32, Op::Add) as u64;
+        let counts_ref = &d.counts;
+        sess.launch_seq(sess.n_tasklets, |dpu, ctx: &mut Ctx| {
+            let my_bytes = counts_ref[dpu] * 4;
             let n_blocks = my_bytes.div_ceil(BLOCK);
             let wa = ctx.mem_alloc(BLOCK);
             let wb = ctx.mem_alloc(BLOCK);
@@ -72,8 +120,8 @@ impl PrimBench for Va {
             while blk < n_blocks {
                 let off = blk * BLOCK;
                 let take = (my_bytes - off).min(BLOCK);
-                ctx.mram_read(a_sym.off() + off, wa, take);
-                ctx.mram_read(b_sym.off() + off, wb, take);
+                ctx.mram_read(st.a_sym.off() + off, wa, take);
+                ctx.mram_read(st.b_sym.off() + off, wb, take);
                 // zero-copy in-WRAM add: c (over a's buffer) = a + b
                 ctx.wram_zip::<i32>(wb, wa, take / 4, |b, a| {
                     for (x, y) in a.iter_mut().zip(b) {
@@ -81,34 +129,32 @@ impl PrimBench for Va {
                     }
                 });
                 ctx.compute((take / 4) as u64 * instrs_per_elem);
-                ctx.mram_write(wa, c_sym.off() + off, take);
+                ctx.mram_write(wa, st.c_sym.off() + off, take);
                 blk += ctx.n_tasklets as usize;
             }
-        });
+        })
+    }
 
-        let out = set.xfer(c_sym).from().ragged(&counts);
-        let mut c = Vec::with_capacity(n);
+    fn retrieve(&self, sess: &mut Session, ds: &Dataset) -> Output {
+        let d = ds.get::<VaData>();
+        let c_sym = sess.state::<VaState>().c_sym;
+        let out = sess.set.xfer(c_sym).from().ragged(&d.counts);
+        let mut c = Vec::with_capacity(d.n);
         for part in &out {
             c.extend_from_slice(part);
         }
-        let verified = c
-            .iter()
-            .zip(a.iter().zip(&b))
-            .all(|(cv, (av, bv))| *cv == av.wrapping_add(*bv));
+        Output::new(VaOut { c })
+    }
 
-        BenchResult {
-            name: self.name(),
-            breakdown: set.metrics,
-            verified,
-            work_items: n as u64,
-            dpu_instrs: stats.total_instrs(),
-        }
+    fn verify(&self, ds: &Dataset, out: &Output) -> bool {
+        out.get::<VaOut>().c == ds.get::<VaData>().c_ref
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prim::common::PrimBench;
 
     #[test]
     fn verifies_on_small_run() {
@@ -172,5 +218,32 @@ mod tests {
         let t16 = mk(16);
         assert!(t1 / t8 > 4.0);
         assert!(t8 / t16 < 2.0, "diminishing returns after 8");
+    }
+
+    /// Warm re-execute: a second request against the resident vectors
+    /// pays zero CPU-DPU input reload and the bit-identical kernel time.
+    #[test]
+    fn warm_reexecute_amortizes_input_load() {
+        let rc = RunConfig {
+            n_dpus: 4,
+            scale: 0.002,
+            ..RunConfig::rank_default()
+        };
+        let ds = Va.prepare(&rc);
+        let mut sess = rc.session();
+        Va.load(&mut sess, &ds);
+        let load_bytes = sess.set.metrics.bytes_to_dpu;
+        let r0 = Request::new(0, rc.seed);
+        let s0 = Va.execute(&mut sess, &ds, &r0, Staged::empty());
+        let before = sess.set.metrics;
+        let r1 = Request::new(1, rc.seed ^ 1);
+        let s1 = Va.execute(&mut sess, &ds, &r1, Staged::empty());
+        let delta = sess.set.metrics.delta(&before);
+        assert_eq!(delta.bytes_to_dpu, 0, "no input reload on warm requests");
+        assert_eq!(delta.cpu_dpu, 0.0);
+        assert_eq!(s0.secs.to_bits(), s1.secs.to_bits(), "identical modeled kernel time");
+        assert_eq!(sess.set.metrics.bytes_to_dpu, load_bytes);
+        let out = Va.retrieve(&mut sess, &ds);
+        assert!(Va.verify(&ds, &out));
     }
 }

@@ -13,7 +13,9 @@ use prim_pim::arch::SystemConfig;
 use prim_pim::coordinator::{
     FleetExecutor, ParallelExecutor, PimSet, SerialExecutor, TimeBreakdown,
 };
+use prim_pim::prim::bs::BsOut;
 use prim_pim::prim::common::{bench_by_name, BenchResult, ExecChoice, RunConfig};
+use prim_pim::prim::workload::{serve, workload_by_name, Request, ServeReport};
 use std::sync::Arc;
 
 fn run_with(name: &str, exec: ExecChoice) -> BenchResult {
@@ -133,4 +135,101 @@ fn ragged_and_subset_launch_bit_identical() {
     for d in [1usize, 3, 6] {
         assert!(so[d].is_empty(), "inactive dpu {d} contributes nothing");
     }
+}
+
+// ------------------------------------------------------------------------
+// Persistent sessions: warm re-execution and batched (pipelined) serving
+// must be bit-identical across executors AND across batch schedules.
+
+fn serve_bs(exec: ExecChoice, pipeline: bool) -> ServeReport {
+    let w = workload_by_name("BS").expect("known workload");
+    let rc = RunConfig {
+        sys: SystemConfig::p21_rank(),
+        n_dpus: 4,
+        n_tasklets: 8,
+        scale: 0.002,
+        seed: 17,
+        exec,
+    };
+    serve(w.as_ref(), &rc, 4, pipeline)
+}
+
+/// Warm `Session` re-execution matches a fresh one-shot run in results
+/// and modeled kernel time, across both executors.
+#[test]
+fn warm_session_reexecute_matches_one_shot() {
+    for exec in [ExecChoice::Serial, ExecChoice::Parallel(4)] {
+        let w = workload_by_name("VA").expect("known workload");
+        let rc = RunConfig {
+            sys: SystemConfig::p21_rank(),
+            n_dpus: 4,
+            n_tasklets: 8,
+            scale: 0.002,
+            seed: 23,
+            exec,
+        };
+        let oneshot = bench_by_name("VA").unwrap().run(&rc);
+        assert!(oneshot.verified);
+
+        let ds = w.prepare(&rc);
+        let mut sess = rc.session();
+        w.load(&mut sess, &ds);
+        let req0 = Request::new(0, rc.seed);
+        let staged = w.stage(&ds, &req0);
+        let s0 = w.execute(&mut sess, &ds, &req0, staged);
+        // cold session request == the one-shot run, bit for bit
+        let out0 = w.retrieve(&mut sess, &ds);
+        assert!(w.verify(&ds, &out0));
+        assert_eq!(sess.set.metrics, oneshot.breakdown, "session cold == one-shot");
+
+        // warm re-execute: zero input reload, identical modeled kernel time
+        let before = sess.set.metrics;
+        let req1 = Request::new(1, rc.seed ^ 7);
+        let staged = w.stage(&ds, &req1);
+        let s1 = w.execute(&mut sess, &ds, &req1, staged);
+        let delta = sess.set.metrics.delta(&before);
+        assert_eq!(delta.bytes_to_dpu, 0, "VA warm request reloads nothing");
+        assert_eq!(s0.secs.to_bits(), s1.secs.to_bits());
+        assert_eq!(delta.dpu.to_bits(), s1.secs.to_bits());
+        let out1 = w.retrieve(&mut sess, &ds);
+        assert!(w.verify(&ds, &out1));
+    }
+}
+
+/// `execute_batch` serving is bit-identical across executors, for both
+/// the serialized and the pipelined schedule.
+#[test]
+fn session_batches_bit_identical_across_executors() {
+    for pipeline in [false, true] {
+        let s = serve_bs(ExecChoice::Serial, pipeline);
+        let p = serve_bs(ExecChoice::Parallel(3), pipeline);
+        assert!(s.verified && p.verified, "pipeline={pipeline}");
+        assert_eq!(s.cold, p.cold, "pipeline={pipeline}");
+        assert_eq!(s.warm, p.warm, "pipeline={pipeline}");
+        assert_eq!(s.requests, p.requests, "pipeline={pipeline}");
+        assert_eq!(
+            s.output.get::<BsOut>(),
+            p.output.get::<BsOut>(),
+            "functional outputs must not depend on the executor (pipeline={pipeline})"
+        );
+    }
+}
+
+/// The pipelined schedule changes ONLY the overlap credit: same results,
+/// same component buckets, smaller total.
+#[test]
+fn pipelined_schedule_matches_serialized_except_overlap() {
+    let ser = serve_bs(ExecChoice::Serial, false);
+    let pip = serve_bs(ExecChoice::Serial, true);
+    assert!(ser.verified && pip.verified);
+    assert_eq!(ser.output.get::<BsOut>(), pip.output.get::<BsOut>());
+    assert_eq!(ser.warm.dpu.to_bits(), pip.warm.dpu.to_bits());
+    assert_eq!(ser.warm.cpu_dpu.to_bits(), pip.warm.cpu_dpu.to_bits());
+    assert_eq!(ser.warm.dpu_cpu.to_bits(), pip.warm.dpu_cpu.to_bits());
+    assert_eq!(ser.warm.inter_dpu.to_bits(), pip.warm.inter_dpu.to_bits());
+    assert_eq!(ser.warm.bytes_to_dpu, pip.warm.bytes_to_dpu);
+    assert_eq!(ser.warm.launches, pip.warm.launches);
+    assert_eq!(ser.warm.overlapped, 0.0);
+    assert!(pip.warm.overlapped > 0.0, "BS query pushes must hide under launches");
+    assert!(pip.warm.total() < ser.warm.total());
 }
