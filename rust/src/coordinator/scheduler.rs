@@ -1,0 +1,1124 @@
+//! Multi-tenant fleet scheduler: rank-sliced tenants, deterministic
+//! traffic generation, and QoS accounting.
+//!
+//! The paper's §6 recommendations (amortize input loads, overlap
+//! transfers, split work into independent blocks) stop at one workload
+//! owning the whole fleet. A production deployment shares the 2,556-DPU
+//! machine across many **resident** workloads at once, and the natural
+//! allocation unit is the **rank**: kernels on disjoint ranks execute
+//! concurrently, while CPU↔DPU transfers serialize across ranks on the
+//! host memory bus (§5.1.1 — "these transfers are not simultaneous across
+//! ranks"). The scheduler models exactly that split:
+//!
+//! * **Fleet slicing** — [`PimSet::split_ranks`] carves one allocated
+//!   fleet into rank-granular, non-overlapping sub-fleets ([`FleetSlice`]
+//!   records the geometry); each slice backs an independent tenant
+//!   [`Session`] with its own `MramLayout`, resident dataset, and metrics.
+//! * **Traffic generation** — open-loop Poisson arrivals per tenant,
+//!   seeded via `util::rng` (exponential inter-arrival times at the
+//!   tenant's configured rate; `rate <= 0` degenerates to a burst at
+//!   t = 0). Request payloads come from [`Request::stream`], so every
+//!   arrival is a genuinely fresh query/vector/root for the query-style
+//!   workloads.
+//! * **Scheduling** — the host bus is the contended resource, so the
+//!   [`Policy`] is a **bus arbiter**: whenever the bus frees up it picks
+//!   which tenant's queued requests are granted the next push. Kernel
+//!   time runs on the tenant's private rank slice and overlaps freely
+//!   with other tenants' kernels *and* with other tenants' bus traffic.
+//! * **QoS accounting** — per-request latency = modeled queueing delay
+//!   (bus + slice wait) plus service time (push, kernels + inter-DPU
+//!   sync, response pull); reports quote per-tenant throughput,
+//!   p50/p95/p99/max latency, slice utilization, and aggregate machine
+//!   occupancy.
+//!
+//! # Timing model
+//!
+//! A dispatched batch of `k` requests from one tenant occupies, in order:
+//! the bus for its aggregated input push (`Σ cpu_dpu − overlapped`: with
+//! pipelining on, `Session::execute_batch` hides later requests' pushes
+//! under earlier launches *within the batch*, and that batch-level
+//! credit shortens the bus occupancy here — a single-request batch has
+//! no previous launch to hide under, so `fifo`/`sjf` timelines are
+//! unchanged by `--pipeline` while multi-request `wrr` grants gain),
+//! the tenant's slice for its kernels and host-orchestrated sync
+//! (`Σ dpu + inter_dpu`; mid-run inter-DPU exchanges are charged to the
+//! slice window for simplicity), and the bus again for the response pull
+//! (`Σ dpu_cpu`). While a slice computes, the bus serves other tenants —
+//! that is the §5.1.1 concurrency the rank split buys. Ready responses
+//! take bus priority over new pushes (finish in-flight work first).
+//!
+//! # Determinism
+//!
+//! Every scheduling decision derives from modeled seconds (which are
+//! executor-independent, see `coordinator::executor`) and from the seeded
+//! RNG, so serial and parallel executors produce bit-identical outputs,
+//! bucket breakdowns, and latency distributions for the same seed,
+//! policy, and tenant mix. Within a tenant, requests dispatch in arrival
+//! (id) order under every policy — policies only reorder *across*
+//! tenants — so a single-tenant stream is policy-invariant
+//! (`tests/executor_equivalence.rs`).
+
+use super::{ExecChoice, PimSet, Session, TimeBreakdown};
+use crate::arch::SystemConfig;
+use crate::prim::common::RunConfig;
+use crate::prim::workload::{workload_by_name, Dataset, Output, Request, Workload};
+use crate::util::stats::{latency_summary, LatencySummary};
+use crate::util::Rng;
+use std::collections::VecDeque;
+
+/// Golden-ratio multiplier for decorrelating per-tenant seeds.
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+// ----------------------------------------------------------------- tenants
+
+/// One tenant of the shared machine: a workload name, a rank budget, and
+/// traffic-shaping knobs. Parsed from the CLI mix syntax
+/// `name:ranks[:weight[:rate]]` (e.g. `gemv:8,bs:4:2,va:4:1:1500`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    /// PrIM workload short name (`workload_by_name`).
+    pub bench: String,
+    /// Whole ranks this tenant owns (64 DPUs each).
+    pub ranks: u32,
+    /// Weighted-round-robin weight (batch quantum); default 1.
+    pub weight: u32,
+    /// Open-loop arrival rate, requests per second of modeled time;
+    /// `<= 0` falls back to [`SchedConfig::rate`].
+    pub rate: f64,
+    /// Dataset scale factor for this tenant's `prepare` (the caller sets
+    /// this from its scale policy, e.g. `harness::harness_scale`).
+    pub scale: f64,
+}
+
+impl TenantSpec {
+    pub fn new(bench: &str, ranks: u32) -> Self {
+        TenantSpec {
+            bench: bench.to_string(),
+            ranks,
+            weight: 1,
+            rate: 0.0,
+            scale: 1.0,
+        }
+    }
+
+    /// Parse a comma-separated tenant mix: `name:ranks[:weight[:rate]]`.
+    pub fn parse_list(s: &str) -> anyhow::Result<Vec<TenantSpec>> {
+        let mut out = Vec::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() < 2 || fields.len() > 4 {
+                anyhow::bail!(
+                    "tenant '{part}' is not name:ranks[:weight[:rate]] (e.g. gemv:8)"
+                );
+            }
+            let mut spec = TenantSpec::new(fields[0], 0);
+            spec.ranks = fields[1]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("tenant '{part}': bad rank count '{}'", fields[1]))?;
+            if spec.ranks == 0 {
+                anyhow::bail!("tenant '{part}': needs at least one rank");
+            }
+            if let Some(w) = fields.get(2) {
+                spec.weight = w
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("tenant '{part}': bad weight '{w}'"))?;
+                if spec.weight == 0 {
+                    anyhow::bail!("tenant '{part}': weight must be >= 1");
+                }
+            }
+            if let Some(r) = fields.get(3) {
+                spec.rate = r
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("tenant '{part}': bad rate '{r}'"))?;
+            }
+            out.push(spec);
+        }
+        if out.is_empty() {
+            anyhow::bail!("empty tenant mix (expected e.g. \"gemv:8,bs:4,va:4\")");
+        }
+        Ok(out)
+    }
+}
+
+/// The geometry of one tenant's rank slice inside the shared fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FleetSlice {
+    pub tenant: usize,
+    /// First rank (0-based) and rank count — whole ranks only.
+    pub rank0: u32,
+    pub n_ranks: u32,
+    /// First global DPU index and DPU count (derived: ranks × 64).
+    pub dpu0: u32,
+    pub n_dpus: u32,
+}
+
+/// Lay out non-overlapping rank slices in tenant order — a pure preview
+/// of the geometry [`PimSet::split_ranks`] produces (the scheduler itself
+/// derives each [`FleetSlice`] from the carved set, so the two cannot
+/// drift). The slices tile the fleet exactly: slice `i` starts where
+/// slice `i−1` ended.
+pub fn carve_slices(dpus_per_rank: u32, ranks: &[u32]) -> Vec<FleetSlice> {
+    let mut rank0 = 0u32;
+    ranks
+        .iter()
+        .enumerate()
+        .map(|(tenant, &n_ranks)| {
+            let s = FleetSlice {
+                tenant,
+                rank0,
+                n_ranks,
+                dpu0: rank0 * dpus_per_rank,
+                n_dpus: n_ranks * dpus_per_rank,
+            };
+            rank0 += n_ranks;
+            s
+        })
+        .collect()
+}
+
+// ----------------------------------------------------------------- traffic
+
+/// One generated request: which tenant it belongs to and when it arrives
+/// (seconds of modeled time after all tenants finished loading).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arrival {
+    pub tenant: usize,
+    pub req: Request,
+    pub at: f64,
+}
+
+/// Deterministic open-loop arrival stream for one tenant: exponential
+/// inter-arrival times at `rate` req/s (Poisson process), request
+/// payload seeds from [`Request::stream`]. `rate <= 0` produces a burst
+/// (everything arrives at t = 0).
+pub fn gen_arrivals(tenant: usize, seed: u64, n: usize, rate: f64) -> VecDeque<Arrival> {
+    let mut rng = Rng::new(seed ^ 0x5BD1_E995_9D1B_54D5);
+    let mut at = 0.0f64;
+    Request::stream(seed, n)
+        .into_iter()
+        .map(|req| {
+            if rate > 0.0 {
+                // inverse-CDF exponential; f64() < 1 so ln is finite
+                at += -(1.0 - rng.f64()).ln() / rate;
+            }
+            Arrival { tenant, req, at }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- policies
+
+/// A tenant eligible for the next bus grant (head request arrived and its
+/// slice is idle).
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub tenant: usize,
+    /// Arrival time of the tenant's head request.
+    pub arrival: f64,
+    /// Current service-time estimate (EWMA of observed per-request
+    /// modeled service; 0 until the tenant has completed a batch).
+    pub estimate: f64,
+    pub weight: u32,
+}
+
+/// A bus-arbitration policy: given the eligible tenants (in tenant
+/// order), pick who is granted the bus next and how many of their queued
+/// requests may ride as one batch (capped by arrivals and
+/// [`SchedConfig::max_batch`]).
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+    fn pick(&mut self, feasible: &[Candidate]) -> (usize, usize);
+}
+
+/// First-in-first-out across all tenants: earliest head arrival wins
+/// (ties: lowest tenant index); one request per grant.
+pub struct Fifo;
+
+impl Policy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&mut self, feasible: &[Candidate]) -> (usize, usize) {
+        let c = feasible
+            .iter()
+            .min_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.tenant.cmp(&b.tenant)))
+            .expect("non-empty feasible set");
+        (c.tenant, 1)
+    }
+}
+
+/// Weighted round-robin: cycle a pointer over the tenants, serving up to
+/// `weight` queued requests per visit.
+#[derive(Default)]
+pub struct WeightedRoundRobin {
+    pos: usize,
+}
+
+impl WeightedRoundRobin {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Policy for WeightedRoundRobin {
+    fn name(&self) -> &'static str {
+        "wrr"
+    }
+
+    fn pick(&mut self, feasible: &[Candidate]) -> (usize, usize) {
+        // feasible is in tenant order: next eligible tenant at/after the
+        // pointer, wrapping to the front
+        let c = feasible
+            .iter()
+            .find(|c| c.tenant >= self.pos)
+            .unwrap_or(&feasible[0]);
+        self.pos = c.tenant + 1;
+        (c.tenant, c.weight as usize)
+    }
+}
+
+/// Modeled-shortest-job-first: smallest EWMA service-time estimate wins
+/// (ties: earliest arrival, then tenant index). Tenants with no completed
+/// batch yet have estimate 0 and are probed first.
+pub struct ShortestJob;
+
+impl Policy for ShortestJob {
+    fn name(&self) -> &'static str {
+        "sjf"
+    }
+
+    fn pick(&mut self, feasible: &[Candidate]) -> (usize, usize) {
+        let c = feasible
+            .iter()
+            .min_by(|a, b| {
+                a.estimate
+                    .total_cmp(&b.estimate)
+                    .then(a.arrival.total_cmp(&b.arrival))
+                    .then(a.tenant.cmp(&b.tenant))
+            })
+            .expect("non-empty feasible set");
+        (c.tenant, 1)
+    }
+}
+
+/// Named policy selection (CLI `--policy`, harness sweeps).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Fifo,
+    Wrr,
+    Sjf,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Some(PolicyKind::Fifo),
+            "wrr" => Some(PolicyKind::Wrr),
+            "sjf" => Some(PolicyKind::Sjf),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Wrr => "wrr",
+            PolicyKind::Sjf => "sjf",
+        }
+    }
+
+    pub fn build(self) -> Box<dyn Policy> {
+        match self {
+            PolicyKind::Fifo => Box::new(Fifo),
+            PolicyKind::Wrr => Box::new(WeightedRoundRobin::new()),
+            PolicyKind::Sjf => Box::new(ShortestJob),
+        }
+    }
+
+    pub const ALL: [PolicyKind; 3] = [PolicyKind::Fifo, PolicyKind::Wrr, PolicyKind::Sjf];
+}
+
+// ------------------------------------------------------------------ config
+
+/// Configuration of one multi-tenant scheduling run.
+#[derive(Clone, Debug)]
+pub struct SchedConfig {
+    pub tenants: Vec<TenantSpec>,
+    /// Requests generated per tenant.
+    pub requests: usize,
+    pub policy: PolicyKind,
+    /// Default arrival rate (req/s of modeled time) for tenants whose
+    /// spec leaves `rate <= 0`.
+    pub rate: f64,
+    /// Cap on how many queued requests one bus grant may batch.
+    pub max_batch: usize,
+    /// Pipelined staging + rank-granular overlap credit inside batches
+    /// (see `coordinator::session`).
+    pub pipeline: bool,
+    pub seed: u64,
+    pub exec: ExecChoice,
+}
+
+impl SchedConfig {
+    pub fn new(tenants: Vec<TenantSpec>) -> Self {
+        SchedConfig {
+            tenants,
+            requests: 8,
+            policy: PolicyKind::Fifo,
+            rate: 500.0,
+            max_batch: 4,
+            pipeline: false,
+            seed: 42,
+            exec: ExecChoice::Auto,
+        }
+    }
+}
+
+// ------------------------------------------------------------------ report
+
+/// Timeline of one request through the shared machine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestRecord {
+    pub id: u64,
+    /// Open-loop arrival time.
+    pub arrival: f64,
+    /// When the request's batch was granted the bus (queueing ends).
+    pub dispatched: f64,
+    /// When the response pull completed (batched requests complete
+    /// together).
+    pub done: f64,
+}
+
+impl RequestRecord {
+    /// End-to-end latency: arrival → response pulled.
+    pub fn latency(&self) -> f64 {
+        self.done - self.arrival
+    }
+
+    /// Modeled queueing delay (bus + slice wait before service).
+    pub fn queueing(&self) -> f64 {
+        self.dispatched - self.arrival
+    }
+}
+
+/// Per-tenant QoS outcome.
+pub struct TenantReport {
+    pub bench: String,
+    pub slice: FleetSlice,
+    pub weight: u32,
+    /// Effective arrival rate used (spec rate or the config default).
+    pub rate: f64,
+    /// Load cost (allocation + resident input push) paid once, before
+    /// the measured serving window.
+    pub cold: TimeBreakdown,
+    /// Accumulated breakdown over all served requests.
+    pub warm: TimeBreakdown,
+    /// Per-request timelines in dispatch order.
+    pub records: Vec<RequestRecord>,
+    /// Seconds the slice was occupied (granted → response done).
+    pub busy: f64,
+    /// Last retrieved output checked against the native reference.
+    pub verified: bool,
+}
+
+impl TenantReport {
+    pub fn latencies(&self) -> Vec<f64> {
+        self.records.iter().map(RequestRecord::latency).collect()
+    }
+
+    pub fn latency_summary(&self) -> LatencySummary {
+        latency_summary(&self.latencies())
+    }
+
+    /// Completed requests per second of modeled time, over this tenant's
+    /// own first-arrival → last-completion span.
+    pub fn throughput(&self) -> f64 {
+        let first = self.records.iter().map(|r| r.arrival).fold(f64::INFINITY, f64::min);
+        let last = self.records.iter().map(|r| r.done).fold(0.0f64, f64::max);
+        self.records.len() as f64 / (last - first).max(1e-12)
+    }
+
+    /// Fraction of the machine-wide makespan this tenant's slice was busy.
+    pub fn utilization(&self, makespan: f64) -> f64 {
+        if makespan <= 0.0 {
+            0.0
+        } else {
+            self.busy / makespan
+        }
+    }
+}
+
+/// Outcome of a multi-tenant scheduling run.
+pub struct SchedReport {
+    pub policy: &'static str,
+    pub seed: u64,
+    pub pipelined: bool,
+    pub tenants: Vec<TenantReport>,
+    /// Last response completion across all tenants (clock 0 = all
+    /// tenants resident).
+    pub makespan: f64,
+    pub total_ranks: u32,
+}
+
+impl SchedReport {
+    /// Rank-weighted average slice utilization — the fraction of the
+    /// machine's rank-seconds spent serving requests.
+    pub fn occupancy(&self) -> f64 {
+        if self.makespan <= 0.0 || self.total_ranks == 0 {
+            return 0.0;
+        }
+        let busy_rank_secs: f64 =
+            self.tenants.iter().map(|t| t.busy * t.slice.n_ranks as f64).sum();
+        busy_rank_secs / (self.makespan * self.total_ranks as f64)
+    }
+
+    /// Machine-readable record (`results/BENCH_SCHED.json`). Rust float
+    /// formatting is shortest-roundtrip, so equal JSON ⇔ bit-equal
+    /// modeled times — the determinism tests compare these strings.
+    pub fn to_json(&self) -> String {
+        let mut out = format!(
+            "{{\"policy\": \"{}\", \"seed\": {}, \"pipelined\": {}, \
+             \"makespan_secs\": {:e}, \"occupancy\": {:e}, \"total_ranks\": {},\n \"tenants\": [\n",
+            self.policy,
+            self.seed,
+            self.pipelined,
+            self.makespan,
+            self.occupancy(),
+            self.total_ranks,
+        );
+        for (i, t) in self.tenants.iter().enumerate() {
+            let l = t.latency_summary();
+            out.push_str(&format!(
+                "  {{\"tenant\": {}, \"bench\": \"{}\", \"ranks\": {}, \"dpus\": {}, \
+                 \"weight\": {}, \"rate_rps\": {:e}, \"requests\": {},\n   \
+                 \"throughput_rps\": {:e}, \"p50_secs\": {:e}, \"p95_secs\": {:e}, \
+                 \"p99_secs\": {:e}, \"max_secs\": {:e},\n   \
+                 \"utilization\": {:e}, \"cold_secs\": {:e}, \"warm_secs\": {:e}, \
+                 \"verified\": {}}}{}\n",
+                t.slice.tenant,
+                t.bench,
+                t.slice.n_ranks,
+                t.slice.n_dpus,
+                t.weight,
+                t.rate,
+                t.records.len(),
+                t.throughput(),
+                l.p50,
+                l.p95,
+                l.p99,
+                l.max,
+                t.utilization(self.makespan),
+                t.cold.total(),
+                t.warm.total(),
+                t.verified,
+                if i + 1 < self.tenants.len() { "," } else { "" },
+            ));
+        }
+        out.push_str(" ]}\n");
+        out
+    }
+}
+
+// --------------------------------------------------------------- scheduler
+
+/// A resident tenant: its slice-backed session, queued traffic, and
+/// accumulated QoS records.
+struct Tenant {
+    spec: TenantSpec,
+    slice: FleetSlice,
+    rate: f64,
+    workload: Box<dyn Workload>,
+    dataset: Dataset,
+    session: Session,
+    cold: TimeBreakdown,
+    queue: VecDeque<Arrival>,
+    records: Vec<RequestRecord>,
+    busy: f64,
+    /// Modeled time at which the slice next becomes idle.
+    slice_free: f64,
+    /// A dispatched batch whose response pull has not completed yet.
+    in_flight: bool,
+    /// EWMA of observed per-request modeled service time (SJF input).
+    estimate: f64,
+    served: u64,
+    last_out: Option<Output>,
+}
+
+/// A dispatched batch waiting for its response pull: ready once the
+/// slice's kernels finish, then competes for the bus.
+struct PendingPull {
+    ready: f64,
+    /// Dispatch sequence number (deterministic tiebreak).
+    seq: u64,
+    tenant: usize,
+    pull_secs: f64,
+    /// Indices into the tenant's `records`.
+    recs: Vec<usize>,
+}
+
+/// The multi-tenant serving loop: rank-sliced sessions, one shared bus
+/// timeline, a pluggable arbitration policy. Build with
+/// [`Scheduler::build`], run to completion with [`Scheduler::run`].
+pub struct Scheduler {
+    tenants: Vec<Tenant>,
+    policy: Box<dyn Policy>,
+    policy_kind: PolicyKind,
+    max_batch: usize,
+    pipelined: bool,
+    seed: u64,
+    total_ranks: u32,
+    /// Modeled time at which the host bus next becomes idle.
+    bus_free: f64,
+    pulls: Vec<PendingPull>,
+    seq: u64,
+}
+
+impl Scheduler {
+    /// Allocate the shared fleet, carve the rank slices, and make every
+    /// tenant resident (prepare + load); the serving clock starts at 0
+    /// with all datasets warm.
+    pub fn build(cfg: &SchedConfig) -> anyhow::Result<Scheduler> {
+        if cfg.tenants.is_empty() {
+            anyhow::bail!("scheduler needs at least one tenant");
+        }
+        if cfg.requests == 0 {
+            anyhow::bail!("scheduler needs at least one request per tenant");
+        }
+        let ranks: Vec<u32> = cfg.tenants.iter().map(|t| t.ranks).collect();
+        let total_ranks: u32 = ranks.iter().sum();
+        let sys = if total_ranks <= 1 {
+            SystemConfig::p21_rank()
+        } else {
+            SystemConfig::p21_2556()
+        };
+        let per = sys.dpus_per_rank();
+        let total_dpus = total_ranks * per;
+        if total_dpus > sys.n_dpus() {
+            anyhow::bail!(
+                "tenant mix asks for {total_ranks} ranks ({total_dpus} DPUs) but the \
+                 machine has {} usable DPUs",
+                sys.n_dpus()
+            );
+        }
+        let parent = PimSet::allocate_with(sys.clone(), total_dpus, cfg.exec.build());
+        let sets = parent.split_ranks(&ranks);
+
+        let mut tenants = Vec::with_capacity(cfg.tenants.len());
+        for (tenant_idx, (spec, set)) in cfg.tenants.iter().zip(sets).enumerate() {
+            // geometry comes from the carved set itself, so it cannot
+            // drift from what the session actually runs on
+            let slice = FleetSlice {
+                tenant: tenant_idx,
+                rank0: set.rank0,
+                n_ranks: set.n_dpus() / per,
+                dpu0: set.rank0 * per,
+                n_dpus: set.n_dpus(),
+            };
+            let workload = workload_by_name(&spec.bench)
+                .ok_or_else(|| anyhow::anyhow!("unknown benchmark '{}'", spec.bench))?;
+            let tseed = cfg.seed ^ (tenant_idx as u64 + 1).wrapping_mul(GOLDEN);
+            let rc = RunConfig {
+                sys: sys.clone(),
+                n_dpus: slice.n_dpus,
+                n_tasklets: workload.best_tasklets(),
+                scale: spec.scale,
+                seed: tseed,
+                exec: cfg.exec,
+            };
+            let dataset = workload.prepare(&rc);
+            let mut session =
+                Session::new(set, rc.n_tasklets).with_pipeline(cfg.pipeline);
+            workload.load(&mut session, &dataset);
+            let cold = session.set.metrics;
+            session.set.reset_metrics();
+            let rate = if spec.rate > 0.0 { spec.rate } else { cfg.rate };
+            let queue = gen_arrivals(slice.tenant, tseed, cfg.requests, rate);
+            tenants.push(Tenant {
+                spec: spec.clone(),
+                slice,
+                rate,
+                workload,
+                dataset,
+                session,
+                cold,
+                queue,
+                records: Vec::with_capacity(cfg.requests),
+                busy: 0.0,
+                slice_free: 0.0,
+                in_flight: false,
+                estimate: 0.0,
+                served: 0,
+                last_out: None,
+            });
+        }
+        Ok(Scheduler {
+            tenants,
+            policy: cfg.policy.build(),
+            policy_kind: cfg.policy,
+            max_batch: cfg.max_batch.max(1),
+            pipelined: cfg.pipeline,
+            seed: cfg.seed,
+            total_ranks,
+            bus_free: 0.0,
+            pulls: Vec::new(),
+            seq: 0,
+        })
+    }
+
+    /// Drive every queued request to completion and report QoS.
+    pub fn run(mut self) -> SchedReport {
+        loop {
+            // earliest time any tenant's head request could take the bus
+            let mut t_push = f64::INFINITY;
+            for tn in &self.tenants {
+                if tn.in_flight || tn.queue.is_empty() {
+                    continue;
+                }
+                t_push = t_push.min(tn.queue[0].at.max(tn.slice_free));
+            }
+            // earliest ready response pull
+            let t_pull =
+                self.pulls.iter().map(|p| p.ready).fold(f64::INFINITY, f64::min);
+            if t_push.is_infinite() && t_pull.is_infinite() {
+                break;
+            }
+            let now = self.bus_free.max(t_push.min(t_pull));
+            // in-flight responses take bus priority over new pushes
+            if let Some(pi) = self
+                .pulls
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.ready <= now)
+                .min_by(|(_, a), (_, b)| {
+                    a.ready.total_cmp(&b.ready).then(a.seq.cmp(&b.seq))
+                })
+                .map(|(i, _)| i)
+            {
+                self.serve_pull(pi);
+                continue;
+            }
+            let feasible: Vec<Candidate> = self
+                .tenants
+                .iter()
+                .enumerate()
+                .filter(|(_, tn)| {
+                    !tn.in_flight
+                        && !tn.queue.is_empty()
+                        && tn.queue[0].at.max(tn.slice_free) <= now
+                })
+                .map(|(i, tn)| Candidate {
+                    tenant: i,
+                    arrival: tn.queue[0].at,
+                    estimate: tn.estimate,
+                    weight: tn.spec.weight,
+                })
+                .collect();
+            debug_assert!(!feasible.is_empty(), "dispatch epoch with no candidate");
+            let (t, want) = self.policy.pick(&feasible);
+            assert!(
+                feasible.iter().any(|c| c.tenant == t),
+                "policy {} picked infeasible tenant {t}",
+                self.policy.name()
+            );
+            self.dispatch(t, want, now);
+        }
+        self.finish()
+    }
+
+    /// Grant tenant `t` the bus at `now`: pop up to `want` arrived
+    /// requests, execute them functionally (stage → execute → retrieve
+    /// through the session), and advance the modeled bus/slice timelines
+    /// by the batch's aggregated push / kernel / pull seconds.
+    fn dispatch(&mut self, t: usize, want: usize, now: f64) {
+        let max_batch = self.max_batch;
+        let tn = &mut self.tenants[t];
+        let arrived = tn.queue.iter().take_while(|a| a.at <= now).count();
+        let k = want.max(1).min(arrived).min(max_batch);
+        let batch: Vec<Arrival> = tn.queue.drain(..k).collect();
+        let reqs: Vec<Request> = batch.iter().map(|a| a.req).collect();
+
+        let mut deltas: Vec<TimeBreakdown> = Vec::with_capacity(k);
+        let overlap_before = tn.session.set.metrics.overlapped;
+        {
+            let Tenant { workload, dataset, session, last_out, .. } = tn;
+            let w: &dyn Workload = workload.as_ref();
+            let ds: &Dataset = &*dataset;
+            let deltas = &mut deltas;
+            session.execute_batch(
+                &reqs,
+                |r| w.stage(ds, r),
+                |s: &mut Session, r: &Request, staged| {
+                    let before = s.set.metrics;
+                    let stats = w.execute(s, ds, r, staged);
+                    // a request is only answered once its response is
+                    // pulled — charge the per-request DPU-CPU traffic
+                    *last_out = Some(w.retrieve(s, ds));
+                    deltas.push(s.set.metrics.delta(&before));
+                    stats
+                },
+            );
+        }
+
+        let tn = &mut self.tenants[t];
+
+        // aggregate the batch's modeled service components; the
+        // pipelined overlap credit is batch-level (execute_batch applies
+        // it between per-request delta windows), so subtract it from the
+        // batch's bus push once rather than per delta
+        let mut push = 0.0f64;
+        let mut kernels = 0.0f64;
+        let mut pull = 0.0f64;
+        for d in &deltas {
+            push += d.cpu_dpu;
+            kernels += d.dpu + d.inter_dpu;
+            pull += d.dpu_cpu;
+        }
+        let batch_overlap = tn.session.set.metrics.overlapped - overlap_before;
+        let push = (push - batch_overlap).max(0.0);
+
+        let mut recs = Vec::with_capacity(k);
+        for a in &batch {
+            recs.push(tn.records.len());
+            tn.records.push(RequestRecord {
+                id: a.req.id,
+                arrival: a.at,
+                dispatched: now,
+                done: f64::NAN,
+            });
+        }
+
+        // observed service feeds the SJF estimate (EWMA, α = 0.3)
+        let obs = (push + kernels + pull) / k as f64;
+        tn.estimate =
+            if tn.served == 0 { obs } else { 0.7 * tn.estimate + 0.3 * obs };
+        tn.served += k as u64;
+        tn.in_flight = true;
+
+        // bus: push now; slice: kernels after the push; the response
+        // pull re-arbitrates for the bus once the kernels finish
+        self.bus_free = now + push;
+        self.seq += 1;
+        self.pulls.push(PendingPull {
+            ready: now + push + kernels,
+            seq: self.seq,
+            tenant: t,
+            pull_secs: pull,
+            recs,
+        });
+    }
+
+    /// Serve a ready response pull: the bus carries the batch's DPU-CPU
+    /// bytes, the batch's requests complete together, and the slice
+    /// frees up.
+    fn serve_pull(&mut self, idx: usize) {
+        let p = self.pulls.remove(idx);
+        let start = p.ready.max(self.bus_free);
+        let done = start + p.pull_secs;
+        self.bus_free = done;
+        let tn = &mut self.tenants[p.tenant];
+        tn.slice_free = done;
+        tn.in_flight = false;
+        tn.busy += done - tn.records[p.recs[0]].dispatched;
+        for ri in p.recs {
+            tn.records[ri].done = done;
+        }
+    }
+
+    fn finish(self) -> SchedReport {
+        let Scheduler { tenants, policy_kind, seed, pipelined, total_ranks, .. } = self;
+        let mut reports = Vec::with_capacity(tenants.len());
+        let mut makespan = 0.0f64;
+        for tn in tenants {
+            let verified = match &tn.last_out {
+                Some(o) => tn.workload.verify(&tn.dataset, o),
+                None => false,
+            };
+            makespan = tn.records.iter().map(|r| r.done).fold(makespan, f64::max);
+            reports.push(TenantReport {
+                bench: tn.spec.bench.clone(),
+                slice: tn.slice,
+                weight: tn.spec.weight,
+                rate: tn.rate,
+                cold: tn.cold,
+                warm: tn.session.set.metrics,
+                records: tn.records,
+                busy: tn.busy,
+                verified,
+            });
+        }
+        SchedReport {
+            policy: policy_kind.name(),
+            seed,
+            pipelined,
+            tenants: reports,
+            makespan,
+            total_ranks,
+        }
+    }
+}
+
+/// Build-and-run convenience for the CLI, harness, and examples.
+pub fn run_sched(cfg: &SchedConfig) -> anyhow::Result<SchedReport> {
+    Ok(Scheduler::build(cfg)?.run())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::layout::DMA_ALIGN;
+
+    #[test]
+    fn tenant_mix_parses_with_defaults_and_options() {
+        let v = TenantSpec::parse_list("gemv:8,bs:4:2,va:4:1:1500").unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!((v[0].bench.as_str(), v[0].ranks, v[0].weight), ("gemv", 8, 1));
+        assert_eq!(v[0].rate, 0.0, "unset rate defers to the config default");
+        assert_eq!((v[1].ranks, v[1].weight), (4, 2));
+        assert_eq!((v[2].weight, v[2].rate), (1, 1500.0));
+    }
+
+    #[test]
+    fn tenant_mix_rejects_malformed_entries() {
+        assert!(TenantSpec::parse_list("").is_err());
+        assert!(TenantSpec::parse_list("gemv").is_err());
+        assert!(TenantSpec::parse_list("gemv:0").is_err());
+        assert!(TenantSpec::parse_list("gemv:x").is_err());
+        assert!(TenantSpec::parse_list("gemv:2:0").is_err());
+        assert!(TenantSpec::parse_list("gemv:2:1:zap").is_err());
+        assert!(TenantSpec::parse_list("gemv:2:1:5:9").is_err());
+    }
+
+    #[test]
+    fn slices_tile_the_fleet_without_overlap() {
+        let ranks = [3u32, 1, 2];
+        let slices = carve_slices(64, &ranks);
+        assert_eq!(slices.len(), 3);
+        // full coverage, rank granularity, no overlap
+        let mut next_dpu = 0u32;
+        let mut next_rank = 0u32;
+        for (i, s) in slices.iter().enumerate() {
+            assert_eq!(s.tenant, i);
+            assert_eq!(s.rank0, next_rank);
+            assert_eq!(s.dpu0, next_dpu);
+            assert_eq!(s.n_dpus, s.n_ranks * 64);
+            assert_eq!(s.dpu0 % 64, 0, "slices start on rank boundaries");
+            next_rank += s.n_ranks;
+            next_dpu += s.n_dpus;
+        }
+        assert_eq!(next_dpu, 6 * 64);
+    }
+
+    #[test]
+    fn split_ranks_isolates_slices_and_preserves_alignment() {
+        let parent = PimSet::allocate(SystemConfig::p21_2556(), 3 * 64);
+        let mut sets = parent.split_ranks(&[1, 2]);
+        assert_eq!(sets.len(), 2);
+        assert_eq!(sets[0].n_dpus(), 64);
+        assert_eq!(sets[1].n_dpus(), 128);
+        // fresh per-slice layouts: both start at offset 0, 8-B aligned
+        let a = sets[0].symbol::<i64>(5);
+        let b = sets[1].symbol::<i32>(3);
+        assert_eq!(a.off(), 0);
+        assert_eq!(b.off(), 0);
+        let a2 = sets[0].symbol::<u8>(1);
+        assert_eq!(a2.off() % DMA_ALIGN, 0);
+        // functional isolation: both slices write their own offset-0
+        // region; neither clobbers the other
+        sets[0].xfer(a).to().broadcast(&[7i64; 5]);
+        let b_probe = sets[1].symbol::<i64>(5);
+        sets[1].xfer(b_probe).to().broadcast(&[9i64; 5]);
+        assert_eq!(sets[0].xfer(a).from().one(3, 5), vec![7i64; 5]);
+        assert_eq!(sets[1].xfer(b_probe).from().one(100, 5), vec![9i64; 5]);
+        // metrics are per-slice
+        assert!(sets[0].metrics.cpu_dpu > 0.0);
+        let before = sets[0].metrics;
+        let _ = sets[1].xfer(b_probe).from().one(0, 5);
+        assert_eq!(sets[0].metrics, before, "tenant 1 traffic never bills tenant 0");
+    }
+
+    #[test]
+    #[should_panic(expected = "cover the fleet exactly")]
+    fn split_ranks_rejects_partial_coverage() {
+        let parent = PimSet::allocate(SystemConfig::p21_2556(), 3 * 64);
+        let _ = parent.split_ranks(&[1, 1]);
+    }
+
+    /// The pure geometry preview and the actual carve must agree — this
+    /// is what lets callers trust `carve_slices` for planning without
+    /// allocating a fleet.
+    #[test]
+    fn carve_slices_matches_split_ranks_geometry() {
+        let ranks = [2u32, 1, 3];
+        let parent = PimSet::allocate(SystemConfig::p21_2556(), 6 * 64);
+        let per = parent.cfg.dpus_per_rank();
+        let sets = parent.split_ranks(&ranks);
+        let slices = carve_slices(per, &ranks);
+        assert_eq!(slices.len(), sets.len());
+        for (s, set) in slices.iter().zip(&sets) {
+            assert_eq!(s.rank0, set.rank0);
+            assert_eq!(s.n_dpus, set.n_dpus());
+            assert_eq!(s.dpu0, set.rank0 * per);
+            assert_eq!(s.n_ranks, set.n_dpus() / per);
+        }
+    }
+
+    #[test]
+    fn sliced_fleets_keep_their_socket_position() {
+        // 20 ranks split 10/10: the second slice reaches past the
+        // 16-rank NUMA boundary even though it only owns 10 ranks
+        let parent = PimSet::allocate(SystemConfig::p21_2556(), 20 * 64);
+        assert!(parent.spans_sockets(), "20 ranks cross the boundary");
+        let sets = parent.split_ranks(&[10, 10]);
+        assert_eq!(sets[0].rank0, 0);
+        assert_eq!(sets[1].rank0, 10);
+        assert!(!sets[0].spans_sockets(), "ranks 0-9 stay on the near socket");
+        assert!(sets[1].spans_sockets(), "ranks 10-19 reach past rank 16");
+    }
+
+    #[test]
+    fn arrivals_are_deterministic_and_monotone() {
+        let a = gen_arrivals(0, 42, 16, 1000.0);
+        let b = gen_arrivals(0, 42, 16, 1000.0);
+        assert_eq!(a, b);
+        let times: Vec<f64> = a.iter().map(|x| x.at).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "open-loop times sorted");
+        assert!(times[0] > 0.0);
+        // a different seed decorrelates
+        let c = gen_arrivals(0, 43, 16, 1000.0);
+        assert_ne!(a, c);
+        // non-positive rate = burst at t=0
+        let burst = gen_arrivals(1, 42, 4, 0.0);
+        assert!(burst.iter().all(|x| x.at == 0.0));
+        assert_eq!(burst[2].req, Request::stream(42, 4)[2]);
+    }
+
+    fn cand(tenant: usize, arrival: f64, estimate: f64, weight: u32) -> Candidate {
+        Candidate { tenant, arrival, estimate, weight }
+    }
+
+    #[test]
+    fn fifo_picks_earliest_arrival() {
+        let f = &[cand(0, 2.0, 0.0, 1), cand(1, 1.0, 0.0, 1), cand(2, 1.0, 0.0, 1)];
+        assert_eq!(Fifo.pick(f), (1, 1), "earliest arrival, lowest tenant on ties");
+    }
+
+    #[test]
+    fn wrr_cycles_with_weights() {
+        let mut p = WeightedRoundRobin::new();
+        let f = &[cand(0, 0.0, 0.0, 2), cand(1, 0.0, 0.0, 1), cand(2, 0.0, 0.0, 3)];
+        assert_eq!(p.pick(f), (0, 2));
+        assert_eq!(p.pick(f), (1, 1));
+        assert_eq!(p.pick(f), (2, 3));
+        assert_eq!(p.pick(f), (0, 2), "pointer wraps");
+        // skips tenants that are not feasible
+        let partial = &[cand(2, 0.0, 0.0, 3)];
+        assert_eq!(p.pick(partial), (2, 3));
+    }
+
+    #[test]
+    fn sjf_picks_smallest_estimate() {
+        let f = &[cand(0, 0.0, 3e-3, 1), cand(1, 5.0, 1e-3, 1), cand(2, 0.0, 2e-3, 1)];
+        assert_eq!(ShortestJob.pick(f), (1, 1));
+        // unprobed tenants (estimate 0) go first
+        let g = &[cand(0, 0.0, 3e-3, 1), cand(1, 9.0, 0.0, 1)];
+        assert_eq!(ShortestJob.pick(g), (1, 1));
+    }
+
+    /// Tiny end-to-end run: two resident tenants on disjoint rank slices,
+    /// every request served, verified outputs, sane QoS accounting.
+    #[test]
+    fn end_to_end_two_tenants() {
+        let mut specs = TenantSpec::parse_list("va:1,bs:1").unwrap();
+        for s in &mut specs {
+            s.scale = 0.002;
+        }
+        let mut cfg = SchedConfig::new(specs);
+        cfg.requests = 3;
+        cfg.rate = 0.0; // burst: maximum cross-tenant contention
+        cfg.exec = ExecChoice::Serial;
+        let rep = run_sched(&cfg).unwrap();
+        assert_eq!(rep.tenants.len(), 2);
+        assert_eq!(rep.total_ranks, 2);
+        assert!(rep.makespan > 0.0);
+        let occ = rep.occupancy();
+        assert!(occ > 0.0 && occ <= 1.0, "occupancy {occ}");
+        for t in &rep.tenants {
+            assert!(t.verified, "{} must verify", t.bench);
+            assert_eq!(t.records.len(), 3);
+            for r in &t.records {
+                assert!(r.done.is_finite(), "every request completes");
+                assert!(r.latency() > 0.0);
+                assert!(r.queueing() >= 0.0);
+                assert!(r.dispatched >= r.arrival);
+            }
+            assert!(t.throughput() > 0.0);
+            assert!(t.utilization(rep.makespan) <= 1.0 + 1e-12);
+            assert!(t.warm.dpu > 0.0);
+            assert!(t.cold.cpu_dpu > 0.0, "resident load paid in the cold window");
+        }
+        // within a tenant, dispatch respects arrival (id) order
+        for t in &rep.tenants {
+            let ids: Vec<u64> = t.records.iter().map(|r| r.id).collect();
+            assert_eq!(ids, vec![0, 1, 2]);
+        }
+        // the report is reproducible bit-for-bit
+        let rep2 = run_sched(&cfg).unwrap();
+        assert_eq!(rep.to_json(), rep2.to_json());
+    }
+
+    /// Pipelining changes only the modeled bus occupancy of
+    /// multi-request batches (the batch-level overlap credit):
+    /// component buckets and functional outputs stay identical, and the
+    /// timeline can only shrink.
+    #[test]
+    fn pipelined_batches_only_shrink_the_timeline() {
+        let run = |pipeline: bool| {
+            let mut specs = TenantSpec::parse_list("bs:1:4").unwrap();
+            specs[0].scale = 0.002;
+            let mut cfg = SchedConfig::new(specs);
+            cfg.requests = 4;
+            cfg.policy = PolicyKind::Wrr; // weight-4 grants batch the burst
+            cfg.rate = 0.0;
+            cfg.pipeline = pipeline;
+            cfg.exec = ExecChoice::Serial;
+            run_sched(&cfg).unwrap()
+        };
+        let ser = run(false);
+        let pip = run(true);
+        let (s, p) = (&ser.tenants[0], &pip.tenants[0]);
+        assert!(s.verified && p.verified);
+        // component buckets and bytes are schedule-independent
+        assert_eq!(s.warm.cpu_dpu.to_bits(), p.warm.cpu_dpu.to_bits());
+        assert_eq!(s.warm.dpu.to_bits(), p.warm.dpu.to_bits());
+        assert_eq!(s.warm.bytes_to_dpu, p.warm.bytes_to_dpu);
+        assert_eq!(s.warm.overlapped, 0.0);
+        assert!(pip.makespan <= ser.makespan);
+        if p.warm.overlapped > 0.0 {
+            assert!(pip.makespan < ser.makespan, "credited pushes must shorten the bus");
+        }
+    }
+
+    /// The shared-bus model must serialize cross-tenant transfers: with
+    /// two tenants bursting at t=0, someone's bus grant waits for the
+    /// other's push.
+    #[test]
+    fn bus_serializes_cross_tenant_pushes() {
+        let mut specs = TenantSpec::parse_list("bs:1,bs:1").unwrap();
+        for s in &mut specs {
+            s.scale = 0.002;
+        }
+        let mut cfg = SchedConfig::new(specs);
+        cfg.requests = 2;
+        cfg.rate = 0.0;
+        cfg.exec = ExecChoice::Serial;
+        let rep = run_sched(&cfg).unwrap();
+        let queued: f64 = rep
+            .tenants
+            .iter()
+            .flat_map(|t| t.records.iter())
+            .map(RequestRecord::queueing)
+            .sum();
+        assert!(queued > 0.0, "identical burst tenants must contend on the bus");
+    }
+}

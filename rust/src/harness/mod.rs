@@ -7,6 +7,7 @@ pub mod amortized;
 pub mod compare;
 pub mod figures;
 pub mod future;
+pub mod multitenant;
 pub mod scaling;
 pub mod tables;
 
@@ -16,11 +17,12 @@ use std::path::Path;
 /// All experiment ids the harness can regenerate (`future` = the §6
 /// recommendations implemented as an ablation, beyond the paper's own
 /// evaluation; `amortized` = the cold/warm/pipelined serving study over
-/// persistent sessions).
-pub const ALL_IDS: [&str; 23] = [
+/// persistent sessions; `multitenant` = the rank-sliced multi-tenant
+/// scheduling study — policies and slice splits).
+pub const ALL_IDS: [&str; 24] = [
     "table1", "table2", "table3", "table4", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
     "fig10", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
-    "fig22", "future", "amortized",
+    "fig22", "future", "amortized", "multitenant",
 ];
 
 /// Per-benchmark dataset scale used by the harness (relative to Table 3
@@ -73,6 +75,10 @@ pub fn run_id(id: &str, outdir: &Path, quick: bool) -> anyhow::Result<()> {
             future::future_interdpu(quick),
         ],
         "amortized" => vec![amortized::amortized(quick)],
+        "multitenant" => vec![
+            multitenant::multitenant_policies(quick),
+            multitenant::multitenant_splits(quick),
+        ],
         other => anyhow::bail!("unknown experiment id '{other}' (see `repro list`)"),
     };
     for (i, t) in tables.iter().enumerate() {

@@ -1,0 +1,139 @@
+//! `multitenant` — the rank-sliced serving study over the
+//! `coordinator::scheduler` subsystem.
+//!
+//! Two tables:
+//!
+//! * **policy comparison** — one tenant mix, three bus-arbitration
+//!   policies (FIFO / weighted round-robin / modeled-SJF); per-tenant
+//!   throughput, p50/p95/p99 latency, and slice utilization, plus a
+//!   machine summary line per policy. The functional outputs and the
+//!   per-tenant bucket breakdowns are policy-independent for a
+//!   single-tenant stream and executor-independent always
+//!   (`tests/executor_equivalence.rs`); the *latency distribution* is
+//!   what the policy moves.
+//! * **slice splits** — the same three workloads under different rank
+//!   budgets, fixed policy: how reapportioning whole ranks shifts each
+//!   tenant's p99 and the machine occupancy.
+
+use crate::coordinator::{run_sched, PolicyKind, SchedConfig, TenantSpec};
+use crate::prim::common::ExecChoice;
+use crate::prim::workload::workload_by_name;
+use crate::util::table::Table;
+
+/// The study's tenant mix: one heavy dense-algebra tenant plus two
+/// query-style tenants (Table 2 classes with very different service
+/// times — the case where arbitration policy matters).
+const MIX: &str = "gemv:2,bs:1:2,va:1";
+
+fn specs_for(mix: &str, quick: bool) -> Vec<TenantSpec> {
+    let mut specs = TenantSpec::parse_list(mix).expect("static mix parses");
+    let mul = if quick { 0.02 } else { 0.1 };
+    for s in &mut specs {
+        let w = workload_by_name(&s.bench).expect("known workload");
+        s.scale = super::harness_scale(w.name()) * mul;
+    }
+    specs
+}
+
+fn config(mix: &str, quick: bool, policy: PolicyKind) -> SchedConfig {
+    let mut cfg = SchedConfig::new(specs_for(mix, quick));
+    cfg.requests = if quick { 3 } else { 8 };
+    cfg.policy = policy;
+    // burst arrivals: every tenant queues at t = 0, so the policy alone
+    // decides who is granted the serialized bus first
+    cfg.rate = 0.0;
+    cfg.exec = ExecChoice::Auto;
+    cfg
+}
+
+/// Policy comparison over the fixed mix.
+pub fn multitenant_policies(quick: bool) -> Table {
+    let mut t = Table::new(
+        &format!("multitenant — bus-arbitration policies over `{MIX}`"),
+        &[
+            "policy",
+            "tenant",
+            "ranks",
+            "thr_rps",
+            "p50_ms",
+            "p95_ms",
+            "p99_ms",
+            "util_pct",
+            "occupancy_pct",
+            "verified",
+        ],
+    );
+    for policy in PolicyKind::ALL {
+        let rep = run_sched(&config(MIX, quick, policy)).expect("scheduler runs");
+        for tn in &rep.tenants {
+            let l = tn.latency_summary();
+            t.row(vec![
+                policy.name().to_string(),
+                tn.bench.clone(),
+                tn.slice.n_ranks.to_string(),
+                Table::fmt(tn.throughput()),
+                Table::fmt(l.p50 * 1e3),
+                Table::fmt(l.p95 * 1e3),
+                Table::fmt(l.p99 * 1e3),
+                Table::fmt(tn.utilization(rep.makespan) * 100.0),
+                Table::fmt(rep.occupancy() * 100.0),
+                tn.verified.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+/// Slice-split comparison: same workloads, different rank budgets,
+/// fixed (weighted-round-robin) policy.
+pub fn multitenant_splits(quick: bool) -> Table {
+    let splits = ["gemv:2,bs:1,va:1", "gemv:1,bs:2,va:1", "gemv:1,bs:1,va:2"];
+    let mut t = Table::new(
+        "multitenant — rank-slice splits under wrr",
+        &[
+            "split",
+            "makespan_ms",
+            "occupancy_pct",
+            "gemv_p99_ms",
+            "bs_p99_ms",
+            "va_p99_ms",
+            "verified",
+        ],
+    );
+    for split in splits {
+        let rep = run_sched(&config(split, quick, PolicyKind::Wrr)).expect("scheduler runs");
+        let p99 = |bench: &str| -> f64 {
+            rep.tenants
+                .iter()
+                .find(|tn| tn.bench.eq_ignore_ascii_case(bench))
+                .map(|tn| tn.latency_summary().p99 * 1e3)
+                .unwrap_or(f64::NAN)
+        };
+        t.row(vec![
+            split.to_string(),
+            Table::fmt(rep.makespan * 1e3),
+            Table::fmt(rep.occupancy() * 100.0),
+            Table::fmt(p99("gemv")),
+            Table::fmt(p99("bs")),
+            Table::fmt(p99("va")),
+            rep.tenants.iter().all(|tn| tn.verified).to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_policy_table_has_expected_shape() {
+        let t = multitenant_policies(true);
+        // 3 policies × 3 tenants
+        assert_eq!(t.rows.len(), 9);
+        assert_eq!(t.headers.len(), 10);
+        for row in &t.rows {
+            assert_eq!(row[9], "true", "{}/{} must verify", row[0], row[1]);
+        }
+    }
+}

@@ -11,14 +11,20 @@
 //!            [--json] [--quick]      --json writes BENCH_PRIM.json
 //! repro serve --bench N [--requests R] [--pipeline] [--dpus D]
 //!            [--tasklets T] [--scale S]   persistent-session serving
+//! repro sched [--tenants "gemv:2,bs:1,va:1"] [--requests N]
+//!            [--policy fifo|wrr|sjf] [--rate R] [--batch B] [--pipeline]
+//!            [--json] [--quick]      multi-tenant rank-sliced scheduling
 //! repro compare [--quick]            Fig. 16 + Fig. 17
 //! repro estimate --dpus N            fleet estimator via the PJRT artifact
 //! repro all [--quick]                everything, CSVs into --outdir
 //! ```
-//! All outputs land in `--outdir` (default `results/`).
+//! All outputs land in `--outdir` (default `results/`). The global
+//! `--seed S` flag (default 42) drives dataset synthesis *and* traffic
+//! generation for `prim`, `serve`, and `sched`; harness tables/figures
+//! pin their own seeds so regenerated artifacts stay comparable.
 
 use prim_pim::arch::SystemConfig;
-use prim_pim::coordinator::ExecChoice;
+use prim_pim::coordinator::{run_sched, ExecChoice, PolicyKind, SchedConfig, TenantSpec};
 use prim_pim::harness::{self, ALL_IDS};
 use prim_pim::prim::common::{all_benches, bench_by_name, BenchResult, RunConfig};
 use prim_pim::prim::workload::{serve, workload_by_name};
@@ -95,7 +101,8 @@ impl Args {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: repro <list|table|figure|micro|prim|serve|compare|estimate|all> [args]\n\
+        "usage: repro <list|table|figure|micro|prim|serve|sched|compare|estimate|all> \
+         [--seed S] [args]\n\
          run `repro list` for the experiment index"
     );
     std::process::exit(2);
@@ -160,6 +167,9 @@ fn main() -> anyhow::Result<()> {
     let args = parse_args(&argv[1..]);
     let outdir = PathBuf::from(args.flag("outdir", "results".to_string()));
     let quick = args.has("quick");
+    // global seed: one flag drives dataset synthesis AND traffic
+    // generation, so any run is reproducible from the command line
+    let seed: u64 = args.flag("seed", 42);
 
     match cmd {
         "list" => {
@@ -197,7 +207,7 @@ fn main() -> anyhow::Result<()> {
                     n_dpus,
                     n_tasklets: args.flag("tasklets", b.best_tasklets()),
                     scale: args.flag("scale", harness::harness_scale(b.name()) * scale_factor),
-                    seed: args.flag("seed", 42),
+                    seed,
                     sys: sys.clone(),
                     exec,
                 };
@@ -233,7 +243,7 @@ fn main() -> anyhow::Result<()> {
                 n_dpus,
                 n_tasklets: args.flag("tasklets", w.best_tasklets()),
                 scale: args.flag("scale", harness::harness_scale(w.name())),
-                seed: args.flag("seed", 42),
+                seed,
                 sys: system_for(n_dpus),
                 exec: args.exec_choice(),
             };
@@ -266,6 +276,82 @@ fn main() -> anyhow::Result<()> {
                 oneshot / amortized.max(f64::MIN_POSITIVE),
             );
             println!("sim wall {:.2}s", t0.elapsed().as_secs_f64());
+        }
+        "sched" => {
+            let mix = args
+                .flags
+                .get("tenants")
+                .cloned()
+                .unwrap_or_else(|| "gemv:2,bs:1,va:1".to_string());
+            let mut tenants = TenantSpec::parse_list(&mix).unwrap_or_else(|e| {
+                eprintln!("bad --tenants: {e}");
+                std::process::exit(2);
+            });
+            // dataset scale follows the per-workload harness factors;
+            // --quick is the CI smoke setting behind BENCH_SCHED.json
+            let scale_mul = if quick { 0.02 } else { 0.25 };
+            for t in &mut tenants {
+                let w = workload_by_name(&t.bench).unwrap_or_else(|| {
+                    eprintln!("unknown benchmark {}", t.bench);
+                    std::process::exit(2);
+                });
+                t.scale = args.flag("scale", harness::harness_scale(w.name()) * scale_mul);
+            }
+            let policy_name = args.flag("policy", "wrr".to_string());
+            let policy = PolicyKind::parse(&policy_name).unwrap_or_else(|| {
+                eprintln!("unknown --policy '{policy_name}' (expected fifo|wrr|sjf)");
+                std::process::exit(2);
+            });
+            let cfg = SchedConfig {
+                requests: args.flag("requests", 8),
+                policy,
+                rate: args.flag("rate", 500.0),
+                max_batch: args.flag("batch", 4),
+                pipeline: args.has("pipeline"),
+                seed,
+                exec: args.exec_choice(),
+                tenants,
+            };
+            let t0 = std::time::Instant::now();
+            let rep = run_sched(&cfg)?;
+            println!(
+                "policy {} · seed {} · {} tenants on {} ranks · {} requests/tenant · {} \
+                 schedule",
+                rep.policy,
+                rep.seed,
+                rep.tenants.len(),
+                rep.total_ranks,
+                cfg.requests,
+                if rep.pipelined { "pipelined" } else { "serialized" },
+            );
+            for t in &rep.tenants {
+                let l = t.latency_summary();
+                println!(
+                    "tenant {} {:<9} {:>2} ranks | thr {:>9.1} req/s | p50 {:>8.3} ms  \
+                     p95 {:>8.3} ms  p99 {:>8.3} ms | util {:>5.1}% | [{}]",
+                    t.slice.tenant,
+                    t.bench,
+                    t.slice.n_ranks,
+                    t.throughput(),
+                    l.p50 * 1e3,
+                    l.p95 * 1e3,
+                    l.p99 * 1e3,
+                    t.utilization(rep.makespan) * 100.0,
+                    if t.verified { "ok" } else { "VERIFY-FAIL" },
+                );
+            }
+            println!(
+                "machine occupancy {:.1}% | makespan {:.3} ms | sim wall {:.2}s",
+                rep.occupancy() * 100.0,
+                rep.makespan * 1e3,
+                t0.elapsed().as_secs_f64(),
+            );
+            if args.has("json") {
+                std::fs::create_dir_all(&outdir)?;
+                let path = outdir.join("BENCH_SCHED.json");
+                std::fs::write(&path, rep.to_json())?;
+                println!("wrote {}", path.display());
+            }
         }
         "compare" => {
             harness::run_id("fig16", &outdir, quick)?;

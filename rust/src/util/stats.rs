@@ -26,13 +26,14 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// Median (sorts a copy).
+/// Median (sorts a copy; `total_cmp` keeps a stray NaN from panicking the
+/// comparator — NaNs sort to the top instead).
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -41,15 +42,45 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
-/// Percentile in [0,100] by nearest-rank on a sorted copy.
+/// Percentile in [0,100] by nearest-rank on a sorted copy (NaN-safe via
+/// `total_cmp`, like [`median`]).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank.min(v.len() - 1)]
+}
+
+/// The latency percentiles QoS reports quote (scheduler per-tenant lines,
+/// `BENCH_SCHED.json`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+/// Summarize a latency sample into p50/p95/p99/max with a single sort.
+pub fn latency_summary(xs: &[f64]) -> LatencySummary {
+    if xs.is_empty() {
+        return LatencySummary::default();
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    let rank = |p: f64| {
+        let r = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+        v[r.min(v.len() - 1)]
+    };
+    LatencySummary {
+        p50: rank(50.0),
+        p95: rank(95.0),
+        p99: rank(99.0),
+        max: v[v.len() - 1],
+    }
 }
 
 /// Ordinary least squares fit `y = a + b*x`; returns (a, b, r2).
@@ -118,5 +149,28 @@ mod tests {
     #[test]
     fn stddev_constant_zero() {
         assert_eq!(stddev(&[2.0, 2.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn median_and_percentile_survive_nan() {
+        // a stray NaN must not panic the sort; total_cmp puts it last
+        let xs = [1.0, f64::NAN, 2.0, 3.0];
+        let _ = median(&xs);
+        let _ = percentile(&xs, 50.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+    }
+
+    #[test]
+    fn latency_summary_percentiles() {
+        // 101 samples: rank(p) = p/100 * 100 is exact, no rounding edge
+        let xs: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        let s = latency_summary(&xs);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(latency_summary(&[]), LatencySummary::default());
+        let one = latency_summary(&[7.0]);
+        assert_eq!((one.p50, one.max), (7.0, 7.0));
     }
 }

@@ -11,7 +11,8 @@
 
 use prim_pim::arch::SystemConfig;
 use prim_pim::coordinator::{
-    FleetExecutor, ParallelExecutor, PimSet, SerialExecutor, TimeBreakdown,
+    run_sched, FleetExecutor, ParallelExecutor, PimSet, PolicyKind, SchedConfig, SchedReport,
+    SerialExecutor, TenantSpec, TimeBreakdown,
 };
 use prim_pim::prim::bs::BsOut;
 use prim_pim::prim::common::{bench_by_name, BenchResult, ExecChoice, RunConfig};
@@ -232,4 +233,67 @@ fn pipelined_schedule_matches_serialized_except_overlap() {
     assert_eq!(ser.warm.overlapped, 0.0);
     assert!(pip.warm.overlapped > 0.0, "BS query pushes must hide under launches");
     assert!(pip.warm.total() < ser.warm.total());
+}
+
+// ------------------------------------------------------------------------
+// Multi-tenant scheduler (coordinator::scheduler): rank-sliced tenants on
+// one fleet must be bit-identical across executors for every policy, and
+// a single-tenant stream must be policy-invariant (policies only reorder
+// *across* tenants).
+
+fn sched_report(mix: &str, policy: PolicyKind, exec: ExecChoice) -> SchedReport {
+    let mut tenants = TenantSpec::parse_list(mix).expect("mix parses");
+    for t in &mut tenants {
+        t.scale = 0.002;
+    }
+    let mut cfg = SchedConfig::new(tenants);
+    cfg.requests = 3;
+    cfg.policy = policy;
+    cfg.rate = 2000.0;
+    cfg.seed = 7;
+    cfg.exec = exec;
+    run_sched(&cfg).expect("scheduler runs")
+}
+
+/// Three concurrently-resident tenants covering the no-sync (VA),
+/// query-style (BS), and intra-DPU-sync (RED) classes: same seed, policy,
+/// and mix ⇒ bit-identical outputs, bucket breakdowns, and per-request
+/// timelines across executors.
+#[test]
+fn multi_tenant_sched_bit_identical_across_executors() {
+    for policy in PolicyKind::ALL {
+        let s = sched_report("va:1,bs:1,red:1", policy, ExecChoice::Serial);
+        let p = sched_report("va:1,bs:1,red:1", policy, ExecChoice::Parallel(3));
+        assert_eq!(s.tenants.len(), 3);
+        for (a, b) in s.tenants.iter().zip(&p.tenants) {
+            assert!(a.verified, "{} serial ({})", a.bench, policy.name());
+            assert!(b.verified, "{} parallel ({})", b.bench, policy.name());
+            assert_eq!(a.cold, b.cold, "{} cold ({})", a.bench, policy.name());
+            assert_eq!(a.warm, b.warm, "{} warm ({})", a.bench, policy.name());
+            assert_eq!(a.records, b.records, "{} timeline ({})", a.bench, policy.name());
+        }
+        assert_eq!(s.makespan.to_bits(), p.makespan.to_bits(), "{}", policy.name());
+        // JSON equality == bit equality (shortest-roundtrip floats)
+        assert_eq!(s.to_json(), p.to_json(), "{}", policy.name());
+    }
+}
+
+/// With a single tenant there is no cross-tenant choice to make, so every
+/// policy must produce the identical schedule, latencies, and buckets.
+#[test]
+fn single_tenant_stream_is_policy_invariant() {
+    let base = sched_report("bs:1", PolicyKind::Fifo, ExecChoice::Serial);
+    assert!(base.tenants[0].verified);
+    for policy in [PolicyKind::Wrr, PolicyKind::Sjf] {
+        let r = sched_report("bs:1", policy, ExecChoice::Serial);
+        assert_eq!(
+            base.tenants[0].records,
+            r.tenants[0].records,
+            "policy {} must not reorder a single-tenant stream",
+            policy.name()
+        );
+        assert_eq!(base.tenants[0].cold, r.tenants[0].cold, "{}", policy.name());
+        assert_eq!(base.tenants[0].warm, r.tenants[0].warm, "{}", policy.name());
+        assert_eq!(base.makespan.to_bits(), r.makespan.to_bits(), "{}", policy.name());
+    }
 }
