@@ -88,21 +88,6 @@ pub trait FleetExecutor: Send + Sync {
 
     /// Apply `op` to every slot (the transfer fan-out primitive).
     fn for_each(&self, slots: &mut [FleetSlot<'_>], op: &(dyn Fn(usize, &mut Dpu) + Sync));
-
-    /// Two-stage overlapped schedule — the building block of the
-    /// pipelined `Session::execute_batch`. `fleet` is the fleet-side
-    /// stage (kernel launch + transfers of the current request); `host`
-    /// is an independent host-side stage (staging the next request's
-    /// input buffers). The default (serial) schedule runs fleet **then**
-    /// host — the bit-identical reference order; the parallel executor
-    /// runs `host` on a scoped thread concurrently with `fleet`. The two
-    /// stages cannot share mutable state (the borrow checker enforces
-    /// that at the call site), so the schedules cannot diverge
-    /// functionally.
-    fn overlap(&self, fleet: Box<dyn FnOnce() + '_>, host: Box<dyn FnOnce() + Send + '_>) {
-        fleet();
-        host();
-    }
 }
 
 /// The original single-threaded walk: slots in order, on the calling
@@ -222,17 +207,6 @@ impl FleetExecutor for ParallelExecutor {
             }
         });
     }
-
-    /// Genuine wallclock overlap: the host stage runs on its own scoped
-    /// thread while the fleet stage executes on the calling thread (which
-    /// may itself shard across workers via [`ParallelExecutor::launch`]).
-    fn overlap(&self, fleet: Box<dyn FnOnce() + '_>, host: Box<dyn FnOnce() + Send + '_>) {
-        std::thread::scope(|scope| {
-            let h = scope.spawn(host);
-            fleet();
-            h.join().unwrap_or_else(|e| std::panic::resume_unwind(e));
-        });
-    }
 }
 
 /// Executor selection carried by `prim::common::RunConfig` (and anything
@@ -249,22 +223,39 @@ pub enum ExecChoice {
 }
 
 impl ExecChoice {
-    /// Parse the `PRIM_EXECUTOR` / `PRIM_THREADS` pair. Unknown or unset
-    /// executor names resolve to the parallel engine (the fast default);
-    /// an unparsable thread count means "all cores".
-    pub fn parse(executor: Option<&str>, threads: Option<&str>) -> Self {
-        let threads = threads.and_then(|v| v.trim().parse::<usize>().ok()).unwrap_or(0);
+    /// Parse an executor-name / thread-count pair (the `PRIM_EXECUTOR` /
+    /// `PRIM_THREADS` environment contract and the CLI's `--executor` /
+    /// `--threads` flags). **Strict**: an unknown executor name or an
+    /// unparsable thread count is an error — values used to fall through
+    /// silently to the parallel default, hiding typos. Unset fields keep
+    /// their defaults (parallel, all cores).
+    pub fn parse(executor: Option<&str>, threads: Option<&str>) -> Result<Self, String> {
+        let threads = match threads.map(str::trim) {
+            None => 0,
+            Some(v) => v.parse::<usize>().map_err(|_| {
+                format!("invalid value '{v}' for the thread count (expected a usize)")
+            })?,
+        };
         match executor.map(str::trim) {
-            Some(s) if s.eq_ignore_ascii_case("serial") => ExecChoice::Serial,
-            _ => ExecChoice::Parallel(threads),
+            None => Ok(ExecChoice::Parallel(threads)),
+            Some(s) if s.eq_ignore_ascii_case("serial") => Ok(ExecChoice::Serial),
+            Some(s) if s.eq_ignore_ascii_case("parallel") => Ok(ExecChoice::Parallel(threads)),
+            Some(s) => Err(format!(
+                "unknown executor '{s}' (expected serial|parallel)"
+            )),
         }
     }
 
     /// Resolve from the process environment (never returns `Auto`).
+    /// Malformed `PRIM_EXECUTOR` / `PRIM_THREADS` values exit with
+    /// status 2, matching the CLI's strict numeric-flag parsing.
     pub fn from_env() -> Self {
         let executor = std::env::var("PRIM_EXECUTOR").ok();
         let threads = std::env::var("PRIM_THREADS").ok();
-        Self::parse(executor.as_deref(), threads.as_deref())
+        Self::parse(executor.as_deref(), threads.as_deref()).unwrap_or_else(|e| {
+            eprintln!("PRIM_EXECUTOR/PRIM_THREADS: {e}");
+            std::process::exit(2);
+        })
     }
 
     /// Build the chosen executor.
@@ -335,50 +326,23 @@ mod tests {
     }
 
     #[test]
-    fn choice_parsing() {
-        assert_eq!(ExecChoice::parse(Some("serial"), None), ExecChoice::Serial);
-        assert_eq!(ExecChoice::parse(Some("SERIAL"), Some("4")), ExecChoice::Serial);
-        assert_eq!(ExecChoice::parse(Some("parallel"), Some("4")), ExecChoice::Parallel(4));
-        assert_eq!(ExecChoice::parse(None, None), ExecChoice::Parallel(0));
-        assert_eq!(ExecChoice::parse(Some("bogus"), Some("x")), ExecChoice::Parallel(0));
-    }
-
-    #[test]
-    fn overlap_runs_both_stages_exactly_once() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        for exec in [
-            &SerialExecutor as &dyn FleetExecutor,
-            &ParallelExecutor::new(2) as &dyn FleetExecutor,
-        ] {
-            let fleet_runs = AtomicUsize::new(0);
-            let host_runs = AtomicUsize::new(0);
-            exec.overlap(
-                Box::new(|| {
-                    fleet_runs.fetch_add(1, Ordering::SeqCst);
-                }),
-                Box::new(|| {
-                    host_runs.fetch_add(1, Ordering::SeqCst);
-                }),
-            );
-            assert_eq!(fleet_runs.load(Ordering::SeqCst), 1, "{}", exec.name());
-            assert_eq!(host_runs.load(Ordering::SeqCst), 1, "{}", exec.name());
-        }
-    }
-
-    /// The two overlap stages touch disjoint state, so serial and
-    /// parallel schedules produce identical values.
-    #[test]
-    fn overlap_results_identical_across_executors() {
-        let run = |exec: &dyn FleetExecutor| {
-            let mut launched = 0u64;
-            let mut staged: Option<Vec<u64>> = None;
-            exec.overlap(
-                Box::new(|| launched = 41 + 1),
-                Box::new(|| staged = Some((0..8).map(|i| i * 3).collect())),
-            );
-            (launched, staged)
-        };
-        assert_eq!(run(&SerialExecutor), run(&ParallelExecutor::new(4)));
+    fn choice_parsing_is_strict() {
+        assert_eq!(ExecChoice::parse(Some("serial"), None), Ok(ExecChoice::Serial));
+        assert_eq!(ExecChoice::parse(Some("SERIAL"), Some("4")), Ok(ExecChoice::Serial));
+        assert_eq!(
+            ExecChoice::parse(Some("parallel"), Some("4")),
+            Ok(ExecChoice::Parallel(4))
+        );
+        assert_eq!(ExecChoice::parse(None, None), Ok(ExecChoice::Parallel(0)));
+        assert_eq!(ExecChoice::parse(None, Some(" 7 ")), Ok(ExecChoice::Parallel(7)));
+        // typos no longer fall through to the parallel default
+        let bad_name = ExecChoice::parse(Some("bogus"), None);
+        assert!(bad_name.is_err());
+        assert!(bad_name.unwrap_err().contains("serial|parallel"));
+        let bad_threads = ExecChoice::parse(Some("parallel"), Some("x"));
+        assert!(bad_threads.is_err());
+        assert!(bad_threads.unwrap_err().contains("thread count"));
+        assert!(ExecChoice::parse(None, Some("-3")).is_err());
     }
 
     #[test]

@@ -26,18 +26,23 @@ pub const DMA_ALIGN: usize = 8;
 ///
 /// Every DPU in a set shares the same layout (SPMD symbols live at the
 /// same offset in every bank, exactly like linker-placed symbols in the
-/// real SDK). Allocation never reuses space; `reset` starts a fresh
-/// program layout.
+/// real SDK). Allocation never reuses space; [`MramLayout::reset`]
+/// starts a fresh program layout **generation**: the cursor rewinds and
+/// every `Symbol` carved from an earlier generation becomes stale —
+/// using one in a transfer panics, so a warm session can re-plan its
+/// layout without reallocating the fleet and without the silent-aliasing
+/// bug class.
 #[derive(Clone, Debug)]
 pub struct MramLayout {
     capacity: usize,
     cursor: usize,
+    gen: u64,
 }
 
 impl MramLayout {
-    /// A fresh layout over a bank of `capacity` bytes.
+    /// A fresh layout over a bank of `capacity` bytes (generation 0).
     pub fn new(capacity: usize) -> Self {
-        MramLayout { capacity, cursor: 0 }
+        MramLayout { capacity, cursor: 0, gen: 0 }
     }
 
     /// Carve out a region of `elems` elements of `T`, 8-byte aligned and
@@ -55,7 +60,7 @@ impl MramLayout {
             self.capacity
         );
         self.cursor = (end + DMA_ALIGN - 1) & !(DMA_ALIGN - 1);
-        Symbol { off, elems, _elem: PhantomData }
+        Symbol { off, elems, gen: self.gen, _elem: PhantomData }
     }
 
     /// Bytes consumed so far (next allocation offset).
@@ -73,9 +78,18 @@ impl MramLayout {
         self.capacity
     }
 
-    /// Forget all allocations (a new kernel program's layout).
+    /// Forget all allocations and start a new layout generation. Every
+    /// previously allocated `Symbol` becomes stale: the generation check
+    /// in `PimSet::xfer` panics on its next use, asserting there is no
+    /// live use of the retired layout.
     pub fn reset(&mut self) {
         self.cursor = 0;
+        self.gen += 1;
+    }
+
+    /// Current layout generation (bumped by every [`MramLayout::reset`]).
+    pub fn generation(&self) -> u64 {
+        self.gen
     }
 }
 
@@ -88,6 +102,8 @@ impl MramLayout {
 pub struct Symbol<T: Pod> {
     off: usize,
     elems: usize,
+    /// Layout generation this symbol was carved from (stale-use check).
+    gen: u64,
     // fn() -> T keeps Symbol Send + Sync + Copy independent of T's autotraits.
     _elem: PhantomData<fn() -> T>,
 }
@@ -115,10 +131,24 @@ impl<T: Pod> fmt::Debug for Symbol<T> {
 impl<T: Pod> Symbol<T> {
     /// Wrap a hand-placed region (legacy interop; prefer
     /// [`MramLayout::alloc`]). The offset must satisfy the 8-byte DMA
-    /// alignment rule.
+    /// alignment rule. Raw symbols belong to layout generation 0, so
+    /// they go stale on the first [`MramLayout::reset`] like everything
+    /// else.
     pub fn raw(off: usize, elems: usize) -> Self {
         assert!(off % DMA_ALIGN == 0, "symbol offset {off} violates the 8-B DMA alignment");
-        Symbol { off, elems, _elem: PhantomData }
+        Symbol { off, elems, gen: 0, _elem: PhantomData }
+    }
+
+    /// Layout generation this symbol belongs to.
+    pub fn generation(&self) -> u64 {
+        self.gen
+    }
+
+    /// The byte region `[off, off + size_bytes)` this symbol occupies in
+    /// every DPU's bank — the footprint currency of the async command
+    /// queue's dependency inference (`coordinator::queue::Access`).
+    pub fn region(&self) -> std::ops::Range<usize> {
+        self.off..self.off + self.size_bytes()
     }
 
     /// Byte offset of the region start in every DPU's MRAM bank.
@@ -152,14 +182,16 @@ impl<T: Pod> Symbol<T> {
 
     /// Sub-symbol of `elems` elements starting at element `start`. The
     /// slice start must itself land on an 8-byte boundary (it becomes a
-    /// transfer target).
+    /// transfer target). Slices inherit the parent's layout generation.
     pub fn slice(&self, start: usize, elems: usize) -> Symbol<T> {
         assert!(
             start + elems <= self.elems,
             "slice {start}..{} out of bounds for {self:?}",
             start + elems
         );
-        Symbol::raw(self.byte_at(start), elems)
+        let mut s = Symbol::raw(self.byte_at(start), elems);
+        s.gen = self.gen;
+        s
     }
 }
 
@@ -206,6 +238,43 @@ mod tests {
         assert_eq!(l.remaining(), 0);
         l.reset();
         assert_eq!(l.alloc::<i64>(16).off(), 0);
+    }
+
+    /// A second allocation after exhaustion must still panic (the bank
+    /// does not silently wrap), and a reset re-opens it.
+    #[test]
+    fn double_alloc_past_capacity_panics_until_reset() {
+        let mut l = MramLayout::new(128);
+        let _ = l.alloc::<i64>(16);
+        let second = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            l.alloc::<i64>(1)
+        }));
+        assert!(second.is_err(), "double-alloc past capacity must panic");
+        l.reset();
+        assert_eq!(l.alloc::<i64>(16).off(), 0, "reset re-opens the bank");
+    }
+
+    #[test]
+    fn reset_bumps_generation_and_marks_symbols_stale() {
+        let mut l = MramLayout::new(1 << 10);
+        assert_eq!(l.generation(), 0);
+        let old = l.alloc::<i64>(8);
+        let old_slice = old.slice(0, 4);
+        assert_eq!(old.generation(), 0);
+        assert_eq!(old_slice.generation(), 0, "slices inherit the generation");
+        l.reset();
+        assert_eq!(l.generation(), 1);
+        let fresh = l.alloc::<i64>(8);
+        assert_eq!(fresh.generation(), 1);
+        assert_ne!(old.generation(), l.generation(), "old symbols are stale");
+    }
+
+    #[test]
+    fn region_spans_exactly_the_symbol_bytes() {
+        let mut l = MramLayout::new(1 << 10);
+        let a = l.alloc::<i32>(10);
+        assert_eq!(a.region(), a.off()..a.off() + 40);
+        assert_eq!(a.slice(2, 4).region(), a.off() + 8..a.off() + 24);
     }
 
     #[test]

@@ -38,9 +38,11 @@ pub struct TimeBreakdown {
     pub bytes_inter: u64,
     /// Number of kernel launches.
     pub launches: u64,
-    /// Seconds of CPU-DPU push time hidden under a preceding kernel
-    /// launch by the pipelined batch schedule (§6's overlap
-    /// recommendation; see `coordinator::session`). The component buckets
+    /// Seconds hidden by the async command-queue schedule (§6's overlap
+    /// recommendation; see `coordinator::queue`): **derived** as
+    /// `sum(bucket secs) − makespan` of the recorded command DAG on the
+    /// modeled resource timelines — a double-buffered push under a
+    /// launch, a host merge under bus traffic. The component buckets
     /// above keep their full values — `total()` subtracts this credit, so
     /// a serialized schedule (`overlapped == 0`) is unchanged.
     pub overlapped: f64,
@@ -68,7 +70,7 @@ impl TimeBreakdown {
     }
 
     /// Total wall time of the run: the four buckets minus whatever the
-    /// pipelined schedule hid under kernel launches.
+    /// async command-queue schedule hid (`overlapped`).
     pub fn total(&self) -> f64 {
         self.dpu + self.inter_dpu + self.cpu_dpu + self.dpu_cpu - self.overlapped
     }

@@ -17,15 +17,25 @@
 //! Long-lived serving state is a [`Session`]: a `PimSet` kept warm across
 //! many requests, with batched, pipelined execution (see [`session`]).
 //!
+//! Time-domain concurrency is modeled by **async command queues**
+//! ([`queue`]): open one with [`PimSet::queue`] (or implicitly via a
+//! pipelined `Session` batch), issue the same `xfer`/`launch` vocabulary,
+//! and `sync()` schedules the recorded commands onto one serialized host
+//! bus, per-rank kernel lanes, and the host CPU — deriving
+//! [`TimeBreakdown::overlapped`] as `sum(command secs) − makespan`.
+//! Every synchronous call is the degenerate one-command queue, so plain
+//! accounting is bit-identical to the pre-queue model.
+//!
 //! Multi-tenant sharing carves one fleet into rank-granular slices
 //! ([`PimSet::split_ranks`]), each backing its own resident session; the
-//! [`scheduler`] arbitrates the serialized host bus between the tenants'
-//! request streams and accounts per-tenant QoS.
+//! [`scheduler`] arbitrates the same modeled resources ([`Timeline`])
+//! between the tenants' request streams and accounts per-tenant QoS.
 
 pub mod executor;
 pub mod layout;
 pub mod metrics;
 pub mod partition;
+pub mod queue;
 pub mod scheduler;
 pub mod session;
 
@@ -41,6 +51,7 @@ pub use executor::{
 pub use layout::{MramLayout, Symbol};
 pub use metrics::{Bucket, TimeBreakdown};
 pub use partition::{chunk_ranges, chunk_ranges_aligned, cyclic_blocks, ragged_counts};
+pub use queue::{Access, CmdId, CmdKind, CmdMeta, CmdQueue, Lane, Schedule, Timeline};
 pub use scheduler::{
     run_sched, FleetSlice, PolicyKind, SchedConfig, SchedReport, Scheduler, TenantReport,
     TenantSpec,
@@ -57,7 +68,9 @@ pub struct LaunchStats {
 }
 
 impl LaunchStats {
-    /// Load imbalance: max/mean DPU cycles.
+    /// Load imbalance: max/mean DPU cycles. Empty, all-zero-cycle, or
+    /// otherwise degenerate timing sets report 1.0 (perfectly balanced)
+    /// instead of walking the NaN-prone `max/mean` path.
     pub fn imbalance(&self) -> f64 {
         if self.timings.is_empty() {
             return 1.0;
@@ -65,7 +78,7 @@ impl LaunchStats {
         let max = self.timings.iter().map(|t| t.cycles).fold(0.0, f64::max);
         let mean =
             self.timings.iter().map(|t| t.cycles).sum::<f64>() / self.timings.len() as f64;
-        if mean == 0.0 {
+        if mean.is_nan() || mean <= 0.0 {
             1.0
         } else {
             max / mean
@@ -102,6 +115,11 @@ pub struct PimSet {
     /// fleet; rank slices carved by [`PimSet::split_ranks`] record their
     /// physical position so NUMA placement stays visible).
     pub rank0: u32,
+    /// Open async command queue, if any ([`PimSet::queue_begin`]). While
+    /// open, every launch / transfer / host merge records a [`CmdMeta`]
+    /// alongside its normal (unchanged) bucket accounting; `queue_sync`
+    /// schedules the recorded program and credits the derived overlap.
+    cmd_queue: Option<CmdQueue>,
 }
 
 impl PimSet {
@@ -133,6 +151,7 @@ impl PimSet {
             layout: MramLayout::new(cfg.dpu.mram_bytes),
             exec,
             rank0: 0,
+            cmd_queue: None,
             cfg,
         }
     }
@@ -183,7 +202,113 @@ impl PimSet {
     /// # let _ = back;
     /// ```
     pub fn xfer<T: Pod>(&mut self, sym: Symbol<T>) -> Xfer<'_, T> {
-        Xfer { set: self, sym, bucket: None }
+        assert_eq!(
+            sym.generation(),
+            self.layout.generation(),
+            "stale {sym:?}: the MRAM layout was reset since this symbol was allocated"
+        );
+        Xfer { set: self, sym, bucket: None, after: Vec::new() }
+    }
+
+    /// Rewind the fleet's MRAM layout so a warm session can re-plan its
+    /// resident dataset **without reallocating the fleet**. All symbols
+    /// from the previous layout generation become stale; using one in a
+    /// transfer panics (see [`MramLayout::reset`]). MRAM contents are
+    /// untouched — the next `load` overwrites what it needs.
+    pub fn reset_layout(&mut self) {
+        self.layout.reset();
+    }
+
+    // ------------------------------------------------------ command queue
+
+    /// Open an async command queue over this set: the returned session
+    /// accepts the same `xfer`/`launch`/`launch_seq`/`launch_on`
+    /// vocabulary; [`QueueSession::sync`] drains it, scheduling the
+    /// recorded commands on the modeled resource timelines and crediting
+    /// `sum(secs) − makespan` to [`TimeBreakdown::overlapped`]. Commands
+    /// still execute functionally at issue time, in program order, so
+    /// results are identical to synchronous calls.
+    pub fn queue(&mut self) -> QueueSession<'_> {
+        self.queue_begin();
+        QueueSession { set: self, synced: false }
+    }
+
+    /// Flag-style variant of [`PimSet::queue`] for callers that cannot
+    /// hold a guard across control flow (`Session::execute_batch`).
+    pub fn queue_begin(&mut self) {
+        assert!(
+            self.cmd_queue.is_none(),
+            "a command queue is already open on this set"
+        );
+        self.cmd_queue = Some(CmdQueue::new());
+    }
+
+    /// Drain the open queue: schedule the recorded commands onto the
+    /// bus / rank / host lanes and fold the derived overlap into the
+    /// metrics. Returns the hidden seconds. (If a kernel panicked
+    /// mid-session the queue stays open and the *next* `queue_begin`
+    /// reports it — the session that unwound is already lost.)
+    pub fn queue_sync(&mut self) -> f64 {
+        let q = self
+            .cmd_queue
+            .take()
+            .expect("queue_sync without an open command queue");
+        assert!(
+            !q.group_open(),
+            "queue_sync with an open transfer group (missing group_end)"
+        );
+        let per = self.cfg.dpus_per_rank().max(1) as usize;
+        let n_ranks = self.dpus.len().div_ceil(per);
+        let hidden = q.hidden_secs(n_ranks, per);
+        self.metrics.overlapped += hidden;
+        hidden
+    }
+
+    /// Id of the most recently recorded command (None outside a queue
+    /// session) — the handle explicit `after` dependencies use.
+    pub fn last_cmd(&self) -> Option<CmdId> {
+        self.cmd_queue.as_ref().and_then(|q| q.last_id())
+    }
+
+    /// Enqueue a zero-second synchronization barrier (no-op outside a
+    /// queue session) — the modeled `dpu_sync` between command groups.
+    pub fn fence(&mut self) {
+        self.record(CmdMeta::fence());
+    }
+
+    /// Start coalescing subsequent transfers into one recorded bus
+    /// command (no-op outside a queue session; see
+    /// [`CmdQueue::group_begin`]). Bucket accounting is unchanged — only
+    /// the timeline granularity coarsens.
+    pub fn group_begin(&mut self) {
+        if let Some(q) = self.cmd_queue.as_mut() {
+            q.group_begin();
+        }
+    }
+
+    /// Close the transfer group opened by [`PimSet::group_begin`].
+    pub fn group_end(&mut self) {
+        if let Some(q) = self.cmd_queue.as_mut() {
+            q.group_end();
+        }
+    }
+
+    /// Is a command queue currently recording? The transfer terminals
+    /// check this before building a [`CmdMeta`], keeping the synchronous
+    /// hot path (e.g. TRNS's per-request storm of tiny pushes) free of
+    /// per-transfer allocations.
+    fn recording(&self) -> bool {
+        self.cmd_queue.is_some()
+    }
+
+    /// Record a command into the open queue, if any. Outside a queue
+    /// session this is a no-op: a synchronous call is the degenerate
+    /// one-command queue whose makespan equals its seconds, so the
+    /// overlap credit is identically zero.
+    fn record(&mut self, cmd: CmdMeta) {
+        if let Some(q) = self.cmd_queue.as_mut() {
+            q.push(cmd);
+        }
     }
 
     // --------------------------------------------------------------- launch
@@ -198,6 +323,23 @@ impl PimSet {
         self.run_job(
             &LaunchJob { kernel: &f, n_tasklets, seq_tasklets: false },
             None,
+            None,
+        )
+    }
+
+    /// [`PimSet::launch`] with a declared MRAM footprint ([`Access`]):
+    /// inside an async queue session the launch only serializes against
+    /// commands touching the declared regions instead of the whole bank,
+    /// which is what lets an independent (double-buffered) push hide
+    /// under it. Outside a queue the declaration is inert.
+    pub fn launch_acc<F>(&mut self, acc: Access, n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        self.run_job(
+            &LaunchJob { kernel: &f, n_tasklets, seq_tasklets: false },
+            None,
+            Some(acc),
         )
     }
 
@@ -215,6 +357,20 @@ impl PimSet {
         self.run_job(
             &LaunchJob { kernel: &f, n_tasklets, seq_tasklets: true },
             None,
+            None,
+        )
+    }
+
+    /// [`PimSet::launch_seq`] with a declared MRAM footprint (see
+    /// [`PimSet::launch_acc`]).
+    pub fn launch_seq_acc<F>(&mut self, acc: Access, n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        self.run_job(
+            &LaunchJob { kernel: &f, n_tasklets, seq_tasklets: true },
+            None,
+            Some(acc),
         )
     }
 
@@ -227,6 +383,7 @@ impl PimSet {
         self.run_job(
             &LaunchJob { kernel: &f, n_tasklets, seq_tasklets: false },
             Some(dpu_ids),
+            None,
         )
     }
 
@@ -234,7 +391,15 @@ impl PimSet {
     /// subset), hand it to the fleet executor, and account the modeled
     /// seconds. Timings come back in slot order, so the metrics folds are
     /// executor-independent (see [`executor`]'s determinism contract).
-    fn run_job(&mut self, job: &LaunchJob<'_>, subset: Option<&[usize]>) -> LaunchStats {
+    /// An open command queue additionally records the launch, with the
+    /// declared footprint or — undeclared — the whole bank (the safe,
+    /// fully-serializing default of the synchronous shim).
+    fn run_job(
+        &mut self,
+        job: &LaunchJob<'_>,
+        subset: Option<&[usize]>,
+        acc: Option<Access>,
+    ) -> LaunchStats {
         let arch = self.cfg.dpu;
         let exec = Arc::clone(&self.exec);
         let timings = match subset {
@@ -258,16 +423,50 @@ impl PimSet {
         let secs = arch.cycles_to_secs(max_cycles);
         self.metrics.dpu += secs;
         self.metrics.launches += 1;
+        if self.cmd_queue.is_some() {
+            // conservative contiguous DPU span for sparse launch_on sets
+            let dpus = match subset {
+                None => 0..self.dpus.len(),
+                Some(ids) => {
+                    let lo = ids.iter().copied().min().unwrap_or(0);
+                    let hi = ids.iter().copied().max().map_or(0, |m| m + 1);
+                    lo..hi
+                }
+            };
+            let cmd = match acc {
+                Some(a) => CmdMeta::launch(dpus, a, secs),
+                None => CmdMeta::launch_full(dpus, arch.mram_bytes, secs),
+            };
+            self.record(cmd);
+        }
         LaunchStats { timings, secs }
     }
 
     // ----------------------------------------------------------- host model
 
     /// Charge host-side merge work (bytes streamed, scalar ops executed)
-    /// to the `Inter-DPU` bucket.
+    /// to the `Inter-DPU` bucket. In a queue session the merge records
+    /// with **fence** semantics (it conservatively depends on everything
+    /// before it and gates everything after) — use
+    /// [`PimSet::host_merge_dep`] to declare the precise data flow and
+    /// let the merge overlap unrelated bus traffic.
     pub fn host_merge(&mut self, bytes: u64, ops: u64) {
         let spans = self.spans_sockets();
-        self.metrics.inter_dpu += self.host.merge_numa(bytes, ops, spans);
+        let secs = self.host.merge_numa(bytes, ops, spans);
+        self.metrics.inter_dpu += secs;
+        self.record(CmdMeta::host_merge(secs));
+    }
+
+    /// [`PimSet::host_merge`] with declared dependencies: the merge
+    /// consumes only the host images of the listed commands (typically
+    /// the pulls it unions), so on the modeled timeline it runs on the
+    /// host CPU lane concurrently with later bus transfers. Identical
+    /// accounting to `host_merge` — the bucket charge does not change.
+    pub fn host_merge_dep(&mut self, bytes: u64, ops: u64, after: &[CmdId]) {
+        let spans = self.spans_sockets();
+        let secs = self.host.merge_numa(bytes, ops, spans);
+        self.metrics.inter_dpu += secs;
+        self.record(CmdMeta::host_merge_after(secs, after.to_vec()));
     }
 
     /// Charge host merge work to an explicit bucket (SEL/UNI charge their
@@ -276,6 +475,7 @@ impl PimSet {
         let spans = self.spans_sockets();
         let secs = self.host.merge_numa(bytes, ops, spans);
         self.metrics.account(bucket, secs, 0);
+        self.record(CmdMeta::host_merge(secs));
     }
 
     /// Reset accumulated metrics (dataset stays in MRAM).
@@ -328,6 +528,7 @@ impl PimSet {
                     layout: MramLayout::new(cfg.dpu.mram_bytes),
                     exec: Arc::clone(&exec),
                     rank0: slice_rank0,
+                    cmd_queue: None,
                     cfg: cfg.clone(),
                 }
             })
@@ -344,6 +545,7 @@ pub struct Xfer<'s, T: Pod> {
     set: &'s mut PimSet,
     sym: Symbol<T>,
     bucket: Option<Bucket>,
+    after: Vec<CmdId>,
 }
 
 impl<'s, T: Pod> Xfer<'s, T> {
@@ -360,10 +562,19 @@ impl<'s, T: Pod> Xfer<'s, T> {
         self.bucket(Bucket::InterDpu)
     }
 
+    /// Declare explicit queue dependencies (ids from
+    /// [`PimSet::last_cmd`]): the transfer's payload derives from those
+    /// commands' host-side results, which the symbol-region inference
+    /// cannot see. Inert outside a queue session.
+    pub fn after(mut self, deps: &[CmdId]) -> Self {
+        self.after.extend_from_slice(deps);
+        self
+    }
+
     /// Host → MRAM direction.
     pub fn to(self) -> ToXfer<'s, T> {
         let bucket = self.bucket.unwrap_or(Bucket::CpuDpu);
-        ToXfer { set: self.set, sym: self.sym, bucket }
+        ToXfer { set: self.set, sym: self.sym, bucket, after: self.after }
     }
 
     /// MRAM → host direction.
@@ -372,7 +583,7 @@ impl<'s, T: Pod> Xfer<'s, T> {
     #[allow(clippy::should_implement_trait)]
     pub fn from(self) -> FromXfer<'s, T> {
         let bucket = self.bucket.unwrap_or(Bucket::DpuCpu);
-        FromXfer { set: self.set, sym: self.sym, bucket }
+        FromXfer { set: self.set, sym: self.sym, bucket, after: self.after }
     }
 }
 
@@ -382,6 +593,7 @@ pub struct ToXfer<'s, T: Pod> {
     set: &'s mut PimSet,
     sym: Symbol<T>,
     bucket: Bucket,
+    after: Vec<CmdId>,
 }
 
 /// Shared bounds check of every builder terminal: a transfer may not
@@ -398,7 +610,17 @@ impl<T: Pod> ToXfer<'_, T> {
     pub fn one(self, dpu: usize, data: &[T]) {
         check_fits(&self.sym, data.len());
         let secs = self.set.engine.copy_to(&mut self.set.dpus[dpu], self.sym.off(), data);
-        self.set.metrics.account(self.bucket, secs, std::mem::size_of_val(data) as u64);
+        let bytes = std::mem::size_of_val(data);
+        self.set.metrics.account(self.bucket, secs, bytes as u64);
+        if self.set.recording() {
+            let cmd = CmdMeta::push(
+                dpu..dpu + 1,
+                self.sym.off()..self.sym.off() + bytes,
+                secs,
+                self.after,
+            );
+            self.set.record(cmd);
+        }
     }
 
     /// Parallel transfer of equal-size per-DPU buffers (`dpu_push_xfer`,
@@ -416,6 +638,17 @@ impl<T: Pod> ToXfer<'_, T> {
         let bytes: u64 =
             bufs.iter().map(|b| std::mem::size_of_val(b.as_slice()) as u64).sum();
         self.set.metrics.account(self.bucket, secs, bytes);
+        let per_dpu = bufs.first().map_or(0, |b| std::mem::size_of_val(b.as_slice()));
+        let n = self.set.dpus.len();
+        if self.set.recording() {
+            let cmd = CmdMeta::push(
+                0..n,
+                self.sym.off()..self.sym.off() + per_dpu,
+                secs,
+                self.after,
+            );
+            self.set.record(cmd);
+        }
     }
 
     /// Parallel transfer with **per-DPU sizes** — the generalization that
@@ -434,6 +667,18 @@ impl<T: Pod> ToXfer<'_, T> {
         let bytes: u64 =
             bufs.iter().map(|b| std::mem::size_of_val(b.as_slice()) as u64).sum();
         self.set.metrics.account(self.bucket, secs, bytes);
+        let widest =
+            bufs.iter().map(|b| std::mem::size_of_val(b.as_slice())).max().unwrap_or(0);
+        let n = self.set.dpus.len();
+        if self.set.recording() {
+            let cmd = CmdMeta::push(
+                0..n,
+                self.sym.off()..self.sym.off() + widest,
+                secs,
+                self.after,
+            );
+            self.set.record(cmd);
+        }
     }
 
     /// Same buffer to every DPU (`dpu_broadcast_to`).
@@ -445,8 +690,18 @@ impl<T: Pod> ToXfer<'_, T> {
             self.sym.off(),
             data,
         );
-        let bytes = (self.set.dpus.len() * std::mem::size_of_val(data)) as u64;
-        self.set.metrics.account(self.bucket, secs, bytes);
+        let per_dpu = std::mem::size_of_val(data);
+        let n = self.set.dpus.len();
+        self.set.metrics.account(self.bucket, secs, (n * per_dpu) as u64);
+        if self.set.recording() {
+            let cmd = CmdMeta::push(
+                0..n,
+                self.sym.off()..self.sym.off() + per_dpu,
+                secs,
+                self.after,
+            );
+            self.set.record(cmd);
+        }
     }
 }
 
@@ -456,6 +711,7 @@ pub struct FromXfer<'s, T: Pod> {
     set: &'s mut PimSet,
     sym: Symbol<T>,
     bucket: Bucket,
+    after: Vec<CmdId>,
 }
 
 impl<T: Pod> FromXfer<'_, T> {
@@ -464,9 +720,17 @@ impl<T: Pod> FromXfer<'_, T> {
     pub fn one(self, dpu: usize, n: usize) -> Vec<T> {
         check_fits(&self.sym, n);
         let (v, secs) = self.set.engine.copy_from(&self.set.dpus[dpu], self.sym.off(), n);
-        self.set
-            .metrics
-            .account(self.bucket, secs, (n * std::mem::size_of::<T>()) as u64);
+        let bytes = n * std::mem::size_of::<T>();
+        self.set.metrics.account(self.bucket, secs, bytes as u64);
+        if self.set.recording() {
+            let cmd = CmdMeta::pull(
+                dpu..dpu + 1,
+                self.sym.off()..self.sym.off() + bytes,
+                secs,
+                self.after,
+            );
+            self.set.record(cmd);
+        }
         v
     }
 
@@ -479,8 +743,18 @@ impl<T: Pod> FromXfer<'_, T> {
             self.sym.off(),
             n,
         );
-        let bytes = (self.set.dpus.len() * n * std::mem::size_of::<T>()) as u64;
-        self.set.metrics.account(self.bucket, secs, bytes);
+        let per_dpu = n * std::mem::size_of::<T>();
+        let n_dpus = self.set.dpus.len();
+        self.set.metrics.account(self.bucket, secs, (n_dpus * per_dpu) as u64);
+        if self.set.recording() {
+            let cmd = CmdMeta::pull(
+                0..n_dpus,
+                self.sym.off()..self.sym.off() + per_dpu,
+                secs,
+                self.after,
+            );
+            self.set.record(cmd);
+        }
         v
     }
 
@@ -504,7 +778,120 @@ impl<T: Pod> FromXfer<'_, T> {
         );
         let bytes: u64 = lens.iter().map(|&n| (n * std::mem::size_of::<T>()) as u64).sum();
         self.set.metrics.account(self.bucket, secs, bytes);
+        let widest = lens.iter().map(|&n| n * std::mem::size_of::<T>()).max().unwrap_or(0);
+        let n_dpus = self.set.dpus.len();
+        if self.set.recording() {
+            let cmd = CmdMeta::pull(
+                0..n_dpus,
+                self.sym.off()..self.sym.off() + widest,
+                secs,
+                self.after,
+            );
+            self.set.record(cmd);
+        }
         v
+    }
+}
+
+// ------------------------------------------------------- async queue guard
+
+/// An open async command queue over a [`PimSet`] — the builder returned
+/// by [`PimSet::queue`]. It accepts the same `xfer` / `launch` /
+/// `launch_seq` / `launch_on` vocabulary as the set itself (commands
+/// execute functionally at issue time and record their modeled
+/// metadata), and [`QueueSession::sync`] drains it: the recorded program
+/// is scheduled onto the bus / rank / host lanes and the derived overlap
+/// credit lands in [`TimeBreakdown::overlapped`]. Dropping the session
+/// without calling `sync` syncs implicitly.
+pub struct QueueSession<'s> {
+    set: &'s mut PimSet,
+    synced: bool,
+}
+
+impl QueueSession<'_> {
+    /// The underlying set, for anything not mirrored here.
+    pub fn set(&mut self) -> &mut PimSet {
+        self.set
+    }
+
+    /// See [`PimSet::xfer`].
+    pub fn xfer<T: Pod>(&mut self, sym: Symbol<T>) -> Xfer<'_, T> {
+        self.set.xfer(sym)
+    }
+
+    /// See [`PimSet::launch`].
+    pub fn launch<F>(&mut self, n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        self.set.launch(n_tasklets, f)
+    }
+
+    /// See [`PimSet::launch_seq`].
+    pub fn launch_seq<F>(&mut self, n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        self.set.launch_seq(n_tasklets, f)
+    }
+
+    /// See [`PimSet::launch_on`].
+    pub fn launch_on<F>(&mut self, dpu_ids: &[usize], n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        self.set.launch_on(dpu_ids, n_tasklets, f)
+    }
+
+    /// See [`PimSet::launch_acc`].
+    pub fn launch_acc<F>(&mut self, acc: Access, n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        self.set.launch_acc(acc, n_tasklets, f)
+    }
+
+    /// See [`PimSet::launch_seq_acc`].
+    pub fn launch_seq_acc<F>(&mut self, acc: Access, n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        self.set.launch_seq_acc(acc, n_tasklets, f)
+    }
+
+    /// See [`PimSet::host_merge`].
+    pub fn host_merge(&mut self, bytes: u64, ops: u64) {
+        self.set.host_merge(bytes, ops);
+    }
+
+    /// See [`PimSet::host_merge_dep`].
+    pub fn host_merge_dep(&mut self, bytes: u64, ops: u64, after: &[CmdId]) {
+        self.set.host_merge_dep(bytes, ops, after);
+    }
+
+    /// See [`PimSet::fence`].
+    pub fn fence(&mut self) {
+        self.set.fence();
+    }
+
+    /// See [`PimSet::last_cmd`].
+    pub fn last_cmd(&self) -> Option<CmdId> {
+        self.set.last_cmd()
+    }
+
+    /// Drain the queue: schedule the recorded commands and credit the
+    /// derived overlap. Returns the hidden seconds.
+    pub fn sync(mut self) -> f64 {
+        self.synced = true;
+        self.set.queue_sync()
+    }
+}
+
+impl Drop for QueueSession<'_> {
+    fn drop(&mut self) {
+        if !self.synced {
+            self.set.queue_sync();
+        }
     }
 }
 
@@ -664,5 +1051,108 @@ mod tests {
         let mut set = PimSet::allocate(SystemConfig::p21_rank(), 2);
         let sym = set.symbol::<i64>(4);
         set.xfer(sym).to().broadcast(&[0i64; 8]);
+    }
+
+    /// The async surface: a double-buffered push with no data dependency
+    /// on the running launch slides under it on the modeled timeline,
+    /// and the credit lands in `overlapped` — while synchronous calls
+    /// (the degenerate one-command queues) never credit anything.
+    #[test]
+    fn async_queue_surface_credits_overlap() {
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 4);
+        let a = set.symbol::<i64>(256);
+        let b = set.symbol::<i64>(256);
+        let out = set.symbol::<i64>(2);
+        let bufs: Vec<Vec<i64>> = (0..4).map(|d| vec![d as i64; 256]).collect();
+        let mut q = set.queue();
+        q.xfer(a).to().equal(&bufs);
+        q.launch_seq_acc(
+            Access::new().read(a.region()).write(out.region()),
+            4,
+            move |_d, ctx| {
+                let w = ctx.mem_alloc(2048);
+                ctx.mram_read(a.off(), w, 2048);
+                ctx.compute(2_000_000);
+                ctx.mram_write(w, out.off(), 16);
+            },
+        );
+        // the next request's input goes to the other buffer: independent
+        q.xfer(b).to().equal(&bufs);
+        q.launch_seq_acc(
+            Access::new().read(b.region()).write(out.region()),
+            4,
+            move |_d, ctx| {
+                let w = ctx.mem_alloc(2048);
+                ctx.mram_read(b.off(), w, 2048);
+                ctx.compute(2_000_000);
+                ctx.mram_write(w, out.off(), 16);
+            },
+        );
+        let hidden = q.sync();
+        assert!(hidden > 0.0, "the second push must hide under the first launch");
+        assert_eq!(set.metrics.overlapped.to_bits(), hidden.to_bits());
+        assert!(
+            set.metrics.overlapped <= set.metrics.cpu_dpu,
+            "here only pushes can hide"
+        );
+        assert!(set.metrics.total() < set.metrics.dpu + set.metrics.cpu_dpu);
+    }
+
+    #[test]
+    fn queue_session_syncs_on_drop_and_charges_nothing_for_one_command() {
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 2);
+        let sym = set.symbol::<i64>(8);
+        {
+            let mut q = set.queue();
+            q.xfer(sym).to().broadcast(&[1i64; 8]);
+        } // dropped without sync(): drains implicitly
+        assert_eq!(set.metrics.overlapped, 0.0, "a single command hides nothing");
+        // the queue closed cleanly: a new session can open
+        let hidden = set.queue().sync();
+        assert_eq!(hidden, 0.0);
+    }
+
+    /// Syncing with a transfer group still open would silently drop the
+    /// folded members from the timeline — surface it at the bug site.
+    #[test]
+    #[should_panic(expected = "open transfer group")]
+    fn queue_sync_with_open_group_panics() {
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 2);
+        set.queue_begin();
+        set.group_begin();
+        set.queue_sync();
+    }
+
+    #[test]
+    #[should_panic(expected = "stale")]
+    fn stale_symbol_after_layout_reset_panics() {
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 2);
+        let sym = set.symbol::<i64>(8);
+        set.reset_layout();
+        set.xfer(sym).to().broadcast(&[0i64; 8]);
+    }
+
+    #[test]
+    fn reset_layout_replans_without_reallocating_the_fleet() {
+        let mut set = PimSet::allocate(SystemConfig::p21_rank(), 2);
+        let a = set.symbol::<i64>(8);
+        set.xfer(a).to().broadcast(&[7i64; 8]);
+        set.reset_layout();
+        let b = set.symbol::<i32>(4);
+        assert_eq!(b.off(), 0, "a fresh generation restarts the bump allocator");
+        set.xfer(b).to().broadcast(&[1i32; 4]);
+        assert_eq!(set.xfer(b).from().one(0, 4), vec![1i32; 4]);
+    }
+
+    /// Regression: all-zero-cycle timings (e.g. a launch that did no
+    /// charged work) must report perfect balance, not walk max/mean.
+    #[test]
+    fn imbalance_of_all_zero_cycle_timings_is_one() {
+        let stats = LaunchStats {
+            timings: vec![DpuTiming::default(); 4],
+            secs: 0.0,
+        };
+        assert_eq!(stats.imbalance(), 1.0);
+        assert_eq!(LaunchStats::default().imbalance(), 1.0);
     }
 }

@@ -1,0 +1,813 @@
+//! Async command queues: one resource-timeline model for launches,
+//! transfers, and their overlap.
+//!
+//! The real UPMEM SDK exposes exactly one abstraction for the paper's §6
+//! "overlap CPU-DPU transfers with kernel execution" recommendation:
+//! asynchronous operation queues (`dpu_launch(DPU_ASYNCHRONOUS)` +
+//! `dpu_sync`), emphasized again in the follow-on "Benchmarking
+//! Memory-Centric Computing Systems" (arXiv:2110.01709). This module is
+//! the modeled analogue: a [`CmdQueue`] of typed commands
+//! ([`CmdKind`]: `Push` / `Pull` / `Launch` / `HostMerge` / `Fence`)
+//! scheduled onto three kinds of modeled resource lanes ([`Lane`]):
+//!
+//! * **one serialized host bus** — every CPU↔DPU transfer occupies it,
+//!   whatever rank it targets (§5.1.1: "these transfers are not
+//!   simultaneous across ranks");
+//! * **per-rank kernel lanes** — launches occupy the lanes of the ranks
+//!   they run on, so kernels on disjoint rank sets overlap (the
+//!   concurrency the multi-tenant scheduler's rank slicing buys);
+//! * **the host CPU** — `HostMerge` commands (frontier unions, partial
+//!   result merges) occupy it and may overlap bus and kernel activity.
+//!
+//! Ordering between commands is **inferred from the `Symbol` byte
+//! regions each command reads and writes** (RAW / WAR / WAW overlap on
+//! intersecting DPU ranges), plus explicit `after` edges for host-side
+//! data flow the region model cannot see (a merge consumes the host
+//! image of a just-pulled region). [`CmdQueue::schedule`] then runs a
+//! greedy list schedule: at every step the dependency-ready command that
+//! can start earliest issues next — so an independent push (e.g. the
+//! *next* request's double-buffered input) slides under a running
+//! kernel, exactly the software pipelining an async UPMEM program
+//! expresses by issuing work before `dpu_sync`.
+//!
+//! The derived quantity is the **makespan** of the scheduled timeline;
+//! `PimSet::queue_sync` folds `sum(command secs) − makespan` into
+//! [`super::TimeBreakdown::overlapped`]. A queue with a single command —
+//! what every synchronous `PimSet` call degenerates to — has
+//! `makespan == secs`, so the credit is exactly zero and synchronous
+//! accounting is bit-identical to the pre-queue model. A fully dependent
+//! chain likewise folds to `makespan == sum` (the same left-to-right
+//! float accumulation), so `overlapped` is zero whenever nothing can
+//! actually overlap.
+//!
+//! Functionally nothing is reordered: commands *execute* immediately, in
+//! program order, through the same `FleetExecutor`/`TransferEngine`
+//! paths as synchronous calls — the queue records modeled metadata only.
+//! On today's shipping hardware a rank's MRAM cannot be touched while
+//! its DPUs run, so (as with the retired batch-credit model) the
+//! launch-concurrent transfer portion of the credit is the §6 **what-if**
+//! the paper argues for, not a property of the 2021 SDK.
+
+use std::ops::Range;
+
+/// Index of a command within its [`CmdQueue`] (returned by enqueue,
+/// consumed by explicit `after` dependencies).
+pub type CmdId = usize;
+
+/// The command vocabulary — one variant per kind of modeled work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmdKind {
+    /// Host → MRAM transfer (any distribution; occupies the bus).
+    Push,
+    /// MRAM → host transfer (occupies the bus).
+    Pull,
+    /// Kernel launch (occupies the lanes of the ranks it runs on).
+    Launch,
+    /// Host-side merge compute (occupies the host CPU lane).
+    HostMerge,
+    /// Synchronization barrier: waits for everything enqueued before it
+    /// and blocks everything after. Zero modeled seconds.
+    Fence,
+}
+
+/// Declared MRAM footprint of a launch: the byte regions its kernel
+/// reads and writes (built from [`super::Symbol::region`]). Launches
+/// enqueued without a declaration conservatively touch the whole bank,
+/// which serializes them against every transfer — safe, and exactly the
+/// degenerate timeline the synchronous shim wants.
+#[derive(Clone, Debug, Default)]
+pub struct Access {
+    pub reads: Vec<Range<usize>>,
+    pub writes: Vec<Range<usize>>,
+}
+
+impl Access {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a byte region the kernel reads (builder style).
+    pub fn read(mut self, r: Range<usize>) -> Self {
+        self.reads.push(r);
+        self
+    }
+
+    /// Declare a byte region the kernel writes.
+    pub fn write(mut self, r: Range<usize>) -> Self {
+        self.writes.push(r);
+        self
+    }
+}
+
+/// One recorded command: kind, modeled seconds, and the footprint the
+/// dependency inference works from.
+#[derive(Clone, Debug)]
+pub struct CmdMeta {
+    pub kind: CmdKind,
+    /// Modeled seconds this command occupies its lane.
+    pub secs: f64,
+    /// DPU index range the command touches (commands on disjoint DPU
+    /// ranges never conflict through memory).
+    pub dpus: Range<usize>,
+    /// MRAM byte regions read / written (fleet-shared address space).
+    pub reads: Vec<Range<usize>>,
+    pub writes: Vec<Range<usize>>,
+    /// Explicit extra dependencies (host-side data flow).
+    pub after: Vec<CmdId>,
+    /// Fence semantics: conflicts with every other command.
+    pub fence: bool,
+}
+
+impl CmdMeta {
+    /// A host→MRAM transfer writing `bytes` on `dpus`.
+    pub fn push(dpus: Range<usize>, bytes: Range<usize>, secs: f64, after: Vec<CmdId>) -> Self {
+        CmdMeta {
+            kind: CmdKind::Push,
+            secs,
+            dpus,
+            reads: Vec::new(),
+            writes: vec![bytes],
+            after,
+            fence: false,
+        }
+    }
+
+    /// An MRAM→host transfer reading `bytes` on `dpus`.
+    pub fn pull(dpus: Range<usize>, bytes: Range<usize>, secs: f64, after: Vec<CmdId>) -> Self {
+        CmdMeta {
+            kind: CmdKind::Pull,
+            secs,
+            dpus,
+            reads: vec![bytes],
+            writes: Vec::new(),
+            after,
+            fence: false,
+        }
+    }
+
+    /// A launch with a declared footprint.
+    pub fn launch(dpus: Range<usize>, acc: Access, secs: f64) -> Self {
+        CmdMeta {
+            kind: CmdKind::Launch,
+            secs,
+            dpus,
+            reads: acc.reads,
+            writes: acc.writes,
+            after: Vec::new(),
+            fence: false,
+        }
+    }
+
+    /// A launch with no declaration: conservatively reads and writes the
+    /// whole `mram_bytes` bank, serializing against every transfer on
+    /// its DPUs.
+    pub fn launch_full(dpus: Range<usize>, mram_bytes: usize, secs: f64) -> Self {
+        Self::launch(
+            dpus,
+            Access::new().read(0..mram_bytes).write(0..mram_bytes),
+            secs,
+        )
+    }
+
+    /// A host merge with fence semantics (no declared data flow — the
+    /// conservative default of `PimSet::host_merge`).
+    pub fn host_merge(secs: f64) -> Self {
+        CmdMeta {
+            kind: CmdKind::HostMerge,
+            secs,
+            dpus: 0..0,
+            reads: Vec::new(),
+            writes: Vec::new(),
+            after: Vec::new(),
+            fence: true,
+        }
+    }
+
+    /// A host merge depending only on the listed commands (the pulls
+    /// whose host-side images it consumes) — the precise form that lets
+    /// merge compute overlap later bus traffic.
+    pub fn host_merge_after(secs: f64, after: Vec<CmdId>) -> Self {
+        CmdMeta {
+            kind: CmdKind::HostMerge,
+            secs,
+            dpus: 0..0,
+            reads: Vec::new(),
+            writes: Vec::new(),
+            after,
+            fence: false,
+        }
+    }
+
+    /// A zero-second synchronization barrier.
+    pub fn fence() -> Self {
+        CmdMeta {
+            kind: CmdKind::Fence,
+            secs: 0.0,
+            dpus: 0..0,
+            reads: Vec::new(),
+            writes: Vec::new(),
+            after: Vec::new(),
+            fence: true,
+        }
+    }
+}
+
+fn ranges_overlap(a: &Range<usize>, b: &Range<usize>) -> bool {
+    a.start < b.end && b.start < a.end
+}
+
+fn any_overlap(a: &[Range<usize>], b: &[Range<usize>]) -> bool {
+    a.iter().any(|ra| b.iter().any(|rb| ranges_overlap(ra, rb)))
+}
+
+/// Must `b` wait for `a` (enqueued earlier)? True on fences and on any
+/// RAW / WAR / WAW byte overlap over intersecting DPU ranges.
+fn depends(a: &CmdMeta, b: &CmdMeta) -> bool {
+    if a.fence || b.fence {
+        return true;
+    }
+    if !ranges_overlap(&a.dpus, &b.dpus) {
+        return false;
+    }
+    any_overlap(&a.writes, &b.writes)
+        || any_overlap(&a.writes, &b.reads)
+        || any_overlap(&a.reads, &b.writes)
+}
+
+// ---------------------------------------------------------------- timeline
+
+/// A modeled resource lane (see the module docs). Rank lanes are indexed
+/// relative to the owning fleet/machine.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// The one serialized host memory bus (all CPU↔DPU transfers).
+    Bus,
+    /// The host CPU (merge compute).
+    Host,
+    /// The kernel lanes of a contiguous rank span.
+    Ranks(Range<u32>),
+}
+
+/// Free-time bookkeeping of every lane: one bus, one host CPU, `n`
+/// ranks. Shared by [`CmdQueue::schedule`] and the multi-tenant
+/// [`super::Scheduler`], so both model the machine identically.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    bus: f64,
+    host: f64,
+    ranks: Vec<f64>,
+}
+
+impl Timeline {
+    pub fn new(n_ranks: usize) -> Self {
+        Timeline {
+            bus: 0.0,
+            host: 0.0,
+            ranks: vec![0.0; n_ranks.max(1)],
+        }
+    }
+
+    /// Earliest instant the lane is free.
+    pub fn free_at(&self, lane: &Lane) -> f64 {
+        match lane {
+            Lane::Bus => self.bus,
+            Lane::Host => self.host,
+            Lane::Ranks(r) => r
+                .clone()
+                .map(|i| self.ranks[i as usize])
+                .fold(0.0, f64::max),
+        }
+    }
+
+    /// Occupy the lane for `secs`, starting no earlier than `ready`.
+    /// Returns `(start, finish)`.
+    pub fn reserve(&mut self, lane: &Lane, ready: f64, secs: f64) -> (f64, f64) {
+        let start = ready.max(self.free_at(lane));
+        let finish = start + secs;
+        match lane {
+            Lane::Bus => self.bus = finish,
+            Lane::Host => self.host = finish,
+            Lane::Ranks(r) => {
+                for i in r.clone() {
+                    self.ranks[i as usize] = finish;
+                }
+            }
+        }
+        (start, finish)
+    }
+
+    /// Raise the lane's free time to at least `until` (never lowers it).
+    /// The scheduler uses this to keep a tenant's rank slice occupied
+    /// through its response pull.
+    pub fn hold(&mut self, lane: &Lane, until: f64) {
+        match lane {
+            Lane::Bus => self.bus = self.bus.max(until),
+            Lane::Host => self.host = self.host.max(until),
+            Lane::Ranks(r) => {
+                for i in r.clone() {
+                    let f = &mut self.ranks[i as usize];
+                    *f = f.max(until);
+                }
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- schedule
+
+/// Outcome of scheduling a command queue onto the resource timelines.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// Per-command finish times, indexed by [`CmdId`].
+    pub finish: Vec<f64>,
+    /// Last finish over all commands — the modeled wall time of the
+    /// queue ("critical path" through dependencies *and* resources).
+    pub makespan: f64,
+    /// Sum of all command seconds (what fully serialized execution,
+    /// i.e. the four accounting buckets, charges).
+    pub total_secs: f64,
+}
+
+/// Incremental accumulator of an open transfer group: members fold into
+/// running bounds instead of being buffered, so a group of millions of
+/// tiny pushes (full-scale TRNS step 1) costs O(1) memory.
+#[derive(Debug)]
+struct GroupAcc {
+    kind: CmdKind,
+    secs: f64,
+    dpu_lo: usize,
+    dpu_hi: usize,
+    read_lo: usize,
+    read_hi: usize,
+    write_lo: usize,
+    write_hi: usize,
+    after: Vec<CmdId>,
+    any: bool,
+}
+
+impl GroupAcc {
+    fn new() -> Self {
+        GroupAcc {
+            kind: CmdKind::Pull,
+            secs: 0.0,
+            dpu_lo: usize::MAX,
+            dpu_hi: 0,
+            read_lo: usize::MAX,
+            read_hi: 0,
+            write_lo: usize::MAX,
+            write_hi: 0,
+            after: Vec::new(),
+            any: false,
+        }
+    }
+
+    fn fold(&mut self, cmd: CmdMeta) {
+        self.any = true;
+        self.secs += cmd.secs;
+        self.dpu_lo = self.dpu_lo.min(cmd.dpus.start);
+        self.dpu_hi = self.dpu_hi.max(cmd.dpus.end);
+        for r in &cmd.reads {
+            self.read_lo = self.read_lo.min(r.start);
+            self.read_hi = self.read_hi.max(r.end);
+        }
+        for w in &cmd.writes {
+            self.write_lo = self.write_lo.min(w.start);
+            self.write_hi = self.write_hi.max(w.end);
+        }
+        for &j in &cmd.after {
+            if !self.after.contains(&j) {
+                self.after.push(j);
+            }
+        }
+        if cmd.kind == CmdKind::Push {
+            self.kind = CmdKind::Push;
+        }
+    }
+
+    fn into_cmd(self) -> CmdMeta {
+        let bound = |lo: usize, hi: usize| -> Vec<Range<usize>> {
+            if lo < hi {
+                vec![lo..hi]
+            } else {
+                Vec::new()
+            }
+        };
+        CmdMeta {
+            kind: self.kind,
+            secs: self.secs,
+            dpus: self.dpu_lo..self.dpu_hi.max(self.dpu_lo),
+            reads: bound(self.read_lo, self.read_hi),
+            writes: bound(self.write_lo, self.write_hi),
+            after: self.after,
+            fence: false,
+        }
+    }
+}
+
+/// A recorded program of typed commands plus the scheduling that derives
+/// its overlap. Commands execute functionally at enqueue time (outside
+/// this module); the queue holds modeled metadata only.
+#[derive(Debug, Default)]
+pub struct CmdQueue {
+    cmds: Vec<CmdMeta>,
+    group: Option<GroupAcc>,
+}
+
+impl CmdQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.cmds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cmds.is_empty()
+    }
+
+    /// Append a command; returns its id. Inside an open transfer group
+    /// the command folds into the group accumulator and the returned id
+    /// is the one the merged command will receive at
+    /// [`CmdQueue::group_end`]. Only bus transfers may join a group —
+    /// folding a launch or merge would silently drop its lane and fence
+    /// semantics, so that is a hard error.
+    pub fn push(&mut self, cmd: CmdMeta) -> CmdId {
+        if let Some(g) = self.group.as_mut() {
+            assert!(
+                matches!(cmd.kind, CmdKind::Push | CmdKind::Pull),
+                "only bus transfers can join a transfer group (got {:?})",
+                cmd.kind
+            );
+            g.fold(cmd);
+            return self.cmds.len();
+        }
+        self.cmds.push(cmd);
+        self.cmds.len() - 1
+    }
+
+    /// Is a transfer group currently open?
+    pub fn group_open(&self) -> bool {
+        self.group.is_some()
+    }
+
+    /// Id of the most recently enqueued command (the prospective merged
+    /// id while a non-empty group is open).
+    pub fn last_id(&self) -> Option<CmdId> {
+        if let Some(g) = &self.group {
+            if g.any {
+                return Some(self.cmds.len());
+            }
+        }
+        self.cmds.len().checked_sub(1)
+    }
+
+    /// Start coalescing subsequently enqueued transfers into one bus
+    /// command (see [`CmdQueue::group_end`]). Groups keep scheduling
+    /// tractable for workloads that issue thousands of tiny transfers
+    /// per request (TRNS step 1) without changing bucket accounting —
+    /// the grouped command's seconds are the exact sum of its members'.
+    pub fn group_begin(&mut self) {
+        assert!(self.group.is_none(), "transfer group already open");
+        self.group = Some(GroupAcc::new());
+    }
+
+    /// Close the open group: the folded members land as a single bus
+    /// command — seconds summed in enqueue order, footprints collapsed
+    /// to their bounding regions (conservative: only adds dependencies),
+    /// external `after` edges kept. An empty group records nothing.
+    pub fn group_end(&mut self) {
+        let g = self.group.take().expect("group_end without group_begin");
+        if g.any {
+            self.cmds.push(g.into_cmd());
+        }
+    }
+
+    fn lane_of(&self, i: CmdId, dpus_per_rank: usize, n_ranks: usize) -> Option<Lane> {
+        let c = &self.cmds[i];
+        match c.kind {
+            CmdKind::Push | CmdKind::Pull => Some(Lane::Bus),
+            CmdKind::HostMerge => Some(Lane::Host),
+            CmdKind::Fence => None,
+            CmdKind::Launch => {
+                let per = dpus_per_rank.max(1);
+                let lo = (c.dpus.start / per) as u32;
+                let hi = if c.dpus.end == 0 {
+                    lo
+                } else {
+                    ((c.dpus.end - 1) / per + 1) as u32
+                };
+                Some(Lane::Ranks(lo..hi.min(n_ranks as u32).max(lo)))
+            }
+        }
+    }
+
+    /// Greedy list schedule over the dependency DAG and the resource
+    /// lanes: repeatedly issue the dependency-ready command that can
+    /// start earliest (ties: enqueue order). Deterministic — everything
+    /// derives from modeled seconds, which are executor-independent.
+    ///
+    /// Complexity is O(n²) in recorded commands (pairwise dependency
+    /// inference plus the greedy pick loop). All shipped surfaces stay
+    /// in the low thousands per batch — transfer storms coalesce via
+    /// [`CmdQueue::group_begin`] — but a hand-rolled pipelined run that
+    /// records tens of thousands of ungrouped commands (e.g. BFS on
+    /// thousands of DPUs, whose per-level pulls need individual ids)
+    /// will pay a noticeably slow `sync`.
+    pub fn schedule(&self, n_ranks: usize, dpus_per_rank: usize) -> Schedule {
+        let n = self.cmds.len();
+        let mut deps: Vec<Vec<CmdId>> = vec![Vec::new(); n];
+        for i in 0..n {
+            for j in 0..i {
+                if depends(&self.cmds[j], &self.cmds[i]) {
+                    deps[i].push(j);
+                }
+            }
+            for &j in &self.cmds[i].after {
+                if j < i {
+                    deps[i].push(j);
+                }
+            }
+        }
+        let mut tl = Timeline::new(n_ranks);
+        let mut finish = vec![0.0f64; n];
+        let mut done = vec![false; n];
+        let mut total = 0.0f64;
+        let mut makespan = 0.0f64;
+        for _ in 0..n {
+            // pick the ready command with the earliest feasible start
+            let mut best: Option<(f64, CmdId)> = None;
+            for i in 0..n {
+                if done[i] {
+                    continue;
+                }
+                let mut ready = 0.0f64;
+                let mut blocked = false;
+                for &j in &deps[i] {
+                    if !done[j] {
+                        blocked = true;
+                        break;
+                    }
+                    ready = ready.max(finish[j]);
+                }
+                if blocked {
+                    continue;
+                }
+                let start = match self.lane_of(i, dpus_per_rank, n_ranks) {
+                    Some(lane) => ready.max(tl.free_at(&lane)),
+                    None => ready,
+                };
+                let better = match best {
+                    None => true,
+                    Some((s, _)) => start < s,
+                };
+                if better {
+                    best = Some((start, i));
+                }
+            }
+            let (_, i) = best.expect("deps point backwards, so some command is always ready");
+            let mut ready = 0.0f64;
+            for &j in &deps[i] {
+                ready = ready.max(finish[j]);
+            }
+            let f = match self.lane_of(i, dpus_per_rank, n_ranks) {
+                Some(lane) => tl.reserve(&lane, ready, self.cmds[i].secs).1,
+                None => ready + self.cmds[i].secs,
+            };
+            finish[i] = f;
+            done[i] = true;
+            total += self.cmds[i].secs;
+            makespan = makespan.max(f);
+        }
+        Schedule { finish, makespan, total_secs: total }
+    }
+
+    /// Seconds the schedule hides relative to fully serialized
+    /// execution — the derived `overlapped` credit.
+    pub fn hidden_secs(&self, n_ranks: usize, dpus_per_rank: usize) -> f64 {
+        if self.cmds.is_empty() {
+            return 0.0;
+        }
+        let s = self.schedule(n_ranks, dpus_per_rank);
+        (s.total_secs - s.makespan).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PER: usize = 4; // DPUs per rank in these tests
+    const RANKS: usize = 2;
+
+    fn sched(q: &CmdQueue) -> Schedule {
+        q.schedule(RANKS, PER)
+    }
+
+    #[test]
+    fn single_command_is_the_degenerate_timeline() {
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::push(0..8, 0..1024, 0.5, vec![]));
+        let s = sched(&q);
+        assert_eq!(s.makespan.to_bits(), 0.5f64.to_bits());
+        assert_eq!(s.total_secs.to_bits(), s.makespan.to_bits());
+        assert_eq!(q.hidden_secs(RANKS, PER), 0.0);
+    }
+
+    #[test]
+    fn dependent_chain_equals_sum_bitwise() {
+        // push → launch (reads the pushed region) → pull (reads the
+        // launch's output): fully dependent, makespan == Σ secs exactly.
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::push(0..8, 0..1024, 0.3, vec![]));
+        q.push(CmdMeta::launch(
+            0..8,
+            Access::new().read(0..1024).write(1024..2048),
+            0.7,
+        ));
+        q.push(CmdMeta::pull(0..8, 1024..2048, 0.11, vec![]));
+        let s = sched(&q);
+        assert_eq!(s.makespan.to_bits(), s.total_secs.to_bits());
+        assert_eq!(q.hidden_secs(RANKS, PER), 0.0);
+    }
+
+    #[test]
+    fn independent_push_hides_under_a_launch() {
+        // request 0: push A, launch reading A; request 1's double-
+        // buffered push B is independent and slides under the launch.
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::push(0..8, 0..1024, 0.2, vec![]));
+        q.push(CmdMeta::launch(0..8, Access::new().read(0..1024), 1.0));
+        q.push(CmdMeta::push(0..8, 1024..2048, 0.3, vec![]));
+        let s = sched(&q);
+        // bus: [0,0.2] then [0.2,0.5]; launch on ranks [0.2,1.2]
+        assert!((s.makespan - 1.2).abs() < 1e-12, "makespan {}", s.makespan);
+        let hidden = q.hidden_secs(RANKS, PER);
+        assert!((hidden - 0.3).abs() < 1e-12, "hidden {hidden}");
+    }
+
+    #[test]
+    fn war_conflict_serializes_a_push_behind_the_reader() {
+        // the second push overwrites the region the launch still reads
+        // (no double buffering): it must wait for the launch.
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::push(0..8, 0..1024, 0.2, vec![]));
+        q.push(CmdMeta::launch(0..8, Access::new().read(0..1024), 1.0));
+        q.push(CmdMeta::push(0..8, 0..1024, 0.3, vec![]));
+        let s = sched(&q);
+        assert_eq!(s.makespan.to_bits(), s.total_secs.to_bits());
+    }
+
+    #[test]
+    fn disjoint_dpu_ranges_never_conflict() {
+        let a = CmdMeta::push(0..4, 0..1024, 0.1, vec![]);
+        let b = CmdMeta::pull(4..8, 0..1024, 0.1, vec![]);
+        assert!(!depends(&a, &b), "same bytes on disjoint DPUs");
+        let c = CmdMeta::pull(3..8, 0..1024, 0.1, vec![]);
+        assert!(depends(&a, &c), "overlapping DPUs + bytes conflict");
+    }
+
+    #[test]
+    fn launches_on_disjoint_rank_spans_overlap() {
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::launch(0..PER, Access::new().write(0..8), 1.0));
+        q.push(CmdMeta::launch(
+            PER..2 * PER,
+            Access::new().write(8..16),
+            1.0,
+        ));
+        let s = sched(&q);
+        assert!((s.makespan - 1.0).abs() < 1e-12, "disjoint ranks run concurrently");
+        // same span: serialized on the rank lane even without data deps
+        let mut q2 = CmdQueue::new();
+        q2.push(CmdMeta::launch(0..PER, Access::new().write(0..8), 1.0));
+        q2.push(CmdMeta::launch(0..PER, Access::new().write(8..16), 1.0));
+        assert!((sched(&q2).makespan - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fence_orders_everything() {
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::push(0..8, 0..8, 0.25, vec![]));
+        q.push(CmdMeta::fence());
+        q.push(CmdMeta::push(0..8, 1024..1032, 0.25, vec![]));
+        q.push(CmdMeta::launch(0..8, Access::new().read(2048..4096), 1.0));
+        let s = sched(&q);
+        // without the fence the launch (no data deps) would start at 0
+        // and the makespan would be 1.0; the fence delays it to 0.25.
+        assert!((s.makespan - 1.25).abs() < 1e-12, "makespan {}", s.makespan);
+    }
+
+    #[test]
+    fn dep_merge_overlaps_later_bus_traffic_but_fence_merge_does_not() {
+        let build = |fenced: bool| {
+            let mut q = CmdQueue::new();
+            let pull = q.push(CmdMeta::pull(0..8, 0..1024, 0.4, vec![]));
+            if fenced {
+                q.push(CmdMeta::host_merge(0.5));
+            } else {
+                q.push(CmdMeta::host_merge_after(0.5, vec![pull]));
+            }
+            q.push(CmdMeta::push(0..8, 0..1024, 0.4, vec![]));
+            q
+        };
+        // dep'd merge: pull [0,0.4]; merge on host [0.4,0.9]; the push
+        // (WAR on the pull's region) rides the bus [0.4,0.8] under it.
+        let free = sched(&build(false));
+        assert!((free.makespan - 0.9).abs() < 1e-12, "makespan {}", free.makespan);
+        // fence merge: strictly serial.
+        let fenced = sched(&build(true));
+        assert_eq!(fenced.makespan.to_bits(), fenced.total_secs.to_bits());
+    }
+
+    #[test]
+    fn explicit_after_gates_host_data_flow() {
+        let mut q = CmdQueue::new();
+        let pull = q.push(CmdMeta::pull(0..8, 0..1024, 0.4, vec![]));
+        let merge = q.push(CmdMeta::host_merge_after(0.5, vec![pull]));
+        // the next push carries data derived from the merge: without the
+        // explicit edge its region (disjoint) would let it start at 0.
+        q.push(CmdMeta::push(0..8, 4096..5120, 0.1, vec![merge]));
+        let s = sched(&q);
+        assert!((s.finish[2] - 1.0).abs() < 1e-12, "push waits for the merge");
+    }
+
+    #[test]
+    fn grouped_transfers_sum_seconds_and_keep_external_deps() {
+        let mut q = CmdQueue::new();
+        let anchor = q.push(CmdMeta::pull(0..8, 8192..8200, 0.05, vec![]));
+        q.group_begin();
+        for i in 0..10usize {
+            q.push(CmdMeta::push(
+                i % 8..i % 8 + 1,
+                i * 64..(i + 1) * 64,
+                0.01,
+                vec![anchor],
+            ));
+        }
+        q.group_end();
+        assert_eq!(q.len(), 2, "ten member transfers merged into one");
+        let g = &q.cmds[1];
+        assert_eq!(g.kind, CmdKind::Push);
+        assert!((g.secs - 0.1).abs() < 1e-12);
+        assert_eq!(g.writes, vec![0..640]);
+        assert_eq!(g.after, vec![anchor]);
+        // a single-member group stays as-is
+        let mut q2 = CmdQueue::new();
+        q2.group_begin();
+        q2.push(CmdMeta::push(0..1, 0..64, 0.01, vec![]));
+        q2.group_end();
+        assert_eq!(q2.len(), 1);
+    }
+
+    /// Folding a launch into a bus group would drop its rank-lane and
+    /// serialization semantics — a hard error, release builds included.
+    #[test]
+    #[should_panic(expected = "only bus transfers")]
+    fn grouping_a_launch_panics() {
+        let mut q = CmdQueue::new();
+        q.group_begin();
+        q.push(CmdMeta::launch(0..4, Access::new(), 0.1));
+    }
+
+    #[test]
+    fn timeline_hold_extends_rank_occupancy() {
+        let mut tl = Timeline::new(4);
+        let lane = Lane::Ranks(1..3);
+        let (s, f) = tl.reserve(&lane, 0.5, 1.0);
+        assert_eq!((s, f), (0.5, 1.5));
+        tl.hold(&lane, 2.0);
+        assert_eq!(tl.free_at(&lane), 2.0);
+        tl.hold(&lane, 1.0);
+        assert_eq!(tl.free_at(&lane), 2.0, "hold never lowers");
+        assert_eq!(tl.free_at(&Lane::Ranks(0..1)), 0.0, "other ranks untouched");
+        assert_eq!(tl.free_at(&Lane::Bus), 0.0);
+    }
+
+    #[test]
+    fn schedule_is_deterministic() {
+        let build = || {
+            let mut q = CmdQueue::new();
+            for i in 0..20usize {
+                match i % 4 {
+                    0 => q.push(CmdMeta::push(0..8, (i * 512)..(i * 512 + 256), 0.01, vec![])),
+                    1 => q.push(CmdMeta::launch(
+                        0..8,
+                        Access::new().read((i - 1) * 512..(i - 1) * 512 + 256).write(65536..65544),
+                        0.05,
+                    )),
+                    2 => q.push(CmdMeta::pull(0..8, 65536..65544, 0.02, vec![])),
+                    _ => q.push(CmdMeta::host_merge_after(0.03, vec![i - 1])),
+                };
+            }
+            q
+        };
+        let a = sched(&build());
+        let b = sched(&build());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        for (x, y) in a.finish.iter().zip(&b.finish) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(a.makespan <= a.total_secs + 1e-12);
+    }
+}

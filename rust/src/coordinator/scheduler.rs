@@ -33,19 +33,21 @@
 //!
 //! # Timing model
 //!
-//! A dispatched batch of `k` requests from one tenant occupies, in order:
-//! the bus for its aggregated input push (`Σ cpu_dpu − overlapped`: with
-//! pipelining on, `Session::execute_batch` hides later requests' pushes
-//! under earlier launches *within the batch*, and that batch-level
-//! credit shortens the bus occupancy here — a single-request batch has
-//! no previous launch to hide under, so `fifo`/`sjf` timelines are
-//! unchanged by `--pipeline` while multi-request `wrr` grants gain),
-//! the tenant's slice for its kernels and host-orchestrated sync
-//! (`Σ dpu + inter_dpu`; mid-run inter-DPU exchanges are charged to the
-//! slice window for simplicity), and the bus again for the response pull
-//! (`Σ dpu_cpu`). While a slice computes, the bus serves other tenants —
-//! that is the §5.1.1 concurrency the rank split buys. Ready responses
-//! take bus priority over new pushes (finish in-flight work first).
+//! The machine's contended resources live in one shared
+//! [`Timeline`](super::queue::Timeline) — the same bus / rank-lane /
+//! host model the async command queues (`coordinator::queue`) schedule
+//! onto. A dispatched batch of `k` requests from one tenant reserves, in
+//! order: the bus for its aggregated input push (`Σ cpu_dpu −
+//! overlapped`: with pipelining on, `Session::execute_batch` wraps the
+//! batch in an async command queue whose derived credit — double-
+//! buffered pushes hidden under launches, merges hidden under bus
+//! traffic — shortens the bus occupancy here), the tenant's rank lanes
+//! for its kernels and host-orchestrated sync (`Σ dpu + inter_dpu`;
+//! mid-run inter-DPU exchanges are charged to the slice window for
+//! simplicity), and the bus again for the response pull (`Σ dpu_cpu`).
+//! While a slice computes, the bus serves other tenants — that is the
+//! §5.1.1 concurrency the rank split buys. Ready responses take bus
+//! priority over new pushes (finish in-flight work first).
 //!
 //! # Determinism
 //!
@@ -58,6 +60,7 @@
 //! tenants — so a single-tenant stream is policy-invariant
 //! (`tests/executor_equivalence.rs`).
 
+use super::queue::{Lane, Timeline};
 use super::{ExecChoice, PimSet, Session, TimeBreakdown};
 use crate::arch::SystemConfig;
 use crate::prim::common::RunConfig;
@@ -535,14 +538,19 @@ struct Tenant {
     queue: VecDeque<Arrival>,
     records: Vec<RequestRecord>,
     busy: f64,
-    /// Modeled time at which the slice next becomes idle.
-    slice_free: f64,
     /// A dispatched batch whose response pull has not completed yet.
     in_flight: bool,
     /// EWMA of observed per-request modeled service time (SJF input).
     estimate: f64,
     served: u64,
     last_out: Option<Output>,
+}
+
+impl Tenant {
+    /// The shared-timeline lane of this tenant's rank slice.
+    fn lane(&self) -> Lane {
+        Lane::Ranks(self.slice.rank0..self.slice.rank0 + self.slice.n_ranks)
+    }
 }
 
 /// A dispatched batch waiting for its response pull: ready once the
@@ -557,9 +565,10 @@ struct PendingPull {
     recs: Vec<usize>,
 }
 
-/// The multi-tenant serving loop: rank-sliced sessions, one shared bus
-/// timeline, a pluggable arbitration policy. Build with
-/// [`Scheduler::build`], run to completion with [`Scheduler::run`].
+/// The multi-tenant serving loop: rank-sliced sessions, one shared
+/// resource timeline (bus + rank lanes, from `coordinator::queue`), a
+/// pluggable arbitration policy. Build with [`Scheduler::build`], run to
+/// completion with [`Scheduler::run`].
 pub struct Scheduler {
     tenants: Vec<Tenant>,
     policy: Box<dyn Policy>,
@@ -568,8 +577,10 @@ pub struct Scheduler {
     pipelined: bool,
     seed: u64,
     total_ranks: u32,
-    /// Modeled time at which the host bus next becomes idle.
-    bus_free: f64,
+    /// The machine's modeled resources: one serialized bus and one
+    /// kernel lane per rank — the same model the async command queues
+    /// schedule onto.
+    timeline: Timeline,
     pulls: Vec<PendingPull>,
     seq: u64,
 }
@@ -645,7 +656,6 @@ impl Scheduler {
                 queue,
                 records: Vec::with_capacity(cfg.requests),
                 busy: 0.0,
-                slice_free: 0.0,
                 in_flight: false,
                 estimate: 0.0,
                 served: 0,
@@ -660,7 +670,7 @@ impl Scheduler {
             pipelined: cfg.pipeline,
             seed: cfg.seed,
             total_ranks,
-            bus_free: 0.0,
+            timeline: Timeline::new(total_ranks as usize),
             pulls: Vec::new(),
             seq: 0,
         })
@@ -675,7 +685,8 @@ impl Scheduler {
                 if tn.in_flight || tn.queue.is_empty() {
                     continue;
                 }
-                t_push = t_push.min(tn.queue[0].at.max(tn.slice_free));
+                let slice_free = self.timeline.free_at(&tn.lane());
+                t_push = t_push.min(tn.queue[0].at.max(slice_free));
             }
             // earliest ready response pull
             let t_pull =
@@ -683,7 +694,7 @@ impl Scheduler {
             if t_push.is_infinite() && t_pull.is_infinite() {
                 break;
             }
-            let now = self.bus_free.max(t_push.min(t_pull));
+            let now = self.timeline.free_at(&Lane::Bus).max(t_push.min(t_pull));
             // in-flight responses take bus priority over new pushes
             if let Some(pi) = self
                 .pulls
@@ -698,6 +709,7 @@ impl Scheduler {
                 self.serve_pull(pi);
                 continue;
             }
+            let timeline = &self.timeline;
             let feasible: Vec<Candidate> = self
                 .tenants
                 .iter()
@@ -705,7 +717,7 @@ impl Scheduler {
                 .filter(|(_, tn)| {
                     !tn.in_flight
                         && !tn.queue.is_empty()
-                        && tn.queue[0].at.max(tn.slice_free) <= now
+                        && tn.queue[0].at.max(timeline.free_at(&tn.lane())) <= now
                 })
                 .map(|(i, tn)| Candidate {
                     tenant: i,
@@ -763,9 +775,10 @@ impl Scheduler {
         let tn = &mut self.tenants[t];
 
         // aggregate the batch's modeled service components; the
-        // pipelined overlap credit is batch-level (execute_batch applies
-        // it between per-request delta windows), so subtract it from the
-        // batch's bus push once rather than per delta
+        // pipelined overlap credit is batch-level (execute_batch wraps
+        // the batch in one async command queue and credits the derived
+        // overlap at sync), so subtract it from the batch's bus
+        // occupancy once rather than per delta
         let mut push = 0.0f64;
         let mut kernels = 0.0f64;
         let mut pull = 0.0f64;
@@ -794,13 +807,18 @@ impl Scheduler {
             if tn.served == 0 { obs } else { 0.7 * tn.estimate + 0.3 * obs };
         tn.served += k as u64;
         tn.in_flight = true;
+        let lane = tn.lane();
 
-        // bus: push now; slice: kernels after the push; the response
-        // pull re-arbitrates for the bus once the kernels finish
-        self.bus_free = now + push;
+        // reserve the shared resources: the bus carries the push from
+        // `now`, the tenant's rank lanes run the kernels after it; the
+        // response pull re-arbitrates for the bus once the kernels
+        // finish (dispatch only happens with the bus and slice idle, so
+        // both reservations start exactly at their ready times)
+        let (_, push_end) = self.timeline.reserve(&Lane::Bus, now, push);
+        let (_, kern_end) = self.timeline.reserve(&lane, push_end, kernels);
         self.seq += 1;
         self.pulls.push(PendingPull {
-            ready: now + push + kernels,
+            ready: kern_end,
             seq: self.seq,
             tenant: t,
             pull_secs: pull,
@@ -810,14 +828,14 @@ impl Scheduler {
 
     /// Serve a ready response pull: the bus carries the batch's DPU-CPU
     /// bytes, the batch's requests complete together, and the slice
-    /// frees up.
+    /// frees up. The tenant's rank lanes are held occupied through the
+    /// pull — a slice is busy until its response has left the machine.
     fn serve_pull(&mut self, idx: usize) {
         let p = self.pulls.remove(idx);
-        let start = p.ready.max(self.bus_free);
-        let done = start + p.pull_secs;
-        self.bus_free = done;
+        let (_, done) = self.timeline.reserve(&Lane::Bus, p.ready, p.pull_secs);
+        let lane = self.tenants[p.tenant].lane();
+        self.timeline.hold(&lane, done);
         let tn = &mut self.tenants[p.tenant];
-        tn.slice_free = done;
         tn.in_flight = false;
         tn.busy += done - tn.records[p.recs[0]].dispatched;
         for ri in p.recs {

@@ -1,5 +1,5 @@
-//! Persistent PIM sessions: warm MRAM state + batched, pipelined
-//! execution.
+//! Persistent PIM sessions: warm MRAM state + batched execution over
+//! async command queues.
 //!
 //! The paper's §5.2 breakdowns show CPU-DPU/DPU-CPU transfer dominating
 //! many PrIM workloads, and §6 recommends amortizing input loads across
@@ -10,28 +10,26 @@
 //! and then **execute** many requests against the warm state — paying the
 //! big input distribution a single time instead of per run.
 //!
-//! [`Session::execute_batch`] additionally pipelines a request stream:
-//! with pipelining enabled, the host-side staging of request *i + 1*
-//! (input generation + partitioning into per-DPU buffers) runs
-//! concurrently with the execution of request *i* (the fleet executor's
-//! two-stage [`FleetExecutor::overlap`] schedule), and the modeled
-//! CPU-DPU push time of request *i + 1* is overlapped under the modeled
-//! launch window of request *i* in whole-**rank** chunks — transfers to
-//! different ranks are serialized (§5.1.1), so a rank's push either fits
-//! under the remaining launch window or waits. The hidden seconds
-//! accumulate in [`super::TimeBreakdown::overlapped`]; the component
-//! buckets keep their full values and `TimeBreakdown::total()` subtracts
-//! the credit. The serial executor runs the same schedule without wallclock
-//! overlap (fleet stage, then host stage) and is the bit-identical
-//! reference: staging is pure host work, so the two orders cannot
-//! diverge, and the overlap credit is computed from modeled seconds that
-//! are themselves executor-independent.
+//! [`Session::execute_batch`] serves a request stream. With pipelining
+//! enabled it wraps the whole batch in one async command queue
+//! (`PimSet::queue_begin` … `queue_sync`): every push, launch, pull, and
+//! host merge the requests issue still executes functionally in program
+//! order (so results and bucket accounting are bit-identical to the
+//! serialized schedule), but the recorded commands are re-scheduled onto
+//! the modeled resource timelines — one serialized host bus, per-rank
+//! kernel lanes, the host CPU — with ordering inferred from the
+//! `Symbol` regions each command reads and writes. Whatever the
+//! timeline hides (a double-buffered next-request push under the current
+//! launch, a frontier merge under later bus traffic) lands in
+//! [`super::TimeBreakdown::overlapped`], now *derived* as
+//! `sum(bucket secs) − makespan` instead of hand-credited; `total()`
+//! subtracts it. See [`super::queue`] for the model and its §6 what-if
+//! caveat.
 
-use super::executor::FleetExecutor;
+use super::queue::Access;
 use super::{LaunchStats, PimSet};
 use crate::dpu::Ctx;
 use std::any::Any;
-use std::sync::Arc;
 
 /// A persistent serving session: one allocated fleet, resident MRAM
 /// state, and accumulated metrics across many requests.
@@ -68,7 +66,7 @@ impl Session {
         }
     }
 
-    /// Enable/disable pipelined batching (builder style).
+    /// Enable/disable pipelined (async-queue) batching (builder style).
     pub fn with_pipeline(mut self, on: bool) -> Self {
         self.pipeline = on;
         self
@@ -160,6 +158,29 @@ impl Session {
         stats
     }
 
+    /// [`PimSet::launch_acc`] with session-level instruction accounting:
+    /// a launch with a declared MRAM footprint, so the async queue can
+    /// overlap independent transfers under it.
+    pub fn launch_acc<F>(&mut self, acc: Access, n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        let stats = self.set.launch_acc(acc, n_tasklets, f);
+        self.instrs += stats.total_instrs();
+        stats
+    }
+
+    /// [`PimSet::launch_seq_acc`] with session-level instruction
+    /// accounting.
+    pub fn launch_seq_acc<F>(&mut self, acc: Access, n_tasklets: u32, f: F) -> LaunchStats
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        let stats = self.set.launch_seq_acc(acc, n_tasklets, f);
+        self.instrs += stats.total_instrs();
+        stats
+    }
+
     // ------------------------------------------------------------- batches
 
     /// Run a request batch through two caller-provided stages:
@@ -169,12 +190,12 @@ impl Session {
     /// * `exec(session, req, staged)` — push the staged input and launch
     ///   kernels against the resident state.
     ///
-    /// Serialized mode runs `stage`/`exec` strictly alternating. With
-    /// [`Session::pipelined`] on, the staging of request *i + 1* runs
-    /// under the execution of request *i* (the executor's two-stage
-    /// overlap schedule), and the modeled CPU-DPU push seconds of each
-    /// warm request are hidden under the previous request's launch
-    /// window in whole-rank chunks ([`super::TimeBreakdown::overlapped`]).
+    /// Serialized mode runs the stages back to back and accounts every
+    /// second fully. With [`Session::pipelined`] on, the whole batch
+    /// becomes one async command queue: identical functional execution
+    /// and bucket accounting, plus a derived
+    /// [`super::TimeBreakdown::overlapped`] credit for whatever the
+    /// modeled resource timelines can hide (see the module docs).
     pub fn execute_batch<R, S, FS, FE>(
         &mut self,
         reqs: &[R],
@@ -187,81 +208,20 @@ impl Session {
         FS: Fn(&R) -> S + Sync,
         FE: FnMut(&mut Session, &R, S) -> LaunchStats,
     {
-        let fleet: Arc<dyn FleetExecutor> = Arc::clone(&self.set.exec);
-        let pipeline = self.pipeline;
-        let rank = self.set.cfg.dpus_per_rank().max(1) as usize;
-        let n_ranks = (self.set.n_dpus() as usize).div_ceil(rank);
+        if self.pipeline {
+            self.set.queue_begin();
+        }
         let mut out = Vec::with_capacity(reqs.len());
-        let mut staged: Option<S> = reqs.first().map(|r| stage(r));
-        // modeled launch seconds of the previous request — the window the
-        // next request's push may hide under
-        let mut headroom = 0.0f64;
-        for (i, req) in reqs.iter().enumerate() {
-            let cur = staged.take().expect("request input staged");
-            let before = self.set.metrics;
-            let stats = if pipeline {
-                if let Some(next_req) = reqs.get(i + 1) {
-                    let mut stats_slot: Option<LaunchStats> = None;
-                    let mut next_slot: Option<S> = None;
-                    {
-                        let this = &mut *self;
-                        let exec_ref = &mut exec;
-                        let stats_ref = &mut stats_slot;
-                        let stage_ref = &stage;
-                        let next_ref = &mut next_slot;
-                        fleet.overlap(
-                            Box::new(move || {
-                                *stats_ref = Some(exec_ref(this, req, cur));
-                            }),
-                            Box::new(move || {
-                                *next_ref = Some(stage_ref(next_req));
-                            }),
-                        );
-                    }
-                    staged = next_slot;
-                    stats_slot.expect("fleet stage must run")
-                } else {
-                    exec(self, req, cur)
-                }
-            } else {
-                let stats = exec(self, req, cur);
-                staged = reqs.get(i + 1).map(|r| stage(r));
-                stats
-            };
-            if pipeline && i > 0 {
-                let push = self.set.metrics.cpu_dpu - before.cpu_dpu;
-                self.set.metrics.overlapped += rank_granular_overlap(push, headroom, n_ranks);
-            }
-            headroom = self.set.metrics.dpu - before.dpu;
+        for req in reqs {
+            let staged = stage(req);
+            out.push(exec(self, req, staged));
             self.requests_done += 1;
-            out.push(stats);
+        }
+        if self.pipeline {
+            self.set.queue_sync();
         }
         out
     }
-}
-
-/// Seconds of a CPU-DPU push that fit under a `window_secs` launch
-/// window, in whole-rank chunks. Pushes to different ranks are serialized
-/// (§5.1.1), so the schedulable unit is one rank's push — a chunk either
-/// fits entirely in the remaining window or is not overlapped.
-///
-/// This is a deliberate **what-if of the paper's §6 recommendation**: the
-/// shipping UPMEM runtime cannot touch a rank's MRAM while its DPUs run,
-/// so on today's hardware the credit is unrealizable — the model answers
-/// "what would double-buffered request symbols plus launch-concurrent
-/// transfers buy", the improvement §6 argues for. Functionally nothing
-/// races: pushes are applied in strict serial order between launches, and
-/// only the modeled seconds are credited.
-fn rank_granular_overlap(push_secs: f64, window_secs: f64, n_ranks: usize) -> f64 {
-    if push_secs <= 0.0 || window_secs <= 0.0 || n_ranks == 0 {
-        return 0.0;
-    }
-    let chunk = push_secs / n_ranks as f64;
-    if chunk <= 0.0 {
-        return 0.0;
-    }
-    let fitting = (window_secs / chunk).floor().min(n_ranks as f64);
-    (chunk * fitting).min(push_secs)
 }
 
 #[cfg(test)]
@@ -306,11 +266,13 @@ mod tests {
         assert_eq!(s.instrs, 2 * after_one);
     }
 
-    /// One synthetic "workload": each request pushes a buffer and runs a
-    /// kernel over it. Used to pin the batch schedules against each other.
+    /// One synthetic "workload": each request pushes a double-buffered
+    /// input and runs a kernel with a declared footprint over it — the
+    /// shape that lets the async queue hide warm pushes under launches.
     fn run_batch(exec: ExecChoice, pipeline: bool) -> (Vec<Vec<i64>>, TimeBreakdown, u64) {
         let mut sess = session(exec).with_pipeline(pipeline);
-        let sym: Symbol<i64> = sess.set.symbol::<i64>(64);
+        let syms: [Symbol<i64>; 2] =
+            [sess.set.symbol::<i64>(64), sess.set.symbol::<i64>(64)];
         let out_sym: Symbol<i64> = sess.set.symbol::<i64>(64);
         sess.put_state(Vec::<Vec<i64>>::new());
         let reqs: Vec<u64> = (0..4).collect();
@@ -319,9 +281,13 @@ mod tests {
             |r| -> Vec<Vec<i64>> {
                 (0..4u64).map(|d| vec![(r * 10 + d) as i64; 64]).collect()
             },
-            |s: &mut Session, _r: &u64, bufs: Vec<Vec<i64>>| {
+            |s: &mut Session, r: &u64, bufs: Vec<Vec<i64>>| {
+                let sym = syms[(*r % 2) as usize];
                 s.set.xfer(sym).to().equal(&bufs);
-                let stats = s.launch_seq(2, |_d, ctx| {
+                let acc = crate::coordinator::Access::new()
+                    .read(sym.region())
+                    .write(out_sym.region());
+                let stats = s.launch_seq_acc(acc, 2, move |_d, ctx| {
                     let w = ctx.mem_alloc(512);
                     ctx.mram_read(sym.off(), w, 512);
                     let v: Vec<i64> = ctx.wram_get(w, 64);
@@ -345,16 +311,20 @@ mod tests {
         let (r_pip, m_pip, n_pip) = run_batch(ExecChoice::Serial, true);
         assert_eq!(r_ser, r_pip, "pipelining must not change results");
         assert_eq!(n_ser, n_pip);
-        // every bucket identical; only the overlap credit differs
+        // every bucket identical; only the derived overlap differs
         assert_eq!(m_ser.dpu.to_bits(), m_pip.dpu.to_bits());
         assert_eq!(m_ser.cpu_dpu.to_bits(), m_pip.cpu_dpu.to_bits());
         assert_eq!(m_ser.dpu_cpu.to_bits(), m_pip.dpu_cpu.to_bits());
         assert_eq!(m_ser.inter_dpu.to_bits(), m_pip.inter_dpu.to_bits());
         assert_eq!(m_ser.bytes_to_dpu, m_pip.bytes_to_dpu);
         assert_eq!(m_ser.overlapped, 0.0);
-        assert!(m_pip.overlapped > 0.0, "warm pushes must hide under launches");
+        assert!(m_pip.overlapped > 0.0, "double-buffered pushes must hide under launches");
         assert!(m_pip.total() < m_ser.total());
-        assert!(m_pip.overlapped <= m_pip.cpu_dpu, "cannot hide more than the pushes");
+        let buckets = m_pip.dpu + m_pip.inter_dpu + m_pip.cpu_dpu + m_pip.dpu_cpu;
+        assert!(
+            m_pip.overlapped < buckets,
+            "derived credit is bounded by the bucket sum"
+        );
     }
 
     #[test]
@@ -367,15 +337,31 @@ mod tests {
         }
     }
 
+    /// Without double buffering, every push conflicts (WAR) with the
+    /// previous launch, the timeline degenerates to the serialized
+    /// chain, and the derived overlap is exactly zero.
     #[test]
-    fn rank_granularity_of_overlap() {
-        // one rank: all-or-nothing
-        assert_eq!(rank_granular_overlap(1.0, 0.5, 1), 0.0);
-        assert_eq!(rank_granular_overlap(1.0, 1.5, 1), 1.0);
-        // four ranks: whole chunks of 0.25
-        assert_eq!(rank_granular_overlap(1.0, 0.6, 4), 0.5);
-        assert_eq!(rank_granular_overlap(1.0, 10.0, 4), 1.0);
-        assert_eq!(rank_granular_overlap(0.0, 1.0, 4), 0.0);
-        assert_eq!(rank_granular_overlap(1.0, 0.0, 4), 0.0);
+    fn single_buffered_batch_derives_zero_overlap() {
+        let mut sess = session(ExecChoice::Serial).with_pipeline(true);
+        let sym: Symbol<i64> = sess.set.symbol::<i64>(64);
+        let out_sym: Symbol<i64> = sess.set.symbol::<i64>(8);
+        let reqs: Vec<u64> = (0..3).collect();
+        sess.execute_batch(
+            &reqs,
+            |r| vec![*r as i64; 64],
+            |s: &mut Session, _r: &u64, buf: Vec<i64>| {
+                s.set.xfer(sym).to().broadcast(&buf);
+                let acc = crate::coordinator::Access::new()
+                    .read(sym.region())
+                    .write(out_sym.region());
+                s.launch_seq_acc(acc, 2, move |_d, ctx| {
+                    let w = ctx.mem_alloc(512);
+                    ctx.mram_read(sym.off(), w, 512);
+                    ctx.compute(1000);
+                    ctx.mram_write(w, out_sym.off(), 8);
+                })
+            },
+        );
+        assert_eq!(sess.set.metrics.overlapped, 0.0, "fully dependent chain");
     }
 }

@@ -9,8 +9,9 @@
 //!   `coordinator::Session`;
 //! * the amortization factor (n one-shot runs vs cold + n warm requests);
 //! * **serialized vs pipelined** batch totals, with the modeled seconds
-//!   the rank-granular overlap schedule hides under kernel launches —
-//!   results are bit-identical between the two schedules by construction
+//!   the async command-queue schedule hides (`coordinator::queue`; the
+//!   `overlap` experiment studies this axis in depth) — results are
+//!   bit-identical between the two schedules by construction
 //!   (see `rust/tests/executor_equivalence.rs`).
 
 use crate::arch::SystemConfig;

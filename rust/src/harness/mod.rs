@@ -8,6 +8,7 @@ pub mod compare;
 pub mod figures;
 pub mod future;
 pub mod multitenant;
+pub mod overlap;
 pub mod scaling;
 pub mod tables;
 
@@ -18,11 +19,12 @@ use std::path::Path;
 /// recommendations implemented as an ablation, beyond the paper's own
 /// evaluation; `amortized` = the cold/warm/pipelined serving study over
 /// persistent sessions; `multitenant` = the rank-sliced multi-tenant
-/// scheduling study — policies and slice splits).
-pub const ALL_IDS: [&str; 24] = [
+/// scheduling study — policies and slice splits; `overlap` = serialized
+/// vs async command queues, the derived transfer/kernel overlap).
+pub const ALL_IDS: [&str; 25] = [
     "table1", "table2", "table3", "table4", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
     "fig10", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
-    "fig22", "future", "amortized", "multitenant",
+    "fig22", "future", "amortized", "multitenant", "overlap",
 ];
 
 /// Per-benchmark dataset scale used by the harness (relative to Table 3
@@ -75,6 +77,7 @@ pub fn run_id(id: &str, outdir: &Path, quick: bool) -> anyhow::Result<()> {
             future::future_interdpu(quick),
         ],
         "amortized" => vec![amortized::amortized(quick)],
+        "overlap" => vec![overlap::overlap(quick)],
         "multitenant" => vec![
             multitenant::multitenant_policies(quick),
             multitenant::multitenant_splits(quick),

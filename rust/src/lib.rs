@@ -20,11 +20,15 @@
 //!   analogue of the UPMEM host runtime), the typed MRAM layout + transfer
 //!   builder ([`coordinator::layout`]: `Symbol<T>` regions moved via
 //!   `PimSet::xfer` with equal/ragged/broadcast distributions and explicit
-//!   accounting buckets), the fleet execution engine
-//!   ([`coordinator::executor`]: serial baseline vs multi-core sharding,
-//!   bit-identical in modeled time), and the multi-tenant scheduler
-//!   ([`coordinator::scheduler`]: rank-sliced tenants, seeded open-loop
-//!   traffic, pluggable bus-arbitration policies, per-tenant QoS)
+//!   accounting buckets), async command queues ([`coordinator::queue`]:
+//!   typed Push/Pull/Launch/HostMerge/Fence commands scheduled onto one
+//!   serialized bus + per-rank kernel lanes + the host CPU, with
+//!   `TimeBreakdown::overlapped` derived from the command DAG), the fleet
+//!   execution engine ([`coordinator::executor`]: serial baseline vs
+//!   multi-core sharding, bit-identical in modeled time), and the
+//!   multi-tenant scheduler ([`coordinator::scheduler`]: rank-sliced
+//!   tenants, seeded open-loop traffic, pluggable bus-arbitration
+//!   policies, per-tenant QoS on the same resource timeline)
 //! - [`runtime`] — PJRT client loading the AOT JAX/Pallas artifacts
 //! - [`energy`]  — energy model for the Fig. 17 comparison
 //! - [`baselines`] — CPU (native + roofline) and GPU (roofline) comparators

@@ -9,6 +9,9 @@
 //! repro prim [--bench N] [--dpus D] [--tasklets T] [--scale S]
 //!            [--executor serial|parallel] [--threads N]
 //!            [--json] [--quick]      --json writes BENCH_PRIM.json
+//! repro prim --overlap [--requests R] [--json] [--quick]
+//!            sync vs async command queues per workload; --json writes
+//!            BENCH_OVERLAP.json
 //! repro serve --bench N [--requests R] [--pipeline] [--dpus D]
 //!            [--tasklets T] [--scale S]   persistent-session serving
 //! repro sched [--tenants "gemv:2,bs:1,va:1"] [--requests N]
@@ -80,19 +83,19 @@ impl Args {
     }
 
     /// Fleet executor resolution: CLI flags win, else
-    /// `PRIM_EXECUTOR`/`PRIM_THREADS`. Unlike the lenient env-var path, an
-    /// explicit `--executor` value must be valid — a typo must not
-    /// silently select parallel.
+    /// `PRIM_EXECUTOR`/`PRIM_THREADS`. Parsing is strict everywhere — a
+    /// typo'd `--executor`, `--threads`, or env value exits 2 instead of
+    /// silently selecting the parallel default.
     fn exec_choice(&self) -> ExecChoice {
         if self.has("executor") || self.has("threads") {
-            let name = self.flags.get("executor").map(String::as_str);
-            if let Some(n) = name {
-                if !n.eq_ignore_ascii_case("serial") && !n.eq_ignore_ascii_case("parallel") {
-                    eprintln!("unknown --executor '{n}' (expected serial|parallel)");
-                    std::process::exit(2);
-                }
-            }
-            ExecChoice::parse(name, self.flags.get("threads").map(String::as_str))
+            ExecChoice::parse(
+                self.flags.get("executor").map(String::as_str),
+                self.flags.get("threads").map(String::as_str),
+            )
+            .unwrap_or_else(|e| {
+                eprintln!("--executor/--threads: {e}");
+                std::process::exit(2);
+            })
         } else {
             ExecChoice::Auto
         }
@@ -201,6 +204,71 @@ fn main() -> anyhow::Result<()> {
             // --quick shrinks every dataset 20× below the harness scale
             // (the CI smoke setting behind the BENCH_PRIM.json artifact)
             let scale_factor = if quick { 0.05 } else { 1.0 };
+            if args.has("overlap") {
+                // async-mode smoke: serve each workload twice — serialized
+                // vs async command queues — and report the derived overlap.
+                // Defaults to the serving-shaped subset (the streaming
+                // workloads with fence-style merges gain nothing and NW's
+                // per-diagonal command count is pathological); --bench
+                // narrows to one workload.
+                let names: Vec<String> = if args.flags.contains_key("bench") {
+                    benches.iter().map(|b| b.name().to_string()).collect()
+                } else {
+                    ["VA", "GEMV", "MLP", "BS", "TS", "BFS", "TRNS"]
+                        .iter()
+                        .map(|s| s.to_string())
+                        .collect()
+                };
+                let requests: usize = args.flag("requests", if quick { 2 } else { 4 });
+                let mut rows = String::from("[\n");
+                for (i, name) in names.iter().enumerate() {
+                    let w = workload_by_name(name)
+                        .unwrap_or_else(|| panic!("unknown benchmark {name}"));
+                    let rc = RunConfig {
+                        n_dpus,
+                        n_tasklets: args.flag("tasklets", w.best_tasklets()),
+                        scale: args
+                            .flag("scale", harness::harness_scale(w.name()) * scale_factor),
+                        seed,
+                        sys: sys.clone(),
+                        exec,
+                    };
+                    let t0 = std::time::Instant::now();
+                    let ser = serve(w.as_ref(), &rc, requests, false);
+                    let asy = serve(w.as_ref(), &rc, requests, true);
+                    println!(
+                        "{:<9} [{}] sync {:>9.3} ms | async {:>9.3} ms | hidden {:>8.3} ms | \
+                         sim wall {:.2}s",
+                        ser.name,
+                        if ser.verified && asy.verified { "ok" } else { "VERIFY-FAIL" },
+                        ser.warm.total() * 1e3,
+                        asy.warm.total() * 1e3,
+                        asy.warm.overlapped * 1e3,
+                        t0.elapsed().as_secs_f64(),
+                    );
+                    rows.push_str(&format!(
+                        "  {{\"name\": \"{}\", \"verified\": {}, \"requests\": {}, \
+                         \"cold_secs\": {:e}, \"sync_warm_secs\": {:e}, \
+                         \"async_warm_secs\": {:e}, \"overlapped_secs\": {:e}}}{}\n",
+                        ser.name,
+                        ser.verified && asy.verified,
+                        requests,
+                        ser.cold.total(),
+                        ser.warm.total(),
+                        asy.warm.total(),
+                        asy.warm.overlapped,
+                        if i + 1 < names.len() { "," } else { "" },
+                    ));
+                }
+                rows.push_str("]\n");
+                if args.has("json") {
+                    std::fs::create_dir_all(&outdir)?;
+                    let path = outdir.join("BENCH_OVERLAP.json");
+                    std::fs::write(&path, rows)?;
+                    println!("wrote {}", path.display());
+                }
+                return Ok(());
+            }
             let mut results: Vec<BenchResult> = Vec::new();
             for b in benches {
                 let rc = RunConfig {

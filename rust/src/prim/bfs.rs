@@ -11,11 +11,19 @@
 //! Lifecycle: the CSR slices are resident; each request traverses from a
 //! fresh root (request 0 keeps the paper's max-degree root), paying only a
 //! small bit-vector reset instead of re-pushing the graph.
+//!
+//! In an async command-queue batch the level loop declares its real data
+//! flow: the per-level frontier union depends only on the pulls whose
+//! host images it consumes (`host_merge_dep`), and the next level's
+//! frontier scatter carries the union's output (`.after(..)`). On the
+//! modeled timeline the host-side union therefore overlaps the bus
+//! traffic that zeroes the next-frontier vectors — the §6 overlap BFS
+//! can realize even though its level chain is otherwise serial.
 
 use super::common::{BenchTraits, RunConfig};
 use super::workload::{Dataset, Output, Request, Staged, Workload};
 use crate::arch::{isa, DType, Op};
-use crate::coordinator::{chunk_ranges, LaunchStats, Session, Symbol};
+use crate::coordinator::{chunk_ranges, Access, CmdId, LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::data::{rmat_graph, Graph};
 use crate::util::Rng;
@@ -170,9 +178,11 @@ impl Workload for Bfs {
         // per-request state reset: zero next + visited on every DPU (the
         // only warm CPU-DPU cost — the graph itself stays resident)
         let zeros = vec![0u64; 2 * words];
+        sess.set.group_begin();
         for i in 0..nd {
             sess.set.xfer(nxvis_sym).to().one(i, &zeros);
         }
+        sess.set.group_end();
 
         // frontier bootstrap
         let mut frontier = vec![0u64; words];
@@ -185,20 +195,33 @@ impl Workload for Bfs {
             + isa::op_instrs(DType::U64, Op::Bitwise) as u64;
 
         let mut last_stats = LaunchStats::default();
+        // id of the previous level's frontier union: the next scatter
+        // carries its output (host-side data flow the region inference
+        // cannot see)
+        let mut prev_merge: Vec<CmdId> = Vec::new();
         loop {
             // distribute the current frontier (inter-DPU phase). Each DPU
             // keeps a private copy it mutates, so these are serial per-DPU
-            // copies, not a broadcast (matching the PrIM host loop).
+            // copies, not a broadcast (matching the PrIM host loop);
+            // queued, they coalesce into one recorded scatter command.
             let frontier_now = frontier.clone();
+            sess.set.group_begin();
             for i in 0..nd {
-                sess.set.xfer(fr_sym).inter().to().one(i, &frontier_now);
+                sess.set.xfer(fr_sym).inter().after(&prev_merge).to().one(i, &frontier_now);
             }
+            sess.set.group_end();
 
             let (ci_off, fr_off, nx_off, vis_off) =
                 (ci_sym.off(), fr_sym.off(), nx_sym.off(), vis_sym.off());
             let rp_off = rp_sym.off();
             let row_parts_ref = &row_parts;
-            let stats = sess.launch(sess.n_tasklets, |dpu, ctx: &mut Ctx| {
+            let acc = Access::new()
+                .read(rp_sym.region())
+                .read(ci_sym.region())
+                .read(fr_sym.region())
+                .read(nxvis_sym.region())
+                .write(nxvis_sym.region());
+            let stats = sess.launch_acc(acc, sess.n_tasklets, |dpu, ctx: &mut Ctx| {
                 let rows = row_parts_ref[dpu].clone();
                 let n_rows = rows.len();
                 // shared WRAM bit-vectors
@@ -290,15 +313,23 @@ impl Workload for Bfs {
             // host gathers per-DPU next frontiers and unions sequentially
             level += 1;
             let mut next = vec![0u64; words];
+            let mut pull_ids: Vec<CmdId> = Vec::with_capacity(nd);
             for i in 0..nd {
                 let part = sess.set.xfer(nx_sym).inter().from().one(i, words);
+                if let Some(id) = sess.set.last_cmd() {
+                    pull_ids.push(id);
+                }
                 for (a, b) in next.iter_mut().zip(&part) {
                     *a |= *b;
                 }
                 // zero the DPU's next-frontier for the following level
                 sess.set.xfer(nx_sym).inter().to().one(i, &vec![0u64; words]);
             }
-            sess.set.host_merge((nd * words * 8) as u64, (nd * words) as u64);
+            // the union consumes only the pulls' host images: declared,
+            // so the modeled merge overlaps the zeroing bus traffic
+            sess.set
+                .host_merge_dep((nd * words * 8) as u64, (nd * words) as u64, &pull_ids);
+            prev_merge = sess.set.last_cmd().into_iter().collect();
 
             // strip already-visited, assign distances
             let mut any = false;

@@ -6,12 +6,17 @@
 //!
 //! Lifecycle: the weight matrices are resident (the classic
 //! inference-serving shape); each request broadcasts a fresh input vector
-//! and runs the 3-layer forward pass.
+//! and runs the 3-layer forward pass. The input vector is
+//! double-buffered by request parity and every layer launch declares its
+//! weight/activation footprint, so in an async command-queue batch the
+//! next inference's input broadcast hides under the current forward
+//! pass, and the inter-layer host merge (declared to depend only on its
+//! activation pull) overlaps later bus traffic.
 
 use super::common::{BenchTraits, RunConfig};
 use super::gemv::gemv_kernel;
 use super::workload::{Dataset, Output, Request, Staged, Workload};
-use crate::coordinator::{LaunchStats, Session, Symbol};
+use crate::coordinator::{Access, CmdId, LaunchStats, Session, Symbol};
 use crate::dpu::Ctx;
 use crate::util::Rng;
 
@@ -29,7 +34,8 @@ pub struct MlpData {
 
 struct MlpState {
     w_syms: Vec<Symbol<u32>>,
-    x_sym: Symbol<u32>,
+    /// Double-buffered activation vectors, indexed by `request id % 2`.
+    x_syms: [Symbol<u32>; 2],
     y_sym: Symbol<u32>,
     cur_x: Vec<u32>,
 }
@@ -80,10 +86,10 @@ impl Workload for Mlp {
         let d = ds.get::<MlpData>();
         let nd = sess.set.n_dpus() as usize;
         assert_eq!(d.rows_per * nd, d.m, "session fleet must match the dataset");
-        // MRAM layout per DPU: W1 | W2 | W3 | x | y
+        // MRAM layout per DPU: W1 | W2 | W3 | x0 | x1 | y
         let w_syms: Vec<Symbol<u32>> =
             (0..LAYERS).map(|_| sess.set.symbol::<u32>(d.rows_per * d.m)).collect();
-        let x_sym = sess.set.symbol::<u32>(d.m);
+        let x_syms = [sess.set.symbol::<u32>(d.m), sess.set.symbol::<u32>(d.m)];
         let y_sym = sess.set.symbol::<u32>(d.rows_per * 2);
         for (l, w) in d.weights.iter().enumerate() {
             let bufs: Vec<Vec<u32>> = (0..nd)
@@ -91,7 +97,7 @@ impl Workload for Mlp {
                 .collect();
             sess.set.xfer(w_syms[l]).to().equal(&bufs);
         }
-        sess.put_state(MlpState { w_syms, x_sym, y_sym, cur_x: Vec::new() });
+        sess.put_state(MlpState { w_syms, x_syms, y_sym, cur_x: Vec::new() });
         sess.mark_loaded("MLP");
     }
 
@@ -106,30 +112,39 @@ impl Workload for Mlp {
         &self,
         sess: &mut Session,
         ds: &Dataset,
-        _req: &Request,
+        req: &Request,
         staged: Staged,
     ) -> LaunchStats {
         let d = ds.get::<MlpData>();
         let MlpStaged { x0 } = staged.take::<MlpStaged>();
         let (w_syms, x_sym, y_sym) = {
             let st = sess.state::<MlpState>();
-            (st.w_syms.clone(), st.x_sym, st.y_sym)
+            (st.w_syms.clone(), st.x_syms[(req.id % 2) as usize], st.y_sym)
         };
         let (m, rows_per) = (d.m, d.rows_per);
         sess.set.xfer(x_sym).to().broadcast(&x0);
 
         let mut last_stats = LaunchStats::default();
         for (l, w_sym) in w_syms.iter().copied().enumerate() {
-            last_stats = sess.launch_seq(sess.n_tasklets, move |_d, ctx: &mut Ctx| {
+            let acc = Access::new()
+                .read(w_sym.region())
+                .read(x_sym.region())
+                .write(y_sym.region());
+            last_stats = sess.launch_seq_acc(acc, sess.n_tasklets, move |_d, ctx: &mut Ctx| {
                 gemv_kernel(ctx, rows_per, m, w_sym.off(), x_sym.off(), y_sym.off(), true);
             });
             if l + 1 < LAYERS {
-                // host: gather y chunks, rebuild the vector, redistribute
+                // host: gather y chunks, rebuild the vector, redistribute.
+                // The merge consumes only the pull's host image, and the
+                // redistributed broadcast carries the merge's output —
+                // declared so the async timeline gets the true data flow.
                 let parts = sess.set.xfer(y_sym).inter().from().all();
+                let pull_dep: Vec<CmdId> = sess.set.last_cmd().into_iter().collect();
                 let next: Vec<u32> =
                     parts.iter().flat_map(|p| p.iter().step_by(2).copied()).collect();
-                sess.set.host_merge((m * 4) as u64, m as u64);
-                sess.set.xfer(x_sym).inter().to().broadcast(&next);
+                sess.set.host_merge_dep((m * 4) as u64, m as u64, &pull_dep);
+                let merge_dep: Vec<CmdId> = sess.set.last_cmd().into_iter().collect();
+                sess.set.xfer(x_sym).inter().after(&merge_dep).to().broadcast(&next);
             }
         }
         sess.state_mut::<MlpState>().cur_x = x0;

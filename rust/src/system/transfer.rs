@@ -20,6 +20,12 @@
 //! `t(s) = t0 + s/BW∞`; parallel aggregate bandwidth
 //! `BW(N) = A·N/(N+B)` at the 32 MB calibration point, scaled by the
 //! single-DPU size curve for other sizes.
+//!
+//! The seconds computed here are what a transfer command occupies the
+//! **serialized host bus** for on the modeled resource timelines of
+//! `coordinator::queue` — the async command queues that decide which
+//! transfers can hide under concurrently-running kernels — and what the
+//! multi-tenant scheduler's bus arbitration reserves per grant.
 
 use crate::coordinator::executor::{FleetExecutor, FleetSlot};
 use crate::dpu::Dpu;

@@ -4,7 +4,8 @@
 
 use prim_pim::arch::{DpuArch, SystemConfig};
 use prim_pim::coordinator::{
-    chunk_ranges, chunk_ranges_aligned, cyclic_blocks, MramLayout, PimSet,
+    chunk_ranges, chunk_ranges_aligned, cyclic_blocks, Access, CmdMeta, CmdQueue, MramLayout,
+    PimSet,
 };
 use prim_pim::dpu::{replay, timing_ref::replay_stepped, Ctx, Ev, Trace};
 use prim_pim::prim::common::RunConfig;
@@ -90,6 +91,92 @@ fn prop_mram_layout_aligned_disjoint_deterministic() {
         assert!(l1.used() <= cap);
         assert_eq!(l1.used(), l2.used());
         assert_eq!(l1.remaining(), cap - l1.used());
+    });
+}
+
+// ---------------------------------------------------------- command queue
+
+/// The derived-overlap invariant: whatever the command mix, the list
+/// schedule's makespan never exceeds the fully serialized sum of
+/// seconds (the four accounting buckets), so the `overlapped` credit is
+/// always non-negative and bounded.
+#[test]
+fn prop_queue_makespan_bounded_by_serialized_sum() {
+    props("queue makespan <= serialized sum", 80, |g: &mut Gen| {
+        let n = g.usize_in(1..60);
+        let mut q = CmdQueue::new();
+        for _ in 0..n {
+            let secs = (g.usize_in(1..1000) as f64) * 1e-6;
+            let lo = g.usize_in(0..8) * 1024;
+            let region = lo..lo + 512;
+            match g.usize_in(0..5) {
+                0 => {
+                    q.push(CmdMeta::push(0..8, region, secs, vec![]));
+                }
+                1 => {
+                    q.push(CmdMeta::pull(0..8, region, secs, vec![]));
+                }
+                2 => {
+                    let w = g.usize_in(0..8) * 1024;
+                    q.push(CmdMeta::launch(
+                        0..8,
+                        Access::new().read(region).write(w..w + 512),
+                        secs,
+                    ));
+                }
+                3 => {
+                    q.push(CmdMeta::host_merge(secs));
+                }
+                _ => {
+                    let after = q.last_id().into_iter().collect();
+                    q.push(CmdMeta::host_merge_after(secs, after));
+                }
+            }
+        }
+        let s = q.schedule(2, 4);
+        assert!(
+            s.makespan <= s.total_secs * (1.0 + 1e-12),
+            "makespan {} vs sum {}",
+            s.makespan,
+            s.total_secs
+        );
+        assert!(s.makespan > 0.0);
+        assert!(s.finish.iter().all(|f| f.is_finite() && *f > 0.0));
+        let hidden = q.hidden_secs(2, 4);
+        assert!((0.0..=s.total_secs).contains(&hidden));
+    });
+}
+
+/// A fully dependent chain (every command touches the same region) folds
+/// to `makespan == sum` **bitwise** — the same left-to-right float
+/// accumulation — so the derived overlap is exactly zero. This is the
+/// invariant that makes the synchronous shim bit-identical.
+#[test]
+fn prop_queue_fully_dependent_chain_has_zero_derived_overlap() {
+    props("dependent chain: makespan == sum", 80, |g: &mut Gen| {
+        let n = g.usize_in(1..40);
+        let mut q = CmdQueue::new();
+        for i in 0..n {
+            let secs = (g.usize_in(1..1000) as f64) * 1e-6;
+            match i % 3 {
+                0 => {
+                    q.push(CmdMeta::push(0..8, 0..1024, secs, vec![]));
+                }
+                1 => {
+                    q.push(CmdMeta::launch(
+                        0..8,
+                        Access::new().read(0..1024).write(0..1024),
+                        secs,
+                    ));
+                }
+                _ => {
+                    q.push(CmdMeta::pull(0..8, 0..1024, secs, vec![]));
+                }
+            }
+        }
+        let s = q.schedule(2, 4);
+        assert_eq!(s.makespan.to_bits(), s.total_secs.to_bits());
+        assert_eq!(q.hidden_secs(2, 4), 0.0);
     });
 }
 
