@@ -1,12 +1,73 @@
 //! Hot-path microbenches of the simulator itself (the §Perf targets in
 //! DESIGN.md): timing-engine event rate, functional launch overhead,
-//! WRAM/MRAM access costs, transfer engine, and the PJRT fleet estimator.
+//! WRAM/MRAM access costs, transfer engine, queue scheduling, and the
+//! PJRT fleet estimator. Alongside the text report, results land in
+//! machine-readable form at `results/BENCH_HOTPATH.json` (schema in
+//! EXPERIMENTS.md) for the CI perf gate.
 
 use prim_pim::arch::{DType, DpuArch, Op, SystemConfig};
-use prim_pim::coordinator::{ParallelExecutor, PimSet, SerialExecutor};
+use prim_pim::coordinator::{Access, CmdMeta, CmdQueue, ParallelExecutor, PimSet, SerialExecutor};
 use prim_pim::dpu::{replay, Ctx, Dpu, Ev, Trace};
 use prim_pim::util::bencher::Bencher;
 use std::sync::Arc;
+
+/// Serving-shaped command soup at fleet scale (2,048 DPUs / 32 ranks):
+/// double-buffered input pushes over a small slot palette, launches with
+/// declared footprints, result pulls, host merges on the last pull,
+/// periodic fences, and every 16th step a 32-transfer scatter storm
+/// (coalesced via `group_begin`/`group_end` when `grouped`). The region
+/// palette is deliberately bounded — steady-state serving reuses buffer
+/// slots, it does not allocate fresh MRAM per request.
+fn build_sched_queue(n_cmds: usize, grouped: bool) -> CmdQueue {
+    const DPUS: usize = 2048;
+    const SLOT: usize = 1 << 20;
+    let mut q = CmdQueue::new();
+    let mut it = 0usize;
+    while q.len() < n_cmds {
+        let slot = (it / 16) % 4;
+        let base = slot * SLOT;
+        let dpu_lo = (it * 128) % DPUS;
+        let dpus = dpu_lo..(dpu_lo + 128).min(DPUS);
+        match it % 16 {
+            0 if it % 64 == 0 && it > 0 => {
+                q.push(CmdMeta::fence());
+            }
+            0..=5 => {
+                q.push(CmdMeta::push(dpus, base..base + 256 * 1024, 3e-4, vec![]));
+            }
+            6..=9 => {
+                q.push(CmdMeta::launch(
+                    dpus,
+                    Access::new()
+                        .read(base..base + 256 * 1024)
+                        .write(4 * SLOT..4 * SLOT + 64 * 1024),
+                    1e-3,
+                ));
+            }
+            10..=12 => {
+                q.push(CmdMeta::pull(dpus, 4 * SLOT..4 * SLOT + 64 * 1024, 1e-4, vec![]));
+            }
+            13 => {
+                let j = q.last_id().expect("commands already enqueued");
+                q.push(CmdMeta::host_merge_after(5e-5, vec![j]));
+            }
+            _ => {
+                if grouped {
+                    q.group_begin();
+                }
+                for k in 0..32usize {
+                    let off = 5 * SLOT + k * 2048;
+                    q.push(CmdMeta::push(k * 64..k * 64 + 64, off..off + 2048, 1e-6, vec![]));
+                }
+                if grouped {
+                    q.group_end();
+                }
+            }
+        }
+        it += 1;
+    }
+    q
+}
 
 fn main() {
     let mut b = Bencher::new();
@@ -110,6 +171,41 @@ fn main() {
         set.xfer(sym).to().ragged(&ragged)
     });
 
+    // 5b. queue scheduling at fleet scale: the indexed event-driven
+    // scheduler vs the retained O(n²) reference, 1k and 10k commands at
+    // 2,048 DPUs / 32 ranks, with and without grouped transfer storms.
+    // Both paths are bit-identical in output (asserted here once, and
+    // property-tested in tests/properties.rs); only wallclock differs.
+    const SCHED_RANKS: usize = 32;
+    const SCHED_PER: usize = 64;
+    let mut sched_speedups: Vec<(String, f64)> = Vec::new();
+    for (label, n_cmds, grouped) in [
+        ("1k", 1_000usize, false),
+        ("10k", 10_000, false),
+        ("10k_grouped", 10_000, true),
+    ] {
+        let q = build_sched_queue(n_cmds, grouped);
+        let fast = q.schedule(SCHED_RANKS, SCHED_PER);
+        let slow = q.schedule_reference(SCHED_RANKS, SCHED_PER);
+        assert_eq!(
+            fast.makespan.to_bits(),
+            slow.makespan.to_bits(),
+            "schedulers drifted on the {label} soup"
+        );
+        let items = Some(q.len() as f64);
+        let t_fast = b
+            .bench_items(&format!("queue schedule {label} (indexed)"), items, &mut || {
+                q.schedule(SCHED_RANKS, SCHED_PER)
+            })
+            .median();
+        let t_slow = b
+            .bench_items(&format!("queue schedule {label} (reference)"), items, &mut || {
+                q.schedule_reference(SCHED_RANKS, SCHED_PER)
+            })
+            .median();
+        sched_speedups.push((format!("sched_speedup_{label}"), t_slow / t_fast));
+    }
+
     // 6. PJRT fleet estimator (if artifacts are built)
     if prim_pim::runtime::artifacts_available() {
         let rt = prim_pim::runtime::PjrtRuntime::cpu().unwrap();
@@ -131,4 +227,25 @@ fn main() {
     }
 
     b.report("simulator_hotpath");
+    for (name, x) in &sched_speedups {
+        println!("{name}: {x:.2}x (reference over indexed)");
+    }
+
+    // Machine-readable results for the CI perf gate (schema documented
+    // in EXPERIMENTS.md §BENCH_HOTPATH.json).
+    let host_cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut derived = format!("\"fleet_speedup\": {:e}", t_serial / t_parallel);
+    for (name, x) in &sched_speedups {
+        derived.push_str(&format!(", \"{name}\": {x:e}"));
+    }
+    let json = format!(
+        "{{\n  \"schema\": \"bench_hotpath/v1\",\n  \"quick\": {quick},\n  \
+         \"host_cores\": {host_cores},\n  \"entries\": {},\n  \"derived\": {{{derived}}}\n}}\n",
+        b.json_entries(),
+    );
+    let outdir = std::path::Path::new("results");
+    std::fs::create_dir_all(outdir).expect("create results/");
+    let path = outdir.join("BENCH_HOTPATH.json");
+    std::fs::write(&path, json).expect("write BENCH_HOTPATH.json");
+    println!("wrote {}", path.display());
 }

@@ -1,0 +1,568 @@
+//! CI perf gate: diff the current run's bench JSON against the previous
+//! main-branch baseline and fail loudly on regression.
+//!
+//! Usage: `perf_gate <prev_dir> <cur_dir>` — both directories may hold
+//! `BENCH_PRIM.json`, `BENCH_OVERLAP.json`, `BENCH_HOTPATH.json` (the
+//! repro CLI / hot-path bench writers). Two rule families:
+//!
+//! * **Modeled seconds** (`BENCH_PRIM`, `BENCH_OVERLAP`): deterministic
+//!   outputs of the timing model, so any drift beyond float-noise
+//!   tolerance (default 1e-6 relative, either direction) fails — the
+//!   gate doubles as a model-change detector.
+//! * **Wallclock** (`BENCH_HOTPATH`): noisy CI runners, so only a
+//!   slowdown past `PERF_GATE_RATIO` (default 1.6×) on an entry's
+//!   `median_secs` — or a speedup in `derived.*` falling below
+//!   `prev / ratio` — fails. Independently of any baseline,
+//!   `derived.sched_speedup_10k` must clear the absolute floor
+//!   `PERF_GATE_MIN_SPEEDUP` (default 5; 0 disables).
+//!
+//! A missing baseline file skips that file with a note (first run, or
+//! expired artifacts); a missing *current* file is a violation (the
+//! pipeline that produces it broke). Set `PERF_GATE_OVERRIDE=1` (the CI
+//! workflow maps the `perf-override` PR label onto it) to report
+//! violations without failing — for intentional model changes.
+
+use std::fmt::Write as _;
+
+// ------------------------------------------------------------ mini JSON
+
+/// Minimal JSON value — enough to parse this repo's own bench writers
+/// (vendored crate set has no serde).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8, String> {
+        self.ws();
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| "unexpected end of JSON".into())
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek()? == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected '{}' at byte {}, found '{}'",
+                c as char, self.i, self.b[self.i] as char
+            ))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, String> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.lit("true", Value::Bool(true)),
+            b'f' => self.lit("false", Value::Bool(false)),
+            b'n' => self.lit("null", Value::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Value) -> Result<Value, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.b.get(self.i).copied().ok_or("unterminated string")? {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(s);
+                }
+                b'\\' => {
+                    // our writers never escape, but pass basic ones through
+                    self.i += 1;
+                    let c = self.b.get(self.i).copied().ok_or("bad escape")?;
+                    s.push(match c {
+                        b'n' => '\n',
+                        b't' => '\t',
+                        other => other as char,
+                    });
+                    self.i += 1;
+                }
+                c => {
+                    s.push(c as char);
+                    self.i += 1;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value, String> {
+        self.ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        s.parse::<f64>()
+            .map(Value::Num)
+            .map_err(|_| format!("bad number '{s}' at byte {start}"))
+    }
+
+    fn array(&mut self) -> Result<Value, String> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Value::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Value::Arr(out));
+                }
+                c => return Err(format!("expected ',' or ']', found '{}'", c as char)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, String> {
+        self.eat(b'{')?;
+        let mut out = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Value::Obj(out));
+        }
+        loop {
+            let k = self.string()?;
+            self.eat(b':')?;
+            let v = self.value()?;
+            out.push((k, v));
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Value::Obj(out));
+                }
+                c => return Err(format!("expected ',' or '}}', found '{}'", c as char)),
+            }
+        }
+    }
+}
+
+pub fn parse_json(s: &str) -> Result<Value, String> {
+    let mut p = Parser { b: s.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing garbage at byte {}", p.i));
+    }
+    Ok(v)
+}
+
+// ------------------------------------------------------ metric flattening
+
+/// Flatten a bench JSON document to dotted numeric metrics. Arrays whose
+/// elements are objects carrying a `"name"` field key by that name (the
+/// shape of every writer in this repo); other arrays key by index. Bools
+/// count as 0/1 metrics so a `verified` flip trips the modeled-file
+/// rules.
+pub fn flatten(v: &Value, prefix: &str, out: &mut Vec<(String, f64)>) {
+    let key = |k: &str| {
+        if prefix.is_empty() {
+            k.to_string()
+        } else {
+            format!("{prefix}.{k}")
+        }
+    };
+    match v {
+        Value::Num(x) => out.push((prefix.to_string(), *x)),
+        Value::Bool(b) => out.push((prefix.to_string(), *b as u8 as f64)),
+        Value::Str(_) | Value::Null => {}
+        Value::Obj(kv) => {
+            for (k, inner) in kv {
+                flatten(inner, &key(k), out);
+            }
+        }
+        Value::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                let name = item
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .map(str::to_string)
+                    .unwrap_or_else(|| i.to_string());
+                flatten(item, &key(&name), out);
+            }
+        }
+    }
+}
+
+fn metrics(src: &str) -> Result<Vec<(String, f64)>, String> {
+    let v = parse_json(src)?;
+    let mut out = Vec::new();
+    flatten(&v, "", &mut out);
+    Ok(out)
+}
+
+fn lookup<'m>(m: &'m [(String, f64)], k: &str) -> Option<f64> {
+    m.iter().find(|(n, _)| n == k).map(|&(_, v)| v)
+}
+
+// -------------------------------------------------------------- the gate
+
+/// Gate thresholds (resolved from the environment in `main`; explicit in
+/// tests).
+#[derive(Clone, Copy, Debug)]
+pub struct GateCfg {
+    /// Relative tolerance for modeled (deterministic) seconds.
+    pub modeled_rtol: f64,
+    /// Allowed wallclock slowdown factor before failing.
+    pub ratio: f64,
+    /// Absolute floor on `derived.sched_speedup_10k` (0 disables).
+    pub min_sched_speedup: f64,
+}
+
+impl Default for GateCfg {
+    fn default() -> Self {
+        GateCfg {
+            modeled_rtol: 1e-6,
+            ratio: 1.6,
+            min_sched_speedup: 5.0,
+        }
+    }
+}
+
+/// Compare one modeled-seconds file (PRIM / OVERLAP): every metric
+/// present in both runs must match within `modeled_rtol`; metrics that
+/// vanished from the current run are violations too (a bench was
+/// dropped).
+pub fn check_modeled(file: &str, prev: &str, cur: &str, cfg: &GateCfg) -> Vec<String> {
+    let mut out = Vec::new();
+    let (prev_m, cur_m) = match (metrics(prev), metrics(cur)) {
+        (Ok(p), Ok(c)) => (p, c),
+        (p, c) => {
+            for r in [p, c] {
+                if let Err(e) = r {
+                    out.push(format!("{file}: unparsable JSON: {e}"));
+                }
+            }
+            return out;
+        }
+    };
+    for (k, pv) in &prev_m {
+        match lookup(&cur_m, k) {
+            None => out.push(format!("{file}: metric '{k}' disappeared from the current run")),
+            Some(cv) => {
+                let rel = (cv - pv).abs() / pv.abs().max(1e-12);
+                if rel > cfg.modeled_rtol {
+                    out.push(format!(
+                        "{file}: '{k}' drifted {pv:e} -> {cv:e} (rel {rel:.2e} > {:e}; \
+                         modeled seconds are deterministic — this is a model change)",
+                        cfg.modeled_rtol
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Compare the wallclock file (HOTPATH): `entries.*.median_secs` may not
+/// slow past `ratio`; `derived.*` speedups may not fall below
+/// `prev / ratio`; `derived.sched_speedup_10k` must clear the absolute
+/// floor even without a baseline.
+pub fn check_hotpath(file: &str, prev: Option<&str>, cur: &str, cfg: &GateCfg) -> Vec<String> {
+    let mut out = Vec::new();
+    let cur_m = match metrics(cur) {
+        Ok(m) => m,
+        Err(e) => return vec![format!("{file}: unparsable JSON: {e}")],
+    };
+    if cfg.min_sched_speedup > 0.0 {
+        let k = "derived.sched_speedup_10k";
+        match lookup(&cur_m, k) {
+            None => out.push(format!("{file}: required metric '{k}' is missing")),
+            Some(v) if v < cfg.min_sched_speedup => out.push(format!(
+                "{file}: '{k}' = {v:.2} is below the absolute floor {:.2}",
+                cfg.min_sched_speedup
+            )),
+            Some(_) => {}
+        }
+    }
+    let Some(prev) = prev else { return out };
+    let prev_m = match metrics(prev) {
+        Ok(m) => m,
+        Err(e) => {
+            out.push(format!("{file}: unparsable baseline JSON: {e}"));
+            return out;
+        }
+    };
+    for (k, pv) in &prev_m {
+        let Some(cv) = lookup(&cur_m, k) else { continue };
+        if let Some(entry) = k.strip_prefix("entries.") {
+            if entry.ends_with(".median_secs") && cv > pv * cfg.ratio && cv - pv > 1e-6 {
+                out.push(format!(
+                    "{file}: '{k}' slowed {pv:e} -> {cv:e} (> {:.2}x allowance)",
+                    cfg.ratio
+                ));
+            }
+        } else if k.starts_with("derived.") && cv < pv / cfg.ratio {
+            out.push(format!(
+                "{file}: '{k}' fell {pv:.2} -> {cv:.2} (> {:.2}x allowance)",
+                cfg.ratio
+            ));
+        }
+    }
+    out
+}
+
+/// Run the whole gate over two results directories. Returns (violations,
+/// notes); pure over the filesystem reads so tests can drive it.
+pub fn run_gate(prev_dir: &std::path::Path, cur_dir: &std::path::Path, cfg: &GateCfg) -> (Vec<String>, Vec<String>) {
+    let mut violations = Vec::new();
+    let mut notes = Vec::new();
+    let read = |dir: &std::path::Path, name: &str| std::fs::read_to_string(dir.join(name)).ok();
+    for name in ["BENCH_PRIM.json", "BENCH_OVERLAP.json"] {
+        match (read(prev_dir, name), read(cur_dir, name)) {
+            (Some(p), Some(c)) => violations.extend(check_modeled(name, &p, &c, cfg)),
+            (None, Some(_)) => notes.push(format!("{name}: no baseline — skipped (first run?)")),
+            (_, None) => violations.push(format!("{name}: current run produced no file")),
+        }
+    }
+    let name = "BENCH_HOTPATH.json";
+    match read(cur_dir, name) {
+        None => violations.push(format!("{name}: current run produced no file")),
+        Some(c) => {
+            let p = read(prev_dir, name);
+            if p.is_none() {
+                notes.push(format!("{name}: no baseline — absolute floors only"));
+            }
+            violations.extend(check_hotpath(name, p.as_deref(), &c, cfg));
+        }
+    }
+    (violations, notes)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    match std::env::var(key) {
+        Err(_) => default,
+        Ok(v) => v.trim().parse().unwrap_or_else(|_| {
+            eprintln!("{key}: invalid value '{v}' (expected a float)");
+            std::process::exit(2);
+        }),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.len() != 2 {
+        eprintln!("usage: perf_gate <prev_results_dir> <cur_results_dir>");
+        std::process::exit(2);
+    }
+    let cfg = GateCfg {
+        modeled_rtol: env_f64("PERF_GATE_RTOL", GateCfg::default().modeled_rtol),
+        ratio: env_f64("PERF_GATE_RATIO", GateCfg::default().ratio),
+        min_sched_speedup: env_f64("PERF_GATE_MIN_SPEEDUP", GateCfg::default().min_sched_speedup),
+    };
+    let (violations, notes) = run_gate(
+        std::path::Path::new(&args[0]),
+        std::path::Path::new(&args[1]),
+        &cfg,
+    );
+    for n in &notes {
+        println!("note: {n}");
+    }
+    if violations.is_empty() {
+        println!("perf gate: ok ({cfg:?})");
+        return;
+    }
+    let mut report = String::new();
+    for v in &violations {
+        let _ = writeln!(report, "PERF REGRESSION: {v}");
+    }
+    eprint!("{report}");
+    let override_on = std::env::var("PERF_GATE_OVERRIDE").map(|v| !v.is_empty()).unwrap_or(false);
+    if override_on {
+        println!(
+            "perf gate: {} violation(s) OVERRIDDEN via PERF_GATE_OVERRIDE (perf-override label)",
+            violations.len()
+        );
+        return;
+    }
+    eprintln!(
+        "perf gate: {} violation(s); label the PR 'perf-override' for intentional model changes",
+        violations.len()
+    );
+    std::process::exit(1);
+}
+
+// ------------------------------------------------------------------ tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PRIM: &str = r#"[
+  {"name": "VA", "verified": true, "dpu_secs": 1.5e-3, "total_secs": 2.5e-3},
+  {"name": "GEMV", "verified": true, "dpu_secs": 3e-3, "total_secs": 4e-3}
+]"#;
+
+    fn hotpath(med_10k: f64, speedup: f64) -> String {
+        format!(
+            "{{\"schema\": \"bench_hotpath/v1\", \"quick\": true, \"host_cores\": 8,\n  \
+             \"entries\": [\n    {{\"name\": \"queue schedule 10k (indexed)\", \
+             \"median_secs\": {med_10k:e}, \"mean_secs\": {med_10k:e}, \
+             \"stddev_secs\": 0e0, \"items_per_sec\": null}}\n  ],\n  \
+             \"derived\": {{\"fleet_speedup\": 2.5e0, \"sched_speedup_10k\": {speedup:e}}}\n}}"
+        )
+    }
+
+    #[test]
+    fn parser_handles_writer_shapes() {
+        let v = parse_json(PRIM).unwrap();
+        let mut m = Vec::new();
+        flatten(&v, "", &mut m);
+        assert_eq!(lookup(&m, "VA.dpu_secs"), Some(1.5e-3));
+        assert_eq!(lookup(&m, "GEMV.total_secs"), Some(4e-3));
+        assert_eq!(lookup(&m, "VA.verified"), Some(1.0), "bools are metrics");
+        let h = parse_json(&hotpath(0.01, 9.0)).unwrap();
+        let mut hm = Vec::new();
+        flatten(&h, "", &mut hm);
+        assert_eq!(
+            lookup(&hm, "entries.queue schedule 10k (indexed).median_secs"),
+            Some(0.01)
+        );
+        assert_eq!(lookup(&hm, "derived.sched_speedup_10k"), Some(9.0));
+        assert!(parse_json("[1, 2,]").is_err(), "trailing comma rejected");
+        assert!(parse_json("{\"a\": 1} x").is_err(), "trailing garbage rejected");
+    }
+
+    #[test]
+    fn modeled_drift_fails_both_directions() {
+        let cfg = GateCfg::default();
+        assert!(check_modeled("p", PRIM, PRIM, &cfg).is_empty(), "identical passes");
+        let faster = PRIM.replace("\"dpu_secs\": 1.5e-3", "\"dpu_secs\": 1.4e-3");
+        let v = check_modeled("p", PRIM, &faster, &cfg);
+        assert_eq!(v.len(), 1, "even an improvement is a model change: {v:?}");
+        assert!(v[0].contains("VA.dpu_secs"));
+        // float noise within tolerance passes
+        let noise = PRIM.replace("\"dpu_secs\": 1.5e-3", "\"dpu_secs\": 1.5000000001e-3");
+        assert!(check_modeled("p", PRIM, &noise, &cfg).is_empty());
+        // a disappeared bench is a violation
+        let dropped = r#"[{"name": "VA", "verified": true, "dpu_secs": 1.5e-3, "total_secs": 2.5e-3}]"#;
+        assert!(!check_modeled("p", PRIM, dropped, &cfg).is_empty());
+    }
+
+    #[test]
+    fn verified_flip_is_caught() {
+        let broken = PRIM.replace("\"name\": \"VA\", \"verified\": true", "\"name\": \"VA\", \"verified\": false");
+        let v = check_modeled("p", PRIM, &broken, &GateCfg::default());
+        assert!(v.iter().any(|s| s.contains("VA.verified")), "{v:?}");
+    }
+
+    /// The acceptance check: an injected synthetic wallclock regression
+    /// (3× slower median, speedup collapsed under the floor) must fail.
+    #[test]
+    fn injected_synthetic_regression_fails() {
+        let cfg = GateCfg::default();
+        let base = hotpath(0.01, 9.0);
+        let regressed = hotpath(0.03, 3.0);
+        let v = check_hotpath("h", Some(&base), &regressed, &cfg);
+        assert!(
+            v.iter().any(|s| s.contains("median_secs") && s.contains("slowed")),
+            "median regression caught: {v:?}"
+        );
+        assert!(
+            v.iter().any(|s| s.contains("sched_speedup_10k") && s.contains("floor")),
+            "absolute floor enforced: {v:?}"
+        );
+        assert!(
+            v.iter().any(|s| s.contains("derived.sched_speedup_10k") && s.contains("fell")),
+            "relative speedup fall caught: {v:?}"
+        );
+    }
+
+    #[test]
+    fn wallclock_noise_and_improvements_pass() {
+        let cfg = GateCfg::default();
+        let base = hotpath(0.01, 9.0);
+        // 1.5x slower is within the 1.6x allowance
+        assert!(check_hotpath("h", Some(&base), &hotpath(0.015, 8.0), &cfg).is_empty());
+        // improvements always pass
+        assert!(check_hotpath("h", Some(&base), &hotpath(0.002, 30.0), &cfg).is_empty());
+        // no baseline: only the absolute floor applies
+        assert!(check_hotpath("h", None, &hotpath(123.0, 5.5), &cfg).is_empty());
+        let v = check_hotpath("h", None, &hotpath(0.01, 4.9), &cfg);
+        assert_eq!(v.len(), 1, "floor without baseline: {v:?}");
+        // floor disabled
+        let no_floor = GateCfg { min_sched_speedup: 0.0, ..cfg };
+        assert!(check_hotpath("h", None, &hotpath(0.01, 0.5), &no_floor).is_empty());
+    }
+
+    #[test]
+    fn run_gate_handles_missing_files() {
+        let tmp = std::env::temp_dir().join(format!("perf_gate_test_{}", std::process::id()));
+        let prev = tmp.join("prev");
+        let cur = tmp.join("cur");
+        std::fs::create_dir_all(&prev).unwrap();
+        std::fs::create_dir_all(&cur).unwrap();
+        let cfg = GateCfg::default();
+        // empty current run: every missing current file is a violation
+        let (v, _) = run_gate(&prev, &cur, &cfg);
+        assert_eq!(v.len(), 3, "{v:?}");
+        // populated current run with no baselines: notes only
+        std::fs::write(cur.join("BENCH_PRIM.json"), PRIM).unwrap();
+        std::fs::write(cur.join("BENCH_OVERLAP.json"), "[]").unwrap();
+        std::fs::write(cur.join("BENCH_HOTPATH.json"), hotpath(0.01, 9.0)).unwrap();
+        let (v, notes) = run_gate(&prev, &cur, &cfg);
+        assert!(v.is_empty(), "{v:?}");
+        assert_eq!(notes.len(), 3, "{notes:?}");
+        // baseline present + injected regression: gate fails
+        std::fs::write(prev.join("BENCH_HOTPATH.json"), hotpath(0.001, 9.0)).unwrap();
+        let (v, _) = run_gate(&prev, &cur, &cfg);
+        assert!(!v.is_empty());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

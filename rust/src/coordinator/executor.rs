@@ -165,28 +165,27 @@ impl FleetExecutor for ParallelExecutor {
             return SerialExecutor.launch(slots, job);
         }
         let chunk = n.div_ceil(workers);
-        let shards: Vec<Vec<DpuTiming>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = slots
-                .chunks_mut(chunk)
-                .map(|shard| {
-                    scope.spawn(move || {
-                        shard
-                            .iter_mut()
-                            .map(|(i, dpu)| job.run_one(*i, dpu))
-                            .collect::<Vec<DpuTiming>>()
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)))
-                .collect()
+        // Deterministic merge without a merge: each shard writes its
+        // timings straight into its contiguous slice of one preallocated
+        // output vector, so the result is in slot order by construction
+        // and the per-shard `Vec` allocations + post-join copy are gone.
+        let mut timings = vec![DpuTiming::default(); n];
+        std::thread::scope(|scope| {
+            let mut out_rest: &mut [DpuTiming] = &mut timings;
+            let mut handles = Vec::with_capacity(workers);
+            for shard in slots.chunks_mut(chunk) {
+                let (out_shard, rest) = std::mem::take(&mut out_rest).split_at_mut(shard.len());
+                out_rest = rest;
+                handles.push(scope.spawn(move || {
+                    for ((i, dpu), out) in shard.iter_mut().zip(out_shard) {
+                        *out = job.run_one(*i, dpu);
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap_or_else(|e| std::panic::resume_unwind(e));
+            }
         });
-        // deterministic merge: shards are contiguous slot ranges in order
-        let mut timings = Vec::with_capacity(n);
-        for s in shards {
-            timings.extend(s);
-        }
         timings
     }
 

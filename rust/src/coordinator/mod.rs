@@ -51,7 +51,7 @@ pub use executor::{
 pub use layout::{MramLayout, Symbol};
 pub use metrics::{Bucket, TimeBreakdown};
 pub use partition::{chunk_ranges, chunk_ranges_aligned, cyclic_blocks, ragged_counts};
-pub use queue::{Access, CmdId, CmdKind, CmdMeta, CmdQueue, Lane, Schedule, Timeline};
+pub use queue::{Access, CmdId, CmdKind, CmdMeta, CmdQueue, Lane, RegionSet, Schedule, Timeline};
 pub use scheduler::{
     run_sched, FleetSlice, PolicyKind, SchedConfig, SchedReport, Scheduler, TenantReport,
     TenantSpec,
@@ -120,6 +120,10 @@ pub struct PimSet {
     /// alongside its normal (unchanged) bucket accounting; `queue_sync`
     /// schedules the recorded program and credits the derived overlap.
     cmd_queue: Option<CmdQueue>,
+    /// Drained queue shell kept for reuse: `queue_begin` takes it back
+    /// instead of allocating, so steady-state pipelined serving records
+    /// commands into a buffer that has already grown to session size.
+    queue_pool: Option<CmdQueue>,
 }
 
 impl PimSet {
@@ -152,6 +156,7 @@ impl PimSet {
             exec,
             rank0: 0,
             cmd_queue: None,
+            queue_pool: None,
             cfg,
         }
     }
@@ -240,7 +245,9 @@ impl PimSet {
             self.cmd_queue.is_none(),
             "a command queue is already open on this set"
         );
-        self.cmd_queue = Some(CmdQueue::new());
+        // Reuse the pooled shell from the previous session (already
+        // grown to steady-state capacity) instead of allocating fresh.
+        self.cmd_queue = Some(self.queue_pool.take().unwrap_or_default());
     }
 
     /// Drain the open queue: schedule the recorded commands onto the
@@ -249,7 +256,7 @@ impl PimSet {
     /// mid-session the queue stays open and the *next* `queue_begin`
     /// reports it — the session that unwound is already lost.)
     pub fn queue_sync(&mut self) -> f64 {
-        let q = self
+        let mut q = self
             .cmd_queue
             .take()
             .expect("queue_sync without an open command queue");
@@ -261,6 +268,8 @@ impl PimSet {
         let n_ranks = self.dpus.len().div_ceil(per);
         let hidden = q.hidden_secs(n_ranks, per);
         self.metrics.overlapped += hidden;
+        q.reset();
+        self.queue_pool = Some(q);
         hidden
     }
 
@@ -529,6 +538,7 @@ impl PimSet {
                     exec: Arc::clone(&exec),
                     rank0: slice_rank0,
                     cmd_queue: None,
+                    queue_pool: None,
                     cfg: cfg.clone(),
                 }
             })

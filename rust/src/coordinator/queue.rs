@@ -30,6 +30,25 @@
 //! kernel, exactly the software pipelining an async UPMEM program
 //! expresses by issuing work before `dpu_sync`.
 //!
+//! # Scheduling invariants
+//!
+//! Two properties are load-bearing and guarded by tests:
+//!
+//! * **Tie-breaking**: among dependency-ready commands with equal
+//!   feasible start times, the **lowest [`CmdId`] (enqueue order) issues
+//!   first**. Every executor derives the same modeled seconds, so this
+//!   makes the whole schedule — finish times, makespan, `total_secs` —
+//!   bit-identical across executors and across the optimized/reference
+//!   scheduler pair below.
+//! * **Reference equivalence**: [`CmdQueue::schedule`] is an indexed,
+//!   event-driven rewrite (segment index over byte regions for
+//!   dependency inference, min-heap ready selection, span-compressed
+//!   rank timeline). [`CmdQueue::schedule_reference`] retains the naive
+//!   O(n²) pairwise scheduler as the executable spec; property tests
+//!   assert the two produce **bitwise-equal** `Schedule`s on randomized
+//!   command soups. The optimization is a pure speedup with zero
+//!   modeled-time drift.
+//!
 //! The derived quantity is the **makespan** of the scheduled timeline;
 //! `PimSet::queue_sync` folds `sum(command secs) − makespan` into
 //! [`super::TimeBreakdown::overlapped`]. A queue with a single command —
@@ -48,6 +67,8 @@
 //! launch-concurrent transfer portion of the credit is the §6 **what-if**
 //! the paper argues for, not a property of the 2021 SDK.
 
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
 use std::ops::Range;
 
 /// Index of a command within its [`CmdQueue`] (returned by enqueue,
@@ -99,19 +120,70 @@ impl Access {
     }
 }
 
+/// A command's byte-region footprint, allocation-free in the common
+/// cases: most commands declare **zero or one** region (every push/pull
+/// is one range; merges and fences have none), so the one-range case is
+/// stored inline instead of heap-allocating a `Vec` per command — the
+/// per-command allocator churn the old `Vec<Range>` representation paid
+/// on every recorded transfer.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum RegionSet {
+    /// No regions (merges, fences, undeclared sides).
+    #[default]
+    Empty,
+    /// Exactly one region, stored inline (pushes, pulls, grouped
+    /// transfers, single-symbol launches).
+    One(Range<usize>),
+    /// Two or more regions (multi-symbol launch footprints).
+    Many(Vec<Range<usize>>),
+}
+
+impl RegionSet {
+    /// View as a slice of ranges (empty slice for `Empty`).
+    pub fn as_slice(&self) -> &[Range<usize>] {
+        match self {
+            RegionSet::Empty => &[],
+            RegionSet::One(r) => std::slice::from_ref(r),
+            RegionSet::Many(v) => v,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+}
+
+impl From<Range<usize>> for RegionSet {
+    fn from(r: Range<usize>) -> Self {
+        RegionSet::One(r)
+    }
+}
+
+impl From<Vec<Range<usize>>> for RegionSet {
+    fn from(mut v: Vec<Range<usize>>) -> Self {
+        match v.len() {
+            0 => RegionSet::Empty,
+            1 => RegionSet::One(v.pop().expect("len checked")),
+            _ => RegionSet::Many(v),
+        }
+    }
+}
+
 /// One recorded command: kind, modeled seconds, and the footprint the
 /// dependency inference works from.
 #[derive(Clone, Debug)]
 pub struct CmdMeta {
     pub kind: CmdKind,
-    /// Modeled seconds this command occupies its lane.
+    /// Modeled seconds this command occupies its lane. Must be
+    /// non-negative: finish times are then monotone along dependency
+    /// edges, which the indexed dependency inference relies on.
     pub secs: f64,
     /// DPU index range the command touches (commands on disjoint DPU
     /// ranges never conflict through memory).
     pub dpus: Range<usize>,
     /// MRAM byte regions read / written (fleet-shared address space).
-    pub reads: Vec<Range<usize>>,
-    pub writes: Vec<Range<usize>>,
+    pub reads: RegionSet,
+    pub writes: RegionSet,
     /// Explicit extra dependencies (host-side data flow).
     pub after: Vec<CmdId>,
     /// Fence semantics: conflicts with every other command.
@@ -125,8 +197,8 @@ impl CmdMeta {
             kind: CmdKind::Push,
             secs,
             dpus,
-            reads: Vec::new(),
-            writes: vec![bytes],
+            reads: RegionSet::Empty,
+            writes: bytes.into(),
             after,
             fence: false,
         }
@@ -138,8 +210,8 @@ impl CmdMeta {
             kind: CmdKind::Pull,
             secs,
             dpus,
-            reads: vec![bytes],
-            writes: Vec::new(),
+            reads: bytes.into(),
+            writes: RegionSet::Empty,
             after,
             fence: false,
         }
@@ -151,8 +223,8 @@ impl CmdMeta {
             kind: CmdKind::Launch,
             secs,
             dpus,
-            reads: acc.reads,
-            writes: acc.writes,
+            reads: acc.reads.into(),
+            writes: acc.writes.into(),
             after: Vec::new(),
             fence: false,
         }
@@ -176,8 +248,8 @@ impl CmdMeta {
             kind: CmdKind::HostMerge,
             secs,
             dpus: 0..0,
-            reads: Vec::new(),
-            writes: Vec::new(),
+            reads: RegionSet::Empty,
+            writes: RegionSet::Empty,
             after: Vec::new(),
             fence: true,
         }
@@ -191,8 +263,8 @@ impl CmdMeta {
             kind: CmdKind::HostMerge,
             secs,
             dpus: 0..0,
-            reads: Vec::new(),
-            writes: Vec::new(),
+            reads: RegionSet::Empty,
+            writes: RegionSet::Empty,
             after,
             fence: false,
         }
@@ -204,16 +276,20 @@ impl CmdMeta {
             kind: CmdKind::Fence,
             secs: 0.0,
             dpus: 0..0,
-            reads: Vec::new(),
-            writes: Vec::new(),
+            reads: RegionSet::Empty,
+            writes: RegionSet::Empty,
             after: Vec::new(),
             fence: true,
         }
     }
 }
 
+/// Do two byte/DPU ranges intersect? Empty ranges touch nothing and
+/// never overlap anything — a zero-byte region or zero-DPU command
+/// cannot conflict (this is load-bearing for the indexed inference,
+/// which skips empty footprints entirely).
 fn ranges_overlap(a: &Range<usize>, b: &Range<usize>) -> bool {
-    a.start < b.end && b.start < a.end
+    a.start < a.end && b.start < b.end && a.start < b.end && b.start < a.end
 }
 
 fn any_overlap(a: &[Range<usize>], b: &[Range<usize>]) -> bool {
@@ -221,7 +297,10 @@ fn any_overlap(a: &[Range<usize>], b: &[Range<usize>]) -> bool {
 }
 
 /// Must `b` wait for `a` (enqueued earlier)? True on fences and on any
-/// RAW / WAR / WAW byte overlap over intersecting DPU ranges.
+/// RAW / WAR / WAW byte overlap over intersecting DPU ranges. This is
+/// the *definition* of a dependency; the indexed inference in
+/// [`infer_deps`] derives a reduced edge set that provably schedules
+/// identically (see the proof sketch there).
 fn depends(a: &CmdMeta, b: &CmdMeta) -> bool {
     if a.fence || b.fence {
         return true;
@@ -229,9 +308,237 @@ fn depends(a: &CmdMeta, b: &CmdMeta) -> bool {
     if !ranges_overlap(&a.dpus, &b.dpus) {
         return false;
     }
-    any_overlap(&a.writes, &b.writes)
-        || any_overlap(&a.writes, &b.reads)
-        || any_overlap(&a.reads, &b.writes)
+    any_overlap(a.writes.as_slice(), b.writes.as_slice())
+        || any_overlap(a.writes.as_slice(), b.reads.as_slice())
+        || any_overlap(a.reads.as_slice(), b.writes.as_slice())
+}
+
+// ------------------------------------------------------- dependency index
+
+/// One open access recorded in the region index: which command, on which
+/// DPU range.
+#[derive(Clone, Debug)]
+struct Entry {
+    id: CmdId,
+    dpus: Range<usize>,
+}
+
+/// A maximal byte interval whose frontier (last writers + readers since)
+/// is uniform. Segments are disjoint, sorted, and may leave gaps for
+/// never-touched bytes.
+#[derive(Debug)]
+struct Seg {
+    start: usize,
+    end: usize,
+    /// Frontier writers: the most recent writes not fully shadowed by a
+    /// later covering write. Usually length 1.
+    writers: Vec<Entry>,
+    /// Readers since the frontier writers (cleared when a covering write
+    /// shadows them).
+    readers: Vec<Entry>,
+}
+
+impl Seg {
+    fn new(start: usize, end: usize) -> Self {
+        Seg {
+            start,
+            end,
+            writers: Vec::new(),
+            readers: Vec::new(),
+        }
+    }
+
+    /// Split at `x` (strictly inside); self keeps `[start, x)`, the
+    /// returned segment carries `[x, end)` with a cloned frontier.
+    fn split_at(&mut self, x: usize) -> Seg {
+        debug_assert!(self.start < x && x < self.end);
+        let right = Seg {
+            start: x,
+            end: self.end,
+            writers: self.writers.clone(),
+            readers: self.readers.clone(),
+        };
+        self.end = x;
+        right
+    }
+}
+
+/// Interval index over the fleet-shared MRAM byte space: for every byte
+/// point, the frontier of open accesses. Dependency inference queries
+/// and updates it per command region instead of sweeping all pairs.
+#[derive(Debug, Default)]
+struct RegionIndex {
+    segs: Vec<Seg>,
+}
+
+impl RegionIndex {
+    /// Make segment boundaries line up with `[lo, hi)` exactly (splitting
+    /// straddlers, materializing gaps) and return the index range of the
+    /// segments that tile it.
+    fn carve(&mut self, lo: usize, hi: usize) -> Range<usize> {
+        debug_assert!(lo < hi);
+        let mut k = self.segs.partition_point(|s| s.end <= lo);
+        if k < self.segs.len() && self.segs[k].start < lo {
+            let right = self.segs[k].split_at(lo);
+            self.segs.insert(k + 1, right);
+            k += 1;
+        }
+        let begin = k;
+        let mut cursor = lo;
+        while cursor < hi {
+            if k == self.segs.len() || self.segs[k].start >= hi {
+                self.segs.insert(k, Seg::new(cursor, hi));
+                k += 1;
+                break;
+            }
+            let s_start = self.segs[k].start;
+            if s_start > cursor {
+                self.segs.insert(k, Seg::new(cursor, s_start));
+                k += 1;
+                cursor = s_start;
+                continue;
+            }
+            if self.segs[k].end > hi {
+                let right = self.segs[k].split_at(hi);
+                self.segs.insert(k + 1, right);
+            }
+            cursor = self.segs[k].end;
+            k += 1;
+        }
+        begin..k
+    }
+
+    fn clear(&mut self) {
+        self.segs.clear();
+    }
+}
+
+/// Inferred dependency DAG in adjacency form: `out[j]` lists the later
+/// commands that wait on `j`; `indeg[i]` counts how many earlier
+/// commands `i` waits on.
+struct DepGraph {
+    out: Vec<Vec<CmdId>>,
+    indeg: Vec<u32>,
+}
+
+/// Record edge `j → i` (i waits on j), deduplicating repeats via the
+/// per-dependent stamp in `mark`.
+fn edge(j: CmdId, i: CmdId, mark: &mut [CmdId], out: &mut [Vec<CmdId>], indeg: &mut [u32]) {
+    if j == i || mark[j] == i {
+        return;
+    }
+    mark[j] = i;
+    out[j].push(i);
+    indeg[i] += 1;
+}
+
+/// Is `inner` fully contained in `outer`?
+fn covers(outer: &Range<usize>, inner: &Range<usize>) -> bool {
+    inner.start >= outer.start && inner.end <= outer.end
+}
+
+/// Indexed dependency inference: one pass over the commands, querying a
+/// segment index of frontier accesses instead of testing all pairs.
+///
+/// The naive spec ([`depends`]) conflicts every pair with overlapping
+/// DPU ranges and overlapping read/write byte regions; fences conflict
+/// with everything. This pass emits a **reduced** edge set: per byte
+/// point only the frontier (last writers not shadowed by a covering
+/// later write, plus readers since) generates edges, and fences become
+/// epoch barriers (edges from the commands since — and including — the
+/// previous fence) instead of all-pairs edges.
+///
+/// Why the reduction schedules identically (bitwise): every dropped
+/// conflict `j → i` is *dominated* — there is a retained edge path
+/// `j → … → i`. Since command seconds are non-negative, finish times are
+/// monotone along edges, so `max` over the retained predecessors' finish
+/// times equals the max over the full conflict set; and "all
+/// dependencies done" propagates transitively along the same paths, so
+/// commands become ready in the same scheduling rounds. Both the ready
+/// *values* and the ready *sets* coincide with the naive scheduler's at
+/// every step, hence identical picks and identical float accumulation.
+fn infer_deps(cmds: &[CmdMeta]) -> DepGraph {
+    let n = cmds.len();
+    let mut out: Vec<Vec<CmdId>> = vec![Vec::new(); n];
+    let mut indeg = vec![0u32; n];
+    let mut mark = vec![usize::MAX; n];
+    let mut index = RegionIndex::default();
+    // Commands since (and including) the previous fence — the epoch a
+    // fence must wait for.
+    let mut epoch: Vec<CmdId> = Vec::new();
+    let mut last_fence: Option<CmdId> = None;
+    for (i, c) in cmds.iter().enumerate() {
+        for &j in &c.after {
+            if j < i {
+                edge(j, i, &mut mark, &mut out, &mut indeg);
+            }
+        }
+        if c.fence {
+            for &j in &epoch {
+                edge(j, i, &mut mark, &mut out, &mut indeg);
+            }
+            index.clear();
+            epoch.clear();
+            epoch.push(i);
+            last_fence = Some(i);
+            continue;
+        }
+        if let Some(fj) = last_fence {
+            edge(fj, i, &mut mark, &mut out, &mut indeg);
+        }
+        epoch.push(i);
+        if c.dpus.start >= c.dpus.end {
+            // No DPU footprint ⇒ no region conflicts possible (the
+            // naive spec's DPU-overlap gate always fails).
+            continue;
+        }
+        for r in c.reads.as_slice() {
+            if r.start >= r.end {
+                continue;
+            }
+            let span = index.carve(r.start, r.end);
+            for k in span.clone() {
+                for e in &index.segs[k].writers {
+                    if e.id != i && ranges_overlap(&e.dpus, &c.dpus) {
+                        edge(e.id, i, &mut mark, &mut out, &mut indeg);
+                    }
+                }
+            }
+            for k in span {
+                index.segs[k].readers.push(Entry {
+                    id: i,
+                    dpus: c.dpus.clone(),
+                });
+            }
+        }
+        for w in c.writes.as_slice() {
+            if w.start >= w.end {
+                continue;
+            }
+            let span = index.carve(w.start, w.end);
+            for k in span.clone() {
+                let seg = &index.segs[k];
+                for e in seg.writers.iter().chain(seg.readers.iter()) {
+                    if e.id != i && ranges_overlap(&e.dpus, &c.dpus) {
+                        edge(e.id, i, &mut mark, &mut out, &mut indeg);
+                    }
+                }
+            }
+            for k in span {
+                let seg = &mut index.segs[k];
+                // Entries fully covered on the DPU axis are shadowed:
+                // any later conflict with them also conflicts with this
+                // write, so their edges route through it (dominance).
+                seg.writers.retain(|e| !covers(&c.dpus, &e.dpus));
+                seg.readers.retain(|e| !covers(&c.dpus, &e.dpus));
+                seg.writers.push(Entry {
+                    id: i,
+                    dpus: c.dpus.clone(),
+                });
+            }
+        }
+    }
+    DepGraph { out, indeg }
 }
 
 // ---------------------------------------------------------------- timeline
@@ -251,11 +558,29 @@ pub enum Lane {
 /// Free-time bookkeeping of every lane: one bus, one host CPU, `n`
 /// ranks. Shared by [`CmdQueue::schedule`] and the multi-tenant
 /// [`super::Scheduler`], so both model the machine identically.
+///
+/// Rank free times are stored as **coalesced spans** `(first_rank,
+/// free_time)` covering `[0, n_ranks)` — a fleet-wide launch is one span
+/// however many ranks it spans, and tenant slices split only at their
+/// boundaries. `free_at` / `reserve` / `hold` on a rank lane are
+/// O(log S + K) in the S spans present and the K spans the lane touches,
+/// instead of O(ranks in lane) per-element scans. Values are identical
+/// to the per-element representation: `free_at` is the same
+/// `fold(0.0, f64::max)` over the same value multiset, and
+/// reserve/hold assign the same per-rank values.
 #[derive(Clone, Debug)]
 pub struct Timeline {
     bus: f64,
     host: f64,
-    ranks: Vec<f64>,
+    n_ranks: u32,
+    /// `spans[k]` covers ranks `[spans[k].0, spans[k+1].0)` (last span
+    /// runs to `n_ranks`) at free time `spans[k].1`. Invariants:
+    /// `spans[0].0 == 0`, starts strictly increase, adjacent span values
+    /// differ (coalesced).
+    spans: Vec<(u32, f64)>,
+    /// Splice scratch buffer, reused across updates so steady-state
+    /// reserve/hold allocate nothing.
+    scratch: Vec<(u32, f64)>,
 }
 
 impl Timeline {
@@ -263,8 +588,15 @@ impl Timeline {
         Timeline {
             bus: 0.0,
             host: 0.0,
-            ranks: vec![0.0; n_ranks.max(1)],
+            n_ranks: n_ranks.max(1) as u32,
+            spans: vec![(0, 0.0)],
+            scratch: Vec::new(),
         }
+    }
+
+    /// Clamp a lane's rank range to the machine.
+    fn clamp(&self, r: &Range<u32>) -> (u32, u32) {
+        (r.start.min(self.n_ranks), r.end.min(self.n_ranks))
     }
 
     /// Earliest instant the lane is free.
@@ -272,11 +604,60 @@ impl Timeline {
         match lane {
             Lane::Bus => self.bus,
             Lane::Host => self.host,
-            Lane::Ranks(r) => r
-                .clone()
-                .map(|i| self.ranks[i as usize])
-                .fold(0.0, f64::max),
+            Lane::Ranks(r) => {
+                let (lo, hi) = self.clamp(r);
+                let mut acc = 0.0f64;
+                if lo < hi {
+                    let mut k = self.spans.partition_point(|s| s.0 <= lo) - 1;
+                    while k < self.spans.len() && self.spans[k].0 < hi {
+                        acc = acc.max(self.spans[k].1);
+                        k += 1;
+                    }
+                }
+                acc
+            }
         }
+    }
+
+    /// Rewrite rank free times on `[lo, hi)` through `f`, preserving the
+    /// span invariants (split at the boundaries, coalesce equal
+    /// neighbors). Runs through the scratch buffer — no steady-state
+    /// allocation.
+    fn splice_ranks(&mut self, lo: u32, hi: u32, f: impl Fn(f64) -> f64) {
+        if lo >= hi {
+            return;
+        }
+        let mut out = std::mem::take(&mut self.scratch);
+        out.clear();
+        let push = |out: &mut Vec<(u32, f64)>, start: u32, v: f64| {
+            if let Some(&(_, lv)) = out.last() {
+                if lv == v {
+                    return;
+                }
+            }
+            out.push((start, v));
+        };
+        let n = self.spans.len();
+        for k in 0..n {
+            let (s_start, v) = self.spans[k];
+            let s_end = if k + 1 < n {
+                self.spans[k + 1].0
+            } else {
+                self.n_ranks
+            };
+            if s_start < lo.min(s_end) {
+                push(&mut out, s_start, v);
+            }
+            let i_lo = s_start.max(lo);
+            let i_hi = s_end.min(hi);
+            if i_lo < i_hi {
+                push(&mut out, i_lo, f(v));
+            }
+            if s_end > hi && s_start.max(hi) < s_end {
+                push(&mut out, s_start.max(hi), v);
+            }
+        }
+        self.scratch = std::mem::replace(&mut self.spans, out);
     }
 
     /// Occupy the lane for `secs`, starting no earlier than `ready`.
@@ -288,9 +669,8 @@ impl Timeline {
             Lane::Bus => self.bus = finish,
             Lane::Host => self.host = finish,
             Lane::Ranks(r) => {
-                for i in r.clone() {
-                    self.ranks[i as usize] = finish;
-                }
+                let (lo, hi) = self.clamp(r);
+                self.splice_ranks(lo, hi, |_| finish);
             }
         }
         (start, finish)
@@ -304,10 +684,8 @@ impl Timeline {
             Lane::Bus => self.bus = self.bus.max(until),
             Lane::Host => self.host = self.host.max(until),
             Lane::Ranks(r) => {
-                for i in r.clone() {
-                    let f = &mut self.ranks[i as usize];
-                    *f = f.max(until);
-                }
+                let (lo, hi) = self.clamp(r);
+                self.splice_ranks(lo, hi, |v| v.max(until));
             }
         }
     }
@@ -326,6 +704,37 @@ pub struct Schedule {
     /// Sum of all command seconds (what fully serialized execution,
     /// i.e. the four accounting buckets, charges).
     pub total_secs: f64,
+}
+
+/// Heap key of a dependency-ready command: ordered by feasible start,
+/// then by [`CmdId`] — the documented tie-break (lowest id wins on equal
+/// start, matching the reference scheduler's first-scan-wins).
+#[derive(Debug)]
+struct ReadyKey {
+    start: f64,
+    id: CmdId,
+}
+
+impl PartialEq for ReadyKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for ReadyKey {}
+
+impl PartialOrd for ReadyKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ReadyKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.start
+            .total_cmp(&other.start)
+            .then(self.id.cmp(&other.id))
+    }
 }
 
 /// Incremental accumulator of an open transfer group: members fold into
@@ -366,11 +775,11 @@ impl GroupAcc {
         self.secs += cmd.secs;
         self.dpu_lo = self.dpu_lo.min(cmd.dpus.start);
         self.dpu_hi = self.dpu_hi.max(cmd.dpus.end);
-        for r in &cmd.reads {
+        for r in cmd.reads.as_slice() {
             self.read_lo = self.read_lo.min(r.start);
             self.read_hi = self.read_hi.max(r.end);
         }
-        for w in &cmd.writes {
+        for w in cmd.writes.as_slice() {
             self.write_lo = self.write_lo.min(w.start);
             self.write_hi = self.write_hi.max(w.end);
         }
@@ -384,15 +793,22 @@ impl GroupAcc {
         }
     }
 
-    fn into_cmd(self) -> CmdMeta {
-        let bound = |lo: usize, hi: usize| -> Vec<Range<usize>> {
+    /// The merged command, or `None` for a group that folded nothing —
+    /// an empty `group_begin`/`group_end` pair is a no-op by
+    /// construction (it cannot emit a degenerate `usize::MAX`-bounded
+    /// command).
+    fn into_cmd(self) -> Option<CmdMeta> {
+        if !self.any {
+            return None;
+        }
+        let bound = |lo: usize, hi: usize| -> RegionSet {
             if lo < hi {
-                vec![lo..hi]
+                RegionSet::One(lo..hi)
             } else {
-                Vec::new()
+                RegionSet::Empty
             }
         };
-        CmdMeta {
+        Some(CmdMeta {
             kind: self.kind,
             secs: self.secs,
             dpus: self.dpu_lo..self.dpu_hi.max(self.dpu_lo),
@@ -400,7 +816,7 @@ impl GroupAcc {
             writes: bound(self.write_lo, self.write_hi),
             after: self.after,
             fence: false,
-        }
+        })
     }
 }
 
@@ -426,6 +842,14 @@ impl CmdQueue {
         self.cmds.is_empty()
     }
 
+    /// Clear recorded commands, keeping the command buffer's capacity —
+    /// `PimSet` pools the queue shell across `queue_begin`/`queue_sync`
+    /// sessions so steady-state recording stops churning the allocator.
+    pub fn reset(&mut self) {
+        assert!(self.group.is_none(), "reset with an open transfer group");
+        self.cmds.clear();
+    }
+
     /// Append a command; returns its id. Inside an open transfer group
     /// the command folds into the group accumulator and the returned id
     /// is the one the merged command will receive at
@@ -433,6 +857,11 @@ impl CmdQueue {
     /// folding a launch or merge would silently drop its lane and fence
     /// semantics, so that is a hard error.
     pub fn push(&mut self, cmd: CmdMeta) -> CmdId {
+        debug_assert!(
+            cmd.secs >= 0.0,
+            "modeled seconds must be non-negative (got {})",
+            cmd.secs
+        );
         if let Some(g) = self.group.as_mut() {
             assert!(
                 matches!(cmd.kind, CmdKind::Push | CmdKind::Pull),
@@ -478,8 +907,8 @@ impl CmdQueue {
     /// external `after` edges kept. An empty group records nothing.
     pub fn group_end(&mut self) {
         let g = self.group.take().expect("group_end without group_begin");
-        if g.any {
-            self.cmds.push(g.into_cmd());
+        if let Some(cmd) = g.into_cmd() {
+            self.cmds.push(cmd);
         }
     }
 
@@ -504,17 +933,93 @@ impl CmdQueue {
 
     /// Greedy list schedule over the dependency DAG and the resource
     /// lanes: repeatedly issue the dependency-ready command that can
-    /// start earliest (ties: enqueue order). Deterministic — everything
-    /// derives from modeled seconds, which are executor-independent.
+    /// start earliest (ties: lowest id — see the module invariants).
+    /// Deterministic — everything derives from modeled seconds, which
+    /// are executor-independent.
     ///
-    /// Complexity is O(n²) in recorded commands (pairwise dependency
-    /// inference plus the greedy pick loop). All shipped surfaces stay
-    /// in the low thousands per batch — transfer storms coalesce via
-    /// [`CmdQueue::group_begin`] — but a hand-rolled pipelined run that
-    /// records tens of thousands of ungrouped commands (e.g. BFS on
-    /// thousands of DPUs, whose per-level pulls need individual ids)
-    /// will pay a noticeably slow `sync`.
+    /// This is the indexed, event-driven fast path: dependency edges
+    /// come from [`infer_deps`] (a segment index over byte regions —
+    /// near-linear for bounded region palettes, instead of the O(n²)
+    /// all-pairs sweep), and the ready set lives in a min-heap keyed by
+    /// `(feasible start, id)` with lazy re-keying — a popped entry whose
+    /// lane moved while it waited is re-pushed at its recomputed start,
+    /// which is sound because lane free times only increase. Overall
+    /// O((n + E) log n) scheduling over E inferred edges. Output is
+    /// **bit-identical** to [`CmdQueue::schedule_reference`]; property
+    /// tests enforce it.
     pub fn schedule(&self, n_ranks: usize, dpus_per_rank: usize) -> Schedule {
+        let n = self.cmds.len();
+        let DepGraph { out, mut indeg } = infer_deps(&self.cmds);
+        let lanes: Vec<Option<Lane>> = (0..n)
+            .map(|i| self.lane_of(i, dpus_per_rank, n_ranks))
+            .collect();
+        let mut tl = Timeline::new(n_ranks);
+        let mut finish = vec![0.0f64; n];
+        // Max finish over each command's dependencies; final once its
+        // indegree hits zero (only then does it enter the heap).
+        let mut dep_ready = vec![0.0f64; n];
+        let mut heap: BinaryHeap<Reverse<ReadyKey>> = BinaryHeap::with_capacity(n.min(1 << 16));
+        for (i, lane) in lanes.iter().enumerate() {
+            if indeg[i] == 0 {
+                let start = match lane {
+                    Some(l) => tl.free_at(l),
+                    None => 0.0,
+                };
+                heap.push(Reverse(ReadyKey { start, id: i }));
+            }
+        }
+        let mut total = 0.0f64;
+        let mut makespan = 0.0f64;
+        let mut done = 0usize;
+        while let Some(Reverse(ReadyKey { start, id: i })) = heap.pop() {
+            let ready = dep_ready[i];
+            // Lazy re-key: lane free times never decrease, so a heap key
+            // never overestimates — if the recomputed start grew past the
+            // stored key, this entry is stale; re-queue it at its true
+            // start. When the key is accurate it is the minimum true
+            // (start, id) over all ready commands, exactly the reference
+            // scheduler's pick.
+            let cur = match &lanes[i] {
+                Some(l) => ready.max(tl.free_at(l)),
+                None => ready,
+            };
+            if cur > start {
+                heap.push(Reverse(ReadyKey { start: cur, id: i }));
+                continue;
+            }
+            let f = match &lanes[i] {
+                Some(lane) => tl.reserve(lane, ready, self.cmds[i].secs).1,
+                None => ready + self.cmds[i].secs,
+            };
+            finish[i] = f;
+            total += self.cmds[i].secs;
+            makespan = makespan.max(f);
+            done += 1;
+            for &k in &out[i] {
+                dep_ready[k] = dep_ready[k].max(f);
+                indeg[k] -= 1;
+                if indeg[k] == 0 {
+                    let start = match &lanes[k] {
+                        Some(l) => dep_ready[k].max(tl.free_at(l)),
+                        None => dep_ready[k],
+                    };
+                    heap.push(Reverse(ReadyKey { start, id: k }));
+                }
+            }
+        }
+        debug_assert_eq!(done, n, "dependency edges all point backwards");
+        Schedule {
+            finish,
+            makespan,
+            total_secs: total,
+        }
+    }
+
+    /// The retained naive scheduler — the executable spec the optimized
+    /// [`CmdQueue::schedule`] must match bitwise. O(n²) pairwise
+    /// dependency sweep plus an O(n²) greedy ready-scan; kept `pub` so
+    /// property tests and the hot-path benches can compare against it.
+    pub fn schedule_reference(&self, n_ranks: usize, dpus_per_rank: usize) -> Schedule {
         let n = self.cmds.len();
         let mut deps: Vec<Vec<CmdId>> = vec![Vec::new(); n];
         for i in 0..n {
@@ -559,6 +1064,8 @@ impl CmdQueue {
                 };
                 let better = match best {
                     None => true,
+                    // strict `<`: on equal starts the first-scanned
+                    // (lowest) id wins — the documented tie-break.
                     Some((s, _)) => start < s,
                 };
                 if better {
@@ -579,7 +1086,11 @@ impl CmdQueue {
             total += self.cmds[i].secs;
             makespan = makespan.max(f);
         }
-        Schedule { finish, makespan, total_secs: total }
+        Schedule {
+            finish,
+            makespan,
+            total_secs: total,
+        }
     }
 
     /// Seconds the schedule hides relative to fully serialized
@@ -604,6 +1115,19 @@ mod tests {
         q.schedule(RANKS, PER)
     }
 
+    /// Optimized and reference schedulers must agree bitwise on every
+    /// output field.
+    fn assert_schedules_match(q: &CmdQueue, n_ranks: usize, per: usize) {
+        let a = q.schedule(n_ranks, per);
+        let b = q.schedule_reference(n_ranks, per);
+        assert_eq!(a.finish.len(), b.finish.len());
+        for (i, (x, y)) in a.finish.iter().zip(&b.finish).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "finish[{i}]: {x} vs {y}");
+        }
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.total_secs.to_bits(), b.total_secs.to_bits());
+    }
+
     #[test]
     fn single_command_is_the_degenerate_timeline() {
         let mut q = CmdQueue::new();
@@ -612,6 +1136,7 @@ mod tests {
         assert_eq!(s.makespan.to_bits(), 0.5f64.to_bits());
         assert_eq!(s.total_secs.to_bits(), s.makespan.to_bits());
         assert_eq!(q.hidden_secs(RANKS, PER), 0.0);
+        assert_schedules_match(&q, RANKS, PER);
     }
 
     #[test]
@@ -629,6 +1154,7 @@ mod tests {
         let s = sched(&q);
         assert_eq!(s.makespan.to_bits(), s.total_secs.to_bits());
         assert_eq!(q.hidden_secs(RANKS, PER), 0.0);
+        assert_schedules_match(&q, RANKS, PER);
     }
 
     #[test]
@@ -644,6 +1170,7 @@ mod tests {
         assert!((s.makespan - 1.2).abs() < 1e-12, "makespan {}", s.makespan);
         let hidden = q.hidden_secs(RANKS, PER);
         assert!((hidden - 0.3).abs() < 1e-12, "hidden {hidden}");
+        assert_schedules_match(&q, RANKS, PER);
     }
 
     #[test]
@@ -656,6 +1183,7 @@ mod tests {
         q.push(CmdMeta::push(0..8, 0..1024, 0.3, vec![]));
         let s = sched(&q);
         assert_eq!(s.makespan.to_bits(), s.total_secs.to_bits());
+        assert_schedules_match(&q, RANKS, PER);
     }
 
     #[test]
@@ -665,6 +1193,12 @@ mod tests {
         assert!(!depends(&a, &b), "same bytes on disjoint DPUs");
         let c = CmdMeta::pull(3..8, 0..1024, 0.1, vec![]);
         assert!(depends(&a, &c), "overlapping DPUs + bytes conflict");
+        // the indexed inference agrees with the pairwise spec
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::push(0..4, 0..1024, 0.1, vec![]));
+        q.push(CmdMeta::pull(4..8, 0..1024, 0.1, vec![]));
+        q.push(CmdMeta::pull(3..8, 0..1024, 0.1, vec![]));
+        assert_schedules_match(&q, RANKS, PER);
     }
 
     #[test]
@@ -677,12 +1211,17 @@ mod tests {
             1.0,
         ));
         let s = sched(&q);
-        assert!((s.makespan - 1.0).abs() < 1e-12, "disjoint ranks run concurrently");
+        assert!(
+            (s.makespan - 1.0).abs() < 1e-12,
+            "disjoint ranks run concurrently"
+        );
         // same span: serialized on the rank lane even without data deps
         let mut q2 = CmdQueue::new();
         q2.push(CmdMeta::launch(0..PER, Access::new().write(0..8), 1.0));
         q2.push(CmdMeta::launch(0..PER, Access::new().write(8..16), 1.0));
         assert!((sched(&q2).makespan - 2.0).abs() < 1e-12);
+        assert_schedules_match(&q, RANKS, PER);
+        assert_schedules_match(&q2, RANKS, PER);
     }
 
     #[test]
@@ -696,6 +1235,7 @@ mod tests {
         // without the fence the launch (no data deps) would start at 0
         // and the makespan would be 1.0; the fence delays it to 0.25.
         assert!((s.makespan - 1.25).abs() < 1e-12, "makespan {}", s.makespan);
+        assert_schedules_match(&q, RANKS, PER);
     }
 
     #[test]
@@ -714,10 +1254,16 @@ mod tests {
         // dep'd merge: pull [0,0.4]; merge on host [0.4,0.9]; the push
         // (WAR on the pull's region) rides the bus [0.4,0.8] under it.
         let free = sched(&build(false));
-        assert!((free.makespan - 0.9).abs() < 1e-12, "makespan {}", free.makespan);
+        assert!(
+            (free.makespan - 0.9).abs() < 1e-12,
+            "makespan {}",
+            free.makespan
+        );
         // fence merge: strictly serial.
         let fenced = sched(&build(true));
         assert_eq!(fenced.makespan.to_bits(), fenced.total_secs.to_bits());
+        assert_schedules_match(&build(false), RANKS, PER);
+        assert_schedules_match(&build(true), RANKS, PER);
     }
 
     #[test]
@@ -729,7 +1275,11 @@ mod tests {
         // explicit edge its region (disjoint) would let it start at 0.
         q.push(CmdMeta::push(0..8, 4096..5120, 0.1, vec![merge]));
         let s = sched(&q);
-        assert!((s.finish[2] - 1.0).abs() < 1e-12, "push waits for the merge");
+        assert!(
+            (s.finish[2] - 1.0).abs() < 1e-12,
+            "push waits for the merge"
+        );
+        assert_schedules_match(&q, RANKS, PER);
     }
 
     #[test]
@@ -750,7 +1300,7 @@ mod tests {
         let g = &q.cmds[1];
         assert_eq!(g.kind, CmdKind::Push);
         assert!((g.secs - 0.1).abs() < 1e-12);
-        assert_eq!(g.writes, vec![0..640]);
+        assert_eq!(g.writes, RegionSet::One(0..640));
         assert_eq!(g.after, vec![anchor]);
         // a single-member group stays as-is
         let mut q2 = CmdQueue::new();
@@ -758,6 +1308,30 @@ mod tests {
         q2.push(CmdMeta::push(0..1, 0..64, 0.01, vec![]));
         q2.group_end();
         assert_eq!(q2.len(), 1);
+    }
+
+    /// Satellite: an empty `group_begin`/`group_end` pair is a no-op —
+    /// it records no command at all (not even a degenerate one).
+    #[test]
+    fn empty_group_is_a_noop() {
+        let mut q = CmdQueue::new();
+        let anchor = q.push(CmdMeta::push(0..1, 0..64, 0.01, vec![]));
+        q.group_begin();
+        assert_eq!(
+            q.last_id(),
+            Some(anchor),
+            "an empty open group exposes the previous id"
+        );
+        q.group_end();
+        assert_eq!(q.len(), 1, "empty group records nothing");
+        assert_eq!(sched(&q).finish.len(), 1);
+        // fully empty queue + empty group
+        let mut q2 = CmdQueue::new();
+        q2.group_begin();
+        q2.group_end();
+        assert!(q2.is_empty());
+        assert_eq!(q2.last_id(), None);
+        assert_eq!(q2.hidden_secs(RANKS, PER), 0.0);
     }
 
     /// Folding a launch into a bus group would drop its rank-lane and
@@ -768,6 +1342,20 @@ mod tests {
         let mut q = CmdQueue::new();
         q.group_begin();
         q.push(CmdMeta::launch(0..4, Access::new(), 0.1));
+    }
+
+    #[test]
+    fn reset_clears_commands_and_reuses_the_shell() {
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::push(0..8, 0..1024, 0.5, vec![]));
+        q.push(CmdMeta::fence());
+        q.reset();
+        assert!(q.is_empty());
+        assert_eq!(q.last_id(), None);
+        // the shell is fully usable again
+        q.push(CmdMeta::push(0..8, 0..1024, 0.25, vec![]));
+        let s = sched(&q);
+        assert_eq!(s.makespan.to_bits(), 0.25f64.to_bits());
     }
 
     #[test]
@@ -784,16 +1372,84 @@ mod tests {
         assert_eq!(tl.free_at(&Lane::Bus), 0.0);
     }
 
+    /// The span representation splits at lane boundaries and coalesces
+    /// equal neighbors back into single spans.
+    #[test]
+    fn timeline_spans_split_and_coalesce() {
+        let mut tl = Timeline::new(8);
+        assert_eq!(tl.spans.len(), 1);
+        tl.reserve(&Lane::Ranks(2..5), 0.0, 1.0);
+        assert_eq!(tl.spans.len(), 3, "split into [0,2) [2,5) [5,8)");
+        assert_eq!(tl.free_at(&Lane::Ranks(0..2)), 0.0);
+        assert_eq!(tl.free_at(&Lane::Ranks(2..5)), 1.0);
+        assert_eq!(tl.free_at(&Lane::Ranks(4..6)), 1.0, "max over mixed spans");
+        assert_eq!(tl.free_at(&Lane::Ranks(5..8)), 0.0);
+        // partial-overlap hold splits again and maxes only the overlap
+        tl.hold(&Lane::Ranks(4..7), 2.0);
+        assert_eq!(tl.free_at(&Lane::Ranks(2..4)), 1.0);
+        assert_eq!(tl.free_at(&Lane::Ranks(4..5)), 2.0);
+        assert_eq!(tl.free_at(&Lane::Ranks(6..7)), 2.0);
+        assert_eq!(tl.free_at(&Lane::Ranks(7..8)), 0.0);
+        // a fleet-wide reserve levels everything back to one span
+        tl.reserve(&Lane::Ranks(0..8), 0.0, 0.0);
+        assert_eq!(tl.spans.len(), 1, "uniform free time coalesces");
+        assert_eq!(tl.free_at(&Lane::Ranks(0..8)), 2.0);
+        // out-of-machine lane ranges clamp instead of panicking
+        assert_eq!(tl.free_at(&Lane::Ranks(6..32)), 2.0);
+        tl.hold(&Lane::Ranks(0..32), 3.0);
+        assert_eq!(tl.free_at(&Lane::Ranks(0..8)), 3.0);
+    }
+
+    /// Satellite: the documented tie-break — equal feasible starts issue
+    /// in enqueue order (lowest id first) — on both schedulers, bitwise.
+    #[test]
+    fn equal_start_ties_issue_in_enqueue_order() {
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::push(0..4, 0..64, 0.25, vec![]));
+        q.push(CmdMeta::push(4..8, 1024..1088, 0.75, vec![]));
+        let s = sched(&q);
+        // both are bus commands ready at t=0: id 0 must take the bus
+        // first, so finish[0] = 0.25 and finish[1] = 1.0 exactly.
+        assert_eq!(s.finish[0].to_bits(), 0.25f64.to_bits());
+        assert_eq!(s.finish[1].to_bits(), 1.0f64.to_bits());
+        assert_schedules_match(&q, RANKS, PER);
+    }
+
+    /// The complement of the tie-break: a strictly earlier feasible
+    /// start beats enqueue order (greedy start-time order).
+    #[test]
+    fn earliest_start_beats_enqueue_order() {
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::push(0..8, 0..1024, 0.2, vec![])); // id 0
+        q.push(CmdMeta::launch(0..8, Access::new().read(0..1024), 1.0)); // id 1
+        q.push(CmdMeta::push(0..8, 0..1024, 0.3, vec![])); // id 2: WAR-blocked
+        q.push(CmdMeta::push(0..8, 4096..4160, 0.1, vec![])); // id 3: independent
+        let s = sched(&q);
+        // id 3 rides the bus right after push 0 ([0.2, 0.3]) while the
+        // WAR-blocked id 2 waits out the launch (finishes at 1.5).
+        assert!((s.finish[3] - 0.3).abs() < 1e-12, "finish[3] {}", s.finish[3]);
+        assert!(s.finish[3] < s.finish[2]);
+        assert!((s.makespan - 1.5).abs() < 1e-12, "makespan {}", s.makespan);
+        assert_schedules_match(&q, RANKS, PER);
+    }
+
     #[test]
     fn schedule_is_deterministic() {
         let build = || {
             let mut q = CmdQueue::new();
             for i in 0..20usize {
                 match i % 4 {
-                    0 => q.push(CmdMeta::push(0..8, (i * 512)..(i * 512 + 256), 0.01, vec![])),
+                    0 => q.push(CmdMeta::push(
+                        0..8,
+                        (i * 512)..(i * 512 + 256),
+                        0.01,
+                        vec![],
+                    )),
                     1 => q.push(CmdMeta::launch(
                         0..8,
-                        Access::new().read((i - 1) * 512..(i - 1) * 512 + 256).write(65536..65544),
+                        Access::new()
+                            .read((i - 1) * 512..(i - 1) * 512 + 256)
+                            .write(65536..65544),
                         0.05,
                     )),
                     2 => q.push(CmdMeta::pull(0..8, 65536..65544, 0.02, vec![])),
@@ -809,5 +1465,56 @@ mod tests {
             assert_eq!(x.to_bits(), y.to_bits());
         }
         assert!(a.makespan <= a.total_secs + 1e-12);
+        assert_schedules_match(&build(), RANKS, PER);
+    }
+
+    /// A deliberately messy mixed queue — partial overlaps, fences,
+    /// groups, empty footprints, `after` edges — schedules bitwise
+    /// identically on the optimized and reference paths.
+    #[test]
+    fn optimized_matches_reference_on_a_messy_queue() {
+        let mut q = CmdQueue::new();
+        for i in 0..60usize {
+            match i % 6 {
+                0 => {
+                    q.push(CmdMeta::push(
+                        i % 16..i % 16 + 4,
+                        (i % 5) * 512..(i % 5) * 512 + 256,
+                        0.01 + i as f64 * 1e-3,
+                        vec![],
+                    ));
+                }
+                1 => {
+                    q.push(CmdMeta::launch(
+                        0..8,
+                        Access::new().read(0..1024).write(4096..4200),
+                        0.05,
+                    ));
+                }
+                2 => {
+                    q.push(CmdMeta::pull(4..12, 4096..4200, 0.02, vec![]));
+                }
+                3 => {
+                    let j = q.last_id().expect("commands enqueued");
+                    q.push(CmdMeta::host_merge_after(0.03, vec![j]));
+                }
+                4 if i % 12 == 4 => {
+                    q.push(CmdMeta::fence());
+                }
+                4 => {
+                    q.push(CmdMeta::launch(8..16, Access::new(), 0.04));
+                }
+                _ => {
+                    q.group_begin();
+                    for k in 0..5usize {
+                        q.push(CmdMeta::push(k..k + 1, k * 64..k * 64 + 64, 0.001, vec![]));
+                    }
+                    q.group_end();
+                }
+            }
+        }
+        assert_schedules_match(&q, 4, 4);
+        assert_schedules_match(&q, 2, 8);
+        assert_schedules_match(&q, 32, 64);
     }
 }

@@ -69,6 +69,44 @@ impl Bencher {
         self.samples.last().unwrap()
     }
 
+    /// Render the collected samples as a JSON array (machine-readable
+    /// companion to [`Bencher::report`]; the hot-path bench embeds it in
+    /// `results/BENCH_HOTPATH.json` — schema documented in
+    /// EXPERIMENTS.md). Names are plain ASCII identifiers, so string
+    /// encoding is direct quoting, matching the repro CLI's writers.
+    pub fn json_entries(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, s) in self.samples.iter().enumerate() {
+            let med = median(&s.secs);
+            let thr = s
+                .items
+                .map(|n| format!("{:e}", n / med))
+                .unwrap_or_else(|| "null".to_string());
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"median_secs\": {:e}, \"mean_secs\": {:e}, \
+                 \"stddev_secs\": {:e}, \"items_per_sec\": {}}}{}\n",
+                s.name,
+                med,
+                mean(&s.secs),
+                stddev(&s.secs),
+                thr,
+                if i + 1 < self.samples.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]");
+        out
+    }
+
+    /// Median seconds of the named sample (panics if absent) — for
+    /// derived cross-sample figures like speedup ratios.
+    pub fn median_of(&self, name: &str) -> f64 {
+        self.samples
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("no bench sample named '{name}'"))
+            .median()
+    }
+
     /// Print the report table.
     pub fn report(&self, title: &str) {
         println!("\n== bench: {title} ==");
@@ -123,6 +161,29 @@ mod tests {
         b.bench("noop", || 1 + 1);
         assert_eq!(b.samples.len(), 1);
         assert!(!b.samples[0].secs.is_empty());
+    }
+
+    #[test]
+    fn json_entries_shape() {
+        let mut b = Bencher::new();
+        b.bench("alpha", || 1 + 1);
+        b.bench_items("beta", Some(1000.0), &mut || 2 + 2);
+        let j = b.json_entries();
+        assert!(j.starts_with("[\n"), "array form: {j}");
+        assert!(j.ends_with(']'));
+        assert!(j.contains("\"name\": \"alpha\""));
+        assert!(j.contains("\"median_secs\": "));
+        assert!(j.contains("\"items_per_sec\": null"), "no items -> null");
+        assert!(j.contains("\"name\": \"beta\""));
+        // exactly one separating comma between the two entries
+        assert_eq!(j.matches("},\n").count(), 1);
+        assert!((b.median_of("alpha") - b.samples[0].median()).abs() < 1e-18);
+    }
+
+    #[test]
+    #[should_panic(expected = "no bench sample named")]
+    fn median_of_unknown_panics() {
+        Bencher::new().median_of("nope");
     }
 
     #[test]

@@ -180,6 +180,114 @@ fn prop_queue_fully_dependent_chain_has_zero_derived_overlap() {
     });
 }
 
+/// The tentpole contract of the indexed scheduler: on arbitrary command
+/// soups — random byte regions and DPU ranges (empty and fleet-wide
+/// included), fences, transfer groups, explicit `after` edges — the
+/// optimized `schedule` and the retained naive `schedule_reference`
+/// produce **bitwise-equal** finish vectors, makespans, and second
+/// totals. Sizes run 10–2,000 commands (the reference is O(n²), so the
+/// largest soups appear on a few cases only).
+#[test]
+fn prop_queue_indexed_schedule_matches_reference_bitwise() {
+    props("indexed schedule == reference schedule", 60, |g: &mut Gen| {
+        let n = if g.case % 12 == 11 {
+            g.usize_in(500..2001)
+        } else {
+            g.usize_in(10..201)
+        };
+        // bounded slot palette: serving reuses buffers, and the naive
+        // reference must stay affordable at the 2k sizes
+        let n_slots = g.usize_in(1..13);
+        let slot = |g: &mut Gen, n_slots: usize| -> std::ops::Range<usize> {
+            let s = g.usize_in(0..n_slots);
+            let len = [64usize, 256, 512][g.usize_in(0..3)];
+            s * 512..s * 512 + len
+        };
+        let n_dpus = [8usize, 16, 64, 128][g.usize_in(0..4)];
+        let mut q = CmdQueue::new();
+        while q.len() < n {
+            let mut lo = g.usize_in(0..n_dpus);
+            let mut hi = g.usize_in(lo..n_dpus + 1);
+            if g.usize_in(0..10) == 0 {
+                (lo, hi) = (0, n_dpus); // fleet-wide
+            }
+            if g.usize_in(0..20) == 0 {
+                hi = lo; // empty DPU range
+            }
+            let dpus = lo..hi;
+            let secs = [0.0, g.f64() * 0.1, 0.01][g.usize_in(0..3)];
+            let after = if g.usize_in(0..10) < 3 && !q.is_empty() {
+                (0..g.usize_in(1..4)).map(|_| g.usize_in(0..q.len())).collect()
+            } else {
+                vec![]
+            };
+            match g.usize_in(0..20) {
+                0..=5 => {
+                    let mut r = slot(g, n_slots);
+                    if g.usize_in(0..25) == 0 {
+                        r.end = r.start; // empty byte region
+                    }
+                    q.push(CmdMeta::push(dpus, r, secs, after));
+                }
+                6..=10 => {
+                    let r = slot(g, n_slots);
+                    q.push(CmdMeta::pull(dpus, r, secs, after));
+                }
+                11..=14 => {
+                    let mut acc = Access::new();
+                    for _ in 0..g.usize_in(0..4) {
+                        acc = acc.read(slot(g, n_slots));
+                    }
+                    for _ in 0..g.usize_in(0..4) {
+                        acc = acc.write(slot(g, n_slots));
+                    }
+                    q.push(CmdMeta::launch(dpus, acc, secs));
+                }
+                15..=16 => {
+                    if g.bool() {
+                        q.push(CmdMeta::host_merge(secs));
+                    } else {
+                        q.push(CmdMeta::host_merge_after(secs, after));
+                    }
+                }
+                17 => {
+                    q.push(CmdMeta::fence());
+                }
+                18 => {
+                    // grouped transfer storm (collapses to one bus cmd)
+                    q.group_begin();
+                    for _ in 0..g.usize_in(2..7) {
+                        let r = slot(g, n_slots);
+                        q.push(CmdMeta::push(lo..n_dpus, r, 1e-6, vec![]));
+                    }
+                    q.group_end();
+                }
+                _ => {
+                    // bounding-box push spanning two slots
+                    let a = slot(g, n_slots);
+                    let b = slot(g, n_slots);
+                    let bb = a.start.min(b.start)..a.end.max(b.end);
+                    q.push(CmdMeta::push(dpus, bb, secs, after));
+                }
+            }
+        }
+        let n_ranks = [1usize, 2, 4, 32][g.usize_in(0..4)];
+        let per = [1usize, 4, 64][g.usize_in(0..3)];
+        let fast = q.schedule(n_ranks, per);
+        let slow = q.schedule_reference(n_ranks, per);
+        assert_eq!(fast.finish.len(), slow.finish.len());
+        for (i, (x, y)) in fast.finish.iter().zip(&slow.finish).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "finish[{i}]: {x} vs {y} (n={n}, ranks={n_ranks}, per={per})"
+            );
+        }
+        assert_eq!(fast.makespan.to_bits(), slow.makespan.to_bits());
+        assert_eq!(fast.total_secs.to_bits(), slow.total_secs.to_bits());
+    });
+}
+
 // -------------------------------------------------------- transfer engine
 
 #[test]
