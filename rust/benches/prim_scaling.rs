@@ -20,6 +20,7 @@ fn main() {
             seed: 42,
             sys: SystemConfig::p21_rank(),
             exec: Default::default(),
+            trace: None,
         };
         let mut items = 0f64;
         b.bench_items(&format!("{name} @16dpu"), Some(1.0), &mut || {

@@ -30,6 +30,7 @@ fn main() {
             seed: 100 + f as u64,
             sys: sys.clone(),
             exec: Default::default(),
+            trace: None,
         };
         let r = run_hst(HstKind::Short, "HST-S", &rc, 256);
         assert!(r.verified, "frame {f} failed verification");

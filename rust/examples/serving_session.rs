@@ -21,6 +21,7 @@ fn main() {
         scale: 0.01,
         seed: 42,
         exec: ExecChoice::Auto,
+        trace: None,
     };
     let requests = 8;
 

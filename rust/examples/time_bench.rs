@@ -12,6 +12,7 @@ fn main() {
         seed: 42,
         sys: SystemConfig::p21_rank(),
         exec: Default::default(),
+        trace: None,
     };
     let t0 = std::time::Instant::now();
     let r = b.run(&rc);

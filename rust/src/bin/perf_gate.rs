@@ -2,13 +2,16 @@
 //! main-branch baseline and fail loudly on regression.
 //!
 //! Usage: `perf_gate <prev_dir> <cur_dir>` — both directories may hold
-//! `BENCH_PRIM.json`, `BENCH_OVERLAP.json`, `BENCH_HOTPATH.json` (the
-//! repro CLI / hot-path bench writers). Two rule families:
+//! `BENCH_PRIM.json`, `BENCH_OVERLAP.json`, `BENCH_SCHED.json`,
+//! `BENCH_HOTPATH.json` (the repro CLI / hot-path bench writers). Two
+//! rule families:
 //!
-//! * **Modeled seconds** (`BENCH_PRIM`, `BENCH_OVERLAP`): deterministic
-//!   outputs of the timing model, so any drift beyond float-noise
-//!   tolerance (default 1e-6 relative, either direction) fails — the
-//!   gate doubles as a model-change detector.
+//! * **Modeled seconds** (`BENCH_PRIM`, `BENCH_OVERLAP`, `BENCH_SCHED`):
+//!   deterministic outputs of the timing model, so any drift beyond
+//!   float-noise tolerance (default 1e-6 relative, either direction)
+//!   fails — the gate doubles as a model-change detector. For `SCHED`
+//!   that covers the multi-tenant scheduler's makespan, occupancy, and
+//!   per-tenant QoS percentiles.
 //! * **Wallclock** (`BENCH_HOTPATH`): noisy CI runners, so only a
 //!   slowdown past `PERF_GATE_RATIO` (default 1.6×) on an entry's
 //!   `median_secs` — or a speedup in `derived.*` falling below
@@ -22,186 +25,8 @@
 //! workflow maps the `perf-override` PR label onto it) to report
 //! violations without failing — for intentional model changes.
 
+use prim_pim::util::json::{parse_json, Value};
 use std::fmt::Write as _;
-
-// ------------------------------------------------------------ mini JSON
-
-/// Minimal JSON value — enough to parse this repo's own bench writers
-/// (vendored crate set has no serde).
-#[derive(Clone, Debug, PartialEq)]
-pub enum Value {
-    Null,
-    Bool(bool),
-    Num(f64),
-    Str(String),
-    Arr(Vec<Value>),
-    Obj(Vec<(String, Value)>),
-}
-
-impl Value {
-    fn get(&self, key: &str) -> Option<&Value> {
-        match self {
-            Value::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
-            _ => None,
-        }
-    }
-
-    fn as_str(&self) -> Option<&str> {
-        match self {
-            Value::Str(s) => Some(s),
-            _ => None,
-        }
-    }
-}
-
-struct Parser<'a> {
-    b: &'a [u8],
-    i: usize,
-}
-
-impl Parser<'_> {
-    fn ws(&mut self) {
-        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
-            self.i += 1;
-        }
-    }
-
-    fn peek(&mut self) -> Result<u8, String> {
-        self.ws();
-        self.b
-            .get(self.i)
-            .copied()
-            .ok_or_else(|| "unexpected end of JSON".into())
-    }
-
-    fn eat(&mut self, c: u8) -> Result<(), String> {
-        if self.peek()? == c {
-            self.i += 1;
-            Ok(())
-        } else {
-            Err(format!(
-                "expected '{}' at byte {}, found '{}'",
-                c as char, self.i, self.b[self.i] as char
-            ))
-        }
-    }
-
-    fn value(&mut self) -> Result<Value, String> {
-        match self.peek()? {
-            b'{' => self.object(),
-            b'[' => self.array(),
-            b'"' => Ok(Value::Str(self.string()?)),
-            b't' => self.lit("true", Value::Bool(true)),
-            b'f' => self.lit("false", Value::Bool(false)),
-            b'n' => self.lit("null", Value::Null),
-            _ => self.number(),
-        }
-    }
-
-    fn lit(&mut self, word: &str, v: Value) -> Result<Value, String> {
-        if self.b[self.i..].starts_with(word.as_bytes()) {
-            self.i += word.len();
-            Ok(v)
-        } else {
-            Err(format!("bad literal at byte {}", self.i))
-        }
-    }
-
-    fn string(&mut self) -> Result<String, String> {
-        self.eat(b'"')?;
-        let mut s = String::new();
-        loop {
-            match self.b.get(self.i).copied().ok_or("unterminated string")? {
-                b'"' => {
-                    self.i += 1;
-                    return Ok(s);
-                }
-                b'\\' => {
-                    // our writers never escape, but pass basic ones through
-                    self.i += 1;
-                    let c = self.b.get(self.i).copied().ok_or("bad escape")?;
-                    s.push(match c {
-                        b'n' => '\n',
-                        b't' => '\t',
-                        other => other as char,
-                    });
-                    self.i += 1;
-                }
-                c => {
-                    s.push(c as char);
-                    self.i += 1;
-                }
-            }
-        }
-    }
-
-    fn number(&mut self) -> Result<Value, String> {
-        self.ws();
-        let start = self.i;
-        while self.i < self.b.len()
-            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
-        {
-            self.i += 1;
-        }
-        let s = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
-        s.parse::<f64>()
-            .map(Value::Num)
-            .map_err(|_| format!("bad number '{s}' at byte {start}"))
-    }
-
-    fn array(&mut self) -> Result<Value, String> {
-        self.eat(b'[')?;
-        let mut out = Vec::new();
-        if self.peek()? == b']' {
-            self.i += 1;
-            return Ok(Value::Arr(out));
-        }
-        loop {
-            out.push(self.value()?);
-            match self.peek()? {
-                b',' => self.i += 1,
-                b']' => {
-                    self.i += 1;
-                    return Ok(Value::Arr(out));
-                }
-                c => return Err(format!("expected ',' or ']', found '{}'", c as char)),
-            }
-        }
-    }
-
-    fn object(&mut self) -> Result<Value, String> {
-        self.eat(b'{')?;
-        let mut out = Vec::new();
-        if self.peek()? == b'}' {
-            self.i += 1;
-            return Ok(Value::Obj(out));
-        }
-        loop {
-            let k = self.string()?;
-            self.eat(b':')?;
-            let v = self.value()?;
-            out.push((k, v));
-            match self.peek()? {
-                b',' => self.i += 1,
-                b'}' => {
-                    self.i += 1;
-                    return Ok(Value::Obj(out));
-                }
-                c => return Err(format!("expected ',' or '}}', found '{}'", c as char)),
-            }
-        }
-    }
-}
-
-pub fn parse_json(s: &str) -> Result<Value, String> {
-    let mut p = Parser { b: s.as_bytes(), i: 0 };
-    let v = p.value()?;
-    p.ws();
-    if p.i != p.b.len() {
-        return Err(format!("trailing garbage at byte {}", p.i));
-    }
-    Ok(v)
-}
 
 // ------------------------------------------------------ metric flattening
 
@@ -275,7 +100,7 @@ impl Default for GateCfg {
     }
 }
 
-/// Compare one modeled-seconds file (PRIM / OVERLAP): every metric
+/// Compare one modeled-seconds file (PRIM / OVERLAP / SCHED): every metric
 /// present in both runs must match within `modeled_rtol`; metrics that
 /// vanished from the current run are violations too (a bench was
 /// dropped).
@@ -364,7 +189,7 @@ pub fn run_gate(prev_dir: &std::path::Path, cur_dir: &std::path::Path, cfg: &Gat
     let mut violations = Vec::new();
     let mut notes = Vec::new();
     let read = |dir: &std::path::Path, name: &str| std::fs::read_to_string(dir.join(name)).ok();
-    for name in ["BENCH_PRIM.json", "BENCH_OVERLAP.json"] {
+    for name in ["BENCH_PRIM.json", "BENCH_OVERLAP.json", "BENCH_SCHED.json"] {
         match (read(prev_dir, name), read(cur_dir, name)) {
             (Some(p), Some(c)) => violations.extend(check_modeled(name, &p, &c, cfg)),
             (None, Some(_)) => notes.push(format!("{name}: no baseline — skipped (first run?)")),
@@ -449,6 +274,21 @@ mod tests {
   {"name": "GEMV", "verified": true, "dpu_secs": 3e-3, "total_secs": 4e-3}
 ]"#;
 
+    /// The `SchedReport::to_json` shape: top-level object, tenants keyed
+    /// by array index under `flatten` (they carry no `"name"` field).
+    fn sched(makespan: f64, p95: f64) -> String {
+        format!(
+            "{{\"policy\": \"wrr\", \"seed\": 42, \"pipelined\": true, \
+             \"makespan_secs\": {makespan:e}, \"occupancy\": 7.5e-1, \"total_ranks\": 4,\n \
+             \"tenants\": [\n  \
+             {{\"tenant\": 0, \"bench\": \"GEMV\", \"ranks\": 2, \"dpus\": 128, \
+             \"weight\": 2, \"rate_rps\": 1e2, \"requests\": 50, \
+             \"throughput_rps\": 9.5e1, \"p50_secs\": 1e-3, \"p95_secs\": {p95:e}, \
+             \"p99_secs\": 3e-3, \"max_secs\": 4e-3, \"utilization\": 6e-1, \
+             \"cold_secs\": 1e-2, \"warm_secs\": 5e-3, \"verified\": true}}\n ]}}\n"
+        )
+    }
+
     fn hotpath(med_10k: f64, speedup: f64) -> String {
         format!(
             "{{\"schema\": \"bench_hotpath/v1\", \"quick\": true, \"host_cores\": 8,\n  \
@@ -493,6 +333,26 @@ mod tests {
         // a disappeared bench is a violation
         let dropped = r#"[{"name": "VA", "verified": true, "dpu_secs": 1.5e-3, "total_secs": 2.5e-3}]"#;
         assert!(!check_modeled("p", PRIM, dropped, &cfg).is_empty());
+    }
+
+    /// Satellite pin: the scheduler bench file rides the same modeled
+    /// rules — makespan or QoS-percentile drift in either direction
+    /// fails, bit-identical reruns pass.
+    #[test]
+    fn sched_report_drift_is_a_modeled_violation() {
+        let cfg = GateCfg::default();
+        let base = sched(2.5e-1, 2e-3);
+        assert!(check_modeled("s", &base, &sched(2.5e-1, 2e-3), &cfg).is_empty());
+        let v = check_modeled("s", &base, &sched(2.4e-1, 2e-3), &cfg);
+        assert!(
+            v.iter().any(|s| s.contains("makespan_secs")),
+            "makespan drift (even an improvement) caught: {v:?}"
+        );
+        let v = check_modeled("s", &base, &sched(2.5e-1, 9e-3), &cfg);
+        assert!(
+            v.iter().any(|s| s.contains("tenants.0.p95_secs")),
+            "per-tenant QoS drift caught: {v:?}"
+        );
     }
 
     #[test]
@@ -551,14 +411,15 @@ mod tests {
         let cfg = GateCfg::default();
         // empty current run: every missing current file is a violation
         let (v, _) = run_gate(&prev, &cur, &cfg);
-        assert_eq!(v.len(), 3, "{v:?}");
+        assert_eq!(v.len(), 4, "{v:?}");
         // populated current run with no baselines: notes only
         std::fs::write(cur.join("BENCH_PRIM.json"), PRIM).unwrap();
         std::fs::write(cur.join("BENCH_OVERLAP.json"), "[]").unwrap();
+        std::fs::write(cur.join("BENCH_SCHED.json"), sched(2.5e-1, 2e-3)).unwrap();
         std::fs::write(cur.join("BENCH_HOTPATH.json"), hotpath(0.01, 9.0)).unwrap();
         let (v, notes) = run_gate(&prev, &cur, &cfg);
         assert!(v.is_empty(), "{v:?}");
-        assert_eq!(notes.len(), 3, "{notes:?}");
+        assert_eq!(notes.len(), 4, "{notes:?}");
         // baseline present + injected regression: gate fails
         std::fs::write(prev.join("BENCH_HOTPATH.json"), hotpath(0.001, 9.0)).unwrap();
         let (v, _) = run_gate(&prev, &cur, &cfg);

@@ -38,6 +38,7 @@ pub mod partition;
 pub mod queue;
 pub mod scheduler;
 pub mod session;
+pub mod trace;
 
 use crate::arch::SystemConfig;
 use crate::dpu::{Ctx, Dpu, DpuTiming};
@@ -57,6 +58,9 @@ pub use scheduler::{
     TenantSpec,
 };
 pub use session::Session;
+pub use trace::{
+    parse_trace, LaneTag, ReplayEngine, Trace, TraceEvent, TraceSink, TriageReport,
+};
 
 /// Statistics of one kernel launch across the allocated DPU set.
 #[derive(Clone, Debug, Default)]
@@ -124,6 +128,17 @@ pub struct PimSet {
     /// instead of allocating, so steady-state pipelined serving records
     /// commands into a buffer that has already grown to session size.
     queue_pool: Option<CmdQueue>,
+    /// Trace capture sink, if tracing is on ([`PimSet::with_trace`] /
+    /// `RunConfig::trace`). Synchronous operations emit events directly
+    /// on the set's [`trace_clock`](Self::trace_clock); queued batches
+    /// emit at their scheduled offsets during `queue_sync` — from the
+    /// same single scheduling pass that credits the overlap.
+    pub trace: Option<TraceSink>,
+    /// Session-local modeled clock the queue trace accumulates on.
+    trace_clock: f64,
+    /// Request tag stamped onto every recorded command / emitted event
+    /// (set by `Session::execute_batch` around each request).
+    pub trace_req: Option<u64>,
 }
 
 impl PimSet {
@@ -157,8 +172,22 @@ impl PimSet {
             rank0: 0,
             cmd_queue: None,
             queue_pool: None,
+            trace: None,
+            trace_clock: 0.0,
+            trace_req: None,
             cfg,
         }
+    }
+
+    /// Install a trace sink (builder style) and stamp the capture
+    /// geometry. Every subsequent operation — synchronous or queued —
+    /// lands in the sink as a [`TraceEvent`].
+    pub fn with_trace(mut self, sink: TraceSink) -> Self {
+        let per = self.cfg.dpus_per_rank().max(1) as usize;
+        let n_ranks = self.dpus.len().div_ceil(per) as u32;
+        sink.set_geometry("queue", n_ranks);
+        self.trace = Some(sink);
+        self
     }
 
     /// Swap the fleet executor (builder style).
@@ -266,7 +295,36 @@ impl PimSet {
         );
         let per = self.cfg.dpus_per_rank().max(1) as usize;
         let n_ranks = self.dpus.len().div_ceil(per);
-        let hidden = q.hidden_secs(n_ranks, per);
+        // ONE scheduling pass serves both consumers: the overlap credit
+        // (`Schedule::hidden`, bit-identical to the old `hidden_secs`
+        // path — see `hidden_secs_matches_single_schedule_pass_bitwise`)
+        // and the trace events at their scheduled offsets.
+        let hidden = if q.is_empty() {
+            0.0
+        } else {
+            let sched = q.schedule(n_ranks, per);
+            if let Some(sink) = self.trace.as_ref() {
+                let base = self.trace_clock;
+                let id0 = sink.next_id();
+                let lanes = q.lanes(n_ranks, per);
+                let deps = q.dep_edges();
+                for (i, cmd) in q.cmds().iter().enumerate() {
+                    sink.push(TraceEvent {
+                        id: 0, // assigned by the sink
+                        kind: cmd.kind,
+                        lane: lanes[i].clone().into(),
+                        start: base + sched.start[i],
+                        secs: cmd.secs,
+                        bytes: cmd.bytes,
+                        tenant: None,
+                        req: cmd.req,
+                        deps: deps[i].iter().map(|&j| id0 + j as u64).collect(),
+                    });
+                }
+                self.trace_clock = base + sched.makespan;
+            }
+            sched.hidden()
+        };
         self.metrics.overlapped += hidden;
         q.reset();
         self.queue_pool = Some(q);
@@ -302,21 +360,41 @@ impl PimSet {
         }
     }
 
-    /// Is a command queue currently recording? The transfer terminals
-    /// check this before building a [`CmdMeta`], keeping the synchronous
-    /// hot path (e.g. TRNS's per-request storm of tiny pushes) free of
-    /// per-transfer allocations.
-    fn recording(&self) -> bool {
-        self.cmd_queue.is_some()
+    /// Is anything watching command metadata — an open queue or a trace
+    /// sink? The transfer terminals check this before building a
+    /// [`CmdMeta`], keeping the synchronous hot path (e.g. TRNS's
+    /// per-request storm of tiny pushes) free of per-transfer
+    /// allocations when neither is active.
+    fn observing(&self) -> bool {
+        self.cmd_queue.is_some() || self.trace.is_some()
     }
 
-    /// Record a command into the open queue, if any. Outside a queue
-    /// session this is a no-op: a synchronous call is the degenerate
-    /// one-command queue whose makespan equals its seconds, so the
-    /// overlap credit is identically zero.
-    fn record(&mut self, cmd: CmdMeta) {
+    /// Record a command into the open queue, if any, and/or into the
+    /// trace. Inside a queue session the command only lands in the
+    /// queue — its trace event is emitted at its *scheduled* offset
+    /// during [`PimSet::queue_sync`]. Outside one, a synchronous call is
+    /// the degenerate one-command queue whose makespan equals its
+    /// seconds: it hides nothing, and its event goes back-to-back on the
+    /// session-local trace clock.
+    fn record(&mut self, mut cmd: CmdMeta) {
+        cmd.req = self.trace_req;
         if let Some(q) = self.cmd_queue.as_mut() {
             q.push(cmd);
+        } else if let Some(sink) = self.trace.as_ref() {
+            let per = self.cfg.dpus_per_rank().max(1) as usize;
+            let n_ranks = self.dpus.len().div_ceil(per);
+            sink.push(TraceEvent {
+                id: 0, // assigned by the sink
+                kind: cmd.kind,
+                lane: queue::lane_for(&cmd, per, n_ranks).into(),
+                start: self.trace_clock,
+                secs: cmd.secs,
+                bytes: cmd.bytes,
+                tenant: None,
+                req: cmd.req,
+                deps: Vec::new(),
+            });
+            self.trace_clock += cmd.secs;
         }
     }
 
@@ -432,7 +510,7 @@ impl PimSet {
         let secs = arch.cycles_to_secs(max_cycles);
         self.metrics.dpu += secs;
         self.metrics.launches += 1;
-        if self.cmd_queue.is_some() {
+        if self.observing() {
             // conservative contiguous DPU span for sparse launch_on sets
             let dpus = match subset {
                 None => 0..self.dpus.len(),
@@ -463,7 +541,7 @@ impl PimSet {
         let spans = self.spans_sockets();
         let secs = self.host.merge_numa(bytes, ops, spans);
         self.metrics.inter_dpu += secs;
-        self.record(CmdMeta::host_merge(secs));
+        self.record(CmdMeta::host_merge(secs).with_bytes(bytes));
     }
 
     /// [`PimSet::host_merge`] with declared dependencies: the merge
@@ -475,7 +553,7 @@ impl PimSet {
         let spans = self.spans_sockets();
         let secs = self.host.merge_numa(bytes, ops, spans);
         self.metrics.inter_dpu += secs;
-        self.record(CmdMeta::host_merge_after(secs, after.to_vec()));
+        self.record(CmdMeta::host_merge_after(secs, after.to_vec()).with_bytes(bytes));
     }
 
     /// Charge host merge work to an explicit bucket (SEL/UNI charge their
@@ -484,7 +562,7 @@ impl PimSet {
         let spans = self.spans_sockets();
         let secs = self.host.merge_numa(bytes, ops, spans);
         self.metrics.account(bucket, secs, 0);
-        self.record(CmdMeta::host_merge(secs));
+        self.record(CmdMeta::host_merge(secs).with_bytes(bytes));
     }
 
     /// Reset accumulated metrics (dataset stays in MRAM).
@@ -539,6 +617,14 @@ impl PimSet {
                     rank0: slice_rank0,
                     cmd_queue: None,
                     queue_pool: None,
+                    // Slices do NOT inherit the sink: each slice has its
+                    // own session-local clock, and mixing them in one
+                    // buffer would interleave incoherent timelines. The
+                    // scheduler traces tenant work on the fleet-global
+                    // timeline instead (`SchedConfig::trace`).
+                    trace: None,
+                    trace_clock: 0.0,
+                    trace_req: None,
                     cfg: cfg.clone(),
                 }
             })
@@ -622,13 +708,14 @@ impl<T: Pod> ToXfer<'_, T> {
         let secs = self.set.engine.copy_to(&mut self.set.dpus[dpu], self.sym.off(), data);
         let bytes = std::mem::size_of_val(data);
         self.set.metrics.account(self.bucket, secs, bytes as u64);
-        if self.set.recording() {
+        if self.set.observing() {
             let cmd = CmdMeta::push(
                 dpu..dpu + 1,
                 self.sym.off()..self.sym.off() + bytes,
                 secs,
                 self.after,
-            );
+            )
+            .with_bytes(bytes as u64);
             self.set.record(cmd);
         }
     }
@@ -650,13 +737,14 @@ impl<T: Pod> ToXfer<'_, T> {
         self.set.metrics.account(self.bucket, secs, bytes);
         let per_dpu = bufs.first().map_or(0, |b| std::mem::size_of_val(b.as_slice()));
         let n = self.set.dpus.len();
-        if self.set.recording() {
+        if self.set.observing() {
             let cmd = CmdMeta::push(
                 0..n,
                 self.sym.off()..self.sym.off() + per_dpu,
                 secs,
                 self.after,
-            );
+            )
+            .with_bytes(bytes);
             self.set.record(cmd);
         }
     }
@@ -680,13 +768,14 @@ impl<T: Pod> ToXfer<'_, T> {
         let widest =
             bufs.iter().map(|b| std::mem::size_of_val(b.as_slice())).max().unwrap_or(0);
         let n = self.set.dpus.len();
-        if self.set.recording() {
+        if self.set.observing() {
             let cmd = CmdMeta::push(
                 0..n,
                 self.sym.off()..self.sym.off() + widest,
                 secs,
                 self.after,
-            );
+            )
+            .with_bytes(bytes);
             self.set.record(cmd);
         }
     }
@@ -703,13 +792,14 @@ impl<T: Pod> ToXfer<'_, T> {
         let per_dpu = std::mem::size_of_val(data);
         let n = self.set.dpus.len();
         self.set.metrics.account(self.bucket, secs, (n * per_dpu) as u64);
-        if self.set.recording() {
+        if self.set.observing() {
             let cmd = CmdMeta::push(
                 0..n,
                 self.sym.off()..self.sym.off() + per_dpu,
                 secs,
                 self.after,
-            );
+            )
+            .with_bytes((n * per_dpu) as u64);
             self.set.record(cmd);
         }
     }
@@ -732,13 +822,14 @@ impl<T: Pod> FromXfer<'_, T> {
         let (v, secs) = self.set.engine.copy_from(&self.set.dpus[dpu], self.sym.off(), n);
         let bytes = n * std::mem::size_of::<T>();
         self.set.metrics.account(self.bucket, secs, bytes as u64);
-        if self.set.recording() {
+        if self.set.observing() {
             let cmd = CmdMeta::pull(
                 dpu..dpu + 1,
                 self.sym.off()..self.sym.off() + bytes,
                 secs,
                 self.after,
-            );
+            )
+            .with_bytes(bytes as u64);
             self.set.record(cmd);
         }
         v
@@ -756,13 +847,14 @@ impl<T: Pod> FromXfer<'_, T> {
         let per_dpu = n * std::mem::size_of::<T>();
         let n_dpus = self.set.dpus.len();
         self.set.metrics.account(self.bucket, secs, (n_dpus * per_dpu) as u64);
-        if self.set.recording() {
+        if self.set.observing() {
             let cmd = CmdMeta::pull(
                 0..n_dpus,
                 self.sym.off()..self.sym.off() + per_dpu,
                 secs,
                 self.after,
-            );
+            )
+            .with_bytes((n_dpus * per_dpu) as u64);
             self.set.record(cmd);
         }
         v
@@ -790,13 +882,14 @@ impl<T: Pod> FromXfer<'_, T> {
         self.set.metrics.account(self.bucket, secs, bytes);
         let widest = lens.iter().map(|&n| n * std::mem::size_of::<T>()).max().unwrap_or(0);
         let n_dpus = self.set.dpus.len();
-        if self.set.recording() {
+        if self.set.observing() {
             let cmd = CmdMeta::pull(
                 0..n_dpus,
                 self.sym.off()..self.sym.off() + widest,
                 secs,
                 self.after,
-            );
+            )
+            .with_bytes(bytes);
             self.set.record(cmd);
         }
         v

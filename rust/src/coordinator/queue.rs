@@ -188,6 +188,12 @@ pub struct CmdMeta {
     pub after: Vec<CmdId>,
     /// Fence semantics: conflicts with every other command.
     pub fence: bool,
+    /// Payload bytes the command moves (trace annotation only — the
+    /// scheduling model works from `secs` and the byte *regions*).
+    pub bytes: u64,
+    /// Request tag stamped by the recording `PimSet` (trace annotation;
+    /// `None` outside a tagged batch).
+    pub req: Option<u64>,
 }
 
 impl CmdMeta {
@@ -201,6 +207,8 @@ impl CmdMeta {
             writes: bytes.into(),
             after,
             fence: false,
+            bytes: 0,
+            req: None,
         }
     }
 
@@ -214,6 +222,8 @@ impl CmdMeta {
             writes: RegionSet::Empty,
             after,
             fence: false,
+            bytes: 0,
+            req: None,
         }
     }
 
@@ -227,6 +237,8 @@ impl CmdMeta {
             writes: acc.writes.into(),
             after: Vec::new(),
             fence: false,
+            bytes: 0,
+            req: None,
         }
     }
 
@@ -252,6 +264,8 @@ impl CmdMeta {
             writes: RegionSet::Empty,
             after: Vec::new(),
             fence: true,
+            bytes: 0,
+            req: None,
         }
     }
 
@@ -267,7 +281,16 @@ impl CmdMeta {
             writes: RegionSet::Empty,
             after,
             fence: false,
+            bytes: 0,
+            req: None,
         }
+    }
+
+    /// Annotate the command with the payload bytes it moves (builder
+    /// style; trace metadata only — scheduling is unaffected).
+    pub fn with_bytes(mut self, bytes: u64) -> Self {
+        self.bytes = bytes;
+        self
     }
 
     /// A zero-second synchronization barrier.
@@ -280,6 +303,8 @@ impl CmdMeta {
             writes: RegionSet::Empty,
             after: Vec::new(),
             fence: true,
+            bytes: 0,
+            req: None,
         }
     }
 }
@@ -696,6 +721,10 @@ impl Timeline {
 /// Outcome of scheduling a command queue onto the resource timelines.
 #[derive(Clone, Debug)]
 pub struct Schedule {
+    /// Per-command start times, indexed by [`CmdId`] (the instant the
+    /// command's lane reservation begins; `finish[i] - start[i]` is
+    /// exactly the command's seconds). Trace capture reads these.
+    pub start: Vec<f64>,
     /// Per-command finish times, indexed by [`CmdId`].
     pub finish: Vec<f64>,
     /// Last finish over all commands — the modeled wall time of the
@@ -704,6 +733,16 @@ pub struct Schedule {
     /// Sum of all command seconds (what fully serialized execution,
     /// i.e. the four accounting buckets, charges).
     pub total_secs: f64,
+}
+
+impl Schedule {
+    /// Seconds the schedule hides relative to fully serialized
+    /// execution — the derived `overlapped` credit. `queue_sync`
+    /// computes **one** schedule and derives both this credit and the
+    /// trace events from it (no second scheduling pass).
+    pub fn hidden(&self) -> f64 {
+        (self.total_secs - self.makespan).max(0.0)
+    }
 }
 
 /// Heap key of a dependency-ready command: ordered by feasible start,
@@ -751,6 +790,8 @@ struct GroupAcc {
     write_lo: usize,
     write_hi: usize,
     after: Vec<CmdId>,
+    bytes: u64,
+    req: Option<u64>,
     any: bool,
 }
 
@@ -766,6 +807,8 @@ impl GroupAcc {
             write_lo: usize::MAX,
             write_hi: 0,
             after: Vec::new(),
+            bytes: 0,
+            req: None,
             any: false,
         }
     }
@@ -787,6 +830,10 @@ impl GroupAcc {
             if !self.after.contains(&j) {
                 self.after.push(j);
             }
+        }
+        self.bytes += cmd.bytes;
+        if self.req.is_none() {
+            self.req = cmd.req;
         }
         if cmd.kind == CmdKind::Push {
             self.kind = CmdKind::Push;
@@ -816,6 +863,8 @@ impl GroupAcc {
             writes: bound(self.write_lo, self.write_hi),
             after: self.after,
             fence: false,
+            bytes: self.bytes,
+            req: self.req,
         })
     }
 }
@@ -913,22 +962,39 @@ impl CmdQueue {
     }
 
     fn lane_of(&self, i: CmdId, dpus_per_rank: usize, n_ranks: usize) -> Option<Lane> {
-        let c = &self.cmds[i];
-        match c.kind {
-            CmdKind::Push | CmdKind::Pull => Some(Lane::Bus),
-            CmdKind::HostMerge => Some(Lane::Host),
-            CmdKind::Fence => None,
-            CmdKind::Launch => {
-                let per = dpus_per_rank.max(1);
-                let lo = (c.dpus.start / per) as u32;
-                let hi = if c.dpus.end == 0 {
-                    lo
-                } else {
-                    ((c.dpus.end - 1) / per + 1) as u32
-                };
-                Some(Lane::Ranks(lo..hi.min(n_ranks as u32).max(lo)))
+        lane_for(&self.cmds[i], dpus_per_rank, n_ranks)
+    }
+
+    /// The recorded commands, in enqueue order (trace capture walks
+    /// them alongside the [`Schedule`]'s start/finish arrays).
+    pub fn cmds(&self) -> &[CmdMeta] {
+        &self.cmds
+    }
+
+    /// Lane assignment of every recorded command under the given fleet
+    /// geometry — `None` for fences (they occupy no resource).
+    pub fn lanes(&self, n_ranks: usize, dpus_per_rank: usize) -> Vec<Option<Lane>> {
+        (0..self.cmds.len())
+            .map(|i| self.lane_of(i, dpus_per_rank, n_ranks))
+            .collect()
+    }
+
+    /// Per-command dependency lists from the indexed inference:
+    /// `deps[i]` holds the earlier commands `i` waits on, ascending.
+    /// Trace capture records these as the event dep edges; it is the
+    /// same reduced edge set the scheduler issues against.
+    pub fn dep_edges(&self) -> Vec<Vec<CmdId>> {
+        let DepGraph { out, .. } = infer_deps(&self.cmds);
+        let mut deps: Vec<Vec<CmdId>> = vec![Vec::new(); self.cmds.len()];
+        for (j, outs) in out.iter().enumerate() {
+            for &i in outs {
+                deps[i].push(j);
             }
         }
+        for d in &mut deps {
+            d.sort_unstable();
+        }
+        deps
     }
 
     /// Greedy list schedule over the dependency DAG and the resource
@@ -954,6 +1020,7 @@ impl CmdQueue {
             .map(|i| self.lane_of(i, dpus_per_rank, n_ranks))
             .collect();
         let mut tl = Timeline::new(n_ranks);
+        let mut start_at = vec![0.0f64; n];
         let mut finish = vec![0.0f64; n];
         // Max finish over each command's dependencies; final once its
         // indegree hits zero (only then does it enter the heap).
@@ -987,10 +1054,11 @@ impl CmdQueue {
                 heap.push(Reverse(ReadyKey { start: cur, id: i }));
                 continue;
             }
-            let f = match &lanes[i] {
-                Some(lane) => tl.reserve(lane, ready, self.cmds[i].secs).1,
-                None => ready + self.cmds[i].secs,
+            let (s, f) = match &lanes[i] {
+                Some(lane) => tl.reserve(lane, ready, self.cmds[i].secs),
+                None => (ready, ready + self.cmds[i].secs),
             };
+            start_at[i] = s;
             finish[i] = f;
             total += self.cmds[i].secs;
             makespan = makespan.max(f);
@@ -1009,6 +1077,7 @@ impl CmdQueue {
         }
         debug_assert_eq!(done, n, "dependency edges all point backwards");
         Schedule {
+            start: start_at,
             finish,
             makespan,
             total_secs: total,
@@ -1035,6 +1104,7 @@ impl CmdQueue {
             }
         }
         let mut tl = Timeline::new(n_ranks);
+        let mut start_at = vec![0.0f64; n];
         let mut finish = vec![0.0f64; n];
         let mut done = vec![false; n];
         let mut total = 0.0f64;
@@ -1077,16 +1147,18 @@ impl CmdQueue {
             for &j in &deps[i] {
                 ready = ready.max(finish[j]);
             }
-            let f = match self.lane_of(i, dpus_per_rank, n_ranks) {
-                Some(lane) => tl.reserve(&lane, ready, self.cmds[i].secs).1,
-                None => ready + self.cmds[i].secs,
+            let (s, f) = match self.lane_of(i, dpus_per_rank, n_ranks) {
+                Some(lane) => tl.reserve(&lane, ready, self.cmds[i].secs),
+                None => (ready, ready + self.cmds[i].secs),
             };
+            start_at[i] = s;
             finish[i] = f;
             done[i] = true;
             total += self.cmds[i].secs;
             makespan = makespan.max(f);
         }
         Schedule {
+            start: start_at,
             finish,
             makespan,
             total_secs: total,
@@ -1094,13 +1166,37 @@ impl CmdQueue {
     }
 
     /// Seconds the schedule hides relative to fully serialized
-    /// execution — the derived `overlapped` credit.
+    /// execution — the derived `overlapped` credit. One scheduling
+    /// pass; equals [`Schedule::hidden`] of [`CmdQueue::schedule`]
+    /// bitwise (regression-tested), so callers that need the schedule
+    /// itself (trace capture) call `schedule` once and use both.
     pub fn hidden_secs(&self, n_ranks: usize, dpus_per_rank: usize) -> f64 {
         if self.cmds.is_empty() {
             return 0.0;
         }
-        let s = self.schedule(n_ranks, dpus_per_rank);
-        (s.total_secs - s.makespan).max(0.0)
+        self.schedule(n_ranks, dpus_per_rank).hidden()
+    }
+}
+
+/// Resource lane a command occupies under the given fleet geometry
+/// (`None` for fences). Shared by the queue schedulers and the
+/// synchronous trace capture path in `PimSet`, so a traced synchronous
+/// op lands on exactly the lane its queued form would.
+pub(crate) fn lane_for(c: &CmdMeta, dpus_per_rank: usize, n_ranks: usize) -> Option<Lane> {
+    match c.kind {
+        CmdKind::Push | CmdKind::Pull => Some(Lane::Bus),
+        CmdKind::HostMerge => Some(Lane::Host),
+        CmdKind::Fence => None,
+        CmdKind::Launch => {
+            let per = dpus_per_rank.max(1);
+            let lo = (c.dpus.start / per) as u32;
+            let hi = if c.dpus.end == 0 {
+                lo
+            } else {
+                ((c.dpus.end - 1) / per + 1) as u32
+            };
+            Some(Lane::Ranks(lo..hi.min(n_ranks as u32).max(lo)))
+        }
     }
 }
 
@@ -1124,8 +1220,37 @@ mod tests {
         for (i, (x, y)) in a.finish.iter().zip(&b.finish).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(), "finish[{i}]: {x} vs {y}");
         }
+        for (i, (x, y)) in a.start.iter().zip(&b.start).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "start[{i}]: {x} vs {y}");
+        }
         assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
         assert_eq!(a.total_secs.to_bits(), b.total_secs.to_bits());
+    }
+
+    /// Satellite regression: the overlap credit must be exactly what
+    /// the **single** `schedule` pass `queue_sync` shares with trace
+    /// capture derives — `hidden_secs` and `Schedule::hidden` agree
+    /// bitwise, and the recorded start/finish pairs are internally
+    /// consistent (`finish − start == secs` for every laned command).
+    #[test]
+    fn hidden_secs_matches_single_schedule_pass_bitwise() {
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::push(0..8, 0..1024, 0.2, vec![]));
+        q.push(CmdMeta::launch(0..8, Access::new().read(0..1024), 1.0));
+        q.push(CmdMeta::push(0..8, 1024..2048, 0.3, vec![]));
+        q.push(CmdMeta::host_merge(0.05));
+        q.push(CmdMeta::pull(0..8, 0..1024, 0.11, vec![]));
+        let s = q.schedule(RANKS, PER);
+        assert!(s.hidden() > 0.0, "the independent push must hide");
+        assert_eq!(q.hidden_secs(RANKS, PER).to_bits(), s.hidden().to_bits());
+        for (i, c) in q.cmds().iter().enumerate() {
+            assert_eq!(
+                (s.start[i] + c.secs).to_bits(),
+                s.finish[i].to_bits(),
+                "cmd {i}: start+secs must equal finish exactly"
+            );
+        }
+        assert_schedules_match(&q, RANKS, PER);
     }
 
     #[test]

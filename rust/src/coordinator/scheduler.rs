@@ -60,7 +60,8 @@
 //! tenants — so a single-tenant stream is policy-invariant
 //! (`tests/executor_equivalence.rs`).
 
-use super::queue::{Lane, Timeline};
+use super::queue::{CmdKind, Lane, Timeline};
+use super::trace::{LaneTag, TraceEvent, TraceSink};
 use super::{ExecChoice, PimSet, Session, TimeBreakdown};
 use crate::arch::SystemConfig;
 use crate::prim::common::RunConfig;
@@ -361,6 +362,10 @@ pub struct SchedConfig {
     pub pipeline: bool,
     pub seed: u64,
     pub exec: ExecChoice,
+    /// Trace capture sink (`--trace`): records every bus grant, kernel
+    /// window, and response pull on the fleet-global timeline, tagged
+    /// with tenant and request ids (`source: "sched"`). `None` = off.
+    pub trace: Option<TraceSink>,
 }
 
 impl SchedConfig {
@@ -374,6 +379,7 @@ impl SchedConfig {
             pipeline: false,
             seed: 42,
             exec: ExecChoice::Auto,
+            trace: None,
         }
     }
 }
@@ -563,6 +569,12 @@ struct PendingPull {
     pull_secs: f64,
     /// Indices into the tenant's `records`.
     recs: Vec<usize>,
+    /// Response bytes the pull carries (trace annotation).
+    pull_bytes: u64,
+    /// First request id of the batch (trace annotation).
+    req0: Option<u64>,
+    /// Trace id of the batch's kernel event — the pull's dependency.
+    kernel_ev: Option<u64>,
 }
 
 /// The multi-tenant serving loop: rank-sliced sessions, one shared
@@ -583,6 +595,8 @@ pub struct Scheduler {
     timeline: Timeline,
     pulls: Vec<PendingPull>,
     seq: u64,
+    /// Trace capture sink (`source: "sched"`), if tracing is on.
+    trace: Option<TraceSink>,
 }
 
 impl Scheduler {
@@ -636,6 +650,7 @@ impl Scheduler {
                 scale: spec.scale,
                 seed: tseed,
                 exec: cfg.exec,
+                trace: None,
             };
             let dataset = workload.prepare(&rc);
             let mut session =
@@ -662,6 +677,9 @@ impl Scheduler {
                 last_out: None,
             });
         }
+        if let Some(sink) = &cfg.trace {
+            sink.set_geometry("sched", total_ranks);
+        }
         Ok(Scheduler {
             tenants,
             policy: cfg.policy.build(),
@@ -673,6 +691,7 @@ impl Scheduler {
             timeline: Timeline::new(total_ranks as usize),
             pulls: Vec::new(),
             seq: 0,
+            trace: cfg.trace.clone(),
         })
     }
 
@@ -814,8 +833,39 @@ impl Scheduler {
         // response pull re-arbitrates for the bus once the kernels
         // finish (dispatch only happens with the bus and slice idle, so
         // both reservations start exactly at their ready times)
-        let (_, push_end) = self.timeline.reserve(&Lane::Bus, now, push);
-        let (_, kern_end) = self.timeline.reserve(&lane, push_end, kernels);
+        let (push_start, push_end) = self.timeline.reserve(&Lane::Bus, now, push);
+        let (kern_start, kern_end) = self.timeline.reserve(&lane, push_end, kernels);
+        let (req0, kernel_ev) = match &self.trace {
+            None => (None, None),
+            Some(sink) => {
+                let req0 = batch.first().map(|a| a.req.id);
+                let bytes_to: u64 = deltas.iter().map(|d| d.bytes_to_dpu).sum();
+                let push_ev = sink.push(TraceEvent {
+                    id: 0, // assigned by the sink
+                    kind: CmdKind::Push,
+                    lane: LaneTag::Bus,
+                    start: push_start,
+                    secs: push,
+                    bytes: bytes_to,
+                    tenant: Some(t as u32),
+                    req: req0,
+                    deps: Vec::new(),
+                });
+                let kernel_ev = sink.push(TraceEvent {
+                    id: 0,
+                    kind: CmdKind::Launch,
+                    lane: LaneTag::from(Some(lane.clone())),
+                    start: kern_start,
+                    secs: kernels,
+                    bytes: 0,
+                    tenant: Some(t as u32),
+                    req: req0,
+                    deps: vec![push_ev],
+                });
+                (req0, Some(kernel_ev))
+            }
+        };
+        let pull_bytes: u64 = deltas.iter().map(|d| d.bytes_from_dpu).sum();
         self.seq += 1;
         self.pulls.push(PendingPull {
             ready: kern_end,
@@ -823,6 +873,9 @@ impl Scheduler {
             tenant: t,
             pull_secs: pull,
             recs,
+            pull_bytes,
+            req0,
+            kernel_ev,
         });
     }
 
@@ -832,7 +885,20 @@ impl Scheduler {
     /// pull — a slice is busy until its response has left the machine.
     fn serve_pull(&mut self, idx: usize) {
         let p = self.pulls.remove(idx);
-        let (_, done) = self.timeline.reserve(&Lane::Bus, p.ready, p.pull_secs);
+        let (pull_start, done) = self.timeline.reserve(&Lane::Bus, p.ready, p.pull_secs);
+        if let Some(sink) = &self.trace {
+            sink.push(TraceEvent {
+                id: 0, // assigned by the sink
+                kind: CmdKind::Pull,
+                lane: LaneTag::Bus,
+                start: pull_start,
+                secs: p.pull_secs,
+                bytes: p.pull_bytes,
+                tenant: Some(p.tenant as u32),
+                req: p.req0,
+                deps: p.kernel_ev.into_iter().collect(),
+            });
+        }
         let lane = self.tenants[p.tenant].lane();
         self.timeline.hold(&lane, done);
         let tn = &mut self.tenants[p.tenant];

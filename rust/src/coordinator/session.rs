@@ -214,7 +214,11 @@ impl Session {
         let mut out = Vec::with_capacity(reqs.len());
         for req in reqs {
             let staged = stage(req);
+            // Tag everything this request records (commands and their
+            // trace events) with its batch-global request id.
+            self.set.trace_req = Some(self.requests_done);
             out.push(exec(self, req, staged));
+            self.set.trace_req = None;
             self.requests_done += 1;
         }
         if self.pipeline {

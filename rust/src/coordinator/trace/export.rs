@@ -1,0 +1,342 @@
+//! Trace serialization: Chrome-trace JSON (loadable in Perfetto /
+//! `chrome://tracing`) for humans, and a compact native `trace/v1` JSON
+//! for programmatic use ([`parse_trace`] reads it back bit-identically
+//! — floats are written with Rust's shortest-roundtrip `{:e}` and
+//! parsed with `str::parse::<f64>`).
+
+use super::{LaneTag, Trace, TraceEvent};
+use crate::coordinator::queue::CmdKind;
+use crate::util::json::{parse_json, Value};
+use std::fmt::Write as _;
+
+fn kind_str(k: CmdKind) -> &'static str {
+    match k {
+        CmdKind::Push => "push",
+        CmdKind::Pull => "pull",
+        CmdKind::Launch => "launch",
+        CmdKind::HostMerge => "host_merge",
+        CmdKind::Fence => "fence",
+    }
+}
+
+fn kind_from(s: &str) -> Result<CmdKind, String> {
+    Ok(match s {
+        "push" => CmdKind::Push,
+        "pull" => CmdKind::Pull,
+        "launch" => CmdKind::Launch,
+        "host_merge" => CmdKind::HostMerge,
+        "fence" => CmdKind::Fence,
+        other => return Err(format!("unknown event kind '{other}'")),
+    })
+}
+
+fn lane_str(l: &LaneTag) -> String {
+    match l {
+        LaneTag::Bus => "bus".into(),
+        LaneTag::Host => "host".into(),
+        LaneTag::Barrier => "barrier".into(),
+        LaneTag::Ranks { lo, hi } => format!("ranks:{lo}-{hi}"),
+    }
+}
+
+fn lane_from(s: &str) -> Result<LaneTag, String> {
+    Ok(match s {
+        "bus" => LaneTag::Bus,
+        "host" => LaneTag::Host,
+        "barrier" => LaneTag::Barrier,
+        other => {
+            let span = other
+                .strip_prefix("ranks:")
+                .ok_or_else(|| format!("unknown lane '{other}'"))?;
+            let (lo, hi) = span
+                .split_once('-')
+                .ok_or_else(|| format!("bad rank span '{span}'"))?;
+            LaneTag::Ranks {
+                lo: lo.parse().map_err(|_| format!("bad rank lo '{lo}'"))?,
+                hi: hi.parse().map_err(|_| format!("bad rank hi '{hi}'"))?,
+            }
+        }
+    })
+}
+
+impl Trace {
+    /// Compact native form (`trace/v1`): one object per event, floats
+    /// shortest-roundtrip, deps as id arrays. This is the form
+    /// [`parse_trace`], the replay engine, and the triage loaders eat.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"schema\": \"trace/v1\",\n");
+        let _ = writeln!(s, "  \"source\": \"{}\",", self.source);
+        let _ = writeln!(s, "  \"n_ranks\": {},", self.n_ranks);
+        s.push_str("  \"events\": [\n");
+        for (i, e) in self.events.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"id\": {}, \"kind\": \"{}\", \"lane\": \"{}\", \"start\": {:e}, \
+                 \"secs\": {:e}, \"bytes\": {}",
+                e.id,
+                kind_str(e.kind),
+                lane_str(&e.lane),
+                e.start,
+                e.secs,
+                e.bytes
+            );
+            match e.tenant {
+                Some(t) => {
+                    let _ = write!(s, ", \"tenant\": {t}");
+                }
+                None => s.push_str(", \"tenant\": null"),
+            }
+            match e.req {
+                Some(r) => {
+                    let _ = write!(s, ", \"req\": {r}");
+                }
+                None => s.push_str(", \"req\": null"),
+            }
+            s.push_str(", \"deps\": [");
+            for (k, d) in e.deps.iter().enumerate() {
+                if k > 0 {
+                    s.push_str(", ");
+                }
+                let _ = write!(s, "{d}");
+            }
+            s.push_str("]}");
+            s.push_str(if i + 1 < self.events.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Chrome-trace JSON: lanes become tracks (`tid` 0 = bus, 1 = host,
+    /// `2 + r` = rank `r`), durations become `ph: "X"` complete events
+    /// with `ts`/`dur` in microseconds, fences become instant events.
+    /// A launch spanning ranks `[lo, hi)` draws one slice per rank so
+    /// the span is visible on every lane it occupies.
+    pub fn to_chrome_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\"displayTimeUnit\": \"ms\", \"traceEvents\": [\n");
+        let _ = writeln!(
+            s,
+            "  {{\"ph\": \"M\", \"name\": \"process_name\", \"pid\": 0, \
+             \"args\": {{\"name\": \"pim ({})\"}}}},",
+            self.source
+        );
+        let thread = |s: &mut String, tid: u32, name: &str| {
+            let _ = writeln!(
+                s,
+                "  {{\"ph\": \"M\", \"name\": \"thread_name\", \"pid\": 0, \"tid\": {tid}, \
+                 \"args\": {{\"name\": \"{name}\"}}}},"
+            );
+        };
+        thread(&mut s, 0, "bus");
+        thread(&mut s, 1, "host");
+        for r in 0..self.n_ranks {
+            thread(&mut s, 2 + r, &format!("rank {r}"));
+        }
+        let mut lines: Vec<String> = Vec::with_capacity(self.events.len());
+        for e in &self.events {
+            let ts = e.start * 1e6;
+            let dur = e.secs * 1e6;
+            let mut args = format!("\"id\": {}, \"bytes\": {}", e.id, e.bytes);
+            if let Some(t) = e.tenant {
+                let _ = write!(args, ", \"tenant\": {t}");
+            }
+            if let Some(r) = e.req {
+                let _ = write!(args, ", \"req\": {r}");
+            }
+            if !e.deps.is_empty() {
+                let _ = write!(args, ", \"deps\": {}", e.deps.len());
+            }
+            let name = kind_str(e.kind);
+            let mut slice = |tid: u32| {
+                lines.push(format!(
+                    "  {{\"ph\": \"X\", \"name\": \"{name}\", \"cat\": \"{name}\", \
+                     \"pid\": 0, \"tid\": {tid}, \"ts\": {ts}, \"dur\": {dur}, \
+                     \"args\": {{{args}}}}}"
+                ));
+            };
+            match &e.lane {
+                LaneTag::Bus => slice(0),
+                LaneTag::Host => slice(1),
+                LaneTag::Ranks { lo, hi } => {
+                    for r in *lo..(*hi).min(self.n_ranks) {
+                        slice(2 + r);
+                    }
+                }
+                LaneTag::Barrier => lines.push(format!(
+                    "  {{\"ph\": \"i\", \"name\": \"{name}\", \"s\": \"p\", \
+                     \"pid\": 0, \"tid\": 1, \"ts\": {ts}, \"args\": {{{args}}}}}"
+                )),
+            }
+        }
+        s.push_str(&lines.join(",\n"));
+        if !lines.is_empty() {
+            s.push('\n');
+        }
+        s.push_str("]}\n");
+        s
+    }
+}
+
+fn field<'v>(obj: &'v Value, key: &str) -> Result<&'v Value, String> {
+    obj.get(key).ok_or_else(|| format!("missing field '{key}'"))
+}
+
+fn num(obj: &Value, key: &str) -> Result<f64, String> {
+    field(obj, key)?
+        .as_f64()
+        .ok_or_else(|| format!("field '{key}' is not a number"))
+}
+
+fn opt_num(obj: &Value, key: &str) -> Result<Option<f64>, String> {
+    match field(obj, key)? {
+        Value::Null => Ok(None),
+        Value::Num(x) => Ok(Some(*x)),
+        _ => Err(format!("field '{key}' is neither number nor null")),
+    }
+}
+
+/// Parse a native `trace/v1` document back into a [`Trace`]. Rejects
+/// other schemas loudly; floats come back bit-identical to what
+/// [`Trace::to_json`] wrote.
+pub fn parse_trace(src: &str) -> Result<Trace, String> {
+    let v = parse_json(src)?;
+    let schema = field(&v, "schema")?
+        .as_str()
+        .ok_or("schema is not a string")?;
+    if schema != "trace/v1" {
+        return Err(format!("unsupported trace schema '{schema}'"));
+    }
+    let source = field(&v, "source")?
+        .as_str()
+        .ok_or("source is not a string")?
+        .to_string();
+    let n_ranks = num(&v, "n_ranks")? as u32;
+    let raw = field(&v, "events")?
+        .as_arr()
+        .ok_or("events is not an array")?;
+    let mut events = Vec::with_capacity(raw.len());
+    for ev in raw {
+        let deps = field(ev, "deps")?
+            .as_arr()
+            .ok_or("deps is not an array")?
+            .iter()
+            .map(|d| d.as_f64().map(|x| x as u64).ok_or("non-numeric dep id"))
+            .collect::<Result<Vec<u64>, _>>()?;
+        events.push(TraceEvent {
+            id: num(ev, "id")? as u64,
+            kind: kind_from(field(ev, "kind")?.as_str().ok_or("kind is not a string")?)?,
+            lane: lane_from(field(ev, "lane")?.as_str().ok_or("lane is not a string")?)?,
+            start: num(ev, "start")?,
+            secs: num(ev, "secs")?,
+            bytes: num(ev, "bytes")? as u64,
+            tenant: opt_num(ev, "tenant")?.map(|x| x as u32),
+            req: opt_num(ev, "req")?.map(|x| x as u64),
+            deps,
+        });
+    }
+    Ok(Trace { source, n_ranks, events })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace {
+            source: "queue".into(),
+            n_ranks: 2,
+            events: vec![
+                TraceEvent {
+                    id: 0,
+                    kind: CmdKind::Push,
+                    lane: LaneTag::Bus,
+                    start: 0.0,
+                    secs: 0.2,
+                    bytes: 4096,
+                    tenant: None,
+                    req: Some(0),
+                    deps: vec![],
+                },
+                TraceEvent {
+                    id: 1,
+                    kind: CmdKind::Launch,
+                    lane: LaneTag::Ranks { lo: 0, hi: 2 },
+                    start: 0.2,
+                    secs: 1.0 / 3.0,
+                    bytes: 0,
+                    tenant: Some(1),
+                    req: Some(0),
+                    deps: vec![0],
+                },
+                TraceEvent {
+                    id: 2,
+                    kind: CmdKind::Fence,
+                    lane: LaneTag::Barrier,
+                    start: 0.2 + 1.0 / 3.0,
+                    secs: 0.0,
+                    bytes: 0,
+                    tenant: None,
+                    req: None,
+                    deps: vec![0, 1],
+                },
+            ],
+        }
+    }
+
+    /// Native round trip is lossless and bit-identical, including the
+    /// non-representable 1/3 duration.
+    #[test]
+    fn native_roundtrip_is_bit_identical() {
+        let t = sample();
+        let back = parse_trace(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(t.events[1].secs.to_bits(), back.events[1].secs.to_bits());
+        // and the re-serialization is byte-identical
+        assert_eq!(t.to_json(), back.to_json());
+    }
+
+    /// The Chrome export is well-formed JSON with the lane→track
+    /// metadata and one slice per occupied rank lane.
+    #[test]
+    fn chrome_export_parses_and_maps_lanes_to_tracks() {
+        let t = sample();
+        let v = parse_json(&t.to_chrome_json()).unwrap();
+        let evs = v.get("traceEvents").and_then(Value::as_arr).unwrap();
+        // 1 process + 2 fixed threads + 2 rank threads = 5 metadata
+        let metas = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Value::as_str) == Some("M"))
+            .count();
+        assert_eq!(metas, 5);
+        // push on bus (1 slice) + launch across 2 ranks (2 slices)
+        let slices: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+            .map(|e| e.get("tid").and_then(Value::as_f64).unwrap())
+            .collect();
+        assert_eq!(slices, vec![0.0, 2.0, 3.0]);
+        // fence is an instant event
+        assert_eq!(
+            evs.iter()
+                .filter(|e| e.get("ph").and_then(Value::as_str) == Some("i"))
+                .count(),
+            1
+        );
+    }
+
+    #[test]
+    fn empty_trace_exports_parse() {
+        let t = Trace::empty("queue", 1);
+        let back = parse_trace(&t.to_json()).unwrap();
+        assert!(back.is_empty());
+        assert!(parse_json(&t.to_chrome_json()).is_ok());
+    }
+
+    #[test]
+    fn foreign_schema_rejected() {
+        assert!(parse_trace(r#"{"schema": "bench/v1", "source": "x", "n_ranks": 1, "events": []}"#)
+            .is_err());
+        assert!(parse_trace("not json").is_err());
+    }
+}

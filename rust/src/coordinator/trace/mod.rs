@@ -1,0 +1,247 @@
+//! Trace capture, export, deterministic replay, and hotspot triage —
+//! the observability layer over the modeled machine (ROADMAP item 3).
+//!
+//! The queue scheduler and the multi-tenant scheduler already compute a
+//! complete event schedule — per-command start/finish on the serialized
+//! host bus, the host CPU, and the per-rank kernel lanes — and, before
+//! this module, threw it away after deriving one number (`overlapped`).
+//! A [`TraceSink`] records those schedules as typed [`TraceEvent`]s:
+//!
+//! * **queue traces** (`source: "queue"`) — every `PimSet` operation.
+//!   Synchronous calls are the degenerate one-command queue, so they
+//!   land back-to-back on a session-local clock; a pipelined batch's
+//!   commands land at their *scheduled* offsets (the same single
+//!   `CmdQueue::schedule` pass that credits `overlapped`), so the trace
+//!   shows exactly which pushes hid under which launches.
+//! * **scheduler traces** (`source: "sched"`) — per-batch push /
+//!   kernel / pull reservations on the fleet-global timeline, tagged
+//!   with tenant and request ids.
+//!
+//! Capture is **zero-cost when off**: the sink is an `Option` checked
+//! before any event is built, and the scheduling pass it reads from is
+//! the one `queue_sync` already runs for overlap accounting.
+//!
+//! Export ([`Trace::to_chrome_json`] / [`Trace::to_json`]), cursor-wise
+//! replay ([`ReplayEngine`]), and hotspot ranking ([`TriageReport`])
+//! live in the submodules; everything is deterministic — identical
+//! traces produce bit-identical reports, across runs and executors.
+
+mod export;
+mod replay;
+mod triage;
+
+pub use export::parse_trace;
+pub use replay::ReplayEngine;
+pub use triage::{analyze, analyze_with, BusWindow, RankLoad, StallEdge, TriageReport};
+
+use super::queue::{CmdKind, Lane};
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Which modeled resource an event occupied — the trace-side mirror of
+/// [`Lane`], with rank spans flattened to plain bounds so events
+/// serialize without `Range`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LaneTag {
+    /// The one serialized host memory bus.
+    Bus,
+    /// The host CPU (merge compute).
+    Host,
+    /// Kernel lanes of ranks `[lo, hi)`.
+    Ranks { lo: u32, hi: u32 },
+    /// No resource (fences / barriers).
+    Barrier,
+}
+
+impl From<Option<Lane>> for LaneTag {
+    fn from(l: Option<Lane>) -> Self {
+        match l {
+            None => LaneTag::Barrier,
+            Some(Lane::Bus) => LaneTag::Bus,
+            Some(Lane::Host) => LaneTag::Host,
+            Some(Lane::Ranks(r)) => LaneTag::Ranks { lo: r.start, hi: r.end },
+        }
+    }
+}
+
+/// One captured span of modeled work.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Trace-wide event id (assigned by the sink, dense from 0).
+    pub id: u64,
+    /// What kind of command occupied the lane.
+    pub kind: CmdKind,
+    pub lane: LaneTag,
+    /// Modeled start instant (seconds on the trace's timeline).
+    pub start: f64,
+    /// Modeled duration; `start + secs` is the finish instant, exactly
+    /// (the schedulers reserve lanes as `finish = start + secs`).
+    pub secs: f64,
+    /// Payload bytes moved (0 for launches / fences).
+    pub bytes: u64,
+    /// Tenant index, on scheduler-level events.
+    pub tenant: Option<u32>,
+    /// Request id the recording side stamped, if any.
+    pub req: Option<u64>,
+    /// Ids of earlier events this one waited on (the reduced dependency
+    /// edge set the scheduler actually issued against).
+    pub deps: Vec<u64>,
+}
+
+impl TraceEvent {
+    /// Finish instant.
+    pub fn end(&self) -> f64 {
+        self.start + self.secs
+    }
+}
+
+/// A recorded trace: capture context plus the event list in id order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    /// Capture source: `"queue"` (PimSet/session level) or `"sched"`
+    /// (multi-tenant scheduler level).
+    pub source: String,
+    /// Rank count of the traced fleet (sizes the rank tracks).
+    pub n_ranks: u32,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// An empty trace shell (tests and fallbacks).
+    pub fn empty(source: &str, n_ranks: u32) -> Self {
+        Trace { source: source.to_string(), n_ranks, events: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Last finish instant over all events (0 for an empty trace).
+    pub fn span(&self) -> f64 {
+        self.events.iter().map(TraceEvent::end).fold(0.0, f64::max)
+    }
+}
+
+#[derive(Default)]
+struct SinkBuf {
+    source: String,
+    n_ranks: u32,
+    events: Vec<TraceEvent>,
+}
+
+/// Shared handle the capture points append [`TraceEvent`]s through.
+/// Cloning is cheap (one `Arc`); `RunConfig` carries an
+/// `Option<TraceSink>` so the flag threads through every existing
+/// config without cost when absent.
+#[derive(Clone, Default)]
+pub struct TraceSink {
+    inner: Arc<Mutex<SinkBuf>>,
+}
+
+impl TraceSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the capture context (source label + fleet rank count).
+    /// Called by the allocation/build paths that install the sink; the
+    /// last writer wins, which is what re-allocation wants.
+    pub fn set_geometry(&self, source: &str, n_ranks: u32) {
+        let mut b = self.inner.lock().unwrap();
+        b.source = source.to_string();
+        b.n_ranks = n_ranks;
+    }
+
+    /// Id the next pushed event will receive.
+    pub fn next_id(&self) -> u64 {
+        self.inner.lock().unwrap().events.len() as u64
+    }
+
+    /// Append an event; its `id` field is overwritten with the assigned
+    /// dense id, which is returned.
+    pub fn push(&self, mut ev: TraceEvent) -> u64 {
+        let mut b = self.inner.lock().unwrap();
+        let id = b.events.len() as u64;
+        ev.id = id;
+        b.events.push(ev);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Clone out the recorded trace (the sink keeps recording).
+    pub fn snapshot(&self) -> Trace {
+        let b = self.inner.lock().unwrap();
+        Trace {
+            source: b.source.clone(),
+            n_ranks: b.n_ranks,
+            events: b.events.clone(),
+        }
+    }
+}
+
+impl fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let b = self.inner.lock().unwrap();
+        write!(
+            f,
+            "TraceSink {{ source: {:?}, n_ranks: {}, events: {} }}",
+            b.source,
+            b.n_ranks,
+            b.events.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_assigns_dense_ids_and_snapshots() {
+        let sink = TraceSink::new();
+        sink.set_geometry("queue", 2);
+        assert!(sink.is_empty());
+        let ev = |start: f64| TraceEvent {
+            id: 999, // overwritten by the sink
+            kind: CmdKind::Push,
+            lane: LaneTag::Bus,
+            start,
+            secs: 0.5,
+            bytes: 64,
+            tenant: None,
+            req: None,
+            deps: Vec::new(),
+        };
+        assert_eq!(sink.push(ev(0.0)), 0);
+        assert_eq!(sink.next_id(), 1);
+        assert_eq!(sink.push(ev(0.5)), 1);
+        let t = sink.snapshot();
+        assert_eq!(t.source, "queue");
+        assert_eq!(t.n_ranks, 2);
+        assert_eq!(t.events.len(), 2);
+        assert_eq!(t.events[1].id, 1);
+        assert_eq!(t.span(), 1.0);
+        // shared handle: a clone records into the same buffer
+        let clone = sink.clone();
+        clone.push(ev(1.0));
+        assert_eq!(sink.len(), 3);
+    }
+
+    #[test]
+    fn lane_tag_mirrors_lanes() {
+        assert_eq!(LaneTag::from(Some(Lane::Bus)), LaneTag::Bus);
+        assert_eq!(LaneTag::from(Some(Lane::Host)), LaneTag::Host);
+        assert_eq!(
+            LaneTag::from(Some(Lane::Ranks(2..5))),
+            LaneTag::Ranks { lo: 2, hi: 5 }
+        );
+        assert_eq!(LaneTag::from(None), LaneTag::Barrier);
+    }
+}

@@ -1,0 +1,265 @@
+//! Cursor-wise deterministic replay of a recorded [`Trace`].
+//!
+//! The engine orders events by `(start, id)` once at construction and
+//! then steps a cursor over them — forwards, backwards, by simulated
+//! time, or by seek ratio — the incident-replay idiom: load a recorded
+//! timeline, scrub to the interesting window, single-step through it.
+//! Everything is pure function of the trace, so two engines built from
+//! bit-identical traces visit bit-identical event sequences.
+
+use super::{Trace, TraceEvent};
+
+/// Replays a recorded trace with seek / step / advance time controls.
+#[derive(Clone, Debug)]
+pub struct ReplayEngine {
+    /// Events ordered by `(start, id)` (total order: `total_cmp` then
+    /// id, so NaN-free schedules and duplicates both behave).
+    events: Vec<TraceEvent>,
+    /// How many duplicate-id events were dropped at load (first wins).
+    pub dropped_duplicates: usize,
+    /// Index of the next event the cursor will fire.
+    cursor: usize,
+    /// Current replay instant on the trace timeline.
+    now: f64,
+    /// Trace time bounds `[t0, t1]`.
+    t0: f64,
+    t1: f64,
+    playing: bool,
+    speed: f64,
+}
+
+impl ReplayEngine {
+    pub fn new(trace: &Trace) -> Self {
+        let mut events = trace.events.clone();
+        events.sort_by(|a, b| a.start.total_cmp(&b.start).then(a.id.cmp(&b.id)));
+        // Drop duplicate ids (first occurrence in time order wins) so a
+        // concatenated or hand-edited trace still replays sanely.
+        let mut seen = std::collections::BTreeSet::new();
+        let before = events.len();
+        events.retain(|e| seen.insert(e.id));
+        let dropped_duplicates = before - events.len();
+        let t0 = events.first().map(|e| e.start).unwrap_or(0.0);
+        let t1 = events
+            .iter()
+            .map(TraceEvent::end)
+            .fold(t0, f64::max);
+        ReplayEngine {
+            events,
+            dropped_duplicates,
+            cursor: 0,
+            now: t0,
+            t0,
+            t1,
+            playing: false,
+            speed: 1.0,
+        }
+    }
+
+    /// All events in replay order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Current replay instant.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Index of the next event to fire (== `len()` when exhausted).
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Trace time bounds.
+    pub fn bounds(&self) -> (f64, f64) {
+        (self.t0, self.t1)
+    }
+
+    pub fn is_playing(&self) -> bool {
+        self.playing
+    }
+
+    pub fn play(&mut self) {
+        self.playing = true;
+    }
+
+    pub fn pause(&mut self) {
+        self.playing = false;
+    }
+
+    /// Replay speed multiplier for [`advance`](Self::advance); clamped
+    /// positive.
+    pub fn set_speed(&mut self, speed: f64) {
+        self.speed = if speed > 0.0 { speed } else { 1.0 };
+    }
+
+    /// Jump to `t0 + ratio * (t1 - t0)`; ratio clamps to `[0, 1]`.
+    pub fn seek_ratio(&mut self, ratio: f64) {
+        let r = ratio.clamp(0.0, 1.0);
+        self.seek_time(self.t0 + r * (self.t1 - self.t0));
+    }
+
+    /// Jump the cursor so every event with `start < t` has fired and
+    /// everything at or after `t` is still pending.
+    pub fn seek_time(&mut self, t: f64) {
+        let t = t.clamp(self.t0, self.t1);
+        self.now = t;
+        self.cursor = self.events.partition_point(|e| e.start < t);
+    }
+
+    /// Fire the next pending event, advancing `now` to its start.
+    /// Returns `None` when exhausted (and pauses).
+    pub fn step_next(&mut self) -> Option<&TraceEvent> {
+        if self.cursor >= self.events.len() {
+            self.playing = false;
+            return None;
+        }
+        let ev = &self.events[self.cursor];
+        self.cursor += 1;
+        self.now = ev.start;
+        Some(ev)
+    }
+
+    /// Un-fire the most recently fired event, moving `now` back to its
+    /// start. Returns `None` at the beginning.
+    pub fn step_prev(&mut self) -> Option<&TraceEvent> {
+        if self.cursor == 0 {
+            return None;
+        }
+        self.cursor -= 1;
+        let ev = &self.events[self.cursor];
+        self.now = ev.start;
+        Some(ev)
+    }
+
+    /// Advance replay time by `dt * speed` (only while playing) and
+    /// return the events whose start instants were crossed, in order.
+    /// Auto-pauses when the end of the trace is reached.
+    pub fn advance(&mut self, dt: f64) -> Vec<TraceEvent> {
+        if !self.playing || dt <= 0.0 {
+            return Vec::new();
+        }
+        let target = (self.now + dt * self.speed).min(self.t1);
+        let end = self.events.partition_point(|e| e.start <= target);
+        let fired = self.events[self.cursor..end].to_vec();
+        self.cursor = end;
+        self.now = target;
+        if self.now >= self.t1 && self.cursor >= self.events.len() {
+            self.playing = false;
+        }
+        fired
+    }
+
+    /// Events whose span covers instant `t` (the "what was running"
+    /// query a scrubber UI asks).
+    pub fn active_at(&self, t: f64) -> Vec<&TraceEvent> {
+        self.events
+            .iter()
+            .filter(|e| e.start <= t && t < e.end().max(e.start + f64::EPSILON))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::queue::CmdKind;
+    use crate::coordinator::trace::LaneTag;
+
+    fn ev(id: u64, start: f64, secs: f64) -> TraceEvent {
+        TraceEvent {
+            id,
+            kind: CmdKind::Push,
+            lane: LaneTag::Bus,
+            start,
+            secs,
+            bytes: 0,
+            tenant: None,
+            req: None,
+            deps: Vec::new(),
+        }
+    }
+
+    fn trace(events: Vec<TraceEvent>) -> Trace {
+        Trace { source: "queue".into(), n_ranks: 1, events }
+    }
+
+    #[test]
+    fn steps_fire_in_start_then_id_order() {
+        // deliberately shuffled input, with a same-start pair (2, 1)
+        let t = trace(vec![ev(3, 2.0, 0.5), ev(1, 1.0, 0.5), ev(2, 1.0, 0.2), ev(0, 0.0, 1.0)]);
+        let mut r = ReplayEngine::new(&t);
+        let order: Vec<u64> = std::iter::from_fn(|| r.step_next().map(|e| e.id)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        assert_eq!(r.now(), 2.0);
+        assert!(r.step_next().is_none());
+        // and back
+        assert_eq!(r.step_prev().unwrap().id, 3);
+        assert_eq!(r.step_prev().unwrap().id, 2);
+        assert_eq!(r.cursor(), 2);
+    }
+
+    #[test]
+    fn seek_and_advance_cross_the_right_events() {
+        let t = trace(vec![ev(0, 0.0, 1.0), ev(1, 1.0, 1.0), ev(2, 2.0, 1.0)]);
+        let mut r = ReplayEngine::new(&t);
+        r.seek_ratio(0.5); // now = 1.5: events starting before 1.5 fired
+        assert_eq!(r.cursor(), 2);
+        assert_eq!(r.now(), 1.5);
+        r.play();
+        let fired = r.advance(10.0); // overshoots: clamps to t1, fires the rest
+        assert_eq!(fired.iter().map(|e| e.id).collect::<Vec<_>>(), vec![2]);
+        assert!(!r.is_playing(), "auto-paused at end");
+        assert_eq!(r.now(), 3.0);
+        // paused engines don't move
+        assert!(r.advance(1.0).is_empty());
+        // speed scales the crossed window
+        r.seek_time(0.0);
+        r.play();
+        r.set_speed(2.0);
+        let fired = r.advance(0.6); // covers [0, 1.2]: ids 0 and 1
+        assert_eq!(fired.iter().map(|e| e.id).collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn active_at_reports_overlapping_spans() {
+        let t = trace(vec![ev(0, 0.0, 2.0), ev(1, 1.0, 2.0), ev(2, 4.0, 1.0)]);
+        let r = ReplayEngine::new(&t);
+        let ids: Vec<u64> = r.active_at(1.5).iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![0, 1]);
+        assert!(r.active_at(3.5).is_empty());
+    }
+
+    #[test]
+    fn empty_trace_is_a_safe_no_op() {
+        let mut r = ReplayEngine::new(&Trace::empty("queue", 4));
+        assert!(r.is_empty());
+        assert_eq!(r.bounds(), (0.0, 0.0));
+        assert!(r.step_next().is_none());
+        assert!(r.step_prev().is_none());
+        r.play();
+        assert!(r.advance(1.0).is_empty());
+        r.seek_ratio(1.0);
+        assert_eq!(r.now(), 0.0);
+    }
+
+    #[test]
+    fn duplicate_ids_dropped_first_wins() {
+        let mut dup = ev(1, 5.0, 1.0);
+        dup.bytes = 999;
+        let t = trace(vec![ev(1, 1.0, 1.0), dup, ev(0, 0.0, 1.0)]);
+        let r = ReplayEngine::new(&t);
+        assert_eq!(r.dropped_duplicates, 1);
+        assert_eq!(r.len(), 2);
+        // the earlier (start = 1.0) copy of id 1 survived
+        assert_eq!(r.events()[1].bytes, 0);
+    }
+}

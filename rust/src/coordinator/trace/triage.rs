@@ -1,0 +1,412 @@
+//! Hotspot triage over a recorded trace: bus-saturation windows,
+//! straggler ranks, and dependency-stall chains (critical path).
+//!
+//! Everything here is a deterministic pure function of the trace —
+//! ranking ties break on `total_cmp` then window/event index, so two
+//! bit-identical traces always produce bit-identical reports (the
+//! replay determinism tests serialize reports and compare bytes).
+
+use super::{LaneTag, Trace};
+use std::fmt::Write as _;
+
+/// One fixed-width window of bus occupancy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BusWindow {
+    pub start: f64,
+    pub end: f64,
+    /// Bus-busy seconds inside the window (clipped to the window).
+    pub busy: f64,
+    /// `busy / (end - start)`, in `[0, 1]` up to float error.
+    pub frac: f64,
+}
+
+/// Kernel-lane busy seconds attributed to one rank.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankLoad {
+    pub rank: u32,
+    pub busy: f64,
+}
+
+/// An event that sat waiting on its dependencies before starting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StallEdge {
+    /// The stalled event's id.
+    pub event: u64,
+    /// Seconds between its latest dependency finishing and it starting.
+    pub wait: f64,
+}
+
+/// The triage summary: saturation windows ranked hottest-first,
+/// straggler ranks busiest-first, the critical path, and the worst
+/// dependency stalls.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TriageReport {
+    pub source: String,
+    pub events: usize,
+    /// Last finish instant in the trace.
+    pub span: f64,
+    /// Total bus-busy seconds.
+    pub bus_busy: f64,
+    /// `bus_busy / span` (0 for an empty trace).
+    pub bus_frac: f64,
+    /// Occupancy windows, ranked by `frac` descending.
+    pub windows: Vec<BusWindow>,
+    /// Per-rank kernel busy seconds, busiest first.
+    pub stragglers: Vec<RankLoad>,
+    /// `max(busy) / mean(busy)` over ranks that did any work (1.0 when
+    /// perfectly balanced or fewer than 2 active ranks).
+    pub imbalance: f64,
+    /// Event ids of the longest dependency chain, in execution order.
+    pub critical_path: Vec<u64>,
+    /// Sum of `secs` along the critical path.
+    pub critical_secs: f64,
+    /// Worst dependency stalls, longest wait first.
+    pub stalls: Vec<StallEdge>,
+}
+
+/// [`analyze_with`] at the default window count (16).
+pub fn analyze(trace: &Trace) -> TriageReport {
+    analyze_with(trace, 16)
+}
+
+/// Rank the trace's hotspots. `n_windows` buckets the timeline for
+/// bus-occupancy ranking; stalls and windows are truncated to the top 8
+/// after ranking so reports stay table-sized.
+pub fn analyze_with(trace: &Trace, n_windows: usize) -> TriageReport {
+    let span = trace.span();
+    let mut report = TriageReport {
+        source: trace.source.clone(),
+        events: trace.events.len(),
+        span,
+        bus_busy: 0.0,
+        bus_frac: 0.0,
+        windows: Vec::new(),
+        stragglers: Vec::new(),
+        imbalance: 1.0,
+        critical_path: Vec::new(),
+        critical_secs: 0.0,
+        stalls: Vec::new(),
+    };
+    if trace.is_empty() || span <= 0.0 || n_windows == 0 {
+        return report;
+    }
+
+    // --- bus occupancy, total and windowed -------------------------------
+    let width = span / n_windows as f64;
+    let mut windows: Vec<BusWindow> = (0..n_windows)
+        .map(|w| BusWindow {
+            start: w as f64 * width,
+            end: (w + 1) as f64 * width,
+            busy: 0.0,
+            frac: 0.0,
+        })
+        .collect();
+    for e in &trace.events {
+        if e.lane != LaneTag::Bus || e.secs <= 0.0 {
+            continue;
+        }
+        report.bus_busy += e.secs;
+        let lo = ((e.start / width) as usize).min(n_windows - 1);
+        let hi = ((e.end() / width) as usize).min(n_windows - 1);
+        for (w, win) in windows.iter_mut().enumerate().take(hi + 1).skip(lo) {
+            let clip = e.end().min((w + 1) as f64 * width) - e.start.max(w as f64 * width);
+            if clip > 0.0 {
+                win.busy += clip;
+            }
+        }
+    }
+    for w in &mut windows {
+        w.frac = w.busy / width;
+    }
+    report.bus_frac = report.bus_busy / span;
+    // hottest first; stable on (frac, then original window order)
+    windows.sort_by(|a, b| b.frac.total_cmp(&a.frac).then(a.start.total_cmp(&b.start)));
+    windows.truncate(8);
+    report.windows = windows;
+
+    // --- straggler ranks -------------------------------------------------
+    let mut busy = vec![0.0f64; trace.n_ranks as usize];
+    for e in &trace.events {
+        if let LaneTag::Ranks { lo, hi } = e.lane {
+            for r in lo..hi.min(trace.n_ranks) {
+                busy[r as usize] += e.secs;
+            }
+        }
+    }
+    let mut loads: Vec<RankLoad> = busy
+        .iter()
+        .enumerate()
+        .filter(|(_, b)| **b > 0.0)
+        .map(|(r, b)| RankLoad { rank: r as u32, busy: *b })
+        .collect();
+    if loads.len() >= 2 {
+        let mean = loads.iter().map(|l| l.busy).sum::<f64>() / loads.len() as f64;
+        let max = loads.iter().map(|l| l.busy).fold(0.0, f64::max);
+        report.imbalance = max / mean;
+    }
+    loads.sort_by(|a, b| b.busy.total_cmp(&a.busy).then(a.rank.cmp(&b.rank)));
+    loads.truncate(8);
+    report.stragglers = loads;
+
+    // --- critical path & stalls ------------------------------------------
+    // Events arrive in id order from the sinks, and deps always point at
+    // earlier ids, so one forward pass computes the longest-chain cost.
+    // Index events by id (ids may be sparse in hand-edited traces).
+    let idx: std::collections::BTreeMap<u64, usize> =
+        trace.events.iter().enumerate().map(|(i, e)| (e.id, i)).collect();
+    let n = trace.events.len();
+    let mut cp = vec![0.0f64; n]; // cost of the longest chain ending here
+    let mut pred = vec![None::<usize>; n];
+    for (i, e) in trace.events.iter().enumerate() {
+        let mut best = 0.0f64;
+        let mut best_pred = None;
+        let mut latest_dep_end = f64::NEG_INFINITY;
+        for d in &e.deps {
+            if let Some(&j) = idx.get(d) {
+                if j >= i {
+                    continue; // ignore forward/self edges defensively
+                }
+                latest_dep_end = latest_dep_end.max(trace.events[j].end());
+                if cp[j] > best || (cp[j] == best && best_pred.is_none()) {
+                    best = cp[j];
+                    best_pred = Some(j);
+                }
+            }
+        }
+        cp[i] = best + e.secs;
+        pred[i] = best_pred;
+        if latest_dep_end > f64::NEG_INFINITY {
+            let wait = e.start - latest_dep_end;
+            if wait > 0.0 {
+                report.stalls.push(StallEdge { event: e.id, wait });
+            }
+        }
+    }
+    if let Some((end, _)) = cp
+        .iter()
+        .enumerate()
+        .max_by(|(i, a), (j, b)| a.total_cmp(b).then(j.cmp(i)))
+    {
+        report.critical_secs = cp[end];
+        let mut path = Vec::new();
+        let mut cur = Some(end);
+        while let Some(i) = cur {
+            path.push(trace.events[i].id);
+            cur = pred[i];
+        }
+        path.reverse();
+        report.critical_path = path;
+    }
+    report
+        .stalls
+        .sort_by(|a, b| b.wait.total_cmp(&a.wait).then(a.event.cmp(&b.event)));
+    report.stalls.truncate(8);
+    report
+}
+
+impl TriageReport {
+    /// Human-readable summary table.
+    pub fn table(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "triage: {} trace, {} events, span {:.6} s",
+            self.source, self.events, self.span
+        );
+        let _ = writeln!(
+            s,
+            "bus: {:.6} s busy ({:.1}% of span)",
+            self.bus_busy,
+            self.bus_frac * 100.0
+        );
+        if !self.windows.is_empty() {
+            s.push_str("hottest bus windows:\n");
+            for w in &self.windows {
+                let _ = writeln!(
+                    s,
+                    "  [{:>9.6}, {:>9.6}) s  {:>5.1}% busy",
+                    w.start,
+                    w.end,
+                    w.frac * 100.0
+                );
+            }
+        }
+        if !self.stragglers.is_empty() {
+            let _ = writeln!(s, "straggler ranks (imbalance {:.3}):", self.imbalance);
+            for l in &self.stragglers {
+                let _ = writeln!(s, "  rank {:>3}  {:>9.6} s busy", l.rank, l.busy);
+            }
+        }
+        if !self.critical_path.is_empty() {
+            let _ = writeln!(
+                s,
+                "critical path: {:.6} s over {} events: {:?}",
+                self.critical_secs,
+                self.critical_path.len(),
+                self.critical_path
+            );
+        }
+        if !self.stalls.is_empty() {
+            s.push_str("worst dependency stalls:\n");
+            for st in &self.stalls {
+                let _ = writeln!(s, "  event {:>4}  waited {:>9.6} s", st.event, st.wait);
+            }
+        }
+        s
+    }
+
+    /// Machine form (floats shortest-roundtrip via `{:e}`, so two
+    /// bit-identical reports serialize to identical bytes).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"schema\": \"triage/v1\",\n");
+        let _ = writeln!(s, "  \"source\": \"{}\",", self.source);
+        let _ = writeln!(s, "  \"events\": {},", self.events);
+        let _ = writeln!(s, "  \"span\": {:e},", self.span);
+        let _ = writeln!(s, "  \"bus_busy\": {:e},", self.bus_busy);
+        let _ = writeln!(s, "  \"bus_frac\": {:e},", self.bus_frac);
+        s.push_str("  \"windows\": [");
+        for (i, w) in self.windows.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            let _ = write!(
+                s,
+                "{{\"start\": {:e}, \"end\": {:e}, \"busy\": {:e}, \"frac\": {:e}}}",
+                w.start, w.end, w.busy, w.frac
+            );
+        }
+        s.push_str("],\n  \"stragglers\": [");
+        for (i, l) in self.stragglers.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            let _ = write!(s, "{{\"rank\": {}, \"busy\": {:e}}}", l.rank, l.busy);
+        }
+        let _ = writeln!(s, "],\n  \"imbalance\": {:e},", self.imbalance);
+        s.push_str("  \"critical_path\": [");
+        for (i, id) in self.critical_path.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            let _ = write!(s, "{id}");
+        }
+        let _ = writeln!(s, "],\n  \"critical_secs\": {:e},", self.critical_secs);
+        s.push_str("  \"stalls\": [");
+        for (i, st) in self.stalls.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            let _ = write!(s, "{{\"event\": {}, \"wait\": {:e}}}", st.event, st.wait);
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::queue::CmdKind;
+    use crate::coordinator::trace::TraceEvent;
+
+    fn ev(id: u64, lane: LaneTag, start: f64, secs: f64, deps: Vec<u64>) -> TraceEvent {
+        TraceEvent {
+            id,
+            kind: match lane {
+                LaneTag::Bus => CmdKind::Push,
+                LaneTag::Host => CmdKind::HostMerge,
+                LaneTag::Ranks { .. } => CmdKind::Launch,
+                LaneTag::Barrier => CmdKind::Fence,
+            },
+            lane,
+            start,
+            secs,
+            bytes: 0,
+            tenant: None,
+            req: None,
+            deps,
+        }
+    }
+
+    /// An injected saturation burst must rank as the top window.
+    #[test]
+    fn injected_bus_saturation_window_ranks_top() {
+        let mut events = Vec::new();
+        // sparse background: a short push every 1 s over [0, 8)
+        for i in 0..8u64 {
+            events.push(ev(i, LaneTag::Bus, i as f64, 0.05, vec![]));
+        }
+        // saturation burst: the bus is 100% busy over [4.0, 5.0)
+        for j in 0..10u64 {
+            events.push(ev(8 + j, LaneTag::Bus, 4.0 + j as f64 * 0.1, 0.1, vec![]));
+        }
+        let t = Trace { source: "queue".into(), n_ranks: 1, events };
+        let r = analyze_with(&t, 8); // 8 windows of ~1 s over span ≈ 8.05
+        let top = &r.windows[0];
+        assert!(
+            top.start <= 4.0 && 4.0 < top.end,
+            "top window {:?} should cover the injected burst at 4.0",
+            top
+        );
+        assert!(top.frac > 0.9, "burst window ~saturated, got {}", top.frac);
+        assert!(r.windows[1].frac < top.frac);
+    }
+
+    #[test]
+    fn stragglers_and_imbalance_rank_busiest_rank_first() {
+        let events = vec![
+            ev(0, LaneTag::Ranks { lo: 0, hi: 4 }, 0.0, 1.0, vec![]),
+            ev(1, LaneTag::Ranks { lo: 2, hi: 3 }, 1.0, 3.0, vec![]),
+        ];
+        let t = Trace { source: "queue".into(), n_ranks: 4, events };
+        let r = analyze(&t);
+        assert_eq!(r.stragglers[0].rank, 2);
+        assert_eq!(r.stragglers[0].busy, 4.0);
+        // mean = (1+1+4+1)/4 = 1.75, max = 4
+        assert!((r.imbalance - 4.0 / 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn critical_path_follows_longest_chain_and_finds_stalls() {
+        // 0 -> 1 -> 3 (chain 0.5+2.0+1.0 = 3.5) beats 0 -> 2 -> 3 via cp;
+        // 3 starts at 4.0 but its latest dep (1) ends at 2.5: stall 1.5.
+        let events = vec![
+            ev(0, LaneTag::Bus, 0.0, 0.5, vec![]),
+            ev(1, LaneTag::Ranks { lo: 0, hi: 1 }, 0.5, 2.0, vec![0]),
+            ev(2, LaneTag::Bus, 0.5, 0.1, vec![0]),
+            ev(3, LaneTag::Host, 4.0, 1.0, vec![1, 2]),
+        ];
+        let t = Trace { source: "queue".into(), n_ranks: 1, events };
+        let r = analyze(&t);
+        assert_eq!(r.critical_path, vec![0, 1, 3]);
+        assert!((r.critical_secs - 3.5).abs() < 1e-12);
+        assert_eq!(r.stalls[0].event, 3);
+        assert!((r.stalls[0].wait - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_trace_yields_inert_report() {
+        let r = analyze(&Trace::empty("queue", 4));
+        assert_eq!(r.events, 0);
+        assert_eq!(r.span, 0.0);
+        assert!(r.windows.is_empty() && r.stalls.is_empty() && r.critical_path.is_empty());
+        assert_eq!(r.imbalance, 1.0);
+        // serializers don't choke on the empty shell
+        assert!(r.to_json().contains("\"triage/v1\""));
+        assert!(r.table().contains("0 events"));
+    }
+
+    #[test]
+    fn report_json_is_deterministic() {
+        let events = vec![
+            ev(0, LaneTag::Bus, 0.0, 1.0 / 3.0, vec![]),
+            ev(1, LaneTag::Ranks { lo: 0, hi: 2 }, 1.0 / 3.0, 0.7, vec![0]),
+        ];
+        let t = Trace { source: "queue".into(), n_ranks: 2, events };
+        let a = analyze(&t).to_json();
+        let b = analyze(&t.clone()).to_json();
+        assert_eq!(a, b);
+        assert!(crate::util::json::parse_json(&a).is_ok());
+    }
+}

@@ -49,6 +49,7 @@ pub fn amortized(quick: bool) -> Table {
             scale: super::harness_scale(name) * if quick { 0.1 } else { 0.25 },
             seed: 42,
             exec: ExecChoice::Auto,
+            trace: None,
         };
         let ser = serve(w.as_ref(), &rc, requests, false);
         let pip = serve(w.as_ref(), &rc, requests, true);

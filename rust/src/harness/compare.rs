@@ -73,6 +73,7 @@ pub fn compare_all(quick: bool) -> Vec<CompareRow> {
                 seed: 42,
                 sys,
                 exec: Default::default(),
+                trace: None,
             };
             b.run(&rc)
         };

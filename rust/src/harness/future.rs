@@ -74,6 +74,7 @@ pub fn future_benches(quick: bool) -> Table {
                 seed: 42,
                 sys,
                 exec: Default::default(),
+                trace: None,
             };
             let r = b.run(&rc);
             assert!(r.verified, "{name} failed under ablation");
@@ -110,6 +111,7 @@ pub fn future_interdpu(quick: bool) -> Table {
             seed: 42,
             sys: SystemConfig::p21_rank(),
             exec: Default::default(),
+            trace: None,
         };
         let r = b.run(&rc);
         assert!(r.verified);

@@ -11,6 +11,7 @@ pub mod multitenant;
 pub mod overlap;
 pub mod scaling;
 pub mod tables;
+pub mod traced;
 
 use crate::util::table::Table;
 use std::path::Path;
@@ -20,11 +21,13 @@ use std::path::Path;
 /// evaluation; `amortized` = the cold/warm/pipelined serving study over
 /// persistent sessions; `multitenant` = the rank-sliced multi-tenant
 /// scheduling study — policies and slice splits; `overlap` = serialized
-/// vs async command queues, the derived transfer/kernel overlap).
-pub const ALL_IDS: [&str; 25] = [
+/// vs async command queues, the derived transfer/kernel overlap;
+/// `traced` = trace capture, replay, and hotspot triage of a pipelined
+/// serving window).
+pub const ALL_IDS: [&str; 26] = [
     "table1", "table2", "table3", "table4", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
     "fig10", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
-    "fig22", "future", "amortized", "multitenant", "overlap",
+    "fig22", "future", "amortized", "multitenant", "overlap", "traced",
 ];
 
 /// Per-benchmark dataset scale used by the harness (relative to Table 3
@@ -78,6 +81,7 @@ pub fn run_id(id: &str, outdir: &Path, quick: bool) -> anyhow::Result<()> {
         ],
         "amortized" => vec![amortized::amortized(quick)],
         "overlap" => vec![overlap::overlap(quick)],
+        "traced" => vec![traced::traced(quick)],
         "multitenant" => vec![
             multitenant::multitenant_policies(quick),
             multitenant::multitenant_splits(quick),

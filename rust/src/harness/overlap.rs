@@ -43,6 +43,7 @@ pub fn overlap(quick: bool) -> Table {
             scale: super::harness_scale(name) * if quick { 0.1 } else { 0.25 },
             seed: 42,
             exec: ExecChoice::Auto,
+            trace: None,
         };
         let ser = serve(w.as_ref(), &rc, requests, false);
         let asy = serve(w.as_ref(), &rc, requests, true);

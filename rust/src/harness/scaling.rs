@@ -100,6 +100,7 @@ pub fn fig14(quick: bool) -> Table {
                 scale: super::harness_scale(b.name()) * if quick { 0.5 } else { 1.0 },
                 seed: 42,
                 exec: Default::default(),
+                trace: None,
             };
             let r = b.run(&rc);
             assert!(r.verified, "{} failed at {nd} DPUs", b.name());

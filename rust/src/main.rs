@@ -19,15 +19,29 @@
 //!            [--json] [--quick]      multi-tenant rank-sliced scheduling
 //! repro compare [--quick]            Fig. 16 + Fig. 17
 //! repro estimate --dpus N            fleet estimator via the PJRT artifact
+//! repro trace [--bench N] [--requests R] [--json]   traced pipelined
+//!            serving + hotspot triage; or --load <trace.v1.json> to
+//!            triage a recorded trace
 //! repro all [--quick]                everything, CSVs into --outdir
 //! ```
 //! All outputs land in `--outdir` (default `results/`). The global
 //! `--seed S` flag (default 42) drives dataset synthesis *and* traffic
 //! generation for `prim`, `serve`, and `sched`; harness tables/figures
 //! pin their own seeds so regenerated artifacts stay comparable.
+//!
+//! The global `--trace [path]` flag (on `prim`, `serve`, and `sched`)
+//! records the modeled timeline of every operation into a Chrome-trace
+//! JSON at `path` (default `<outdir>/trace.json`; load it in Perfetto
+//! or `chrome://tracing`) plus a compact native `trace/v1` sibling at
+//! `<path minus .json>.v1.json` (the form `repro trace --load` and the
+//! replay engine consume). See `coordinator::trace`.
 
 use prim_pim::arch::SystemConfig;
-use prim_pim::coordinator::{run_sched, ExecChoice, PolicyKind, SchedConfig, TenantSpec};
+use prim_pim::coordinator::trace::analyze;
+use prim_pim::coordinator::{
+    parse_trace, run_sched, ExecChoice, PolicyKind, ReplayEngine, SchedConfig, TenantSpec,
+    TraceSink,
+};
 use prim_pim::harness::{self, ALL_IDS};
 use prim_pim::prim::common::{all_benches, bench_by_name, BenchResult, RunConfig};
 use prim_pim::prim::workload::{serve, workload_by_name};
@@ -104,8 +118,8 @@ impl Args {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: repro <list|table|figure|micro|prim|serve|sched|compare|estimate|all> \
-         [--seed S] [args]\n\
+        "usage: repro <list|table|figure|micro|prim|serve|sched|trace|compare|estimate|all> \
+         [--seed S] [--trace [path]] [args]\n\
          run `repro list` for the experiment index"
     );
     std::process::exit(2);
@@ -161,6 +175,43 @@ fn write_bench_json(outdir: &Path, results: &[BenchResult]) -> anyhow::Result<()
     Ok(())
 }
 
+/// Resolve the `--trace [path]` flag: bare `--trace` defaults to
+/// `<outdir>/trace.json`.
+fn trace_path(args: &Args, outdir: &Path) -> Option<PathBuf> {
+    let v = args.flags.get("trace")?;
+    if v == "true" {
+        Some(outdir.join("trace.json"))
+    } else {
+        Some(PathBuf::from(v))
+    }
+}
+
+/// Export a captured trace: Chrome-trace JSON at `path` (Perfetto /
+/// `chrome://tracing`), native `trace/v1` at `<path minus .json>.v1.json`.
+fn write_trace(path: &Path, sink: &TraceSink) -> anyhow::Result<()> {
+    let trace = sink.snapshot();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, trace.to_chrome_json())?;
+    let s = path.to_string_lossy();
+    let native = PathBuf::from(match s.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.v1.json"),
+        None => format!("{s}.v1.json"),
+    });
+    std::fs::write(&native, trace.to_json())?;
+    println!(
+        "wrote {} ({} events, {} source) and {}",
+        path.display(),
+        trace.events.len(),
+        trace.source,
+        native.display()
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
@@ -173,6 +224,10 @@ fn main() -> anyhow::Result<()> {
     // global seed: one flag drives dataset synthesis AND traffic
     // generation, so any run is reproducible from the command line
     let seed: u64 = args.flag("seed", 42);
+    // global trace capture: one sink threads through every RunConfig /
+    // SchedConfig the subcommand builds; exported after the run
+    let trace_out = trace_path(&args, &outdir);
+    let trace_sink = trace_out.as_ref().map(|_| TraceSink::new());
 
     match cmd {
         "list" => {
@@ -232,6 +287,7 @@ fn main() -> anyhow::Result<()> {
                         seed,
                         sys: sys.clone(),
                         exec,
+                        trace: trace_sink.clone(),
                     };
                     let t0 = std::time::Instant::now();
                     let ser = serve(w.as_ref(), &rc, requests, false);
@@ -278,6 +334,7 @@ fn main() -> anyhow::Result<()> {
                     seed,
                     sys: sys.clone(),
                     exec,
+                    trace: trace_sink.clone(),
                 };
                 let t0 = std::time::Instant::now();
                 let r = b.run(&rc);
@@ -314,6 +371,7 @@ fn main() -> anyhow::Result<()> {
                 seed,
                 sys: system_for(n_dpus),
                 exec: args.exec_choice(),
+                trace: trace_sink.clone(),
             };
             let t0 = std::time::Instant::now();
             let rep = serve(w.as_ref(), &rc, n_requests, pipeline);
@@ -379,6 +437,7 @@ fn main() -> anyhow::Result<()> {
                 seed,
                 exec: args.exec_choice(),
                 tenants,
+                trace: trace_sink.clone(),
             };
             let t0 = std::time::Instant::now();
             let rep = run_sched(&cfg)?;
@@ -419,6 +478,70 @@ fn main() -> anyhow::Result<()> {
                 let path = outdir.join("BENCH_SCHED.json");
                 std::fs::write(&path, rep.to_json())?;
                 println!("wrote {}", path.display());
+            }
+        }
+        "trace" => {
+            // Two modes: triage a recorded native trace (--load, the CI
+            // validation path), or run a traced pipelined serving window
+            // and triage what it captured.
+            let trace = if let Some(file) = args.flags.get("load") {
+                let src = std::fs::read_to_string(file)
+                    .map_err(|e| anyhow::anyhow!("--load {file}: {e}"))?;
+                parse_trace(&src).map_err(|e| anyhow::anyhow!("--load {file}: {e}"))?
+            } else {
+                let name = args.flags.get("bench").cloned().unwrap_or_else(|| "BS".into());
+                let w = workload_by_name(&name).unwrap_or_else(|| {
+                    eprintln!("unknown benchmark {name}");
+                    std::process::exit(2);
+                });
+                let n_requests: usize = args.flag("requests", if quick { 4 } else { 8 });
+                let n_dpus: u32 = args.flag("dpus", 64);
+                let sink = TraceSink::new();
+                let rc = RunConfig {
+                    n_dpus,
+                    n_tasklets: args.flag("tasklets", w.best_tasklets()),
+                    scale: args.flag(
+                        "scale",
+                        harness::harness_scale(w.name()) * if quick { 0.05 } else { 0.25 },
+                    ),
+                    seed,
+                    sys: system_for(n_dpus),
+                    exec: args.exec_choice(),
+                    trace: Some(sink.clone()),
+                };
+                let rep = serve(w.as_ref(), &rc, n_requests, true);
+                println!(
+                    "traced {} · {} requests · [{}] · {} events",
+                    rep.name,
+                    n_requests,
+                    if rep.verified { "ok" } else { "VERIFY-FAIL" },
+                    sink.len(),
+                );
+                write_trace(&trace_out.clone().unwrap_or_else(|| outdir.join("trace.json")), &sink)?;
+                sink.snapshot()
+            };
+            // cursor-wise replay: walk the whole trace once so the
+            // summary below is backed by the replay engine, not just
+            // the raw event list
+            let mut replay = ReplayEngine::new(&trace);
+            let mut steps = 0usize;
+            while replay.step_next().is_some() {
+                steps += 1;
+            }
+            let (t0, t1) = replay.bounds();
+            let report = analyze(&trace);
+            if args.has("json") {
+                print!("{}", report.to_json());
+            } else {
+                println!(
+                    "replayed {steps} events over [{t0:.6}, {t1:.6}] s{}",
+                    if replay.dropped_duplicates > 0 {
+                        format!(" ({} duplicate ids dropped)", replay.dropped_duplicates)
+                    } else {
+                        String::new()
+                    }
+                );
+                print!("{}", report.table());
             }
         }
         "compare" => {
@@ -462,6 +585,17 @@ fn main() -> anyhow::Result<()> {
             }
         }
         _ => usage(),
+    }
+    // flush the global --trace capture (the `trace` subcommand writes
+    // its own files inline)
+    if cmd != "trace" {
+        if let (Some(path), Some(sink)) = (&trace_out, &trace_sink) {
+            if sink.is_empty() {
+                eprintln!("--trace: no events captured ({cmd} does not trace)");
+            } else {
+                write_trace(path, sink)?;
+            }
+        }
     }
     Ok(())
 }

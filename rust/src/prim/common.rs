@@ -2,7 +2,7 @@
 //! `PrimBench` trait, and the Table 2 taxonomy.
 
 use crate::arch::SystemConfig;
-use crate::coordinator::{PimSet, Session, TimeBreakdown};
+use crate::coordinator::{PimSet, Session, TimeBreakdown, TraceSink};
 
 pub use crate::coordinator::ExecChoice;
 
@@ -25,6 +25,11 @@ pub struct RunConfig {
     /// bit-identical in results and modeled time — see
     /// `rust/tests/executor_equivalence.rs`.
     pub exec: ExecChoice,
+    /// Trace capture sink (`--trace` CLI flag). When set, every fleet
+    /// allocated through [`RunConfig::alloc`] records its modeled
+    /// timeline into this sink (see `coordinator::trace`); when `None`
+    /// — the default everywhere — capture costs nothing.
+    pub trace: Option<TraceSink>,
 }
 
 impl RunConfig {
@@ -37,6 +42,7 @@ impl RunConfig {
             scale: 0.25,
             seed: 42,
             exec: ExecChoice::Auto,
+            trace: None,
         }
     }
 
@@ -59,11 +65,21 @@ impl RunConfig {
         self
     }
 
+    /// Install a trace sink (builder style) — see `coordinator::trace`.
+    pub fn with_trace(mut self, sink: TraceSink) -> Self {
+        self.trace = Some(sink);
+        self
+    }
+
     /// Allocate the configured PIM set (`sys` × `n_dpus`) behind the
     /// configured fleet executor — the one allocation path every PrIM
-    /// workload uses.
+    /// workload uses. A configured trace sink is installed on the fleet.
     pub fn alloc(&self) -> PimSet {
-        PimSet::allocate_with(self.sys.clone(), self.n_dpus, self.exec.build())
+        let set = PimSet::allocate_with(self.sys.clone(), self.n_dpus, self.exec.build());
+        match &self.trace {
+            Some(sink) => set.with_trace(sink.clone()),
+            None => set,
+        }
     }
 
     /// Allocate a persistent serving session over [`RunConfig::alloc`].

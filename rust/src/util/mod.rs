@@ -4,6 +4,7 @@
 
 pub mod bencher;
 pub mod data;
+pub mod json;
 pub mod pod;
 pub mod proptest;
 pub mod rng;

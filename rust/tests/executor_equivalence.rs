@@ -29,6 +29,7 @@ fn run_with(name: &str, exec: ExecChoice) -> BenchResult {
         scale: prim_pim::harness::harness_scale(name) * 0.05,
         seed: 99,
         exec,
+        trace: None,
     };
     b.run(&rc)
 }
@@ -152,6 +153,7 @@ fn serve_bs(exec: ExecChoice, pipeline: bool) -> ServeReport {
         scale: 0.002,
         seed: 17,
         exec,
+        trace: None,
     };
     serve(w.as_ref(), &rc, 4, pipeline)
 }
@@ -169,6 +171,7 @@ fn warm_session_reexecute_matches_one_shot() {
             scale: 0.002,
             seed: 23,
             exec,
+            trace: None,
         };
         let oneshot = bench_by_name("VA").unwrap().run(&rc);
         assert!(oneshot.verified);
@@ -226,6 +229,7 @@ fn serve_w(name: &str, exec: ExecChoice, pipeline: bool) -> ServeReport {
         scale: 0.002,
         seed: 17,
         exec,
+        trace: None,
     };
     serve(w.as_ref(), &rc, 4, pipeline)
 }
@@ -295,6 +299,7 @@ fn sync_shim_reproduces_manual_loop_exactly() {
             scale: 0.002,
             seed: 31,
             exec: ExecChoice::Serial,
+            trace: None,
         };
         // manual loop: no execute_batch, no queue anywhere
         let ds = w.prepare(&rc);

@@ -14,7 +14,8 @@ fn small_rc(nd: u32, scale_mult: f64) -> impl Fn(&str) -> RunConfig {
         seed: 1234,
         sys: SystemConfig::p21_rank(),
         exec: Default::default(),
-    }
+    },
+    trace: None,
 }
 
 #[test]
@@ -60,6 +61,7 @@ fn e19_is_slower_than_p21() {
             seed: 7,
             sys,
             exec: Default::default(),
+            trace: None,
         };
         let p21 = b.run(&mk(SystemConfig::p21_rank()));
         let e19 = b.run(&mk(SystemConfig {

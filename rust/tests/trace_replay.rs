@@ -1,0 +1,222 @@
+//! Trace subsystem contract (`coordinator::trace`): capture is complete
+//! and deterministic, both export formats round-trip / parse, replay is
+//! bit-reproducible across runs AND across executors, and the triage
+//! report over a replayed trace is byte-identical to the one over the
+//! captured trace.
+//!
+//! Bit-identity works because every writer prints floats with Rust's
+//! shortest-roundtrip `{:e}` formatting and `util::json` parses them
+//! back via `str::parse::<f64>` — so serialize → parse → serialize is
+//! the identity on bytes, not just on values.
+
+use prim_pim::arch::SystemConfig;
+use prim_pim::coordinator::trace::analyze;
+use prim_pim::coordinator::{
+    parse_trace, run_sched, PolicyKind, ReplayEngine, SchedConfig, TenantSpec, Trace, TraceSink,
+};
+use prim_pim::prim::common::{ExecChoice, RunConfig};
+use prim_pim::prim::workload::{serve, workload_by_name};
+use prim_pim::util::json::parse_json;
+
+/// One pipelined serving window with a sink installed; returns the
+/// captured queue-level trace.
+fn traced_serve(bench: &str, exec: ExecChoice) -> Trace {
+    let w = workload_by_name(bench).expect("known workload");
+    let sink = TraceSink::new();
+    let rc = RunConfig {
+        sys: SystemConfig::p21_rank(),
+        n_dpus: 4,
+        n_tasklets: w.best_tasklets(),
+        scale: prim_pim::harness::harness_scale(bench) * 0.05,
+        seed: 7,
+        exec,
+        trace: Some(sink.clone()),
+    };
+    let rep = serve(w.as_ref(), &rc, 3, true);
+    assert!(rep.verified, "{bench}: traced serving must still verify");
+    sink.snapshot()
+}
+
+/// One multi-tenant scheduler run with a sink installed; returns the
+/// captured fleet-level trace.
+fn traced_sched(exec: ExecChoice) -> Trace {
+    let mut tenants = TenantSpec::parse_list("va:1,bs:1").expect("mix parses");
+    for t in &mut tenants {
+        t.scale = 0.002;
+    }
+    let mut cfg = SchedConfig::new(tenants);
+    cfg.requests = 3;
+    cfg.policy = PolicyKind::ALL[0];
+    cfg.rate = 2000.0;
+    cfg.seed = 7;
+    cfg.exec = exec;
+    let sink = TraceSink::new();
+    cfg.trace = Some(sink.clone());
+    run_sched(&cfg).expect("scheduler runs");
+    sink.snapshot()
+}
+
+#[test]
+fn capture_is_nonempty_and_well_formed() {
+    let t = traced_serve("TRNS", ExecChoice::Serial);
+    assert_eq!(t.source, "queue");
+    assert!(t.n_ranks >= 1);
+    assert!(!t.is_empty(), "a pipelined window must capture events");
+    assert!(t.span() > 0.0);
+    for (i, e) in t.events.iter().enumerate() {
+        assert_eq!(e.id, i as u64, "sink ids are dense and ordered");
+        assert!(e.secs >= 0.0 && e.start >= 0.0);
+        for d in &e.deps {
+            assert!(*d < e.id, "deps point strictly backwards");
+        }
+    }
+}
+
+/// Native `trace/v1` export: serialize → parse → serialize is the
+/// byte-level identity.
+#[test]
+fn native_json_roundtrip_is_bit_identical_on_a_real_trace() {
+    let t = traced_serve("TRNS", ExecChoice::Serial);
+    let json = t.to_json();
+    let back = parse_trace(&json).expect("own output parses");
+    assert_eq!(back, t, "parsed trace equals the captured one");
+    assert_eq!(back.to_json(), json, "re-serialization is byte-identical");
+}
+
+/// Chrome export: well-formed JSON with the metadata + slice events the
+/// lane→track mapping promises.
+#[test]
+fn chrome_export_is_well_formed_json_with_tracks() {
+    let t = traced_serve("GEMV", ExecChoice::Serial);
+    let chrome = t.to_chrome_json();
+    let v = parse_json(&chrome).expect("chrome export is valid JSON");
+    let events = v.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    // at least the process_name metadata plus one slice per captured event
+    assert!(events.len() > t.events.len());
+    let slices = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .count();
+    assert!(slices >= t.events.len() - 1, "every span becomes >= 1 slice");
+}
+
+/// The replay/triage acceptance pin: identical configs produce
+/// byte-identical traces and triage reports across independent runs and
+/// across the serial/parallel executors (modeled time is executor-
+/// invariant, so the captured schedules must be too).
+#[test]
+fn replay_is_deterministic_across_runs_and_executors() {
+    let a = traced_serve("TRNS", ExecChoice::Serial);
+    let b = traced_serve("TRNS", ExecChoice::Serial);
+    let c = traced_serve("TRNS", ExecChoice::Parallel(3));
+    assert_eq!(a.to_json(), b.to_json(), "re-run traces byte-identical");
+    assert_eq!(a.to_json(), c.to_json(), "executor choice is invisible to the trace");
+    assert_eq!(
+        analyze(&a).to_json(),
+        analyze(&c).to_json(),
+        "triage reports byte-identical across executors"
+    );
+    // replaying a parsed trace fires the same events in the same order
+    let parsed = parse_trace(&a.to_json()).unwrap();
+    let mut ra = ReplayEngine::new(&a);
+    let mut rp = ReplayEngine::new(&parsed);
+    loop {
+        match (ra.step_next(), rp.step_next()) {
+            (None, None) => break,
+            (x, y) => assert_eq!(x, y, "replay streams diverged"),
+        }
+    }
+}
+
+/// Scheduler-level capture: tenant-tagged, dependency-chained, and just
+/// as deterministic across executors.
+#[test]
+fn sched_trace_is_tagged_and_executor_invariant() {
+    let s = traced_sched(ExecChoice::Serial);
+    let p = traced_sched(ExecChoice::Parallel(3));
+    assert_eq!(s.source, "sched");
+    assert!(!s.is_empty());
+    assert!(s.events.iter().all(|e| e.tenant.is_some()), "sched events carry tenants");
+    assert!(
+        s.events.iter().any(|e| !e.deps.is_empty()),
+        "push→kernel→pull chains recorded"
+    );
+    assert_eq!(s.to_json(), p.to_json());
+    assert_eq!(analyze(&s).to_json(), analyze(&p).to_json());
+}
+
+/// Replay controls: seek lands the cursor on the right event, advance
+/// fires exactly the crossed events, and stepping past the end pauses.
+#[test]
+fn replay_seek_step_advance_semantics() {
+    let t = traced_serve("TRNS", ExecChoice::Serial);
+    let mut r = ReplayEngine::new(&t);
+    assert_eq!(r.len(), t.events.len());
+    let (t0, t1) = r.bounds();
+    assert!(t0 <= t1);
+    // step everything forward; starts must be non-decreasing
+    let mut last = f64::NEG_INFINITY;
+    let mut fired = 0;
+    while let Some(e) = r.step_next() {
+        assert!(e.start >= last);
+        last = e.start;
+        fired += 1;
+    }
+    assert_eq!(fired, r.len());
+    assert!(r.step_next().is_none(), "exhausted engine stays exhausted");
+    // seek to the middle, then play through the rest via advance()
+    r.seek_ratio(0.5);
+    let before = r.cursor();
+    r.play();
+    let rest = r.advance(t1 - r.now() + 1.0);
+    assert_eq!(before + rest.len(), r.len(), "advance fires exactly the remainder");
+    assert!(!r.is_playing(), "auto-pause at the end of the trace");
+    // seek back to 0 replays from the top
+    r.seek_ratio(0.0);
+    assert_eq!(r.cursor(), 0);
+}
+
+/// Empty traces are first-class: exports parse, replay is a no-op, and
+/// triage returns the inert report instead of dividing by zero.
+#[test]
+fn empty_trace_fallback_is_safe_end_to_end() {
+    let t = Trace::empty("queue", 4);
+    let back = parse_trace(&t.to_json()).unwrap();
+    assert_eq!(back, t);
+    assert!(parse_json(&t.to_chrome_json()).is_ok());
+    let mut r = ReplayEngine::new(&t);
+    assert!(r.is_empty() && r.step_next().is_none() && r.advance(1.0).is_empty());
+    let report = analyze(&t);
+    assert_eq!(report.events, 0);
+    assert_eq!(report.span, 0.0);
+    assert!(parse_json(&report.to_json()).is_ok());
+}
+
+/// A synchronous (non-pipelined) serve also traces — the degenerate
+/// one-command-queue path — with events laid back-to-back on the
+/// session clock.
+#[test]
+fn synchronous_ops_trace_back_to_back() {
+    let w = workload_by_name("VA").expect("known workload");
+    let sink = TraceSink::new();
+    let rc = RunConfig {
+        sys: SystemConfig::p21_rank(),
+        n_dpus: 4,
+        n_tasklets: w.best_tasklets(),
+        scale: prim_pim::harness::harness_scale("VA") * 0.05,
+        seed: 7,
+        exec: ExecChoice::Serial,
+        trace: Some(sink.clone()),
+    };
+    let rep = serve(w.as_ref(), &rc, 2, false);
+    assert!(rep.verified);
+    let t = sink.snapshot();
+    assert!(!t.is_empty(), "sync path must trace too");
+    // back-to-back: each event starts exactly where some earlier one
+    // ended (or at 0), i.e. no gaps are invented on the sync clock
+    let mut clock = 0.0f64;
+    for e in &t.events {
+        assert_eq!(e.start.to_bits(), clock.to_bits(), "event {} off-clock", e.id);
+        clock = e.start + e.secs;
+    }
+}
