@@ -206,6 +206,27 @@ fn main() {
         sched_speedups.push((format!("sched_speedup_{label}"), t_slow / t_fast));
     }
 
+    // 5c. dependency inference on the 10k soup: the arena-pooled region
+    // index (per-segment frontier Vecs reused across commands) vs the
+    // allocate-per-segment path. Identical edges (asserted here and
+    // property-tested); only allocator traffic differs.
+    let dep_q = build_sched_queue(10_000, true);
+    assert_eq!(
+        dep_q.dep_edges(),
+        dep_q.dep_edges_unpooled(),
+        "pooled and unpooled dependency inference drifted"
+    );
+    let dep_items = Some(dep_q.len() as f64);
+    let t_pooled = b
+        .bench_items("dep inference 10k (arena-pooled)", dep_items, &mut || dep_q.dep_edges())
+        .median();
+    let t_unpooled = b
+        .bench_items("dep inference 10k (unpooled)", dep_items, &mut || {
+            dep_q.dep_edges_unpooled()
+        })
+        .median();
+    sched_speedups.push(("dep_pool_speedup_10k".to_string(), t_unpooled / t_pooled));
+
     // 6. PJRT fleet estimator (if artifacts are built)
     if prim_pim::runtime::artifacts_available() {
         let rt = prim_pim::runtime::PjrtRuntime::cpu().unwrap();
@@ -228,7 +249,7 @@ fn main() {
 
     b.report("simulator_hotpath");
     for (name, x) in &sched_speedups {
-        println!("{name}: {x:.2}x (reference over indexed)");
+        println!("{name}: {x:.2}x (baseline over optimized)");
     }
 
     // Machine-readable results for the CI perf gate (schema documented

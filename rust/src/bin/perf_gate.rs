@@ -3,15 +3,17 @@
 //!
 //! Usage: `perf_gate <prev_dir> <cur_dir>` — both directories may hold
 //! `BENCH_PRIM.json`, `BENCH_OVERLAP.json`, `BENCH_SCHED.json`,
-//! `BENCH_HOTPATH.json` (the repro CLI / hot-path bench writers). Two
-//! rule families:
+//! `BENCH_CLUSTER.json`, `BENCH_HOTPATH.json` (the repro CLI /
+//! hot-path bench writers). Two rule families:
 //!
-//! * **Modeled seconds** (`BENCH_PRIM`, `BENCH_OVERLAP`, `BENCH_SCHED`):
-//!   deterministic outputs of the timing model, so any drift beyond
-//!   float-noise tolerance (default 1e-6 relative, either direction)
-//!   fails — the gate doubles as a model-change detector. For `SCHED`
-//!   that covers the multi-tenant scheduler's makespan, occupancy, and
-//!   per-tenant QoS percentiles.
+//! * **Modeled seconds** (`BENCH_PRIM`, `BENCH_OVERLAP`, `BENCH_SCHED`,
+//!   `BENCH_CLUSTER`): deterministic outputs of the timing model, so
+//!   any drift beyond float-noise tolerance (default 1e-6 relative,
+//!   either direction) fails — the gate doubles as a model-change
+//!   detector. For `SCHED` that covers the multi-tenant scheduler's
+//!   makespan, occupancy, and per-tenant QoS percentiles; for
+//!   `CLUSTER` the sharded benches' per-machine-count makespans and
+//!   network seconds.
 //! * **Wallclock** (`BENCH_HOTPATH`): noisy CI runners, so only a
 //!   slowdown past `PERF_GATE_RATIO` (default 1.6×) on an entry's
 //!   `median_secs` — or a speedup in `derived.*` falling below
@@ -100,7 +102,8 @@ impl Default for GateCfg {
     }
 }
 
-/// Compare one modeled-seconds file (PRIM / OVERLAP / SCHED): every metric
+/// Compare one modeled-seconds file (PRIM / OVERLAP / SCHED / CLUSTER):
+/// every metric
 /// present in both runs must match within `modeled_rtol`; metrics that
 /// vanished from the current run are violations too (a bench was
 /// dropped).
@@ -189,7 +192,12 @@ pub fn run_gate(prev_dir: &std::path::Path, cur_dir: &std::path::Path, cfg: &Gat
     let mut violations = Vec::new();
     let mut notes = Vec::new();
     let read = |dir: &std::path::Path, name: &str| std::fs::read_to_string(dir.join(name)).ok();
-    for name in ["BENCH_PRIM.json", "BENCH_OVERLAP.json", "BENCH_SCHED.json"] {
+    for name in [
+        "BENCH_PRIM.json",
+        "BENCH_OVERLAP.json",
+        "BENCH_SCHED.json",
+        "BENCH_CLUSTER.json",
+    ] {
         match (read(prev_dir, name), read(cur_dir, name)) {
             (Some(p), Some(c)) => violations.extend(check_modeled(name, &p, &c, cfg)),
             (None, Some(_)) => notes.push(format!("{name}: no baseline — skipped (first run?)")),
@@ -274,6 +282,19 @@ mod tests {
   {"name": "GEMV", "verified": true, "dpu_secs": 3e-3, "total_secs": 4e-3}
 ]"#;
 
+    /// The `repro cluster --json` shape: a bare array of records named
+    /// `<bench>/m<machines>`, so `flatten` keys every machine count
+    /// separately.
+    fn cluster(makespan: f64, net: f64) -> String {
+        format!(
+            "[\n  {{\"name\": \"GEMV/m4\", \"bench\": \"GEMV\", \"machines\": 4, \
+             \"verified\": true, \"work_items\": 8192,\n   \
+             \"makespan_secs\": {makespan:e}, \"net_secs\": {net:e}, \"net_bytes\": 4096,\n   \
+             \"dpu_secs\": 1e-3, \"inter_dpu_secs\": 2e-4, \"cpu_dpu_secs\": 3e-4, \
+             \"dpu_cpu_secs\": 1e-4, \"total_secs\": 1.6e-3}}\n]\n"
+        )
+    }
+
     /// The `SchedReport::to_json` shape: top-level object, tenants keyed
     /// by array index under `flatten` (they carry no `"name"` field).
     fn sched(makespan: f64, p95: f64) -> String {
@@ -355,6 +376,26 @@ mod tests {
         );
     }
 
+    /// Satellite pin: the cluster bench file rides the modeled rules too
+    /// — makespan or network-seconds drift at any machine count fails,
+    /// bit-identical reruns pass.
+    #[test]
+    fn cluster_report_drift_is_a_modeled_violation() {
+        let cfg = GateCfg::default();
+        let base = cluster(2e-3, 5e-4);
+        assert!(check_modeled("c", &base, &cluster(2e-3, 5e-4), &cfg).is_empty());
+        let v = check_modeled("c", &base, &cluster(1.9e-3, 5e-4), &cfg);
+        assert!(
+            v.iter().any(|s| s.contains("GEMV/m4.makespan_secs")),
+            "sharded makespan drift caught: {v:?}"
+        );
+        let v = check_modeled("c", &base, &cluster(2e-3, 6e-4), &cfg);
+        assert!(
+            v.iter().any(|s| s.contains("GEMV/m4.net_secs")),
+            "network-model drift caught: {v:?}"
+        );
+    }
+
     #[test]
     fn verified_flip_is_caught() {
         let broken = PRIM.replace("\"name\": \"VA\", \"verified\": true", "\"name\": \"VA\", \"verified\": false");
@@ -411,15 +452,16 @@ mod tests {
         let cfg = GateCfg::default();
         // empty current run: every missing current file is a violation
         let (v, _) = run_gate(&prev, &cur, &cfg);
-        assert_eq!(v.len(), 4, "{v:?}");
+        assert_eq!(v.len(), 5, "{v:?}");
         // populated current run with no baselines: notes only
         std::fs::write(cur.join("BENCH_PRIM.json"), PRIM).unwrap();
         std::fs::write(cur.join("BENCH_OVERLAP.json"), "[]").unwrap();
         std::fs::write(cur.join("BENCH_SCHED.json"), sched(2.5e-1, 2e-3)).unwrap();
+        std::fs::write(cur.join("BENCH_CLUSTER.json"), cluster(2e-3, 5e-4)).unwrap();
         std::fs::write(cur.join("BENCH_HOTPATH.json"), hotpath(0.01, 9.0)).unwrap();
         let (v, notes) = run_gate(&prev, &cur, &cfg);
         assert!(v.is_empty(), "{v:?}");
-        assert_eq!(notes.len(), 4, "{notes:?}");
+        assert_eq!(notes.len(), 5, "{notes:?}");
         // baseline present + injected regression: gate fails
         std::fs::write(prev.join("BENCH_HOTPATH.json"), hotpath(0.001, 9.0)).unwrap();
         let (v, _) = run_gate(&prev, &cur, &cfg);

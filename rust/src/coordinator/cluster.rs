@@ -1,0 +1,729 @@
+//! Multi-machine sharded fleets with modeled network collectives.
+//!
+//! A [`Cluster`] owns N independent [`PimSet`]s — one per machine, each
+//! with its own MRAM layout, transfer engine, and host model — behind a
+//! single façade, and records every operation into **one** cluster-wide
+//! [`CmdQueue`]. Machine `m`'s DPUs get global command indices offset by
+//! a rank-aligned stride (`ranks_per_machine × dpus_per_rank`), so the
+//! queue's existing DPU-overlap dependency gate isolates machines
+//! automatically, and `lane_for`'s rank math lands each machine's
+//! launches on disjoint `Lane::Ranks` spans. Transfers and host merges
+//! route to the per-machine [`Lane::MachineBus`] / [`Lane::MachineHost`]
+//! lanes (machine 0 keeps the legacy `Bus` / `Host` lanes, which is what
+//! makes a 1-machine cluster bit-identical to the single-machine path).
+//!
+//! Cross-machine traffic is modeled, not functional: the cluster driver
+//! plays every machine's host, so data moves host-side for free and a
+//! [`CmdKind::Net`] command charges the wire. The [`NetModel`] is a
+//! flat, non-blocking, full-duplex switch ([`Topology::FlatSwitch`]):
+//! only the **egress** link of the sending machine is occupied, for
+//! `bytes / link_bw + latency` seconds, so an all-gather's modeled
+//! makespan is exactly the analytic bound
+//! `max_i((N−1)·s_i / B + L)` (see `tests/properties.rs`).
+//!
+//! Collectives are first-class queue commands built from `Net`:
+//!
+//! * [`Cluster::all_gather`] — machine `i` streams its `s_i`-byte shard
+//!   to the other N−1 machines: one `Net` of `(N−1)·s_i` bytes per link.
+//! * [`Cluster::reduce_scatter`] — machine `i` sends everything it does
+//!   *not* own: one `Net` of `S − s_i` bytes per link.
+//! * [`Cluster::all_reduce`] — reduce-scatter, a per-machine host-side
+//!   combine, then all-gather of the reduced shards.
+//! * [`Cluster::exchange`] — explicit point-to-point sends (BFS frontier
+//!   exchange), serialized per egress link in issue order.
+//!
+//! Everything funnels through the same `CmdQueue::schedule` pass the
+//! single-machine path uses, so cross-machine overlap (machine 1's
+//! launch hiding under machine 0's push, a frontier exchange hiding
+//! under the next level's zeroing traffic) falls out of the existing
+//! dependency inference — and serial vs parallel executors stay
+//! bit-identical, because nothing here touches the executor contract.
+
+use super::executor::FleetExecutor;
+use super::layout::Symbol;
+use super::metrics::{Bucket, TimeBreakdown};
+use super::queue::{Access, CmdId, CmdMeta, CmdQueue};
+use super::trace::{TraceEvent, TraceSink};
+use super::{LaunchStats, PimSet};
+use crate::arch::SystemConfig;
+use crate::dpu::Ctx;
+use crate::util::pod::Pod;
+use std::sync::Arc;
+
+/// Per-link network calibration of the modeled interconnect.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetModel {
+    /// Link bandwidth in bytes/second (default 12.5 GB/s ≈ 100 Gb/s
+    /// Ethernet, the commodity datacenter fabric).
+    pub link_bw: f64,
+    /// Per-message latency in seconds (default 2 µs: NIC + one switch
+    /// hop).
+    pub latency: f64,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        NetModel { link_bw: 12.5e9, latency: 2e-6 }
+    }
+}
+
+impl NetModel {
+    /// Modeled seconds one egress transfer of `bytes` occupies its link:
+    /// `bytes / link_bw + latency`. The analytic collective bounds are
+    /// built from this exact expression, so tests can compare bitwise.
+    pub fn xfer_secs(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.link_bw + self.latency
+    }
+}
+
+/// Interconnect topology. Only the flat switch is modeled today: every
+/// machine hangs off one non-blocking, full-duplex switch, so transfers
+/// contend solely on the sender's egress link.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Topology {
+    #[default]
+    FlatSwitch,
+}
+
+/// Configuration of a modeled multi-machine fleet.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Per-machine PIM system (every machine is identical).
+    pub sys: SystemConfig,
+    pub machines: u32,
+    pub dpus_per_machine: u32,
+    pub net: NetModel,
+    pub topology: Topology,
+}
+
+impl ClusterConfig {
+    /// Default-network config for `machines` × `dpus_per_machine`.
+    pub fn new(sys: SystemConfig, machines: u32, dpus_per_machine: u32) -> Self {
+        assert!(machines >= 1, "a cluster needs at least one machine");
+        ClusterConfig {
+            sys,
+            machines,
+            dpus_per_machine,
+            net: NetModel::default(),
+            topology: Topology::FlatSwitch,
+        }
+    }
+}
+
+/// Scalar summary a [`Cluster::report`] returns alongside the summed
+/// per-machine breakdown.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterReport {
+    pub machines: u32,
+    /// Per-machine bucket sums (`TimeBreakdown::add` over the fleets),
+    /// with `overlapped` replaced by the cluster-schedule credit.
+    pub breakdown: TimeBreakdown,
+    /// Modeled wall time: sum of every `sync`'s schedule makespan.
+    pub makespan: f64,
+    /// Seconds the modeled links were busy (sum over `Net` commands;
+    /// concurrent links accumulate independently).
+    pub net_secs: f64,
+    /// Bytes that crossed the modeled network.
+    pub net_bytes: u64,
+}
+
+/// N machines of DPUs behind one façade — see the module docs.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    /// One fleet per machine, in machine order. Direct access is fine
+    /// for reads; mutate through the cluster so commands get recorded.
+    pub sets: Vec<PimSet>,
+    queue: CmdQueue,
+    /// DPUs per rank of the per-machine system (lane math).
+    per: usize,
+    /// Whole ranks each machine spans — the global DPU-index stride is
+    /// `ranks_per_machine × per`, so machines never share a rank lane.
+    ranks_per_machine: usize,
+    /// Cluster-schedule overlap credit accumulated across syncs.
+    overlapped: f64,
+    /// Modeled wall clock: advances by each sync's makespan (also the
+    /// base instant trace events are stamped against).
+    clock: f64,
+    net_secs: f64,
+    net_bytes: u64,
+    trace: Option<TraceSink>,
+}
+
+impl Cluster {
+    /// Allocate `machines` identical fleets sharing one executor (one
+    /// worker pool serves the whole cluster, like `split_ranks`).
+    pub fn new(cfg: ClusterConfig, exec: Arc<dyn FleetExecutor>) -> Self {
+        let sets: Vec<PimSet> = (0..cfg.machines)
+            .map(|_| {
+                PimSet::allocate_with(cfg.sys.clone(), cfg.dpus_per_machine, Arc::clone(&exec))
+            })
+            .collect();
+        let per = cfg.sys.dpus_per_rank().max(1) as usize;
+        let ranks_per_machine = (cfg.dpus_per_machine as usize).div_ceil(per);
+        Cluster {
+            sets,
+            queue: CmdQueue::new(),
+            per,
+            ranks_per_machine,
+            overlapped: 0.0,
+            clock: 0.0,
+            net_secs: 0.0,
+            net_bytes: 0,
+            trace: None,
+            cfg,
+        }
+    }
+
+    /// Install a trace sink (builder style): every sync emits the
+    /// scheduled commands as `source: "cluster"` events, with machine
+    /// bus / host / link lanes tagged per machine.
+    pub fn with_trace(mut self, sink: TraceSink) -> Self {
+        sink.set_geometry("cluster", (self.machines() as usize * self.ranks_per_machine) as u32);
+        self.trace = Some(sink);
+        self
+    }
+
+    pub fn machines(&self) -> u32 {
+        self.cfg.machines
+    }
+
+    /// DPUs on each machine.
+    pub fn dpus_per_machine(&self) -> usize {
+        self.cfg.dpus_per_machine as usize
+    }
+
+    /// Commands recorded since the last sync.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Id of the most recently recorded command.
+    pub fn last_cmd(&self) -> Option<CmdId> {
+        self.queue.last_id()
+    }
+
+    /// First global DPU index of machine `m` (rank-aligned stride).
+    fn dpu_offset(&self, m: u32) -> usize {
+        m as usize * self.ranks_per_machine * self.per
+    }
+
+    /// Allocate the same typed MRAM region on **every** machine. The
+    /// layouts evolve in lockstep (identical allocation sequences), so
+    /// one `Symbol` handle serves the whole cluster — the multi-machine
+    /// generalization of fleet-wide linker-placed symbols.
+    pub fn symbol<T: Pod>(&mut self, elems: usize) -> Symbol<T> {
+        let first = self.sets[0].symbol::<T>(elems);
+        for set in &mut self.sets[1..] {
+            let sym = set.symbol::<T>(elems);
+            debug_assert_eq!(
+                sym.off(),
+                first.off(),
+                "cluster layouts must evolve in lockstep"
+            );
+        }
+        first
+    }
+
+    /// Coalesce subsequent transfers on one machine into a single
+    /// recorded bus command (a transfer group may not span machines).
+    pub fn group_begin(&mut self) {
+        self.queue.group_begin();
+    }
+
+    pub fn group_end(&mut self) {
+        self.queue.group_end();
+    }
+
+    // ------------------------------------------------------- transfers
+    //
+    // Each method performs the functional movement and exact accounting
+    // of the corresponding `PimSet::xfer` terminal on machine `m`'s
+    // fleet, then records the identical `CmdMeta` — machine-tagged and
+    // with globally-offset DPU indices — into the cluster queue. The
+    // engine's seconds are recorded directly (no bucket-delta round
+    // trip), so a 1-machine cluster records bit-identical commands to a
+    // plain `PimSet` queue session.
+
+    /// Equal-size per-DPU buffers to machine `m` (`dpu_push_xfer`).
+    pub fn push_equal<T: Pod>(
+        &mut self,
+        m: u32,
+        bucket: Bucket,
+        sym: Symbol<T>,
+        bufs: &[Vec<T>],
+        after: &[CmdId],
+    ) -> CmdId {
+        let off = sym.off();
+        let (secs, bytes, per_dpu, n) = {
+            let set = &mut self.sets[m as usize];
+            assert_eq!(bufs.len(), set.dpus.len(), "one buffer per DPU");
+            let secs = set.engine.push_to(&*set.exec, &mut set.dpus, off, bufs);
+            let bytes: u64 =
+                bufs.iter().map(|b| std::mem::size_of_val(b.as_slice()) as u64).sum();
+            set.metrics.account(bucket, secs, bytes);
+            let per_dpu = bufs.first().map_or(0, |b| std::mem::size_of_val(b.as_slice()));
+            (secs, bytes, per_dpu, set.dpus.len())
+        };
+        let g0 = self.dpu_offset(m);
+        self.queue.push(
+            CmdMeta::push(g0..g0 + n, off..off + per_dpu, secs, after.to_vec())
+                .with_bytes(bytes)
+                .on_machine(m),
+        )
+    }
+
+    /// Serial transfer to one DPU of machine `m` (`dpu_copy_to`).
+    pub fn push_one<T: Pod>(
+        &mut self,
+        m: u32,
+        bucket: Bucket,
+        sym: Symbol<T>,
+        dpu: usize,
+        data: &[T],
+        after: &[CmdId],
+    ) -> CmdId {
+        let off = sym.off();
+        let bytes = std::mem::size_of_val(data);
+        let secs = {
+            let set = &mut self.sets[m as usize];
+            let secs = set.engine.copy_to(&mut set.dpus[dpu], off, data);
+            set.metrics.account(bucket, secs, bytes as u64);
+            secs
+        };
+        let g0 = self.dpu_offset(m);
+        self.queue.push(
+            CmdMeta::push(g0 + dpu..g0 + dpu + 1, off..off + bytes, secs, after.to_vec())
+                .with_bytes(bytes as u64)
+                .on_machine(m),
+        )
+    }
+
+    /// Same buffer to every DPU of machine `m` (`dpu_broadcast_to`).
+    pub fn broadcast<T: Pod>(
+        &mut self,
+        m: u32,
+        bucket: Bucket,
+        sym: Symbol<T>,
+        data: &[T],
+        after: &[CmdId],
+    ) -> CmdId {
+        let off = sym.off();
+        let per_dpu = std::mem::size_of_val(data);
+        let (secs, n) = {
+            let set = &mut self.sets[m as usize];
+            let secs = set.engine.broadcast_to(&*set.exec, &mut set.dpus, off, data);
+            let n = set.dpus.len();
+            set.metrics.account(bucket, secs, (n * per_dpu) as u64);
+            (secs, n)
+        };
+        let g0 = self.dpu_offset(m);
+        self.queue.push(
+            CmdMeta::push(g0..g0 + n, off..off + per_dpu, secs, after.to_vec())
+                .with_bytes((n * per_dpu) as u64)
+                .on_machine(m),
+        )
+    }
+
+    /// Retrieve `n` elements from every DPU of machine `m`.
+    pub fn pull_equal<T: Pod>(
+        &mut self,
+        m: u32,
+        bucket: Bucket,
+        sym: Symbol<T>,
+        n: usize,
+        after: &[CmdId],
+    ) -> (Vec<Vec<T>>, CmdId) {
+        let off = sym.off();
+        let per_dpu = n * std::mem::size_of::<T>();
+        let (data, secs, n_dpus) = {
+            let set = &mut self.sets[m as usize];
+            let (data, secs) = set.engine.push_from(&*set.exec, &mut set.dpus, off, n);
+            let n_dpus = set.dpus.len();
+            set.metrics.account(bucket, secs, (n_dpus * per_dpu) as u64);
+            (data, secs, n_dpus)
+        };
+        let g0 = self.dpu_offset(m);
+        let id = self.queue.push(
+            CmdMeta::pull(g0..g0 + n_dpus, off..off + per_dpu, secs, after.to_vec())
+                .with_bytes((n_dpus * per_dpu) as u64)
+                .on_machine(m),
+        );
+        (data, id)
+    }
+
+    /// Retrieve `n` elements from one DPU of machine `m`.
+    pub fn pull_one<T: Pod>(
+        &mut self,
+        m: u32,
+        bucket: Bucket,
+        sym: Symbol<T>,
+        dpu: usize,
+        n: usize,
+        after: &[CmdId],
+    ) -> (Vec<T>, CmdId) {
+        let off = sym.off();
+        let bytes = n * std::mem::size_of::<T>();
+        let (data, secs) = {
+            let set = &mut self.sets[m as usize];
+            let (data, secs) = set.engine.copy_from(&set.dpus[dpu], off, n);
+            set.metrics.account(bucket, secs, bytes as u64);
+            (data, secs)
+        };
+        let g0 = self.dpu_offset(m);
+        let id = self.queue.push(
+            CmdMeta::pull(g0 + dpu..g0 + dpu + 1, off..off + bytes, secs, after.to_vec())
+                .with_bytes(bytes as u64)
+                .on_machine(m),
+        );
+        (data, id)
+    }
+
+    // -------------------------------------------------------- launches
+
+    /// Launch `f(dpu_idx, ctx)` on every DPU of machine `m` with the
+    /// declared MRAM footprint (threaded tasklets: barriers / mutexes
+    /// allowed). `dpu_idx` is machine-local.
+    pub fn launch_acc<F>(
+        &mut self,
+        m: u32,
+        acc: Access,
+        n_tasklets: u32,
+        f: F,
+    ) -> (LaunchStats, CmdId)
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        // With no open queue and no sink on the machine set, the launch
+        // records nothing there — the cluster queue is the only record.
+        let stats = self.sets[m as usize].launch_acc(acc.clone(), n_tasklets, f);
+        let n = self.sets[m as usize].dpus.len();
+        let g0 = self.dpu_offset(m);
+        let id = self
+            .queue
+            .push(CmdMeta::launch(g0..g0 + n, acc, stats.secs).on_machine(m));
+        (stats, id)
+    }
+
+    /// Sequential-tasklet fast-path launch on machine `m` (kernels
+    /// without barriers or handshakes; see `PimSet::launch_seq_acc`).
+    pub fn launch_seq_acc<F>(
+        &mut self,
+        m: u32,
+        acc: Access,
+        n_tasklets: u32,
+        f: F,
+    ) -> (LaunchStats, CmdId)
+    where
+        F: Fn(usize, &mut Ctx) + Sync,
+    {
+        let stats = self.sets[m as usize].launch_seq_acc(acc.clone(), n_tasklets, f);
+        let n = self.sets[m as usize].dpus.len();
+        let g0 = self.dpu_offset(m);
+        let id = self
+            .queue
+            .push(CmdMeta::launch(g0..g0 + n, acc, stats.secs).on_machine(m));
+        (stats, id)
+    }
+
+    /// Charge merge work on machine `m`'s host (its `MachineHost` lane),
+    /// depending only on the listed commands.
+    pub fn host_merge(&mut self, m: u32, bytes: u64, ops: u64, after: &[CmdId]) -> CmdId {
+        let secs = {
+            let set = &mut self.sets[m as usize];
+            let spans = set.spans_sockets();
+            let secs = set.host.merge_numa(bytes, ops, spans);
+            set.metrics.inter_dpu += secs;
+            secs
+        };
+        self.queue.push(
+            CmdMeta::host_merge_after(secs, after.to_vec())
+                .with_bytes(bytes)
+                .on_machine(m),
+        )
+    }
+
+    // ----------------------------------------------------- collectives
+
+    /// One modeled egress transfer of `bytes` from machine `src`. The
+    /// building block of every collective; deps flow only through
+    /// `after` (a `Net` touches no MRAM region).
+    pub fn net_send(&mut self, src: u32, bytes: u64, after: &[CmdId]) -> CmdId {
+        assert!(src < self.machines(), "machine {src} out of range");
+        let secs = self.cfg.net.xfer_secs(bytes);
+        self.net_secs += secs;
+        self.net_bytes += bytes;
+        self.queue
+            .push(CmdMeta::net(src, secs, after.to_vec()).with_bytes(bytes))
+    }
+
+    /// All-gather: machine `i` streams its `shard_bytes[i]` shard to the
+    /// other N−1 machines — one `Net` of `(N−1)·s_i` bytes per egress
+    /// link, gated on `after[i]`. Returns the per-machine command ids; a
+    /// consumer of the gathered buffer on any machine should wait on
+    /// **all** of them. A 1-machine cluster gathers nothing.
+    pub fn all_gather(&mut self, shard_bytes: &[u64], after: &[Vec<CmdId>]) -> Vec<CmdId> {
+        let n = self.machines() as usize;
+        assert_eq!(shard_bytes.len(), n, "one shard size per machine");
+        assert_eq!(after.len(), n, "one dependency list per machine");
+        if n == 1 {
+            return Vec::new();
+        }
+        (0..n)
+            .map(|i| self.net_send(i as u32, (n as u64 - 1) * shard_bytes[i], &after[i]))
+            .collect()
+    }
+
+    /// Reduce-scatter: machine `i` sends every contribution it does not
+    /// own — one `Net` of `S − s_i` bytes per egress link (`S` = total).
+    pub fn reduce_scatter(&mut self, shard_bytes: &[u64], after: &[Vec<CmdId>]) -> Vec<CmdId> {
+        let n = self.machines() as usize;
+        assert_eq!(shard_bytes.len(), n, "one shard size per machine");
+        assert_eq!(after.len(), n, "one dependency list per machine");
+        if n == 1 {
+            return Vec::new();
+        }
+        let total: u64 = shard_bytes.iter().sum();
+        (0..n)
+            .map(|i| self.net_send(i as u32, total - shard_bytes[i], &after[i]))
+            .collect()
+    }
+
+    /// All-reduce: reduce-scatter, a per-machine host combine of the
+    /// N−1 received contributions to its shard (`merge_ops[i]` scalar
+    /// ops), then all-gather of the reduced shards. Returns the final
+    /// all-gather ids (empty on one machine — nothing to reduce).
+    pub fn all_reduce(
+        &mut self,
+        shard_bytes: &[u64],
+        merge_ops: &[u64],
+        after: &[Vec<CmdId>],
+    ) -> Vec<CmdId> {
+        let n = self.machines() as usize;
+        assert_eq!(merge_ops.len(), n, "one merge-op count per machine");
+        let rs = self.reduce_scatter(shard_bytes, after);
+        if rs.is_empty() {
+            return Vec::new();
+        }
+        let merges: Vec<Vec<CmdId>> = (0..n)
+            .map(|i| {
+                let recv = (n as u64 - 1) * shard_bytes[i];
+                vec![self.host_merge(i as u32, recv, merge_ops[i], &rs)]
+            })
+            .collect();
+        self.all_gather(shard_bytes, &merges)
+    }
+
+    /// Point-to-point sends `(src, dst, bytes)` (BFS frontier exchange).
+    /// Each occupies its source's egress link in issue order; `dst` only
+    /// validates — a flat switch's ingress is non-blocking. Returns one
+    /// id per message, aligned with `msgs`.
+    pub fn exchange(&mut self, msgs: &[(u32, u32, u64)], after: &[Vec<CmdId>]) -> Vec<CmdId> {
+        assert_eq!(after.len(), self.machines() as usize, "one dependency list per machine");
+        msgs.iter()
+            .map(|&(src, dst, bytes)| {
+                assert!(dst < self.machines(), "machine {dst} out of range");
+                assert_ne!(src, dst, "a machine does not message itself");
+                let deps = after[src as usize].clone();
+                self.net_send(src, bytes, &deps)
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------------ sync
+
+    /// Schedule the recorded program over every machine's bus / host /
+    /// rank lanes plus the per-machine egress links, credit the derived
+    /// overlap, advance the modeled clock by the makespan, and emit
+    /// trace events (if a sink is installed). Returns the hidden
+    /// seconds, like `PimSet::queue_sync`.
+    pub fn sync(&mut self) -> f64 {
+        assert!(!self.queue.group_open(), "sync with an open transfer group");
+        if self.queue.is_empty() {
+            return 0.0;
+        }
+        let n_ranks = self.machines() as usize * self.ranks_per_machine;
+        let sched = self.queue.schedule(n_ranks, self.per);
+        if let Some(sink) = self.trace.as_ref() {
+            let base = self.clock;
+            let id0 = sink.next_id();
+            let lanes = self.queue.lanes(n_ranks, self.per);
+            let deps = self.queue.dep_edges();
+            for (i, cmd) in self.queue.cmds().iter().enumerate() {
+                sink.push(TraceEvent {
+                    id: 0, // assigned by the sink
+                    kind: cmd.kind,
+                    lane: lanes[i].clone().into(),
+                    start: base + sched.start[i],
+                    secs: cmd.secs,
+                    bytes: cmd.bytes,
+                    tenant: None,
+                    req: cmd.req,
+                    deps: deps[i].iter().map(|&j| id0 + j as u64).collect(),
+                });
+            }
+        }
+        let hidden = sched.hidden();
+        self.overlapped += hidden;
+        self.clock += sched.makespan;
+        self.queue.reset();
+        hidden
+    }
+
+    /// Aggregate the per-machine breakdowns and the cluster-level
+    /// schedule/network totals. (Call after `sync` — pending commands
+    /// are not yet scheduled into the makespan.)
+    pub fn report(&self) -> ClusterReport {
+        let mut breakdown = TimeBreakdown::default();
+        for set in &self.sets {
+            breakdown.add(&set.metrics);
+        }
+        breakdown.overlapped = self.overlapped;
+        ClusterReport {
+            machines: self.machines(),
+            breakdown,
+            makespan: self.clock,
+            net_secs: self.net_secs,
+            net_bytes: self.net_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::SerialExecutor;
+    use crate::coordinator::trace::LaneTag;
+
+    fn cluster(machines: u32, dpus: u32) -> Cluster {
+        Cluster::new(
+            ClusterConfig::new(SystemConfig::p21_rank(), machines, dpus),
+            Arc::new(SerialExecutor),
+        )
+    }
+
+    /// Two machines' pushes and launches occupy independent lanes, so
+    /// the cluster schedule overlaps them — and each machine's fleet
+    /// functionally executed its own data.
+    #[test]
+    fn machines_overlap_and_stay_functionally_isolated() {
+        let mut c = cluster(2, 4);
+        let sym = c.symbol::<i64>(64);
+        let out = c.symbol::<i64>(1);
+        for m in 0..2u32 {
+            let bufs: Vec<Vec<i64>> =
+                (0..4).map(|d| vec![(m as i64 + 1) * 100 + d as i64; 64]).collect();
+            c.push_equal(m, Bucket::CpuDpu, sym, &bufs, &[]);
+            let acc = Access::new().read(sym.region()).write(out.region());
+            let (off, oout) = (sym.off(), out.off());
+            c.launch_seq_acc(m, acc, 4, move |_d, ctx| {
+                let w = ctx.mem_alloc(512);
+                ctx.mram_read(off, w, 512);
+                let v: Vec<i64> = ctx.wram_get(w, 64);
+                let s: i64 = v.iter().sum();
+                ctx.wram_set(w, &[s]);
+                ctx.compute(10_000);
+                ctx.mram_write(w, oout, 8);
+            });
+        }
+        let hidden = c.sync();
+        assert!(hidden > 0.0, "machine 1's work must hide under machine 0's");
+        for m in 0..2u32 {
+            let (vals, _) = c.pull_one(m, Bucket::DpuCpu, out, 1, 1, &[]);
+            assert_eq!(vals[0], 64 * ((m as i64 + 1) * 100 + 1));
+        }
+        c.sync();
+        let rep = c.report();
+        assert_eq!(rep.machines, 2);
+        assert!(rep.breakdown.dpu > 0.0 && rep.breakdown.cpu_dpu > 0.0);
+        assert_eq!(rep.breakdown.overlapped.to_bits(), hidden.to_bits());
+        assert!(rep.makespan > 0.0);
+        assert_eq!(rep.net_bytes, 0, "no collective ran");
+    }
+
+    /// The modeled all-gather makespan is exactly the flat-switch bound
+    /// `max_i((N−1)·s_i/B + L)` — bitwise, same float expression.
+    #[test]
+    fn all_gather_matches_flat_switch_bound_bitwise() {
+        let mut c = cluster(4, 2);
+        let shards = [1_000u64, 64_000, 7_000, 640];
+        let after = vec![Vec::new(); 4];
+        let ids = c.all_gather(&shards, &after);
+        assert_eq!(ids.len(), 4);
+        let net = c.cfg.net.clone();
+        let bound = shards
+            .iter()
+            .map(|&s| net.xfer_secs(3 * s))
+            .fold(0.0f64, f64::max);
+        c.sync();
+        let rep = c.report();
+        assert_eq!(rep.makespan.to_bits(), bound.to_bits());
+        assert_eq!(rep.net_bytes, shards.iter().map(|s| 3 * s).sum::<u64>());
+    }
+
+    /// All-reduce composes reduce-scatter → per-machine combine →
+    /// all-gather, with the dependency chain serializing the stages.
+    #[test]
+    fn all_reduce_chains_scatter_merge_gather() {
+        let mut c = cluster(3, 2);
+        let shards = [4_096u64; 3];
+        let ids = c.all_reduce(&shards, &[512; 3], &vec![Vec::new(); 3]);
+        assert_eq!(ids.len(), 3);
+        assert_eq!(c.pending(), 9, "3 scatters + 3 merges + 3 gathers");
+        let net = c.cfg.net.clone();
+        c.sync();
+        let rep = c.report();
+        // two serialized network stages: strictly longer than either alone
+        assert!(rep.makespan > 2.0 * net.xfer_secs(2 * 4_096));
+        assert!(rep.breakdown.inter_dpu > 0.0, "the combine runs on machine hosts");
+        assert_eq!(rep.net_bytes, 2 * 3 * 2 * 4_096);
+    }
+
+    /// One machine is the degenerate cluster: collectives vanish and
+    /// every recorded command stays on the legacy single-machine lanes.
+    #[test]
+    fn single_machine_cluster_uses_legacy_lanes_only() {
+        let sink = TraceSink::new();
+        let mut c = cluster(1, 2).with_trace(sink.clone());
+        assert!(c.all_gather(&[1024], &[Vec::new()]).is_empty());
+        assert!(c.all_reduce(&[1024], &[16], &[Vec::new()]).is_empty());
+        let sym = c.symbol::<u32>(8);
+        c.broadcast(0, Bucket::CpuDpu, sym, &[7u32; 8], &[]);
+        let (_, pid) = c.pull_equal(0, Bucket::DpuCpu, sym, 8, &[]);
+        c.host_merge(0, 64, 8, &[pid]);
+        c.sync();
+        let t = sink.snapshot();
+        assert_eq!(t.source, "cluster");
+        assert!(!t.events.is_empty());
+        for e in &t.events {
+            assert!(
+                matches!(e.lane, LaneTag::Bus | LaneTag::Host | LaneTag::Ranks { .. }),
+                "machine 0 must stay on legacy lanes, got {:?}",
+                e.lane
+            );
+        }
+        assert_eq!(c.report().net_bytes, 0);
+    }
+
+    /// Frontier-style exchange: sends serialize per egress link but
+    /// overlap across links, and invalid targets are rejected.
+    #[test]
+    fn exchange_serializes_per_link_and_overlaps_across() {
+        let mut c = cluster(3, 2);
+        let b = 1 << 20;
+        // machine 0 sends twice (serial); machines 1 and 2 once each
+        let msgs = [(0u32, 1u32, b), (0, 2, b), (1, 0, b), (2, 1, b)];
+        let ids = c.exchange(&msgs, &vec![Vec::new(); 3]);
+        assert_eq!(ids.len(), 4);
+        let net = c.cfg.net.clone();
+        c.sync();
+        let two = 2.0 * net.xfer_secs(b);
+        assert_eq!(c.report().makespan.to_bits(), two.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "does not message itself")]
+    fn self_exchange_rejected() {
+        let mut c = cluster(2, 2);
+        c.exchange(&[(1, 1, 8)], &vec![Vec::new(); 2]);
+    }
+}

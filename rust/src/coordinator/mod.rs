@@ -31,6 +31,7 @@
 //! [`scheduler`] arbitrates the same modeled resources ([`Timeline`])
 //! between the tenants' request streams and accounts per-tenant QoS.
 
+pub mod cluster;
 pub mod executor;
 pub mod layout;
 pub mod metrics;
@@ -46,6 +47,7 @@ use crate::system::{HostModel, TransferEngine, XferModel};
 use crate::util::pod::Pod;
 use std::sync::Arc;
 
+pub use cluster::{Cluster, ClusterConfig, ClusterReport, NetModel, Topology};
 pub use executor::{
     ExecChoice, FleetExecutor, FleetSlot, LaunchJob, ParallelExecutor, SerialExecutor,
 };

@@ -17,7 +17,16 @@
 //!   they run on, so kernels on disjoint rank sets overlap (the
 //!   concurrency the multi-tenant scheduler's rank slicing buys);
 //! * **the host CPU** — `HostMerge` commands (frontier unions, partial
-//!   result merges) occupy it and may overlap bus and kernel activity.
+//!   result merges) occupy it and may overlap bus and kernel activity;
+//! * **per-machine bus / host / network-link lanes** — a multi-machine
+//!   [`super::cluster::Cluster`] records commands tagged with their
+//!   [`CmdMeta::machine`]: machine `m`'s transfers serialize on its own
+//!   bus lane ([`Lane::MachineBus`]), its merges on its own host CPU,
+//!   and modeled collectives ([`CmdKind::Net`]) serialize on the
+//!   issuing machine's egress link ([`Lane::Link`]) exactly the way
+//!   host transfers serialize on the bus. Machine 0 uses the legacy
+//!   single-machine lanes, so a one-machine cluster schedules
+//!   bit-identically to a plain queue.
 //!
 //! Ordering between commands is **inferred from the `Symbol` byte
 //! regions each command reads and writes** (RAW / WAR / WAW overlap on
@@ -89,6 +98,11 @@ pub enum CmdKind {
     /// Synchronization barrier: waits for everything enqueued before it
     /// and blocks everything after. Zero modeled seconds.
     Fence,
+    /// Inter-machine network transfer (a collective shard or frontier
+    /// exchange): occupies the issuing machine's egress link lane.
+    /// Ordered only by explicit `after` edges — its data flow is
+    /// host-side and invisible to the MRAM region model.
+    Net,
 }
 
 /// Declared MRAM footprint of a launch: the byte regions its kernel
@@ -194,6 +208,12 @@ pub struct CmdMeta {
     /// Request tag stamped by the recording `PimSet` (trace annotation;
     /// `None` outside a tagged batch).
     pub req: Option<u64>,
+    /// Machine that issues the command (0 for the single-machine
+    /// default). Routes bus/host commands to that machine's lanes and
+    /// [`CmdKind::Net`] commands to its egress link. Dependency
+    /// inference is unaffected: cluster recording keys deps on
+    /// machine-disjoint global DPU indices instead.
+    pub machine: u32,
 }
 
 impl CmdMeta {
@@ -209,6 +229,7 @@ impl CmdMeta {
             fence: false,
             bytes: 0,
             req: None,
+            machine: 0,
         }
     }
 
@@ -224,6 +245,7 @@ impl CmdMeta {
             fence: false,
             bytes: 0,
             req: None,
+            machine: 0,
         }
     }
 
@@ -239,6 +261,7 @@ impl CmdMeta {
             fence: false,
             bytes: 0,
             req: None,
+            machine: 0,
         }
     }
 
@@ -266,6 +289,7 @@ impl CmdMeta {
             fence: true,
             bytes: 0,
             req: None,
+            machine: 0,
         }
     }
 
@@ -283,7 +307,34 @@ impl CmdMeta {
             fence: false,
             bytes: 0,
             req: None,
+            machine: 0,
         }
+    }
+
+    /// An inter-machine network transfer issued by `machine`: occupies
+    /// that machine's egress link lane for `secs`, ordered only by the
+    /// explicit `after` edges (like a dep'd host merge, its payload
+    /// lives host-side where the region model cannot see it).
+    pub fn net(machine: u32, secs: f64, after: Vec<CmdId>) -> Self {
+        CmdMeta {
+            kind: CmdKind::Net,
+            secs,
+            dpus: 0..0,
+            reads: RegionSet::Empty,
+            writes: RegionSet::Empty,
+            after,
+            fence: false,
+            bytes: 0,
+            req: None,
+            machine,
+        }
+    }
+
+    /// Route the command to a machine's lane set (builder style;
+    /// machine 0 is the legacy single-machine lane set).
+    pub fn on_machine(mut self, machine: u32) -> Self {
+        self.machine = machine;
+        self
     }
 
     /// Annotate the command with the payload bytes it moves (builder
@@ -305,6 +356,7 @@ impl CmdMeta {
             fence: true,
             bytes: 0,
             req: None,
+            machine: 0,
         }
     }
 }
@@ -363,40 +415,67 @@ struct Seg {
     readers: Vec<Entry>,
 }
 
-impl Seg {
-    fn new(start: usize, end: usize) -> Self {
-        Seg {
-            start,
-            end,
-            writers: Vec::new(),
-            readers: Vec::new(),
-        }
-    }
-
-    /// Split at `x` (strictly inside); self keeps `[start, x)`, the
-    /// returned segment carries `[x, end)` with a cloned frontier.
-    fn split_at(&mut self, x: usize) -> Seg {
-        debug_assert!(self.start < x && x < self.end);
-        let right = Seg {
-            start: x,
-            end: self.end,
-            writers: self.writers.clone(),
-            readers: self.readers.clone(),
-        };
-        self.end = x;
-        right
-    }
-}
-
 /// Interval index over the fleet-shared MRAM byte space: for every byte
 /// point, the frontier of open accesses. Dependency inference queries
 /// and updates it per command region instead of sweeping all pairs.
-#[derive(Debug, Default)]
+///
+/// Frontier `Vec<Entry>`s are **arena-recycled**: every segment created
+/// by a split or a gap fill draws its writer/reader vectors from
+/// [`RegionIndex::pool`], and [`RegionIndex::clear`] (the per-fence
+/// epoch reset) drains them back. A fence-heavy queue — the 10k-command
+/// soup the `simulator_hotpath` bench schedules — rebuilds its segment
+/// frontier every epoch; recycling keeps that churn off the allocator
+/// after the first epoch warms the pool.
+#[derive(Debug)]
 struct RegionIndex {
     segs: Vec<Seg>,
+    /// Recycled frontier vectors (cleared, capacity retained).
+    pool: Vec<Vec<Entry>>,
+    /// Recycling switch: `false` allocates fresh vectors on every
+    /// split/clear — the before/after baseline `dep_edges_unpooled`
+    /// exposes for the hot-path bench.
+    pooled: bool,
 }
 
 impl RegionIndex {
+    fn new(pooled: bool) -> Self {
+        RegionIndex {
+            segs: Vec::new(),
+            pool: Vec::new(),
+            pooled,
+        }
+    }
+
+    /// A frontier vector, recycled from the pool when possible.
+    fn take_vec(&mut self) -> Vec<Entry> {
+        if self.pooled {
+            self.pool.pop().unwrap_or_default()
+        } else {
+            Vec::new()
+        }
+    }
+
+    fn new_seg(&mut self, start: usize, end: usize) -> Seg {
+        Seg {
+            start,
+            end,
+            writers: self.take_vec(),
+            readers: self.take_vec(),
+        }
+    }
+
+    /// Split segment `k` at `x` (strictly inside); it keeps `[start, x)`
+    /// and the returned segment carries `[x, end)` with a copied
+    /// frontier.
+    fn split_seg(&mut self, k: usize, x: usize) -> Seg {
+        debug_assert!(self.segs[k].start < x && x < self.segs[k].end);
+        let mut right = self.new_seg(x, self.segs[k].end);
+        right.writers.extend_from_slice(&self.segs[k].writers);
+        right.readers.extend_from_slice(&self.segs[k].readers);
+        self.segs[k].end = x;
+        right
+    }
+
     /// Make segment boundaries line up with `[lo, hi)` exactly (splitting
     /// straddlers, materializing gaps) and return the index range of the
     /// segments that tile it.
@@ -404,7 +483,7 @@ impl RegionIndex {
         debug_assert!(lo < hi);
         let mut k = self.segs.partition_point(|s| s.end <= lo);
         if k < self.segs.len() && self.segs[k].start < lo {
-            let right = self.segs[k].split_at(lo);
+            let right = self.split_seg(k, lo);
             self.segs.insert(k + 1, right);
             k += 1;
         }
@@ -412,19 +491,21 @@ impl RegionIndex {
         let mut cursor = lo;
         while cursor < hi {
             if k == self.segs.len() || self.segs[k].start >= hi {
-                self.segs.insert(k, Seg::new(cursor, hi));
+                let s = self.new_seg(cursor, hi);
+                self.segs.insert(k, s);
                 k += 1;
                 break;
             }
             let s_start = self.segs[k].start;
             if s_start > cursor {
-                self.segs.insert(k, Seg::new(cursor, s_start));
+                let s = self.new_seg(cursor, s_start);
+                self.segs.insert(k, s);
                 k += 1;
                 cursor = s_start;
                 continue;
             }
             if self.segs[k].end > hi {
-                let right = self.segs[k].split_at(hi);
+                let right = self.split_seg(k, hi);
                 self.segs.insert(k + 1, right);
             }
             cursor = self.segs[k].end;
@@ -434,7 +515,19 @@ impl RegionIndex {
     }
 
     fn clear(&mut self) {
-        self.segs.clear();
+        if self.pooled {
+            let mut segs = std::mem::take(&mut self.segs);
+            for s in segs.drain(..) {
+                let Seg { mut writers, mut readers, .. } = s;
+                writers.clear();
+                readers.clear();
+                self.pool.push(writers);
+                self.pool.push(readers);
+            }
+            self.segs = segs;
+        } else {
+            self.segs.clear();
+        }
     }
 }
 
@@ -483,11 +576,18 @@ fn covers(outer: &Range<usize>, inner: &Range<usize>) -> bool {
 /// *values* and the ready *sets* coincide with the naive scheduler's at
 /// every step, hence identical picks and identical float accumulation.
 fn infer_deps(cmds: &[CmdMeta]) -> DepGraph {
+    infer_deps_with(cmds, true)
+}
+
+/// [`infer_deps`] with the [`RegionIndex`] frontier-vector recycling
+/// switchable — `pooled: false` is the allocation-per-split baseline
+/// kept for the hot-path bench's before/after comparison.
+fn infer_deps_with(cmds: &[CmdMeta], pooled: bool) -> DepGraph {
     let n = cmds.len();
     let mut out: Vec<Vec<CmdId>> = vec![Vec::new(); n];
     let mut indeg = vec![0u32; n];
     let mut mark = vec![usize::MAX; n];
-    let mut index = RegionIndex::default();
+    let mut index = RegionIndex::new(pooled);
     // Commands since (and including) the previous fence — the epoch a
     // fence must wait for.
     let mut epoch: Vec<CmdId> = Vec::new();
@@ -573,11 +673,24 @@ fn infer_deps(cmds: &[CmdMeta]) -> DepGraph {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Lane {
     /// The one serialized host memory bus (all CPU↔DPU transfers).
+    /// In a cluster this is machine 0's bus, so single-machine queues
+    /// keep their lane assignment unchanged.
     Bus,
-    /// The host CPU (merge compute).
+    /// The host CPU (merge compute); machine 0's in a cluster.
     Host,
-    /// The kernel lanes of a contiguous rank span.
+    /// The kernel lanes of a contiguous rank span (cluster launches use
+    /// machine-disjoint global rank indices, so no machine variant is
+    /// needed here).
     Ranks(Range<u32>),
+    /// Machine `m`'s serialized host bus (`m ≥ 1`; machine 0 is
+    /// [`Lane::Bus`]).
+    MachineBus(u32),
+    /// Machine `m`'s host CPU (`m ≥ 1`; machine 0 is [`Lane::Host`]).
+    MachineHost(u32),
+    /// Machine `m`'s egress network link (flat-switch topology: every
+    /// machine owns one full-duplex link into a non-blocking switch, so
+    /// egress serialization is the only contention point).
+    Link(u32),
 }
 
 /// Free-time bookkeeping of every lane: one bus, one host CPU, `n`
@@ -606,6 +719,27 @@ pub struct Timeline {
     /// Splice scratch buffer, reused across updates so steady-state
     /// reserve/hold allocate nothing.
     scratch: Vec<(u32, f64)>,
+    /// Per-machine bus lanes for machines ≥ 1, indexed by machine id and
+    /// grown on demand (an absent lane is free at 0.0). Empty for every
+    /// single-machine queue, so `Timeline::new` and legacy schedules are
+    /// untouched.
+    mbus: Vec<f64>,
+    /// Per-machine host-CPU lanes for machines ≥ 1 (see `mbus`).
+    mhost: Vec<f64>,
+    /// Per-machine egress network links, indexed by machine id (machine
+    /// 0 included — the network is new, there is no legacy lane to
+    /// alias).
+    links: Vec<f64>,
+}
+
+/// Grow-on-write store into a machine-lane vector (absent lanes are
+/// free at 0.0 until first reserved).
+fn set_lane(lanes: &mut Vec<f64>, m: u32, t: f64) {
+    let m = m as usize;
+    if lanes.len() <= m {
+        lanes.resize(m + 1, 0.0);
+    }
+    lanes[m] = t;
 }
 
 impl Timeline {
@@ -616,6 +750,9 @@ impl Timeline {
             n_ranks: n_ranks.max(1) as u32,
             spans: vec![(0, 0.0)],
             scratch: Vec::new(),
+            mbus: Vec::new(),
+            mhost: Vec::new(),
+            links: Vec::new(),
         }
     }
 
@@ -641,6 +778,9 @@ impl Timeline {
                 }
                 acc
             }
+            Lane::MachineBus(m) => self.mbus.get(*m as usize).copied().unwrap_or(0.0),
+            Lane::MachineHost(m) => self.mhost.get(*m as usize).copied().unwrap_or(0.0),
+            Lane::Link(m) => self.links.get(*m as usize).copied().unwrap_or(0.0),
         }
     }
 
@@ -697,6 +837,9 @@ impl Timeline {
                 let (lo, hi) = self.clamp(r);
                 self.splice_ranks(lo, hi, |_| finish);
             }
+            Lane::MachineBus(m) => set_lane(&mut self.mbus, *m, finish),
+            Lane::MachineHost(m) => set_lane(&mut self.mhost, *m, finish),
+            Lane::Link(m) => set_lane(&mut self.links, *m, finish),
         }
         (start, finish)
     }
@@ -711,6 +854,18 @@ impl Timeline {
             Lane::Ranks(r) => {
                 let (lo, hi) = self.clamp(r);
                 self.splice_ranks(lo, hi, |v| v.max(until));
+            }
+            Lane::MachineBus(m) => {
+                let cur = self.free_at(lane);
+                set_lane(&mut self.mbus, *m, cur.max(until));
+            }
+            Lane::MachineHost(m) => {
+                let cur = self.free_at(lane);
+                set_lane(&mut self.mhost, *m, cur.max(until));
+            }
+            Lane::Link(m) => {
+                let cur = self.free_at(lane);
+                set_lane(&mut self.links, *m, cur.max(until));
             }
         }
     }
@@ -792,6 +947,7 @@ struct GroupAcc {
     after: Vec<CmdId>,
     bytes: u64,
     req: Option<u64>,
+    machine: u32,
     any: bool,
 }
 
@@ -809,11 +965,20 @@ impl GroupAcc {
             after: Vec::new(),
             bytes: 0,
             req: None,
+            machine: 0,
             any: false,
         }
     }
 
     fn fold(&mut self, cmd: CmdMeta) {
+        if !self.any {
+            self.machine = cmd.machine;
+        } else {
+            debug_assert_eq!(
+                self.machine, cmd.machine,
+                "a transfer group cannot span machines"
+            );
+        }
         self.any = true;
         self.secs += cmd.secs;
         self.dpu_lo = self.dpu_lo.min(cmd.dpus.start);
@@ -865,6 +1030,7 @@ impl GroupAcc {
             fence: false,
             bytes: self.bytes,
             req: self.req,
+            machine: self.machine,
         })
     }
 }
@@ -984,7 +1150,19 @@ impl CmdQueue {
     /// Trace capture records these as the event dep edges; it is the
     /// same reduced edge set the scheduler issues against.
     pub fn dep_edges(&self) -> Vec<Vec<CmdId>> {
-        let DepGraph { out, .. } = infer_deps(&self.cmds);
+        self.dep_edges_impl(true)
+    }
+
+    /// [`CmdQueue::dep_edges`] with [`RegionIndex`] frontier-vector
+    /// recycling disabled — the allocation-per-split baseline the
+    /// `simulator_hotpath` bench compares the arena against. Produces
+    /// the identical edge set.
+    pub fn dep_edges_unpooled(&self) -> Vec<Vec<CmdId>> {
+        self.dep_edges_impl(false)
+    }
+
+    fn dep_edges_impl(&self, pooled: bool) -> Vec<Vec<CmdId>> {
+        let DepGraph { out, .. } = infer_deps_with(&self.cmds, pooled);
         let mut deps: Vec<Vec<CmdId>> = vec![Vec::new(); self.cmds.len()];
         for (j, outs) in out.iter().enumerate() {
             for &i in outs {
@@ -1184,8 +1362,17 @@ impl CmdQueue {
 /// op lands on exactly the lane its queued form would.
 pub(crate) fn lane_for(c: &CmdMeta, dpus_per_rank: usize, n_ranks: usize) -> Option<Lane> {
     match c.kind {
-        CmdKind::Push | CmdKind::Pull => Some(Lane::Bus),
-        CmdKind::HostMerge => Some(Lane::Host),
+        CmdKind::Push | CmdKind::Pull => Some(if c.machine == 0 {
+            Lane::Bus
+        } else {
+            Lane::MachineBus(c.machine)
+        }),
+        CmdKind::HostMerge => Some(if c.machine == 0 {
+            Lane::Host
+        } else {
+            Lane::MachineHost(c.machine)
+        }),
+        CmdKind::Net => Some(Lane::Link(c.machine)),
         CmdKind::Fence => None,
         CmdKind::Launch => {
             let per = dpus_per_rank.max(1);
@@ -1641,5 +1828,166 @@ mod tests {
         assert_schedules_match(&q, 4, 4);
         assert_schedules_match(&q, 2, 8);
         assert_schedules_match(&q, 32, 64);
+    }
+
+    /// Machine buses are independent resource lanes: same-machine
+    /// transfers serialize, cross-machine transfers (disjoint global
+    /// DPU indices, so no data deps either) ride in parallel.
+    #[test]
+    fn machine_buses_are_independent_lanes() {
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::push(0..8, 0..1024, 0.4, vec![]));
+        q.push(CmdMeta::push(16..24, 0..1024, 0.4, vec![]).on_machine(1));
+        q.push(CmdMeta::push(16..24, 2048..3072, 0.4, vec![]).on_machine(1));
+        let s = q.schedule(4, PER);
+        assert_eq!(s.finish[0].to_bits(), 0.4f64.to_bits());
+        assert_eq!(
+            s.finish[1].to_bits(),
+            0.4f64.to_bits(),
+            "machine 1's bus is free while machine 0 pushes"
+        );
+        assert_eq!(
+            s.finish[2].to_bits(),
+            0.8f64.to_bits(),
+            "machine 1's second push waits for its own bus"
+        );
+        assert_schedules_match(&q, 4, PER);
+    }
+
+    /// Net commands serialize on the issuing machine's egress link and
+    /// overlap across machines — the flat-switch model.
+    #[test]
+    fn net_serializes_per_link_and_overlaps_across_links() {
+        let mut q = CmdQueue::new();
+        q.push(CmdMeta::net(0, 0.3, vec![]));
+        q.push(CmdMeta::net(0, 0.3, vec![]));
+        q.push(CmdMeta::net(1, 0.3, vec![]));
+        let s = q.schedule(RANKS, PER);
+        assert_eq!(s.finish[0].to_bits(), 0.3f64.to_bits());
+        assert_eq!(s.finish[1].to_bits(), 0.6f64.to_bits(), "same link serializes");
+        assert_eq!(s.finish[2].to_bits(), 0.3f64.to_bits(), "other link overlaps");
+        assert!((s.makespan - 0.6).abs() < 1e-12);
+        // a Net gated behind a pull via an explicit edge waits for it
+        let mut q2 = CmdQueue::new();
+        let pull = q2.push(CmdMeta::pull(0..8, 0..1024, 0.2, vec![]));
+        q2.push(CmdMeta::net(0, 0.5, vec![pull]));
+        let s2 = q2.schedule(RANKS, PER);
+        assert_eq!(s2.makespan.to_bits(), 0.7f64.to_bits());
+        assert_schedules_match(&q, RANKS, PER);
+        assert_schedules_match(&q2, RANKS, PER);
+    }
+
+    /// Machine lanes grow on demand and an absent lane reads free-at-0,
+    /// so `Timeline::new` stays geometry-compatible with every existing
+    /// single-machine caller.
+    #[test]
+    fn timeline_machine_lanes_grow_on_demand() {
+        let mut tl = Timeline::new(2);
+        assert_eq!(tl.free_at(&Lane::MachineBus(3)), 0.0);
+        assert_eq!(tl.free_at(&Lane::Link(7)), 0.0);
+        let (s, f) = tl.reserve(&Lane::MachineBus(3), 0.0, 1.0);
+        assert_eq!((s, f), (0.0, 1.0));
+        assert_eq!(tl.free_at(&Lane::MachineBus(3)), 1.0);
+        assert_eq!(tl.free_at(&Lane::MachineBus(2)), 0.0, "other machines untouched");
+        assert_eq!(tl.free_at(&Lane::Bus), 0.0, "machine 0's bus untouched");
+        tl.hold(&Lane::Link(1), 2.0);
+        assert_eq!(tl.free_at(&Lane::Link(1)), 2.0);
+        tl.hold(&Lane::Link(1), 0.5);
+        assert_eq!(tl.free_at(&Lane::Link(1)), 2.0, "hold never lowers");
+        tl.hold(&Lane::MachineHost(2), 1.5);
+        assert_eq!(tl.free_at(&Lane::MachineHost(2)), 1.5);
+    }
+
+    /// A transfer group records the machine of its members, so grouped
+    /// cluster scatters land on the right per-machine bus lane.
+    #[test]
+    fn grouped_transfers_carry_their_machine() {
+        let mut q = CmdQueue::new();
+        q.group_begin();
+        q.push(CmdMeta::push(16..17, 0..64, 0.01, vec![]).on_machine(2));
+        q.push(CmdMeta::push(17..18, 64..128, 0.01, vec![]).on_machine(2));
+        q.group_end();
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.cmds()[0].machine, 2);
+        assert_eq!(
+            q.lanes(RANKS, PER)[0],
+            Some(Lane::MachineBus(2)),
+            "the merged command rides machine 2's bus"
+        );
+    }
+
+    /// A messy multi-machine queue — per-machine transfers, launches on
+    /// machine-disjoint global DPU spans, Net collectives, merges, and
+    /// fences — schedules bitwise identically on both schedulers.
+    #[test]
+    fn optimized_matches_reference_with_machines_and_net() {
+        let mut q = CmdQueue::new();
+        for m in 0..4u32 {
+            let base = m as usize * 16;
+            let push = q.push(
+                CmdMeta::push(base..base + 16, 0..1024, 0.02 + m as f64 * 1e-3, vec![])
+                    .on_machine(m),
+            );
+            q.push(
+                CmdMeta::launch(
+                    base..base + 16,
+                    Access::new().read(0..1024).write(4096..4160),
+                    0.05,
+                )
+                .on_machine(m),
+            );
+            let pull =
+                q.push(CmdMeta::pull(base..base + 16, 4096..4160, 0.01, vec![]).on_machine(m));
+            q.push(CmdMeta::net(m, 0.015, vec![pull]));
+            q.push(CmdMeta::host_merge_after(0.01, vec![push]).on_machine(m));
+        }
+        q.push(CmdMeta::fence());
+        for m in 0..4u32 {
+            q.push(CmdMeta::net(m, 0.02, vec![]));
+        }
+        // 4 machines × 4 ranks of 4 DPUs = global geometry (16, 4)
+        assert_schedules_match(&q, 16, 4);
+        let s = q.schedule(16, 4);
+        assert!(s.hidden() > 0.0, "cross-machine work must overlap");
+    }
+
+    /// The pooled (arena) and unpooled dependency inference emit the
+    /// same edge set on a fence-heavy queue — the recycling is a pure
+    /// allocation optimization.
+    #[test]
+    fn pooled_and_unpooled_dep_edges_agree() {
+        let mut q = CmdQueue::new();
+        for i in 0..200usize {
+            match i % 5 {
+                0 => {
+                    q.push(CmdMeta::push(
+                        i % 8..i % 8 + 2,
+                        (i % 7) * 256..(i % 7) * 256 + 300,
+                        0.01,
+                        vec![],
+                    ));
+                }
+                1 => {
+                    q.push(CmdMeta::launch(
+                        0..8,
+                        Access::new().read(0..2048).write(8192..8300),
+                        0.05,
+                    ));
+                }
+                2 => {
+                    q.push(CmdMeta::pull(2..10, 8192..8300, 0.02, vec![]));
+                }
+                3 if i % 20 == 3 => {
+                    q.push(CmdMeta::fence());
+                }
+                3 => {
+                    q.push(CmdMeta::host_merge(0.01));
+                }
+                _ => {
+                    q.push(CmdMeta::push((i / 3) % 4..(i / 3) % 4 + 1, 0..128, 0.001, vec![]));
+                }
+            }
+        }
+        assert_eq!(q.dep_edges(), q.dep_edges_unpooled());
     }
 }

@@ -1,0 +1,287 @@
+//! Trace diffing: compare two `trace/v1` captures of the **same run
+//! configuration** and report what moved — per-lane busy-time deltas,
+//! the makespan delta, and the top-k events whose placement changed the
+//! most (closing the ROADMAP item-3 "diff mode" leftover).
+//!
+//! Same-config traces record the same command sequence with the same
+//! dense event ids (capture walks the queue in enqueue order), so
+//! events are matched **by id**. Diffing traces of different configs is
+//! not an error — the report simply flags the unmatched tail — but the
+//! per-event deltas are only meaningful when the programs agree.
+
+use super::export::{kind_str, lane_str};
+use super::Trace;
+use crate::util::table::Table;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Busy-seconds of one lane label in each trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LaneDelta {
+    /// Lane label (`bus`, `host`, `ranks:l-h`, `bus:m`, `link:m`, …).
+    pub lane: String,
+    /// Summed event seconds on the lane in trace A.
+    pub busy_a: f64,
+    /// Summed event seconds on the lane in trace B.
+    pub busy_b: f64,
+}
+
+impl LaneDelta {
+    /// Signed busy-time change, B − A.
+    pub fn delta(&self) -> f64 {
+        self.busy_b - self.busy_a
+    }
+}
+
+/// One id-matched event whose placement or duration changed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EventDelta {
+    pub id: u64,
+    /// Kind in trace B (same as A for same-config traces).
+    pub kind: String,
+    /// Lane labels in A and B.
+    pub lane_a: String,
+    pub lane_b: String,
+    /// Start-instant change, B − A.
+    pub d_start: f64,
+    /// Duration change, B − A.
+    pub d_secs: f64,
+}
+
+impl EventDelta {
+    /// Ranking score: total placement movement.
+    fn score(&self) -> f64 {
+        self.d_start.abs() + self.d_secs.abs()
+    }
+}
+
+/// The full comparison of two traces.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceDiff {
+    pub makespan_a: f64,
+    pub makespan_b: f64,
+    pub events_a: usize,
+    pub events_b: usize,
+    /// Every lane either trace occupies, largest |busy delta| first.
+    pub lanes: Vec<LaneDelta>,
+    /// The k id-matched events with the largest placement change
+    /// (zero-change events are omitted).
+    pub top: Vec<EventDelta>,
+}
+
+impl TraceDiff {
+    /// Signed makespan change, B − A.
+    pub fn d_makespan(&self) -> f64 {
+        self.makespan_b - self.makespan_a
+    }
+
+    /// Render as aligned text tables (the `repro trace --diff` output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "makespan: {:e} -> {:e} (delta {:e})",
+            self.makespan_a,
+            self.makespan_b,
+            self.d_makespan()
+        );
+        let _ = writeln!(out, "events: {} vs {}", self.events_a, self.events_b);
+        let mut lanes = Table::new("lane busy-time", &["lane", "busy A", "busy B", "delta"]);
+        for l in &self.lanes {
+            lanes.row(vec![
+                l.lane.clone(),
+                format!("{:e}", l.busy_a),
+                format!("{:e}", l.busy_b),
+                format!("{:e}", l.delta()),
+            ]);
+        }
+        out.push_str(&lanes.render());
+        if !self.top.is_empty() {
+            let mut top = Table::new(
+                "top changed events",
+                &["id", "kind", "lane A", "lane B", "d_start", "d_secs"],
+            );
+            for e in &self.top {
+                top.row(vec![
+                    e.id.to_string(),
+                    e.kind.clone(),
+                    e.lane_a.clone(),
+                    e.lane_b.clone(),
+                    format!("{:e}", e.d_start),
+                    format!("{:e}", e.d_secs),
+                ]);
+            }
+            out.push_str(&top.render());
+        }
+        out
+    }
+
+    /// Machine-readable form (`trace_diff/v1`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"schema\": \"trace_diff/v1\",\n");
+        let _ = writeln!(s, "  \"makespan_a\": {:e},", self.makespan_a);
+        let _ = writeln!(s, "  \"makespan_b\": {:e},", self.makespan_b);
+        let _ = writeln!(s, "  \"d_makespan\": {:e},", self.d_makespan());
+        let _ = writeln!(s, "  \"events_a\": {},", self.events_a);
+        let _ = writeln!(s, "  \"events_b\": {},", self.events_b);
+        s.push_str("  \"lanes\": [\n");
+        for (i, l) in self.lanes.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"lane\": \"{}\", \"busy_a\": {:e}, \"busy_b\": {:e}, \"delta\": {:e}}}",
+                l.lane,
+                l.busy_a,
+                l.busy_b,
+                l.delta()
+            );
+            s.push_str(if i + 1 < self.lanes.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ],\n  \"top_events\": [\n");
+        for (i, e) in self.top.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"id\": {}, \"kind\": \"{}\", \"lane_a\": \"{}\", \"lane_b\": \"{}\", \
+                 \"d_start\": {:e}, \"d_secs\": {:e}}}",
+                e.id, e.kind, e.lane_a, e.lane_b, e.d_start, e.d_secs
+            );
+            s.push_str(if i + 1 < self.top.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Compare trace `b` against baseline `a`, keeping the `top_k` events
+/// whose placement changed the most. Deterministic: lanes rank by
+/// |busy delta| (ties by label), events by movement score (ties by id).
+pub fn diff_traces(a: &Trace, b: &Trace, top_k: usize) -> TraceDiff {
+    let mut busy: BTreeMap<String, (f64, f64)> = BTreeMap::new();
+    for e in &a.events {
+        busy.entry(lane_str(&e.lane)).or_insert((0.0, 0.0)).0 += e.secs;
+    }
+    for e in &b.events {
+        busy.entry(lane_str(&e.lane)).or_insert((0.0, 0.0)).1 += e.secs;
+    }
+    let mut lanes: Vec<LaneDelta> = busy
+        .into_iter()
+        .map(|(lane, (busy_a, busy_b))| LaneDelta { lane, busy_a, busy_b })
+        .collect();
+    lanes.sort_by(|x, y| {
+        y.delta()
+            .abs()
+            .total_cmp(&x.delta().abs())
+            .then_with(|| x.lane.cmp(&y.lane))
+    });
+
+    let by_id: BTreeMap<u64, &super::TraceEvent> =
+        a.events.iter().map(|e| (e.id, e)).collect();
+    let mut top: Vec<EventDelta> = b
+        .events
+        .iter()
+        .filter_map(|eb| {
+            let ea = by_id.get(&eb.id)?;
+            let d = EventDelta {
+                id: eb.id,
+                kind: kind_str(eb.kind).to_string(),
+                lane_a: lane_str(&ea.lane),
+                lane_b: lane_str(&eb.lane),
+                d_start: eb.start - ea.start,
+                d_secs: eb.secs - ea.secs,
+            };
+            (d.score() > 0.0 || d.lane_a != d.lane_b).then_some(d)
+        })
+        .collect();
+    top.sort_by(|x, y| y.score().total_cmp(&x.score()).then_with(|| x.id.cmp(&y.id)));
+    top.truncate(top_k);
+
+    TraceDiff {
+        makespan_a: a.span(),
+        makespan_b: b.span(),
+        events_a: a.events.len(),
+        events_b: b.events.len(),
+        lanes,
+        top,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::queue::CmdKind;
+    use crate::coordinator::trace::{LaneTag, TraceEvent};
+
+    fn ev(id: u64, lane: LaneTag, start: f64, secs: f64) -> TraceEvent {
+        TraceEvent {
+            id,
+            kind: CmdKind::Push,
+            lane,
+            start,
+            secs,
+            bytes: 0,
+            tenant: None,
+            req: None,
+            deps: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn identical_traces_diff_to_zero() {
+        let t = Trace {
+            source: "queue".into(),
+            n_ranks: 2,
+            events: vec![
+                ev(0, LaneTag::Bus, 0.0, 0.5),
+                ev(1, LaneTag::Ranks { lo: 0, hi: 2 }, 0.5, 1.0),
+            ],
+        };
+        let d = diff_traces(&t, &t.clone(), 10);
+        assert_eq!(d.d_makespan(), 0.0);
+        assert!(d.top.is_empty(), "no event moved");
+        assert!(d.lanes.iter().all(|l| l.delta() == 0.0));
+        assert_eq!(d.lanes.len(), 2);
+    }
+
+    #[test]
+    fn moved_and_grown_events_rank_by_movement() {
+        let a = Trace {
+            source: "queue".into(),
+            n_ranks: 1,
+            events: vec![
+                ev(0, LaneTag::Bus, 0.0, 0.5),
+                ev(1, LaneTag::Bus, 0.5, 0.2),
+                ev(2, LaneTag::Link { m: 0 }, 0.7, 0.1),
+            ],
+        };
+        let mut b = a.clone();
+        b.events[1].start = 0.9; // moved by 0.4
+        b.events[2].secs = 0.2; // grew by 0.1
+        let d = diff_traces(&a, &b, 2);
+        assert_eq!(d.top.len(), 2);
+        assert_eq!(d.top[0].id, 1, "largest movement first");
+        assert!((d.top[0].d_start - 0.4).abs() < 1e-12);
+        assert_eq!(d.top[1].id, 2);
+        assert!((d.top[1].d_secs - 0.1).abs() < 1e-12);
+        // link lane busy grew by 0.1 and ranks first in |delta| order
+        assert_eq!(d.lanes[0].lane, "link:0");
+        assert!((d.lanes[0].delta() - 0.1).abs() < 1e-12);
+        // exports are well-formed
+        assert!(crate::util::json::parse_json(&d.to_json()).is_ok());
+        assert!(d.render().contains("top changed events"));
+    }
+
+    #[test]
+    fn unmatched_tail_is_counted_not_crashed() {
+        let a = Trace {
+            source: "queue".into(),
+            n_ranks: 1,
+            events: vec![ev(0, LaneTag::Bus, 0.0, 0.5)],
+        };
+        let mut b = a.clone();
+        b.events.push(ev(1, LaneTag::Host, 0.5, 0.3));
+        let d = diff_traces(&a, &b, 10);
+        assert_eq!((d.events_a, d.events_b), (1, 2));
+        assert!(d.top.is_empty(), "the unmatched event has no pair to diff");
+        assert_eq!(d.lanes.len(), 2);
+    }
+}

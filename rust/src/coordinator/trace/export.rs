@@ -9,13 +9,14 @@ use crate::coordinator::queue::CmdKind;
 use crate::util::json::{parse_json, Value};
 use std::fmt::Write as _;
 
-fn kind_str(k: CmdKind) -> &'static str {
+pub(crate) fn kind_str(k: CmdKind) -> &'static str {
     match k {
         CmdKind::Push => "push",
         CmdKind::Pull => "pull",
         CmdKind::Launch => "launch",
         CmdKind::HostMerge => "host_merge",
         CmdKind::Fence => "fence",
+        CmdKind::Net => "net",
     }
 }
 
@@ -26,16 +27,20 @@ fn kind_from(s: &str) -> Result<CmdKind, String> {
         "launch" => CmdKind::Launch,
         "host_merge" => CmdKind::HostMerge,
         "fence" => CmdKind::Fence,
+        "net" => CmdKind::Net,
         other => return Err(format!("unknown event kind '{other}'")),
     })
 }
 
-fn lane_str(l: &LaneTag) -> String {
+pub(crate) fn lane_str(l: &LaneTag) -> String {
     match l {
         LaneTag::Bus => "bus".into(),
         LaneTag::Host => "host".into(),
         LaneTag::Barrier => "barrier".into(),
         LaneTag::Ranks { lo, hi } => format!("ranks:{lo}-{hi}"),
+        LaneTag::MachineBus { m } => format!("bus:{m}"),
+        LaneTag::MachineHost { m } => format!("host:{m}"),
+        LaneTag::Link { m } => format!("link:{m}"),
     }
 }
 
@@ -45,6 +50,19 @@ fn lane_from(s: &str) -> Result<LaneTag, String> {
         "host" => LaneTag::Host,
         "barrier" => LaneTag::Barrier,
         other => {
+            let machine = |prefix: &str, raw: &str| -> Result<u32, String> {
+                raw.parse()
+                    .map_err(|_| format!("bad {prefix} machine '{raw}'"))
+            };
+            if let Some(m) = other.strip_prefix("bus:") {
+                return Ok(LaneTag::MachineBus { m: machine("bus", m)? });
+            }
+            if let Some(m) = other.strip_prefix("host:") {
+                return Ok(LaneTag::MachineHost { m: machine("host", m)? });
+            }
+            if let Some(m) = other.strip_prefix("link:") {
+                return Ok(LaneTag::Link { m: machine("link", m)? });
+            }
             let span = other
                 .strip_prefix("ranks:")
                 .ok_or_else(|| format!("unknown lane '{other}'"))?;
@@ -108,10 +126,13 @@ impl Trace {
     }
 
     /// Chrome-trace JSON: lanes become tracks (`tid` 0 = bus, 1 = host,
-    /// `2 + r` = rank `r`), durations become `ph: "X"` complete events
-    /// with `ts`/`dur` in microseconds, fences become instant events.
-    /// A launch spanning ranks `[lo, hi)` draws one slice per rank so
-    /// the span is visible on every lane it occupies.
+    /// `2 + r` = rank `r`; cluster traces add three tracks per machine
+    /// `m` at `2 + n_ranks + 3m` — its bus, host CPU, and egress link —
+    /// only for machines that actually appear in the events), durations
+    /// become `ph: "X"` complete events with `ts`/`dur` in microseconds,
+    /// fences become instant events. A launch spanning ranks `[lo, hi)`
+    /// draws one slice per rank so the span is visible on every lane it
+    /// occupies.
     pub fn to_chrome_json(&self) -> String {
         let mut s = String::new();
         s.push_str("{\"displayTimeUnit\": \"ms\", \"traceEvents\": [\n");
@@ -132,6 +153,25 @@ impl Trace {
         thread(&mut s, 1, "host");
         for r in 0..self.n_ranks {
             thread(&mut s, 2 + r, &format!("rank {r}"));
+        }
+        // Machine / link tracks exist only when cluster events occupy
+        // them, so single-machine traces keep their exact metadata set.
+        let base = 2 + self.n_ranks;
+        let mut machine_tracks: Vec<(u32, String)> = Vec::new();
+        for e in &self.events {
+            let t = match &e.lane {
+                LaneTag::MachineBus { m } => (base + 3 * m, format!("machine {m} bus")),
+                LaneTag::MachineHost { m } => (base + 3 * m + 1, format!("machine {m} host")),
+                LaneTag::Link { m } => (base + 3 * m + 2, format!("link {m}")),
+                _ => continue,
+            };
+            if !machine_tracks.contains(&t) {
+                machine_tracks.push(t);
+            }
+        }
+        machine_tracks.sort_by_key(|(tid, _)| *tid);
+        for (tid, name) in &machine_tracks {
+            thread(&mut s, *tid, name);
         }
         let mut lines: Vec<String> = Vec::with_capacity(self.events.len());
         for e in &self.events {
@@ -163,6 +203,9 @@ impl Trace {
                         slice(2 + r);
                     }
                 }
+                LaneTag::MachineBus { m } => slice(base + 3 * m),
+                LaneTag::MachineHost { m } => slice(base + 3 * m + 1),
+                LaneTag::Link { m } => slice(base + 3 * m + 2),
                 LaneTag::Barrier => lines.push(format!(
                     "  {{\"ph\": \"i\", \"name\": \"{name}\", \"s\": \"p\", \
                      \"pid\": 0, \"tid\": 1, \"ts\": {ts}, \"args\": {{{args}}}}}"
@@ -323,6 +366,56 @@ mod tests {
                 .count(),
             1
         );
+    }
+
+    /// Cluster lanes (`bus:m` / `host:m` / `link:m`) round-trip through
+    /// the native form and map onto their own Chrome tracks — which are
+    /// emitted only for machines actually present in the events.
+    #[test]
+    fn machine_lanes_roundtrip_and_get_own_tracks() {
+        let mut t = sample();
+        t.events.push(TraceEvent {
+            id: 3,
+            kind: CmdKind::Push,
+            lane: LaneTag::MachineBus { m: 1 },
+            start: 0.6,
+            secs: 0.1,
+            bytes: 128,
+            tenant: None,
+            req: None,
+            deps: vec![],
+        });
+        t.events.push(TraceEvent {
+            id: 4,
+            kind: CmdKind::Net,
+            lane: LaneTag::Link { m: 1 },
+            start: 0.7,
+            secs: 0.05,
+            bytes: 256,
+            tenant: None,
+            req: None,
+            deps: vec![3],
+        });
+        let back = parse_trace(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+        assert_eq!(back.events[4].kind, CmdKind::Net);
+        assert_eq!(back.events[4].lane, LaneTag::Link { m: 1 });
+        let v = parse_json(&t.to_chrome_json()).unwrap();
+        let evs = v.get("traceEvents").and_then(Value::as_arr).unwrap();
+        // the 5 single-machine metas plus machine 1's bus and link
+        // tracks (no host:1 meta — no event occupies it)
+        let metas = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Value::as_str) == Some("M"))
+            .count();
+        assert_eq!(metas, 7);
+        // base = 2 + n_ranks = 4: bus:1 → 4+3 = 7, link:1 → 4+5 = 9
+        let tids: Vec<f64> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+            .map(|e| e.get("tid").and_then(Value::as_f64).unwrap())
+            .collect();
+        assert!(tids.contains(&7.0) && tids.contains(&9.0), "tids {tids:?}");
     }
 
     #[test]

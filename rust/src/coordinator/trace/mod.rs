@@ -26,10 +26,12 @@
 //! live in the submodules; everything is deterministic — identical
 //! traces produce bit-identical reports, across runs and executors.
 
+mod diff;
 mod export;
 mod replay;
 mod triage;
 
+pub use diff::{diff_traces, LaneDelta, TraceDiff};
 pub use export::parse_trace;
 pub use replay::ReplayEngine;
 pub use triage::{analyze, analyze_with, BusWindow, RankLoad, StallEdge, TriageReport};
@@ -51,6 +53,12 @@ pub enum LaneTag {
     Ranks { lo: u32, hi: u32 },
     /// No resource (fences / barriers).
     Barrier,
+    /// Machine `m`'s host bus (cluster traces; machine 0 stays `Bus`).
+    MachineBus { m: u32 },
+    /// Machine `m`'s host CPU (cluster traces; machine 0 stays `Host`).
+    MachineHost { m: u32 },
+    /// Machine `m`'s egress network link (collective traffic).
+    Link { m: u32 },
 }
 
 impl From<Option<Lane>> for LaneTag {
@@ -60,6 +68,9 @@ impl From<Option<Lane>> for LaneTag {
             Some(Lane::Bus) => LaneTag::Bus,
             Some(Lane::Host) => LaneTag::Host,
             Some(Lane::Ranks(r)) => LaneTag::Ranks { lo: r.start, hi: r.end },
+            Some(Lane::MachineBus(m)) => LaneTag::MachineBus { m },
+            Some(Lane::MachineHost(m)) => LaneTag::MachineHost { m },
+            Some(Lane::Link(m)) => LaneTag::Link { m },
         }
     }
 }
@@ -243,5 +254,14 @@ mod tests {
             LaneTag::Ranks { lo: 2, hi: 5 }
         );
         assert_eq!(LaneTag::from(None), LaneTag::Barrier);
+        assert_eq!(
+            LaneTag::from(Some(Lane::MachineBus(3))),
+            LaneTag::MachineBus { m: 3 }
+        );
+        assert_eq!(
+            LaneTag::from(Some(Lane::MachineHost(1))),
+            LaneTag::MachineHost { m: 1 }
+        );
+        assert_eq!(LaneTag::from(Some(Lane::Link(0))), LaneTag::Link { m: 0 });
     }
 }

@@ -318,6 +318,8 @@ mod tests {
                 LaneTag::Host => CmdKind::HostMerge,
                 LaneTag::Ranks { .. } => CmdKind::Launch,
                 LaneTag::Barrier => CmdKind::Fence,
+                LaneTag::Link { .. } => CmdKind::Net,
+                LaneTag::MachineBus { .. } | LaneTag::MachineHost { .. } => CmdKind::Push,
             },
             lane,
             start,

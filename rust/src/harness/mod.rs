@@ -9,6 +9,7 @@ pub mod figures;
 pub mod future;
 pub mod multitenant;
 pub mod overlap;
+pub mod scaleout;
 pub mod scaling;
 pub mod tables;
 pub mod traced;
@@ -23,11 +24,12 @@ use std::path::Path;
 /// scheduling study — policies and slice splits; `overlap` = serialized
 /// vs async command queues, the derived transfer/kernel overlap;
 /// `traced` = trace capture, replay, and hotspot triage of a pipelined
-/// serving window).
-pub const ALL_IDS: [&str; 26] = [
+/// serving window; `scaleout` = strong-scaling efficiency of sharded
+/// fleets over the modeled multi-machine network).
+pub const ALL_IDS: [&str; 27] = [
     "table1", "table2", "table3", "table4", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
     "fig10", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
-    "fig22", "future", "amortized", "multitenant", "overlap", "traced",
+    "fig22", "future", "amortized", "multitenant", "overlap", "traced", "scaleout",
 ];
 
 /// Per-benchmark dataset scale used by the harness (relative to Table 3
@@ -82,6 +84,7 @@ pub fn run_id(id: &str, outdir: &Path, quick: bool) -> anyhow::Result<()> {
         "amortized" => vec![amortized::amortized(quick)],
         "overlap" => vec![overlap::overlap(quick)],
         "traced" => vec![traced::traced(quick)],
+        "scaleout" => vec![scaleout::scaleout(quick)],
         "multitenant" => vec![
             multitenant::multitenant_policies(quick),
             multitenant::multitenant_splits(quick),

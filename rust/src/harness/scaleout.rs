@@ -1,0 +1,87 @@
+//! `scaleout` — strong-scaling efficiency of the modeled multi-machine
+//! cluster (`coordinator::cluster`) on the four sharded workloads.
+//!
+//! Every benchmark solves the **same problem** at every machine count
+//! (the sharded drivers fix dataset sizes independently of `machines`),
+//! so the sweep measures how much of the ideal 1/N makespan survives
+//! the modeled collectives: GEMV's input fan-out and result return,
+//! SpMV's output all-reduce, BFS's per-level frontier exchange, and
+//! MLP's inter-layer activation all-gather. `efficiency` is
+//! `T(1) / (N · T(N))` on the cluster makespan — 1.0 means the network
+//! was free, lower means the wire (or a serial stage) ate the scaling.
+//! The 1-machine row is the single-machine queue path bit-for-bit
+//! (`tests/executor_equivalence.rs` pins that), so the curves are
+//! anchored to the validated model.
+
+use crate::prim::scaleout::{run_bench, ScaleoutConfig, SCALEOUT_BENCHES};
+use crate::util::table::Table;
+
+/// Machine counts swept (powers of two up to the paper-style 16-machine
+/// fleet). Quick mode keeps the first three points.
+const MACHINES: [u32; 5] = [1, 2, 4, 8, 16];
+
+/// Harness dataset scales per bench — smaller than the single-machine
+/// harness since every sweep point re-simulates the full problem.
+fn scale_for(bench: &str) -> f64 {
+    match bench {
+        "BFS" => 0.02,
+        "SpMV" => 0.05,
+        _ => 0.10,
+    }
+}
+
+pub fn scaleout(quick: bool) -> Table {
+    let machines: &[u32] = if quick { &MACHINES[..3] } else { &MACHINES };
+    let mut t = Table::new(
+        "scaleout — strong scaling over modeled machines (flat switch)",
+        &["bench", "machines", "makespan_ms", "net_ms", "net_kb", "efficiency", "verified"],
+    );
+    for name in SCALEOUT_BENCHES {
+        let mut t1 = 0.0f64;
+        for &n in machines {
+            let mut sc = ScaleoutConfig::new(n);
+            sc.scale = scale_for(name);
+            let r = run_bench(name, &sc).expect("known sharded bench");
+            if n == 1 {
+                t1 = r.makespan;
+            }
+            let eff = t1 / (n as f64 * r.makespan.max(f64::MIN_POSITIVE));
+            t.row(vec![
+                name.to_string(),
+                n.to_string(),
+                Table::fmt(r.makespan * 1e3),
+                Table::fmt(r.net_secs * 1e3),
+                Table::fmt(r.net_bytes as f64 / 1e3),
+                Table::fmt(eff),
+                r.verified.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Acceptance pin: every sweep point verifies, one machine is the
+    /// efficiency anchor (1.0, no network), and adding machines puts
+    /// bytes on the wire.
+    #[test]
+    fn curves_are_anchored_and_verified() {
+        let t = scaleout(true);
+        assert_eq!(t.rows.len(), SCALEOUT_BENCHES.len() * 3);
+        for row in &t.rows {
+            assert_eq!(row[6], "true", "{} x{} must verify", row[0], row[1]);
+            let net_kb: f64 = row[4].parse().expect("net_kb parses");
+            let eff: f64 = row[5].parse().expect("efficiency parses");
+            assert!(eff > 0.0, "{} x{}: efficiency must be positive", row[0], row[1]);
+            if row[1] == "1" {
+                assert!((eff - 1.0).abs() < 1e-9, "{}: one machine anchors at 1.0", row[0]);
+                assert_eq!(net_kb, 0.0, "{}: one machine has no wire", row[0]);
+            } else {
+                assert!(net_kb > 0.0, "{} x{}: collectives must cross the wire", row[0], row[1]);
+            }
+        }
+    }
+}

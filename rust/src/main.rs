@@ -22,6 +22,13 @@
 //! repro trace [--bench N] [--requests R] [--json]   traced pipelined
 //!            serving + hotspot triage; or --load <trace.v1.json> to
 //!            triage a recorded trace
+//! repro trace --diff <a.v1.json> <b.v1.json> [--top K] [--json]
+//!            compare two recorded traces: per-lane busy deltas and the
+//!            top-K events whose placement moved
+//! repro cluster [--machines N] [--bench B] [--dpus D] [--tasklets T]
+//!            [--scale S] [--json] [--quick]   sharded GEMV/SpMV/BFS/MLP
+//!            over a modeled multi-machine fleet with network
+//!            collectives; --json writes BENCH_CLUSTER.json
 //! repro all [--quick]                everything, CSVs into --outdir
 //! ```
 //! All outputs land in `--outdir` (default `results/`). The global
@@ -37,13 +44,14 @@
 //! replay engine consume). See `coordinator::trace`.
 
 use prim_pim::arch::SystemConfig;
-use prim_pim::coordinator::trace::analyze;
+use prim_pim::coordinator::trace::{analyze, diff_traces};
 use prim_pim::coordinator::{
     parse_trace, run_sched, ExecChoice, PolicyKind, ReplayEngine, SchedConfig, TenantSpec,
     TraceSink,
 };
 use prim_pim::harness::{self, ALL_IDS};
 use prim_pim::prim::common::{all_benches, bench_by_name, BenchResult, RunConfig};
+use prim_pim::prim::scaleout::{run_bench as run_scaleout, ScaleoutConfig, SCALEOUT_BENCHES};
 use prim_pim::prim::workload::{serve, workload_by_name};
 use prim_pim::runtime;
 use std::path::{Path, PathBuf};
@@ -118,7 +126,7 @@ impl Args {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: repro <list|table|figure|micro|prim|serve|sched|trace|compare|estimate|all> \
+        "usage: repro <list|table|figure|micro|prim|serve|sched|trace|cluster|compare|estimate|all> \
          [--seed S] [--trace [path]] [args]\n\
          run `repro list` for the experiment index"
     );
@@ -481,6 +489,27 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "trace" => {
+            // Diff mode: compare two recorded native traces and report
+            // what moved (same-config captures diff event-by-event).
+            if let Some(a_path) = args.flags.get("diff") {
+                let b_path = args.positional.first().map(String::as_str).unwrap_or_else(|| {
+                    eprintln!("trace --diff needs two traces: --diff <a.v1.json> <b.v1.json>");
+                    std::process::exit(2);
+                });
+                let load = |p: &str| -> anyhow::Result<prim_pim::coordinator::Trace> {
+                    let src = std::fs::read_to_string(p)
+                        .map_err(|e| anyhow::anyhow!("--diff {p}: {e}"))?;
+                    parse_trace(&src).map_err(|e| anyhow::anyhow!("--diff {p}: {e}"))
+                };
+                let (a, b) = (load(a_path)?, load(b_path)?);
+                let d = diff_traces(&a, &b, args.flag("top", 10));
+                if args.has("json") {
+                    print!("{}", d.to_json());
+                } else {
+                    print!("{}", d.render());
+                }
+                return Ok(());
+            }
             // Two modes: triage a recorded native trace (--load, the CI
             // validation path), or run a traced pipelined serving window
             // and triage what it captured.
@@ -542,6 +571,84 @@ fn main() -> anyhow::Result<()> {
                     }
                 );
                 print!("{}", report.table());
+            }
+        }
+        "cluster" => {
+            // Sharded fleets: each bench solves its fixed-size problem
+            // across --machines machines of --dpus DPUs, with the
+            // cross-machine traffic modeled as network collectives.
+            let machines: u32 = args.flag("machines", 4);
+            let names: Vec<&str> = if let Some(b) = args.flags.get("bench") {
+                vec![SCALEOUT_BENCHES
+                    .iter()
+                    .copied()
+                    .find(|n| n.eq_ignore_ascii_case(b))
+                    .unwrap_or_else(|| {
+                        eprintln!("unknown sharded benchmark {b} (expected GEMV|SpMV|BFS|MLP)");
+                        std::process::exit(2);
+                    })]
+            } else {
+                SCALEOUT_BENCHES.to_vec()
+            };
+            let mut rows = String::from("[\n");
+            for (i, name) in names.iter().enumerate() {
+                let mut sc = ScaleoutConfig::new(machines);
+                sc.dpus_per_machine = args.flag("dpus", 4);
+                sc.n_tasklets = args.flag("tasklets", 16);
+                // per-bench defaults match the scaleout harness; --quick
+                // is the CI smoke setting behind BENCH_CLUSTER.json
+                let base = match *name {
+                    "BFS" => 0.02,
+                    "SpMV" => 0.05,
+                    _ => 0.10,
+                };
+                sc.scale = args.flag("scale", base * if quick { 0.5 } else { 1.0 });
+                sc.seed = seed;
+                sc.exec = args.exec_choice();
+                sc.trace = trace_sink.clone();
+                let t0 = std::time::Instant::now();
+                let r = run_scaleout(name, &sc).expect("known sharded bench");
+                println!(
+                    "{:<5} x{:<2} [{}] makespan {:>9.3} ms | net {:>8.3} ms / {:>10} B | \
+                     sim wall {:.2}s",
+                    r.name,
+                    r.machines,
+                    if r.verified { "ok" } else { "VERIFY-FAIL" },
+                    r.makespan * 1e3,
+                    r.net_secs * 1e3,
+                    r.net_bytes,
+                    t0.elapsed().as_secs_f64(),
+                );
+                let b = &r.breakdown;
+                rows.push_str(&format!(
+                    "  {{\"name\": \"{}/m{}\", \"bench\": \"{}\", \"machines\": {}, \
+                     \"verified\": {}, \"work_items\": {},\n   \
+                     \"makespan_secs\": {:e}, \"net_secs\": {:e}, \"net_bytes\": {},\n   \
+                     \"dpu_secs\": {:e}, \"inter_dpu_secs\": {:e}, \"cpu_dpu_secs\": {:e}, \
+                     \"dpu_cpu_secs\": {:e}, \"total_secs\": {:e}}}{}\n",
+                    r.name,
+                    r.machines,
+                    r.name,
+                    r.machines,
+                    r.verified,
+                    r.work_items,
+                    r.makespan,
+                    r.net_secs,
+                    r.net_bytes,
+                    b.dpu,
+                    b.inter_dpu,
+                    b.cpu_dpu,
+                    b.dpu_cpu,
+                    b.total(),
+                    if i + 1 < names.len() { "," } else { "" },
+                ));
+            }
+            rows.push_str("]\n");
+            if args.has("json") {
+                std::fs::create_dir_all(&outdir)?;
+                let path = outdir.join("BENCH_CLUSTER.json");
+                std::fs::write(&path, rows)?;
+                println!("wrote {}", path.display());
             }
         }
         "compare" => {

@@ -23,6 +23,7 @@ pub mod hst;
 pub mod mlp;
 pub mod nw;
 pub mod red;
+pub mod scaleout;
 pub mod scan;
 pub mod sel;
 pub mod spmv;

@@ -1,0 +1,774 @@
+//! Scale-out variants of GEMV, SpMV, BFS, and MLP over a modeled
+//! multi-machine cluster (`coordinator::cluster`).
+//!
+//! Each driver shards the paper workload across N machines of DPUs and
+//! wires the cross-machine data flow through modeled collectives:
+//!
+//! * **GEMV** — row-sharded matrix; the input vector fans out from
+//!   machine 0 over the network, result shards stream back, machine 0's
+//!   host assembles the product.
+//! * **SpMV** — row-sharded CSR with the full `x` replicated per
+//!   machine; the output vector is combined with an **all-reduce**.
+//! * **BFS** — vertex-partitioned; every level ends in a point-to-point
+//!   **frontier exchange** between all machine pairs.
+//! * **MLP** — row-sharded layer weights; between layers the activation
+//!   shards are **all-gathered** so every machine rebuilds the full
+//!   input vector of the next layer.
+//!
+//! Problem sizes are fixed per scale factor — independent of the
+//! machine count — so sweeping `machines` measures strong scaling
+//! (`harness::scaleout` turns this into 1→16-machine efficiency
+//! curves). With one machine every collective degenerates to nothing
+//! and the recorded program is bit-identical to a single-machine
+//! `PimSet` queue session (see `tests/executor_equivalence.rs`).
+
+use super::gemv::gemv_kernel;
+use crate::arch::{isa, DType, Op, SystemConfig};
+use crate::coordinator::{
+    chunk_ranges, Access, Bucket, Cluster, ClusterConfig, CmdId, ExecChoice, NetModel,
+    TimeBreakdown, TraceSink,
+};
+use crate::dpu::Ctx;
+use crate::util::data::{banded_matrix, rmat_graph};
+use crate::util::Rng;
+use std::ops::Range;
+
+/// The four sharded benchmarks, in reporting order.
+pub const SCALEOUT_BENCHES: [&str; 4] = ["GEMV", "SpMV", "BFS", "MLP"];
+
+/// Run configuration for one sharded benchmark.
+#[derive(Clone, Debug)]
+pub struct ScaleoutConfig {
+    pub machines: u32,
+    pub dpus_per_machine: u32,
+    pub n_tasklets: u32,
+    /// Dataset scale relative to the paper sizes (like `RunConfig`).
+    pub scale: f64,
+    pub seed: u64,
+    pub exec: ExecChoice,
+    pub net: NetModel,
+    pub trace: Option<TraceSink>,
+}
+
+impl ScaleoutConfig {
+    /// Defaults mirroring `RunConfig::rank_default`, shrunk per machine:
+    /// 4 DPUs × 16 tasklets each, tenth-scale data.
+    pub fn new(machines: u32) -> Self {
+        ScaleoutConfig {
+            machines,
+            dpus_per_machine: 4,
+            n_tasklets: 16,
+            scale: 0.10,
+            seed: 42,
+            exec: ExecChoice::Auto,
+            net: NetModel::default(),
+            trace: None,
+        }
+    }
+
+    /// Scale a paper size and round up to a multiple of `unit`. The
+    /// unit never depends on the machine count, so every point of a
+    /// machine sweep solves the same problem (strong scaling).
+    fn sized(&self, paper_n: usize, unit: usize) -> usize {
+        ((paper_n as f64 * self.scale) as usize).max(unit).div_ceil(unit) * unit
+    }
+
+    fn cluster(&self) -> Cluster {
+        let mut cfg =
+            ClusterConfig::new(SystemConfig::p21_rank(), self.machines, self.dpus_per_machine);
+        cfg.net = self.net.clone();
+        let c = Cluster::new(cfg, self.exec.build());
+        match &self.trace {
+            Some(sink) => c.with_trace(sink.clone()),
+            None => c,
+        }
+    }
+}
+
+/// Outcome of one sharded run.
+#[derive(Clone, Debug)]
+pub struct ScaleoutResult {
+    pub name: &'static str,
+    pub machines: u32,
+    /// Output checked against the host reference.
+    pub verified: bool,
+    /// Modeled wall time of the scheduled cluster program — the number
+    /// the efficiency curves are built from.
+    pub makespan: f64,
+    /// Summed per-machine buckets plus the cluster overlap credit.
+    pub breakdown: TimeBreakdown,
+    pub net_secs: f64,
+    pub net_bytes: u64,
+    pub work_items: u64,
+}
+
+/// Dispatch a sharded benchmark by (case-insensitive) name.
+pub fn run_bench(name: &str, sc: &ScaleoutConfig) -> Option<ScaleoutResult> {
+    match name.to_ascii_lowercase().as_str() {
+        "gemv" => Some(gemv(sc)),
+        "spmv" => Some(spmv(sc)),
+        "bfs" => Some(bfs(sc)),
+        "mlp" => Some(mlp(sc)),
+        _ => None,
+    }
+}
+
+// ------------------------------------------------------------------ GEMV
+
+/// Fixed column count of the sharded GEMV (multiple of the kernel's
+/// 256-element DMA block; half the paper's 1024 keeps sweeps fast).
+const GEMV_COLS: usize = 512;
+
+/// Row-sharded GEMV: machine `i` holds rows `[i·m/N, (i+1)·m/N)` split
+/// equally over its DPUs; `x` fans out from machine 0 over the wire and
+/// the result shards stream back for the final host assembly.
+pub fn gemv(sc: &ScaleoutConfig) -> ScaleoutResult {
+    let n_machines = sc.machines as usize;
+    let nd = sc.dpus_per_machine as usize;
+    let n = GEMV_COLS;
+    let m = sc.sized(8192, 1024);
+    assert_eq!(
+        m % (n_machines * nd),
+        0,
+        "GEMV rows ({m}) must split evenly over {n_machines} machines x {nd} DPUs"
+    );
+    let rows_per_machine = m / n_machines;
+    let rows_per_dpu = rows_per_machine / nd;
+    let mut rng = Rng::new(sc.seed);
+    let mat: Vec<u32> = (0..m * n).map(|_| rng.next_u32() >> 16).collect();
+    let x: Vec<u32> = (0..n).map(|_| rng.next_u32() >> 16).collect();
+
+    let mut c = sc.cluster();
+    let mat_sym = c.symbol::<u32>(rows_per_dpu * n);
+    let x_sym = c.symbol::<u32>(n);
+    let y_sym = c.symbol::<u32>(rows_per_dpu * 2);
+
+    // resident row shards
+    for mi in 0..n_machines {
+        let base = mi * rows_per_machine * n;
+        let bufs: Vec<Vec<u32>> = (0..nd)
+            .map(|d| mat[base + d * rows_per_dpu * n..base + (d + 1) * rows_per_dpu * n].to_vec())
+            .collect();
+        c.push_equal(mi as u32, Bucket::CpuDpu, mat_sym, &bufs, &[]);
+    }
+
+    // the input vector lives on machine 0's host: wire it to the others
+    let x_bytes = (n * 4) as u64;
+    let msgs: Vec<(u32, u32, u64)> =
+        (1..n_machines).map(|j| (0u32, j as u32, x_bytes)).collect();
+    let xin = c.exchange(&msgs, &vec![Vec::new(); n_machines]);
+
+    let mut y = vec![0u32; m];
+    let mut merge_deps: Vec<CmdId> = Vec::with_capacity(n_machines);
+    for mi in 0..n_machines {
+        let dep: Vec<CmdId> = if mi == 0 { Vec::new() } else { vec![xin[mi - 1]] };
+        c.broadcast(mi as u32, Bucket::CpuDpu, x_sym, &x, &dep);
+        let acc = Access::new()
+            .read(mat_sym.region())
+            .read(x_sym.region())
+            .write(y_sym.region());
+        let (moff, xoff, yoff) = (mat_sym.off(), x_sym.off(), y_sym.off());
+        c.launch_seq_acc(mi as u32, acc, sc.n_tasklets, move |_d, ctx: &mut Ctx| {
+            gemv_kernel(ctx, rows_per_dpu, n, moff, xoff, yoff, false);
+        });
+        let (parts, pid) =
+            c.pull_equal(mi as u32, Bucket::DpuCpu, y_sym, rows_per_dpu * 2, &[]);
+        for (d, p) in parts.iter().enumerate() {
+            let row0 = mi * rows_per_machine + d * rows_per_dpu;
+            for (k, v) in p.iter().step_by(2).enumerate() {
+                y[row0 + k] = *v;
+            }
+        }
+        if mi == 0 {
+            merge_deps.push(pid);
+        } else {
+            // result shard streams back to machine 0 over the wire
+            merge_deps.push(c.net_send(mi as u32, (rows_per_machine * 4) as u64, &[pid]));
+        }
+    }
+    // machine 0's host assembles the product vector
+    c.host_merge(0, (m * 4) as u64, m as u64, &merge_deps);
+    c.sync();
+
+    let mut verified = true;
+    for r in 0..m {
+        let mut acc: u32 = 0;
+        for col in 0..n {
+            acc = acc.wrapping_add(mat[r * n + col].wrapping_mul(x[col]));
+        }
+        if y[r] != acc {
+            verified = false;
+            break;
+        }
+    }
+    result("GEMV", &c, verified, (m * n) as u64)
+}
+
+// ------------------------------------------------------------------ SpMV
+
+/// Row-sharded SpMV with an all-reduce of the output vector: every
+/// machine runs the CSR kernel on its row slice against a locally
+/// replicated `x`, then the per-machine results are combined so each
+/// machine ends holding the full `y` (the textbook all-reduce pattern).
+pub fn spmv(sc: &ScaleoutConfig) -> ScaleoutResult {
+    const BAND: usize = 48;
+    const FILL: f64 = 0.72;
+    const BLOCK: usize = 1024;
+    let n_machines = sc.machines as usize;
+    let nd = sc.dpus_per_machine as usize;
+    let n = sc.sized(28_924, 64);
+    let mat = banded_matrix(n, BAND, FILL, sc.seed);
+    let x: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.25).collect();
+    let y_ref = mat.spmv_ref(&x);
+
+    // machine i owns DPU parts [i*nd, (i+1)*nd) of one global partition
+    let parts = chunk_ranges(n, n_machines * nd);
+    let max_rows = parts.iter().map(|r| r.len()).max().unwrap_or(0);
+    let max_nnz = parts
+        .iter()
+        .map(|r| (mat.row_ptr[r.end] - mat.row_ptr[r.start]) as usize)
+        .max()
+        .unwrap_or(0);
+
+    let mut c = sc.cluster();
+    let x_sym = c.symbol::<f32>(n);
+    let rp_sym = c.symbol::<u32>(max_rows + 1);
+    let ci_sym = c.symbol::<u32>(max_nnz);
+    let va_sym = c.symbol::<f32>(max_nnz);
+    let y_sym = c.symbol::<f32>(max_rows * 2);
+
+    // x fans out from machine 0, then replicates locally; CSR slices
+    // are serial per-DPU copies (sizes differ, §5.1.1)
+    let msgs: Vec<(u32, u32, u64)> =
+        (1..n_machines).map(|j| (0u32, j as u32, (n * 4) as u64)).collect();
+    let xin = c.exchange(&msgs, &vec![Vec::new(); n_machines]);
+    for mi in 0..n_machines {
+        let dep: Vec<CmdId> = if mi == 0 { Vec::new() } else { vec![xin[mi - 1]] };
+        c.broadcast(mi as u32, Bucket::CpuDpu, x_sym, &x, &dep);
+        for d in 0..nd {
+            let r = &parts[mi * nd + d];
+            let base = mat.row_ptr[r.start];
+            let rp: Vec<u32> = mat.row_ptr[r.start..=r.end].iter().map(|v| v - base).collect();
+            let nnz = (mat.row_ptr[r.end] - base) as usize;
+            let ci = mat.col_idx[base as usize..base as usize + nnz].to_vec();
+            let va = mat.values[base as usize..base as usize + nnz].to_vec();
+            c.push_one(mi as u32, Bucket::CpuDpu, rp_sym, d, &rp, &[]);
+            c.push_one(mi as u32, Bucket::CpuDpu, ci_sym, d, &ci, &[]);
+            c.push_one(mi as u32, Bucket::CpuDpu, va_sym, d, &va, &[]);
+        }
+    }
+
+    let arch = c.sets[0].cfg.dpu;
+    let per_nnz_instrs = (2 * isa::WRAM_LS + isa::ADDR_CALC + isa::LOOP_CTRL) as u64
+        + isa::op_instrs_for(&arch, DType::F32, Op::Mul) as u64
+        + isa::op_instrs_for(&arch, DType::F32, Op::Add) as u64;
+
+    let mut y = vec![0f32; n];
+    let mut pull_ids: Vec<Vec<CmdId>> = vec![Vec::new(); n_machines];
+    for mi in 0..n_machines {
+        let my_parts: Vec<Range<usize>> = parts[mi * nd..(mi + 1) * nd].to_vec();
+        let acc = Access::new()
+            .read(x_sym.region())
+            .read(rp_sym.region())
+            .read(ci_sym.region())
+            .read(va_sym.region())
+            .write(y_sym.region());
+        let (x_off, rp_off, ci_off, va_off, y_off) =
+            (x_sym.off(), rp_sym.off(), ci_sym.off(), va_sym.off(), y_sym.off());
+        let kparts = my_parts.clone();
+        c.launch_seq_acc(mi as u32, acc, sc.n_tasklets, move |dpu, ctx: &mut Ctx| {
+            let n_rows = kparts[dpu].len();
+            let wrp = ctx.mem_alloc(BLOCK);
+            let wci = ctx.mem_alloc(BLOCK);
+            let wva = ctx.mem_alloc(BLOCK);
+            let wx = ctx.mem_alloc(8);
+            let wy = ctx.mem_alloc(8);
+            let my =
+                chunk_ranges(n_rows, ctx.n_tasklets as usize)[ctx.tasklet_id as usize].clone();
+            for r in my {
+                let rp_byte = rp_off + r * 4 & !7;
+                ctx.mram_read(rp_byte, wrp, 8);
+                let words: Vec<u32> = ctx.wram_get(wrp, 2);
+                let (s, e) = if (rp_off + r * 4) % 8 == 0 {
+                    (words[0] as usize, words[1] as usize)
+                } else {
+                    ctx.mram_read(rp_byte + 8, wrp, 8);
+                    let w2: Vec<u32> = ctx.wram_get(wrp, 2);
+                    (words[1] as usize, w2[0] as usize)
+                };
+                ctx.compute(4);
+                let mut acc = 0f32;
+                let mut k = s;
+                while k < e {
+                    let k0 = k & !1;
+                    let avail = BLOCK / 4 - (k - k0);
+                    let cnt = (e - k).min(avail);
+                    let span = (k - k0 + cnt + 1) & !1;
+                    ctx.mram_read(ci_off + k0 * 4, wci, span * 4);
+                    ctx.mram_read(va_off + k0 * 4, wva, span * 4);
+                    let cis: Vec<u32> = ctx.wram_get(wci, span);
+                    let vas: Vec<f32> = ctx.wram_get(wva, span);
+                    for i in 0..cnt {
+                        let ci = cis[k - k0 + i] as usize;
+                        let va = vas[k - k0 + i];
+                        ctx.mram_read((x_off + ci * 4) & !7, wx, 8);
+                        let xw: Vec<f32> = ctx.wram_get(wx, 2);
+                        acc += va * xw[(ci * 4 % 8) / 4];
+                    }
+                    ctx.compute(cnt as u64 * per_nnz_instrs);
+                    k += cnt;
+                }
+                ctx.wram_set(wy, &[acc, 0.0]);
+                ctx.mram_write(wy, y_off + r * 8, 8);
+            }
+        });
+        for (d, r) in my_parts.iter().enumerate() {
+            let (pairs, pid) =
+                c.pull_one(mi as u32, Bucket::DpuCpu, y_sym, d, r.len() * 2, &[]);
+            for (k, row) in r.clone().enumerate() {
+                y[row] = pairs[k * 2];
+            }
+            pull_ids[mi].push(pid);
+        }
+    }
+
+    // all-reduce of the output vector: machine i owns reduced shard i
+    let vparts = chunk_ranges(n, n_machines);
+    let shard_bytes: Vec<u64> = vparts.iter().map(|r| (r.len() * 4) as u64).collect();
+    let merge_ops: Vec<u64> = vparts
+        .iter()
+        .map(|r| (n_machines as u64 - 1) * r.len() as u64)
+        .collect();
+    c.all_reduce(&shard_bytes, &merge_ops, &pull_ids);
+    c.sync();
+
+    let verified = y.len() == y_ref.len()
+        && y.iter()
+            .zip(&y_ref)
+            .all(|(got, want)| (got - want).abs() <= 1e-3 * (1.0 + want.abs()));
+    result("SpMV", &c, verified, mat.nnz() as u64)
+}
+
+// ------------------------------------------------------------------- BFS
+
+/// Vertex-partitioned BFS: machine `i` owns a contiguous vertex range
+/// (further split over its DPUs) and produces a partial next-frontier
+/// each level; the partials cross the wire in a point-to-point exchange
+/// between every machine pair before the next level starts.
+pub fn bfs(sc: &ScaleoutConfig) -> ScaleoutResult {
+    let n_machines = sc.machines as usize;
+    let nd = sc.dpus_per_machine as usize;
+    // same WRAM cap as the single-machine BFS (3 bit-vectors resident)
+    let v = sc.sized(196_591, 64).min(96 * 1024);
+    let e = ((1_900_654.0 * sc.scale) as usize).min(v * 12);
+    let g = rmat_graph(v, e, sc.seed);
+    let root = (0..v).max_by_key(|&u| g.row_ptr[u + 1] - g.row_ptr[u]).unwrap_or(0);
+    let words = v.div_ceil(64);
+
+    let parts = chunk_ranges(v, n_machines * nd);
+    let max_rows = parts.iter().map(|r| r.len()).max().unwrap_or(0);
+    let max_deg = parts
+        .iter()
+        .map(|r| (g.row_ptr[r.end] - g.row_ptr[r.start]) as usize)
+        .max()
+        .unwrap_or(0);
+
+    let mut c = sc.cluster();
+    let rp_sym = c.symbol::<u32>(max_rows + 1);
+    let ci_sym = c.symbol::<u32>(max_deg);
+    let fr_sym = c.symbol::<u64>(words);
+    let nxvis_sym = c.symbol::<u64>(2 * words);
+    let nx_sym = nxvis_sym.slice(0, words);
+    let vis_sym = nxvis_sym.slice(words, words);
+
+    // resident CSR slices + zeroed next/visited vectors
+    let zeros = vec![0u64; 2 * words];
+    for mi in 0..n_machines {
+        for d in 0..nd {
+            let r = &parts[mi * nd + d];
+            let base = g.row_ptr[r.start];
+            let rp: Vec<u32> = g.row_ptr[r.start..=r.end].iter().map(|x| x - base).collect();
+            let deg = (g.row_ptr[r.end] - base) as usize;
+            let ci = g.col_idx[base as usize..base as usize + deg].to_vec();
+            c.push_one(mi as u32, Bucket::CpuDpu, rp_sym, d, &rp, &[]);
+            c.push_one(mi as u32, Bucket::CpuDpu, ci_sym, d, &ci, &[]);
+            c.push_one(mi as u32, Bucket::CpuDpu, nxvis_sym, d, &zeros, &[]);
+        }
+    }
+
+    let per_edge = (2 * isa::WRAM_LS + isa::ADDR_CALC) as u64
+        + isa::op_instrs(DType::U64, Op::Bitwise) as u64;
+
+    let mut frontier = vec![0u64; words];
+    frontier[root / 64] |= 1 << (root % 64);
+    let mut dist = vec![u32::MAX; v];
+    dist[root] = 0;
+    let mut level = 0u32;
+    // what the next level's frontier scatter on machine j waits for:
+    // its own union + every wire transfer destined to it
+    let mut scatter_deps: Vec<Vec<CmdId>> = vec![Vec::new(); n_machines];
+    loop {
+        // distribute the current frontier (each DPU mutates a private
+        // copy — per-DPU scatters, grouped per machine on the timeline)
+        for mi in 0..n_machines {
+            c.group_begin();
+            for d in 0..nd {
+                c.push_one(mi as u32, Bucket::InterDpu, fr_sym, d, &frontier, &scatter_deps[mi]);
+            }
+            c.group_end();
+        }
+
+        for mi in 0..n_machines {
+            let my_parts: Vec<Range<usize>> = parts[mi * nd..(mi + 1) * nd].to_vec();
+            let acc = Access::new()
+                .read(rp_sym.region())
+                .read(ci_sym.region())
+                .read(fr_sym.region())
+                .read(nxvis_sym.region())
+                .write(nxvis_sym.region());
+            let (rp_off, ci_off) = (rp_sym.off(), ci_sym.off());
+            let (fr_off, nx_off, vis_off) = (fr_sym.off(), nx_sym.off(), vis_sym.off());
+            c.launch_acc(mi as u32, acc, sc.n_tasklets, move |dpu, ctx: &mut Ctx| {
+                let rows = my_parts[dpu].clone();
+                let n_rows = rows.len();
+                let wfr = ctx.mem_alloc_shared(1, words * 8);
+                let wnx = ctx.mem_alloc_shared(2, words * 8);
+                let wvis = ctx.mem_alloc_shared(3, words * 8);
+                let wtmp = ctx.mem_alloc(1024);
+                if ctx.tasklet_id == 0 {
+                    let mut off = 0;
+                    while off < words * 8 {
+                        let take = (words * 8 - off).min(1024);
+                        ctx.mram_read(fr_off + off, wfr + off, take);
+                        ctx.mram_read(nx_off + off, wnx + off, take);
+                        ctx.mram_read(vis_off + off, wvis + off, take);
+                        off += take;
+                    }
+                    let fr: Vec<u64> = ctx.wram_get(wfr, words);
+                    let mut vis: Vec<u64> = ctx.wram_get(wvis, words);
+                    for (a, b) in vis.iter_mut().zip(&fr) {
+                        *a |= *b;
+                    }
+                    ctx.wram_set(wvis, &vis);
+                    ctx.charge_ops(DType::U64, Op::Bitwise, words as u64);
+                }
+                ctx.barrier(0);
+
+                let fr: Vec<u64> = ctx.wram_get(wfr, words);
+                let vis: Vec<u64> = ctx.wram_get(wvis, words);
+                let my = chunk_ranges(n_rows, ctx.n_tasklets as usize)
+                    [ctx.tasklet_id as usize]
+                    .clone();
+                for lr in my {
+                    let gv = rows.start + lr;
+                    ctx.charge_ops(DType::U64, Op::Bitwise, 1);
+                    if fr[gv / 64] & (1 << (gv % 64)) == 0 {
+                        continue;
+                    }
+                    let rp0 = (lr * 4) & !7;
+                    ctx.mram_read(rp_off + rp0, wtmp, 16.min(1024));
+                    let wv: Vec<u32> = ctx.wram_get(wtmp, 4);
+                    let idx = (lr * 4 - rp0) / 4;
+                    let (s, e) = (wv[idx] as usize, wv[idx + 1] as usize);
+                    ctx.compute(4);
+                    let mut k = s;
+                    while k < e {
+                        let k0 = k & !1;
+                        let cnt = (e - k).min(256 - (k - k0));
+                        let span = (k - k0 + cnt + 1) & !1;
+                        ctx.mram_read(ci_off + k0 * 4, wtmp, span * 4);
+                        let nbrs: Vec<u32> = ctx.wram_get(wtmp, span);
+                        for i in 0..cnt {
+                            let w = nbrs[k - k0 + i] as usize;
+                            if vis[w / 64] & (1 << (w % 64)) == 0 {
+                                ctx.mutex_lock(0);
+                                ctx.wram(|wr| {
+                                    let words_mut = crate::util::pod::cast_slice_mut::<u64>(
+                                        &mut wr[wnx..wnx + words * 8],
+                                    );
+                                    words_mut[w / 64] |= 1 << (w % 64);
+                                });
+                                ctx.charge_ops(DType::U64, Op::Bitwise, 2);
+                                ctx.mutex_unlock(0);
+                            }
+                        }
+                        ctx.compute(cnt as u64 * per_edge);
+                        k += cnt;
+                    }
+                }
+
+                ctx.barrier(1);
+                if ctx.tasklet_id == 0 {
+                    let mut off = 0;
+                    while off < words * 8 {
+                        let take = (words * 8 - off).min(1024);
+                        ctx.mram_write(wnx + off, nx_off + off, take);
+                        ctx.mram_write(wvis + off, vis_off + off, take);
+                        off += take;
+                    }
+                }
+            });
+        }
+
+        // per-machine union of the partial next-frontiers
+        level += 1;
+        let mut next = vec![0u64; words];
+        let mut merge_ids: Vec<CmdId> = Vec::with_capacity(n_machines);
+        for mi in 0..n_machines {
+            let mut pull_ids: Vec<CmdId> = Vec::with_capacity(nd);
+            for d in 0..nd {
+                let (part, pid) =
+                    c.pull_one(mi as u32, Bucket::InterDpu, nx_sym, d, words, &[]);
+                pull_ids.push(pid);
+                for (a, b) in next.iter_mut().zip(&part) {
+                    *a |= *b;
+                }
+                c.push_one(mi as u32, Bucket::InterDpu, nx_sym, d, &vec![0u64; words], &[]);
+            }
+            merge_ids.push(c.host_merge(
+                mi as u32,
+                (nd * words * 8) as u64,
+                (nd * words) as u64,
+                &pull_ids,
+            ));
+        }
+
+        // frontier exchange: every machine wires its partial frontier
+        // to every other machine before the next level may scatter
+        let mut msgs: Vec<(u32, u32, u64)> = Vec::new();
+        for i in 0..n_machines {
+            for j in 0..n_machines {
+                if i != j {
+                    msgs.push((i as u32, j as u32, (words * 8) as u64));
+                }
+            }
+        }
+        let after: Vec<Vec<CmdId>> = merge_ids.iter().map(|&id| vec![id]).collect();
+        let net_ids = c.exchange(&msgs, &after);
+        for (deps, &mid) in scatter_deps.iter_mut().zip(&merge_ids) {
+            deps.clear();
+            deps.push(mid);
+        }
+        for (k, &(_, dst, _)) in msgs.iter().enumerate() {
+            scatter_deps[dst as usize].push(net_ids[k]);
+        }
+
+        // host: strip visited vertices, assign distances
+        let mut any = false;
+        for w in 0..words {
+            let mut bits = next[w];
+            for b in 0..64 {
+                let vtx = w * 64 + b;
+                if bits & (1 << b) != 0 {
+                    if vtx < v && dist[vtx] == u32::MAX {
+                        dist[vtx] = level;
+                        any = true;
+                    } else {
+                        bits &= !(1 << b);
+                    }
+                }
+            }
+            next[w] = bits;
+        }
+        frontier = next;
+        if !any {
+            break;
+        }
+    }
+    c.sync();
+
+    let verified = dist == g.bfs_ref(root);
+    result("BFS", &c, verified, g.n_edges() as u64)
+}
+
+// ------------------------------------------------------------------- MLP
+
+/// Row-sharded 3-layer MLP: every machine computes its activation shard
+/// per layer, then an all-gather rebuilds the full vector everywhere
+/// for the next layer — the collective the tentpole names for MLP.
+pub fn mlp(sc: &ScaleoutConfig) -> ScaleoutResult {
+    const LAYERS: usize = 3;
+    let n_machines = sc.machines as usize;
+    let nd = sc.dpus_per_machine as usize;
+    // square layers, multiple of the kernel's 256-element block and of
+    // every sweep point's DPU total
+    let m = sc.sized(2048, 512);
+    assert_eq!(
+        m % (n_machines * nd),
+        0,
+        "MLP neurons ({m}) must split evenly over {n_machines} machines x {nd} DPUs"
+    );
+    let rows_per_machine = m / n_machines;
+    let rows_per_dpu = rows_per_machine / nd;
+    let mut rng = Rng::new(sc.seed);
+    let weights: Vec<Vec<u32>> =
+        (0..LAYERS).map(|_| (0..m * m).map(|_| rng.below(5) as u32).collect()).collect();
+    let x0: Vec<u32> = (0..m).map(|_| rng.below(9) as u32).collect();
+
+    let mut c = sc.cluster();
+    let w_syms: Vec<_> = (0..LAYERS).map(|_| c.symbol::<u32>(rows_per_dpu * m)).collect();
+    let x_sym = c.symbol::<u32>(m);
+    let y_sym = c.symbol::<u32>(rows_per_dpu * 2);
+
+    for mi in 0..n_machines {
+        for (l, w) in weights.iter().enumerate() {
+            let base = mi * rows_per_machine * m;
+            let bufs: Vec<Vec<u32>> = (0..nd)
+                .map(|d| w[base + d * rows_per_dpu * m..base + (d + 1) * rows_per_dpu * m].to_vec())
+                .collect();
+            c.push_equal(mi as u32, Bucket::CpuDpu, w_syms[l], &bufs, &[]);
+        }
+    }
+
+    // the request's input fans out from machine 0, like GEMV
+    let msgs: Vec<(u32, u32, u64)> =
+        (1..n_machines).map(|j| (0u32, j as u32, (m * 4) as u64)).collect();
+    let xin = c.exchange(&msgs, &vec![Vec::new(); n_machines]);
+    let mut bcast_deps: Vec<Vec<CmdId>> = (0..n_machines)
+        .map(|mi| if mi == 0 { Vec::new() } else { vec![xin[mi - 1]] })
+        .collect();
+
+    let mut h = x0.clone();
+    for l in 0..LAYERS {
+        let mut merge_ids: Vec<CmdId> = Vec::with_capacity(n_machines);
+        let mut next = vec![0u32; m];
+        for mi in 0..n_machines {
+            c.broadcast(mi as u32, Bucket::CpuDpu, x_sym, &h, &bcast_deps[mi]);
+            let w_sym = w_syms[l];
+            let acc = Access::new()
+                .read(w_sym.region())
+                .read(x_sym.region())
+                .write(y_sym.region());
+            let (woff, xoff, yoff) = (w_sym.off(), x_sym.off(), y_sym.off());
+            c.launch_seq_acc(mi as u32, acc, sc.n_tasklets, move |_d, ctx: &mut Ctx| {
+                gemv_kernel(ctx, rows_per_dpu, m, woff, xoff, yoff, true);
+            });
+            let (parts, pid) =
+                c.pull_equal(mi as u32, Bucket::InterDpu, y_sym, rows_per_dpu * 2, &[]);
+            for (d, p) in parts.iter().enumerate() {
+                let row0 = mi * rows_per_machine + d * rows_per_dpu;
+                for (k, v) in p.iter().step_by(2).enumerate() {
+                    next[row0 + k] = *v;
+                }
+            }
+            // machine host rebuilds its own activation shard
+            merge_ids.push(c.host_merge(
+                mi as u32,
+                (rows_per_machine * 4) as u64,
+                rows_per_machine as u64,
+                &[pid],
+            ));
+        }
+        h = next;
+        if l + 1 < LAYERS {
+            // all-gather of the activation shards: the next layer's
+            // broadcast on every machine waits for the whole collective
+            let shard_bytes = vec![(rows_per_machine * 4) as u64; n_machines];
+            let after: Vec<Vec<CmdId>> = merge_ids.iter().map(|&id| vec![id]).collect();
+            let ag = c.all_gather(&shard_bytes, &after);
+            bcast_deps = (0..n_machines)
+                .map(|mi| {
+                    let mut deps = ag.clone();
+                    deps.push(merge_ids[mi]);
+                    deps
+                })
+                .collect();
+        }
+    }
+    c.sync();
+
+    // reference forward pass
+    let mut want = x0;
+    for w in &weights {
+        let mut nx = vec![0u32; m];
+        for (r, out) in nx.iter_mut().enumerate() {
+            let mut acc: u32 = 0;
+            for col in 0..m {
+                acc = acc.wrapping_add(w[r * m + col].wrapping_mul(want[col]));
+            }
+            *out = if (acc as i32) < 0 { 0 } else { acc };
+        }
+        want = nx;
+    }
+    let verified = h == want;
+    result("MLP", &c, verified, (LAYERS * m * m) as u64)
+}
+
+// ---------------------------------------------------------------- shared
+
+fn result(name: &'static str, c: &Cluster, verified: bool, work_items: u64) -> ScaleoutResult {
+    let rep = c.report();
+    ScaleoutResult {
+        name,
+        machines: rep.machines,
+        verified,
+        makespan: rep.makespan,
+        breakdown: rep.breakdown,
+        net_secs: rep.net_secs,
+        net_bytes: rep.net_bytes,
+        work_items,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(machines: u32, scale: f64) -> ScaleoutConfig {
+        ScaleoutConfig {
+            scale,
+            n_tasklets: 8,
+            exec: ExecChoice::Serial,
+            ..ScaleoutConfig::new(machines)
+        }
+    }
+
+    #[test]
+    fn gemv_verifies_and_wires_shards_home() {
+        let r = gemv(&tiny(2, 0.02));
+        assert!(r.verified);
+        assert_eq!(r.machines, 2);
+        // x out (1 msg) + one result shard home
+        assert!(r.net_bytes > 0, "two machines must exchange traffic");
+        assert!(r.makespan > 0.0 && r.net_secs > 0.0);
+    }
+
+    #[test]
+    fn spmv_all_reduce_verifies() {
+        let r = spmv(&tiny(2, 0.01));
+        assert!(r.verified);
+        assert!(r.net_bytes > 0);
+        assert!(r.breakdown.inter_dpu > 0.0, "the combine runs on machine hosts");
+    }
+
+    #[test]
+    fn bfs_frontier_exchange_matches_reference() {
+        let r = bfs(&tiny(2, 0.002));
+        assert!(r.verified);
+        assert!(r.net_bytes > 0, "levels must exchange frontiers");
+    }
+
+    #[test]
+    fn mlp_all_gather_between_layers_verifies() {
+        let r = mlp(&tiny(2, 0.06));
+        assert!(r.verified);
+        // 2 inter-layer all-gathers + the input fan-out
+        assert!(r.net_bytes > 0);
+    }
+
+    #[test]
+    fn one_machine_runs_without_network() {
+        for name in SCALEOUT_BENCHES {
+            let scale = if name == "BFS" { 0.002 } else { 0.02 };
+            let r = run_bench(name, &tiny(1, scale)).unwrap();
+            assert!(r.verified, "{name} must verify on one machine");
+            assert_eq!(r.net_bytes, 0, "{name}: one machine has no wire to cross");
+            assert_eq!(r.net_secs, 0.0);
+        }
+    }
+
+    #[test]
+    fn unknown_bench_is_none() {
+        assert!(run_bench("nope", &tiny(1, 0.01)).is_none());
+    }
+}

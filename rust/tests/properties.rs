@@ -473,6 +473,7 @@ fn prop_sel_uni_match_reference_any_config() {
             seed: g.rng().next_u64(),
             sys: SystemConfig::p21_rank(),
             exec: Default::default(),
+            trace: None,
         };
         assert!(Sel.run(&rc).verified, "{rc:?}");
         assert!(Uni.run(&rc).verified, "{rc:?}");
@@ -491,9 +492,57 @@ fn prop_scan_matches_reference_any_config() {
             seed: g.rng().next_u64(),
             sys: SystemConfig::p21_rank(),
             exec: Default::default(),
+            trace: None,
         };
         assert!(ScanSsa.run(&rc).verified, "{rc:?}");
         assert!(ScanRss.run(&rc).verified, "{rc:?}");
+    });
+}
+
+// -------------------------------------------------------------- cluster
+
+/// The modeled all-gather on a flat switch is **exactly** its analytic
+/// bound: every machine's egress transfer of `(N−1)·s_i` bytes starts
+/// at t=0 on its own link, so the makespan is `max_i xfer_secs((N−1)·s_i)`
+/// — bitwise, because the collective and the bound evaluate the same
+/// float expression. Random machine counts, shard sizes, and link models.
+#[test]
+fn prop_all_gather_makespan_is_flat_switch_bound_bitwise() {
+    use prim_pim::coordinator::{Cluster, ClusterConfig, NetModel, SerialExecutor};
+    use std::sync::Arc;
+    props("all-gather == flat-switch bound", 40, |g: &mut Gen| {
+        let n = g.usize_in(2..7) as u32;
+        let mut cfg = ClusterConfig::new(SystemConfig::p21_rank(), n, 2);
+        cfg.net = NetModel {
+            link_bw: 1e9 + g.f64() * 1e11,
+            latency: g.f64() * 1e-5,
+        };
+        let net = cfg.net.clone();
+        let mut c = Cluster::new(cfg, Arc::new(SerialExecutor));
+        let shards: Vec<u64> =
+            (0..n).map(|_| 1 + g.usize_in(0..1_000_000) as u64).collect();
+        let ids = c.all_gather(&shards, &vec![Vec::new(); n as usize]);
+        assert_eq!(ids.len(), n as usize, "one egress transfer per machine");
+        c.sync();
+        let rep = c.report();
+        let bound = shards
+            .iter()
+            .map(|&s| net.xfer_secs((n as u64 - 1) * s))
+            .fold(0.0f64, f64::max);
+        assert_eq!(
+            rep.makespan.to_bits(),
+            bound.to_bits(),
+            "makespan {} vs bound {} (n={n}, shards {shards:?})",
+            rep.makespan,
+            bound
+        );
+        // link occupancy sums every transfer; concurrent links mean the
+        // sum can only meet or exceed the makespan
+        assert!(rep.net_secs >= rep.makespan - 1e-18);
+        assert_eq!(
+            rep.net_bytes,
+            shards.iter().map(|&s| (n as u64 - 1) * s).sum::<u64>()
+        );
     });
 }
 

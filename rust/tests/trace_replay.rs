@@ -12,9 +12,11 @@
 use prim_pim::arch::SystemConfig;
 use prim_pim::coordinator::trace::analyze;
 use prim_pim::coordinator::{
-    parse_trace, run_sched, PolicyKind, ReplayEngine, SchedConfig, TenantSpec, Trace, TraceSink,
+    parse_trace, run_sched, LaneTag, PolicyKind, ReplayEngine, SchedConfig, TenantSpec, Trace,
+    TraceSink,
 };
 use prim_pim::prim::common::{ExecChoice, RunConfig};
+use prim_pim::prim::scaleout::{run_bench, ScaleoutConfig};
 use prim_pim::prim::workload::{serve, workload_by_name};
 use prim_pim::util::json::parse_json;
 
@@ -190,6 +192,52 @@ fn empty_trace_fallback_is_safe_end_to_end() {
     assert_eq!(report.events, 0);
     assert_eq!(report.span, 0.0);
     assert!(parse_json(&report.to_json()).is_ok());
+}
+
+/// Cluster-level capture: a sharded multi-machine run traces onto
+/// per-machine bus/host lanes and per-link network lanes, round-trips
+/// byte-identically through the native export, is executor-invariant,
+/// and replays deterministically — the same pins the single-machine
+/// traces get above.
+#[test]
+fn sharded_cluster_trace_captures_link_lanes_and_replays() {
+    let traced_cluster = |exec: ExecChoice| {
+        let sink = TraceSink::new();
+        let mut sc = ScaleoutConfig::new(2);
+        sc.n_tasklets = 8;
+        sc.scale = 0.02;
+        sc.exec = exec;
+        sc.trace = Some(sink.clone());
+        let r = run_bench("GEMV", &sc).expect("known bench");
+        assert!(r.verified, "traced sharded run must still verify");
+        assert!(r.net_bytes > 0, "2 machines must exchange shards");
+        sink.snapshot()
+    };
+    let t = traced_cluster(ExecChoice::Serial);
+    assert_eq!(t.source, "cluster");
+    assert!(!t.is_empty(), "a sharded run must capture events");
+    assert!(
+        t.events.iter().any(|e| matches!(e.lane, LaneTag::Link { .. })),
+        "collective traffic must land on dedicated network-link lanes"
+    );
+    assert!(
+        t.events.iter().any(|e| matches!(e.lane, LaneTag::MachineBus { m: 1 })),
+        "machine 1 transfers occupy their own bus lane"
+    );
+    let json = t.to_json();
+    let back = parse_trace(&json).expect("cluster trace parses");
+    assert_eq!(back, t);
+    assert_eq!(back.to_json(), json, "re-serialization is byte-identical");
+    let p = traced_cluster(ExecChoice::Parallel(3));
+    assert_eq!(t.to_json(), p.to_json(), "executor choice is invisible to the cluster trace");
+    let mut ra = ReplayEngine::new(&t);
+    let mut rb = ReplayEngine::new(&back);
+    loop {
+        match (ra.step_next(), rb.step_next()) {
+            (None, None) => break,
+            (x, y) => assert_eq!(x, y, "cluster replay streams diverged"),
+        }
+    }
 }
 
 /// A synchronous (non-pipelined) serve also traces — the degenerate
