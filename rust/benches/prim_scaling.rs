@@ -21,6 +21,7 @@ fn main() {
             sys: SystemConfig::p21_rank(),
             exec: Default::default(),
             trace: None,
+            metrics: None,
         };
         let mut items = 0f64;
         b.bench_items(&format!("{name} @16dpu"), Some(1.0), &mut || {

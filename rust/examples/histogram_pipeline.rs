@@ -31,6 +31,7 @@ fn main() {
             sys: sys.clone(),
             exec: Default::default(),
             trace: None,
+            metrics: None,
         };
         let r = run_hst(HstKind::Short, "HST-S", &rc, 256);
         assert!(r.verified, "frame {f} failed verification");

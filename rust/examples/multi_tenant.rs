@@ -35,6 +35,8 @@ fn main() {
             seed: 42,
             exec: ExecChoice::Auto,
             tenants: tenants.clone(),
+            trace: None,
+            metrics: None,
         };
         let rep = run_sched(&cfg).expect("scheduler runs");
         println!(

@@ -22,6 +22,7 @@ fn main() {
         seed: 42,
         exec: ExecChoice::Auto,
         trace: None,
+        metrics: None,
     };
     let requests = 8;
 

@@ -13,6 +13,7 @@ fn main() {
         sys: SystemConfig::p21_rank(),
         exec: Default::default(),
         trace: None,
+        metrics: None,
     };
     let t0 = std::time::Instant::now();
     let r = b.run(&rc);

@@ -3,17 +3,19 @@
 //!
 //! Usage: `perf_gate <prev_dir> <cur_dir>` — both directories may hold
 //! `BENCH_PRIM.json`, `BENCH_OVERLAP.json`, `BENCH_SCHED.json`,
-//! `BENCH_CLUSTER.json`, `BENCH_HOTPATH.json` (the repro CLI /
-//! hot-path bench writers). Two rule families:
+//! `BENCH_CLUSTER.json`, `BENCH_METRICS.json`, `BENCH_HOTPATH.json`
+//! (the repro CLI / hot-path bench writers). Two rule families:
 //!
 //! * **Modeled seconds** (`BENCH_PRIM`, `BENCH_OVERLAP`, `BENCH_SCHED`,
-//!   `BENCH_CLUSTER`): deterministic outputs of the timing model, so
-//!   any drift beyond float-noise tolerance (default 1e-6 relative,
-//!   either direction) fails — the gate doubles as a model-change
-//!   detector. For `SCHED` that covers the multi-tenant scheduler's
-//!   makespan, occupancy, and per-tenant QoS percentiles; for
-//!   `CLUSTER` the sharded benches' per-machine-count makespans and
-//!   network seconds.
+//!   `BENCH_CLUSTER`, `BENCH_METRICS`): deterministic outputs of the
+//!   timing model, so any drift beyond float-noise tolerance (default
+//!   1e-6 relative, either direction) fails — the gate doubles as a
+//!   model-change detector. For `SCHED` that covers the multi-tenant
+//!   scheduler's makespan, occupancy, and per-tenant QoS percentiles;
+//!   for `CLUSTER` the sharded benches' per-machine-count makespans and
+//!   network seconds; for `METRICS` the telemetry snapshot — labeled
+//!   occupancy / latency / energy gauges and series sampled on the
+//!   simulated timeline (`metrics/v1`).
 //! * **Wallclock** (`BENCH_HOTPATH`): noisy CI runners, so only a
 //!   slowdown past `PERF_GATE_RATIO` (default 1.6×) on an entry's
 //!   `median_secs` — or a speedup in `derived.*` falling below
@@ -34,9 +36,11 @@ use std::fmt::Write as _;
 
 /// Flatten a bench JSON document to dotted numeric metrics. Arrays whose
 /// elements are objects carrying a `"name"` field key by that name (the
-/// shape of every writer in this repo); other arrays key by index. Bools
-/// count as 0/1 metrics so a `verified` flip trips the modeled-file
-/// rules.
+/// shape of every writer in this repo); `metrics/v1` entries reuse one
+/// name across label sets, so a `"labels"` object is folded into the key
+/// (`sched_arrivals{tenant=t0}`) to keep it unique; other arrays key by
+/// index. Bools count as 0/1 metrics so a `verified` flip trips the
+/// modeled-file rules.
 pub fn flatten(v: &Value, prefix: &str, out: &mut Vec<(String, f64)>) {
     let key = |k: &str| {
         if prefix.is_empty() {
@@ -59,7 +63,20 @@ pub fn flatten(v: &Value, prefix: &str, out: &mut Vec<(String, f64)>) {
                 let name = item
                     .get("name")
                     .and_then(Value::as_str)
-                    .map(str::to_string)
+                    .map(|n| match item.get("labels") {
+                        Some(Value::Obj(kv)) if !kv.is_empty() => {
+                            let lab: Vec<String> = kv
+                                .iter()
+                                .map(|(k, v)| match v {
+                                    Value::Str(s) => format!("{k}={s}"),
+                                    Value::Num(x) => format!("{k}={x}"),
+                                    _ => k.clone(),
+                                })
+                                .collect();
+                            format!("{n}{{{}}}", lab.join(","))
+                        }
+                        _ => n.to_string(),
+                    })
                     .unwrap_or_else(|| i.to_string());
                 flatten(item, &key(&name), out);
             }
@@ -197,6 +214,7 @@ pub fn run_gate(prev_dir: &std::path::Path, cur_dir: &std::path::Path, cfg: &Gat
         "BENCH_OVERLAP.json",
         "BENCH_SCHED.json",
         "BENCH_CLUSTER.json",
+        "BENCH_METRICS.json",
     ] {
         match (read(prev_dir, name), read(cur_dir, name)) {
             (Some(p), Some(c)) => violations.extend(check_modeled(name, &p, &c, cfg)),
@@ -310,6 +328,21 @@ mod tests {
         )
     }
 
+    /// The `MetricsSnapshot::to_json` shape (`metrics/v1`): entries reuse
+    /// one metric name across label sets, so `flatten` must fold the
+    /// labels into the key to keep per-tenant values apart.
+    fn metrics_doc(occ: f64, p_t1: f64) -> String {
+        format!(
+            "{{\n  \"schema\": \"metrics/v1\",\n  \"metrics\": [\n    \
+             {{\"name\": \"sched_occupancy\", \"labels\": {{}}, \"type\": \"gauge\", \
+             \"value\": {occ:e}}},\n    \
+             {{\"name\": \"sched_done_latency\", \"labels\": {{\"tenant\": \"t0\"}}, \
+             \"type\": \"series\", \"points\": [[1e-3, 2e-3], [2e-3, 2.5e-3]]}},\n    \
+             {{\"name\": \"sched_done_latency\", \"labels\": {{\"tenant\": \"t1\"}}, \
+             \"type\": \"series\", \"points\": [[1.5e-3, {p_t1:e}]]}}\n  ]\n}}\n"
+        )
+    }
+
     fn hotpath(med_10k: f64, speedup: f64) -> String {
         format!(
             "{{\"schema\": \"bench_hotpath/v1\", \"quick\": true, \"host_cores\": 8,\n  \
@@ -396,6 +429,27 @@ mod tests {
         );
     }
 
+    /// Satellite pin: the telemetry snapshot rides the modeled rules —
+    /// occupancy-gauge or latency-series drift fails, bit-identical
+    /// reruns pass, and same-named entries stay distinguished by labels.
+    #[test]
+    fn metrics_snapshot_drift_is_a_modeled_violation() {
+        let cfg = GateCfg::default();
+        let base = metrics_doc(7.5e-1, 3e-3);
+        assert!(check_modeled("m", &base, &metrics_doc(7.5e-1, 3e-3), &cfg).is_empty());
+        let v = check_modeled("m", &base, &metrics_doc(7.4e-1, 3e-3), &cfg);
+        assert!(
+            v.iter().any(|s| s.contains("sched_occupancy")),
+            "occupancy drift caught: {v:?}"
+        );
+        let v = check_modeled("m", &base, &metrics_doc(7.5e-1, 4e-3), &cfg);
+        assert!(
+            v.iter()
+                .any(|s| s.contains("sched_done_latency{tenant=t1}")),
+            "per-tenant latency drift caught under the labeled key: {v:?}"
+        );
+    }
+
     #[test]
     fn verified_flip_is_caught() {
         let broken = PRIM.replace("\"name\": \"VA\", \"verified\": true", "\"name\": \"VA\", \"verified\": false");
@@ -452,16 +506,17 @@ mod tests {
         let cfg = GateCfg::default();
         // empty current run: every missing current file is a violation
         let (v, _) = run_gate(&prev, &cur, &cfg);
-        assert_eq!(v.len(), 5, "{v:?}");
+        assert_eq!(v.len(), 6, "{v:?}");
         // populated current run with no baselines: notes only
         std::fs::write(cur.join("BENCH_PRIM.json"), PRIM).unwrap();
         std::fs::write(cur.join("BENCH_OVERLAP.json"), "[]").unwrap();
         std::fs::write(cur.join("BENCH_SCHED.json"), sched(2.5e-1, 2e-3)).unwrap();
         std::fs::write(cur.join("BENCH_CLUSTER.json"), cluster(2e-3, 5e-4)).unwrap();
+        std::fs::write(cur.join("BENCH_METRICS.json"), metrics_doc(7.5e-1, 3e-3)).unwrap();
         std::fs::write(cur.join("BENCH_HOTPATH.json"), hotpath(0.01, 9.0)).unwrap();
         let (v, notes) = run_gate(&prev, &cur, &cfg);
         assert!(v.is_empty(), "{v:?}");
-        assert_eq!(notes.len(), 5, "{notes:?}");
+        assert_eq!(notes.len(), 6, "{notes:?}");
         // baseline present + injected regression: gate fails
         std::fs::write(prev.join("BENCH_HOTPATH.json"), hotpath(0.001, 9.0)).unwrap();
         let (v, _) = run_gate(&prev, &cur, &cfg);

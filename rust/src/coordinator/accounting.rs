@@ -1,0 +1,204 @@
+//! Execution-time breakdown — the exact four buckets of the paper's
+//! Figures 12–15 plus data-volume counters.
+
+/// The accounting bucket a transfer is charged to. The paper splits every
+/// host↔DPU byte into input time (`CPU-DPU`), result-retrieval time
+/// (`DPU-CPU`), or host-orchestrated mid-run synchronization
+/// (`Inter-DPU`); the transfer builder makes the choice explicit instead
+/// of duplicating `_inter` method variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bucket {
+    /// Input distribution — the "CPU-DPU" bar.
+    CpuDpu,
+    /// Result retrieval — the "DPU-CPU" bar.
+    DpuCpu,
+    /// Mid-run exchange between launches — the "Inter-DPU" bar.
+    InterDpu,
+}
+
+/// Accumulated time breakdown of a benchmark run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TimeBreakdown {
+    /// Kernel time on the DPUs (max over concurrent DPUs, summed over
+    /// launches) — the "DPU" bar.
+    pub dpu: f64,
+    /// Host-orchestrated synchronization between launches (host compute +
+    /// mid-run transfers) — the "Inter-DPU" bar.
+    pub inter_dpu: f64,
+    /// Input transfer time — the "CPU-DPU" bar.
+    pub cpu_dpu: f64,
+    /// Result retrieval time — the "DPU-CPU" bar.
+    pub dpu_cpu: f64,
+    /// Bytes moved host→MRAM (input phase).
+    pub bytes_to_dpu: u64,
+    /// Bytes moved MRAM→host (retrieval phase).
+    pub bytes_from_dpu: u64,
+    /// Bytes exchanged during inter-DPU synchronization phases (both
+    /// directions) — the volume a direct DPU↔DPU channel would carry.
+    pub bytes_inter: u64,
+    /// Number of kernel launches.
+    pub launches: u64,
+    /// Seconds hidden by the async command-queue schedule (§6's overlap
+    /// recommendation; see `coordinator::queue`): **derived** as
+    /// `sum(bucket secs) − makespan` of the recorded command DAG on the
+    /// modeled resource timelines — a double-buffered push under a
+    /// launch, a host merge under bus traffic. The component buckets
+    /// above keep their full values — `total()` subtracts this credit, so
+    /// a serialized schedule (`overlapped == 0`) is unchanged.
+    pub overlapped: f64,
+}
+
+impl TimeBreakdown {
+    /// Charge `secs` of transfer time and `bytes` of volume to `bucket` —
+    /// the single accounting path behind every transfer in the builder
+    /// (previously copy-pasted across ten `PimSet` methods).
+    pub fn account(&mut self, bucket: Bucket, secs: f64, bytes: u64) {
+        match bucket {
+            Bucket::CpuDpu => {
+                self.cpu_dpu += secs;
+                self.bytes_to_dpu += bytes;
+            }
+            Bucket::DpuCpu => {
+                self.dpu_cpu += secs;
+                self.bytes_from_dpu += bytes;
+            }
+            Bucket::InterDpu => {
+                self.inter_dpu += secs;
+                self.bytes_inter += bytes;
+            }
+        }
+    }
+
+    /// Total wall time of the run: the four buckets minus whatever the
+    /// async command-queue schedule hid (`overlapped`).
+    pub fn total(&self) -> f64 {
+        self.dpu + self.inter_dpu + self.cpu_dpu + self.dpu_cpu - self.overlapped
+    }
+
+    /// DPU + Inter-DPU: the quantity the paper uses for the CPU/GPU
+    /// comparison of §5.2 ("we include the time spent in the DPU and the
+    /// time spent for inter-DPU synchronization").
+    pub fn kernel_plus_sync(&self) -> f64 {
+        self.dpu + self.inter_dpu
+    }
+
+    /// Element-wise sum (accumulate repetitions).
+    pub fn add(&mut self, o: &TimeBreakdown) {
+        self.dpu += o.dpu;
+        self.inter_dpu += o.inter_dpu;
+        self.cpu_dpu += o.cpu_dpu;
+        self.dpu_cpu += o.dpu_cpu;
+        self.bytes_to_dpu += o.bytes_to_dpu;
+        self.bytes_from_dpu += o.bytes_from_dpu;
+        self.bytes_inter += o.bytes_inter;
+        self.launches += o.launches;
+        self.overlapped += o.overlapped;
+    }
+
+    /// Element-wise difference since an earlier snapshot of the same
+    /// accumulator (metrics are monotonic within a run, so plain
+    /// subtraction is exact).
+    pub fn delta(&self, since: &TimeBreakdown) -> TimeBreakdown {
+        TimeBreakdown {
+            dpu: self.dpu - since.dpu,
+            inter_dpu: self.inter_dpu - since.inter_dpu,
+            cpu_dpu: self.cpu_dpu - since.cpu_dpu,
+            dpu_cpu: self.dpu_cpu - since.dpu_cpu,
+            bytes_to_dpu: self.bytes_to_dpu - since.bytes_to_dpu,
+            bytes_from_dpu: self.bytes_from_dpu - since.bytes_from_dpu,
+            bytes_inter: self.bytes_inter - since.bytes_inter,
+            launches: self.launches - since.launches,
+            overlapped: self.overlapped - since.overlapped,
+        }
+    }
+
+    /// Format as milliseconds for tables.
+    pub fn fmt_ms(&self) -> String {
+        format!(
+            "DPU {:.3} ms | Inter-DPU {:.3} ms | CPU-DPU {:.3} ms | DPU-CPU {:.3} ms",
+            self.dpu * 1e3,
+            self.inter_dpu * 1e3,
+            self.cpu_dpu * 1e3,
+            self.dpu_cpu * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals() {
+        let b = TimeBreakdown {
+            dpu: 1.0,
+            inter_dpu: 0.5,
+            cpu_dpu: 0.25,
+            dpu_cpu: 0.25,
+            ..Default::default()
+        };
+        assert_eq!(b.total(), 2.0);
+        assert_eq!(b.kernel_plus_sync(), 1.5);
+    }
+
+    #[test]
+    fn account_routes_to_buckets() {
+        let mut b = TimeBreakdown::default();
+        b.account(Bucket::CpuDpu, 1.0, 10);
+        b.account(Bucket::DpuCpu, 2.0, 20);
+        b.account(Bucket::InterDpu, 4.0, 40);
+        assert_eq!((b.cpu_dpu, b.bytes_to_dpu), (1.0, 10));
+        assert_eq!((b.dpu_cpu, b.bytes_from_dpu), (2.0, 20));
+        assert_eq!((b.inter_dpu, b.bytes_inter), (4.0, 40));
+        assert_eq!(b.dpu, 0.0);
+    }
+
+    #[test]
+    fn overlapped_credits_total_only() {
+        let mut b = TimeBreakdown {
+            dpu: 1.0,
+            cpu_dpu: 0.5,
+            ..Default::default()
+        };
+        b.overlapped = 0.3;
+        assert_eq!(b.total(), 1.2);
+        assert_eq!(b.kernel_plus_sync(), 1.0, "overlap never touches kernel+sync");
+        assert_eq!(b.cpu_dpu, 0.5, "component buckets keep full values");
+    }
+
+    #[test]
+    fn delta_is_elementwise() {
+        let a = TimeBreakdown {
+            dpu: 1.0,
+            cpu_dpu: 2.0,
+            bytes_to_dpu: 100,
+            launches: 3,
+            ..Default::default()
+        };
+        let mut b = a;
+        b.dpu += 0.5;
+        b.bytes_to_dpu += 10;
+        b.launches += 1;
+        let d = b.delta(&a);
+        assert_eq!(d.dpu, 0.5);
+        assert_eq!(d.cpu_dpu, 0.0);
+        assert_eq!(d.bytes_to_dpu, 10);
+        assert_eq!(d.launches, 1);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = TimeBreakdown::default();
+        let b = TimeBreakdown {
+            dpu: 1.0,
+            launches: 2,
+            bytes_to_dpu: 100,
+            ..Default::default()
+        };
+        a.add(&b);
+        a.add(&b);
+        assert_eq!(a.dpu, 2.0);
+        assert_eq!(a.launches, 4);
+        assert_eq!(a.bytes_to_dpu, 200);
+    }
+}

@@ -41,8 +41,9 @@
 
 use super::executor::FleetExecutor;
 use super::layout::Symbol;
-use super::metrics::{Bucket, TimeBreakdown};
-use super::queue::{Access, CmdId, CmdMeta, CmdQueue};
+use super::accounting::{Bucket, TimeBreakdown};
+use super::queue::{Access, CmdId, CmdMeta, CmdQueue, Lane};
+use super::telemetry::{Labels, Telemetry};
 use super::trace::{TraceEvent, TraceSink};
 use super::{LaunchStats, PimSet};
 use crate::arch::SystemConfig;
@@ -147,6 +148,11 @@ pub struct Cluster {
     net_secs: f64,
     net_bytes: u64,
     trace: Option<TraceSink>,
+    /// Telemetry registry (`--metrics`): per-link egress bytes and busy
+    /// seconds, collective counters, and per-sync queue digests. Pure
+    /// reads of modeled values — an instrumented cluster run is
+    /// bit-identical to a bare one.
+    telemetry: Option<Telemetry>,
 }
 
 impl Cluster {
@@ -170,6 +176,7 @@ impl Cluster {
             net_secs: 0.0,
             net_bytes: 0,
             trace: None,
+            telemetry: None,
             cfg,
         }
     }
@@ -180,6 +187,13 @@ impl Cluster {
     pub fn with_trace(mut self, sink: TraceSink) -> Self {
         sink.set_geometry("cluster", (self.machines() as usize * self.ranks_per_machine) as u32);
         self.trace = Some(sink);
+        self
+    }
+
+    /// Install a telemetry registry (builder style) — see
+    /// `coordinator::telemetry`.
+    pub fn with_telemetry(mut self, tel: Telemetry) -> Self {
+        self.telemetry = Some(tel);
         self
     }
 
@@ -452,6 +466,11 @@ impl Cluster {
         let secs = self.cfg.net.xfer_secs(bytes);
         self.net_secs += secs;
         self.net_bytes += bytes;
+        if let Some(tel) = &self.telemetry {
+            let lbl = Labels::lane(&Lane::Link(src)).with_machine(src);
+            tel.counter_add("cluster_link_bytes", lbl.clone(), bytes);
+            tel.gauge_add("cluster_link_busy_secs", lbl, secs);
+        }
         self.queue
             .push(CmdMeta::net(src, secs, after.to_vec()).with_bytes(bytes))
     }
@@ -468,9 +487,17 @@ impl Cluster {
         if n == 1 {
             return Vec::new();
         }
+        self.count_collective("cluster_all_gather_total");
         (0..n)
             .map(|i| self.net_send(i as u32, (n as u64 - 1) * shard_bytes[i], &after[i]))
             .collect()
+    }
+
+    /// Bump a collective-invocation counter (no-op without telemetry).
+    fn count_collective(&self, name: &str) {
+        if let Some(tel) = &self.telemetry {
+            tel.counter_add(name, Labels::none(), 1);
+        }
     }
 
     /// Reduce-scatter: machine `i` sends every contribution it does not
@@ -482,6 +509,7 @@ impl Cluster {
         if n == 1 {
             return Vec::new();
         }
+        self.count_collective("cluster_reduce_scatter_total");
         let total: u64 = shard_bytes.iter().sum();
         (0..n)
             .map(|i| self.net_send(i as u32, total - shard_bytes[i], &after[i]))
@@ -504,6 +532,8 @@ impl Cluster {
         if rs.is_empty() {
             return Vec::new();
         }
+        // composes reduce-scatter + all-gather, so those counters tick too
+        self.count_collective("cluster_all_reduce_total");
         let merges: Vec<Vec<CmdId>> = (0..n)
             .map(|i| {
                 let recv = (n as u64 - 1) * shard_bytes[i];
@@ -519,6 +549,9 @@ impl Cluster {
     /// id per message, aligned with `msgs`.
     pub fn exchange(&mut self, msgs: &[(u32, u32, u64)], after: &[Vec<CmdId>]) -> Vec<CmdId> {
         assert_eq!(after.len(), self.machines() as usize, "one dependency list per machine");
+        if !msgs.is_empty() {
+            self.count_collective("cluster_exchange_total");
+        }
         msgs.iter()
             .map(|&(src, dst, bytes)| {
                 assert!(dst < self.machines(), "machine {dst} out of range");
@@ -561,6 +594,10 @@ impl Cluster {
                     deps: deps[i].iter().map(|&j| id0 + j as u64).collect(),
                 });
             }
+        }
+        if let Some(tel) = self.telemetry.as_ref() {
+            let stats = self.queue.schedule_stats(&sched, n_ranks, self.per);
+            tel.record_schedule(&stats, self.clock);
         }
         let hidden = sched.hidden();
         self.overlapped += hidden;

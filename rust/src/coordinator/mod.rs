@@ -31,6 +31,7 @@
 //! [`scheduler`] arbitrates the same modeled resources ([`Timeline`])
 //! between the tenants' request streams and accounts per-tenant QoS.
 
+pub mod accounting;
 pub mod cluster;
 pub mod executor;
 pub mod layout;
@@ -39,6 +40,7 @@ pub mod partition;
 pub mod queue;
 pub mod scheduler;
 pub mod session;
+pub mod telemetry;
 pub mod trace;
 
 use crate::arch::SystemConfig;
@@ -52,14 +54,20 @@ pub use executor::{
     ExecChoice, FleetExecutor, FleetSlot, LaunchJob, ParallelExecutor, SerialExecutor,
 };
 pub use layout::{MramLayout, Symbol};
-pub use metrics::{Bucket, TimeBreakdown};
+pub use accounting::{Bucket, TimeBreakdown};
 pub use partition::{chunk_ranges, chunk_ranges_aligned, cyclic_blocks, ragged_counts};
-pub use queue::{Access, CmdId, CmdKind, CmdMeta, CmdQueue, Lane, RegionSet, Schedule, Timeline};
+pub use queue::{
+    Access, CmdId, CmdKind, CmdMeta, CmdQueue, Lane, RegionSet, Schedule, ScheduleStats, Timeline,
+};
 pub use scheduler::{
     run_sched, FleetSlice, PolicyKind, SchedConfig, SchedReport, Scheduler, TenantReport,
     TenantSpec,
 };
 pub use session::Session;
+pub use telemetry::{
+    parse_metrics, HealthReport, Histogram, Labels, MetricEntry, MetricValue, MetricsSnapshot,
+    SloMonitor, SloStatus, SloTarget, Telemetry, TenantHealth,
+};
 pub use trace::{
     parse_trace, LaneTag, ReplayEngine, Trace, TraceEvent, TraceSink, TriageReport,
 };
@@ -141,6 +149,14 @@ pub struct PimSet {
     /// Request tag stamped onto every recorded command / emitted event
     /// (set by `Session::execute_batch` around each request).
     pub trace_req: Option<u64>,
+    /// Live telemetry registry, if metrics are on ([`PimSet::with_telemetry`]
+    /// / `RunConfig::metrics`). `queue_sync` folds a post-hoc
+    /// [`ScheduleStats`] digest of each schedule into it; like the trace
+    /// sink, it is a pure observer — no modeled value ever depends on it.
+    pub telemetry: Option<Telemetry>,
+    /// Session-local modeled clock telemetry series accumulate on
+    /// (advances by each sync's makespan, independent of `trace_clock`).
+    tel_clock: f64,
 }
 
 impl PimSet {
@@ -177,6 +193,8 @@ impl PimSet {
             trace: None,
             trace_clock: 0.0,
             trace_req: None,
+            telemetry: None,
+            tel_clock: 0.0,
             cfg,
         }
     }
@@ -189,6 +207,14 @@ impl PimSet {
         let n_ranks = self.dpus.len().div_ceil(per) as u32;
         sink.set_geometry("queue", n_ranks);
         self.trace = Some(sink);
+        self
+    }
+
+    /// Install a live telemetry registry (builder style). Every
+    /// subsequent `queue_sync` folds its schedule digest — per-lane
+    /// busy seconds, dep stalls, in-flight profile — into the registry.
+    pub fn with_telemetry(mut self, tel: Telemetry) -> Self {
+        self.telemetry = Some(tel);
         self
     }
 
@@ -324,6 +350,11 @@ impl PimSet {
                     });
                 }
                 self.trace_clock = base + sched.makespan;
+            }
+            if let Some(tel) = self.telemetry.as_ref() {
+                let stats = q.schedule_stats(&sched, n_ranks, per);
+                tel.record_schedule(&stats, self.tel_clock);
+                self.tel_clock += sched.makespan;
             }
             sched.hidden()
         };
@@ -599,7 +630,7 @@ impl PimSet {
             self.n_dpus(),
             per
         );
-        let PimSet { cfg, dpus, engine, host, exec, rank0, .. } = self;
+        let PimSet { cfg, dpus, engine, host, exec, rank0, telemetry, .. } = self;
         let mut rest = dpus;
         let mut next_rank0 = rank0;
         ranks
@@ -627,6 +658,11 @@ impl PimSet {
                     trace: None,
                     trace_clock: 0.0,
                     trace_req: None,
+                    // Telemetry DOES propagate: the registry is keyed by
+                    // (name, labels), not by a per-slice clock, so slice
+                    // queue digests merge coherently in dispatch order.
+                    telemetry: telemetry.clone(),
+                    tel_clock: 0.0,
                     cfg: cfg.clone(),
                 }
             })

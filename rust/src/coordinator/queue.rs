@@ -900,6 +900,41 @@ impl Schedule {
     }
 }
 
+/// Busy seconds and command count of one lane inside a schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LaneUse {
+    /// Seconds the lane held reservations (commands on one lane never
+    /// overlap, so this is a plain sum).
+    pub busy: f64,
+    /// Commands issued on the lane.
+    pub cmds: u64,
+}
+
+/// Post-hoc observability digest of one [`Schedule`] — everything the
+/// telemetry layer records per `queue_sync`. Computed from the finished
+/// schedule plus [`CmdQueue::lanes`]/[`CmdQueue::dep_edges`], **never**
+/// from inside the scheduling loop, so the hot path and the modeled
+/// times are untouched whether or not anyone asks for stats.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleStats {
+    /// Per-lane usage, ordered by each lane's first command (stable and
+    /// executor-independent because command order is).
+    pub lanes: Vec<(Lane, LaneUse)>,
+    /// Commands whose start time was pinned by a dependency's finish
+    /// (rather than lane availability alone) — the queue-level stall
+    /// signal the triage report counts per-window.
+    pub dep_stalls: u64,
+    /// Maximum number of simultaneously in-flight commands.
+    pub peak_inflight: u64,
+    /// `(time, in-flight count)` after every change event, ascending by
+    /// time (schedule-relative; callers offset by their base clock).
+    pub inflight: Vec<(f64, u64)>,
+    /// Copy of [`Schedule::makespan`].
+    pub makespan: f64,
+    /// Copy of [`Schedule::hidden`].
+    pub hidden: f64,
+}
+
 /// Heap key of a dependency-ready command: ordered by feasible start,
 /// then by [`CmdId`] — the documented tie-break (lowest id wins on equal
 /// start, matching the reference scheduler's first-scan-wins).
@@ -1173,6 +1208,68 @@ impl CmdQueue {
             d.sort_unstable();
         }
         deps
+    }
+
+    /// Observability digest of a finished schedule (see
+    /// [`ScheduleStats`]): per-lane busy/command tallies, dependency
+    /// stalls, and the in-flight command profile. Pure read over the
+    /// schedule's start/finish arrays — calling it (or not) cannot
+    /// perturb any modeled time.
+    pub fn schedule_stats(
+        &self,
+        sched: &Schedule,
+        n_ranks: usize,
+        dpus_per_rank: usize,
+    ) -> ScheduleStats {
+        let lanes = self.lanes(n_ranks, dpus_per_rank);
+        let deps = self.dep_edges();
+        let mut per_lane: Vec<(Lane, LaneUse)> = Vec::new();
+        let mut dep_stalls = 0u64;
+        // Event sweep for the in-flight profile: +1 at starts, −1 at
+        // finishes; finishes sort before starts at equal times so an
+        // abutting pair doesn't read as concurrent.
+        let mut events: Vec<(f64, i8)> = Vec::with_capacity(2 * self.cmds.len());
+        for i in 0..self.cmds.len() {
+            let secs = sched.finish[i] - sched.start[i];
+            if let Some(lane) = &lanes[i] {
+                match per_lane.iter_mut().find(|(l, _)| l == lane) {
+                    Some((_, u)) => {
+                        u.busy += secs;
+                        u.cmds += 1;
+                    }
+                    None => per_lane.push((lane.clone(), LaneUse { busy: secs, cmds: 1 })),
+                }
+            }
+            let bound = deps[i]
+                .iter()
+                .map(|&d| sched.finish[d])
+                .fold(0.0, f64::max);
+            if !deps[i].is_empty() && bound > 0.0 && sched.start[i] == bound {
+                dep_stalls += 1;
+            }
+            events.push((sched.start[i], 1));
+            events.push((sched.finish[i], -1));
+        }
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut inflight: Vec<(f64, u64)> = Vec::new();
+        let mut cur = 0i64;
+        let mut peak = 0u64;
+        for (t, d) in events {
+            cur += d as i64;
+            peak = peak.max(cur as u64);
+            match inflight.last_mut() {
+                Some(last) if last.0 == t => last.1 = cur as u64,
+                _ => inflight.push((t, cur as u64)),
+            }
+        }
+        ScheduleStats {
+            lanes: per_lane,
+            dep_stalls,
+            peak_inflight: peak,
+            inflight,
+            makespan: sched.makespan,
+            hidden: sched.hidden(),
+        }
     }
 
     /// Greedy list schedule over the dependency DAG and the resource

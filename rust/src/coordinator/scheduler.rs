@@ -61,9 +61,11 @@
 //! (`tests/executor_equivalence.rs`).
 
 use super::queue::{CmdKind, Lane, Timeline};
+use super::telemetry::{Labels, Telemetry};
 use super::trace::{LaneTag, TraceEvent, TraceSink};
 use super::{ExecChoice, PimSet, Session, TimeBreakdown};
 use crate::arch::SystemConfig;
+use crate::energy::EnergyModel;
 use crate::prim::common::RunConfig;
 use crate::prim::workload::{workload_by_name, Dataset, Output, Request, Workload};
 use crate::util::stats::{latency_summary, LatencySummary};
@@ -72,6 +74,12 @@ use std::collections::VecDeque;
 
 /// Golden-ratio multiplier for decorrelating per-tenant seeds.
 const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Stable tenant label used in telemetry and SLO reports (`t0`, `t1`, …)
+/// — matches the integer tenant ids of `SchedReport::to_json`.
+fn tenant_name(idx: usize) -> String {
+    format!("t{idx}")
+}
 
 // ----------------------------------------------------------------- tenants
 
@@ -366,6 +374,12 @@ pub struct SchedConfig {
     /// window, and response pull on the fleet-global timeline, tagged
     /// with tenant and request ids (`source: "sched"`). `None` = off.
     pub trace: Option<TraceSink>,
+    /// Live telemetry registry (`--metrics`): per-tenant arrival /
+    /// dispatch / completion counters, queue-depth / EWMA-latency /
+    /// cumulative-joule series sampled at simulated-time instants of the
+    /// shared timeline, and latency histograms (see
+    /// `coordinator::telemetry`). `None` = off, zero cost.
+    pub metrics: Option<Telemetry>,
 }
 
 impl SchedConfig {
@@ -380,6 +394,7 @@ impl SchedConfig {
             seed: 42,
             exec: ExecChoice::Auto,
             trace: None,
+            metrics: None,
         }
     }
 }
@@ -427,6 +442,12 @@ pub struct TenantReport {
     pub records: Vec<RequestRecord>,
     /// Seconds the slice was occupied (granted → response done).
     pub busy: f64,
+    /// Modeled energy (J) the tenant's slice drew over the serving
+    /// window: chips active during its kernel seconds, idling for the
+    /// rest of the machine makespan, plus bus energy for its bytes
+    /// ([`EnergyModel::slice_joules`]). Cold load is excluded — clock 0
+    /// is "all tenants resident".
+    pub joules: f64,
     /// Last retrieved output checked against the native reference.
     pub verified: bool,
 }
@@ -504,7 +525,7 @@ impl SchedReport {
                  \"throughput_rps\": {:e}, \"p50_secs\": {:e}, \"p95_secs\": {:e}, \
                  \"p99_secs\": {:e}, \"max_secs\": {:e},\n   \
                  \"utilization\": {:e}, \"cold_secs\": {:e}, \"warm_secs\": {:e}, \
-                 \"verified\": {}}}{}\n",
+                 \"joules\": {:e}, \"verified\": {}}}{}\n",
                 t.slice.tenant,
                 t.bench,
                 t.slice.n_ranks,
@@ -520,6 +541,7 @@ impl SchedReport {
                 t.utilization(self.makespan),
                 t.cold.total(),
                 t.warm.total(),
+                t.joules,
                 t.verified,
                 if i + 1 < self.tenants.len() { "," } else { "" },
             ));
@@ -544,6 +566,11 @@ struct Tenant {
     queue: VecDeque<Arrival>,
     records: Vec<RequestRecord>,
     busy: f64,
+    /// Accumulated active-phase energy (J) of dispatched batches —
+    /// feeds the cumulative-joules telemetry series; the report's
+    /// slice-level figure is recomputed in `finish` from the warm
+    /// breakdown and the machine makespan.
+    joules: f64,
     /// A dispatched batch whose response pull has not completed yet.
     in_flight: bool,
     /// EWMA of observed per-request modeled service time (SJF input).
@@ -597,6 +624,12 @@ pub struct Scheduler {
     seq: u64,
     /// Trace capture sink (`source: "sched"`), if tracing is on.
     trace: Option<TraceSink>,
+    /// Telemetry registry (`--metrics`), if live metrics are on. Every
+    /// record below reads modeled values the run computes anyway, so an
+    /// instrumented run is bit-identical to a bare one.
+    telemetry: Option<Telemetry>,
+    /// Machine config the fleet was allocated on (energy accounting).
+    sys: SystemConfig,
 }
 
 impl Scheduler {
@@ -626,7 +659,10 @@ impl Scheduler {
                 sys.n_dpus()
             );
         }
-        let parent = PimSet::allocate_with(sys.clone(), total_dpus, cfg.exec.build());
+        let mut parent = PimSet::allocate_with(sys.clone(), total_dpus, cfg.exec.build());
+        if let Some(tel) = &cfg.metrics {
+            parent = parent.with_telemetry(tel.clone());
+        }
         let sets = parent.split_ranks(&ranks);
 
         let mut tenants = Vec::with_capacity(cfg.tenants.len());
@@ -651,6 +687,7 @@ impl Scheduler {
                 seed: tseed,
                 exec: cfg.exec,
                 trace: None,
+                metrics: None,
             };
             let dataset = workload.prepare(&rc);
             let mut session =
@@ -660,6 +697,12 @@ impl Scheduler {
             session.set.reset_metrics();
             let rate = if spec.rate > 0.0 { spec.rate } else { cfg.rate };
             let queue = gen_arrivals(slice.tenant, tseed, cfg.requests, rate);
+            if let Some(tel) = &cfg.metrics {
+                let name = tenant_name(tenant_idx);
+                let lbl = Labels::tenant(&name).with_bench(&spec.bench);
+                tel.counter_add("sched_arrivals", lbl, cfg.requests as u64);
+                tel.gauge_set("sched_offered_rps", Labels::tenant(&name), rate);
+            }
             tenants.push(Tenant {
                 spec: spec.clone(),
                 slice,
@@ -671,6 +714,7 @@ impl Scheduler {
                 queue,
                 records: Vec::with_capacity(cfg.requests),
                 busy: 0.0,
+                joules: 0.0,
                 in_flight: false,
                 estimate: 0.0,
                 served: 0,
@@ -692,6 +736,8 @@ impl Scheduler {
             pulls: Vec::new(),
             seq: 0,
             trace: cfg.trace.clone(),
+            telemetry: cfg.metrics.clone(),
+            sys,
         })
     }
 
@@ -714,6 +760,19 @@ impl Scheduler {
                 break;
             }
             let now = self.timeline.free_at(&Lane::Bus).max(t_push.min(t_pull));
+            if let Some(tel) = &self.telemetry {
+                // queue depth per tenant at this bus-arbitration instant:
+                // arrived but not yet dispatched
+                for (i, tn) in self.tenants.iter().enumerate() {
+                    let depth = tn.queue.iter().take_while(|a| a.at <= now).count();
+                    tel.sample(
+                        "sched_queue_depth",
+                        Labels::tenant(&tenant_name(i)),
+                        now,
+                        depth as f64,
+                    );
+                }
+            }
             // in-flight responses take bus priority over new pushes
             if let Some(pi) = self
                 .pulls
@@ -826,6 +885,15 @@ impl Scheduler {
             if tn.served == 0 { obs } else { 0.7 * tn.estimate + 0.3 * obs };
         tn.served += k as u64;
         tn.in_flight = true;
+        // active-phase energy of the batch (telemetry series; the
+        // report's slice-level figure is recomputed in `finish`)
+        let mut batch_bd = TimeBreakdown::default();
+        for d in &deltas {
+            batch_bd.add(d);
+        }
+        tn.joules += EnergyModel::default().pim_joules(&self.sys, tn.slice.n_dpus, &batch_bd);
+        let est = tn.estimate;
+        let joules_cum = tn.joules;
         let lane = tn.lane();
 
         // reserve the shared resources: the bus carries the push from
@@ -865,6 +933,15 @@ impl Scheduler {
                 (req0, Some(kernel_ev))
             }
         };
+        if let Some(tel) = &self.telemetry {
+            let name = tenant_name(t);
+            tel.counter_add("sched_dispatches", Labels::tenant(&name), 1);
+            for a in &batch {
+                tel.observe("sched_queueing_secs", Labels::tenant(&name), now - a.at);
+            }
+            tel.sample("sched_ewma_secs", Labels::tenant(&name), now, est);
+            tel.sample("sched_joules_cum", Labels::tenant(&name), kern_end, joules_cum);
+        }
         let pull_bytes: u64 = deltas.iter().map(|d| d.bytes_from_dpu).sum();
         self.seq += 1;
         self.pulls.push(PendingPull {
@@ -904,41 +981,87 @@ impl Scheduler {
         let tn = &mut self.tenants[p.tenant];
         tn.in_flight = false;
         tn.busy += done - tn.records[p.recs[0]].dispatched;
-        for ri in p.recs {
+        for &ri in &p.recs {
             tn.records[ri].done = done;
+        }
+        if let Some(tel) = &self.telemetry {
+            let name = tenant_name(p.tenant);
+            tel.counter_add(
+                "sched_requests_done",
+                Labels::tenant(&name),
+                p.recs.len() as u64,
+            );
+            for &ri in &p.recs {
+                let lat = tn.records[ri].latency();
+                tel.observe("sched_latency_secs", Labels::tenant(&name), lat);
+                tel.sample("sched_done_latency", Labels::tenant(&name), done, lat);
+            }
         }
     }
 
     fn finish(self) -> SchedReport {
-        let Scheduler { tenants, policy_kind, seed, pipelined, total_ranks, .. } = self;
-        let mut reports = Vec::with_capacity(tenants.len());
+        let Scheduler {
+            tenants,
+            policy_kind,
+            seed,
+            pipelined,
+            total_ranks,
+            telemetry,
+            sys,
+            ..
+        } = self;
         let mut makespan = 0.0f64;
+        for tn in &tenants {
+            makespan = tn.records.iter().map(|r| r.done).fold(makespan, f64::max);
+        }
+        let em = EnergyModel::default();
+        let mut reports = Vec::with_capacity(tenants.len());
         for tn in tenants {
             let verified = match &tn.last_out {
                 Some(o) => tn.workload.verify(&tn.dataset, o),
                 None => false,
             };
-            makespan = tn.records.iter().map(|r| r.done).fold(makespan, f64::max);
+            let warm = tn.session.set.metrics;
+            // serving-window energy: active during the slice's kernel
+            // seconds, idling for the rest of the shared makespan (cold
+            // load is excluded — clock 0 is "all tenants resident")
+            let joules = em.slice_joules(&sys, tn.slice.n_dpus, &warm, makespan);
+            if let Some(tel) = &telemetry {
+                let name = tenant_name(tn.slice.tenant);
+                tel.gauge_set(
+                    "tenant_joules",
+                    Labels::tenant(&name).with_bench(&tn.spec.bench),
+                    joules,
+                );
+                let util = if makespan > 0.0 { tn.busy / makespan } else { 0.0 };
+                tel.gauge_set("sched_slice_utilization", Labels::tenant(&name), util);
+            }
             reports.push(TenantReport {
                 bench: tn.spec.bench.clone(),
                 slice: tn.slice,
                 weight: tn.spec.weight,
                 rate: tn.rate,
                 cold: tn.cold,
-                warm: tn.session.set.metrics,
+                warm,
                 records: tn.records,
                 busy: tn.busy,
+                joules,
                 verified,
             });
         }
-        SchedReport {
+        let report = SchedReport {
             policy: policy_kind.name(),
             seed,
             pipelined,
             tenants: reports,
             makespan,
             total_ranks,
+        };
+        if let Some(tel) = &telemetry {
+            tel.gauge_set("sched_occupancy", Labels::none(), report.occupancy());
+            tel.gauge_set("sched_makespan_secs", Labels::none(), report.makespan);
         }
+        report
     }
 }
 

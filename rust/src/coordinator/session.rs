@@ -27,6 +27,7 @@
 //! caveat.
 
 use super::queue::Access;
+use super::telemetry::Labels;
 use super::{LaunchStats, PimSet};
 use crate::dpu::Ctx;
 use std::any::Any;
@@ -211,6 +212,7 @@ impl Session {
         if self.pipeline {
             self.set.queue_begin();
         }
+        let launches_before = self.set.metrics.launches;
         let mut out = Vec::with_capacity(reqs.len());
         for req in reqs {
             let staged = stage(req);
@@ -223,6 +225,27 @@ impl Session {
         }
         if self.pipeline {
             self.set.queue_sync();
+        }
+        if let Some(tel) = self.set.telemetry.clone() {
+            // batches against resident MRAM state are warm hits — the
+            // amortization §6 recommends, counted per workload
+            let labels = match self.loaded {
+                Some(name) => Labels::bench(name),
+                None => Labels::none(),
+            };
+            if self.loaded.is_some() {
+                tel.counter_add("session_warm_hits", labels.clone(), reqs.len() as u64);
+            }
+            tel.counter_add(
+                "session_launches",
+                labels.clone(),
+                self.set.metrics.launches - launches_before,
+            );
+            tel.gauge_set(
+                "session_resident_bytes",
+                labels,
+                self.set.layout.used() as f64,
+            );
         }
         out
     }

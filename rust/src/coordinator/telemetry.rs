@@ -1,0 +1,1121 @@
+//! Live telemetry: a typed, labeled metrics registry plus SLO health —
+//! the sensor substrate the serving stack exposes while it runs.
+//!
+//! The paper's whole method is measurement (§5 decomposes every run into
+//! bandwidth, kernel, and transfer components); this module gives the
+//! *serving* layers the same treatment continuously instead of post-hoc.
+//! Three metric types — [`Counter`](MetricValue::Counter) (monotonic
+//! events/bytes), [`Gauge`](MetricValue::Gauge) (levels and accumulated
+//! seconds), and [`Histogram`] (log-bucketed, mergeable distributions) —
+//! plus time [`Series`](MetricValue::Series) are registered in one
+//! registry under a fixed label set ([`Labels`]: `bench`, `lane`,
+//! `machine`, `tenant`).
+//!
+//! **Determinism.** Series points are sampled at *simulated-time* ticks
+//! of the shared `Timeline` (scheduler loop instants, queue schedule
+//! event times) — never wall clock — and the registry is keyed by a
+//! `BTreeMap` over `(name, labels)`, so every executor and every seed
+//! produces byte-identical snapshots. All instrumentation sites run on
+//! the coordinator thread; the parallel executor's workers never touch
+//! the registry.
+//!
+//! **Zero cost when off.** The handle is threaded as `Option<Telemetry>`
+//! (exactly like `TraceSink`); every call site is gated on `Some`, and
+//! instrumentation only *reads* modeled values, so a run with telemetry
+//! disabled is bit-identical to one that never had the subsystem
+//! (regression-pinned in `tests/telemetry.rs`).
+//!
+//! Snapshots export two ways: Prometheus text exposition
+//! ([`MetricsSnapshot::to_prometheus`]) and a native `metrics/v1` JSON
+//! ([`MetricsSnapshot::to_json`]) whose serialize→parse→serialize is the
+//! byte identity (same `{:e}` float discipline as `trace/v1`). The
+//! [`SloMonitor`] evaluates per-tenant targets over sliding windows of
+//! the sampled series into a [`HealthReport`].
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::{parse_json, Value};
+use crate::util::stats::{nearest_rank, percentile};
+
+use super::queue::{Lane, ScheduleStats};
+
+// ------------------------------------------------------------------ labels
+
+/// The fixed label set of every metric. Cardinality discipline: labels
+/// only take values from small, bounded domains (tenant names, lane
+/// names, machine indices, bench names) — never request ids or
+/// timestamps — so the registry stays O(tenants × lanes) however long
+/// the run. `Ord` on the struct (field order = alphabetical key order)
+/// is the registry's deterministic sort.
+#[derive(Clone, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Labels {
+    /// Workload name (`gemv`, `bfs`, …).
+    pub bench: Option<String>,
+    /// Modeled resource lane (`bus`, `host`, `ranks:0-4`, `link:2`, …).
+    pub lane: Option<String>,
+    /// Machine index in a cluster.
+    pub machine: Option<u32>,
+    /// Tenant name in the multi-tenant scheduler.
+    pub tenant: Option<String>,
+}
+
+impl Labels {
+    /// The empty label set (fleet-global metrics).
+    pub fn none() -> Labels {
+        Labels::default()
+    }
+
+    /// Label by tenant name.
+    pub fn tenant(name: &str) -> Labels {
+        Labels {
+            tenant: Some(name.to_string()),
+            ..Labels::default()
+        }
+    }
+
+    /// Label by workload name.
+    pub fn bench(name: &str) -> Labels {
+        Labels {
+            bench: Some(name.to_string()),
+            ..Labels::default()
+        }
+    }
+
+    /// Label by modeled resource lane.
+    pub fn lane(lane: &Lane) -> Labels {
+        Labels {
+            lane: Some(lane_label(lane)),
+            ..Labels::default()
+        }
+    }
+
+    /// Add a bench label to an existing set.
+    pub fn with_bench(mut self, name: &str) -> Labels {
+        self.bench = Some(name.to_string());
+        self
+    }
+
+    /// Add a machine label to an existing set.
+    pub fn with_machine(mut self, m: u32) -> Labels {
+        self.machine = Some(m);
+        self
+    }
+
+    /// `{key="value",…}` in alphabetical key order, or `""` when empty —
+    /// the Prometheus exposition form.
+    fn prom(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(b) = &self.bench {
+            parts.push(format!("bench=\"{b}\""));
+        }
+        if let Some(l) = &self.lane {
+            parts.push(format!("lane=\"{l}\""));
+        }
+        if let Some(m) = self.machine {
+            parts.push(format!("machine=\"{m}\""));
+        }
+        if let Some(t) = &self.tenant {
+            parts.push(format!("tenant=\"{t}\""));
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", parts.join(","))
+        }
+    }
+}
+
+/// Stable string name of a [`Lane`] for the `lane` label (mirrors the
+/// track naming of the Chrome-trace export).
+pub fn lane_label(lane: &Lane) -> String {
+    match lane {
+        Lane::Bus => "bus".to_string(),
+        Lane::Host => "host".to_string(),
+        Lane::Ranks(r) => format!("ranks:{}-{}", r.start, r.end),
+        Lane::MachineBus(m) => format!("bus:{m}"),
+        Lane::MachineHost(m) => format!("host:{m}"),
+        Lane::Link(m) => format!("link:{m}"),
+    }
+}
+
+// --------------------------------------------------------------- histogram
+
+/// Buckets are quarter-powers-of-two: a value lands in the bucket whose
+/// upper bound is the smallest `2^(i/4) ≥ v`. Clamped so degenerate
+/// values can't mint unbounded bucket indices.
+const BUCKET_CLAMP: i32 = 4096;
+
+/// A log-bucketed, mergeable distribution. Bucket boundaries are
+/// quarter-powers-of-two (resolution ≤ 19% everywhere), so merging two
+/// histograms is exact bucket-count addition and quantiles are accurate
+/// to one bucket. Values that are exact powers of two sit exactly on a
+/// bucket bound, which is what lets `quantile` agree bit-for-bit with
+/// `util::stats::latency_summary` on such inputs (regression-pinned).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Histogram {
+    /// Bucket index → observation count (sorted by construction).
+    buckets: BTreeMap<i32, u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Bucket index of a value: smallest `i` with `2^(i/4) ≥ v`.
+    /// Non-positive values share the lowest bucket; NaN is the caller's
+    /// problem ([`observe`](Histogram::observe) guards it).
+    pub fn bucket_index(v: f64) -> i32 {
+        if v <= 0.0 {
+            return -BUCKET_CLAMP;
+        }
+        let i = (4.0 * v.log2()).ceil();
+        (i as i32).clamp(-BUCKET_CLAMP, BUCKET_CLAMP)
+    }
+
+    /// Upper bound of bucket `i`: `2^(i/4)`.
+    pub fn bucket_upper(i: i32) -> f64 {
+        (i as f64 / 4.0).exp2()
+    }
+
+    /// Record one observation. NaN observations are dropped (the
+    /// NaN-guard path shared with `util::stats`, where `total_cmp` sorts
+    /// NaN last so it never lands in p50/p95/p99 either).
+    pub fn observe(&mut self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        *self.buckets.entry(Self::bucket_index(v)).or_insert(0) += 1;
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Exact bucket-count merge of another histogram (the property that
+    /// makes per-shard histograms aggregatable).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (&i, &n) in &other.buckets {
+            *self.buckets.entry(i).or_insert(0) += n;
+        }
+        if other.count > 0 {
+            if self.count == 0 {
+                self.min = other.min;
+                self.max = other.max;
+            } else {
+                self.min = self.min.min(other.min);
+                self.max = self.max.max(other.max);
+            }
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Quantile `p` in [0,100] by the **same nearest-rank formula** as
+    /// `util::stats::percentile` ([`nearest_rank`]): walk buckets in
+    /// order to the one holding the rank-th smallest observation and
+    /// report its upper bound (clamped to the observed max, so the top
+    /// bucket doesn't overshoot).
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = nearest_rank(self.count as usize, p) as u64;
+        let mut cum = 0u64;
+        for (&i, &n) in &self.buckets {
+            cum += n;
+            if cum > rank {
+                return Self::bucket_upper(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of observations.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Smallest observation (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest observation (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// `(upper_bound, count)` per occupied bucket, ascending.
+    pub fn buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.buckets.iter().map(|(&i, &n)| (Self::bucket_upper(i), n))
+    }
+
+    fn from_parts(count: u64, sum: f64, min: f64, max: f64, buckets: BTreeMap<i32, u64>) -> Self {
+        Histogram {
+            buckets,
+            count,
+            sum,
+            min,
+            max,
+        }
+    }
+}
+
+// ---------------------------------------------------------------- registry
+
+/// One metric's current value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    /// Monotonic event/byte count.
+    Counter(u64),
+    /// A level or an accumulated quantity (seconds, joules).
+    Gauge(f64),
+    /// A log-bucketed distribution.
+    Histogram(Histogram),
+    /// `(simulated_time, value)` samples, appended in simulation order.
+    Series(Vec<(f64, f64)>),
+}
+
+impl MetricValue {
+    fn type_name(&self) -> &'static str {
+        match self {
+            MetricValue::Counter(_) => "counter",
+            MetricValue::Gauge(_) => "gauge",
+            MetricValue::Histogram(_) => "histogram",
+            MetricValue::Series(_) => "series",
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct Registry {
+    metrics: BTreeMap<(String, Labels), MetricValue>,
+}
+
+/// The cloneable telemetry handle threaded through the stack as
+/// `Option<Telemetry>` (the `TraceSink` pattern). All mutation goes
+/// through a `Mutex`, but every instrumentation site runs on the
+/// coordinator thread, so lock order — and therefore registry content —
+/// is deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    inner: Arc<Mutex<Registry>>,
+}
+
+impl Telemetry {
+    /// A fresh, empty registry.
+    pub fn new() -> Telemetry {
+        Telemetry::default()
+    }
+
+    fn with<R>(&self, f: impl FnOnce(&mut Registry) -> R) -> R {
+        f(&mut self.inner.lock().unwrap())
+    }
+
+    /// Add `delta` to a counter (created at 0).
+    pub fn counter_add(&self, name: &str, labels: Labels, delta: u64) {
+        self.with(|r| {
+            match r
+                .metrics
+                .entry((name.to_string(), labels))
+                .or_insert(MetricValue::Counter(0))
+            {
+                MetricValue::Counter(c) => *c += delta,
+                other => panic!("metric '{name}' is a {}, not a counter", other.type_name()),
+            }
+        });
+    }
+
+    /// Set a gauge to `v`.
+    pub fn gauge_set(&self, name: &str, labels: Labels, v: f64) {
+        self.with(|r| {
+            match r
+                .metrics
+                .entry((name.to_string(), labels))
+                .or_insert(MetricValue::Gauge(0.0))
+            {
+                MetricValue::Gauge(g) => *g = v,
+                other => panic!("metric '{name}' is a {}, not a gauge", other.type_name()),
+            }
+        });
+    }
+
+    /// Accumulate `v` into a gauge (for modeled-seconds totals).
+    pub fn gauge_add(&self, name: &str, labels: Labels, v: f64) {
+        self.with(|r| {
+            match r
+                .metrics
+                .entry((name.to_string(), labels))
+                .or_insert(MetricValue::Gauge(0.0))
+            {
+                MetricValue::Gauge(g) => *g += v,
+                other => panic!("metric '{name}' is a {}, not a gauge", other.type_name()),
+            }
+        });
+    }
+
+    /// Raise a gauge to `v` if larger (peak tracking).
+    pub fn gauge_max(&self, name: &str, labels: Labels, v: f64) {
+        self.with(|r| {
+            match r
+                .metrics
+                .entry((name.to_string(), labels))
+                .or_insert(MetricValue::Gauge(v))
+            {
+                MetricValue::Gauge(g) => *g = g.max(v),
+                other => panic!("metric '{name}' is a {}, not a gauge", other.type_name()),
+            }
+        });
+    }
+
+    /// Record an observation into a histogram.
+    pub fn observe(&self, name: &str, labels: Labels, v: f64) {
+        self.with(|r| {
+            match r
+                .metrics
+                .entry((name.to_string(), labels))
+                .or_insert_with(|| MetricValue::Histogram(Histogram::default()))
+            {
+                MetricValue::Histogram(h) => h.observe(v),
+                other => panic!("metric '{name}' is a {}, not a histogram", other.type_name()),
+            }
+        });
+    }
+
+    /// Append a `(simulated_time, value)` point to a series. `t` must be
+    /// a simulated-time instant off the shared `Timeline` — never wall
+    /// clock — so snapshots are executor- and host-independent.
+    pub fn sample(&self, name: &str, labels: Labels, t: f64, v: f64) {
+        self.with(|r| {
+            match r
+                .metrics
+                .entry((name.to_string(), labels))
+                .or_insert_with(|| MetricValue::Series(Vec::new()))
+            {
+                MetricValue::Series(s) => s.push((t, v)),
+                other => panic!("metric '{name}' is a {}, not a series", other.type_name()),
+            }
+        });
+    }
+
+    /// Fold one command-queue schedule into the registry: per-lane busy
+    /// seconds and command counts, dep-stall counts, hidden (overlapped)
+    /// seconds, and the in-flight command series at `base`-offset
+    /// simulated times. Called once per `queue_sync` — post-hoc from the
+    /// finished [`ScheduleStats`], never from inside the scheduling loop.
+    pub fn record_schedule(&self, stats: &ScheduleStats, base: f64) {
+        for (lane, u) in &stats.lanes {
+            let l = Labels::lane(lane);
+            self.gauge_add("queue_lane_busy_secs", l.clone(), u.busy);
+            self.counter_add("queue_lane_cmds", l, u.cmds);
+        }
+        self.counter_add("queue_syncs", Labels::none(), 1);
+        self.counter_add("queue_dep_stalls", Labels::none(), stats.dep_stalls);
+        self.gauge_add("queue_span_secs", Labels::none(), stats.makespan);
+        self.gauge_add("queue_hidden_secs", Labels::none(), stats.hidden);
+        self.gauge_max(
+            "queue_peak_inflight",
+            Labels::none(),
+            stats.peak_inflight as f64,
+        );
+        for &(t, n) in &stats.inflight {
+            self.sample("queue_inflight", Labels::none(), base + t, n as f64);
+        }
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.with(|r| r.metrics.is_empty())
+    }
+
+    /// A deterministic snapshot: entries sorted by `(name, labels)`.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.with(|r| MetricsSnapshot {
+            entries: r
+                .metrics
+                .iter()
+                .map(|((name, labels), value)| MetricEntry {
+                    name: name.clone(),
+                    labels: labels.clone(),
+                    value: value.clone(),
+                })
+                .collect(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------- snapshot
+
+/// One named, labeled metric in a snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricEntry {
+    pub name: String,
+    pub labels: Labels,
+    pub value: MetricValue,
+}
+
+/// An immutable, sorted view of the registry — the unit of export.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Sorted by `(name, labels)`.
+    pub entries: Vec<MetricEntry>,
+}
+
+/// `{:e}` — the shortest-roundtrip float form shared with `trace/v1`;
+/// `parse_json` reads it back bit-identically, which is what makes
+/// serialize→parse→serialize the byte identity.
+fn fnum(x: f64) -> String {
+    format!("{x:e}")
+}
+
+impl MetricsSnapshot {
+    /// Native `metrics/v1` JSON. One metric per line; floats in `{:e}`;
+    /// serialize→parse→serialize is the byte identity (pinned in tests).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"schema\": \"metrics/v1\",\n  \"metrics\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str("    {");
+            let _ = write!(s, "\"name\": \"{}\", \"labels\": {{", e.name);
+            let mut lab: Vec<String> = Vec::new();
+            if let Some(b) = &e.labels.bench {
+                lab.push(format!("\"bench\": \"{b}\""));
+            }
+            if let Some(l) = &e.labels.lane {
+                lab.push(format!("\"lane\": \"{l}\""));
+            }
+            if let Some(m) = e.labels.machine {
+                lab.push(format!("\"machine\": {m}"));
+            }
+            if let Some(t) = &e.labels.tenant {
+                lab.push(format!("\"tenant\": \"{t}\""));
+            }
+            s.push_str(&lab.join(", "));
+            let _ = write!(s, "}}, \"type\": \"{}\", ", e.value.type_name());
+            match &e.value {
+                MetricValue::Counter(c) => {
+                    let _ = write!(s, "\"value\": {c}");
+                }
+                MetricValue::Gauge(g) => {
+                    let _ = write!(s, "\"value\": {}", fnum(*g));
+                }
+                MetricValue::Histogram(h) => {
+                    let _ = write!(
+                        s,
+                        "\"count\": {}, \"sum\": {}, \"min\": {}, \"max\": {}, \"buckets\": [",
+                        h.count(),
+                        fnum(h.sum()),
+                        fnum(h.min()),
+                        fnum(h.max())
+                    );
+                    let n_buckets = h.buckets.len();
+                    for (j, (&bi, &bn)) in h.buckets.iter().enumerate() {
+                        let _ = write!(s, "{{\"i\": {bi}, \"n\": {bn}}}");
+                        if j + 1 < n_buckets {
+                            s.push_str(", ");
+                        }
+                    }
+                    s.push(']');
+                }
+                MetricValue::Series(pts) => {
+                    s.push_str("\"points\": [");
+                    for (j, (t, v)) in pts.iter().enumerate() {
+                        let _ = write!(s, "[{}, {}]", fnum(*t), fnum(*v));
+                        if j + 1 < pts.len() {
+                            s.push_str(", ");
+                        }
+                    }
+                    s.push(']');
+                }
+            }
+            s.push('}');
+            s.push_str(if i + 1 < self.entries.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Prometheus text exposition. Histograms become cumulative
+    /// `_bucket{le=…}` / `_sum` / `_count` families; series expose their
+    /// latest value as a gauge (the full series lives in `metrics/v1`).
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        let mut last_name = "";
+        for e in &self.entries {
+            if e.name != last_name {
+                let t = match &e.value {
+                    MetricValue::Counter(_) => "counter",
+                    MetricValue::Histogram(_) => "histogram",
+                    _ => "gauge",
+                };
+                let _ = writeln!(s, "# TYPE {} {}", e.name, t);
+                last_name = &e.name;
+            }
+            let lab = e.labels.prom();
+            match &e.value {
+                MetricValue::Counter(c) => {
+                    let _ = writeln!(s, "{}{} {}", e.name, lab, c);
+                }
+                MetricValue::Gauge(g) => {
+                    let _ = writeln!(s, "{}{} {}", e.name, lab, fnum(*g));
+                }
+                MetricValue::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for (upper, n) in h.buckets() {
+                        cum += n;
+                        let mut le_labels = e.labels.prom();
+                        let le = format!("le=\"{}\"", fnum(upper));
+                        if le_labels.is_empty() {
+                            le_labels = format!("{{{le}}}");
+                        } else {
+                            le_labels.insert_str(le_labels.len() - 1, &format!(",{le}"));
+                        }
+                        let _ = writeln!(s, "{}_bucket{} {}", e.name, le_labels, cum);
+                    }
+                    let mut inf_labels = e.labels.prom();
+                    if inf_labels.is_empty() {
+                        inf_labels = "{le=\"+Inf\"}".to_string();
+                    } else {
+                        inf_labels.insert_str(inf_labels.len() - 1, ",le=\"+Inf\"");
+                    }
+                    let _ = writeln!(s, "{}_bucket{} {}", e.name, inf_labels, h.count());
+                    let _ = writeln!(s, "{}_sum{} {}", e.name, lab, fnum(h.sum()));
+                    let _ = writeln!(s, "{}_count{} {}", e.name, lab, h.count());
+                }
+                MetricValue::Series(pts) => {
+                    let v = pts.last().map(|&(_, v)| v).unwrap_or(0.0);
+                    let _ = writeln!(s, "{}{} {}", e.name, lab, fnum(v));
+                }
+            }
+        }
+        s
+    }
+
+    /// All `(time, value)` points of the series `name` for `tenant`.
+    fn series(&self, name: &str, tenant: &str) -> Option<&[(f64, f64)]> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.labels.tenant.as_deref() == Some(tenant))
+            .and_then(|e| match &e.value {
+                MetricValue::Series(p) => Some(p.as_slice()),
+                _ => None,
+            })
+    }
+
+    /// A gauge's value for `tenant` (None when absent).
+    fn tenant_gauge(&self, name: &str, tenant: &str) -> Option<f64> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name && e.labels.tenant.as_deref() == Some(tenant))
+            .and_then(|e| match &e.value {
+                MetricValue::Gauge(g) => Some(*g),
+                _ => None,
+            })
+    }
+
+    /// Tenant names that appear in any label, sorted (snapshot order).
+    pub fn tenants(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for e in &self.entries {
+            if let Some(t) = &e.labels.tenant {
+                if !out.contains(t) {
+                    out.push(t.clone());
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+}
+
+fn field<'v>(obj: &'v Value, key: &str) -> Result<&'v Value, String> {
+    obj.get(key).ok_or_else(|| format!("missing field '{key}'"))
+}
+
+fn num(obj: &Value, key: &str) -> Result<f64, String> {
+    field(obj, key)?
+        .as_f64()
+        .ok_or_else(|| format!("field '{key}' is not a number"))
+}
+
+fn opt_str(obj: &Value, key: &str) -> Option<String> {
+    obj.get(key).and_then(|v| v.as_str()).map(str::to_string)
+}
+
+/// Parse a native `metrics/v1` document back into a snapshot. Rejects
+/// other schemas loudly; floats come back bit-identical to what
+/// [`MetricsSnapshot::to_json`] wrote.
+pub fn parse_metrics(src: &str) -> Result<MetricsSnapshot, String> {
+    let v = parse_json(src)?;
+    let schema = field(&v, "schema")?
+        .as_str()
+        .ok_or("schema is not a string")?;
+    if schema != "metrics/v1" {
+        return Err(format!("unsupported metrics schema '{schema}'"));
+    }
+    let raw = field(&v, "metrics")?
+        .as_arr()
+        .ok_or("metrics is not an array")?;
+    let mut entries = Vec::with_capacity(raw.len());
+    for m in raw {
+        let name = field(m, "name")?
+            .as_str()
+            .ok_or("name is not a string")?
+            .to_string();
+        let lv = field(m, "labels")?;
+        let labels = Labels {
+            bench: opt_str(lv, "bench"),
+            lane: opt_str(lv, "lane"),
+            machine: lv.get("machine").and_then(|x| x.as_f64()).map(|x| x as u32),
+            tenant: opt_str(lv, "tenant"),
+        };
+        let ty = field(m, "type")?.as_str().ok_or("type is not a string")?;
+        let value = match ty {
+            "counter" => MetricValue::Counter(num(m, "value")? as u64),
+            "gauge" => MetricValue::Gauge(num(m, "value")?),
+            "histogram" => {
+                let mut buckets = BTreeMap::new();
+                for b in field(m, "buckets")?.as_arr().ok_or("buckets not array")? {
+                    buckets.insert(num(b, "i")? as i32, num(b, "n")? as u64);
+                }
+                MetricValue::Histogram(Histogram::from_parts(
+                    num(m, "count")? as u64,
+                    num(m, "sum")?,
+                    num(m, "min")?,
+                    num(m, "max")?,
+                    buckets,
+                ))
+            }
+            "series" => {
+                let mut pts = Vec::new();
+                for p in field(m, "points")?.as_arr().ok_or("points not array")? {
+                    let pair = p.as_arr().ok_or("point is not a pair")?;
+                    if pair.len() != 2 {
+                        return Err("point is not a pair".to_string());
+                    }
+                    let t = pair[0].as_f64().ok_or("point time not a number")?;
+                    let val = pair[1].as_f64().ok_or("point value not a number")?;
+                    pts.push((t, val));
+                }
+                MetricValue::Series(pts)
+            }
+            other => return Err(format!("unknown metric type '{other}'")),
+        };
+        entries.push(MetricEntry { name, labels, value });
+    }
+    Ok(MetricsSnapshot { entries })
+}
+
+// --------------------------------------------------------------------- slo
+
+/// Per-tenant service-level targets.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloTarget {
+    /// p99 end-to-end latency ceiling, seconds. `<= 0` derives a default
+    /// from the data: 2× the all-tenant p99 (so a tenant breaches when
+    /// it is twice as slow as the machine-wide tail).
+    pub p99_secs: f64,
+    /// Minimum served throughput, requests/s. `<= 0` derives 0.5× the
+    /// tenant's offered rate (`sched_offered_rps`), i.e. a tenant must
+    /// keep up with at least half its arrival stream.
+    pub min_throughput_rps: f64,
+}
+
+/// Health verdict of one tenant against its targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloStatus {
+    Ok,
+    Warn,
+    Breach,
+}
+
+impl SloStatus {
+    /// Fixed-width display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloStatus::Ok => "OK",
+            SloStatus::Warn => "WARN",
+            SloStatus::Breach => "BREACH",
+        }
+    }
+}
+
+/// One tenant's evaluated health.
+#[derive(Clone, Debug)]
+pub struct TenantHealth {
+    pub tenant: String,
+    pub status: SloStatus,
+    /// Worst-window burn rate: how fast the tenant consumes its error
+    /// budget (1.0 = exactly at target; ≥ 1.0 breaches).
+    pub burn_rate: f64,
+    /// p99 latency over the whole run, seconds.
+    pub p99_secs: f64,
+    /// Effective p99 target used, seconds.
+    pub p99_target_secs: f64,
+    /// Served throughput over the whole run, requests/s.
+    pub throughput_rps: f64,
+    /// Effective minimum-throughput target used, requests/s.
+    pub min_throughput_rps: f64,
+    /// Modeled energy attributed to the tenant's slice, joules.
+    pub joules: f64,
+    /// Number of sliding windows evaluated.
+    pub windows: usize,
+}
+
+/// The SLO evaluation of a whole snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct HealthReport {
+    pub tenants: Vec<TenantHealth>,
+}
+
+impl HealthReport {
+    /// True when no tenant breaches.
+    pub fn healthy(&self) -> bool {
+        self.tenants.iter().all(|t| t.status != SloStatus::Breach)
+    }
+
+    /// Machine-readable `health/v1` JSON (same float discipline as
+    /// `metrics/v1`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n  \"schema\": \"health/v1\",\n  \"tenants\": [\n");
+        for (i, t) in self.tenants.iter().enumerate() {
+            let _ = write!(
+                s,
+                "    {{\"tenant\": \"{}\", \"status\": \"{}\", \"burn_rate\": {}, \
+                 \"p99_secs\": {}, \"p99_target_secs\": {}, \"throughput_rps\": {}, \
+                 \"min_throughput_rps\": {}, \"joules\": {}, \"windows\": {}}}",
+                t.tenant,
+                t.status.name(),
+                fnum(t.burn_rate),
+                fnum(t.p99_secs),
+                fnum(t.p99_target_secs),
+                fnum(t.throughput_rps),
+                fnum(t.min_throughput_rps),
+                fnum(t.joules),
+                t.windows
+            );
+            s.push_str(if i + 1 < self.tenants.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// Number of sliding windows the monitor splits a run into (half-window
+/// stride, so 2W−1 evaluations cover the run).
+const SLO_WINDOWS: usize = 4;
+
+/// Evaluates per-tenant SLO targets over sliding windows of the sampled
+/// `sched_done_latency` series (points at request-completion simulated
+/// times). Stateless: feed it any snapshot, live or loaded from disk.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloMonitor {
+    pub target: SloTarget,
+}
+
+impl SloMonitor {
+    /// Monitor with explicit targets (non-positive fields derive
+    /// defaults from the snapshot; see [`SloTarget`]).
+    pub fn new(target: SloTarget) -> SloMonitor {
+        SloMonitor { target }
+    }
+
+    /// Evaluate every tenant present in the snapshot.
+    pub fn evaluate(&self, snap: &MetricsSnapshot) -> HealthReport {
+        let tenants = snap.tenants();
+        // Effective p99 target: explicit, else 2× the all-tenant p99.
+        let p99_target = if self.target.p99_secs > 0.0 {
+            self.target.p99_secs
+        } else {
+            let mut all: Vec<f64> = Vec::new();
+            for t in &tenants {
+                if let Some(pts) = snap.series("sched_done_latency", t) {
+                    all.extend(pts.iter().map(|&(_, v)| v));
+                }
+            }
+            2.0 * percentile(&all, 99.0)
+        };
+        let mut out = Vec::new();
+        for tenant in tenants {
+            let pts = snap
+                .series("sched_done_latency", &tenant)
+                .unwrap_or(&[])
+                .to_vec();
+            if pts.is_empty() {
+                continue;
+            }
+            let t_end = pts.iter().map(|&(t, _)| t).fold(0.0, f64::max);
+            let offered = snap.tenant_gauge("sched_offered_rps", &tenant).unwrap_or(0.0);
+            let min_tput = if self.target.min_throughput_rps > 0.0 {
+                self.target.min_throughput_rps
+            } else {
+                0.5 * offered
+            };
+            let lats: Vec<f64> = pts.iter().map(|&(_, v)| v).collect();
+            let p99 = percentile(&lats, 99.0);
+            let throughput = if t_end > 0.0 {
+                pts.len() as f64 / t_end
+            } else {
+                0.0
+            };
+            // Sliding windows: SLO_WINDOWS spans at half-window stride.
+            let w = t_end / SLO_WINDOWS as f64;
+            let mut burn = 0.0f64;
+            let mut windows = 0usize;
+            if w > 0.0 {
+                let mut lo = 0.0;
+                while lo + w <= t_end * (1.0 + 1e-12) {
+                    let hi = lo + w;
+                    let in_w: Vec<f64> = pts
+                        .iter()
+                        .filter(|&&(t, _)| t >= lo && t < hi)
+                        .map(|&(_, v)| v)
+                        .collect();
+                    if !in_w.is_empty() {
+                        let wp99 = percentile(&in_w, 99.0);
+                        let wtput = in_w.len() as f64 / w;
+                        let mut b: f64 = wp99 / p99_target;
+                        if min_tput > 0.0 && wtput > 0.0 {
+                            b = b.max(min_tput / wtput);
+                        }
+                        burn = burn.max(b);
+                    }
+                    windows += 1;
+                    lo += 0.5 * w;
+                }
+            }
+            let status = if burn >= 1.0 {
+                SloStatus::Breach
+            } else if burn >= 0.8 {
+                SloStatus::Warn
+            } else {
+                SloStatus::Ok
+            };
+            out.push(TenantHealth {
+                tenant: tenant.clone(),
+                status,
+                burn_rate: burn,
+                p99_secs: p99,
+                p99_target_secs: p99_target,
+                throughput_rps: throughput,
+                min_throughput_rps: min_tput,
+                joules: snap.tenant_gauge("tenant_joules", &tenant).unwrap_or(0.0),
+                windows,
+            });
+        }
+        HealthReport { tenants: out }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::latency_summary;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let t = Telemetry::new();
+        assert!(t.is_empty());
+        t.counter_add("c", Labels::tenant("a"), 2);
+        t.counter_add("c", Labels::tenant("a"), 3);
+        t.gauge_set("g", Labels::none(), 1.5);
+        t.gauge_add("g", Labels::none(), 0.5);
+        t.gauge_max("p", Labels::none(), 3.0);
+        t.gauge_max("p", Labels::none(), 2.0);
+        let s = t.snapshot();
+        assert_eq!(s.entries.len(), 3);
+        assert_eq!(s.entries[0].value, MetricValue::Counter(5));
+        assert_eq!(s.entries[1].value, MetricValue::Gauge(2.0));
+        assert_eq!(s.entries[2].value, MetricValue::Gauge(3.0));
+    }
+
+    #[test]
+    fn snapshot_order_is_insertion_independent() {
+        let a = Telemetry::new();
+        a.counter_add("x", Labels::tenant("t1"), 1);
+        a.counter_add("x", Labels::tenant("t0"), 1);
+        a.gauge_set("a", Labels::none(), 0.0);
+        let b = Telemetry::new();
+        b.gauge_set("a", Labels::none(), 0.0);
+        b.counter_add("x", Labels::tenant("t0"), 1);
+        b.counter_add("x", Labels::tenant("t1"), 1);
+        assert_eq!(a.snapshot(), b.snapshot());
+        assert_eq!(a.snapshot().to_json(), b.snapshot().to_json());
+    }
+
+    #[test]
+    fn histogram_quantile_agrees_with_latency_summary() {
+        // Exact powers of two sit on bucket bounds, so the bucketed
+        // quantile and the exact nearest-rank percentile are the same
+        // number — the regression the shared `nearest_rank` formula pins.
+        let xs: Vec<f64> = (0..64).map(|i| (i % 16) as f64).map(f64::exp2).collect();
+        let mut h = Histogram::default();
+        for &x in &xs {
+            h.observe(x);
+        }
+        let s = latency_summary(&xs);
+        assert_eq!(h.quantile(50.0).to_bits(), s.p50.to_bits());
+        assert_eq!(h.quantile(95.0).to_bits(), s.p95.to_bits());
+        assert_eq!(h.quantile(99.0).to_bits(), s.p99.to_bits());
+        assert_eq!(h.max().to_bits(), s.max.to_bits());
+    }
+
+    #[test]
+    fn histogram_nan_guard_matches_stats_path() {
+        // NaN is dropped by the histogram and sorted last by
+        // `total_cmp`, so both paths report the same p50 on real data.
+        let xs = [1.0, 2.0, 4.0, f64::NAN];
+        let mut h = Histogram::default();
+        for &x in &xs {
+            h.observe(x);
+        }
+        assert_eq!(h.count(), 3);
+        let clean: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+        assert_eq!(
+            h.quantile(50.0).to_bits(),
+            latency_summary(&clean).p50.to_bits()
+        );
+    }
+
+    #[test]
+    fn histogram_merge_is_exact() {
+        let mut a = Histogram::default();
+        let mut b = Histogram::default();
+        let mut whole = Histogram::default();
+        for i in 0..32 {
+            let v = 1.0 + i as f64;
+            if i % 2 == 0 {
+                a.observe(v);
+            } else {
+                b.observe(v);
+            }
+            whole.observe(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+    }
+
+    #[test]
+    fn histogram_bucket_bounds() {
+        assert_eq!(Histogram::bucket_upper(Histogram::bucket_index(1.0)), 1.0);
+        assert_eq!(Histogram::bucket_upper(Histogram::bucket_index(8.0)), 8.0);
+        let v = 3.0;
+        let up = Histogram::bucket_upper(Histogram::bucket_index(v));
+        assert!(up >= v && up <= v * 2f64.powf(0.25) * (1.0 + 1e-12));
+        // Non-positive values share the lowest bucket.
+        assert_eq!(Histogram::bucket_index(0.0), Histogram::bucket_index(-5.0));
+    }
+
+    #[test]
+    fn metrics_v1_roundtrip_is_bit_identical() {
+        let t = Telemetry::new();
+        t.counter_add("arrivals", Labels::tenant("a").with_bench("gemv"), 7);
+        t.gauge_set("util", Labels::lane(&Lane::Bus), 0.375);
+        t.gauge_set("joules", Labels::tenant("a"), 1.234e-3);
+        t.observe("lat", Labels::tenant("a"), 0.5);
+        t.observe("lat", Labels::tenant("a"), 2.0);
+        t.sample("depth", Labels::tenant("a"), 0.1, 3.0);
+        t.sample("depth", Labels::tenant("a"), 0.2, 1.0);
+        t.counter_add("link_bytes", Labels::none().with_machine(2), 4096);
+        let json = t.snapshot().to_json();
+        let parsed = parse_metrics(&json).expect("parse back");
+        assert_eq!(parsed, t.snapshot());
+        assert_eq!(parsed.to_json(), json, "serialize→parse→serialize identity");
+    }
+
+    #[test]
+    fn parse_rejects_foreign_schema() {
+        assert!(parse_metrics("{\"schema\": \"trace/v1\", \"metrics\": []}").is_err());
+        assert!(parse_metrics("{}").is_err());
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let t = Telemetry::new();
+        t.counter_add("reqs", Labels::tenant("a"), 3);
+        t.observe("lat", Labels::none(), 1.0);
+        t.observe("lat", Labels::none(), 2.0);
+        t.sample("depth", Labels::none(), 0.5, 4.0);
+        let p = t.snapshot().to_prometheus();
+        assert!(p.contains("# TYPE reqs counter"), "{p}");
+        assert!(p.contains("reqs{tenant=\"a\"} 3"), "{p}");
+        assert!(p.contains("# TYPE lat histogram"), "{p}");
+        assert!(p.contains("lat_bucket{le=\"+Inf\"} 2"), "{p}");
+        assert!(p.contains("lat_count 2"), "{p}");
+        assert!(p.contains("depth 4e0"), "{p}");
+    }
+
+    #[test]
+    fn slo_monitor_flags_breach() {
+        let t = Telemetry::new();
+        // Tenant "fast": 20 completions at latency 0.1 over 2s.
+        // Tenant "slow": 20 completions at latency 1.0 over 2s.
+        for i in 0..20 {
+            let at = 0.1 * (i + 1) as f64;
+            t.sample("sched_done_latency", Labels::tenant("fast"), at, 0.1);
+            t.sample("sched_done_latency", Labels::tenant("slow"), at, 1.0);
+        }
+        t.gauge_set("sched_offered_rps", Labels::tenant("fast"), 10.0);
+        t.gauge_set("sched_offered_rps", Labels::tenant("slow"), 10.0);
+        t.gauge_set("tenant_joules", Labels::tenant("slow"), 42.0);
+        let snap = t.snapshot();
+        let rep = SloMonitor::new(SloTarget {
+            p99_secs: 0.5,
+            min_throughput_rps: 0.0,
+        })
+        .evaluate(&snap);
+        assert_eq!(rep.tenants.len(), 2);
+        let fast = rep.tenants.iter().find(|t| t.tenant == "fast").unwrap();
+        let slow = rep.tenants.iter().find(|t| t.tenant == "slow").unwrap();
+        assert_eq!(fast.status, SloStatus::Ok);
+        assert_eq!(slow.status, SloStatus::Breach);
+        assert!(slow.burn_rate >= 2.0 - 1e-9);
+        assert_eq!(slow.joules, 42.0);
+        assert!(!rep.healthy());
+        let json = rep.to_json();
+        assert!(json.contains("\"schema\": \"health/v1\""));
+        assert!(json.contains("\"status\": \"BREACH\""));
+    }
+
+    #[test]
+    fn slo_default_targets_derive_from_snapshot() {
+        let t = Telemetry::new();
+        for i in 0..10 {
+            t.sample(
+                "sched_done_latency",
+                Labels::tenant("only"),
+                0.5 * (i + 1) as f64,
+                0.2,
+            );
+        }
+        t.gauge_set("sched_offered_rps", Labels::tenant("only"), 2.0);
+        let rep = SloMonitor::default().evaluate(&t.snapshot());
+        let h = &rep.tenants[0];
+        // Derived p99 target = 2× observed p99 → burn ≈ 0.5 → OK.
+        assert_eq!(h.p99_target_secs, 0.4);
+        assert_eq!(h.min_throughput_rps, 1.0);
+        assert_eq!(h.status, SloStatus::Ok);
+    }
+}

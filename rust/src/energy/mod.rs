@@ -57,6 +57,30 @@ impl EnergyModel {
         p_active * bd.dpu + p_idle * (bd.inter_dpu + bd.cpu_dpu + bd.dpu_cpu) + bus
     }
 
+    /// Energy (J) attributed to a *tenant slice* of a shared machine
+    /// over a serving run of `makespan` modeled seconds: the slice's
+    /// chips are active during its kernel time (`bd.dpu`), idle for the
+    /// **rest of the run** (a powered slice burns idle watts while its
+    /// tenant waits on the bus or has nothing queued — unlike
+    /// [`pim_joules`](Self::pim_joules), which only bills the transfer
+    /// phases of a solo run), plus bus energy for the bytes it moved.
+    /// This is the per-tenant energy line of `SchedReport`.
+    pub fn slice_joules(
+        &self,
+        sys: &SystemConfig,
+        n_dpus: u32,
+        bd: &TimeBreakdown,
+        makespan: f64,
+    ) -> f64 {
+        let chips = (n_dpus as f64 / sys.dpus_per_chip as f64).ceil();
+        let freq_scale = sys.dpu.freq_mhz as f64 / 350.0;
+        let p_active = chips * self.pim_chip_active_w * freq_scale;
+        let p_idle = p_active * self.pim_idle_frac;
+        let bus = (bd.bytes_to_dpu + bd.bytes_from_dpu) as f64 * XFER_PJ_PER_BYTE * 1e-12;
+        let idle = (makespan - bd.dpu).max(0.0);
+        p_active * bd.dpu + p_idle * idle + bus
+    }
+
     /// Energy (J) of a CPU run of `secs`.
     pub fn cpu_joules(&self, secs: f64) -> f64 {
         self.cpu_active_w * self.cpu_util * secs
@@ -103,6 +127,25 @@ mod tests {
         };
         let watts = m.pim_joules(&sys, 640, &bd);
         assert!(watts > 50.0 && watts < 110.0, "{watts}");
+    }
+
+    #[test]
+    fn slice_joules_bills_idle_slice_time() {
+        let m = EnergyModel::default();
+        let sys = SystemConfig::p21_rank();
+        let bd = TimeBreakdown {
+            dpu: 1.0,
+            ..Default::default()
+        };
+        // Same kernel time, longer run ⇒ more idle joules.
+        let short = m.slice_joules(&sys, 64, &bd, 1.0);
+        let long = m.slice_joules(&sys, 64, &bd, 3.0);
+        assert!(long > short);
+        let expected_extra = short * m.pim_idle_frac / 1.0 * 2.0;
+        assert!((long - short - expected_extra).abs() < 1e-9);
+        // A makespan shorter than the kernel time (can't happen, but be
+        // safe) clamps idle at zero instead of crediting energy back.
+        assert_eq!(m.slice_joules(&sys, 64, &bd, 0.5), short);
     }
 
     #[test]

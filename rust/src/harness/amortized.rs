@@ -50,6 +50,7 @@ pub fn amortized(quick: bool) -> Table {
             seed: 42,
             exec: ExecChoice::Auto,
             trace: None,
+            metrics: None,
         };
         let ser = serve(w.as_ref(), &rc, requests, false);
         let pip = serve(w.as_ref(), &rc, requests, true);

@@ -74,6 +74,7 @@ pub fn compare_all(quick: bool) -> Vec<CompareRow> {
                 sys,
                 exec: Default::default(),
                 trace: None,
+                metrics: None,
             };
             b.run(&rc)
         };

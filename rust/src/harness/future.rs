@@ -75,6 +75,7 @@ pub fn future_benches(quick: bool) -> Table {
                 sys,
                 exec: Default::default(),
                 trace: None,
+                metrics: None,
             };
             let r = b.run(&rc);
             assert!(r.verified, "{name} failed under ablation");
@@ -112,6 +113,7 @@ pub fn future_interdpu(quick: bool) -> Table {
             sys: SystemConfig::p21_rank(),
             exec: Default::default(),
             trace: None,
+            metrics: None,
         };
         let r = b.run(&rc);
         assert!(r.verified);

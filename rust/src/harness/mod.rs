@@ -12,6 +12,7 @@ pub mod overlap;
 pub mod scaleout;
 pub mod scaling;
 pub mod tables;
+pub mod telemetry;
 pub mod traced;
 
 use crate::util::table::Table;
@@ -25,11 +26,13 @@ use std::path::Path;
 /// vs async command queues, the derived transfer/kernel overlap;
 /// `traced` = trace capture, replay, and hotspot triage of a pipelined
 /// serving window; `scaleout` = strong-scaling efficiency of sharded
-/// fleets over the modeled multi-machine network).
-pub const ALL_IDS: [&str; 27] = [
+/// fleets over the modeled multi-machine network; `telemetry` = live
+/// labeled metrics, the metrics/v1 round-trip, and per-tenant SLO
+/// health + energy over the scheduling mix).
+pub const ALL_IDS: [&str; 28] = [
     "table1", "table2", "table3", "table4", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
     "fig10", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
-    "fig22", "future", "amortized", "multitenant", "overlap", "traced", "scaleout",
+    "fig22", "future", "amortized", "multitenant", "overlap", "traced", "scaleout", "telemetry",
 ];
 
 /// Per-benchmark dataset scale used by the harness (relative to Table 3
@@ -84,6 +87,7 @@ pub fn run_id(id: &str, outdir: &Path, quick: bool) -> anyhow::Result<()> {
         "amortized" => vec![amortized::amortized(quick)],
         "overlap" => vec![overlap::overlap(quick)],
         "traced" => vec![traced::traced(quick)],
+        "telemetry" => vec![telemetry::telemetry(quick)],
         "scaleout" => vec![scaleout::scaleout(quick)],
         "multitenant" => vec![
             multitenant::multitenant_policies(quick),

@@ -44,6 +44,7 @@ pub fn overlap(quick: bool) -> Table {
             seed: 42,
             exec: ExecChoice::Auto,
             trace: None,
+            metrics: None,
         };
         let ser = serve(w.as_ref(), &rc, requests, false);
         let asy = serve(w.as_ref(), &rc, requests, true);

@@ -101,6 +101,7 @@ pub fn fig14(quick: bool) -> Table {
                 seed: 42,
                 exec: Default::default(),
                 trace: None,
+                metrics: None,
             };
             let r = b.run(&rc);
             assert!(r.verified, "{} failed at {nd} DPUs", b.name());

@@ -47,6 +47,7 @@ pub fn traced(quick: bool) -> Table {
             seed: 42,
             exec: ExecChoice::Auto,
             trace: Some(sink.clone()),
+            metrics: None,
         };
         let rep = serve(w.as_ref(), &rc, requests, true);
         let trace = sink.snapshot();

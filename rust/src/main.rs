@@ -29,6 +29,10 @@
 //!            [--scale S] [--json] [--quick]   sharded GEMV/SpMV/BFS/MLP
 //!            over a modeled multi-machine fleet with network
 //!            collectives; --json writes BENCH_CLUSTER.json
+//! repro metrics [--load <metrics.json>] [--json] [--slo-p99 S]
+//!            [--slo-rps R]           per-tenant SLO health (latency,
+//!            throughput, energy) over a metrics/v1 snapshot; without
+//!            --load, runs the default sched mix with live telemetry
 //! repro all [--quick]                everything, CSVs into --outdir
 //! ```
 //! All outputs land in `--outdir` (default `results/`). The global
@@ -42,12 +46,19 @@
 //! or `chrome://tracing`) plus a compact native `trace/v1` sibling at
 //! `<path minus .json>.v1.json` (the form `repro trace --load` and the
 //! replay engine consume). See `coordinator::trace`.
+//!
+//! The global `--metrics [path]` flag records every run's labeled
+//! telemetry (counters, gauges, histograms, simulated-time series; see
+//! `coordinator::telemetry`) into a native `metrics/v1` JSON at `path`
+//! (default `<outdir>/BENCH_METRICS.json`) plus a Prometheus
+//! text-exposition sibling at `<path minus .json>.prom` (the form
+//! `repro metrics --load` consumes).
 
 use prim_pim::arch::SystemConfig;
 use prim_pim::coordinator::trace::{analyze, diff_traces};
 use prim_pim::coordinator::{
-    parse_trace, run_sched, ExecChoice, PolicyKind, ReplayEngine, SchedConfig, TenantSpec,
-    TraceSink,
+    parse_metrics, parse_trace, run_sched, ExecChoice, PolicyKind, ReplayEngine, SchedConfig,
+    SloMonitor, SloTarget, Telemetry, TenantSpec, TraceSink,
 };
 use prim_pim::harness::{self, ALL_IDS};
 use prim_pim::prim::common::{all_benches, bench_by_name, BenchResult, RunConfig};
@@ -126,8 +137,8 @@ impl Args {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: repro <list|table|figure|micro|prim|serve|sched|trace|cluster|compare|estimate|all> \
-         [--seed S] [--trace [path]] [args]\n\
+        "usage: repro <list|table|figure|micro|prim|serve|sched|trace|cluster|metrics|compare|estimate|all> \
+         [--seed S] [--trace [path]] [--metrics [path]] [args]\n\
          run `repro list` for the experiment index"
     );
     std::process::exit(2);
@@ -194,6 +205,42 @@ fn trace_path(args: &Args, outdir: &Path) -> Option<PathBuf> {
     }
 }
 
+/// Resolve the `--metrics [path]` flag: bare `--metrics` defaults to
+/// `<outdir>/BENCH_METRICS.json`.
+fn metrics_path(args: &Args, outdir: &Path) -> Option<PathBuf> {
+    let v = args.flags.get("metrics")?;
+    if v == "true" {
+        Some(outdir.join("BENCH_METRICS.json"))
+    } else {
+        Some(PathBuf::from(v))
+    }
+}
+
+/// Export a captured metrics registry: native `metrics/v1` at `path`
+/// plus a Prometheus text-exposition sibling at `<path minus .json>.prom`.
+fn write_metrics(path: &Path, tel: &Telemetry) -> anyhow::Result<()> {
+    let snap = tel.snapshot();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, snap.to_json())?;
+    let s = path.to_string_lossy();
+    let prom = PathBuf::from(match s.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.prom"),
+        None => format!("{s}.prom"),
+    });
+    std::fs::write(&prom, snap.to_prometheus())?;
+    println!(
+        "wrote {} ({} metrics) and {}",
+        path.display(),
+        snap.entries.len(),
+        prom.display()
+    );
+    Ok(())
+}
+
 /// Export a captured trace: Chrome-trace JSON at `path` (Perfetto /
 /// `chrome://tracing`), native `trace/v1` at `<path minus .json>.v1.json`.
 fn write_trace(path: &Path, sink: &TraceSink) -> anyhow::Result<()> {
@@ -236,6 +283,11 @@ fn main() -> anyhow::Result<()> {
     // SchedConfig the subcommand builds; exported after the run
     let trace_out = trace_path(&args, &outdir);
     let trace_sink = trace_out.as_ref().map(|_| TraceSink::new());
+    // global metrics capture: one registry threads through every
+    // RunConfig / SchedConfig the subcommand builds; exported after the
+    // run as metrics/v1 JSON + Prometheus text
+    let metrics_out = metrics_path(&args, &outdir);
+    let metrics_sink = metrics_out.as_ref().map(|_| Telemetry::new());
 
     match cmd {
         "list" => {
@@ -296,6 +348,7 @@ fn main() -> anyhow::Result<()> {
                         sys: sys.clone(),
                         exec,
                         trace: trace_sink.clone(),
+                        metrics: metrics_sink.clone(),
                     };
                     let t0 = std::time::Instant::now();
                     let ser = serve(w.as_ref(), &rc, requests, false);
@@ -343,6 +396,7 @@ fn main() -> anyhow::Result<()> {
                     sys: sys.clone(),
                     exec,
                     trace: trace_sink.clone(),
+                    metrics: metrics_sink.clone(),
                 };
                 let t0 = std::time::Instant::now();
                 let r = b.run(&rc);
@@ -380,6 +434,7 @@ fn main() -> anyhow::Result<()> {
                 sys: system_for(n_dpus),
                 exec: args.exec_choice(),
                 trace: trace_sink.clone(),
+                metrics: metrics_sink.clone(),
             };
             let t0 = std::time::Instant::now();
             let rep = serve(w.as_ref(), &rc, n_requests, pipeline);
@@ -446,6 +501,7 @@ fn main() -> anyhow::Result<()> {
                 exec: args.exec_choice(),
                 tenants,
                 trace: trace_sink.clone(),
+                metrics: metrics_sink.clone(),
             };
             let t0 = std::time::Instant::now();
             let rep = run_sched(&cfg)?;
@@ -463,7 +519,7 @@ fn main() -> anyhow::Result<()> {
                 let l = t.latency_summary();
                 println!(
                     "tenant {} {:<9} {:>2} ranks | thr {:>9.1} req/s | p50 {:>8.3} ms  \
-                     p95 {:>8.3} ms  p99 {:>8.3} ms | util {:>5.1}% | [{}]",
+                     p95 {:>8.3} ms  p99 {:>8.3} ms | util {:>5.1}% | {:>8.3} J | [{}]",
                     t.slice.tenant,
                     t.bench,
                     t.slice.n_ranks,
@@ -472,6 +528,7 @@ fn main() -> anyhow::Result<()> {
                     l.p95 * 1e3,
                     l.p99 * 1e3,
                     t.utilization(rep.makespan) * 100.0,
+                    t.joules,
                     if t.verified { "ok" } else { "VERIFY-FAIL" },
                 );
             }
@@ -486,6 +543,84 @@ fn main() -> anyhow::Result<()> {
                 let path = outdir.join("BENCH_SCHED.json");
                 std::fs::write(&path, rep.to_json())?;
                 println!("wrote {}", path.display());
+            }
+        }
+        "metrics" => {
+            // SLO health over a `metrics/v1` snapshot: --load triages a
+            // recorded registry (the CI validation path); without it the
+            // command runs the default multi-tenant sched mix with live
+            // telemetry and evaluates what it captured.
+            let snap = if let Some(file) = args.flags.get("load") {
+                let src = std::fs::read_to_string(file)
+                    .map_err(|e| anyhow::anyhow!("--load {file}: {e}"))?;
+                parse_metrics(&src).map_err(|e| anyhow::anyhow!("--load {file}: {e}"))?
+            } else {
+                // live mode: reuse the global --metrics sink when given so
+                // the end-of-run flush exports what this run recorded
+                let tel = metrics_sink.clone().unwrap_or_default();
+                let mix = args
+                    .flags
+                    .get("tenants")
+                    .cloned()
+                    .unwrap_or_else(|| "gemv:2,bs:1,va:1".to_string());
+                let mut tenants = TenantSpec::parse_list(&mix).unwrap_or_else(|e| {
+                    eprintln!("bad --tenants: {e}");
+                    std::process::exit(2);
+                });
+                let scale_mul = if quick { 0.02 } else { 0.25 };
+                for t in &mut tenants {
+                    let w = workload_by_name(&t.bench).unwrap_or_else(|| {
+                        eprintln!("unknown benchmark {}", t.bench);
+                        std::process::exit(2);
+                    });
+                    t.scale = args.flag("scale", harness::harness_scale(w.name()) * scale_mul);
+                }
+                let cfg = SchedConfig {
+                    requests: args.flag("requests", 8),
+                    rate: args.flag("rate", 500.0),
+                    seed,
+                    exec: args.exec_choice(),
+                    metrics: Some(tel.clone()),
+                    ..SchedConfig::new(tenants)
+                };
+                let rep = run_sched(&cfg)?;
+                println!(
+                    "live sched run: policy {} · {} tenants · makespan {:.3} ms",
+                    rep.policy,
+                    rep.tenants.len(),
+                    rep.makespan * 1e3,
+                );
+                tel.snapshot()
+            };
+            let target = SloTarget {
+                p99_secs: args.flag("slo-p99", 0.0),
+                min_throughput_rps: args.flag("slo-rps", 0.0),
+            };
+            let health = SloMonitor::new(target).evaluate(&snap);
+            if args.has("json") {
+                print!("{}", health.to_json());
+            } else {
+                println!(
+                    "{} metrics · {} tenants under SLO evaluation",
+                    snap.entries.len(),
+                    health.tenants.len(),
+                );
+                for t in &health.tenants {
+                    println!(
+                        "tenant {:<4} [{:<6}] burn {:>5.2} | p99 {:>8.3} ms (target {:>8.3} ms) \
+                         | thr {:>8.1} req/s (min {:>7.1}) | {:>8.3} J | {} windows",
+                        t.tenant,
+                        t.status.name(),
+                        t.burn_rate,
+                        t.p99_secs * 1e3,
+                        t.p99_target_secs * 1e3,
+                        t.throughput_rps,
+                        t.min_throughput_rps,
+                        t.joules,
+                        t.windows,
+                    );
+                }
+                println!("health: {}", if health.healthy() { "OK" } else { "BREACH" });
             }
         }
         "trace" => {
@@ -537,6 +672,7 @@ fn main() -> anyhow::Result<()> {
                     sys: system_for(n_dpus),
                     exec: args.exec_choice(),
                     trace: Some(sink.clone()),
+                    metrics: metrics_sink.clone(),
                 };
                 let rep = serve(w.as_ref(), &rc, n_requests, true);
                 println!(
@@ -606,6 +742,7 @@ fn main() -> anyhow::Result<()> {
                 sc.seed = seed;
                 sc.exec = args.exec_choice();
                 sc.trace = trace_sink.clone();
+                sc.metrics = metrics_sink.clone();
                 let t0 = std::time::Instant::now();
                 let r = run_scaleout(name, &sc).expect("known sharded bench");
                 println!(
@@ -702,6 +839,17 @@ fn main() -> anyhow::Result<()> {
             } else {
                 write_trace(path, sink)?;
             }
+        }
+    }
+    // flush the global --metrics capture (`metrics --load` reads a file
+    // and records nothing itself — stay quiet in that case)
+    if let (Some(path), Some(tel)) = (&metrics_out, &metrics_sink) {
+        if tel.is_empty() {
+            if cmd != "metrics" {
+                eprintln!("--metrics: no metrics recorded ({cmd} does not record)");
+            }
+        } else {
+            write_metrics(path, tel)?;
         }
     }
     Ok(())

@@ -2,7 +2,7 @@
 //! `PrimBench` trait, and the Table 2 taxonomy.
 
 use crate::arch::SystemConfig;
-use crate::coordinator::{PimSet, Session, TimeBreakdown, TraceSink};
+use crate::coordinator::{PimSet, Session, Telemetry, TimeBreakdown, TraceSink};
 
 pub use crate::coordinator::ExecChoice;
 
@@ -30,6 +30,11 @@ pub struct RunConfig {
     /// timeline into this sink (see `coordinator::trace`); when `None`
     /// — the default everywhere — capture costs nothing.
     pub trace: Option<TraceSink>,
+    /// Live telemetry registry (`--metrics` CLI flag). When set, every
+    /// fleet allocated through [`RunConfig::alloc`] folds its queue
+    /// schedule digests into this registry (see `coordinator::telemetry`);
+    /// when `None` — the default everywhere — recording costs nothing.
+    pub metrics: Option<Telemetry>,
 }
 
 impl RunConfig {
@@ -43,6 +48,7 @@ impl RunConfig {
             seed: 42,
             exec: ExecChoice::Auto,
             trace: None,
+            metrics: None,
         }
     }
 
@@ -71,15 +77,26 @@ impl RunConfig {
         self
     }
 
+    /// Install a telemetry registry (builder style) — see
+    /// `coordinator::telemetry`.
+    pub fn with_metrics(mut self, tel: Telemetry) -> Self {
+        self.metrics = Some(tel);
+        self
+    }
+
     /// Allocate the configured PIM set (`sys` × `n_dpus`) behind the
     /// configured fleet executor — the one allocation path every PrIM
-    /// workload uses. A configured trace sink is installed on the fleet.
+    /// workload uses. A configured trace sink / telemetry registry is
+    /// installed on the fleet.
     pub fn alloc(&self) -> PimSet {
-        let set = PimSet::allocate_with(self.sys.clone(), self.n_dpus, self.exec.build());
-        match &self.trace {
-            Some(sink) => set.with_trace(sink.clone()),
-            None => set,
+        let mut set = PimSet::allocate_with(self.sys.clone(), self.n_dpus, self.exec.build());
+        if let Some(sink) = &self.trace {
+            set = set.with_trace(sink.clone());
         }
+        if let Some(tel) = &self.metrics {
+            set = set.with_telemetry(tel.clone());
+        }
+        set
     }
 
     /// Allocate a persistent serving session over [`RunConfig::alloc`].

@@ -26,7 +26,7 @@ use super::gemv::gemv_kernel;
 use crate::arch::{isa, DType, Op, SystemConfig};
 use crate::coordinator::{
     chunk_ranges, Access, Bucket, Cluster, ClusterConfig, CmdId, ExecChoice, NetModel,
-    TimeBreakdown, TraceSink,
+    Telemetry, TimeBreakdown, TraceSink,
 };
 use crate::dpu::Ctx;
 use crate::util::data::{banded_matrix, rmat_graph};
@@ -48,6 +48,9 @@ pub struct ScaleoutConfig {
     pub exec: ExecChoice,
     pub net: NetModel,
     pub trace: Option<TraceSink>,
+    /// Live telemetry registry (`--metrics`): per-link egress traffic,
+    /// collective counters, and per-sync queue digests. `None` = off.
+    pub metrics: Option<Telemetry>,
 }
 
 impl ScaleoutConfig {
@@ -63,6 +66,7 @@ impl ScaleoutConfig {
             exec: ExecChoice::Auto,
             net: NetModel::default(),
             trace: None,
+            metrics: None,
         }
     }
 
@@ -77,11 +81,14 @@ impl ScaleoutConfig {
         let mut cfg =
             ClusterConfig::new(SystemConfig::p21_rank(), self.machines, self.dpus_per_machine);
         cfg.net = self.net.clone();
-        let c = Cluster::new(cfg, self.exec.build());
-        match &self.trace {
-            Some(sink) => c.with_trace(sink.clone()),
-            None => c,
+        let mut c = Cluster::new(cfg, self.exec.build());
+        if let Some(sink) = &self.trace {
+            c = c.with_trace(sink.clone());
         }
+        if let Some(tel) = &self.metrics {
+            c = c.with_telemetry(tel.clone());
+        }
+        c
     }
 }
 

@@ -42,6 +42,19 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
+/// 0-based nearest-rank index of percentile `p` (in [0,100]) within a
+/// sorted sample of `n` elements — the **single** rank formula behind
+/// [`percentile`], [`latency_summary`], and
+/// `coordinator::telemetry::Histogram::quantile`, so exact-value and
+/// bucketed quantiles agree on shared inputs by construction.
+pub fn nearest_rank(n: usize, p: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let r = ((p / 100.0) * (n as f64 - 1.0)).round() as usize;
+    r.min(n - 1)
+}
+
 /// Percentile in [0,100] by nearest-rank on a sorted copy (NaN-safe via
 /// `total_cmp`, like [`median`]).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
@@ -50,8 +63,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
     let mut v = xs.to_vec();
     v.sort_by(f64::total_cmp);
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    v[nearest_rank(v.len(), p)]
 }
 
 /// The latency percentiles QoS reports quote (scheduler per-tenant lines,
@@ -71,10 +83,7 @@ pub fn latency_summary(xs: &[f64]) -> LatencySummary {
     }
     let mut v = xs.to_vec();
     v.sort_by(f64::total_cmp);
-    let rank = |p: f64| {
-        let r = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-        v[r.min(v.len() - 1)]
-    };
+    let rank = |p: f64| v[nearest_rank(v.len(), p)];
     LatencySummary {
         p50: rank(50.0),
         p95: rank(95.0),
@@ -158,6 +167,16 @@ mod tests {
         let _ = median(&xs);
         let _ = percentile(&xs, 50.0);
         assert_eq!(percentile(&xs, 0.0), 1.0);
+    }
+
+    #[test]
+    fn nearest_rank_bounds() {
+        assert_eq!(nearest_rank(0, 50.0), 0);
+        assert_eq!(nearest_rank(1, 99.0), 0);
+        assert_eq!(nearest_rank(101, 50.0), 50);
+        assert_eq!(nearest_rank(101, 99.0), 99);
+        assert_eq!(nearest_rank(5, 100.0), 4);
+        assert_eq!(nearest_rank(5, 200.0), 4, "out-of-range p clamps");
     }
 
     #[test]

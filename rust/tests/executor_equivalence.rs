@@ -30,6 +30,7 @@ fn run_with(name: &str, exec: ExecChoice) -> BenchResult {
         seed: 99,
         exec,
         trace: None,
+        metrics: None,
     };
     b.run(&rc)
 }
@@ -154,6 +155,7 @@ fn serve_bs(exec: ExecChoice, pipeline: bool) -> ServeReport {
         seed: 17,
         exec,
         trace: None,
+        metrics: None,
     };
     serve(w.as_ref(), &rc, 4, pipeline)
 }
@@ -172,6 +174,7 @@ fn warm_session_reexecute_matches_one_shot() {
             seed: 23,
             exec,
             trace: None,
+            metrics: None,
         };
         let oneshot = bench_by_name("VA").unwrap().run(&rc);
         assert!(oneshot.verified);
@@ -230,6 +233,7 @@ fn serve_w(name: &str, exec: ExecChoice, pipeline: bool) -> ServeReport {
         seed: 17,
         exec,
         trace: None,
+        metrics: None,
     };
     serve(w.as_ref(), &rc, 4, pipeline)
 }
@@ -300,6 +304,7 @@ fn sync_shim_reproduces_manual_loop_exactly() {
             seed: 31,
             exec: ExecChoice::Serial,
             trace: None,
+            metrics: None,
         };
         // manual loop: no execute_batch, no queue anywhere
         let ds = w.prepare(&rc);

@@ -14,8 +14,9 @@ fn small_rc(nd: u32, scale_mult: f64) -> impl Fn(&str) -> RunConfig {
         seed: 1234,
         sys: SystemConfig::p21_rank(),
         exec: Default::default(),
-    },
-    trace: None,
+        trace: None,
+        metrics: None,
+    }
 }
 
 #[test]
@@ -62,6 +63,7 @@ fn e19_is_slower_than_p21() {
             sys,
             exec: Default::default(),
             trace: None,
+            metrics: None,
         };
         let p21 = b.run(&mk(SystemConfig::p21_rank()));
         let e19 = b.run(&mk(SystemConfig {

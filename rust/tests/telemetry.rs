@@ -1,0 +1,108 @@
+//! Telemetry determinism contract (`coordinator::telemetry`): metric
+//! snapshots are sampled at *simulated-time* instants of the shared
+//! timeline, never wall clock, so the `metrics/v1` export must be
+//! **byte-identical** across executors, across repeated runs, and the
+//! serialize → parse → serialize loop. Installing a registry must also
+//! leave the modeled schedule itself untouched: a run with metrics on
+//! reports the same `sched/v1` bytes as a run with metrics off.
+
+use prim_pim::coordinator::{
+    parse_metrics, run_sched, PolicyKind, SchedConfig, SchedReport, SloMonitor, Telemetry,
+    TenantSpec,
+};
+use prim_pim::prim::common::ExecChoice;
+
+/// The fixed three-class mix used throughout: streaming (VA),
+/// query-style (BS), and intra-DPU-sync (RED).
+const MIX: &str = "va:1,bs:1,red:1";
+
+fn instrumented_sched(exec: ExecChoice) -> (SchedReport, Telemetry) {
+    let mut tenants = TenantSpec::parse_list(MIX).expect("mix parses");
+    for t in &mut tenants {
+        t.scale = 0.002;
+    }
+    let mut cfg = SchedConfig::new(tenants);
+    cfg.requests = 3;
+    cfg.policy = PolicyKind::Wrr;
+    cfg.rate = 2000.0;
+    cfg.seed = 7;
+    cfg.exec = exec;
+    let tel = Telemetry::new();
+    cfg.metrics = Some(tel.clone());
+    (run_sched(&cfg).expect("scheduler runs"), tel)
+}
+
+/// Serial and parallel fleets walk identical modeled timelines, so every
+/// counter, gauge, histogram bucket, and sampled series point — and
+/// therefore the whole `metrics/v1` document — must match byte for byte.
+#[test]
+fn metrics_v1_bit_identical_across_executors() {
+    let (_, serial) = instrumented_sched(ExecChoice::Serial);
+    let (_, parallel) = instrumented_sched(ExecChoice::Parallel(3));
+    let s = serial.snapshot().to_json();
+    let p = parallel.snapshot().to_json();
+    assert!(!serial.is_empty(), "instrumented run must record metrics");
+    assert_eq!(s, p, "metrics/v1 must not depend on the executor");
+}
+
+/// Same seed, same config ⇒ the same simulated timeline ⇒ the same
+/// export bytes, run after run.
+#[test]
+fn metrics_v1_bit_identical_across_repeated_runs() {
+    let (_, a) = instrumented_sched(ExecChoice::Serial);
+    let (_, b) = instrumented_sched(ExecChoice::Serial);
+    assert_eq!(a.snapshot().to_json(), b.snapshot().to_json());
+}
+
+/// serialize → parse → serialize is the byte identity (`metrics/v1`'s
+/// acceptance property), and the Prometheus view exposes the same
+/// metric families.
+#[test]
+fn metrics_v1_round_trips_byte_identically() {
+    let (_, tel) = instrumented_sched(ExecChoice::Serial);
+    let snap = tel.snapshot();
+    let json = snap.to_json();
+    let reparsed = parse_metrics(&json).expect("metrics/v1 parses");
+    assert_eq!(reparsed.to_json(), json);
+    let prom = snap.to_prometheus();
+    assert!(prom.contains("sched_latency_secs"));
+    assert!(prom.contains("tenant_joules"));
+}
+
+/// Telemetry only *reads* modeled values: turning it on must not perturb
+/// the schedule. The `sched/v1` report bytes with a registry installed
+/// equal the bytes without one.
+#[test]
+fn disabled_metrics_runs_are_bit_identical() {
+    let (with_metrics, _) = instrumented_sched(ExecChoice::Serial);
+    let mut tenants = TenantSpec::parse_list(MIX).expect("mix parses");
+    for t in &mut tenants {
+        t.scale = 0.002;
+    }
+    let mut cfg = SchedConfig::new(tenants);
+    cfg.requests = 3;
+    cfg.policy = PolicyKind::Wrr;
+    cfg.rate = 2000.0;
+    cfg.seed = 7;
+    cfg.exec = ExecChoice::Serial;
+    let without = run_sched(&cfg).expect("scheduler runs");
+    assert_eq!(
+        with_metrics.to_json(),
+        without.to_json(),
+        "a metrics registry must be observation-only"
+    );
+}
+
+/// The SLO monitor reads the snapshot end to end: every tenant in the mix
+/// gets a health row with positive served throughput and slice energy.
+#[test]
+fn slo_health_covers_every_tenant_with_energy() {
+    let (rep, tel) = instrumented_sched(ExecChoice::Serial);
+    let health = SloMonitor::default().evaluate(&tel.snapshot());
+    assert_eq!(health.tenants.len(), rep.tenants.len());
+    for h in &health.tenants {
+        assert!(h.throughput_rps > 0.0, "{}: no served throughput", h.tenant);
+        assert!(h.joules > 0.0, "{}: no slice energy", h.tenant);
+        assert!(h.windows > 0, "{}: no windows evaluated", h.tenant);
+    }
+}

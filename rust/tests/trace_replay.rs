@@ -33,6 +33,7 @@ fn traced_serve(bench: &str, exec: ExecChoice) -> Trace {
         seed: 7,
         exec,
         trace: Some(sink.clone()),
+        metrics: None,
     };
     let rep = serve(w.as_ref(), &rc, 3, true);
     assert!(rep.verified, "{bench}: traced serving must still verify");
@@ -255,6 +256,7 @@ fn synchronous_ops_trace_back_to_back() {
         seed: 7,
         exec: ExecChoice::Serial,
         trace: Some(sink.clone()),
+        metrics: None,
     };
     let rep = serve(w.as_ref(), &rc, 2, false);
     assert!(rep.verified);
