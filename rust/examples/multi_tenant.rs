@@ -37,6 +37,8 @@ fn main() {
             tenants: tenants.clone(),
             trace: None,
             metrics: None,
+            elastic: None,
+            shift: None,
         };
         let rep = run_sched(&cfg).expect("scheduler runs");
         println!(

@@ -3,19 +3,22 @@
 //!
 //! Usage: `perf_gate <prev_dir> <cur_dir>` — both directories may hold
 //! `BENCH_PRIM.json`, `BENCH_OVERLAP.json`, `BENCH_SCHED.json`,
-//! `BENCH_CLUSTER.json`, `BENCH_METRICS.json`, `BENCH_HOTPATH.json`
-//! (the repro CLI / hot-path bench writers). Two rule families:
+//! `BENCH_CLUSTER.json`, `BENCH_METRICS.json`, `BENCH_ELASTIC.json`,
+//! `BENCH_HOTPATH.json` (the repro CLI / hot-path bench writers). Two
+//! rule families:
 //!
 //! * **Modeled seconds** (`BENCH_PRIM`, `BENCH_OVERLAP`, `BENCH_SCHED`,
-//!   `BENCH_CLUSTER`, `BENCH_METRICS`): deterministic outputs of the
-//!   timing model, so any drift beyond float-noise tolerance (default
-//!   1e-6 relative, either direction) fails — the gate doubles as a
-//!   model-change detector. For `SCHED` that covers the multi-tenant
-//!   scheduler's makespan, occupancy, and per-tenant QoS percentiles;
-//!   for `CLUSTER` the sharded benches' per-machine-count makespans and
-//!   network seconds; for `METRICS` the telemetry snapshot — labeled
-//!   occupancy / latency / energy gauges and series sampled on the
-//!   simulated timeline (`metrics/v1`).
+//!   `BENCH_CLUSTER`, `BENCH_METRICS`, `BENCH_ELASTIC`): deterministic
+//!   outputs of the timing model, so any drift beyond float-noise
+//!   tolerance (default 1e-6 relative, either direction) fails — the
+//!   gate doubles as a model-change detector. For `SCHED` that covers
+//!   the multi-tenant scheduler's makespan, occupancy, and per-tenant
+//!   QoS percentiles; for `CLUSTER` the sharded benches'
+//!   per-machine-count makespans and network seconds; for `METRICS` the
+//!   telemetry snapshot — labeled occupancy / latency / energy gauges
+//!   and series sampled on the simulated timeline (`metrics/v1`); for
+//!   `ELASTIC` the autoscaled scheduling run — same report shape plus
+//!   the migration counts, seconds, bytes, and joules.
 //! * **Wallclock** (`BENCH_HOTPATH`): noisy CI runners, so only a
 //!   slowdown past `PERF_GATE_RATIO` (default 1.6×) on an entry's
 //!   `median_secs` — or a speedup in `derived.*` falling below
@@ -215,6 +218,7 @@ pub fn run_gate(prev_dir: &std::path::Path, cur_dir: &std::path::Path, cfg: &Gat
         "BENCH_SCHED.json",
         "BENCH_CLUSTER.json",
         "BENCH_METRICS.json",
+        "BENCH_ELASTIC.json",
     ] {
         match (read(prev_dir, name), read(cur_dir, name)) {
             (Some(p), Some(c)) => violations.extend(check_modeled(name, &p, &c, cfg)),
@@ -328,6 +332,26 @@ mod tests {
         )
     }
 
+    /// The `repro sched --elastic --json` shape: the same `SchedReport`
+    /// document with the elastic header and the per-tenant migration
+    /// bill (`migrations`/`mig_secs`/`mig_bytes`/`mig_joules`).
+    fn elastic_doc(p99: f64, mig_secs: f64) -> String {
+        format!(
+            "{{\"policy\": \"fifo\", \"seed\": 42, \"pipelined\": true, \"elastic\": \"depth\", \
+             \"makespan_secs\": 2.5e-1, \"occupancy\": 7.5e-1, \"total_ranks\": 4, \
+             \"migrations\": 2, \"mig_secs\": {mig_secs:e}, \"mig_bytes\": 8192, \
+             \"mig_joules\": 1.5e-2,\n \
+             \"tenants\": [\n  \
+             {{\"tenant\": 0, \"bench\": \"GEMV\", \"ranks\": 2, \"dpus\": 128, \
+             \"weight\": 1, \"rate_rps\": 4e2, \"requests\": 10, \
+             \"throughput_rps\": 9.5e1, \"p50_secs\": 1e-3, \"p95_secs\": 2e-3, \
+             \"p99_secs\": {p99:e}, \"max_secs\": 4e-3, \"utilization\": 6e-1, \
+             \"cold_secs\": 1e-2, \"warm_secs\": 5e-3, \"migrations\": 1, \
+             \"mig_secs\": {mig_secs:e}, \"mig_bytes\": 8192, \"mig_joules\": 1.5e-2, \
+             \"verified\": true}}\n ]}}\n"
+        )
+    }
+
     /// The `MetricsSnapshot::to_json` shape (`metrics/v1`): entries reuse
     /// one metric name across label sets, so `flatten` must fold the
     /// labels into the key to keep per-tenant values apart.
@@ -429,6 +453,26 @@ mod tests {
         );
     }
 
+    /// Satellite pin: the elastic autoscaling bench file rides the
+    /// modeled rules — QoS-percentile or migration-bill drift in either
+    /// direction fails, bit-identical reruns pass.
+    #[test]
+    fn elastic_report_drift_is_a_modeled_violation() {
+        let cfg = GateCfg::default();
+        let base = elastic_doc(3e-3, 4e-3);
+        assert!(check_modeled("e", &base, &elastic_doc(3e-3, 4e-3), &cfg).is_empty());
+        let v = check_modeled("e", &base, &elastic_doc(2.9e-3, 4e-3), &cfg);
+        assert!(
+            v.iter().any(|s| s.contains("tenants.0.p99_secs")),
+            "hot-tenant QoS drift (even an improvement) caught: {v:?}"
+        );
+        let v = check_modeled("e", &base, &elastic_doc(3e-3, 5e-3), &cfg);
+        assert!(
+            v.iter().any(|s| s.contains("mig_secs")),
+            "migration-bill drift caught: {v:?}"
+        );
+    }
+
     /// Satellite pin: the telemetry snapshot rides the modeled rules —
     /// occupancy-gauge or latency-series drift fails, bit-identical
     /// reruns pass, and same-named entries stay distinguished by labels.
@@ -506,17 +550,18 @@ mod tests {
         let cfg = GateCfg::default();
         // empty current run: every missing current file is a violation
         let (v, _) = run_gate(&prev, &cur, &cfg);
-        assert_eq!(v.len(), 6, "{v:?}");
+        assert_eq!(v.len(), 7, "{v:?}");
         // populated current run with no baselines: notes only
         std::fs::write(cur.join("BENCH_PRIM.json"), PRIM).unwrap();
         std::fs::write(cur.join("BENCH_OVERLAP.json"), "[]").unwrap();
         std::fs::write(cur.join("BENCH_SCHED.json"), sched(2.5e-1, 2e-3)).unwrap();
         std::fs::write(cur.join("BENCH_CLUSTER.json"), cluster(2e-3, 5e-4)).unwrap();
         std::fs::write(cur.join("BENCH_METRICS.json"), metrics_doc(7.5e-1, 3e-3)).unwrap();
+        std::fs::write(cur.join("BENCH_ELASTIC.json"), elastic_doc(3e-3, 4e-3)).unwrap();
         std::fs::write(cur.join("BENCH_HOTPATH.json"), hotpath(0.01, 9.0)).unwrap();
         let (v, notes) = run_gate(&prev, &cur, &cfg);
         assert!(v.is_empty(), "{v:?}");
-        assert_eq!(notes.len(), 6, "{notes:?}");
+        assert_eq!(notes.len(), 7, "{notes:?}");
         // baseline present + injected regression: gate fails
         std::fs::write(prev.join("BENCH_HOTPATH.json"), hotpath(0.001, 9.0)).unwrap();
         let (v, _) = run_gate(&prev, &cur, &cfg);

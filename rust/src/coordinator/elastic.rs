@@ -1,0 +1,572 @@
+//! Elastic autoscaling: live tenant slice resizing with modeled state
+//! migration.
+//!
+//! [`super::PimSet::split_ranks`] fixes tenant slice geometry at launch;
+//! a tenant whose queue explodes after a load shift just misses its
+//! latency targets. This module makes the geometry dynamic, with the
+//! honest-accounting discipline the rest of the simulator enforces:
+//! ranks never teleport between tenants — every reallocation pays a
+//! **modeled migration bill**, because re-provisioned ranks hold none of
+//! the tenant's resident data and the re-push travels the same
+//! serialized host bus (§5.1.1) every other transfer does.
+//!
+//! The split of responsibilities:
+//!
+//! * An [`ElasticPolicy`] decides *whether* and *what* to move. Policies
+//!   read the [`Telemetry`](super::telemetry::Telemetry) series the
+//!   scheduler already samples (`sched_queue_depth`,
+//!   `sched_done_latency`) through an [`ElasticView`] — they do not
+//!   invent private counters. Thrash is damped twice: a policy fires
+//!   only after its trigger condition holds for `hysteresis` consecutive
+//!   decision points, and the scheduler enforces a modeled-seconds
+//!   [`ElasticConfig::cooldown`] between migrations.
+//! * A [`Migrator`] executes a decided move: it resizes the tenant's
+//!   slice ([`super::PimSet::resize_ranks`] bumps the
+//!   [`MramLayout`](super::layout::MramLayout) generation so every
+//!   pre-migration [`Symbol`](super::layout::Symbol) panics on use),
+//!   re-plans the dataset for the new DPU count, and re-loads it through
+//!   the ordinary workload `load` path — so the migration cost is priced
+//!   by the very same `XferModel` arithmetic as a hand-issued re-push,
+//!   bitwise (pinned in `tests/properties.rs`). With a
+//!   [`NetModel`] configured, the move additionally pays a cross-machine
+//!   link leg, as a real [`CmdKind::Net`](super::queue::CmdKind)
+//!   reservation on the shared timeline.
+//! * The scheduler (`coordinator::scheduler`) owns the lifecycle:
+//!   **freeze** (affected tenants stop dispatching) → **drain** (their
+//!   in-flight batches finish) → **migrate** (bus + optional link
+//!   reservations on the shared `Timeline`, typed
+//!   `MigrateDrain`/`MigrateCopy`/`MigrateResume` trace events) →
+//!   **resume** (the new rank lanes re-enter service).
+//!
+//! # Determinism
+//!
+//! Policy evaluation is read-only: it draws no RNG, reserves nothing,
+//! and perturbs no floats. A run in which the policy never fires is
+//! bit-identical to the static scheduler, and runs that do migrate are
+//! bit-identical across executors and repeats of the same seed
+//! (`tests/executor_equivalence.rs`).
+
+use super::cluster::NetModel;
+use super::session::Session;
+use super::telemetry::{Labels, Telemetry};
+use super::TimeBreakdown;
+use crate::prim::common::RunConfig;
+use crate::prim::workload::{Dataset, Workload};
+
+/// One decided reallocation: move `ranks` whole ranks from tenant
+/// `from`'s slice to tenant `to`'s. A *grow* and a *shrink* are the two
+/// halves of the same move; a *steal* is a move whose donor is picked by
+/// the policy rather than volunteered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MoveRanks {
+    /// Donor tenant index (must keep ≥ 1 rank after the move).
+    pub from: usize,
+    /// Receiver tenant index.
+    pub to: usize,
+    /// Whole ranks to move (≥ 1).
+    pub ranks: u32,
+}
+
+/// A scripted move for [`ElasticPolicyKind::Planned`]: fires at the
+/// first decision point at or after `at` modeled seconds. Used by tests
+/// and experiments that need a deterministic grow/shrink schedule
+/// independent of signal thresholds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlannedMove {
+    /// Earliest modeled time this move may fire.
+    pub at: f64,
+    /// The move itself.
+    pub mv: MoveRanks,
+}
+
+/// Read-only window over the scheduler's state that a policy may
+/// consult: current rank geometry plus the PR 9 telemetry series. All
+/// values derive from modeled seconds, so policy decisions are
+/// executor-independent.
+pub struct ElasticView<'a> {
+    /// Current decision point, modeled seconds.
+    pub now: f64,
+    /// Ranks currently owned per tenant (index = tenant).
+    pub ranks: &'a [u32],
+    tel: &'a Telemetry,
+    window: usize,
+}
+
+impl<'a> ElasticView<'a> {
+    /// Assemble a view; `window` is the number of trailing series points
+    /// a signal averages over (the policy's smoothing window).
+    pub fn new(now: f64, ranks: &'a [u32], tel: &'a Telemetry, window: usize) -> Self {
+        ElasticView { now, ranks, tel, window }
+    }
+
+    fn tail_mean(&self, series: &str, tenant: usize) -> Option<f64> {
+        let lbl = Labels::tenant(&format!("t{tenant}"));
+        let tail = self.tel.series_tail(series, &lbl, self.window);
+        if tail.len() < self.window {
+            return None; // not enough signal yet — never fire on a cold series
+        }
+        Some(tail.iter().map(|&(_, v)| v).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// Mean of the trailing `window` samples of the tenant's
+    /// `sched_queue_depth` series (requests arrived but not dispatched).
+    /// `None` until the series holds a full window.
+    pub fn queue_depth(&self, tenant: usize) -> Option<f64> {
+        self.tail_mean("sched_queue_depth", tenant)
+    }
+
+    /// Mean of the trailing `window` points of the tenant's
+    /// `sched_done_latency` series (per-completion end-to-end latency —
+    /// the EWMA-smoothed tail the p99 target watches). `None` until the
+    /// series holds a full window.
+    pub fn done_latency(&self, tenant: usize) -> Option<f64> {
+        self.tail_mean("sched_done_latency", tenant)
+    }
+}
+
+/// A slice-resizing policy: called at scheduler decision points (between
+/// batches), returns at most one move. Implementations must be
+/// deterministic functions of the view (plus their own counters) — no
+/// RNG, no wall clock.
+pub trait ElasticPolicy: Send {
+    /// Short stable name (reports, JSON).
+    fn name(&self) -> &'static str;
+    /// Decide a move, or `None` to leave the geometry alone.
+    fn decide(&mut self, view: &ElasticView) -> Option<MoveRanks>;
+}
+
+/// Pick the receiver/donor pair by a per-tenant signal: receiver is the
+/// tenant with the highest signal, donor the multi-rank tenant with the
+/// lowest. Fires when `receiver ≥ high` and `receiver ≥ ratio · donor`
+/// hold for `hysteresis` consecutive decision points.
+struct ImbalanceTrigger {
+    high: f64,
+    ratio: f64,
+    hysteresis: u32,
+    streak: u32,
+}
+
+impl ImbalanceTrigger {
+    fn decide(
+        &mut self,
+        view: &ElasticView,
+        signal: &dyn Fn(usize) -> Option<f64>,
+    ) -> Option<MoveRanks> {
+        let n = view.ranks.len();
+        let mut rx: Option<(usize, f64)> = None;
+        let mut dn: Option<(usize, f64)> = None;
+        for t in 0..n {
+            let Some(s) = signal(t) else {
+                self.streak = 0;
+                return None; // a cold tenant means the picture is partial
+            };
+            match rx {
+                Some((_, best)) if s <= best => {}
+                _ => rx = Some((t, s)),
+            }
+            if view.ranks[t] > 1 {
+                match dn {
+                    Some((_, best)) if s >= best => {}
+                    _ => dn = Some((t, s)),
+                }
+            }
+        }
+        let (Some((to, hot)), Some((from, cold))) = (rx, dn) else {
+            self.streak = 0;
+            return None;
+        };
+        if from == to || hot < self.high || hot < self.ratio * cold {
+            self.streak = 0;
+            return None;
+        }
+        self.streak += 1;
+        if self.streak < self.hysteresis {
+            return None;
+        }
+        self.streak = 0;
+        Some(MoveRanks { from, to, ranks: 1 })
+    }
+}
+
+/// Queue-depth policy: rebalance toward the tenant whose arrival queue
+/// is deepest (target queue depth signal).
+pub struct DepthPolicy {
+    trigger: ImbalanceTrigger,
+}
+
+impl DepthPolicy {
+    pub fn new(high: f64, ratio: f64, hysteresis: u32) -> Self {
+        DepthPolicy { trigger: ImbalanceTrigger { high, ratio, hysteresis, streak: 0 } }
+    }
+}
+
+impl ElasticPolicy for DepthPolicy {
+    fn name(&self) -> &'static str {
+        "depth"
+    }
+    fn decide(&mut self, view: &ElasticView) -> Option<MoveRanks> {
+        self.trigger.decide(view, &|t| view.queue_depth(t))
+    }
+}
+
+/// Completion-latency policy: rebalance toward the tenant whose smoothed
+/// end-to-end latency is highest (EWMA p99 signal).
+pub struct LatencyPolicy {
+    trigger: ImbalanceTrigger,
+}
+
+impl LatencyPolicy {
+    pub fn new(high: f64, ratio: f64, hysteresis: u32) -> Self {
+        LatencyPolicy { trigger: ImbalanceTrigger { high, ratio, hysteresis, streak: 0 } }
+    }
+}
+
+impl ElasticPolicy for LatencyPolicy {
+    fn name(&self) -> &'static str {
+        "latency"
+    }
+    fn decide(&mut self, view: &ElasticView) -> Option<MoveRanks> {
+        self.trigger.decide(view, &|t| view.done_latency(t))
+    }
+}
+
+/// Scripted policy: replays a fixed move schedule (ignores all signals).
+/// The deterministic workhorse of the bit-identity tests.
+pub struct PlannedPolicy {
+    moves: Vec<PlannedMove>,
+    next: usize,
+}
+
+impl ElasticPolicy for PlannedPolicy {
+    fn name(&self) -> &'static str {
+        "planned"
+    }
+    fn decide(&mut self, view: &ElasticView) -> Option<MoveRanks> {
+        let pm = self.moves.get(self.next)?;
+        if view.now >= pm.at {
+            self.next += 1;
+            return Some(pm.mv);
+        }
+        None
+    }
+}
+
+/// Which [`ElasticPolicy`] to build — the CLI-facing enum (mirrors
+/// `scheduler::PolicyKind`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ElasticPolicyKind {
+    /// [`DepthPolicy`].
+    Depth,
+    /// [`LatencyPolicy`].
+    Latency,
+    /// [`PlannedPolicy`] with the given schedule (not CLI-parseable).
+    Planned(Vec<PlannedMove>),
+}
+
+impl ElasticPolicyKind {
+    /// CLI-parseable kinds.
+    pub const ALL: [&'static str; 2] = ["depth", "latency"];
+
+    pub fn parse(s: &str) -> Option<ElasticPolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "depth" => Some(ElasticPolicyKind::Depth),
+            "latency" => Some(ElasticPolicyKind::Latency),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ElasticPolicyKind::Depth => "depth",
+            ElasticPolicyKind::Latency => "latency",
+            ElasticPolicyKind::Planned(_) => "planned",
+        }
+    }
+}
+
+/// Full elastic configuration carried by `SchedConfig::elastic`.
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    /// Policy to build.
+    pub kind: ElasticPolicyKind,
+    /// Trigger threshold in signal units (requests for `depth`, seconds
+    /// for `latency`).
+    pub high: f64,
+    /// Receiver/donor imbalance ratio that must also hold.
+    pub ratio: f64,
+    /// Consecutive decision points the trigger must hold before firing.
+    pub hysteresis: u32,
+    /// Trailing series samples a signal averages over.
+    pub window: usize,
+    /// Minimum modeled seconds between migrations (measured from the
+    /// end of the previous migration's copy phase).
+    pub cooldown: f64,
+    /// When set, each migration additionally pays a cross-machine link
+    /// leg priced by this model on the shared timeline's `Link(0)` lane
+    /// (the cluster case: the donor ranks live on another machine).
+    pub net: Option<NetModel>,
+}
+
+impl ElasticConfig {
+    /// Kind-appropriate defaults: depth triggers at a mean backlog of 2
+    /// requests, latency at 1 ms smoothed completion latency; both
+    /// require a 2× receiver/donor imbalance sustained for 2 decision
+    /// points, average over 2 samples, and cool down 1 ms between moves.
+    pub fn new(kind: ElasticPolicyKind) -> Self {
+        let high = match kind {
+            ElasticPolicyKind::Latency => 1e-3,
+            _ => 2.0,
+        };
+        ElasticConfig {
+            kind,
+            high,
+            ratio: 2.0,
+            hysteresis: 2,
+            window: 2,
+            cooldown: 1e-3,
+            net: None,
+        }
+    }
+
+    /// Build the policy instance.
+    pub fn build(&self) -> Box<dyn ElasticPolicy> {
+        match &self.kind {
+            ElasticPolicyKind::Depth => {
+                Box::new(DepthPolicy::new(self.high, self.ratio, self.hysteresis))
+            }
+            ElasticPolicyKind::Latency => {
+                Box::new(LatencyPolicy::new(self.high, self.ratio, self.hysteresis))
+            }
+            ElasticPolicyKind::Planned(moves) => {
+                Box::new(PlannedPolicy { moves: clone_sorted(moves), next: 0 })
+            }
+        }
+    }
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig::new(ElasticPolicyKind::Depth)
+    }
+}
+
+fn clone_sorted(moves: &[PlannedMove]) -> Vec<PlannedMove> {
+    let mut v = moves.to_vec();
+    v.sort_by(|a, b| a.at.total_cmp(&b.at));
+    v
+}
+
+/// Modeled price of one tenant's migration, measured — not estimated —
+/// around the re-load.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MigrationCost {
+    /// Exact accounting delta of the re-load (the bus copy lives in
+    /// `cpu_dpu`; `total()` is the bus occupancy the scheduler
+    /// reserves).
+    pub bd: TimeBreakdown,
+    /// Bytes re-pushed host→MRAM.
+    pub bytes: u64,
+    /// Cross-machine link seconds (0 without a [`NetModel`]).
+    pub net_secs: f64,
+}
+
+impl MigrationCost {
+    /// Bus seconds of the copy phase.
+    pub fn bus_secs(&self) -> f64 {
+        self.bd.total()
+    }
+    /// Total modeled seconds of the copy (link leg + bus leg; they
+    /// serialize — the state crosses the wire before it can be pushed).
+    pub fn secs(&self) -> f64 {
+        self.net_secs + self.bus_secs()
+    }
+}
+
+/// Executes decided moves: resizes a tenant's slice and re-loads its
+/// dataset, measuring the true modeled cost. The scheduler owns the
+/// surrounding freeze/drain/resume choreography and the timeline
+/// reservations; the `Migrator` owns the state mechanics, so tests can
+/// drive a migration directly against a bare `Session`.
+#[derive(Clone, Debug, Default)]
+pub struct Migrator {
+    /// Optional cross-machine leg (see [`ElasticConfig::net`]).
+    pub net: Option<NetModel>,
+}
+
+impl Migrator {
+    /// Re-home `session`'s slice to `n_ranks` ranks at `rank0` and
+    /// re-push its resident state: re-provisions the DPUs (bumping the
+    /// layout generation so pre-migration symbols panic), re-plans the
+    /// dataset under `rc` (whose `n_dpus` must already reflect the new
+    /// geometry), and runs the workload's ordinary `load`. Returns the
+    /// new dataset and the measured cost.
+    ///
+    /// The cost is measured from a **zero** metrics baseline (the
+    /// accumulated serving breakdown is set aside and re-added after),
+    /// not as an accumulate-then-subtract delta: floating-point addition
+    /// does not cancel exactly, and the bitwise pin in
+    /// `tests/properties.rs` — migration cost ≡ a hand-issued re-push on
+    /// a fresh identically-homed fleet — is the module's honesty
+    /// guarantee.
+    pub fn migrate(
+        &self,
+        session: &mut Session,
+        workload: &dyn Workload,
+        rc: &RunConfig,
+        rank0: u32,
+        n_ranks: u32,
+    ) -> (Dataset, MigrationCost) {
+        assert_eq!(
+            rc.n_dpus,
+            n_ranks * rc.sys.dpus_per_rank(),
+            "RunConfig::n_dpus must match the post-migration geometry"
+        );
+        let saved = session.set.metrics;
+        session.set.reset_metrics();
+        session.rebind_ranks(rank0, n_ranks);
+        let dataset = workload.prepare(rc);
+        workload.load(session, &dataset);
+        let bd = session.set.metrics;
+        let mut restored = saved;
+        restored.add(&bd);
+        session.set.metrics = restored;
+        let bytes = bd.bytes_to_dpu;
+        let net_secs = self.net.as_ref().map_or(0.0, |n| n.xfer_secs(bytes));
+        (dataset, MigrationCost { bd, bytes, net_secs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view_tel(depths: &[(usize, &[f64])]) -> Telemetry {
+        let tel = Telemetry::default();
+        for &(t, vals) in depths {
+            for (i, &v) in vals.iter().enumerate() {
+                tel.sample(
+                    "sched_queue_depth",
+                    Labels::tenant(&format!("t{t}")),
+                    i as f64,
+                    v,
+                );
+            }
+        }
+        tel
+    }
+
+    #[test]
+    fn depth_policy_needs_hysteresis_and_imbalance() {
+        let tel = view_tel(&[(0, &[6.0, 6.0]), (1, &[0.0, 0.0])]);
+        let ranks = [1u32, 2];
+        let mut p = DepthPolicy::new(2.0, 2.0, 2);
+        let v = ElasticView::new(0.0, &ranks, &tel, 2);
+        // First breach arms the trigger, second fires it.
+        assert_eq!(p.decide(&v), None);
+        assert_eq!(
+            p.decide(&v),
+            Some(MoveRanks { from: 1, to: 0, ranks: 1 })
+        );
+        // After firing the streak resets.
+        assert_eq!(p.decide(&v), None);
+    }
+
+    #[test]
+    fn depth_policy_never_fires_below_threshold_or_on_cold_series() {
+        let ranks = [1u32, 2];
+        // Balanced load: imbalance ratio not met.
+        let tel = view_tel(&[(0, &[3.0, 3.0]), (1, &[2.0, 2.0])]);
+        let mut p = DepthPolicy::new(2.0, 2.0, 1);
+        assert_eq!(p.decide(&ElasticView::new(0.0, &ranks, &tel, 2)), None);
+        // Hot but short series: window not yet full.
+        let tel = view_tel(&[(0, &[9.0]), (1, &[0.0])]);
+        assert_eq!(p.decide(&ElasticView::new(0.0, &ranks, &tel, 2)), None);
+    }
+
+    #[test]
+    fn depth_policy_never_drains_a_single_rank_donor() {
+        // The only cold tenant has 1 rank — no eligible donor.
+        let tel = view_tel(&[(0, &[6.0, 6.0]), (1, &[0.0, 0.0])]);
+        let ranks = [2u32, 1];
+        let mut p = DepthPolicy::new(2.0, 2.0, 1);
+        // Donor search skips t1 (1 rank); t0 is both receiver and the
+        // only multi-rank tenant, so no move.
+        assert_eq!(p.decide(&ElasticView::new(0.0, &ranks, &tel, 2)), None);
+    }
+
+    #[test]
+    fn interrupted_streak_restarts() {
+        let hot = view_tel(&[(0, &[6.0, 6.0]), (1, &[0.0, 0.0])]);
+        let cold = view_tel(&[(0, &[0.0, 0.0]), (1, &[0.0, 0.0])]);
+        let ranks = [1u32, 2];
+        let mut p = DepthPolicy::new(2.0, 2.0, 2);
+        assert_eq!(p.decide(&ElasticView::new(0.0, &ranks, &hot, 2)), None);
+        // Condition lapses — the armed streak must reset…
+        assert_eq!(p.decide(&ElasticView::new(0.0, &ranks, &cold, 2)), None);
+        // …so one more breach is not enough.
+        assert_eq!(p.decide(&ElasticView::new(0.0, &ranks, &hot, 2)), None);
+        assert!(p.decide(&ElasticView::new(0.0, &ranks, &hot, 2)).is_some());
+    }
+
+    #[test]
+    fn latency_policy_reads_done_latency_series() {
+        let tel = Telemetry::default();
+        for (t, lat) in [(0usize, 5e-3), (1usize, 1e-4)] {
+            for i in 0..2 {
+                tel.sample(
+                    "sched_done_latency",
+                    Labels::tenant(&format!("t{t}")),
+                    i as f64,
+                    lat,
+                );
+            }
+        }
+        let ranks = [1u32, 2];
+        let mut p = LatencyPolicy::new(1e-3, 2.0, 1);
+        assert_eq!(
+            p.decide(&ElasticView::new(0.0, &ranks, &tel, 2)),
+            Some(MoveRanks { from: 1, to: 0, ranks: 1 })
+        );
+    }
+
+    #[test]
+    fn planned_policy_fires_in_time_order() {
+        let mv1 = MoveRanks { from: 1, to: 0, ranks: 1 };
+        let mv2 = MoveRanks { from: 0, to: 1, ranks: 1 };
+        let cfg = ElasticConfig::new(ElasticPolicyKind::Planned(vec![
+            PlannedMove { at: 2.0, mv: mv2 },
+            PlannedMove { at: 1.0, mv: mv1 },
+        ]));
+        let mut p = cfg.build();
+        let tel = Telemetry::default();
+        let ranks = [2u32, 2];
+        let v = |now| ElasticView::new(now, &ranks, &tel, 2);
+        assert_eq!(p.decide(&v(0.5)), None);
+        assert_eq!(p.decide(&v(1.0)), Some(mv1), "schedule is sorted by time");
+        assert_eq!(p.decide(&v(1.5)), None);
+        assert_eq!(p.decide(&v(3.0)), Some(mv2));
+        assert_eq!(p.decide(&v(9.0)), None, "schedule exhausted");
+    }
+
+    #[test]
+    fn kind_parses_cli_names() {
+        assert_eq!(ElasticPolicyKind::parse("depth"), Some(ElasticPolicyKind::Depth));
+        assert_eq!(ElasticPolicyKind::parse("LATENCY"), Some(ElasticPolicyKind::Latency));
+        assert_eq!(ElasticPolicyKind::parse("planned"), None, "not CLI-constructible");
+        assert_eq!(ElasticPolicyKind::parse("nope"), None);
+        for name in ElasticPolicyKind::ALL {
+            assert_eq!(ElasticPolicyKind::parse(name).unwrap().name(), name);
+        }
+    }
+
+    #[test]
+    fn migration_cost_secs_serializes_link_and_bus() {
+        let c = MigrationCost {
+            bd: TimeBreakdown { cpu_dpu: 2e-3, ..Default::default() },
+            bytes: 1 << 20,
+            net_secs: 5e-4,
+        };
+        assert_eq!(c.bus_secs(), 2e-3);
+        assert_eq!(c.secs(), 2e-3 + 5e-4);
+    }
+}

@@ -33,9 +33,9 @@
 
 pub mod accounting;
 pub mod cluster;
+pub mod elastic;
 pub mod executor;
 pub mod layout;
-pub mod metrics;
 pub mod partition;
 pub mod queue;
 pub mod scheduler;
@@ -50,6 +50,10 @@ use crate::util::pod::Pod;
 use std::sync::Arc;
 
 pub use cluster::{Cluster, ClusterConfig, ClusterReport, NetModel, Topology};
+pub use elastic::{
+    DepthPolicy, ElasticConfig, ElasticPolicy, ElasticPolicyKind, ElasticView, LatencyPolicy,
+    MigrationCost, Migrator, MoveRanks, PlannedMove,
+};
 pub use executor::{
     ExecChoice, FleetExecutor, FleetSlot, LaunchJob, ParallelExecutor, SerialExecutor,
 };
@@ -60,8 +64,8 @@ pub use queue::{
     Access, CmdId, CmdKind, CmdMeta, CmdQueue, Lane, RegionSet, Schedule, ScheduleStats, Timeline,
 };
 pub use scheduler::{
-    run_sched, FleetSlice, PolicyKind, SchedConfig, SchedReport, Scheduler, TenantReport,
-    TenantSpec,
+    run_sched, FleetSlice, LoadShift, PolicyKind, SchedConfig, SchedReport, Scheduler,
+    TenantReport, TenantSpec,
 };
 pub use session::Session;
 pub use telemetry::{
@@ -667,6 +671,28 @@ impl PimSet {
                 }
             })
             .collect()
+    }
+
+    /// Resize this slice in place to `n_ranks` whole ranks rooted at
+    /// physical rank `rank0` — the mechanism behind elastic autoscaling
+    /// (see [`elastic`]). The DPUs are re-provisioned fresh (resident
+    /// MRAM contents do **not** teleport to the new geometry) and the
+    /// layout generation is bumped, so every symbol allocated before
+    /// the resize panics on use: the caller *must* re-plan and re-load
+    /// its dataset, paying the migration bill as real modeled bus
+    /// traffic. Metrics keep accumulating across the resize so the
+    /// migration cost lands in the same accumulators the serving
+    /// window uses (separable via [`TimeBreakdown::delta`]).
+    pub fn resize_ranks(&mut self, rank0: u32, n_ranks: u32) {
+        assert!(n_ranks >= 1, "a slice needs at least one rank");
+        assert!(
+            self.cmd_queue.is_none(),
+            "cannot resize a slice with an open command queue"
+        );
+        let per = self.cfg.dpus_per_rank();
+        self.dpus = (0..n_ranks * per).map(|_| Dpu::new(self.cfg.dpu)).collect();
+        self.rank0 = rank0;
+        self.layout.reset();
     }
 }
 

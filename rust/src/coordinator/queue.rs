@@ -103,6 +103,18 @@ pub enum CmdKind {
     /// Ordered only by explicit `after` edges — its data flow is
     /// host-side and invisible to the MRAM region model.
     Net,
+    /// Elastic migration, drain phase: the window between the resize
+    /// decision and the moment the affected slices fall idle. Emitted
+    /// by the scheduler's `Migrator` (never enqueued in a `CmdQueue`);
+    /// occupies no lane of its own.
+    MigrateDrain,
+    /// Elastic migration, copy phase: re-pushing a resized tenant's
+    /// resident symbols over the shared bus. Bus-lane traffic like
+    /// [`CmdKind::Push`].
+    MigrateCopy,
+    /// Elastic migration, resume phase: the instant a resized slice
+    /// re-enters service on its new rank span. Zero modeled seconds.
+    MigrateResume,
 }
 
 /// Declared MRAM footprint of a launch: the byte regions its kernel
@@ -1470,7 +1482,12 @@ pub(crate) fn lane_for(c: &CmdMeta, dpus_per_rank: usize, n_ranks: usize) -> Opt
             Lane::MachineHost(c.machine)
         }),
         CmdKind::Net => Some(Lane::Link(c.machine)),
-        CmdKind::Fence => None,
+        CmdKind::MigrateCopy => Some(if c.machine == 0 {
+            Lane::Bus
+        } else {
+            Lane::MachineBus(c.machine)
+        }),
+        CmdKind::Fence | CmdKind::MigrateDrain | CmdKind::MigrateResume => None,
         CmdKind::Launch => {
             let per = dpus_per_rank.max(1);
             let lo = (c.dpus.start / per) as u32;

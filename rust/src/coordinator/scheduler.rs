@@ -60,6 +60,7 @@
 //! tenants — so a single-tenant stream is policy-invariant
 //! (`tests/executor_equivalence.rs`).
 
+use super::elastic::{ElasticConfig, ElasticPolicy, ElasticView, Migrator, MoveRanks};
 use super::queue::{CmdKind, Lane, Timeline};
 use super::telemetry::{Labels, Telemetry};
 use super::trace::{LaneTag, TraceEvent, TraceSink};
@@ -199,19 +200,53 @@ pub struct Arrival {
     pub at: f64,
 }
 
+/// A mid-run load shift for the elastic scenarios: one tenant's arrival
+/// rate is multiplied by `factor` from modeled time `at` onward. The
+/// shifted stream shares its RNG draws with the unshifted one, so the
+/// pre-shift arrival prefix is bit-identical — the shift changes only
+/// how fast the exponential gaps play out after `at`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LoadShift {
+    /// Tenant index the shift applies to.
+    pub tenant: usize,
+    /// Modeled time the new rate takes effect.
+    pub at: f64,
+    /// Rate multiplier from `at` onward (e.g. `8.0` = hot, `0.25` =
+    /// cooled off).
+    pub factor: f64,
+}
+
 /// Deterministic open-loop arrival stream for one tenant: exponential
 /// inter-arrival times at `rate` req/s (Poisson process), request
 /// payload seeds from [`Request::stream`]. `rate <= 0` produces a burst
 /// (everything arrives at t = 0).
 pub fn gen_arrivals(tenant: usize, seed: u64, n: usize, rate: f64) -> VecDeque<Arrival> {
+    gen_arrivals_shifted(tenant, seed, n, rate, None)
+}
+
+/// [`gen_arrivals`] with an optional piecewise rate: gaps drawn while
+/// the clock is past `shift.0` use `rate * shift.1`. With `shift =
+/// None` the computation is identical to the unshifted generator,
+/// bitwise.
+pub fn gen_arrivals_shifted(
+    tenant: usize,
+    seed: u64,
+    n: usize,
+    rate: f64,
+    shift: Option<(f64, f64)>,
+) -> VecDeque<Arrival> {
     let mut rng = Rng::new(seed ^ 0x5BD1_E995_9D1B_54D5);
     let mut at = 0.0f64;
     Request::stream(seed, n)
         .into_iter()
         .map(|req| {
             if rate > 0.0 {
+                let r = match shift {
+                    Some((t0, factor)) if at >= t0 => rate * factor,
+                    _ => rate,
+                };
                 // inverse-CDF exponential; f64() < 1 so ln is finite
-                at += -(1.0 - rng.f64()).ln() / rate;
+                at += -(1.0 - rng.f64()).ln() / r;
             }
             Arrival { tenant, req, at }
         })
@@ -380,6 +415,16 @@ pub struct SchedConfig {
     /// shared timeline, and latency histograms (see
     /// `coordinator::telemetry`). `None` = off, zero cost.
     pub metrics: Option<Telemetry>,
+    /// Elastic autoscaling (`--elastic [policy]`): live rank
+    /// reallocation between tenants with modeled migration cost (see
+    /// `coordinator::elastic`). `None` = static slices. An elastic run
+    /// always carries a telemetry registry (the policy's sensor input);
+    /// when `metrics` is `None` an internal one is created.
+    pub elastic: Option<ElasticConfig>,
+    /// Mid-run load shift (`--shift t:at:factor`): multiply tenant
+    /// `t`'s arrival rate by `factor` from modeled time `at` onward —
+    /// the scenario elastic policies exist for.
+    pub shift: Option<LoadShift>,
 }
 
 impl SchedConfig {
@@ -395,6 +440,8 @@ impl SchedConfig {
             exec: ExecChoice::Auto,
             trace: None,
             metrics: None,
+            elastic: None,
+            shift: None,
         }
     }
 }
@@ -446,8 +493,23 @@ pub struct TenantReport {
     /// window: chips active during its kernel seconds, idling for the
     /// rest of the machine makespan, plus bus energy for its bytes
     /// ([`EnergyModel::slice_joules`]). Cold load is excluded — clock 0
-    /// is "all tenants resident".
+    /// is "all tenants resident"; migration re-loads are excluded too
+    /// (they are billed separately below).
     pub joules: f64,
+    /// Elastic migrations this tenant underwent (slice geometry
+    /// changes — grows, shrinks, and re-homes alike).
+    pub migrations: u32,
+    /// Accumulated migration bill: the re-load breakdown of every
+    /// resize, measured through the ordinary transfer path and kept out
+    /// of `warm` (the bus copy lives in `mig.cpu_dpu`; `mig.bytes_to_dpu`
+    /// is the re-pushed volume).
+    pub mig: TimeBreakdown,
+    /// Cross-machine link seconds its migrations paid (0 unless the
+    /// elastic config models a network leg).
+    pub mig_net_secs: f64,
+    /// Modeled energy (J) of its migration copies
+    /// ([`EnergyModel::pim_joules`] over `mig`).
+    pub mig_joules: f64,
     /// Last retrieved output checked against the native reference.
     pub verified: bool,
 }
@@ -477,6 +539,12 @@ impl TenantReport {
             self.busy / makespan
         }
     }
+
+    /// Total modeled seconds this tenant's migrations occupied shared
+    /// resources (bus copy + optional link leg).
+    pub fn mig_secs(&self) -> f64 {
+        self.mig.total() + self.mig_net_secs
+    }
 }
 
 /// Outcome of a multi-tenant scheduling run.
@@ -489,6 +557,9 @@ pub struct SchedReport {
     /// tenants resident).
     pub makespan: f64,
     pub total_ranks: u32,
+    /// Elastic policy name when autoscaling was on (`None` = static
+    /// slices; JSON spells it `"static"`).
+    pub elastic: Option<&'static str>,
 }
 
 impl SchedReport {
@@ -503,19 +574,46 @@ impl SchedReport {
         busy_rank_secs / (self.makespan * self.total_ranks as f64)
     }
 
+    /// Machine-wide migration count.
+    pub fn migrations(&self) -> u64 {
+        self.tenants.iter().map(|t| t.migrations as u64).sum()
+    }
+
+    /// Machine-wide bytes re-pushed by migrations.
+    pub fn mig_bytes(&self) -> u64 {
+        self.tenants.iter().map(|t| t.mig.bytes_to_dpu).sum()
+    }
+
+    /// Machine-wide modeled seconds migrations occupied shared resources.
+    pub fn mig_secs(&self) -> f64 {
+        self.tenants.iter().map(TenantReport::mig_secs).sum()
+    }
+
+    /// Machine-wide modeled energy (J) of migration copies.
+    pub fn mig_joules(&self) -> f64 {
+        self.tenants.iter().map(|t| t.mig_joules).sum()
+    }
+
     /// Machine-readable record (`results/BENCH_SCHED.json`). Rust float
     /// formatting is shortest-roundtrip, so equal JSON ⇔ bit-equal
     /// modeled times — the determinism tests compare these strings.
     pub fn to_json(&self) -> String {
         let mut out = format!(
             "{{\"policy\": \"{}\", \"seed\": {}, \"pipelined\": {}, \
-             \"makespan_secs\": {:e}, \"occupancy\": {:e}, \"total_ranks\": {},\n \"tenants\": [\n",
+             \"makespan_secs\": {:e}, \"occupancy\": {:e}, \"total_ranks\": {},\n \
+             \"elastic\": \"{}\", \"migrations\": {}, \"mig_secs\": {:e}, \
+             \"mig_bytes\": {}, \"mig_joules\": {:e},\n \"tenants\": [\n",
             self.policy,
             self.seed,
             self.pipelined,
             self.makespan,
             self.occupancy(),
             self.total_ranks,
+            self.elastic.unwrap_or("static"),
+            self.migrations(),
+            self.mig_secs(),
+            self.mig_bytes(),
+            self.mig_joules(),
         );
         for (i, t) in self.tenants.iter().enumerate() {
             let l = t.latency_summary();
@@ -525,7 +623,9 @@ impl SchedReport {
                  \"throughput_rps\": {:e}, \"p50_secs\": {:e}, \"p95_secs\": {:e}, \
                  \"p99_secs\": {:e}, \"max_secs\": {:e},\n   \
                  \"utilization\": {:e}, \"cold_secs\": {:e}, \"warm_secs\": {:e}, \
-                 \"joules\": {:e}, \"verified\": {}}}{}\n",
+                 \"joules\": {:e},\n   \
+                 \"migrations\": {}, \"mig_secs\": {:e}, \"mig_bytes\": {}, \
+                 \"mig_joules\": {:e}, \"verified\": {}}}{}\n",
                 t.slice.tenant,
                 t.bench,
                 t.slice.n_ranks,
@@ -542,6 +642,10 @@ impl SchedReport {
                 t.cold.total(),
                 t.warm.total(),
                 t.joules,
+                t.migrations,
+                t.mig_secs(),
+                t.mig.bytes_to_dpu,
+                t.mig_joules,
                 t.verified,
                 if i + 1 < self.tenants.len() { "," } else { "" },
             ));
@@ -577,6 +681,16 @@ struct Tenant {
     estimate: f64,
     served: u64,
     last_out: Option<Output>,
+    /// Migration bill (see [`TenantReport::mig`]); all zero when static.
+    mig: TimeBreakdown,
+    migrations: u32,
+    mig_net_secs: f64,
+    mig_joules: f64,
+    /// Verification verdict of the last output retrieved *before* a
+    /// migration, checked against the dataset it was actually served
+    /// from (a migration repartitions the dataset, so the check must
+    /// not be deferred across one).
+    pre_mig_verified: Option<bool>,
 }
 
 impl Tenant {
@@ -604,6 +718,36 @@ struct PendingPull {
     kernel_ev: Option<u64>,
 }
 
+/// A decided rank move waiting for its affected tenants to drain.
+/// "Affected" = every tenant whose slice geometry changes under the
+/// re-tiled layout (slices stay contiguous in tenant order, so a move
+/// can re-home bystanders between donor and receiver — they pay too,
+/// honestly).
+struct PendingMove {
+    mv: MoveRanks,
+    /// Decision instant (modeled seconds) — the drain phase starts here.
+    decided_at: f64,
+    /// Tenants whose geometry changes, in tenant order.
+    affected: Vec<usize>,
+    /// Post-move rank allocation for every tenant.
+    new_ranks: Vec<u32>,
+}
+
+/// Elastic autoscaling state threaded through the serving loop: the
+/// policy (sensor reader), the migrator (state mechanics), and the
+/// freeze → drain → migrate → resume bookkeeping.
+struct ElasticRun {
+    cfg: ElasticConfig,
+    policy: Box<dyn ElasticPolicy>,
+    migrator: Migrator,
+    pending: Option<PendingMove>,
+    /// Modeled end of the last migration's copy phase (cooldown anchor).
+    last_end: f64,
+    /// Last evaluated decision instant (one policy evaluation per
+    /// distinct modeled time).
+    last_eval: f64,
+}
+
 /// The multi-tenant serving loop: rank-sliced sessions, one shared
 /// resource timeline (bus + rank lanes, from `coordinator::queue`), a
 /// pluggable arbitration policy. Build with [`Scheduler::build`], run to
@@ -626,10 +770,15 @@ pub struct Scheduler {
     trace: Option<TraceSink>,
     /// Telemetry registry (`--metrics`), if live metrics are on. Every
     /// record below reads modeled values the run computes anyway, so an
-    /// instrumented run is bit-identical to a bare one.
+    /// instrumented run is bit-identical to a bare one. Elastic runs
+    /// always carry one — it is the policy's sensor input.
     telemetry: Option<Telemetry>,
     /// Machine config the fleet was allocated on (energy accounting).
     sys: SystemConfig,
+    /// Executor choice, kept for migration-time dataset re-preparation.
+    exec: ExecChoice,
+    /// Elastic autoscaling state (`None` = static slices).
+    elastic: Option<ElasticRun>,
 }
 
 impl Scheduler {
@@ -659,8 +808,27 @@ impl Scheduler {
                 sys.n_dpus()
             );
         }
+        if let Some(s) = &cfg.shift {
+            if s.tenant >= cfg.tenants.len() {
+                anyhow::bail!(
+                    "--shift targets tenant {} but the mix has {}",
+                    s.tenant,
+                    cfg.tenants.len()
+                );
+            }
+            if s.factor <= 0.0 {
+                anyhow::bail!("--shift factor must be > 0 (got {})", s.factor);
+            }
+        }
+        // an elastic policy needs the telemetry series as sensor input,
+        // so elastic runs get an internal registry when --metrics is off
+        let telemetry = match (&cfg.metrics, &cfg.elastic) {
+            (Some(tel), _) => Some(tel.clone()),
+            (None, Some(_)) => Some(Telemetry::default()),
+            (None, None) => None,
+        };
         let mut parent = PimSet::allocate_with(sys.clone(), total_dpus, cfg.exec.build());
-        if let Some(tel) = &cfg.metrics {
+        if let Some(tel) = &telemetry {
             parent = parent.with_telemetry(tel.clone());
         }
         let sets = parent.split_ranks(&ranks);
@@ -696,8 +864,13 @@ impl Scheduler {
             let cold = session.set.metrics;
             session.set.reset_metrics();
             let rate = if spec.rate > 0.0 { spec.rate } else { cfg.rate };
-            let queue = gen_arrivals(slice.tenant, tseed, cfg.requests, rate);
-            if let Some(tel) = &cfg.metrics {
+            let shift = match &cfg.shift {
+                Some(s) if s.tenant == tenant_idx => Some((s.at, s.factor)),
+                _ => None,
+            };
+            let queue =
+                gen_arrivals_shifted(slice.tenant, tseed, cfg.requests, rate, shift);
+            if let Some(tel) = &telemetry {
                 let name = tenant_name(tenant_idx);
                 let lbl = Labels::tenant(&name).with_bench(&spec.bench);
                 tel.counter_add("sched_arrivals", lbl, cfg.requests as u64);
@@ -719,6 +892,11 @@ impl Scheduler {
                 estimate: 0.0,
                 served: 0,
                 last_out: None,
+                mig: TimeBreakdown::default(),
+                migrations: 0,
+                mig_net_secs: 0.0,
+                mig_joules: 0.0,
+                pre_mig_verified: None,
             });
         }
         if let Some(sink) = &cfg.trace {
@@ -736,18 +914,30 @@ impl Scheduler {
             pulls: Vec::new(),
             seq: 0,
             trace: cfg.trace.clone(),
-            telemetry: cfg.metrics.clone(),
+            telemetry,
             sys,
+            exec: cfg.exec,
+            elastic: cfg.elastic.as_ref().map(|ec| ElasticRun {
+                cfg: ec.clone(),
+                policy: ec.build(),
+                migrator: Migrator { net: ec.net.clone() },
+                pending: None,
+                last_end: f64::NEG_INFINITY,
+                last_eval: f64::NEG_INFINITY,
+            }),
         })
     }
 
     /// Drive every queued request to completion and report QoS.
     pub fn run(mut self) -> SchedReport {
         loop {
-            // earliest time any tenant's head request could take the bus
+            // an armed resize executes the moment its slices drain
+            self.try_migrate();
+            // earliest time any tenant's head request could take the bus;
+            // tenants frozen by a pending resize don't dispatch
             let mut t_push = f64::INFINITY;
-            for tn in &self.tenants {
-                if tn.in_flight || tn.queue.is_empty() {
+            for (i, tn) in self.tenants.iter().enumerate() {
+                if tn.in_flight || tn.queue.is_empty() || self.frozen(i) {
                     continue;
                 }
                 let slice_free = self.timeline.free_at(&tn.lane());
@@ -787,13 +977,24 @@ impl Scheduler {
                 self.serve_pull(pi);
                 continue;
             }
+            // between batches: give the elastic policy one look at this
+            // decision instant before committing the bus to a new push
+            if self.maybe_decide(now) {
+                continue;
+            }
             let timeline = &self.timeline;
+            let pending = self.elastic.as_ref().and_then(|e| e.pending.as_ref());
             let feasible: Vec<Candidate> = self
                 .tenants
                 .iter()
                 .enumerate()
-                .filter(|(_, tn)| {
-                    !tn.in_flight
+                .filter(|(i, tn)| {
+                    let froze = match pending {
+                        Some(p) => p.affected.contains(i),
+                        None => false,
+                    };
+                    !froze
+                        && !tn.in_flight
                         && !tn.queue.is_empty()
                         && tn.queue[0].at.max(timeline.free_at(&tn.lane())) <= now
                 })
@@ -814,6 +1015,215 @@ impl Scheduler {
             self.dispatch(t, want, now);
         }
         self.finish()
+    }
+
+    /// Whether tenant `t` is frozen by a pending resize: affected
+    /// tenants take no new dispatches until the move executes.
+    fn frozen(&self, t: usize) -> bool {
+        if let Some(e) = &self.elastic {
+            if let Some(p) = &e.pending {
+                return p.affected.contains(&t);
+            }
+        }
+        false
+    }
+
+    /// Give the elastic policy one look at decision instant `now`
+    /// (between batches, never mid-flight). Returns `true` when a move
+    /// was armed, so the caller re-enters the loop and the freeze takes
+    /// effect before the next dispatch.
+    fn maybe_decide(&mut self, now: f64) -> bool {
+        let Some(e) = &mut self.elastic else { return false };
+        if e.pending.is_some()
+            || now <= e.last_eval
+            || now < e.last_end + e.cfg.cooldown
+        {
+            return false;
+        }
+        e.last_eval = now;
+        let ranks: Vec<u32> =
+            self.tenants.iter().map(|t| t.slice.n_ranks).collect();
+        let tel = self
+            .telemetry
+            .as_ref()
+            .expect("elastic runs always carry a telemetry registry");
+        let view = ElasticView::new(now, &ranks, tel, e.cfg.window);
+        let Some(mv) = e.policy.decide(&view) else { return false };
+        // a policy proposing an impossible move is a bug — fail loud
+        assert!(
+            mv.from != mv.to
+                && mv.ranks >= 1
+                && mv.from < ranks.len()
+                && mv.to < ranks.len()
+                && ranks[mv.from] > mv.ranks,
+            "elastic policy {} proposed an invalid move {mv:?} over ranks {ranks:?}",
+            e.policy.name(),
+        );
+        let mut new_ranks = ranks.clone();
+        new_ranks[mv.from] -= mv.ranks;
+        new_ranks[mv.to] += mv.ranks;
+        // slices stay contiguous in tenant order, so re-tiling can
+        // re-home bystanders between donor and receiver — every tenant
+        // whose geometry changes is affected and must drain
+        let per = self.sys.dpus_per_rank();
+        let old_slices = carve_slices(per, &ranks);
+        let new_slices = carve_slices(per, &new_ranks);
+        let affected: Vec<usize> = (0..ranks.len())
+            .filter(|&i| {
+                old_slices[i].rank0 != new_slices[i].rank0
+                    || old_slices[i].n_ranks != new_slices[i].n_ranks
+            })
+            .collect();
+        e.pending = Some(PendingMove { mv, decided_at: now, affected, new_ranks });
+        true
+    }
+
+    /// Execute an armed resize once every affected tenant has drained
+    /// (no batch in flight): freeze already happened at decision time,
+    /// the drain window ends when the affected slices' lanes free up,
+    /// then each affected tenant's resident state is re-pushed over the
+    /// shared bus (and the modeled network link, on multi-machine
+    /// fleets) into its new slice, and serving resumes. The re-push is
+    /// priced by the same transfer model as any other push — migration
+    /// is real modeled traffic, not a fudge factor.
+    fn try_migrate(&mut self) {
+        let ready = match &self.elastic {
+            Some(e) => match &e.pending {
+                Some(p) => p.affected.iter().all(|&i| !self.tenants[i].in_flight),
+                None => return,
+            },
+            None => return,
+        };
+        if !ready {
+            return;
+        }
+        let e = self.elastic.as_mut().unwrap();
+        let p = e.pending.take().unwrap();
+        let migrator = e.migrator.clone();
+        let per = self.sys.dpus_per_rank();
+        let new_slices = carve_slices(per, &p.new_ranks);
+        // the drain window closes when every affected slice's lane is
+        // free (their pulls have left the machine)
+        let mut drain_end = p.decided_at;
+        for &i in &p.affected {
+            drain_end = drain_end.max(self.timeline.free_at(&self.tenants[i].lane()));
+        }
+        let mut clock = drain_end;
+        for &i in &p.affected {
+            let tseed = self.seed ^ (i as u64 + 1).wrapping_mul(GOLDEN);
+            let ns = new_slices[i];
+            let old = self.tenants[i].slice;
+            let rc = RunConfig {
+                sys: self.sys.clone(),
+                n_dpus: ns.n_dpus,
+                n_tasklets: self.tenants[i].session.n_tasklets,
+                scale: self.tenants[i].spec.scale,
+                seed: tseed,
+                exec: self.exec,
+                trace: None,
+                metrics: None,
+            };
+            let tn = &mut self.tenants[i];
+            // a migration repartitions the dataset, so the deferred
+            // verification of the last served output must happen now,
+            // against the dataset it was actually served from
+            if let Some(out) = tn.last_out.take() {
+                tn.pre_mig_verified = Some(tn.workload.verify(&tn.dataset, &out));
+            }
+            let (dataset, cost) = {
+                let Tenant { workload, session, .. } = tn;
+                migrator.migrate(session, workload.as_ref(), &rc, ns.rank0, ns.n_ranks)
+            };
+            let tn = &mut self.tenants[i];
+            tn.dataset = dataset;
+            tn.slice = ns;
+            tn.mig.add(&cost.bd);
+            tn.migrations += 1;
+            tn.mig_net_secs += cost.net_secs;
+            tn.mig_joules +=
+                EnergyModel::default().pim_joules(&self.sys, ns.n_dpus, &cost.bd);
+            // model the copy: optional inter-machine link leg, then the
+            // shared bus carries the re-push bytes; both the old and the
+            // new rank spans sit out the copy
+            let (net_start, net_end) = if cost.net_secs > 0.0 {
+                self.timeline.reserve(&Lane::Link(0), clock, cost.net_secs)
+            } else {
+                (clock, clock)
+            };
+            let (copy_start, copy_end) =
+                self.timeline.reserve(&Lane::Bus, net_end, cost.bus_secs());
+            self.timeline
+                .hold(&Lane::Ranks(old.rank0..old.rank0 + old.n_ranks), copy_end);
+            self.timeline
+                .hold(&Lane::Ranks(ns.rank0..ns.rank0 + ns.n_ranks), copy_end);
+            if let Some(sink) = &self.trace {
+                let drain_ev = sink.push(TraceEvent {
+                    id: 0, // assigned by the sink
+                    kind: CmdKind::MigrateDrain,
+                    lane: LaneTag::Ranks { lo: old.rank0, hi: old.rank0 + old.n_ranks },
+                    start: p.decided_at,
+                    secs: drain_end - p.decided_at,
+                    bytes: 0,
+                    tenant: Some(i as u32),
+                    req: None,
+                    deps: Vec::new(),
+                });
+                let before_copy = if cost.net_secs > 0.0 {
+                    sink.push(TraceEvent {
+                        id: 0,
+                        kind: CmdKind::Net,
+                        lane: LaneTag::Link { m: 0 },
+                        start: net_start,
+                        secs: cost.net_secs,
+                        bytes: cost.bytes,
+                        tenant: Some(i as u32),
+                        req: None,
+                        deps: vec![drain_ev],
+                    })
+                } else {
+                    drain_ev
+                };
+                let copy_ev = sink.push(TraceEvent {
+                    id: 0,
+                    kind: CmdKind::MigrateCopy,
+                    lane: LaneTag::Bus,
+                    start: copy_start,
+                    secs: cost.bus_secs(),
+                    bytes: cost.bytes,
+                    tenant: Some(i as u32),
+                    req: None,
+                    deps: vec![before_copy],
+                });
+                sink.push(TraceEvent {
+                    id: 0,
+                    kind: CmdKind::MigrateResume,
+                    lane: LaneTag::Ranks { lo: ns.rank0, hi: ns.rank0 + ns.n_ranks },
+                    start: copy_end,
+                    secs: 0.0,
+                    bytes: 0,
+                    tenant: Some(i as u32),
+                    req: None,
+                    deps: vec![copy_ev],
+                });
+            }
+            if let Some(tel) = &self.telemetry {
+                let name = tenant_name(i);
+                tel.counter_add("elastic_migrations", Labels::tenant(&name), 1);
+                tel.counter_add(
+                    "elastic_migration_bytes",
+                    Labels::tenant(&name),
+                    cost.bytes,
+                );
+                tel.sample(
+                    "elastic_ranks",
+                    Labels::tenant(&name),
+                    copy_end,
+                    ns.n_ranks as f64,
+                );
+            }
+            clock = copy_end;
+        }
+        self.elastic.as_mut().unwrap().last_end = clock;
     }
 
     /// Grant tenant `t` the bus at `now`: pop up to `want` arrived
@@ -1008,8 +1418,10 @@ impl Scheduler {
             total_ranks,
             telemetry,
             sys,
+            elastic,
             ..
         } = self;
+        let elastic_name = elastic.as_ref().map(|e| e.policy.name());
         let mut makespan = 0.0f64;
         for tn in &tenants {
             makespan = tn.records.iter().map(|r| r.done).fold(makespan, f64::max);
@@ -1017,11 +1429,16 @@ impl Scheduler {
         let em = EnergyModel::default();
         let mut reports = Vec::with_capacity(tenants.len());
         for tn in tenants {
+            // a tenant whose final batch preceded a migration had its
+            // output checked at migration time (the dataset it was
+            // served from no longer exists)
             let verified = match &tn.last_out {
                 Some(o) => tn.workload.verify(&tn.dataset, o),
-                None => false,
+                None => tn.pre_mig_verified.unwrap_or(false),
             };
-            let warm = tn.session.set.metrics;
+            // serving traffic only: the migration re-pushes are billed
+            // separately under `mig`
+            let warm = tn.session.set.metrics.delta(&tn.mig);
             // serving-window energy: active during the slice's kernel
             // seconds, idling for the rest of the shared makespan (cold
             // load is excluded — clock 0 is "all tenants resident")
@@ -1047,6 +1464,10 @@ impl Scheduler {
                 busy: tn.busy,
                 joules,
                 verified,
+                migrations: tn.migrations,
+                mig: tn.mig,
+                mig_net_secs: tn.mig_net_secs,
+                mig_joules: tn.mig_joules,
             });
         }
         let report = SchedReport {
@@ -1056,6 +1477,7 @@ impl Scheduler {
             tenants: reports,
             makespan,
             total_ranks,
+            elastic: elastic_name,
         };
         if let Some(tel) = &telemetry {
             tel.gauge_set("sched_occupancy", Labels::none(), report.occupancy());
@@ -1327,5 +1749,76 @@ mod tests {
             .map(RequestRecord::queueing)
             .sum();
         assert!(queued > 0.0, "identical burst tenants must contend on the bus");
+    }
+
+    #[test]
+    fn unshifted_generator_is_bitwise_the_shifted_one_with_no_shift() {
+        let plain = gen_arrivals(2, 99, 32, 1200.0);
+        let shifted = gen_arrivals_shifted(2, 99, 32, 1200.0, None);
+        assert_eq!(plain, shifted);
+    }
+
+    #[test]
+    fn load_shift_keeps_the_prefix_and_accelerates_the_tail() {
+        let base = gen_arrivals(0, 7, 64, 800.0);
+        let t0 = base[31].at;
+        let hot = gen_arrivals_shifted(0, 7, 64, 800.0, Some((t0, 8.0)));
+        // identical RNG draws: every arrival at or before the shift
+        // instant lands at exactly the same time
+        for (b, h) in base.iter().zip(&hot) {
+            if b.at <= t0 {
+                assert_eq!(b.at.to_bits(), h.at.to_bits());
+            }
+        }
+        // ×8 rate compresses the tail
+        assert!(
+            hot[63].at < base[63].at,
+            "shifted tail {} must beat unshifted {}",
+            hot[63].at,
+            base[63].at
+        );
+        assert!(hot.iter().zip(hot.iter().skip(1)).all(|(a, b)| a.at <= b.at));
+    }
+
+    /// End-to-end elastic run on a planned move: the donor shrinks, the
+    /// receiver grows, both pay a nonzero migration bill measured
+    /// through the ordinary transfer path, every request still completes
+    /// verified, and the whole thing is reproducible bit-for-bit.
+    #[test]
+    fn planned_migration_resizes_slices_and_bills_the_copy() {
+        use crate::coordinator::elastic::{ElasticPolicyKind, PlannedMove};
+        let mut specs = TenantSpec::parse_list("va:2,bs:1").unwrap();
+        for s in &mut specs {
+            s.scale = 0.002;
+        }
+        let mut cfg = SchedConfig::new(specs);
+        cfg.requests = 3;
+        cfg.rate = 0.0;
+        cfg.exec = ExecChoice::Serial;
+        cfg.elastic = Some(ElasticConfig::new(ElasticPolicyKind::Planned(vec![
+            PlannedMove { at: 0.0, mv: MoveRanks { from: 0, to: 1, ranks: 1 } },
+        ])));
+        let rep = run_sched(&cfg).unwrap();
+        assert_eq!(rep.elastic, Some("planned"));
+        // the move executed: geometry re-tiled in tenant order
+        assert_eq!(rep.tenants[0].slice.n_ranks, 1);
+        assert_eq!(rep.tenants[1].slice.n_ranks, 2);
+        assert_eq!(rep.tenants[1].slice.rank0, 1);
+        // both tenants' geometry changed, so both migrated and both paid
+        assert_eq!(rep.migrations(), 2);
+        assert!(rep.mig_bytes() > 0, "a resident dataset moved");
+        assert!(rep.mig_secs() > 0.0, "the copy occupied the bus");
+        assert!(rep.mig_joules() > 0.0, "the copy drew energy");
+        for t in &rep.tenants {
+            assert_eq!(t.migrations, 1);
+            assert!(t.mig.bytes_to_dpu > 0);
+            assert!(t.verified, "{} must verify across the migration", t.bench);
+            assert_eq!(t.records.len(), 3);
+            assert!(t.records.iter().all(|r| r.done.is_finite()));
+        }
+        // migration traffic is billed under mig, not warm: the warm
+        // push bytes cover served requests only
+        let rep2 = run_sched(&cfg).unwrap();
+        assert_eq!(rep.to_json(), rep2.to_json(), "elastic runs are deterministic");
     }
 }

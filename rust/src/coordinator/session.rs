@@ -127,6 +127,20 @@ impl Session {
             })
     }
 
+    /// Re-home this session's slice to a new rank geometry (the elastic
+    /// migration entry point — see [`super::elastic`]). Resizes the
+    /// fleet via [`PimSet::resize_ranks`] (fresh DPUs, bumped layout
+    /// generation) and **drops the resident workload state**: every
+    /// symbol it held predates the resize and would panic on use, so
+    /// keeping it around only turns a loud stale-generation panic into a
+    /// confusing downcast one. The caller must re-run the workload's
+    /// `load` before serving again.
+    pub fn rebind_ranks(&mut self, rank0: u32, n_ranks: u32) {
+        self.set.resize_ranks(rank0, n_ranks);
+        self.state = None;
+        self.loaded = None;
+    }
+
     // ------------------------------------------------------------ launches
 
     /// [`PimSet::launch`] with session-level instruction accounting.

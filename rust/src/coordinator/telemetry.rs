@@ -444,6 +444,20 @@ impl Telemetry {
         }
     }
 
+    /// Last `k` points of a series, oldest first (empty when the series
+    /// doesn't exist or holds another metric type). This is the read
+    /// side the elastic policy consumes: it windows the tail of the
+    /// queue-depth / latency series the scheduler already samples
+    /// rather than inventing private counters.
+    pub fn series_tail(&self, name: &str, labels: &Labels, k: usize) -> Vec<(f64, f64)> {
+        self.with(|r| {
+            match r.metrics.get(&(name.to_string(), labels.clone())) {
+                Some(MetricValue::Series(s)) => s[s.len().saturating_sub(k)..].to_vec(),
+                _ => Vec::new(),
+            }
+        })
+    }
+
     /// True when nothing has been recorded.
     pub fn is_empty(&self) -> bool {
         self.with(|r| r.metrics.is_empty())

@@ -17,6 +17,9 @@ pub(crate) fn kind_str(k: CmdKind) -> &'static str {
         CmdKind::HostMerge => "host_merge",
         CmdKind::Fence => "fence",
         CmdKind::Net => "net",
+        CmdKind::MigrateDrain => "migrate_drain",
+        CmdKind::MigrateCopy => "migrate_copy",
+        CmdKind::MigrateResume => "migrate_resume",
     }
 }
 
@@ -28,6 +31,9 @@ fn kind_from(s: &str) -> Result<CmdKind, String> {
         "host_merge" => CmdKind::HostMerge,
         "fence" => CmdKind::Fence,
         "net" => CmdKind::Net,
+        "migrate_drain" => CmdKind::MigrateDrain,
+        "migrate_copy" => CmdKind::MigrateCopy,
+        "migrate_resume" => CmdKind::MigrateResume,
         other => return Err(format!("unknown event kind '{other}'")),
     })
 }

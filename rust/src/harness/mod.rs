@@ -5,6 +5,7 @@
 
 pub mod amortized;
 pub mod compare;
+pub mod elastic;
 pub mod figures;
 pub mod future;
 pub mod multitenant;
@@ -28,11 +29,14 @@ use std::path::Path;
 /// serving window; `scaleout` = strong-scaling efficiency of sharded
 /// fleets over the modeled multi-machine network; `telemetry` = live
 /// labeled metrics, the metrics/v1 round-trip, and per-tenant SLO
-/// health + energy over the scheduling mix).
-pub const ALL_IDS: [&str; 28] = [
+/// health + energy over the scheduling mix; `elastic` = static vs
+/// autoscaled rank slicing under a mid-run flash crowd, with the
+/// modeled migration bill).
+pub const ALL_IDS: [&str; 29] = [
     "table1", "table2", "table3", "table4", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
     "fig10", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20",
     "fig22", "future", "amortized", "multitenant", "overlap", "traced", "scaleout", "telemetry",
+    "elastic",
 ];
 
 /// Per-benchmark dataset scale used by the harness (relative to Table 3
@@ -88,6 +92,7 @@ pub fn run_id(id: &str, outdir: &Path, quick: bool) -> anyhow::Result<()> {
         "overlap" => vec![overlap::overlap(quick)],
         "traced" => vec![traced::traced(quick)],
         "telemetry" => vec![telemetry::telemetry(quick)],
+        "elastic" => vec![elastic::elastic(quick)],
         "scaleout" => vec![scaleout::scaleout(quick)],
         "multitenant" => vec![
             multitenant::multitenant_policies(quick),

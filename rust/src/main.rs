@@ -17,6 +17,10 @@
 //! repro sched [--tenants "gemv:2,bs:1,va:1"] [--requests N]
 //!            [--policy fifo|wrr|sjf] [--rate R] [--batch B] [--pipeline]
 //!            [--json] [--quick]      multi-tenant rank-sliced scheduling
+//! repro sched --elastic [depth|latency] [--shift t:at:factor]
+//!            live rank reallocation with modeled state migration;
+//!            --shift multiplies tenant t's arrival rate by `factor`
+//!            from modeled second `at`; --json writes BENCH_ELASTIC.json
 //! repro compare [--quick]            Fig. 16 + Fig. 17
 //! repro estimate --dpus N            fleet estimator via the PJRT artifact
 //! repro trace [--bench N] [--requests R] [--json]   traced pipelined
@@ -57,8 +61,9 @@
 use prim_pim::arch::SystemConfig;
 use prim_pim::coordinator::trace::{analyze, diff_traces};
 use prim_pim::coordinator::{
-    parse_metrics, parse_trace, run_sched, ExecChoice, PolicyKind, ReplayEngine, SchedConfig,
-    SloMonitor, SloTarget, Telemetry, TenantSpec, TraceSink,
+    parse_metrics, parse_trace, run_sched, ElasticConfig, ElasticPolicyKind, ExecChoice,
+    LoadShift, PolicyKind, ReplayEngine, SchedConfig, SloMonitor, SloTarget, Telemetry,
+    TenantSpec, TraceSink,
 };
 use prim_pim::harness::{self, ALL_IDS};
 use prim_pim::prim::common::{all_benches, bench_by_name, BenchResult, RunConfig};
@@ -491,6 +496,40 @@ fn main() -> anyhow::Result<()> {
                 eprintln!("unknown --policy '{policy_name}' (expected fifo|wrr|sjf)");
                 std::process::exit(2);
             });
+            // `--elastic` alone selects the depth policy; `--elastic latency`
+            // (any name from ElasticPolicyKind::ALL) picks another
+            let elastic = match args.flags.get("elastic") {
+                None => None,
+                Some(v) if v == "true" => Some(ElasticConfig::default()),
+                Some(v) => match ElasticPolicyKind::parse(v) {
+                    Some(kind) => Some(ElasticConfig::new(kind)),
+                    None => {
+                        eprintln!(
+                            "unknown --elastic policy '{v}' (expected {})",
+                            ElasticPolicyKind::ALL.join("|")
+                        );
+                        std::process::exit(2);
+                    }
+                },
+            };
+            // `--shift t:at:factor` — multiply tenant t's arrival rate by
+            // `factor` from modeled second `at` onward
+            let shift = args.flags.get("shift").map(|v| {
+                let parts: Vec<&str> = v.split(':').collect();
+                let parsed = match parts.as_slice() {
+                    [t, at, f] => match (t.parse(), at.parse(), f.parse()) {
+                        (Ok(tenant), Ok(at), Ok(factor)) => {
+                            Some(LoadShift { tenant, at, factor })
+                        }
+                        _ => None,
+                    },
+                    _ => None,
+                };
+                parsed.unwrap_or_else(|| {
+                    eprintln!("bad --shift '{v}' (expected tenant:at_secs:factor, e.g. 0:0.005:8)");
+                    std::process::exit(2);
+                })
+            });
             let cfg = SchedConfig {
                 requests: args.flag("requests", 8),
                 policy,
@@ -502,6 +541,8 @@ fn main() -> anyhow::Result<()> {
                 tenants,
                 trace: trace_sink.clone(),
                 metrics: metrics_sink.clone(),
+                elastic,
+                shift,
             };
             let t0 = std::time::Instant::now();
             let rep = run_sched(&cfg)?;
@@ -538,9 +579,26 @@ fn main() -> anyhow::Result<()> {
                 rep.makespan * 1e3,
                 t0.elapsed().as_secs_f64(),
             );
+            if let Some(pol) = rep.elastic {
+                println!(
+                    "elastic {} | {} migrations | mig {:.3} ms | {} bytes | {:.3} J",
+                    pol,
+                    rep.migrations(),
+                    rep.mig_secs() * 1e3,
+                    rep.mig_bytes(),
+                    rep.mig_joules(),
+                );
+            }
             if args.has("json") {
                 std::fs::create_dir_all(&outdir)?;
-                let path = outdir.join("BENCH_SCHED.json");
+                // elastic runs get their own artifact so the static
+                // BENCH_SCHED baseline never mixes with autoscaled output
+                let file = if rep.elastic.is_some() {
+                    "BENCH_ELASTIC.json"
+                } else {
+                    "BENCH_SCHED.json"
+                };
+                let path = outdir.join(file);
                 std::fs::write(&path, rep.to_json())?;
                 println!("wrote {}", path.display());
             }

@@ -476,6 +476,61 @@ fn one_machine_cluster_matches_plain_queue_session_bitwise() {
     assert_eq!(r.breakdown, set.metrics, "1-machine cluster must be the queue path");
 }
 
+fn elastic_sched_report(exec: ExecChoice) -> SchedReport {
+    use prim_pim::coordinator::{ElasticConfig, ElasticPolicyKind, MoveRanks, PlannedMove};
+    let mut tenants = TenantSpec::parse_list("va:2,bs:1").expect("mix parses");
+    for t in &mut tenants {
+        t.scale = 0.002;
+    }
+    let mut cfg = SchedConfig::new(tenants);
+    cfg.requests = 3;
+    cfg.policy = PolicyKind::Wrr;
+    cfg.rate = 2000.0;
+    cfg.seed = 7;
+    cfg.exec = exec;
+    // one grow for the bs tenant, then the reverse shrink — both fire
+    // early (cooldown 0 lets the second arm as soon as the first lands)
+    let mut ec = ElasticConfig::new(ElasticPolicyKind::Planned(vec![
+        PlannedMove { at: 0.0, mv: MoveRanks { from: 0, to: 1, ranks: 1 } },
+        PlannedMove { at: 1e-9, mv: MoveRanks { from: 1, to: 0, ranks: 1 } },
+    ]));
+    ec.cooldown = 0.0;
+    cfg.elastic = Some(ec);
+    run_sched(&cfg).expect("elastic scheduler runs")
+}
+
+/// Elastic runs obey the same executor-equivalence contract as static
+/// ones: a grow *and* a shrink (four tenant migrations total — each
+/// re-tiling touches both tenants), and still bit-identical outputs,
+/// migration bills, per-request timelines, and JSON across executors —
+/// and across repeats of the same seed.
+#[test]
+fn elastic_sched_bit_identical_across_executors_and_repeats() {
+    let s = elastic_sched_report(ExecChoice::Serial);
+    let p = elastic_sched_report(ExecChoice::Parallel(3));
+    assert_eq!(s.elastic, Some("planned"));
+    assert_eq!(s.migrations(), 4, "grow + shrink, two affected tenants each");
+    assert!(s.mig_bytes() > 0);
+    // the shrink undid the grow: geometry is back to the spec
+    assert_eq!(s.tenants[0].slice.n_ranks, 2);
+    assert_eq!(s.tenants[1].slice.n_ranks, 1);
+    for (a, b) in s.tenants.iter().zip(&p.tenants) {
+        assert!(a.verified, "{} serial", a.bench);
+        assert!(b.verified, "{} parallel", b.bench);
+        assert_eq!(a.cold, b.cold, "{} cold", a.bench);
+        assert_eq!(a.warm, b.warm, "{} warm", a.bench);
+        assert_eq!(a.mig, b.mig, "{} migration bill", a.bench);
+        assert_eq!(a.migrations, b.migrations, "{}", a.bench);
+        assert_eq!(a.mig_joules.to_bits(), b.mig_joules.to_bits(), "{}", a.bench);
+        assert_eq!(a.records, b.records, "{} timeline", a.bench);
+    }
+    assert_eq!(s.makespan.to_bits(), p.makespan.to_bits());
+    assert_eq!(s.to_json(), p.to_json());
+    // same seed, same machine history — run-to-run reproducible
+    let s2 = elastic_sched_report(ExecChoice::Serial);
+    assert_eq!(s.to_json(), s2.to_json());
+}
+
 /// With a single tenant there is no cross-tenant choice to make, so every
 /// policy must produce the identical schedule, latencies, and buckets.
 #[test]

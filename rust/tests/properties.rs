@@ -546,6 +546,146 @@ fn prop_all_gather_makespan_is_flat_switch_bound_bitwise() {
     });
 }
 
+// -------------------------------------------------------------- elastic
+
+/// The elastic module's honesty guarantee, pinned bitwise: a tenant's
+/// migration bill equals what a hand-issued re-push would pay — allocate
+/// a fresh fleet of the post-migration geometry at the same physical
+/// rank origin, prepare the dataset under the same `RunConfig`, and run
+/// the workload's ordinary `load`. Same `XferModel` path, same floats.
+#[test]
+fn elastic_migration_bill_equals_hand_repush_bitwise() {
+    use prim_pim::coordinator::{
+        ElasticConfig, ElasticPolicyKind, MoveRanks, PlannedMove, SchedConfig, Session,
+        TenantSpec,
+    };
+    use prim_pim::prim::common::ExecChoice;
+    use prim_pim::prim::workload::workload_by_name;
+
+    let mut specs = TenantSpec::parse_list("va:2,bs:1").unwrap();
+    for s in &mut specs {
+        s.scale = 0.002;
+    }
+    let mut cfg = SchedConfig::new(specs.clone());
+    cfg.requests = 3;
+    cfg.rate = 0.0;
+    cfg.exec = ExecChoice::Serial;
+    cfg.elastic = Some(ElasticConfig::new(ElasticPolicyKind::Planned(vec![
+        PlannedMove { at: 0.0, mv: MoveRanks { from: 0, to: 1, ranks: 1 } },
+    ])));
+    let rep = prim_pim::coordinator::run_sched(&cfg).unwrap();
+    assert_eq!(rep.migrations(), 2, "both tenants' geometry changed");
+
+    // post-move tiling of [1, 2] ranks in tenant order
+    let sys = SystemConfig::p21_2556();
+    let per = sys.dpus_per_rank();
+    let new_geom = [(0u32, 1u32), (1u32, 2u32)]; // (rank0, n_ranks) per tenant
+    for (i, &(rank0, n_ranks)) in new_geom.iter().enumerate() {
+        // per-tenant seed decorrelation, as the scheduler derives it
+        let tseed = cfg.seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let w = workload_by_name(&specs[i].bench).unwrap();
+        let rc = RunConfig {
+            sys: sys.clone(),
+            n_dpus: n_ranks * per,
+            n_tasklets: w.best_tasklets(),
+            scale: specs[i].scale,
+            seed: tseed,
+            exec: ExecChoice::Serial,
+            trace: None,
+            metrics: None,
+        };
+        let mut set = PimSet::allocate_with(sys.clone(), rc.n_dpus, ExecChoice::Serial.build());
+        set.rank0 = rank0; // same physical home — NUMA placement matters
+        let mut session = Session::new(set, rc.n_tasklets).with_pipeline(false);
+        let dataset = w.prepare(&rc);
+        w.load(&mut session, &dataset);
+        let hand = session.set.metrics;
+        let mig = rep.tenants[i].mig;
+        assert_eq!(mig, hand, "tenant {i} bill must equal the hand re-push");
+        assert_eq!(mig.cpu_dpu.to_bits(), hand.cpu_dpu.to_bits());
+        assert_eq!(mig.total().to_bits(), hand.total().to_bits());
+        assert_eq!(mig.bytes_to_dpu, hand.bytes_to_dpu);
+        assert!(mig.bytes_to_dpu > 0, "a resident dataset moved");
+    }
+}
+
+/// With a `NetModel` configured, each migration's link leg is priced by
+/// exactly `xfer_secs(bytes re-pushed)` — the same formula the cluster
+/// collectives pay, bitwise.
+#[test]
+fn elastic_net_leg_is_priced_by_the_cluster_model_bitwise() {
+    use prim_pim::coordinator::{
+        ElasticConfig, ElasticPolicyKind, MoveRanks, NetModel, PlannedMove, SchedConfig,
+        TenantSpec,
+    };
+    use prim_pim::prim::common::ExecChoice;
+
+    let mut specs = TenantSpec::parse_list("va:2,bs:1").unwrap();
+    for s in &mut specs {
+        s.scale = 0.002;
+    }
+    let net = NetModel { link_bw: 5e9, latency: 3e-6 };
+    let mut cfg = SchedConfig::new(specs);
+    cfg.requests = 3;
+    cfg.rate = 0.0;
+    cfg.exec = ExecChoice::Serial;
+    let mut ec = ElasticConfig::new(ElasticPolicyKind::Planned(vec![PlannedMove {
+        at: 0.0,
+        mv: MoveRanks { from: 0, to: 1, ranks: 1 },
+    }]));
+    ec.net = Some(net.clone());
+    cfg.elastic = Some(ec);
+    let rep = prim_pim::coordinator::run_sched(&cfg).unwrap();
+    assert_eq!(rep.migrations(), 2);
+    for t in &rep.tenants {
+        assert!(t.mig_net_secs > 0.0, "the link leg was paid");
+        assert_eq!(
+            t.mig_net_secs.to_bits(),
+            net.xfer_secs(t.mig.bytes_to_dpu).to_bits(),
+            "link seconds must come from the cluster transfer formula"
+        );
+    }
+}
+
+/// An elastic run whose policy never fires is bit-identical to the
+/// static scheduler: the sensor path (internal telemetry, per-decision
+/// policy evaluation) is purely observational.
+#[test]
+fn elastic_run_without_migrations_is_bitwise_static() {
+    use prim_pim::coordinator::{ElasticConfig, ElasticPolicyKind, SchedConfig, TenantSpec};
+    use prim_pim::prim::common::ExecChoice;
+
+    let mut specs = TenantSpec::parse_list("va:1,bs:1").unwrap();
+    for s in &mut specs {
+        s.scale = 0.002;
+    }
+    let mut cfg = SchedConfig::new(specs);
+    cfg.requests = 3;
+    cfg.rate = 0.0;
+    cfg.exec = ExecChoice::Serial;
+    let stat = prim_pim::coordinator::run_sched(&cfg).unwrap();
+    // a depth policy that can never trigger still reads its sensors at
+    // every decision point
+    let mut ec = ElasticConfig::new(ElasticPolicyKind::Depth);
+    ec.high = 1e18;
+    cfg.elastic = Some(ec);
+    let elas = prim_pim::coordinator::run_sched(&cfg).unwrap();
+    assert_eq!(elas.elastic, Some("depth"));
+    assert_eq!(elas.migrations(), 0, "the trigger must never fire");
+    assert_eq!(stat.makespan.to_bits(), elas.makespan.to_bits());
+    assert_eq!(stat.tenants.len(), elas.tenants.len());
+    for (s, e) in stat.tenants.iter().zip(&elas.tenants) {
+        assert_eq!(s.records, e.records, "per-request timelines bit-identical");
+        assert_eq!(s.warm, e.warm);
+        assert_eq!(s.cold, e.cold);
+        assert_eq!(s.joules.to_bits(), e.joules.to_bits());
+        assert_eq!(s.busy.to_bits(), e.busy.to_bits());
+        assert!(s.verified && e.verified);
+        assert_eq!(e.migrations, 0);
+        assert_eq!(e.mig, prim_pim::coordinator::TimeBreakdown::default());
+    }
+}
+
 #[test]
 fn prop_fleet_native_equals_formula() {
     props("fleet estimator formula", 100, |g: &mut Gen| {
